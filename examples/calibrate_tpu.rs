@@ -1,0 +1,48 @@
+//! The full Fig. 2 calibration flow against a selectable hardware
+//! backend, with Fig. 4 held-out validation — the "ground the simulator
+//! in measurements" workflow.
+//!
+//! Run with:
+//!   cargo run --release --example calibrate_tpu              # device model
+//!   cargo run --release --example calibrate_tpu -- pjrt      # real PJRT runs
+
+use scalesim_tpu::experiments::{assets, fig2, fig4};
+use scalesim_tpu::scalesim::ScaleConfig;
+use scalesim_tpu::tpu::{Hardware, PjrtHardware, TpuV4Model};
+
+fn main() -> anyhow::Result<()> {
+    let backend = std::env::args().nth(1).unwrap_or_else(|| "model".into());
+    let config = ScaleConfig::tpu_v4();
+
+    match backend.as_str() {
+        "pjrt" => {
+            // Real executions are slow; use the reduced calibration set.
+            let mut hw = PjrtHardware::new()?;
+            println!("calibrating against real PJRT executions ({})...", hw.name());
+            let est = assets::build_estimator_fast(&mut hw, &config, 3, 42);
+            for (regime, m) in &est.calibration.metrics {
+                println!("  {regime}: {m}");
+            }
+            assets::save_assets(std::path::Path::new("artifacts/assets_pjrt"), &est)?;
+            println!("saved to artifacts/assets_pjrt/");
+        }
+        _ => {
+            let mut hw = TpuV4Model::new(42);
+            let f2 = fig2::run(&mut hw, &config, 5);
+            println!("{}", fig2::render(&f2, hw.name()));
+
+            println!("\nheld-out validation (Fig. 4):");
+            let f4 = fig4::run(&mut hw, &config, &f2.calibration, 5);
+            println!(
+                "  R2 = {:.3}  MAPE = {:.1}%  (n = {})",
+                f4.overall.r2,
+                f4.overall.mape_pct,
+                f4.overall.n
+            );
+            for (regime, mape) in &f4.per_regime_mape {
+                println!("    {regime}: MAPE {mape:.1}%");
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Whole-model design-space sweep — the "architectural exploration" use
+//! case the paper positions SCALE-Sim for: sweep batch size / sequence
+//! length for the bundled model topologies, reporting calibrated latency,
+//! utilisation, energy, and the dense-vs-2:4-sparse trade-off.
+//!
+//! Run with: `cargo run --release --example model_sweep`
+
+use scalesim_tpu::experiments::fig2;
+use scalesim_tpu::report::Table;
+use scalesim_tpu::scalesim::{
+    estimate_energy, simulate_gemm, simulate_sparse, EnergyParams, ScaleConfig, Sparsity,
+};
+use scalesim_tpu::tpu::TpuV4Model;
+use scalesim_tpu::workloads::models;
+
+fn main() {
+    let config = ScaleConfig::tpu_v4();
+    let energy_params = EnergyParams::default();
+
+    // Calibrate once so the sweep reports wall-clock, not just cycles.
+    let mut hw = TpuV4Model::new(42);
+    let calibration = fig2::run(&mut hw, &config, 3).calibration;
+
+    // --- MLP batch sweep ---
+    println!("MLP 784-512-256-10: batch-size sweep\n");
+    let mut t = Table::new(&[
+        "batch",
+        "cycles",
+        "latency us",
+        "avg util %",
+        "energy uJ",
+        "2:4-sparse speedup",
+    ]);
+    for batch in [1usize, 8, 32, 128, 512] {
+        let topo = models::mlp(batch);
+        let mut cycles = 0u64;
+        let mut latency = 0.0f64;
+        let mut util_sum = 0.0f64;
+        let mut energy = 0.0f64;
+        let mut sparse_cycles = 0u64;
+        for layer in &topo.layers {
+            let g = layer.as_gemm();
+            let r = simulate_gemm(&config, g);
+            cycles += r.total_cycles();
+            latency += calibration.cycles_to_us(&g, r.total_cycles());
+            util_sum += r.utilisation;
+            energy += estimate_energy(&energy_params, &r).total_uj();
+            sparse_cycles +=
+                simulate_sparse(&config, g, Sparsity::two_four_weights()).effective_cycles;
+        }
+        t.row(&[
+            batch.to_string(),
+            cycles.to_string(),
+            format!("{latency:.1}"),
+            format!("{:.1}", 100.0 * util_sum / topo.layers.len() as f64),
+            format!("{energy:.1}"),
+            format!("{:.2}x", cycles as f64 / sparse_cycles as f64),
+        ]);
+    }
+    println!("{}", t.markdown());
+
+    // --- Transformer sequence-length sweep ---
+    println!("\ntransformer block (d_model=512, heads=8): sequence-length sweep\n");
+    let mut t = Table::new(&["seq", "cycles", "latency us", "GEMM count", "energy uJ"]);
+    for seq in [64usize, 128, 256, 512, 1024] {
+        let topo = models::transformer_block(seq, 512, 8);
+        let mut cycles = 0u64;
+        let mut latency = 0.0;
+        let mut energy = 0.0;
+        for layer in &topo.layers {
+            let g = layer.as_gemm();
+            let r = simulate_gemm(&config, g);
+            cycles += r.total_cycles();
+            latency += calibration.cycles_to_us(&g, r.total_cycles());
+            energy += estimate_energy(&energy_params, &r).total_uj();
+        }
+        t.row(&[
+            seq.to_string(),
+            cycles.to_string(),
+            format!("{latency:.1}"),
+            topo.layers.len().to_string(),
+            format!("{energy:.1}"),
+        ]);
+    }
+    println!("{}", t.markdown());
+
+    // --- ResNet stem across dataflows ---
+    println!("\nResNet-18 topology (topologies/resnet18_stem.csv): dataflow comparison\n");
+    let csv = std::fs::read_to_string("topologies/resnet18_stem.csv")
+        .unwrap_or_else(|_| models::resnet_stem_csv().to_string());
+    let topo = scalesim_tpu::scalesim::Topology::parse_csv("resnet", &csv).unwrap();
+    let mut t = Table::new(&["dataflow", "total cycles", "total energy uJ"]);
+    for df in ["os", "ws", "is"] {
+        let mut c = config.clone();
+        c.dataflow = scalesim_tpu::scalesim::Dataflow::parse(df).unwrap();
+        let mut cycles = 0u64;
+        let mut energy = 0.0;
+        for layer in &topo.layers {
+            let r = simulate_gemm(&c, layer.as_gemm());
+            cycles += r.total_cycles();
+            energy += estimate_energy(&energy_params, &r).total_uj();
+        }
+        t.row(&[
+            df.to_uppercase(),
+            cycles.to_string(),
+            format!("{energy:.0}"),
+        ]);
+    }
+    println!("{}", t.markdown());
+}

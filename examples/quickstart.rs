@@ -1,0 +1,76 @@
+//! Quickstart: simulate a GEMM on the TPU-v4 config, calibrate a
+//! cycle→time mapping against the device model, and print the latency
+//! estimate — the 60-second tour of the public API.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use scalesim_tpu::calibrate::Regime;
+use scalesim_tpu::experiments::fig2;
+use scalesim_tpu::scalesim::{simulate_gemm, Dataflow, GemmShape, ScaleConfig};
+use scalesim_tpu::tpu::{Hardware, TpuV4Model};
+
+fn main() {
+    // 1. A SCALE-Sim architecture config: one TPU-v4-like 128x128 MXU.
+    let config = ScaleConfig::tpu_v4();
+    println!(
+        "config: {} ({}x{} array, {} dataflow, {} MHz)\n",
+        config.name, config.array_rows, config.array_cols, config.dataflow, config.freq_mhz
+    );
+
+    // 2. Simulate GEMMs across the paper's three regimes.
+    for g in [
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(512, 512, 512),
+        GemmShape::new(2048, 2048, 2048),
+    ] {
+        let r = simulate_gemm(&config, g);
+        println!(
+            "{g}  [{}]\n  cycles={} (compute {} + stall {} + fill {})  util={:.1}%  folds={}",
+            Regime::of_gemm(&g),
+            r.total_cycles(),
+            r.compute_cycles,
+            r.stall_cycles,
+            r.initial_fill_cycles,
+            r.utilisation * 100.0,
+            r.num_folds,
+        );
+    }
+
+    // 3. Dataflows are first-class: compare OS/WS/IS on a skewed shape.
+    println!("\ndataflow comparison on GEMM 4096x256x256:");
+    let g = GemmShape::new(4096, 256, 256);
+    for df in [
+        Dataflow::OutputStationary,
+        Dataflow::WeightStationary,
+        Dataflow::InputStationary,
+    ] {
+        let mut c = config.clone();
+        c.dataflow = df;
+        let r = simulate_gemm(&c, g);
+        println!("  {df}: {} cycles, util {:.1}%", r.total_cycles(), r.utilisation * 100.0);
+    }
+
+    // 4. Calibrate cycles -> wall-clock against the measurement backend
+    //    (the synthetic TPU-v4 device model; swap in PjrtHardware to
+    //    calibrate against real executions).
+    println!("\ncalibrating cycle->time mapping (Fig. 2 sweep)...");
+    let mut hw = TpuV4Model::new(42);
+    let f2 = fig2::run(&mut hw, &config, 5);
+    for p in &f2.panels {
+        println!(
+            "  {}: t = {:.3e} * cycles + {:.2} us   (R2 = {:.4}, n = {})",
+            p.regime, p.fit.alpha, p.fit.beta, p.metrics.r2, p.metrics.n
+        );
+    }
+
+    // 5. Report calibrated latency for a fresh shape.
+    let g = GemmShape::new(700, 900, 1100);
+    let r = simulate_gemm(&config, g);
+    let est_us = f2.calibration.cycles_to_us(&g, r.total_cycles());
+    let measured = hw.gemm_latency_us(g);
+    println!(
+        "\n{g}: {} cycles -> estimated {est_us:.2} us (device measured {measured:.2} us, {:+.1}% error)",
+        r.total_cycles(),
+        100.0 * (est_us - measured) / measured
+    );
+}

@@ -1,0 +1,84 @@
+//! Simulate a compiler-emitted StableHLO module end to end — the paper's
+//! headline workflow (Fig. 1): JAX program → StableHLO → parse → classify
+//! → route systolic ops to SCALE-Sim, elementwise ops to learned models →
+//! whole-model latency.
+//!
+//! Requires `make artifacts` (python/compile/aot.py) to have produced
+//! `artifacts/*.stablehlo.txt`. Run with:
+//! `cargo run --release --example simulate_stablehlo [-- path/to/module.stablehlo.txt]`
+
+use std::path::PathBuf;
+
+use scalesim_tpu::experiments::assets;
+use scalesim_tpu::frontend::{classify, parse_module, OpClass};
+use scalesim_tpu::report::Table;
+use scalesim_tpu::scalesim::ScaleConfig;
+use scalesim_tpu::tpu::TpuV4Model;
+
+fn main() -> anyhow::Result<()> {
+    let path = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts/mlp_b32.stablehlo.txt".to_string());
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!("{path}: {e} — run `make artifacts` first, or pass a module path")
+    })?;
+
+    // Parse + classification census.
+    let module = parse_module(&text)?;
+    let func = module.entry().expect("entry function");
+    println!(
+        "module @{} — {} ops, {} args, {} results",
+        module.name,
+        func.ops.len(),
+        func.arg_types.len(),
+        func.result_types.len()
+    );
+    let mut census: std::collections::BTreeMap<&'static str, usize> = Default::default();
+    for op in &func.ops {
+        let tag = match classify(op) {
+            OpClass::SystolicGemm { .. } => "systolic-gemm",
+            OpClass::SystolicConv { .. } => "systolic-conv",
+            OpClass::Elementwise { .. } => "elementwise",
+            OpClass::Reduction { .. } => "reduction",
+            OpClass::DataMovement { .. } => "data-movement",
+            OpClass::Free => "free",
+            OpClass::Unmodeled { .. } => "unmodeled",
+        };
+        *census.entry(tag).or_default() += 1;
+    }
+    println!("classification census: {census:?}\n");
+
+    // Build (or load cached) modeling assets, then estimate.
+    let config = ScaleConfig::tpu_v4();
+    let mut hw = TpuV4Model::new(42);
+    let est = assets::load_or_build(
+        &PathBuf::from("artifacts/assets"),
+        &mut hw,
+        &config,
+        1200,
+        3,
+        42,
+    )?;
+    let report = est.estimate_module(&module);
+
+    let mut t = Table::new(&["#", "op", "source", "latency us", "note"]);
+    for op in &report.ops {
+        t.row(&[
+            op.index.to_string(),
+            op.op_name.clone(),
+            op.source.tag().to_string(),
+            format!("{:.3}", op.latency_us),
+            op.note.chars().take(40).collect(),
+        ]);
+    }
+    println!("{}", t.markdown());
+    println!(
+        "\nestimated whole-model latency: {:.2} us\n  systolic {:.2} us | elementwise {:.2} us | other {:.2} us | coverage {:.0}%",
+        report.total_us,
+        report.systolic_us,
+        report.elementwise_us,
+        report.other_us,
+        report.coverage() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Train the learned elementwise latency models (Fig. 5 flow): collect
+//! measurements per the paper's protocol, train HGBR per operator,
+//! evaluate on unseen sizes, compare against the linear baseline, and
+//! persist the models.
+//!
+//! Run with: `cargo run --release --example train_elementwise`
+
+use scalesim_tpu::experiments::fig5;
+use scalesim_tpu::frontend::classify::EwKind;
+use scalesim_tpu::learned::{featurize, HgbrParams};
+use scalesim_tpu::tpu::TpuV4Model;
+
+fn main() -> anyhow::Result<()> {
+    let mut hw = TpuV4Model::new(42);
+    let out_dir = std::path::Path::new("artifacts/learned");
+    std::fs::create_dir_all(out_dir)?;
+
+    println!("collecting measurements + training (paper protocol: log-uniform");
+    println!("sizes to ~16M elements, multiple factorizations, 2^n boundaries,");
+    println!("median-of-5 measurements, train/test split on UNSEEN sizes)\n");
+
+    for op in [EwKind::Add, EwKind::Maximum, EwKind::Multiply] {
+        let eval = fig5::eval_operator(&mut hw, op, 1500, 5, 42, &HgbrParams::default());
+        println!(
+            "{:<9} R2={:.4}  medAE={:.2}us  medRE={:.2}%  (trees={}, train n={}, test n={})",
+            op.name(),
+            eval.metrics.r2,
+            eval.metrics.median_abs_err,
+            eval.metrics.median_rel_err_pct,
+            eval.model.num_trees(),
+            eval.train_size,
+            eval.metrics.n
+        );
+        println!(
+            "          linear baseline: R2={:.4} medRE={:.2}%  (the paper's motivation for trees)",
+            eval.linear_baseline.r2, eval.linear_baseline.median_rel_err_pct
+        );
+
+        let top: Vec<String> = eval
+            .model
+            .ranked_features()
+            .into_iter()
+            .take(4)
+            .map(|(n, v)| format!("{n} {:.0}%", v * 100.0))
+            .collect();
+        println!("          top features: {}", top.join(", "));
+
+        let path = out_dir.join(format!("{}.json", op.name()));
+        eval.model.save(&path)?;
+
+        // Demonstrate inference on a few fresh shapes.
+        for dims in [vec![8, 128], vec![1000, 1000], vec![4096, 4096]] {
+            let t = eval.model.predict(&featurize(&dims));
+            println!("          predict {dims:?} -> {t:.2} us");
+        }
+        println!("          saved {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+"""AOT lowering: JAX workloads -> StableHLO text + HLO text artifacts.
+
+Run once via ``make artifacts``; Python never executes on the request
+path. Two artifacts per workload:
+
+  artifacts/<name>.stablehlo.txt   simulator INPUT (frontend/ parses it)
+  artifacts/<name>.hlo.txt         runtime EXECUTABLE (PJRT loads it)
+
+HLO *text* — NOT ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True`` so the Rust side unwraps a 1-tuple (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_stablehlo_text(lowered) -> str:
+    return str(lowered.compiler_ir("stablehlo"))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer ELIDES big
+    # literals as `constant({...})`, which the text parser silently reads
+    # back as zeros — the embedded weights must survive the text round
+    # trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_all(out_dir: pathlib.Path, names=None) -> list[str]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, (pallas_fn, ref_fn, shapes) in model.registry().items():
+        if names and name not in names:
+            continue
+        # Simulator input: the compiler's standard lowering (dot_general,
+        # add, maximum — what the frontend classifies).
+        stablehlo = to_stablehlo_text(jax.jit(ref_fn).lower(*shapes))
+        # Runtime executable: the hand-tiled Pallas path.
+        hlo = to_hlo_text(jax.jit(pallas_fn).lower(*shapes))
+        (out_dir / f"{name}.stablehlo.txt").write_text(stablehlo)
+        (out_dir / f"{name}.hlo.txt").write_text(hlo)
+        written.append(name)
+        print(f"  {name}: stablehlo {len(stablehlo)} B, hlo {len(hlo)} B")
+    # Build stamp consumed by the Makefile.
+    (out_dir / "BUILD_STAMP").write_text("\n".join(written) + "\n")
+    return written
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", nargs="*", default=None,
+                        help="subset of workload names to build")
+    args = parser.parse_args()
+    written = build_all(pathlib.Path(args.out_dir), args.only)
+    print(f"built {len(written)} workloads -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""L1: blocked elementwise Pallas kernels (VPU-path ops).
+
+The non-systolic operators the paper's learned models cover. Blocks are
+(8, 128)-aligned — the TPU vector-lane tile — so the BlockSpecs express
+the same layout the VPU model in rust/src/tpu/vpu.rs assumes.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# (8, 128)-aligned VPU blocks; SCALESIM_AOT_TILE scales them up for the
+# CPU-PJRT artifact builds where interpret-mode grid steps dominate.
+_SCALE = max(1, int(os.environ.get("SCALESIM_AOT_TILE", "128")) // 128)
+BLOCK_ROWS = 256 * _SCALE   # multiple of 8 sublanes
+BLOCK_COLS = 128 * _SCALE   # whole lane tiles
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _relu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.maximum(x, jnp.zeros_like(x))
+
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    x = x_ref[...] + b_ref[...]
+    o_ref[...] = jnp.maximum(x, jnp.zeros_like(x))
+
+
+def _pick(dim: int, tile: int) -> int:
+    t = min(dim, tile)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _grid_2d(shape):
+    rows, cols = shape
+    br = _pick(rows, BLOCK_ROWS)
+    bc = _pick(cols, BLOCK_COLS)
+    return (rows // br, cols // bc), (br, bc)
+
+
+@jax.jit
+def add(x, y):
+    """Elementwise x + y over a 2-D tensor, blocked for VMEM."""
+    assert x.shape == y.shape and x.ndim == 2
+    grid, (br, bc) = _grid_2d(x.shape)
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _add_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+@jax.jit
+def relu(x):
+    """Elementwise max(x, 0) over a 2-D tensor."""
+    assert x.ndim == 2
+    grid, (br, bc) = _grid_2d(x.shape)
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _relu_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+@jax.jit
+def bias_relu(x, b):
+    """Fused bias-add + ReLU: the MLP layer epilogue, one VMEM pass.
+
+    ``b`` is broadcast along rows (bias per output feature).
+    """
+    assert x.ndim == 2 and b.shape == (x.shape[1],)
+    grid, (br, bc) = _grid_2d(x.shape)
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    bspec = pl.BlockSpec((1, bc), lambda i, j: (0, j))
+    return pl.pallas_call(
+        _bias_relu_kernel,
+        grid=grid,
+        in_specs=[spec, bspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, b.reshape(1, -1))

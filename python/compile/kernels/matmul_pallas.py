@@ -1,0 +1,96 @@
+"""L1: tiled GEMM Pallas kernel (the paper's systolic hot-spot).
+
+The kernel expresses exactly the schedule SCALE-Sim's weight-stationary
+model (and the TPU v4 MXU) assumes: 128x128 output tiles, a K-loop that
+accumulates partial products tile by tile, and BlockSpecs describing the
+HBM->VMEM movement per grid step.
+
+VMEM budget per grid step (bf16): bm*bk + bk*bn + bm*bn words
+ = 3 * 128^2 * 2 B = 96 KiB  <<  16 MiB/core, leaving room for
+double-buffering (see DESIGN.md section Perf for the roofline estimate).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO; on a real TPU the same
+code object compiles to the MXU.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes. On a real TPU 128 matches the MXU; for
+# the CPU-PJRT artifacts the interpret-mode grid dominates runtime, so
+# `SCALESIM_AOT_TILE` lets aot.py build with larger tiles (512 cuts the
+# 512^3 GEMM from 34.6 ms to 2.5 ms on CPU — EXPERIMENTS.md section Perf L1).
+TILE_M = int(os.environ.get("SCALESIM_AOT_TILE", "128"))
+TILE_N = TILE_M
+TILE_K = TILE_M
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: accumulate x_tile @ y_tile into o_tile.
+
+    Grid iteration order is row-major, so for a fixed output tile (i, j)
+    the k steps run consecutively: initialise on k == 0, accumulate after.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, y).astype(o_ref.dtype)
+    _ = nk  # nk kept for symmetry with flush-style kernels
+
+
+def _pick_tile(dim: int, tile: int) -> int:
+    """Largest divisor of ``dim`` that is <= tile (shape-agnostic tiling)."""
+    t = min(dim, tile)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = TILE_M, bn: int = TILE_N, bk: int = TILE_K):
+    """C[M,N] = A[M,K] @ B[K,N] via the tiled Pallas kernel.
+
+    Tile sizes self-adjust to divide the problem (ragged shapes fall back
+    to smaller divisors, mirroring SCALE-Sim's ragged folds).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    bk = _pick_tile(k, bk)
+    nk = k // bk
+
+    # Accumulate in float32 (MXU-style) regardless of input dtype; cast
+    # back once at the end so bf16 inputs don't round between K tiles.
+    out_f32 = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+    return out_f32.astype(x.dtype)
+
+
+def matmul_vmem_bytes(bm: int = TILE_M, bn: int = TILE_N, bk: int = TILE_K,
+                      dtype_bytes: int = 2, double_buffered: bool = True) -> int:
+    """Static VMEM footprint of one grid step (perf-analysis helper)."""
+    words = bm * bk + bk * bn + bm * bn
+    factor = 2 if double_buffered else 1
+    return words * dtype_bytes * factor

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+is pytest-checked against the corresponding function here (see
+python/tests/test_kernels.py). They are also the "un-fused baseline" used
+by the L2 model tests.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """C = A @ B in float32 accumulation, cast back to the input dtype."""
+    acc = jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+    return acc.astype(x.dtype)
+
+
+def add_ref(x, y):
+    return x + y
+
+
+def relu_ref(x):
+    return jnp.maximum(x, jnp.zeros_like(x))
+
+
+def bias_relu_ref(x, b):
+    """Fused bias + ReLU (the MLP's per-layer epilogue)."""
+    return relu_ref(x + b)
+
+
+def mlp_ref(x, w1, b1, w2, b2, w3, b3):
+    """3-layer MLP with ReLU activations (logits output, no softmax)."""
+    h1 = bias_relu_ref(matmul_ref(x, w1), b1)
+    h2 = bias_relu_ref(matmul_ref(h1, w2), b2)
+    return matmul_ref(h2, w3) + b3
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def softmax_ref(x):
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v):
+    """Single-head scaled dot-product attention over (seq, d_head)."""
+    d = q.shape[-1]
+    scale = jnp.asarray(1.0 / (d ** 0.5), dtype=q.dtype)
+    scores = matmul_ref(q, k.T) * scale
+    return matmul_ref(softmax_ref(scores), v)
+
+
+def transformer_block_ref(x, params):
+    """Pre-LN transformer block: LN -> MHA -> residual -> LN -> FFN -> residual.
+
+    ``params`` is the dict produced by model.transformer_params.
+    """
+    _, d_model = x.shape
+    heads = params["heads"]
+    d_head = d_model // heads
+
+    h = layernorm_ref(x, params["ln1_g"], params["ln1_b"])
+    qkv = matmul_ref(h, params["w_qkv"])  # (seq, 3*d_model)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    outs = []
+    for i in range(heads):
+        sl = slice(i * d_head, (i + 1) * d_head)
+        outs.append(attention_ref(q[:, sl], k[:, sl], v[:, sl]))
+    attn = jnp.concatenate(outs, axis=-1)
+    x = x + matmul_ref(attn, params["w_out"])
+
+    h = layernorm_ref(x, params["ln2_g"], params["ln2_b"])
+    up = relu_ref(matmul_ref(h, params["w_up"]) + params["b_up"])
+    return x + matmul_ref(up, params["w_down"]) + params["b_down"]

@@ -1,0 +1,51 @@
+"""L1: row-wise softmax Pallas kernel.
+
+The attention score normalisation of the transformer workload. Each grid
+step holds a block of rows with the *full* row in VMEM (numerically
+stable three-pass softmax: max, exp-sum, divide — fused into one kernel
+so scores stream through VMEM once instead of four times for the naive
+max/sub/exp/div op chain).
+
+VMEM per step: BLOCK_ROWS x row_len words — for attention rows up to 4k
+f32 that is <= 4 MiB, comfortably inside a TPU core's VMEM.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SCALE = max(1, int(os.environ.get("SCALESIM_AOT_TILE", "128")) // 128)
+BLOCK_ROWS = 8 * _SCALE
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / s).astype(o_ref.dtype)
+
+
+def _pick(dim: int, tile: int) -> int:
+    t = min(dim, tile)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@jax.jit
+def softmax(x):
+    """Row-wise softmax over the last dim of a 2-D tensor."""
+    assert x.ndim == 2
+    rows, cols = x.shape
+    br = _pick(rows, BLOCK_ROWS)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

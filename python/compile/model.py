@@ -1,0 +1,203 @@
+"""L2: JAX workload definitions (the paper's compute graphs).
+
+Every workload here is authored in JAX, calls the L1 Pallas kernels for
+its systolic hot-spots, and is lowered ONCE by aot.py into:
+
+  * ``*.stablehlo.txt`` — the simulator's input (frontend/ parses it);
+  * ``*.hlo.txt``       — the runtime's executable (runtime/ runs it).
+
+Python never runs on the request path; these functions exist only at
+build time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elementwise_pallas as ew
+from .kernels import matmul_pallas as mm
+from .kernels import ref
+from .kernels import softmax_pallas as sm
+
+# ---------------------------------------------------------------------------
+# Plain GEMM workloads (Fig. 2 / Fig. 4 kernels)
+# ---------------------------------------------------------------------------
+
+
+def gemm(x, y):
+    """The systolic micro-benchmark: one tiled-Pallas GEMM."""
+    return mm.matmul(x, y)
+
+
+def gemm_shapes(m, k, n, dtype=jnp.float32):
+    return (
+        jax.ShapeDtypeStruct((m, k), dtype),
+        jax.ShapeDtypeStruct((k, n), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Elementwise workloads (Fig. 3 / Fig. 5 kernels)
+# ---------------------------------------------------------------------------
+
+
+def ew_add(x, y):
+    return ew.add(x, y)
+
+
+def ew_relu(x):
+    return ew.relu(x)
+
+
+# ---------------------------------------------------------------------------
+# MLP (whole-model workload #1)
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (784, 512, 256, 10)
+
+
+def mlp_params(key, dtype=jnp.float32):
+    """He-initialised parameters for the 784-512-256-10 MLP."""
+    ks = jax.random.split(key, 3)
+    d = MLP_DIMS
+    scale = lambda fan_in: (2.0 / fan_in) ** 0.5
+    return {
+        "w1": jax.random.normal(ks[0], (d[0], d[1]), dtype) * scale(d[0]),
+        "b1": jnp.zeros((d[1],), dtype),
+        "w2": jax.random.normal(ks[1], (d[1], d[2]), dtype) * scale(d[1]),
+        "b2": jnp.zeros((d[2],), dtype),
+        "w3": jax.random.normal(ks[2], (d[2], d[3]), dtype) * scale(d[2]),
+        "b3": jnp.zeros((d[3],), dtype),
+    }
+
+
+def mlp(x, params):
+    """3-layer MLP: Pallas GEMMs + fused Pallas bias+ReLU epilogues."""
+    h1 = ew.bias_relu(mm.matmul(x, params["w1"]), params["b1"])
+    h2 = ew.bias_relu(mm.matmul(h1, params["w2"]), params["b2"])
+    return mm.matmul(h2, params["w3"]) + params["b3"]
+
+
+def mlp_ref_apply(x, params):
+    """Oracle MLP (pure jnp) with the same parameter pytree."""
+    return ref.mlp_ref(
+        x,
+        params["w1"], params["b1"],
+        params["w2"], params["b2"],
+        params["w3"], params["b3"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (whole-model workload #2)
+# ---------------------------------------------------------------------------
+
+
+def transformer_params(key, d_model=256, heads=4, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    scale = lambda fan_in: (2.0 / fan_in) ** 0.5
+    d_ff = 4 * d_model
+    return {
+        "heads": heads,
+        "ln1_g": jnp.ones((d_model,), dtype),
+        "ln1_b": jnp.zeros((d_model,), dtype),
+        "w_qkv": jax.random.normal(ks[0], (d_model, 3 * d_model), dtype) * scale(d_model),
+        "w_out": jax.random.normal(ks[1], (d_model, d_model), dtype) * scale(d_model),
+        "ln2_g": jnp.ones((d_model,), dtype),
+        "ln2_b": jnp.zeros((d_model,), dtype),
+        "w_up": jax.random.normal(ks[2], (d_model, d_ff), dtype) * scale(d_model),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": jax.random.normal(ks[3], (d_ff, d_model), dtype) * scale(d_ff),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def transformer_block(x, params):
+    """Pre-LN transformer block with Pallas GEMMs on the hot matmuls.
+
+    The attention score/value matmuls run per head at (seq, d_head)
+    granularity — exactly the batched GEMMs the frontend classifies from
+    dot_general batching dims.
+    """
+    _, d_model = x.shape
+    heads = params["heads"]
+    d_head = d_model // heads
+
+    h = ref.layernorm_ref(x, params["ln1_g"], params["ln1_b"])
+    qkv = mm.matmul(h, params["w_qkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    outs = []
+    for i in range(heads):
+        sl = slice(i * d_head, (i + 1) * d_head)
+        qi, ki, vi = q[:, sl], k[:, sl], v[:, sl]
+        scale = jnp.asarray(1.0 / (d_head ** 0.5), dtype=x.dtype)
+        scores = mm.matmul(qi, ki.T) * scale
+        outs.append(mm.matmul(sm.softmax(scores), vi))
+    attn = jnp.concatenate(outs, axis=-1)
+    x = x + mm.matmul(attn, params["w_out"])
+
+    h = ref.layernorm_ref(x, params["ln2_g"], params["ln2_b"])
+    up = ew.relu(mm.matmul(h, params["w_up"]) + params["b_up"])
+    return x + mm.matmul(up, params["w_down"]) + params["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Workload registry used by aot.py
+# ---------------------------------------------------------------------------
+
+
+def transformer_block_ref_apply(x, params):
+    return ref.transformer_block_ref(x, params)
+
+
+def registry(key=None):
+    """name -> (pallas_fn, ref_fn, example ShapeDtypeStructs).
+
+    ``pallas_fn`` is the execution path (hand-tiled Pallas kernels) and is
+    lowered to the ``*.hlo.txt`` runtime artifact. ``ref_fn`` is the
+    standard jnp lowering — the compiler's own view of the model — and is
+    lowered to the ``*.stablehlo.txt`` simulator input (dot_general /
+    add / maximum ops the frontend classifies). Both compute the same
+    function; pytest asserts they agree numerically.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    mlp_p = mlp_params(key)
+    tf_p = transformer_params(key, d_model=256, heads=4)
+
+    workloads = {}
+    for m, k, n in [(512, 512, 512), (128, 256, 512)]:
+        workloads[f"gemm_m{m}_k{k}_n{n}"] = (
+            lambda x, y: (gemm(x, y),),
+            lambda x, y: (ref.matmul_ref(x, y),),
+            gemm_shapes(m, k, n),
+        )
+
+    workloads["mlp_b32"] = (
+        lambda x: (mlp(x, mlp_p),),
+        lambda x: (mlp_ref_apply(x, mlp_p),),
+        (jax.ShapeDtypeStruct((32, MLP_DIMS[0]), jnp.float32),),
+    )
+
+    workloads["transformer_s128_d256_h4"] = (
+        lambda x: (transformer_block(x, tf_p),),
+        lambda x: (ref.transformer_block_ref(x, tf_p),),
+        (jax.ShapeDtypeStruct((128, 256), jnp.float32),),
+    )
+
+    workloads["ew_add_1024x1024"] = (
+        lambda x, y: (ew_add(x, y),),
+        lambda x, y: (ref.add_ref(x, y),),
+        (
+            jax.ShapeDtypeStruct((1024, 1024), jnp.float32),
+            jax.ShapeDtypeStruct((1024, 1024), jnp.float32),
+        ),
+    )
+
+    workloads["ew_relu_1024x1024"] = (
+        lambda x: (ew_relu(x),),
+        lambda x: (ref.relu_ref(x),),
+        (jax.ShapeDtypeStruct((1024, 1024), jnp.float32),),
+    )
+
+    return workloads

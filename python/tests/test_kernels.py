@@ -1,0 +1,183 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+This is the core build-time correctness signal: the same kernels are
+lowered into the AOT artifacts the Rust runtime executes, so agreement
+here certifies the numbers the whole stack produces.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise_pallas as ew
+from compile.kernels import matmul_pallas as mm
+from compile.kernels import ref
+
+KEY = jax.random.PRNGKey(1234)
+
+
+def rand(shape, dtype=jnp.float32, key=KEY):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-1) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8),
+    (128, 128, 128),       # exactly one MXU tile
+    (256, 128, 384),       # multi-tile, tile-aligned
+    (96, 160, 224),        # ragged: forces divisor fallback
+    (1, 784, 512),         # vector-matrix
+    (33, 7, 129),          # awkward primes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(m, k, n, dtype):
+    x = rand((m, k), dtype)
+    y = rand((k, n), dtype, key=jax.random.PRNGKey(99))
+    out = mm.matmul(x, y)
+    assert out.dtype == dtype
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.matmul_ref(x, y), np.float32),
+        **tol(dtype),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    """Property: the kernel agrees with the oracle on arbitrary shapes."""
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    y = jax.random.normal(ky, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(mm.matmul(x, y)),
+        np.asarray(ref.matmul_ref(x, y)),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_matmul_tile_helper():
+    assert mm._pick_tile(256, 128) == 128
+    assert mm._pick_tile(96, 128) == 96
+    assert mm._pick_tile(97, 128) == 97   # prime: single tile
+    assert mm._pick_tile(160, 128) == 80  # largest divisor <= 128
+
+
+def test_matmul_vmem_budget():
+    # One double-buffered 128^3 step must fit comfortably in 16 MiB VMEM.
+    assert mm.matmul_vmem_bytes() == 3 * 128 * 128 * 2 * 2
+    assert mm.matmul_vmem_bytes() < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# elementwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (256, 384), (100, 50), (1, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_add_matches_ref(shape, dtype):
+    x = rand(shape, dtype)
+    y = rand(shape, dtype, key=jax.random.PRNGKey(7))
+    np.testing.assert_allclose(
+        np.asarray(ew.add(x, y), np.float32),
+        np.asarray(ref.add_ref(x, y), np.float32),
+        **tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (512, 512), (33, 65)])
+def test_relu_matches_ref(shape):
+    x = rand(shape)
+    out = ew.relu(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.relu_ref(x)))
+    assert (np.asarray(out) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_elementwise_hypothesis(rows, cols, seed):
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    x = jax.random.normal(ka, (rows, cols), jnp.float32)
+    y = jax.random.normal(kb, (rows, cols), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ew.add(x, y)), np.asarray(x + y), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ew.relu(x)), np.asarray(ref.relu_ref(x)), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("shape", [(32, 512), (128, 256), (7, 13)])
+def test_bias_relu_matches_ref(shape):
+    x = rand(shape)
+    b = rand((shape[1],), key=jax.random.PRNGKey(3))
+    np.testing.assert_allclose(
+        np.asarray(ew.bias_relu(x, b)),
+        np.asarray(ref.bias_relu_ref(x, b)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_kernels_preserve_dtype():
+    for dtype in (jnp.float32, jnp.bfloat16):
+        x = rand((16, 128), dtype)
+        assert ew.add(x, x).dtype == dtype
+        assert ew.relu(x).dtype == dtype
+
+
+# ---------------------------------------------------------------------------
+# softmax
+# ---------------------------------------------------------------------------
+
+from compile.kernels import softmax_pallas as sm  # noqa: E402
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (64, 512), (13, 77), (1, 1)])
+def test_softmax_matches_ref(shape):
+    x = rand(shape, key=jax.random.PRNGKey(21)) * 5.0
+    out = sm.softmax(x)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.softmax_ref(x)), rtol=1e-5, atol=1e-6
+    )
+    # Rows sum to one.
+    np.testing.assert_allclose(np.asarray(out).sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_numerically_stable():
+    # Large logits must not overflow.
+    x = jnp.full((8, 128), 1.0e4, jnp.float32)
+    out = sm.softmax(x)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), 1.0 / 128.0, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 64), cols=st.integers(1, 256), seed=st.integers(0, 2**31 - 1))
+def test_softmax_hypothesis(rows, cols, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(sm.softmax(x)), np.asarray(ref.softmax_ref(x)), rtol=1e-5, atol=1e-6
+    )

@@ -1,0 +1,139 @@
+//! Bootstrap confidence intervals for the calibration fits.
+//!
+//! The paper reports point estimates (α, β, R²) per regime; for a
+//! *validated* simulator release the fits should carry uncertainty —
+//! nonparametric bootstrap over the observation set gives percentile CIs
+//! without distributional assumptions.
+
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+use super::linreg::LinearFit;
+
+/// Percentile confidence interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub fn contains(&self, v: f64) -> bool {
+        v >= self.lo && v <= self.hi
+    }
+
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// Bootstrap result for one linear fit.
+#[derive(Debug, Clone)]
+pub struct BootstrapResult {
+    pub alpha: Interval,
+    pub beta: Interval,
+    pub r2: Interval,
+    pub resamples: usize,
+}
+
+/// Percentile bootstrap over (x, y) pairs.
+///
+/// `level` is the two-sided confidence level (e.g. 0.95). Resamples that
+/// fail to fit (degenerate x) are skipped.
+pub fn bootstrap_fit(
+    x: &[f64],
+    y: &[f64],
+    resamples: usize,
+    level: f64,
+    seed: u64,
+) -> Option<BootstrapResult> {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 3 || resamples == 0 {
+        return None;
+    }
+    let n = x.len();
+    let mut prng = Prng::new(seed);
+    let mut alphas = Vec::with_capacity(resamples);
+    let mut betas = Vec::with_capacity(resamples);
+    let mut r2s = Vec::with_capacity(resamples);
+
+    for _ in 0..resamples {
+        let mut bx = Vec::with_capacity(n);
+        let mut by = Vec::with_capacity(n);
+        for _ in 0..n {
+            let i = prng.index(n);
+            bx.push(x[i]);
+            by.push(y[i]);
+        }
+        if let Some(fit) = LinearFit::fit(&bx, &by) {
+            alphas.push(fit.alpha);
+            betas.push(fit.beta);
+            r2s.push(fit.r2(&bx, &by));
+        }
+    }
+    if alphas.len() < resamples / 2 {
+        return None;
+    }
+
+    let tail = (1.0 - level) / 2.0 * 100.0;
+    let ci = |v: &[f64]| Interval {
+        lo: stats::percentile(v, tail),
+        hi: stats::percentile(v, 100.0 - tail),
+    };
+    Some(BootstrapResult {
+        alpha: ci(&alphas),
+        beta: ci(&betas),
+        r2: ci(&r2s),
+        resamples: alphas.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noisy_line(n: usize, alpha: f64, beta: f64) -> (Vec<f64>, Vec<f64>) {
+        let mut prng = Prng::new(5);
+        let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|&v| alpha * v + beta + prng.normal_ms(0.0, 2.0))
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn ci_contains_true_parameters() {
+        let (x, y) = noisy_line(200, 3.0, 10.0);
+        let b = bootstrap_fit(&x, &y, 500, 0.95, 42).unwrap();
+        assert!(b.alpha.contains(3.0), "alpha CI {:?}", b.alpha);
+        assert!(b.beta.contains(10.0), "beta CI {:?}", b.beta);
+        assert!(b.r2.lo > 0.9);
+        assert!(b.resamples >= 450);
+    }
+
+    #[test]
+    fn more_data_narrows_ci() {
+        let (x1, y1) = noisy_line(30, 2.0, 1.0);
+        let (x2, y2) = noisy_line(500, 2.0, 1.0);
+        let b1 = bootstrap_fit(&x1, &y1, 400, 0.95, 7).unwrap();
+        let b2 = bootstrap_fit(&x2, &y2, 400, 0.95, 7).unwrap();
+        assert!(b2.alpha.width() < b1.alpha.width());
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(bootstrap_fit(&[1.0, 2.0], &[1.0, 2.0], 100, 0.95, 1).is_none());
+        let x = vec![5.0; 10];
+        let y = vec![1.0; 10];
+        assert!(bootstrap_fit(&x, &y, 100, 0.95, 1).is_none());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (x, y) = noisy_line(100, 1.0, 0.0);
+        let a = bootstrap_fit(&x, &y, 200, 0.9, 3).unwrap();
+        let b = bootstrap_fit(&x, &y, 200, 0.9, 3).unwrap();
+        assert_eq!(a.alpha, b.alpha);
+    }
+}

@@ -1,0 +1,117 @@
+//! Ordinary least squares y = α·x + β, used for the paper's
+//! cycle-to-latency calibration (§4.1.1).
+
+use crate::util::json::{Json, JsonError};
+use crate::util::stats::{self, FitMetrics};
+
+/// A fitted 1-D linear model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    /// Slope: effective seconds (or µs) per simulated cycle.
+    pub alpha: f64,
+    /// Intercept: fixed overheads not modeled by the simulator.
+    pub beta: f64,
+}
+
+impl LinearFit {
+    /// Least-squares fit. Requires at least two distinct x values.
+    pub fn fit(x: &[f64], y: &[f64]) -> Option<LinearFit> {
+        assert_eq!(x.len(), y.len());
+        if x.len() < 2 {
+            return None;
+        }
+        let n = x.len() as f64;
+        let mx = x.iter().sum::<f64>() / n;
+        let my = y.iter().sum::<f64>() / n;
+        let mut sxx = 0.0;
+        let mut sxy = 0.0;
+        for (xi, yi) in x.iter().zip(y) {
+            sxx += (xi - mx) * (xi - mx);
+            sxy += (xi - mx) * (yi - my);
+        }
+        if sxx == 0.0 {
+            return None;
+        }
+        let alpha = sxy / sxx;
+        let beta = my - alpha * mx;
+        Some(LinearFit { alpha, beta })
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        self.alpha * x + self.beta
+    }
+
+    pub fn predict_batch(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.predict(x)).collect()
+    }
+
+    /// Fit-quality metrics of this model on (x, y).
+    pub fn metrics(&self, x: &[f64], y: &[f64]) -> FitMetrics {
+        let pred = self.predict_batch(x);
+        FitMetrics::compute(y, &pred)
+    }
+
+    /// R² of this fit on (x, y).
+    pub fn r2(&self, x: &[f64], y: &[f64]) -> f64 {
+        stats::r2(y, &self.predict_batch(x))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("alpha", Json::Num(self.alpha))
+            .set("beta", Json::Num(self.beta));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<LinearFit, JsonError> {
+        Ok(LinearFit {
+            alpha: j.req_f64("alpha")?,
+            beta: j.req_f64("beta")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 2.5 * v + 7.0).collect();
+        let f = LinearFit::fit(&x, &y).unwrap();
+        assert!((f.alpha - 2.5).abs() < 1e-12);
+        assert!((f.beta - 7.0).abs() < 1e-12);
+        assert!((f.r2(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_close() {
+        let x: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        // Deterministic "noise".
+        let y: Vec<f64> = x
+            .iter()
+            .map(|&v| 3.0 * v + 10.0 + ((v * 12.9898).sin() * 2.0))
+            .collect();
+        let f = LinearFit::fit(&x, &y).unwrap();
+        assert!((f.alpha - 3.0).abs() < 0.05);
+        assert!((f.beta - 10.0).abs() < 2.0);
+        assert!(f.r2(&x, &y) > 0.99);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(LinearFit::fit(&[1.0], &[2.0]).is_none());
+        assert!(LinearFit::fit(&[2.0, 2.0], &[1.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = LinearFit {
+            alpha: 1.25e-9,
+            beta: 3.5e-6,
+        };
+        let f2 = LinearFit::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, f2);
+    }
+}

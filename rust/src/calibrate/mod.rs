@@ -1,0 +1,10 @@
+//! Cycle→time calibration: OLS linear fits ([`linreg`]), the paper's
+//! three-regime calibration and routing ([`regime`]).
+
+pub mod bootstrap;
+pub mod linreg;
+pub mod regime;
+
+pub use bootstrap::{bootstrap_fit, BootstrapResult, Interval};
+pub use linreg::LinearFit;
+pub use regime::{fit_global, fit_regime_calibration, Regime, RegimeCalibration};

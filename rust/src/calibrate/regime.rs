@@ -1,0 +1,249 @@
+//! The paper's three GEMM size regimes and the per-regime calibration
+//! (§4.1): a separate linear cycle→time mapping is fitted per regime, and
+//! the combined calibrator routes a GEMM to its regime's fit.
+
+use crate::scalesim::topology::GemmShape;
+use crate::util::json::{Json, JsonError};
+use crate::util::stats::FitMetrics;
+
+use super::linreg::LinearFit;
+
+/// The paper's size regimes (dimension ranges of the sweep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Regime {
+    /// Dims 32–128: under-utilisation; fill/drain dominated.
+    Small,
+    /// Dims 128–1024: steady-state systolic execution.
+    Medium,
+    /// Dims 1024–4096: compiler tiling / scheduling dominated.
+    Large,
+}
+
+impl Regime {
+    pub const ALL: [Regime; 3] = [Regime::Small, Regime::Medium, Regime::Large];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::Small => "small",
+            Regime::Medium => "medium",
+            Regime::Large => "large",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Regime> {
+        match s {
+            "small" => Some(Regime::Small),
+            "medium" => Some(Regime::Medium),
+            "large" => Some(Regime::Large),
+            _ => None,
+        }
+    }
+
+    /// Classify a GEMM by its *largest* dimension, mirroring the paper's
+    /// sweep construction (each regime sweeps dims within its range).
+    pub fn of_gemm(g: &GemmShape) -> Regime {
+        let maxdim = g.m.max(g.k).max(g.n);
+        if maxdim <= 128 {
+            Regime::Small
+        } else if maxdim <= 1024 {
+            Regime::Medium
+        } else {
+            Regime::Large
+        }
+    }
+
+    /// The sweep range (lo, hi, step) of this regime in the paper.
+    pub fn sweep_range(&self) -> (usize, usize, usize) {
+        match self {
+            Regime::Small => (32, 128, 16),
+            Regime::Medium => (128, 1024, 128),
+            Regime::Large => (1024, 4096, 512),
+        }
+    }
+}
+
+impl std::fmt::Display for Regime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-regime linear cycle→time calibration (the paper's Fig. 2 fits,
+/// reused by §4.1.2 to report TPU latency directly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegimeCalibration {
+    pub small: LinearFit,
+    pub medium: LinearFit,
+    pub large: LinearFit,
+    /// Fit diagnostics per regime (as in Fig. 2's insets).
+    pub metrics: Vec<(Regime, FitMetrics)>,
+}
+
+impl RegimeCalibration {
+    pub fn fit_for(&self, regime: Regime) -> &LinearFit {
+        match regime {
+            Regime::Small => &self.small,
+            Regime::Medium => &self.medium,
+            Regime::Large => &self.large,
+        }
+    }
+
+    /// Map simulated cycles for `gemm` to estimated wall-clock µs.
+    pub fn cycles_to_us(&self, gemm: &GemmShape, cycles: u64) -> f64 {
+        self.fit_for(Regime::of_gemm(gemm)).predict(cycles as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("small", self.small.to_json())
+            .set("medium", self.medium.to_json())
+            .set("large", self.large.to_json());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<RegimeCalibration, JsonError> {
+        Ok(RegimeCalibration {
+            small: LinearFit::from_json(
+                j.get("small").ok_or_else(|| JsonError::new("missing small"))?,
+            )?,
+            medium: LinearFit::from_json(
+                j.get("medium")
+                    .ok_or_else(|| JsonError::new("missing medium"))?,
+            )?,
+            large: LinearFit::from_json(
+                j.get("large").ok_or_else(|| JsonError::new("missing large"))?,
+            )?,
+            metrics: Vec::new(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<RegimeCalibration> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        RegimeCalibration::from_json(&j).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+/// Fit the per-regime calibration from paired (gemm, cycles, measured µs)
+/// observations. Returns None if any regime has < 2 points.
+pub fn fit_regime_calibration(
+    observations: &[(GemmShape, u64, f64)],
+) -> Option<RegimeCalibration> {
+    let mut fits: Vec<Option<LinearFit>> = Vec::new();
+    let mut metrics = Vec::new();
+    for regime in Regime::ALL {
+        let (x, y): (Vec<f64>, Vec<f64>) = observations
+            .iter()
+            .filter(|(g, _, _)| Regime::of_gemm(g) == regime)
+            .map(|(_, c, t)| (*c as f64, *t))
+            .unzip();
+        let fit = LinearFit::fit(&x, &y)?;
+        metrics.push((regime, fit.metrics(&x, &y)));
+        fits.push(Some(fit));
+    }
+    Some(RegimeCalibration {
+        small: fits[0].unwrap(),
+        medium: fits[1].unwrap(),
+        large: fits[2].unwrap(),
+        metrics,
+    })
+}
+
+/// A single *global* fit across all regimes (ablation baseline: the paper
+/// shows per-regime fits behave differently — Fig. 2 vs Fig. 4).
+pub fn fit_global(observations: &[(GemmShape, u64, f64)]) -> Option<LinearFit> {
+    let (x, y): (Vec<f64>, Vec<f64>) = observations
+        .iter()
+        .map(|(_, c, t)| (*c as f64, *t))
+        .unzip();
+    LinearFit::fit(&x, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_classification() {
+        assert_eq!(Regime::of_gemm(&GemmShape::new(32, 64, 128)), Regime::Small);
+        assert_eq!(
+            Regime::of_gemm(&GemmShape::new(128, 512, 256)),
+            Regime::Medium
+        );
+        assert_eq!(
+            Regime::of_gemm(&GemmShape::new(64, 64, 2048)),
+            Regime::Large
+        );
+    }
+
+    #[test]
+    fn sweep_ranges_match_paper() {
+        assert_eq!(Regime::Small.sweep_range(), (32, 128, 16));
+        assert_eq!(Regime::Medium.sweep_range(), (128, 1024, 128));
+        assert_eq!(Regime::Large.sweep_range(), (1024, 4096, 512));
+    }
+
+    fn synth_observations() -> Vec<(GemmShape, u64, f64)> {
+        // Three clusters with different slopes.
+        let mut obs = Vec::new();
+        for i in 1..10usize {
+            let d = 32 + i * 8; // small
+            let cycles = (d * 10) as u64;
+            obs.push((GemmShape::new(d, d, d), cycles, 1.0 * cycles as f64 + 5.0));
+            let d = 128 + i * 64; // medium
+            let cycles = (d * 10) as u64;
+            obs.push((GemmShape::new(d, d, d), cycles, 2.0 * cycles as f64 + 1.0));
+            let d = 1024 + i * 256; // large
+            let cycles = (d * 10) as u64;
+            obs.push((GemmShape::new(d, d, d), cycles, 3.0 * cycles as f64 + 2.0));
+        }
+        obs
+    }
+
+    #[test]
+    fn per_regime_fit_recovers_slopes() {
+        let obs = synth_observations();
+        let cal = fit_regime_calibration(&obs).unwrap();
+        assert!((cal.small.alpha - 1.0).abs() < 1e-9);
+        assert!((cal.medium.alpha - 2.0).abs() < 1e-9);
+        assert!((cal.large.alpha - 3.0).abs() < 1e-9);
+        // Metrics recorded for all three regimes with perfect R².
+        assert_eq!(cal.metrics.len(), 3);
+        for (_, m) in &cal.metrics {
+            assert!(m.r2 > 0.999999);
+        }
+    }
+
+    #[test]
+    fn routing_uses_correct_regime() {
+        let obs = synth_observations();
+        let cal = fit_regime_calibration(&obs).unwrap();
+        let g_small = GemmShape::new(64, 64, 64);
+        let g_large = GemmShape::new(2048, 2048, 2048);
+        let t_small = cal.cycles_to_us(&g_small, 1000);
+        let t_large = cal.cycles_to_us(&g_large, 1000);
+        assert!((t_small - 1005.0).abs() < 1e-6);
+        assert!((t_large - 3002.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn global_fit_differs_from_regime_fits() {
+        let obs = synth_observations();
+        let global = fit_global(&obs).unwrap();
+        let cal = fit_regime_calibration(&obs).unwrap();
+        assert!((global.alpha - cal.small.alpha).abs() > 0.1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let obs = synth_observations();
+        let cal = fit_regime_calibration(&obs).unwrap();
+        let cal2 = RegimeCalibration::from_json(&cal.to_json()).unwrap();
+        assert_eq!(cal.small, cal2.small);
+        assert_eq!(cal.large, cal2.large);
+    }
+}

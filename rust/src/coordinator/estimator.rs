@@ -1,0 +1,425 @@
+//! The whole-model latency estimator — the tool the paper ships.
+//!
+//! Holds the three modeling assets (SCALE-Sim config, cycle→time
+//! calibration, per-operator learned models) and walks a parsed StableHLO
+//! module: each op is classified and routed to its model; the result is a
+//! per-op table plus totals and coverage statistics.
+
+use std::collections::HashMap;
+
+use crate::calibrate::RegimeCalibration;
+use crate::frontend::classify::{classify, EwKind, OpClass};
+use crate::frontend::opinfo::ModuleInfo;
+use crate::learned::features::featurize;
+use crate::learned::hgbr::CompiledHgbr;
+use crate::learned::Hgbr;
+use crate::scalesim::{simulate_gemm, ScaleConfig};
+
+/// How one op's latency was obtained.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EstimateSource {
+    /// SCALE-Sim cycles + regime calibration.
+    SystolicCalibrated,
+    /// Learned (HGBR) elementwise model.
+    Learned,
+    /// Learned model for a *different* op kind used as proxy.
+    LearnedProxy(String),
+    /// Analytic bandwidth model (data movement / reductions).
+    Bandwidth,
+    /// Zero-cost op.
+    Free,
+    /// No model available; conservative elementwise fallback.
+    Fallback,
+}
+
+impl EstimateSource {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EstimateSource::SystolicCalibrated => "systolic",
+            EstimateSource::Learned => "learned",
+            EstimateSource::LearnedProxy(_) => "learned-proxy",
+            EstimateSource::Bandwidth => "bandwidth",
+            EstimateSource::Free => "free",
+            EstimateSource::Fallback => "fallback",
+        }
+    }
+}
+
+/// Per-op estimate row.
+#[derive(Debug, Clone)]
+pub struct OpEstimate {
+    pub index: usize,
+    pub op_name: String,
+    pub source: EstimateSource,
+    /// Simulated cycles (systolic ops only).
+    pub cycles: Option<u64>,
+    pub latency_us: f64,
+    pub note: String,
+}
+
+/// Whole-module estimate.
+#[derive(Debug, Clone)]
+pub struct ModelEstimate {
+    pub module_name: String,
+    pub ops: Vec<OpEstimate>,
+    pub total_us: f64,
+    pub systolic_us: f64,
+    pub elementwise_us: f64,
+    pub other_us: f64,
+    /// Ops covered by a first-class model (systolic or learned).
+    pub covered_ops: usize,
+    pub total_costed_ops: usize,
+}
+
+impl ModelEstimate {
+    pub fn coverage(&self) -> f64 {
+        if self.total_costed_ops == 0 {
+            return 1.0;
+        }
+        self.covered_ops as f64 / self.total_costed_ops as f64
+    }
+}
+
+/// The estimator: config + calibration + learned models.
+pub struct Estimator {
+    pub config: ScaleConfig,
+    pub calibration: RegimeCalibration,
+    /// Per-operator learned models (keyed by EwKind name).
+    pub learned: HashMap<String, Hgbr>,
+    /// Flattened inference forms (built lazily from `learned`; see
+    /// EXPERIMENTS.md §Perf L3 — ~4x faster than tree walking).
+    compiled: std::sync::RwLock<HashMap<String, CompiledHgbr>>,
+    /// HBM bandwidth for the data-movement fallback, bytes/µs.
+    pub hbm_bytes_per_us: f64,
+}
+
+impl Estimator {
+    pub fn new(config: ScaleConfig, calibration: RegimeCalibration) -> Estimator {
+        Estimator {
+            config,
+            calibration,
+            learned: HashMap::new(),
+            compiled: std::sync::RwLock::new(HashMap::new()),
+            hbm_bytes_per_us: 1.2e6,
+        }
+    }
+
+    pub fn add_learned(&mut self, kind: EwKind, model: Hgbr) {
+        self.compiled
+            .write()
+            .unwrap()
+            .insert(kind.name().to_string(), model.compile());
+        self.learned.insert(kind.name().to_string(), model);
+    }
+
+    /// Predict via the flattened model for `name`, compiling on first use
+    /// (models loaded from disk bypass `add_learned`).
+    fn predict_compiled(&self, name: &str, row: &[f64]) -> f64 {
+        if let Some(c) = self.compiled.read().unwrap().get(name) {
+            return c.predict(row);
+        }
+        let model = &self.learned[name];
+        let compiled = model.compile();
+        let v = compiled.predict(row);
+        self.compiled
+            .write()
+            .unwrap()
+            .insert(name.to_string(), compiled);
+        v
+    }
+
+    /// Pick the learned model name for `kind`, falling back to a proxy of
+    /// the same arity class.
+    fn learned_for(&self, kind: EwKind) -> Option<(String, EstimateSource)> {
+        if self.learned.contains_key(kind.name()) {
+            return Some((kind.name().to_string(), EstimateSource::Learned));
+        }
+        // Proxy: prefer `add` for arithmetic, `maximum` for comparisons.
+        let proxy_order: &[&str] = match kind {
+            EwKind::Maximum | EwKind::Minimum | EwKind::Compare | EwKind::Select => {
+                &["maximum", "add"]
+            }
+            _ => &["add", "maximum"],
+        };
+        for name in proxy_order {
+            if self.learned.contains_key(*name) {
+                return Some((name.to_string(), EstimateSource::LearnedProxy(name.to_string())));
+            }
+        }
+        None
+    }
+
+    /// Estimate a whole module (entry function; `call` ops recurse into
+    /// their callees so Pallas-lowered modules with private sub-functions
+    /// are still costed).
+    pub fn estimate_module(&self, module: &ModuleInfo) -> ModelEstimate {
+        self.estimate_func(module, module.entry().map(|f| f.name.as_str()), 0)
+    }
+
+    fn estimate_func(
+        &self,
+        module: &ModuleInfo,
+        func_name: Option<&str>,
+        depth: usize,
+    ) -> ModelEstimate {
+        let mut est = ModelEstimate {
+            module_name: module.name.clone(),
+            ops: Vec::new(),
+            total_us: 0.0,
+            systolic_us: 0.0,
+            elementwise_us: 0.0,
+            other_us: 0.0,
+            covered_ops: 0,
+            total_costed_ops: 0,
+        };
+        let Some(func) = func_name.and_then(|n| module.funcs.iter().find(|f| f.name == n))
+        else {
+            return est;
+        };
+
+        for op in &func.ops {
+            // Follow calls into private sub-functions (depth-limited).
+            if (op.short_name() == "call" || op.op_name == "func.call") && depth < 4 {
+                if let Some(callee) = &op.callee {
+                    let sub = self.estimate_func(module, Some(callee), depth + 1);
+                    est.total_us += sub.total_us;
+                    est.systolic_us += sub.systolic_us;
+                    est.elementwise_us += sub.elementwise_us;
+                    est.other_us += sub.other_us;
+                    est.covered_ops += sub.covered_ops;
+                    est.total_costed_ops += sub.total_costed_ops;
+                    est.ops.push(OpEstimate {
+                        index: op.index,
+                        op_name: format!("call @{callee}"),
+                        source: EstimateSource::SystolicCalibrated,
+                        cycles: None,
+                        latency_us: sub.total_us,
+                        note: format!("inlined {} ops", sub.ops.len()),
+                    });
+                    continue;
+                }
+            }
+            let class = classify(op);
+            let row = self.estimate_op(op.index, &op.op_name, &class);
+            match class {
+                OpClass::SystolicGemm { .. } | OpClass::SystolicConv { .. } => {
+                    est.systolic_us += row.latency_us;
+                    est.covered_ops += 1;
+                    est.total_costed_ops += 1;
+                }
+                OpClass::Elementwise { .. } => {
+                    est.elementwise_us += row.latency_us;
+                    if matches!(
+                        row.source,
+                        EstimateSource::Learned | EstimateSource::LearnedProxy(_)
+                    ) {
+                        est.covered_ops += 1;
+                    }
+                    est.total_costed_ops += 1;
+                }
+                OpClass::Free => {}
+                _ => {
+                    est.other_us += row.latency_us;
+                    est.total_costed_ops += 1;
+                }
+            }
+            est.total_us += row.latency_us;
+            est.ops.push(row);
+        }
+        est
+    }
+
+    /// Estimate one classified op.
+    pub fn estimate_op(&self, index: usize, op_name: &str, class: &OpClass) -> OpEstimate {
+        match class {
+            OpClass::SystolicGemm { gemm, count }
+            | OpClass::SystolicConv { gemm, count, .. } => {
+                let report = simulate_gemm(&self.config, *gemm);
+                let cycles = report.total_cycles();
+                let t = self.calibration.cycles_to_us(gemm, cycles) * *count as f64;
+                OpEstimate {
+                    index,
+                    op_name: op_name.to_string(),
+                    source: EstimateSource::SystolicCalibrated,
+                    cycles: Some(cycles * count),
+                    latency_us: t.max(0.0),
+                    note: format!("{gemm} x{count}"),
+                }
+            }
+            OpClass::Elementwise { kind, out } => match self.learned_for(*kind) {
+                Some((model_name, source)) => {
+                    let t = self.predict_compiled(&model_name, &featurize(&out.dims));
+                    OpEstimate {
+                        index,
+                        op_name: op_name.to_string(),
+                        source,
+                        cycles: None,
+                        latency_us: t.max(0.0),
+                        note: format!("{out}"),
+                    }
+                }
+                None => OpEstimate {
+                    index,
+                    op_name: op_name.to_string(),
+                    source: EstimateSource::Fallback,
+                    cycles: None,
+                    latency_us: self.bandwidth_us(out.size_bytes() * 3),
+                    note: format!("no learned model for {}", kind.name()),
+                },
+            },
+            OpClass::Reduction { input, out } => OpEstimate {
+                index,
+                op_name: op_name.to_string(),
+                source: EstimateSource::Bandwidth,
+                cycles: None,
+                latency_us: self.bandwidth_us(input.size_bytes() + out.size_bytes()),
+                note: format!("reduce {input} -> {out}"),
+            },
+            OpClass::DataMovement { bytes, out } => OpEstimate {
+                index,
+                op_name: op_name.to_string(),
+                source: EstimateSource::Bandwidth,
+                cycles: None,
+                // Read + write the moved bytes.
+                latency_us: self.bandwidth_us(bytes * 2),
+                note: format!("{out}"),
+            },
+            OpClass::Free => OpEstimate {
+                index,
+                op_name: op_name.to_string(),
+                source: EstimateSource::Free,
+                cycles: None,
+                latency_us: 0.0,
+                note: String::new(),
+            },
+            OpClass::Unmodeled { reason, out } => OpEstimate {
+                index,
+                op_name: op_name.to_string(),
+                source: EstimateSource::Fallback,
+                cycles: None,
+                latency_us: out
+                    .as_ref()
+                    .map(|t| self.bandwidth_us(t.size_bytes() * 3))
+                    .unwrap_or(0.0),
+                note: reason.clone(),
+            },
+        }
+    }
+
+    fn bandwidth_us(&self, bytes: u64) -> f64 {
+        0.5 + bytes as f64 / self.hbm_bytes_per_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::fit_regime_calibration;
+    use crate::frontend::parse_module;
+    use crate::learned::HgbrParams;
+    use crate::scalesim::topology::GemmShape;
+
+    fn trivial_calibration() -> RegimeCalibration {
+        // One observation set per regime with slope 1e-3 µs/cycle.
+        let mut obs = Vec::new();
+        for d in [32usize, 64, 128, 256, 512, 1024, 2048, 4096] {
+            let g = GemmShape::new(d, d, d);
+            let cycles = (d * d) as u64;
+            obs.push((g, cycles, cycles as f64 * 1e-3 + 2.0));
+        }
+        fit_regime_calibration(&obs).unwrap()
+    }
+
+    fn learned_add_model() -> Hgbr {
+        // Train a tiny model: latency = 1 + n/1e5.
+        let shapes: Vec<Vec<usize>> = (1..200).map(|i| vec![i * 64]).collect();
+        let rows: Vec<Vec<f64>> = shapes.iter().map(|s| featurize(s)).collect();
+        let y: Vec<f64> = shapes
+            .iter()
+            .map(|s| 1.0 + (s[0] as f64) / 1e5)
+            .collect();
+        Hgbr::fit(
+            &rows,
+            &y,
+            &crate::learned::feature_names(),
+            &HgbrParams {
+                max_iter: 50,
+                ..Default::default()
+            },
+        )
+    }
+
+    const MODULE: &str = r#"
+module @test_model {
+  func.func public @main(%a: tensor<128x256xbf16>, %b: tensor<256x512xbf16>, %c: tensor<128x512xbf16>) -> (tensor<128x512xbf16>) {
+    %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<128x256xbf16>, tensor<256x512xbf16>) -> tensor<128x512xbf16>
+    %1 = stablehlo.add %0, %c : tensor<128x512xbf16>
+    %cst = stablehlo.constant dense<0.0> : tensor<bf16>
+    %2 = stablehlo.broadcast_in_dim %cst, dims = [] : (tensor<bf16>) -> tensor<128x512xbf16>
+    %3 = stablehlo.maximum %1, %2 : tensor<128x512xbf16>
+    return %3 : tensor<128x512xbf16>
+  }
+}
+"#;
+
+    #[test]
+    fn estimates_whole_module() {
+        let module = parse_module(MODULE).unwrap();
+        let mut est = Estimator::new(ScaleConfig::tpu_v4(), trivial_calibration());
+        est.add_learned(EwKind::Add, learned_add_model());
+        let report = est.estimate_module(&module);
+
+        assert_eq!(report.ops.len(), 5);
+        assert!(report.total_us > 0.0);
+        assert!(report.systolic_us > 0.0);
+        assert!(report.elementwise_us > 0.0);
+        // dot uses the calibrated path.
+        assert_eq!(report.ops[0].source, EstimateSource::SystolicCalibrated);
+        assert!(report.ops[0].cycles.is_some());
+        // add uses the learned model; maximum proxies through add.
+        assert_eq!(report.ops[1].source, EstimateSource::Learned);
+        assert_eq!(
+            report.ops[4].source,
+            EstimateSource::LearnedProxy("add".to_string())
+        );
+        // constant is free.
+        assert_eq!(report.ops[2].source, EstimateSource::Free);
+        assert_eq!(report.ops[2].latency_us, 0.0);
+        // totals decompose.
+        let sum = report.systolic_us + report.elementwise_us + report.other_us;
+        assert!((sum - report.total_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coverage_reflects_missing_models() {
+        let module = parse_module(MODULE).unwrap();
+        let est = Estimator::new(ScaleConfig::tpu_v4(), trivial_calibration());
+        // No learned models at all: elementwise ops fall back.
+        let report = est.estimate_module(&module);
+        assert!(report.coverage() < 1.0);
+        assert!(report
+            .ops
+            .iter()
+            .any(|o| o.source == EstimateSource::Fallback));
+    }
+
+    #[test]
+    fn batched_dot_scales_count() {
+        let text = r#"
+module { func.func @main(%a: tensor<4x64x64xf32>, %b: tensor<4x64x64xf32>) -> tensor<4x64x64xf32> {
+  %0 = stablehlo.dot_general %a, %b, batching_dims = [0] x [0], contracting_dims = [2] x [1] : (tensor<4x64x64xf32>, tensor<4x64x64xf32>) -> tensor<4x64x64xf32>
+  return %0 : tensor<4x64x64xf32>
+} }"#;
+        let module = parse_module(text).unwrap();
+        let est = Estimator::new(ScaleConfig::tpu_v4(), trivial_calibration());
+        let report = est.estimate_module(&module);
+        let single = {
+            let class = OpClass::SystolicGemm {
+                gemm: GemmShape::new(64, 64, 64),
+                count: 1,
+            };
+            est.estimate_op(0, "dot", &class).latency_us
+        };
+        assert!((report.ops[0].latency_us - 4.0 * single).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator: the whole-model estimator ([`estimator`]), the scoped
+//! worker pool driving parallel sweeps ([`pool`]), and the JSONL batch
+//! service loop ([`service`]).
+
+pub mod estimator;
+pub mod fusion;
+pub mod pool;
+pub mod service;
+
+pub use estimator::{Estimator, EstimateSource, ModelEstimate, OpEstimate};
+pub use fusion::estimate_fused;
+pub use pool::{default_workers, parallel_map};
+pub use service::{serve_lines, Request};

@@ -1,0 +1,218 @@
+//! Batch simulation service: the coordinator's request loop.
+//!
+//! Requests arrive as JSON objects (one per line — JSONL), are batched,
+//! fanned out across the worker pool, and answered in order:
+//!
+//! ```json
+//! {"type": "gemm", "m": 512, "k": 512, "n": 512}
+//! {"type": "module", "path": "artifacts/mlp.stablehlo.txt"}
+//! {"type": "elementwise", "op": "add", "dims": [1024, 1024]}
+//! ```
+//!
+//! This is the "leader" entry point (`scalesim-tpu serve`): downstream
+//! tooling pipes compiler output in and gets latency estimates back
+//! without ever invoking Python.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::frontend::classify::{EwKind, OpClass};
+use crate::frontend::parse_module;
+use crate::frontend::types::{DType, TensorType};
+use crate::scalesim::topology::GemmShape;
+use crate::util::json::Json;
+
+use super::estimator::Estimator;
+use super::pool::parallel_map;
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Gemm(GemmShape),
+    Elementwise { op: String, dims: Vec<usize> },
+    Module { path: String },
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        match j.req_str("type").map_err(|e| anyhow::anyhow!("{e}"))? {
+            "gemm" => {
+                let m = j.req_f64("m").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+                let k = j.req_f64("k").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+                let n = j.req_f64("n").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+                if m == 0 || k == 0 || n == 0 {
+                    bail!("gemm dims must be positive");
+                }
+                Ok(Request::Gemm(GemmShape::new(m, k, n)))
+            }
+            "elementwise" => {
+                let op = j.req_str("op").map_err(|e| anyhow::anyhow!("{e}"))?.to_string();
+                let dims = j
+                    .num_arr("dims")
+                    .map_err(|e| anyhow::anyhow!("{e}"))?
+                    .into_iter()
+                    .map(|d| d as usize)
+                    .collect();
+                Ok(Request::Elementwise { op, dims })
+            }
+            "module" => Ok(Request::Module {
+                path: j.req_str("path").map_err(|e| anyhow::anyhow!("{e}"))?.to_string(),
+            }),
+            other => bail!("unknown request type '{other}'"),
+        }
+    }
+}
+
+/// Serve a batch of JSONL requests; returns one JSON response line per
+/// request, in order.
+pub fn serve_lines(estimator: Arc<Estimator>, lines: &[String], workers: usize) -> Vec<String> {
+    let items: Vec<(usize, String)> = lines
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (i, l.clone()))
+        .collect();
+    parallel_map(&items, workers, |(i, line)| {
+        let resp = handle_line(&estimator, line);
+        let mut obj = match resp {
+            Ok(mut ok) => {
+                ok.set("ok", Json::Bool(true));
+                ok
+            }
+            Err(e) => {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(false))
+                    .set("error", Json::Str(format!("{e:#}")));
+                o
+            }
+        };
+        obj.set("id", Json::Num(*i as f64));
+        obj.dump()
+    })
+}
+
+fn handle_line(estimator: &Estimator, line: &str) -> Result<Json> {
+    let req = Request::parse(line)?;
+    match req {
+        Request::Gemm(g) => {
+            let class = OpClass::SystolicGemm { gemm: g, count: 1 };
+            let est = estimator.estimate_op(0, "gemm", &class);
+            let mut o = Json::obj();
+            o.set("type", Json::Str("gemm".into()))
+                .set("cycles", Json::Num(est.cycles.unwrap_or(0) as f64))
+                .set("latency_us", Json::Num(est.latency_us));
+            Ok(o)
+        }
+        Request::Elementwise { op, dims } => {
+            let kind = EwKind::from_name(&op)
+                .ok_or_else(|| anyhow::anyhow!("unknown elementwise op '{op}'"))?;
+            let out = TensorType::new(dims.clone(), DType::Bf16);
+            let class = OpClass::Elementwise { kind, out };
+            let est = estimator.estimate_op(0, &op, &class);
+            let mut o = Json::obj();
+            o.set("type", Json::Str("elementwise".into()))
+                .set("latency_us", Json::Num(est.latency_us))
+                .set("source", Json::Str(est.source.tag().into()));
+            Ok(o)
+        }
+        Request::Module { path } => {
+            let text = std::fs::read_to_string(&path)?;
+            let module = parse_module(&text)?;
+            let report = estimator.estimate_module(&module);
+            let mut o = Json::obj();
+            o.set("type", Json::Str("module".into()))
+                .set("module", Json::Str(report.module_name.clone()))
+                .set("total_us", Json::Num(report.total_us))
+                .set("systolic_us", Json::Num(report.systolic_us))
+                .set("elementwise_us", Json::Num(report.elementwise_us))
+                .set("other_us", Json::Num(report.other_us))
+                .set("num_ops", Json::Num(report.ops.len() as f64))
+                .set("coverage", Json::Num(report.coverage()));
+            Ok(o)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::fit_regime_calibration;
+    use crate::scalesim::ScaleConfig;
+
+    fn estimator() -> Arc<Estimator> {
+        let mut obs = Vec::new();
+        for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+            let g = GemmShape::new(d, d, d);
+            obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+        }
+        Arc::new(Estimator::new(
+            ScaleConfig::tpu_v4(),
+            fit_regime_calibration(&obs).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn parse_requests() {
+        assert_eq!(
+            Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3}"#).unwrap(),
+            Request::Gemm(GemmShape::new(1, 2, 3))
+        );
+        assert_eq!(
+            Request::parse(r#"{"type":"elementwise","op":"add","dims":[8,128]}"#).unwrap(),
+            Request::Elementwise {
+                op: "add".into(),
+                dims: vec![8, 128]
+            }
+        );
+        assert!(Request::parse(r#"{"type":"gemm","m":0,"k":1,"n":1}"#).is_err());
+        assert!(Request::parse("not json").is_err());
+    }
+
+    #[test]
+    fn serve_batch_ordered_responses() {
+        let est = estimator();
+        let lines: Vec<String> = vec![
+            r#"{"type":"gemm","m":128,"k":128,"n":128}"#.into(),
+            r#"{"type":"bogus"}"#.into(),
+            r#"{"type":"elementwise","op":"add","dims":[256,256]}"#.into(),
+        ];
+        let responses = serve_lines(est, &lines, 4);
+        assert_eq!(responses.len(), 3);
+        let r0 = Json::parse(&responses[0]).unwrap();
+        assert_eq!(r0.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r0.req_f64("id").unwrap(), 0.0);
+        assert!(r0.req_f64("latency_us").unwrap() > 0.0);
+        let r1 = Json::parse(&responses[1]).unwrap();
+        assert_eq!(r1.get("ok"), Some(&Json::Bool(false)));
+        let r2 = Json::parse(&responses[2]).unwrap();
+        assert_eq!(r2.req_str("type").unwrap(), "elementwise");
+        // Fallback source since no learned models were registered.
+        assert_eq!(r2.req_str("source").unwrap(), "fallback");
+    }
+
+    #[test]
+    fn serve_module_request() {
+        let est = estimator();
+        let dir = std::env::temp_dir().join("scalesim_tpu_service_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.stablehlo.txt");
+        std::fs::write(
+            &path,
+            r#"
+module @m { func.func @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> tensor<64x64xf32> {
+  %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<64x64xf32>, tensor<64x64xf32>) -> tensor<64x64xf32>
+  %1 = stablehlo.add %0, %a : tensor<64x64xf32>
+  return %1 : tensor<64x64xf32>
+} }"#,
+        )
+        .unwrap();
+        let line = format!(r#"{{"type":"module","path":"{}"}}"#, path.display());
+        let responses = serve_lines(est, &[line], 1);
+        let r = Json::parse(&responses[0]).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+        assert_eq!(r.req_f64("num_ops").unwrap(), 2.0);
+        assert!(r.req_f64("total_us").unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
+    }
+}

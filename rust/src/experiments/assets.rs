@@ -1,0 +1,223 @@
+//! Modeling-asset management: build (calibration + learned models) from a
+//! hardware backend, persist to disk, and load back into an
+//! [`Estimator`]. The CLI and the end-to-end example use this so the
+//! expensive measure/train steps run once and are reused.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::calibrate::RegimeCalibration;
+use crate::coordinator::Estimator;
+use crate::frontend::classify::EwKind;
+use crate::learned::{Hgbr, HgbrParams};
+use crate::scalesim::ScaleConfig;
+use crate::tpu::traits::Hardware;
+
+use super::{fig2, fig5};
+
+/// Operators we train first-class learned models for.
+pub const LEARNED_OPS: [EwKind; 4] = [
+    EwKind::Add,
+    EwKind::Maximum,
+    EwKind::Multiply,
+    EwKind::Subtract,
+];
+
+/// Build a fully-populated estimator from scratch: run the Fig. 2
+/// calibration sweep and train learned models for [`LEARNED_OPS`].
+pub fn build_estimator(
+    hw: &mut dyn Hardware,
+    config: &ScaleConfig,
+    num_shapes: usize,
+    reps: usize,
+    seed: u64,
+) -> Estimator {
+    let f2 = fig2::run(hw, config, reps);
+    let mut est = Estimator::new(config.clone(), f2.calibration);
+    let params = HgbrParams::default();
+    for (i, op) in LEARNED_OPS.iter().enumerate() {
+        let ds = fig5::collect_dataset(hw, *op, num_shapes, reps, seed + i as u64);
+        let (rows, y) = ds.features_targets();
+        let model = Hgbr::fit(&rows, &y, &crate::learned::feature_names(), &params);
+        est.add_learned(*op, model);
+    }
+    est
+}
+
+/// A *fast* estimator build for slow (real-execution) backends: a
+/// reduced diagonal GEMM sweep spanning all three regimes, plus small
+/// capped elementwise training sets for add/maximum only.
+pub fn build_estimator_fast(
+    hw: &mut dyn Hardware,
+    config: &ScaleConfig,
+    reps: usize,
+    seed: u64,
+) -> Estimator {
+    use crate::scalesim::{simulate_gemm, GemmShape};
+    use crate::workloads::elementwise_sweep::sample_training_shapes_bounded;
+
+    // Diagonal + lightly skewed shapes across the regimes (capped at 2048
+    // so CPU-backed GEMMs stay sub-second).
+    let mut dims: Vec<(usize, usize, usize)> = vec![
+        (32, 32, 32),
+        (48, 48, 48),
+        (64, 64, 64),
+        (96, 96, 96),
+        (128, 128, 128),
+        (64, 128, 96),
+        (256, 256, 256),
+        (384, 384, 384),
+        (512, 512, 512),
+        (768, 768, 768),
+        (1024, 1024, 1024),
+        (256, 512, 768),
+        (1280, 1280, 1280),
+        (1536, 1536, 1536),
+        (2048, 2048, 2048),
+        (1536, 1024, 2048),
+        (2048, 1280, 1536),
+    ];
+    dims.dedup();
+    let obs: Vec<(GemmShape, u64, f64)> = dims
+        .into_iter()
+        .map(|(m, k, n)| {
+            let g = GemmShape::new(m, k, n);
+            let cycles = simulate_gemm(config, g).total_cycles();
+            let t = crate::tpu::traits::measure_gemm_median(hw, g, reps);
+            (g, cycles, t)
+        })
+        .collect();
+    let calibration =
+        crate::calibrate::fit_regime_calibration(&obs).expect("fast calibration fit");
+    let mut est = Estimator::new(config.clone(), calibration);
+
+    let params = HgbrParams {
+        max_iter: 300,
+        ..Default::default()
+    };
+    for (i, op) in [EwKind::Add, EwKind::Maximum].iter().enumerate() {
+        let mut ds = crate::learned::Dataset::new(op.name());
+        for shape in sample_training_shapes_bounded(240, seed + i as u64, 1 << 20) {
+            let t = crate::tpu::traits::measure_ew_median(hw, *op, &shape, reps);
+            if t.is_finite() {
+                ds.push(shape, t);
+            }
+        }
+        let (rows, y) = ds.features_targets();
+        let model = Hgbr::fit(&rows, &y, &crate::learned::feature_names(), &params);
+        est.add_learned(*op, model);
+    }
+    est
+}
+
+/// Persist calibration + learned models under `dir`.
+pub fn save_assets(dir: &Path, est: &Estimator) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    est.calibration
+        .save(&dir.join("calibration.json"))
+        .context("saving calibration")?;
+    for (name, model) in &est.learned {
+        model
+            .save(&dir.join(format!("learned_{name}.json")))
+            .with_context(|| format!("saving learned model '{name}'"))?;
+    }
+    std::fs::write(
+        dir.join("config.json"),
+        est.config.to_json().pretty(),
+    )?;
+    Ok(())
+}
+
+/// Load previously saved assets.
+pub fn load_assets(dir: &Path) -> Result<Estimator> {
+    let config_text = std::fs::read_to_string(dir.join("config.json"))
+        .with_context(|| format!("no config.json under {}", dir.display()))?;
+    let config = ScaleConfig::from_json(
+        &crate::util::json::Json::parse(&config_text).map_err(|e| anyhow::anyhow!("{e}"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let calibration = RegimeCalibration::load(&dir.join("calibration.json"))?;
+    let mut est = Estimator::new(config, calibration);
+
+    let mut learned = HashMap::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if let Some(op) = name
+            .strip_prefix("learned_")
+            .and_then(|s| s.strip_suffix(".json"))
+        {
+            learned.insert(op.to_string(), Hgbr::load(&path)?);
+        }
+    }
+    est.learned = learned;
+    Ok(est)
+}
+
+/// Load assets if present, otherwise build and save them.
+pub fn load_or_build(
+    dir: &Path,
+    hw: &mut dyn Hardware,
+    config: &ScaleConfig,
+    num_shapes: usize,
+    reps: usize,
+    seed: u64,
+) -> Result<Estimator> {
+    if dir.join("calibration.json").exists() && dir.join("config.json").exists() {
+        if let Ok(est) = load_assets(dir) {
+            crate::log_info!("loaded modeling assets from {}", dir.display());
+            return Ok(est);
+        }
+    }
+    crate::log_info!("building modeling assets (sweep + training)...");
+    let est = build_estimator(hw, config, num_shapes, reps, seed);
+    save_assets(dir, &est)?;
+    Ok(est)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpu::TpuV4Model;
+
+    #[test]
+    fn build_save_load_roundtrip() {
+        let mut hw = TpuV4Model::new(5);
+        let config = ScaleConfig::tpu_v4();
+        let est = build_estimator(&mut hw, &config, 150, 1, 3);
+        assert_eq!(est.learned.len(), LEARNED_OPS.len());
+
+        let dir = std::env::temp_dir().join("scalesim_tpu_assets_test");
+        std::fs::remove_dir_all(&dir).ok();
+        save_assets(&dir, &est).unwrap();
+        let est2 = load_assets(&dir).unwrap();
+        assert_eq!(est2.learned.len(), est.learned.len());
+        assert_eq!(est2.config, est.config);
+        // Same predictions after the roundtrip.
+        let g = crate::scalesim::GemmShape::new(777, 333, 99);
+        assert!(
+            (est.calibration.cycles_to_us(&g, 12345) - est2.calibration.cycles_to_us(&g, 12345))
+                .abs()
+                < 1e-9
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_build_uses_cache() {
+        let mut hw = TpuV4Model::new(5);
+        let config = ScaleConfig::tpu_v4();
+        let dir = std::env::temp_dir().join("scalesim_tpu_assets_cache_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let _ = load_or_build(&dir, &mut hw, &config, 120, 1, 3).unwrap();
+        let t0 = std::time::Instant::now();
+        let est2 = load_or_build(&dir, &mut hw, &config, 120, 1, 3).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 2.0, "cache path too slow");
+        assert!(!est2.learned.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

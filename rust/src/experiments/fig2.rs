@@ -1,0 +1,230 @@
+//! Figure 2: SCALE-Sim-to-TPU regression for systolic GEMM across three
+//! size regimes.
+//!
+//! For every shape in the paper's sweep we record (1) SCALE-Sim's
+//! predicted cycle count and (2) the measured hardware latency
+//! (median-of-N), then fit a per-regime least-squares line and report the
+//! inset metrics (R², RMSE, MAE, n).
+
+use crate::calibrate::{fit_regime_calibration, LinearFit, Regime, RegimeCalibration};
+use crate::coordinator::pool::{default_workers, parallel_map};
+use crate::report::{fnum, Scatter, Table};
+use crate::scalesim::{simulate_gemm, GemmShape, ScaleConfig};
+use crate::tpu::traits::{measure_gemm_median, Hardware};
+use crate::util::stats::FitMetrics;
+use crate::workloads::gemm_sweep::regime_sweep;
+
+/// One observed point.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub gemm: GemmShape,
+    pub cycles: u64,
+    pub measured_us: f64,
+}
+
+/// Per-regime regression panel.
+#[derive(Debug, Clone)]
+pub struct RegimePanel {
+    pub regime: Regime,
+    pub points: Vec<Observation>,
+    pub fit: LinearFit,
+    pub metrics: FitMetrics,
+}
+
+/// The full Fig. 2 result.
+#[derive(Debug, Clone)]
+pub struct Fig2Result {
+    pub panels: Vec<RegimePanel>,
+    pub calibration: RegimeCalibration,
+}
+
+/// Collect observations for one regime.
+pub fn observe_regime(
+    hw: &mut dyn Hardware,
+    config: &ScaleConfig,
+    regime: Regime,
+    reps: usize,
+) -> Vec<Observation> {
+    let shapes = regime_sweep(regime);
+    // Simulation is deterministic and parallel-safe.
+    let cycles: Vec<u64> = parallel_map(&shapes, default_workers(), |g| {
+        simulate_gemm(config, *g).total_cycles()
+    });
+    // Measurement walks the hardware's noise stream sequentially.
+    shapes
+        .iter()
+        .zip(cycles)
+        .map(|(g, c)| Observation {
+            gemm: *g,
+            cycles: c,
+            measured_us: measure_gemm_median(hw, *g, reps),
+        })
+        .collect()
+}
+
+/// Run the whole experiment.
+pub fn run(hw: &mut dyn Hardware, config: &ScaleConfig, reps: usize) -> Fig2Result {
+    let mut panels = Vec::new();
+    let mut all_obs = Vec::new();
+    for regime in Regime::ALL {
+        let points = observe_regime(hw, config, regime, reps);
+        let x: Vec<f64> = points.iter().map(|o| o.cycles as f64).collect();
+        let y: Vec<f64> = points.iter().map(|o| o.measured_us).collect();
+        let fit = LinearFit::fit(&x, &y).expect("regime fit");
+        let metrics = fit.metrics(&x, &y);
+        for o in &points {
+            all_obs.push((o.gemm, o.cycles, o.measured_us));
+        }
+        panels.push(RegimePanel {
+            regime,
+            points,
+            fit,
+            metrics,
+        });
+    }
+    let calibration = fit_regime_calibration(&all_obs).expect("calibration");
+    Fig2Result {
+        panels,
+        calibration,
+    }
+}
+
+/// Render the three panels (scatter + inset metrics) and a summary table.
+pub fn render(result: &Fig2Result, hw_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 2 — SCALE-Sim cycles vs measured latency ({hw_name})\n\n"
+    ));
+    for p in &result.panels {
+        let pts: Vec<(f64, f64)> = p
+            .points
+            .iter()
+            .map(|o| (o.cycles as f64, o.measured_us))
+            .collect();
+        let mut sc = Scatter::new(
+            &format!(
+                "regime={} fit: t = {:.4e}·cycles + {:.3} µs",
+                p.regime, p.fit.alpha, p.fit.beta
+            ),
+            "SCALE-Sim cycles",
+            "measured µs",
+        );
+        sc.add_series('o', pts);
+        sc.with_fit(p.fit.alpha, p.fit.beta);
+        out.push_str(&sc.render());
+        out.push_str(&format!(
+            "  inset: R²={:.4}  RMSE={}µs  MAE={}µs  n={}\n\n",
+            p.metrics.r2,
+            fnum(p.metrics.rmse),
+            fnum(p.metrics.mae),
+            p.metrics.n
+        ));
+    }
+    let mut table = Table::new(&[
+        "regime",
+        "n",
+        "alpha (µs/cycle)",
+        "alpha 95% CI",
+        "beta (µs)",
+        "R2",
+        "R2 95% CI",
+        "RMSE",
+        "MAE",
+    ]);
+    for p in &result.panels {
+        let x: Vec<f64> = p.points.iter().map(|o| o.cycles as f64).collect();
+        let y: Vec<f64> = p.points.iter().map(|o| o.measured_us).collect();
+        let boot = crate::calibrate::bootstrap_fit(&x, &y, 400, 0.95, 0xb007);
+        let (a_ci, r_ci) = match &boot {
+            Some(b) => (
+                format!("[{:.2e}, {:.2e}]", b.alpha.lo, b.alpha.hi),
+                format!("[{:.3}, {:.3}]", b.r2.lo, b.r2.hi),
+            ),
+            None => ("-".into(), "-".into()),
+        };
+        table.row(&[
+            p.regime.to_string(),
+            p.metrics.n.to_string(),
+            format!("{:.5e}", p.fit.alpha),
+            a_ci,
+            fnum(p.fit.beta),
+            format!("{:.4}", p.metrics.r2),
+            r_ci,
+            fnum(p.metrics.rmse),
+            fnum(p.metrics.mae),
+        ]);
+    }
+    out.push_str(&table.markdown());
+    out
+}
+
+/// CSV of every observation (for external plotting).
+pub fn to_csv(result: &Fig2Result) -> String {
+    let mut t = Table::new(&["regime", "m", "k", "n", "cycles", "measured_us"]);
+    for p in &result.panels {
+        for o in &p.points {
+            t.row(&[
+                p.regime.to_string(),
+                o.gemm.m.to_string(),
+                o.gemm.k.to_string(),
+                o.gemm.n.to_string(),
+                o.cycles.to_string(),
+                format!("{:.4}", o.measured_us),
+            ]);
+        }
+    }
+    t.csv()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpu::TpuV4Model;
+
+    fn run_default() -> Fig2Result {
+        let mut hw = TpuV4Model::new(42);
+        run(&mut hw, &ScaleConfig::tpu_v4(), 5)
+    }
+
+    #[test]
+    fn reproduces_paper_regression_quality() {
+        let r = run_default();
+        assert_eq!(r.panels.len(), 3);
+        let by: std::collections::HashMap<Regime, &RegimePanel> =
+            r.panels.iter().map(|p| (p.regime, p)).collect();
+        // Paper: R² ≈ 0.79 small, > 0.97 medium/large.
+        let small = by[&Regime::Small].metrics.r2;
+        let medium = by[&Regime::Medium].metrics.r2;
+        let large = by[&Regime::Large].metrics.r2;
+        assert!(small > 0.5 && small < 0.995, "small R² {small}");
+        assert!(medium > 0.97, "medium R² {medium}");
+        assert!(large > 0.9, "large R² {large}");
+        // Small regime is the weakest fit, as in the paper.
+        assert!(small < medium && small < large, "{small} {medium} {large}");
+    }
+
+    #[test]
+    fn alpha_near_clock_period() {
+        // The slope should be on the order of the 940 MHz cycle time
+        // (1/940 µs per cycle ≈ 1.06e-3), at least in the medium regime.
+        let r = run_default();
+        let medium = r
+            .panels
+            .iter()
+            .find(|p| p.regime == Regime::Medium)
+            .unwrap();
+        let period_us = 1.0 / 940.0 * 1e3 / 1e3; // 1.064e-3 µs
+        let ratio = medium.fit.alpha / period_us;
+        assert!(ratio > 0.3 && ratio < 3.0, "alpha ratio {ratio}");
+    }
+
+    #[test]
+    fn render_and_csv_nonempty() {
+        let r = run_default();
+        let text = render(&r, "tpu_v4_model");
+        assert!(text.contains("regime=small"));
+        assert!(text.contains("R²="));
+        let csv = to_csv(&r);
+        assert!(csv.lines().count() > 100);
+    }
+}

@@ -1,0 +1,182 @@
+//! Figure 3: exploratory bf16 elementwise-add latency sweeps.
+//!
+//! (a) 1-D lengths 32–8192 step 32; (b) 2-D dims 64–1024 step 64. The
+//! claims to reproduce: latency is approximately linear in tensor size,
+//! with small shape-dependent fluctuations (same size, different shape →
+//! slightly different latency).
+
+use crate::frontend::classify::EwKind;
+use crate::report::Scatter;
+use crate::tpu::traits::{measure_ew_median, Hardware};
+use crate::util::stats;
+use crate::workloads::elementwise_sweep::{sweep_1d, sweep_2d};
+
+/// One measured sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub dims: Vec<usize>,
+    pub elements: u64,
+    pub latency_us: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig3Result {
+    pub one_d: Vec<SweepPoint>,
+    pub two_d: Vec<SweepPoint>,
+    /// Pearson correlation of latency vs size for each sweep.
+    pub linearity_1d: f64,
+    pub linearity_2d: f64,
+    /// Max relative spread among same-size 2-D shapes (the fluctuation).
+    pub max_same_size_spread: f64,
+}
+
+fn measure_sweep(
+    hw: &mut dyn Hardware,
+    shapes: Vec<Vec<usize>>,
+    reps: usize,
+) -> Vec<SweepPoint> {
+    shapes
+        .into_iter()
+        .map(|dims| {
+            let latency_us = measure_ew_median(hw, EwKind::Add, &dims, reps);
+            let elements = dims.iter().map(|&d| d as u64).product();
+            SweepPoint {
+                dims,
+                elements,
+                latency_us,
+            }
+        })
+        .collect()
+}
+
+pub fn run(hw: &mut dyn Hardware, reps: usize) -> Fig3Result {
+    let one_d = measure_sweep(hw, sweep_1d(), reps);
+    let two_d = measure_sweep(hw, sweep_2d(), reps);
+
+    let corr = |pts: &[SweepPoint]| {
+        let x: Vec<f64> = pts.iter().map(|p| p.elements as f64).collect();
+        let y: Vec<f64> = pts.iter().map(|p| p.latency_us).collect();
+        stats::pearson(&x, &y)
+    };
+
+    // Same-size spread in the 2-D sweep.
+    let mut by_size: std::collections::BTreeMap<u64, Vec<f64>> = Default::default();
+    for p in &two_d {
+        by_size.entry(p.elements).or_default().push(p.latency_us);
+    }
+    let mut max_spread = 0.0f64;
+    for (_, v) in by_size {
+        if v.len() >= 2 {
+            let lo = stats::min(&v);
+            let hi = stats::max(&v);
+            if lo > 0.0 {
+                max_spread = max_spread.max((hi - lo) / lo);
+            }
+        }
+    }
+
+    Fig3Result {
+        linearity_1d: corr(&one_d),
+        linearity_2d: corr(&two_d),
+        max_same_size_spread: max_spread,
+        one_d,
+        two_d,
+    }
+}
+
+pub fn render(result: &Fig3Result, hw_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 3 — bf16 elementwise-add latency vs tensor size ({hw_name})\n\n"
+    ));
+    let mut a = Scatter::new(
+        &format!(
+            "(a) 1-D sweep 32–8192 step 32 — pearson r = {:.4}",
+            result.linearity_1d
+        ),
+        "elements",
+        "latency µs",
+    );
+    a.add_series(
+        'o',
+        result
+            .one_d
+            .iter()
+            .map(|p| (p.elements as f64, p.latency_us))
+            .collect(),
+    );
+    out.push_str(&a.render());
+    out.push('\n');
+    let mut b = Scatter::new(
+        &format!(
+            "(b) 2-D sweep 64–1024 step 64 per dim — pearson r = {:.4}",
+            result.linearity_2d
+        ),
+        "elements",
+        "latency µs",
+    );
+    b.add_series(
+        'x',
+        result
+            .two_d
+            .iter()
+            .map(|p| (p.elements as f64, p.latency_us))
+            .collect(),
+    );
+    out.push_str(&b.render());
+    out.push_str(&format!(
+        "\n  same-size shape fluctuation (max relative spread, 2-D): {:.2}%\n",
+        result.max_same_size_spread * 100.0
+    ));
+    out
+}
+
+pub fn to_csv(result: &Fig3Result) -> String {
+    let mut out = String::from("sweep,shape,elements,latency_us\n");
+    for (tag, pts) in [("1d", &result.one_d), ("2d", &result.two_d)] {
+        for p in pts {
+            let shape = p
+                .dims
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x");
+            out.push_str(&format!(
+                "{tag},{shape},{},{:.4}\n",
+                p.elements, p.latency_us
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpu::TpuV4Model;
+
+    #[test]
+    fn reproduces_linearity_and_fluctuation() {
+        let mut hw = TpuV4Model::new(3);
+        let r = run(&mut hw, 3);
+        assert_eq!(r.one_d.len(), 256);
+        assert_eq!(r.two_d.len(), 256);
+        // Near-linear scaling (paper: "approximately linear").
+        assert!(r.linearity_1d > 0.95, "1d r {}", r.linearity_1d);
+        assert!(r.linearity_2d > 0.92, "2d r {}", r.linearity_2d);
+        // But with measurable same-size shape fluctuations.
+        assert!(
+            r.max_same_size_spread > 0.005,
+            "spread {}",
+            r.max_same_size_spread
+        );
+    }
+
+    #[test]
+    fn render_csv_shapes() {
+        let mut hw = TpuV4Model::new(3);
+        let r = run(&mut hw, 1);
+        assert!(render(&r, "model").contains("(a) 1-D sweep"));
+        assert_eq!(to_csv(&r).lines().count(), 1 + 512);
+    }
+}

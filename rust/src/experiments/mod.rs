@@ -1,0 +1,17 @@
+//! Reproduction harnesses — one module per paper artifact.
+//!
+//! | Module  | Paper artifact | What it reproduces |
+//! |---------|----------------|--------------------|
+//! | [`table1`] | Table 1  | simulator comparison + live capability check |
+//! | [`fig2`]   | Figure 2 | per-regime cycles→latency regressions |
+//! | [`fig3`]   | Figure 3 | elementwise-add latency sweeps |
+//! | [`fig4`]   | Figure 4 | held-out cycle-to-latency accuracy |
+//! | [`fig5`]   | Figure 5 | learned elementwise models (add, ReLU) |
+//! | [`assets`] | §4.1.2 / §4.3 | persisted calibration + learned models |
+
+pub mod assets;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;

@@ -1,0 +1,543 @@
+//! Operation classification and conversion (the paper's §4.3).
+//!
+//! Parsed [`OpInfo`] records are classified by execution resource:
+//!
+//! * `dot_general` matching a matmul pattern → **Systolic GEMM** with
+//!   derived (M, K, N) — routed to the validated SCALE-Sim model.
+//! * `convolution` → **Systolic conv** — lowered to its im2col GEMM
+//!   (plus a [`ConvLayer`] when it is a plain 2-D convolution).
+//! * Elementwise arithmetic / comparison / transcendental ops → routed to
+//!   the learned latency models.
+//! * Shape/data-movement ops (reshape, transpose, broadcast, ...) →
+//!   modeled as memory-bound byte movement.
+//! * Compile-time ops (constant, iota) → zero cost.
+//! * Anything else → `Unmodeled` (reported, conservatively costed as
+//!   elementwise over the output).
+
+use anyhow::{bail, Result};
+
+use super::opinfo::{ConvDimLabel, OpInfo};
+use super::types::TensorType;
+use crate::scalesim::topology::{ConvLayer, GemmShape};
+
+/// Elementwise operator kind (the learned models key on this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwKind {
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Maximum,
+    Minimum,
+    Exp,
+    Tanh,
+    Logistic,
+    Rsqrt,
+    Sqrt,
+    Log,
+    Negate,
+    Abs,
+    Compare,
+    Select,
+    Convert,
+    Power,
+    Other,
+}
+
+impl EwKind {
+    pub fn from_name(short: &str) -> Option<EwKind> {
+        Some(match short {
+            "add" => EwKind::Add,
+            "subtract" => EwKind::Subtract,
+            "multiply" => EwKind::Multiply,
+            "divide" => EwKind::Divide,
+            "maximum" => EwKind::Maximum,
+            "minimum" => EwKind::Minimum,
+            "exponential" => EwKind::Exp,
+            "tanh" => EwKind::Tanh,
+            "logistic" => EwKind::Logistic,
+            "rsqrt" => EwKind::Rsqrt,
+            "sqrt" => EwKind::Sqrt,
+            "log" => EwKind::Log,
+            "negate" => EwKind::Negate,
+            "abs" => EwKind::Abs,
+            "compare" => EwKind::Compare,
+            "select" => EwKind::Select,
+            "convert" => EwKind::Convert,
+            "power" => EwKind::Power,
+            "and" | "or" | "xor" | "not" | "sign" | "floor" | "ceil" | "round_nearest_afz"
+            | "remainder" | "clamp" | "cosine" | "sine" | "atan2" | "cbrt" | "exponential_minus_one"
+            | "log_plus_one" | "is_finite" => EwKind::Other,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EwKind::Add => "add",
+            EwKind::Subtract => "subtract",
+            EwKind::Multiply => "multiply",
+            EwKind::Divide => "divide",
+            EwKind::Maximum => "maximum",
+            EwKind::Minimum => "minimum",
+            EwKind::Exp => "exponential",
+            EwKind::Tanh => "tanh",
+            EwKind::Logistic => "logistic",
+            EwKind::Rsqrt => "rsqrt",
+            EwKind::Sqrt => "sqrt",
+            EwKind::Log => "log",
+            EwKind::Negate => "negate",
+            EwKind::Abs => "abs",
+            EwKind::Compare => "compare",
+            EwKind::Select => "select",
+            EwKind::Convert => "convert",
+            EwKind::Power => "power",
+            EwKind::Other => "other",
+        }
+    }
+}
+
+/// Classification of one op.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpClass {
+    /// Runs on the systolic array as `count` sequential GEMMs (count > 1
+    /// for batched dot_general).
+    SystolicGemm { gemm: GemmShape, count: u64 },
+    /// A 2-D convolution with full SCALE-Sim conv parameters.
+    SystolicConv { conv: ConvLayer, gemm: GemmShape, count: u64 },
+    /// Elementwise op over `out` (routed to the learned model).
+    Elementwise { kind: EwKind, out: TensorType },
+    /// Reduction: contraction over `dimensions`; costed on input size.
+    Reduction { input: TensorType, out: TensorType },
+    /// Pure data movement (reshape/transpose/broadcast/...).
+    DataMovement { bytes: u64, out: TensorType },
+    /// No runtime cost (constants, iota, metadata ops).
+    Free,
+    /// Not modeled; conservatively treated as elementwise on the output.
+    Unmodeled { reason: String, out: Option<TensorType> },
+}
+
+/// Ops that move/relayout data without arithmetic.
+const DATA_MOVEMENT_OPS: &[&str] = &[
+    "reshape",
+    "transpose",
+    "broadcast_in_dim",
+    "slice",
+    "concatenate",
+    "pad",
+    "reverse",
+    "gather",
+    "scatter",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "copy",
+];
+
+/// Ops with no runtime cost on the accelerator.
+const FREE_OPS: &[&str] = &["constant", "iota", "return", "optimization_barrier", "tuple",
+    "get_tuple_element", "after_all", "custom_call"];
+
+/// Classify one op record.
+pub fn classify(op: &OpInfo) -> OpClass {
+    let short = op.short_name();
+
+    if short == "dot_general" || short == "dot" {
+        return match dot_to_gemm(op) {
+            Ok((gemm, count)) => OpClass::SystolicGemm { gemm, count },
+            Err(e) => OpClass::Unmodeled {
+                reason: format!("dot_general not matmul-like: {e}"),
+                out: op.out_type().cloned(),
+            },
+        };
+    }
+
+    if short == "convolution" {
+        return match conv_to_gemm(op) {
+            Ok((conv, gemm, count)) => OpClass::SystolicConv { conv, gemm, count },
+            Err(e) => OpClass::Unmodeled {
+                reason: format!("convolution not supported: {e}"),
+                out: op.out_type().cloned(),
+            },
+        };
+    }
+
+    if let Some(kind) = EwKind::from_name(short) {
+        if let Some(out) = op.out_type() {
+            return OpClass::Elementwise {
+                kind,
+                out: out.clone(),
+            };
+        }
+    }
+
+    if short == "reduce" || short == "reduce_window" {
+        if let (Some(input), Some(out)) = (op.operand_types.first(), op.out_type()) {
+            return OpClass::Reduction {
+                input: input.clone(),
+                out: out.clone(),
+            };
+        }
+    }
+
+    if DATA_MOVEMENT_OPS.contains(&short) {
+        if let Some(out) = op.out_type() {
+            return OpClass::DataMovement {
+                bytes: out.size_bytes(),
+                out: out.clone(),
+            };
+        }
+    }
+
+    if FREE_OPS.contains(&short) {
+        return OpClass::Free;
+    }
+
+    OpClass::Unmodeled {
+        reason: format!("op '{}' has no performance model", op.op_name),
+        out: op.out_type().cloned(),
+    }
+}
+
+/// Derive (GEMM, batch-count) from a dot_general.
+///
+/// Batch dims multiply into a GEMM *count*; remaining lhs free dims fold
+/// into M, contracting dims into K, rhs free dims into N. This matches how
+/// the TPU compiler lowers batched matmuls onto the MXU (one GEMM per
+/// batch element, or fused — either way the MAC count is identical).
+pub fn dot_to_gemm(op: &OpInfo) -> Result<(GemmShape, u64)> {
+    let Some(dims) = &op.dot_dims else {
+        // Plain `dot`: operand ranks decide.
+        let (a, b) = two_operand_types(op)?;
+        return match (a.rank(), b.rank()) {
+            (2, 2) => Ok((GemmShape::new(a.dims[0], a.dims[1], b.dims[1]), 1)),
+            (1, 2) => Ok((GemmShape::new(1, a.dims[0], b.dims[1]), 1)),
+            (2, 1) => Ok((GemmShape::new(a.dims[0], a.dims[1], 1), 1)),
+            _ => bail!("dot with ranks {}x{}", a.rank(), b.rank()),
+        };
+    };
+    let dims = dims.clone();
+    let (a, b) = two_operand_types(op)?;
+
+    if dims.lhs_contract.len() != dims.rhs_contract.len() {
+        bail!("mismatched contracting dim counts");
+    }
+    if dims.lhs_batch.len() != dims.rhs_batch.len() {
+        bail!("mismatched batch dim counts");
+    }
+
+    let mut count: u64 = 1;
+    for (&lb, &rb) in dims.lhs_batch.iter().zip(&dims.rhs_batch) {
+        let (dl, dr) = (dim_at(a, lb)?, dim_at(b, rb)?);
+        if dl != dr {
+            bail!("batch dim mismatch {dl} vs {dr}");
+        }
+        count *= dl as u64;
+    }
+
+    let mut k: usize = 1;
+    for (&lc, &rc) in dims.lhs_contract.iter().zip(&dims.rhs_contract) {
+        let (dl, dr) = (dim_at(a, lc)?, dim_at(b, rc)?);
+        if dl != dr {
+            bail!("contracting dim mismatch {dl} vs {dr}");
+        }
+        k *= dl;
+    }
+
+    let m: usize = free_dims_product(a, &dims.lhs_batch, &dims.lhs_contract)?;
+    let n: usize = free_dims_product(b, &dims.rhs_batch, &dims.rhs_contract)?;
+    let gemm = GemmShape::new(m.max(1), k.max(1), n.max(1));
+    Ok((gemm, count.max(1)))
+}
+
+fn two_operand_types(op: &OpInfo) -> Result<(&TensorType, &TensorType)> {
+    if op.operand_types.len() < 2 {
+        bail!("missing operand types");
+    }
+    Ok((&op.operand_types[0], &op.operand_types[1]))
+}
+
+fn dim_at(t: &TensorType, i: usize) -> Result<usize> {
+    t.dims
+        .get(i)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("dim index {i} out of range for {t}"))
+}
+
+fn free_dims_product(t: &TensorType, batch: &[usize], contract: &[usize]) -> Result<usize> {
+    let mut p = 1usize;
+    for (i, &d) in t.dims.iter().enumerate() {
+        if !batch.contains(&i) && !contract.contains(&i) {
+            p = p
+                .checked_mul(d)
+                .ok_or_else(|| anyhow::anyhow!("dim product overflow"))?;
+        }
+    }
+    Ok(p)
+}
+
+/// Derive (ConvLayer, im2col GEMM, batch-count) from a convolution op.
+///
+/// The GEMM is computed from the *result* spatial dims (so padding,
+/// dilation and strides are already folded in, exactly as the compiler
+/// sees them) and the kernel shape:
+///
+///   M = ∏ output spatial dims (per batch element)
+///   K = ∏ kernel spatial dims × (in_channels / feature_groups)
+///   N = out_channels
+pub fn conv_to_gemm(op: &OpInfo) -> Result<(ConvLayer, GemmShape, u64)> {
+    let Some(attrs) = &op.conv_attrs else {
+        bail!("missing convolution attributes")
+    };
+    let (input, kernel) = two_operand_types(op)?;
+    let Some(output) = op.out_type() else {
+        bail!("missing result type")
+    };
+
+    if attrs.input_layout.len() != input.rank()
+        || attrs.kernel_layout.len() != kernel.rank()
+        || attrs.output_layout.len() != output.rank()
+    {
+        bail!("dim_numbers rank mismatch");
+    }
+
+    let find = |layout: &[ConvDimLabel], want: ConvDimLabel| -> Option<usize> {
+        layout.iter().position(|&l| l == want)
+    };
+    let spatial_positions = |layout: &[ConvDimLabel]| -> Vec<(usize, usize)> {
+        // (spatial index, tensor dim position), sorted by spatial index.
+        let mut v: Vec<(usize, usize)> = layout
+            .iter()
+            .enumerate()
+            .filter_map(|(pos, l)| match l {
+                ConvDimLabel::Spatial(s) => Some((*s, pos)),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    };
+
+    let batch_pos = find(&attrs.input_layout, ConvDimLabel::Batch)
+        .ok_or_else(|| anyhow::anyhow!("no batch dim in input layout"))?;
+    let in_feat_pos = find(&attrs.input_layout, ConvDimLabel::Feature)
+        .ok_or_else(|| anyhow::anyhow!("no feature dim in input layout"))?;
+    let k_in_pos = find(&attrs.kernel_layout, ConvDimLabel::KernelIn)
+        .ok_or_else(|| anyhow::anyhow!("no 'i' dim in kernel layout"))?;
+    let k_out_pos = find(&attrs.kernel_layout, ConvDimLabel::KernelOut)
+        .ok_or_else(|| anyhow::anyhow!("no 'o' dim in kernel layout"))?;
+    let out_feat_pos = find(&attrs.output_layout, ConvDimLabel::Feature)
+        .ok_or_else(|| anyhow::anyhow!("no feature dim in output layout"))?;
+
+    let batch = input.dims[batch_pos];
+    let in_channels = input.dims[in_feat_pos];
+    let out_channels = output.dims[out_feat_pos];
+    let kernel_in = kernel.dims[k_in_pos];
+    let _ = kernel.dims[k_out_pos];
+
+    let in_spatial: Vec<usize> = spatial_positions(&attrs.input_layout)
+        .iter()
+        .map(|&(_, p)| input.dims[p])
+        .collect();
+    let kernel_spatial: Vec<usize> = spatial_positions(&attrs.kernel_layout)
+        .iter()
+        .map(|&(_, p)| kernel.dims[p])
+        .collect();
+    let out_spatial: Vec<usize> = spatial_positions(&attrs.output_layout)
+        .iter()
+        .map(|&(_, p)| output.dims[p])
+        .collect();
+
+    let feature_groups = attrs.feature_group_count.max(1);
+    if in_channels % feature_groups != 0 {
+        bail!("in_channels {in_channels} not divisible by feature groups {feature_groups}");
+    }
+
+    let m: usize = out_spatial.iter().product();
+    let k: usize = kernel_spatial.iter().product::<usize>() * (in_channels / feature_groups);
+    let n = out_channels;
+    let gemm = GemmShape::new(m.max(1), k.max(1), n.max(1));
+
+    // A ConvLayer is only well-formed for 2-D spatial convs; fabricate a
+    // 1x-size dimension for 1-D convs so SCALE-Sim's conv interface works.
+    let get2 = |v: &[usize]| -> (usize, usize) {
+        match v.len() {
+            0 => (1, 1),
+            1 => (v[0], 1),
+            _ => (v[0], v[1]),
+        }
+    };
+    let (ih, iw) = get2(&in_spatial);
+    let (fh, fw) = get2(&kernel_spatial);
+    let (sh, sw) = get2(&attrs.strides);
+    let conv = ConvLayer {
+        name: format!("conv_{}", op.index),
+        ifmap_h: ih,
+        ifmap_w: iw,
+        filter_h: fh.min(ih),
+        filter_w: fw.min(iw),
+        channels: in_channels / feature_groups,
+        num_filters: out_channels,
+        stride_h: sh.max(1),
+        stride_w: sw.max(1),
+    };
+
+    let _ = kernel_in;
+    Ok((conv, gemm, batch.max(1) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parser::parse_module;
+
+    fn first_op_class(text: &str) -> OpClass {
+        let m = parse_module(text).unwrap();
+        classify(&m.entry().unwrap().ops[0])
+    }
+
+    #[test]
+    fn classify_matmul() {
+        let text = r#"
+module { func.func @main(%a: tensor<128x256xbf16>, %b: tensor<256x512xbf16>) -> tensor<128x512xbf16> {
+  %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<128x256xbf16>, tensor<256x512xbf16>) -> tensor<128x512xbf16>
+  return %0 : tensor<128x512xbf16>
+} }"#;
+        match first_op_class(text) {
+            OpClass::SystolicGemm { gemm, count } => {
+                assert_eq!(gemm, GemmShape::new(128, 256, 512));
+                assert_eq!(count, 1);
+            }
+            other => panic!("expected gemm, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_batched_matmul() {
+        let text = r#"
+module { func.func @main(%a: tensor<8x64x32xf32>, %b: tensor<8x32x16xf32>) -> tensor<8x64x16xf32> {
+  %0 = stablehlo.dot_general %a, %b, batching_dims = [0] x [0], contracting_dims = [2] x [1] : (tensor<8x64x32xf32>, tensor<8x32x16xf32>) -> tensor<8x64x16xf32>
+  return %0 : tensor<8x64x16xf32>
+} }"#;
+        match first_op_class(text) {
+            OpClass::SystolicGemm { gemm, count } => {
+                assert_eq!(gemm, GemmShape::new(64, 32, 16));
+                assert_eq!(count, 8);
+            }
+            other => panic!("expected gemm, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_conv() {
+        let text = r#"
+module { func.func @main(%x: tensor<1x3x32x32xbf16>, %w: tensor<16x3x3x3xbf16>) -> tensor<1x16x16x16xbf16> {
+  %0 = stablehlo.convolution(%x, %w) dim_numbers = [b, f, 0, 1]x[o, i, 0, 1]->[b, f, 0, 1], window = {stride = [2, 2], pad = [[0, 1], [0, 1]], lhs_dilate = [1, 1], rhs_dilate = [1, 1], reverse = [false, false]} {batch_group_count = 1 : i64, feature_group_count = 1 : i64} : (tensor<1x3x32x32xbf16>, tensor<16x3x3x3xbf16>) -> tensor<1x16x16x16xbf16>
+  return %0 : tensor<1x16x16x16xbf16>
+} }"#;
+        match first_op_class(text) {
+            OpClass::SystolicConv { conv, gemm, count } => {
+                assert_eq!(gemm, GemmShape::new(16 * 16, 3 * 3 * 3, 16));
+                assert_eq!(count, 1);
+                assert_eq!(conv.channels, 3);
+                assert_eq!(conv.num_filters, 16);
+                assert_eq!(conv.stride_h, 2);
+            }
+            other => panic!("expected conv, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_elementwise_kinds() {
+        for (opname, kind) in [
+            ("stablehlo.add", EwKind::Add),
+            ("stablehlo.multiply", EwKind::Multiply),
+            ("stablehlo.maximum", EwKind::Maximum),
+            ("stablehlo.exponential", EwKind::Exp),
+        ] {
+            let text = format!(
+                r#"
+module {{ func.func @main(%a: tensor<64x64xbf16>) -> tensor<64x64xbf16> {{
+  %0 = {opname} %a, %a : tensor<64x64xbf16>
+  return %0 : tensor<64x64xbf16>
+}} }}"#
+            );
+            match first_op_class(&text) {
+                OpClass::Elementwise { kind: k, out } => {
+                    assert_eq!(k, kind);
+                    assert_eq!(out.num_elements(), 4096);
+                }
+                other => panic!("expected elementwise, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn classify_free_and_movement() {
+        let text = r#"
+module { func.func @main(%a: tensor<4x8xf32>) -> tensor<8x4xf32> {
+  %0 = stablehlo.transpose %a, dims = [1, 0] : (tensor<4x8xf32>) -> tensor<8x4xf32>
+  return %0 : tensor<8x4xf32>
+} }"#;
+        match first_op_class(text) {
+            OpClass::DataMovement { bytes, .. } => assert_eq!(bytes, 32 * 4),
+            other => panic!("expected data movement, got {other:?}"),
+        }
+
+        let text2 = r#"
+module { func.func @main() -> tensor<f32> {
+  %cst = stablehlo.constant dense<1.0> : tensor<f32>
+  return %cst : tensor<f32>
+} }"#;
+        assert_eq!(first_op_class(text2), OpClass::Free);
+    }
+
+    #[test]
+    fn classify_reduction() {
+        let text = r#"
+module { func.func @main(%a: tensor<8x128xf32>) -> tensor<8xf32> {
+  %cst = stablehlo.constant dense<0.000000e+00> : tensor<f32>
+  %0 = stablehlo.reduce(%a init: %cst) applies stablehlo.add across dimensions = [1] : (tensor<8x128xf32>, tensor<f32>) -> tensor<8xf32>
+  return %0 : tensor<8xf32>
+} }"#;
+        let m = parse_module(text).unwrap();
+        match classify(&m.entry().unwrap().ops[1]) {
+            OpClass::Reduction { input, out } => {
+                assert_eq!(input.num_elements(), 1024);
+                assert_eq!(out.num_elements(), 8);
+            }
+            other => panic!("expected reduction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unmodeled_has_reason() {
+        let text = r#"
+module { func.func @main(%a: tensor<4xf32>) -> tensor<4xf32> {
+  %0 = stablehlo.cholesky %a : tensor<4xf32>
+  return %0 : tensor<4xf32>
+} }"#;
+        match first_op_class(text) {
+            OpClass::Unmodeled { reason, out } => {
+                assert!(reason.contains("cholesky"));
+                assert!(out.is_some());
+            }
+            other => panic!("expected unmodeled, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vector_matrix_dot() {
+        let text = r#"
+module { func.func @main(%a: tensor<256xf32>, %b: tensor<256x512xf32>) -> tensor<512xf32> {
+  %0 = stablehlo.dot_general %a, %b, contracting_dims = [0] x [0] : (tensor<256xf32>, tensor<256x512xf32>) -> tensor<512xf32>
+  return %0 : tensor<512xf32>
+} }"#;
+        match first_op_class(text) {
+            OpClass::SystolicGemm { gemm, count } => {
+                assert_eq!(gemm, GemmShape::new(1, 256, 512));
+                assert_eq!(count, 1);
+            }
+            other => panic!("expected gemm, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Tokenizer for the StableHLO / MLIR textual subset the frontend parses.
+//!
+//! Design notes:
+//!
+//! * `tensor<...>` and `dense<...>` / `#dialect<...>` payloads are consumed
+//!   as single raw tokens (with `<>` nesting tracked), so the parser never
+//!   sees the `x`-separated shape syntax as individual tokens.
+//! * SSA ids (`%0`, `%arg0`, `%cst_1`) and symbol refs (`@main`) are
+//!   dedicated token kinds.
+//! * Everything else lexes into identifiers, numbers, strings and single
+//!   punctuation characters; `->` is one token.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword, possibly dotted: `stablehlo.dot_general`,
+    /// `func.func`, `dim_numbers`, `x`.
+    Ident(String),
+    /// `%`-prefixed SSA value id, without the `%`.
+    SsaId(String),
+    /// `@`-prefixed symbol, without the `@`.
+    Symbol(String),
+    /// Integer literal (possibly negative).
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// Quoted string contents.
+    Str(String),
+    /// `tensor<...>` — the raw inner text.
+    TensorType(String),
+    /// `dense<...>`, `#stablehlo<...>`, `array<...>` etc. — raw payload
+    /// with the sigil/keyword preserved in `head`.
+    RawAngle { head: String, body: String },
+    /// `->`
+    Arrow,
+    /// Single punctuation: ( ) [ ] { } < > = , : ^
+    Punct(char),
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, Tok::Punct(p) if *p == c)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A token plus its 1-based source line (for diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpannedTok {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+pub fn lex(text: &str) -> Result<Vec<SpannedTok>> {
+    let bytes = text.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = bytes.len();
+
+    while i < n {
+        let b = bytes[i];
+        match b {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < n && bytes[i + 1] == b'/' => {
+                // Line comment.
+                while i < n && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'%' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < n && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_') {
+                    j += 1;
+                }
+                if j == start {
+                    bail!("line {line}: bare '%'");
+                }
+                toks.push(SpannedTok {
+                    tok: Tok::SsaId(text[start..j].to_string()),
+                    line,
+                });
+                // `%0:2` multi-result syntax: lex the `:N` too (as Punct+Int).
+                i = j;
+            }
+            b'@' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < n
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_' || bytes[j] == b'.')
+                {
+                    j += 1;
+                }
+                toks.push(SpannedTok {
+                    tok: Tok::Symbol(text[start..j].to_string()),
+                    line,
+                });
+                i = j;
+            }
+            b'"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < n && bytes[j] != b'"' {
+                    if bytes[j] == b'\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                if j >= n {
+                    bail!("line {line}: unterminated string");
+                }
+                toks.push(SpannedTok {
+                    tok: Tok::Str(text[start..j].to_string()),
+                    line,
+                });
+                i = j + 1;
+            }
+            b'#' => {
+                // Dialect attribute: `#stablehlo<precision DEFAULT>` or
+                // `#stablehlo.dot<...>` or a plain `#map` ref.
+                let start = i + 1;
+                let mut j = start;
+                while j < n
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_' || bytes[j] == b'.')
+                {
+                    j += 1;
+                }
+                let head = format!("#{}", &text[start..j]);
+                if j < n && bytes[j] == b'<' {
+                    let (body, nj, nl) = raw_angle(text, j, line)?;
+                    toks.push(SpannedTok {
+                        tok: Tok::RawAngle { head, body },
+                        line,
+                    });
+                    i = nj;
+                    line = nl;
+                } else {
+                    toks.push(SpannedTok {
+                        tok: Tok::Ident(head),
+                        line,
+                    });
+                    i = j;
+                }
+            }
+            b'-' if i + 1 < n && bytes[i + 1] == b'>' => {
+                toks.push(SpannedTok {
+                    tok: Tok::Arrow,
+                    line,
+                });
+                i += 2;
+            }
+            b'-' | b'0'..=b'9' => {
+                let start = i;
+                let mut j = i + usize::from(b == b'-');
+                let mut is_float = false;
+                while j < n {
+                    let c = bytes[j];
+                    if c.is_ascii_digit() {
+                        j += 1;
+                    } else if c == b'.' && j + 1 < n && bytes[j + 1].is_ascii_digit() {
+                        is_float = true;
+                        j += 1;
+                    } else if (c == b'e' || c == b'E')
+                        && j + 1 < n
+                        && (bytes[j + 1].is_ascii_digit()
+                            || bytes[j + 1] == b'+'
+                            || bytes[j + 1] == b'-')
+                    {
+                        is_float = true;
+                        j += 2;
+                    } else {
+                        break;
+                    }
+                }
+                let s = &text[start..j];
+                let tok = if is_float {
+                    Tok::Float(s.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("line {line}: bad float '{s}'")
+                    })?)
+                } else {
+                    Tok::Int(s.parse::<i64>().map_err(|_| {
+                        anyhow::anyhow!("line {line}: bad int '{s}'")
+                    })?)
+                };
+                toks.push(SpannedTok { tok, line });
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                let mut j = i;
+                while j < n
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_' || bytes[j] == b'.')
+                {
+                    j += 1;
+                }
+                let word = &text[start..j];
+                // Raw-consume angle payloads for shape-bearing keywords.
+                if (word == "tensor" || word == "dense" || word == "array")
+                    && j < n
+                    && bytes[j] == b'<'
+                {
+                    let (body, nj, nl) = raw_angle(text, j, line)?;
+                    let tok = if word == "tensor" {
+                        Tok::TensorType(body)
+                    } else {
+                        Tok::RawAngle {
+                            head: word.to_string(),
+                            body,
+                        }
+                    };
+                    toks.push(SpannedTok { tok, line });
+                    i = nj;
+                    line = nl;
+                } else {
+                    toks.push(SpannedTok {
+                        tok: Tok::Ident(word.to_string()),
+                        line,
+                    });
+                    i = j;
+                }
+            }
+            b'(' | b')' | b'[' | b']' | b'{' | b'}' | b'<' | b'>' | b'=' | b',' | b':' | b'^'
+            | b'*' | b'|' | b'.' | b'?' | b'+' | b'!' | b';' => {
+                toks.push(SpannedTok {
+                    tok: Tok::Punct(b as char),
+                    line,
+                });
+                i += 1;
+            }
+            other => bail!("line {line}: unexpected character '{}'", other as char),
+        }
+    }
+    Ok(toks)
+}
+
+/// Consume `<...>` starting at the `<` at byte `open`, tracking nesting.
+/// Returns (inner text, index past closing '>', updated line number).
+fn raw_angle(text: &str, open: usize, mut line: usize) -> Result<(String, usize, usize)> {
+    let bytes = text.as_bytes();
+    debug_assert_eq!(bytes[open], b'<');
+    let mut depth = 1usize;
+    let mut j = open + 1;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'<' => depth += 1,
+            b'>' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((text[open + 1..j].to_string(), j + 1, line));
+                }
+            }
+            b'\n' => line += 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    bail!("line {line}: unterminated '<...>'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(text: &str) -> Vec<Tok> {
+        lex(text).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lex_simple_op() {
+        let toks = kinds("%1 = stablehlo.add %0, %arg2 : tensor<128x512xbf16>");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::SsaId("1".into()),
+                Tok::Punct('='),
+                Tok::Ident("stablehlo.add".into()),
+                Tok::SsaId("0".into()),
+                Tok::Punct(','),
+                Tok::SsaId("arg2".into()),
+                Tok::Punct(':'),
+                Tok::TensorType("128x512xbf16".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_dense_and_dialect_attr() {
+        let toks = kinds("dense<0.000000e+00> : tensor<bf16>, #stablehlo<precision DEFAULT>");
+        assert!(matches!(&toks[0], Tok::RawAngle { head, body }
+            if head == "dense" && body == "0.000000e+00"));
+        assert!(matches!(&toks[4], Tok::RawAngle { head, .. } if head == "#stablehlo"));
+    }
+
+    #[test]
+    fn lex_dot_general_pretty() {
+        let toks = kinds("contracting_dims = [1] x [0]");
+        assert_eq!(toks[0], Tok::Ident("contracting_dims".into()));
+        assert_eq!(toks[2], Tok::Punct('['));
+        assert_eq!(toks[3], Tok::Int(1));
+        assert_eq!(toks[5], Tok::Ident("x".into()));
+    }
+
+    #[test]
+    fn lex_conv_dim_numbers() {
+        let toks = kinds("[b, f, 0, 1]x[o, i, 0, 1]->[b, f, 0, 1]");
+        // ...]x[... : the x between brackets must be an ident
+        let x_pos = toks
+            .iter()
+            .position(|t| matches!(t, Tok::Ident(s) if s == "x"))
+            .unwrap();
+        assert!(toks[x_pos - 1].is_punct(']'));
+        assert!(toks[x_pos + 1].is_punct('['));
+        assert!(toks.contains(&Tok::Arrow));
+    }
+
+    #[test]
+    fn lex_func_header() {
+        let toks = kinds(
+            "func.func public @main(%arg0: tensor<2x2xf32> {jax.arg_info = \"x\"}) -> (tensor<2x2xf32>)",
+        );
+        assert_eq!(toks[0], Tok::Ident("func.func".into()));
+        assert_eq!(toks[2], Tok::Symbol("main".into()));
+        assert!(toks.iter().any(|t| matches!(t, Tok::Str(s) if s == "x")));
+    }
+
+    #[test]
+    fn lex_numbers() {
+        assert_eq!(
+            kinds("42 -7 3.5 1.0e-3"),
+            vec![
+                Tok::Int(42),
+                Tok::Int(-7),
+                Tok::Float(3.5),
+                Tok::Float(1.0e-3)
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_nested_angles() {
+        let toks = kinds("dense<[<1>, <2>]> : tensor<2xi8>");
+        assert!(matches!(&toks[0], Tok::RawAngle { body, .. } if body == "[<1>, <2>]"));
+    }
+
+    #[test]
+    fn line_numbers_tracked() {
+        let toks = lex("a\nb\nc").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn unterminated_angle_fails() {
+        assert!(lex("tensor<2x2xf32").is_err());
+        assert!(lex("\"abc").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! StableHLO frontend: the paper's framework-agnostic user interface.
+//!
+//! JAX / PyTorch programs are exported to StableHLO text; this module
+//! lexes and parses that text into uniform [`opinfo::OpInfo`] records
+//! ([`lexer`], [`parser`]), then classifies each op by execution resource
+//! ([`classify`]): systolic ops go to the validated SCALE-Sim model,
+//! elementwise ops to the learned latency models, data movement to a
+//! bandwidth model, and the rest are flagged.
+
+pub mod classify;
+pub mod lexer;
+pub mod opinfo;
+pub mod parser;
+pub mod types;
+
+pub use classify::{classify, conv_to_gemm, dot_to_gemm, EwKind, OpClass};
+pub use opinfo::{ConvAttrs, DotDims, FuncInfo, ModuleInfo, OpInfo};
+pub use parser::parse_module;
+pub use types::{DType, TensorType};

@@ -1,0 +1,120 @@
+//! The uniform operator metadata record the frontend extracts for every
+//! StableHLO operation (the paper's `OpInfo` structure).
+
+use std::collections::BTreeMap;
+
+use super::types::TensorType;
+
+/// `dot_general` dimension numbers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DotDims {
+    pub lhs_batch: Vec<usize>,
+    pub rhs_batch: Vec<usize>,
+    pub lhs_contract: Vec<usize>,
+    pub rhs_contract: Vec<usize>,
+}
+
+/// One dimension label in a convolution `dim_numbers` spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvDimLabel {
+    /// `b` — batch.
+    Batch,
+    /// `f` — feature (input/output channels on lhs/output).
+    Feature,
+    /// `i` — kernel input-feature dim.
+    KernelIn,
+    /// `o` — kernel output-feature dim.
+    KernelOut,
+    /// Numbered spatial dimension.
+    Spatial(usize),
+}
+
+/// Convolution attributes extracted from the pretty-printed form.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConvAttrs {
+    pub input_layout: Vec<ConvDimLabel>,
+    pub kernel_layout: Vec<ConvDimLabel>,
+    pub output_layout: Vec<ConvDimLabel>,
+    pub strides: Vec<usize>,
+    /// (low, high) padding per spatial dim.
+    pub pads: Vec<(i64, i64)>,
+    pub lhs_dilation: Vec<usize>,
+    pub rhs_dilation: Vec<usize>,
+    pub feature_group_count: usize,
+    pub batch_group_count: usize,
+}
+
+/// Uniform per-operation record: type, operands, shapes, dtypes and the
+/// attributes relevant to performance modeling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpInfo {
+    /// Position of the op within its function body.
+    pub index: usize,
+    /// Source line in the StableHLO text (diagnostics).
+    pub line: usize,
+    /// Result SSA ids (no `%`).
+    pub results: Vec<String>,
+    /// Fully qualified op name, e.g. `stablehlo.dot_general`.
+    pub op_name: String,
+    /// Operand SSA ids (no `%`).
+    pub operands: Vec<String>,
+    /// Operand tensor types (parallel to `operands` when the op carries a
+    /// function-type signature; single-type ops repeat the one type).
+    pub operand_types: Vec<TensorType>,
+    /// Result tensor types.
+    pub result_types: Vec<TensorType>,
+    /// dot_general dimension numbers, if this is a dot_general.
+    pub dot_dims: Option<DotDims>,
+    /// Convolution attributes, if this is a convolution.
+    pub conv_attrs: Option<ConvAttrs>,
+    /// Generic integer-list attributes (`dims = [...]`, `dimensions = [...]`).
+    pub int_attrs: BTreeMap<String, Vec<i64>>,
+    /// Callee symbol for `call` / `func.call` ops.
+    pub callee: Option<String>,
+}
+
+impl OpInfo {
+    /// Short op name without the dialect prefix (`add`, `dot_general`).
+    pub fn short_name(&self) -> &str {
+        self.op_name
+            .rsplit_once('.')
+            .map(|(_, s)| s)
+            .unwrap_or(&self.op_name)
+    }
+
+    /// The primary output type (first result), if any.
+    pub fn out_type(&self) -> Option<&TensorType> {
+        self.result_types.first()
+    }
+
+    /// Total output elements (0 if no result type was recorded).
+    pub fn out_elements(&self) -> u64 {
+        self.out_type().map(|t| t.num_elements()).unwrap_or(0)
+    }
+}
+
+/// A parsed function: signature plus op sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuncInfo {
+    pub name: String,
+    pub arg_types: Vec<TensorType>,
+    pub result_types: Vec<TensorType>,
+    pub ops: Vec<OpInfo>,
+}
+
+/// A parsed module: one or more functions (entry point is usually `main`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub funcs: Vec<FuncInfo>,
+}
+
+impl ModuleInfo {
+    /// The entry function: `main` if present, else the first function.
+    pub fn entry(&self) -> Option<&FuncInfo> {
+        self.funcs
+            .iter()
+            .find(|f| f.name == "main")
+            .or_else(|| self.funcs.first())
+    }
+}

@@ -1,0 +1,988 @@
+//! Parser for the StableHLO textual modules JAX and PyTorch emit.
+//!
+//! The parser consumes the token stream from [`super::lexer`] and produces
+//! a [`ModuleInfo`]: function signatures plus one [`OpInfo`] per operation,
+//! with the attributes that matter for performance modeling decoded
+//! (dot_general dimension numbers, convolution layout/stride/padding,
+//! generic integer-list attributes). Everything else — precision configs,
+//! frontend metadata, regions of fused reductions — is skipped with
+//! correct bracket balancing, so unknown ops never derail the parse.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::lexer::{lex, SpannedTok, Tok};
+use super::opinfo::{ConvAttrs, ConvDimLabel, DotDims, FuncInfo, ModuleInfo, OpInfo};
+use super::types::TensorType;
+
+/// Parse a StableHLO module from text.
+pub fn parse_module(text: &str) -> Result<ModuleInfo> {
+    let toks = lex(text)?;
+    let mut cur = Cursor { toks: &toks, pos: 0 };
+    let mut module = ModuleInfo::default();
+
+    while !cur.done() {
+        match cur.peek() {
+            Some(Tok::Ident(id)) if id == "module" => {
+                cur.next();
+                if let Some(Tok::Symbol(name)) = cur.peek() {
+                    module.name = name.clone();
+                    cur.next();
+                }
+                // `attributes {...}` and then `{` — we just continue; the
+                // body statements are handled by the main loop.
+                while let Some(t) = cur.peek() {
+                    if t.is_punct('{') {
+                        cur.next();
+                        break;
+                    }
+                    // Skip `attributes` keyword and its dict.
+                    if t.is_punct('{') {
+                        break;
+                    }
+                    if matches!(t, Tok::Ident(w) if w == "attributes") {
+                        cur.next();
+                        cur.skip_balanced('{', '}')?;
+                        continue;
+                    }
+                    cur.next();
+                }
+            }
+            Some(Tok::Ident(id)) if id == "func.func" => {
+                let f = parse_func(&mut cur)?;
+                module.funcs.push(f);
+            }
+            _ => {
+                cur.next();
+            }
+        }
+    }
+    if module.funcs.is_empty() {
+        bail!("no func.func found in module");
+    }
+    Ok(module)
+}
+
+struct Cursor<'a> {
+    toks: &'a [SpannedTok],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn done(&self) -> bool {
+        self.pos >= self.toks.len()
+    }
+
+    fn peek(&self) -> Option<&'a Tok> {
+        self.toks.get(self.pos).map(|t| &t.tok)
+    }
+
+    fn peek_at(&self, off: usize) -> Option<&'a Tok> {
+        self.toks.get(self.pos + off).map(|t| &t.tok)
+    }
+
+    fn line(&self) -> usize {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|t| t.line)
+            .unwrap_or(0)
+    }
+
+    fn next(&mut self) -> Option<&'a Tok> {
+        let t = self.toks.get(self.pos).map(|t| &t.tok);
+        self.pos += 1;
+        t
+    }
+
+    fn expect_punct(&mut self, c: char) -> Result<()> {
+        match self.next() {
+            Some(t) if t.is_punct(c) => Ok(()),
+            other => bail!(
+                "line {}: expected '{}', found {:?}",
+                self.line(),
+                c,
+                other
+            ),
+        }
+    }
+
+    /// Skip a balanced `open...close` block. The cursor must be at or
+    /// before the opening token; everything through the matching close is
+    /// consumed.
+    fn skip_balanced(&mut self, open: char, close: char) -> Result<()> {
+        // Advance to the opening token.
+        while let Some(t) = self.peek() {
+            if t.is_punct(open) {
+                break;
+            }
+            self.next();
+        }
+        if self.done() {
+            bail!("expected '{open}' block");
+        }
+        let mut depth = 0i64;
+        while let Some(t) = self.next() {
+            if t.is_punct(open) {
+                depth += 1;
+            } else if t.is_punct(close) {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(());
+                }
+            }
+        }
+        bail!("unbalanced '{open}{close}' block")
+    }
+
+    /// Parse `[i64, i64, ...]`.
+    fn int_list(&mut self) -> Result<Vec<i64>> {
+        self.expect_punct('[')?;
+        let mut out = Vec::new();
+        loop {
+            match self.next() {
+                Some(Tok::Int(v)) => out.push(*v),
+                Some(t) if t.is_punct(']') => return Ok(out),
+                Some(t) if t.is_punct(',') => continue,
+                other => bail!("line {}: bad int list item {:?}", self.line(), other),
+            }
+        }
+    }
+
+    /// Parse `[[a, b], [c, d], ...]` (used by conv `pad`).
+    fn int_pair_list(&mut self) -> Result<Vec<(i64, i64)>> {
+        self.expect_punct('[')?;
+        let mut out = Vec::new();
+        loop {
+            match self.peek() {
+                Some(t) if t.is_punct(']') => {
+                    self.next();
+                    return Ok(out);
+                }
+                Some(t) if t.is_punct(',') => {
+                    self.next();
+                }
+                Some(t) if t.is_punct('[') => {
+                    let inner = self.int_list()?;
+                    if inner.len() != 2 {
+                        bail!("line {}: pad entry must have 2 ints", self.line());
+                    }
+                    out.push((inner[0], inner[1]));
+                }
+                other => bail!("line {}: bad pad list item {:?}", self.line(), other),
+            }
+        }
+    }
+
+    /// Parse a conv layout list: `[b, f, 0, 1]`.
+    fn layout_list(&mut self) -> Result<Vec<ConvDimLabel>> {
+        self.expect_punct('[')?;
+        let mut out = Vec::new();
+        loop {
+            match self.next() {
+                Some(Tok::Ident(w)) => {
+                    out.push(match w.as_str() {
+                        "b" => ConvDimLabel::Batch,
+                        "f" => ConvDimLabel::Feature,
+                        "i" => ConvDimLabel::KernelIn,
+                        "o" => ConvDimLabel::KernelOut,
+                        other => bail!("line {}: bad conv dim label '{other}'", self.line()),
+                    });
+                }
+                Some(Tok::Int(v)) => out.push(ConvDimLabel::Spatial(*v as usize)),
+                Some(t) if t.is_punct(']') => return Ok(out),
+                Some(t) if t.is_punct(',') => continue,
+                other => bail!("line {}: bad conv layout item {:?}", self.line(), other),
+            }
+        }
+    }
+}
+
+fn parse_func(cur: &mut Cursor) -> Result<FuncInfo> {
+    // `func.func` already peeked; consume it.
+    cur.next();
+    // Optional visibility (`public`, `private`).
+    if matches!(cur.peek(), Some(Tok::Ident(w)) if w == "public" || w == "private") {
+        cur.next();
+    }
+    let name = match cur.next() {
+        Some(Tok::Symbol(s)) => s.clone(),
+        other => bail!("line {}: expected function symbol, got {:?}", cur.line(), other),
+    };
+
+    // Argument list.
+    let mut arg_types = Vec::new();
+    cur.expect_punct('(')?;
+    loop {
+        match cur.peek() {
+            Some(t) if t.is_punct(')') => {
+                cur.next();
+                break;
+            }
+            Some(t) if t.is_punct(',') => {
+                cur.next();
+            }
+            Some(Tok::SsaId(_)) => {
+                cur.next();
+                cur.expect_punct(':')?;
+                match cur.next() {
+                    Some(Tok::TensorType(inner)) => {
+                        arg_types.push(TensorType::parse_inner(inner)?);
+                    }
+                    other => bail!("line {}: expected arg type, got {:?}", cur.line(), other),
+                }
+                // Optional per-arg attr dict.
+                if matches!(cur.peek(), Some(t) if t.is_punct('{')) {
+                    cur.skip_balanced('{', '}')?;
+                }
+            }
+            other => bail!("line {}: bad function arg {:?}", cur.line(), other),
+        }
+    }
+
+    // Optional result types: `-> (t1 {attrs}, t2)` or `-> t`.
+    let mut result_types = Vec::new();
+    if matches!(cur.peek(), Some(Tok::Arrow)) {
+        cur.next();
+        match cur.peek() {
+            Some(t) if t.is_punct('(') => {
+                cur.next();
+                loop {
+                    match cur.peek() {
+                        Some(t) if t.is_punct(')') => {
+                            cur.next();
+                            break;
+                        }
+                        Some(t) if t.is_punct(',') => {
+                            cur.next();
+                        }
+                        Some(Tok::TensorType(inner)) => {
+                            result_types.push(TensorType::parse_inner(inner)?);
+                            cur.next();
+                            if matches!(cur.peek(), Some(t) if t.is_punct('{')) {
+                                cur.skip_balanced('{', '}')?;
+                            }
+                        }
+                        other => {
+                            bail!("line {}: bad result type {:?}", cur.line(), other)
+                        }
+                    }
+                }
+            }
+            Some(Tok::TensorType(inner)) => {
+                result_types.push(TensorType::parse_inner(inner)?);
+                cur.next();
+            }
+            other => bail!("line {}: bad result types {:?}", cur.line(), other),
+        }
+    }
+    // Optional function attr dict: `attributes {...}`.
+    if matches!(cur.peek(), Some(Tok::Ident(w)) if w == "attributes") {
+        cur.next();
+        cur.skip_balanced('{', '}')?;
+    }
+
+    // Body.
+    cur.expect_punct('{')?;
+    let mut ops = Vec::new();
+    let mut index = 0usize;
+    loop {
+        match cur.peek() {
+            None => bail!("unterminated function body for @{name}"),
+            Some(t) if t.is_punct('}') => {
+                cur.next();
+                break;
+            }
+            Some(Tok::Ident(w)) if w == "return" || w == "func.return" => {
+                skip_statement(cur)?;
+            }
+            // Trailing regions of `stablehlo.while` (pretty form prints
+            // them *after* the op's type signature): skip balanced.
+            Some(Tok::Ident(w)) if w == "cond" || w == "do" => {
+                cur.next();
+                if matches!(cur.peek(), Some(t) if t.is_punct('{')) {
+                    cur.skip_balanced('{', '}')?;
+                }
+            }
+            Some(Tok::SsaId(_)) | Some(Tok::Ident(_)) => {
+                if let Some(op) = parse_op(cur, index)? {
+                    ops.push(op);
+                    index += 1;
+                }
+            }
+            _ => {
+                cur.next();
+            }
+        }
+    }
+
+    Ok(FuncInfo {
+        name,
+        arg_types,
+        result_types,
+        ops,
+    })
+}
+
+/// Skip tokens to the end of the current statement: consume the trailing
+/// type signature after the top-level ':' (or stop before the next
+/// statement start if none is found).
+fn skip_statement(cur: &mut Cursor) -> Result<()> {
+    let mut depth = 0i64;
+    while let Some(t) = cur.peek() {
+        match t {
+            Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => {
+                depth += 1;
+                cur.next();
+            }
+            Tok::Punct(')') | Tok::Punct(']') => {
+                depth -= 1;
+                cur.next();
+            }
+            Tok::Punct('}') => {
+                if depth == 0 {
+                    // Function close: leave it for the caller.
+                    return Ok(());
+                }
+                depth -= 1;
+                cur.next();
+            }
+            Tok::Punct(':') if depth == 0 => {
+                cur.next();
+                consume_type_signature(cur)?;
+                return Ok(());
+            }
+            _ => {
+                cur.next();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Consume (and discard) a type signature: `tensor<..>`, `(types) -> types`,
+/// possibly followed by `-> types`.
+fn consume_type_signature(cur: &mut Cursor) -> Result<()> {
+    match cur.peek() {
+        Some(Tok::TensorType(_)) | Some(Tok::Ident(_)) => {
+            cur.next();
+        }
+        Some(t) if t.is_punct('(') => {
+            cur.skip_balanced('(', ')')?;
+        }
+        _ => return Ok(()),
+    }
+    if matches!(cur.peek(), Some(Tok::Arrow)) {
+        cur.next();
+        match cur.peek() {
+            Some(Tok::TensorType(_)) | Some(Tok::Ident(_)) => {
+                cur.next();
+            }
+            Some(t) if t.is_punct('(') => {
+                cur.skip_balanced('(', ')')?;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Parse one operation statement into an [`OpInfo`].
+/// Returns `None` for statements that aren't ops (stray idents).
+fn parse_op(cur: &mut Cursor, index: usize) -> Result<Option<OpInfo>> {
+    let line = cur.line();
+
+    // Results: `%id =` or `%id:2 =`.
+    let mut results = Vec::new();
+    while let Some(Tok::SsaId(id)) = cur.peek() {
+        results.push(id.clone());
+        cur.next();
+        // Multi-result arity `:N`.
+        if matches!(cur.peek(), Some(t) if t.is_punct(':'))
+            && matches!(cur.peek_at(1), Some(Tok::Int(_)))
+        {
+            cur.next();
+            cur.next();
+        }
+        if matches!(cur.peek(), Some(t) if t.is_punct(',')) {
+            cur.next();
+            continue;
+        }
+        break;
+    }
+    if !results.is_empty() {
+        cur.expect_punct('=')?;
+    }
+
+    // Op name.
+    let op_name = match cur.peek() {
+        Some(Tok::Ident(w)) => {
+            let w = w.clone();
+            cur.next();
+            w
+        }
+        Some(Tok::Str(w)) => {
+            // Generic form: `"stablehlo.add"(%0, %1) ...`.
+            let w = w.clone();
+            cur.next();
+            w
+        }
+        other => {
+            bail!("line {line}: expected op name, found {other:?}")
+        }
+    };
+
+    let mut op = OpInfo {
+        index,
+        line,
+        results,
+        op_name,
+        operands: Vec::new(),
+        operand_types: Vec::new(),
+        result_types: Vec::new(),
+        dot_dims: None,
+        conv_attrs: None,
+        int_attrs: BTreeMap::new(),
+        callee: None,
+    };
+
+    // Scan until the top-level ':' that precedes the type signature.
+    let mut depth = 0i64;
+    let mut pending_ident: Option<String> = None;
+    loop {
+        let Some(t) = cur.peek() else {
+            bail!("line {line}: unterminated op '{}'", op.op_name)
+        };
+        match t {
+            Tok::Punct('(') | Tok::Punct('[') => {
+                depth += 1;
+                cur.next();
+            }
+            Tok::Punct(')') | Tok::Punct(']') => {
+                depth -= 1;
+                cur.next();
+            }
+            Tok::Punct('{') => {
+                // Attr dict or region: operands never live inside braces,
+                // except conv's `window = {...}` which we parse explicitly
+                // below before getting here.
+                if pending_ident.as_deref() == Some("window") {
+                    parse_conv_window(cur, &mut op)?;
+                    pending_ident = None;
+                } else {
+                    parse_attr_dict_or_region(cur, &mut op)?;
+                }
+            }
+            Tok::Punct('}') if depth == 0 => {
+                // End of enclosing function; op had no type signature.
+                break;
+            }
+            Tok::Punct('}') => {
+                depth -= 1;
+                cur.next();
+            }
+            Tok::Punct(':') if depth == 0 => {
+                cur.next();
+                parse_type_signature(cur, &mut op)?;
+                break;
+            }
+            Tok::SsaId(id) => {
+                op.operands.push(id.clone());
+                cur.next();
+            }
+            Tok::Symbol(sym) => {
+                if op.callee.is_none() {
+                    op.callee = Some(sym.clone());
+                }
+                cur.next();
+            }
+            Tok::Ident(w) => {
+                let w = w.clone();
+                cur.next();
+                match w.as_str() {
+                    "contracting_dims" => {
+                        // `contracting_dims = [1] x [0]`
+                        cur.expect_punct('=')?;
+                        let lhs = cur.int_list()?;
+                        expect_x(cur)?;
+                        let rhs = cur.int_list()?;
+                        let d = op.dot_dims.get_or_insert_with(DotDims::default);
+                        d.lhs_contract = to_usizes(&lhs);
+                        d.rhs_contract = to_usizes(&rhs);
+                    }
+                    "batching_dims" => {
+                        cur.expect_punct('=')?;
+                        let lhs = cur.int_list()?;
+                        expect_x(cur)?;
+                        let rhs = cur.int_list()?;
+                        let d = op.dot_dims.get_or_insert_with(DotDims::default);
+                        d.lhs_batch = to_usizes(&lhs);
+                        d.rhs_batch = to_usizes(&rhs);
+                    }
+                    "dim_numbers" => {
+                        // `= [b, f, 0, 1]x[o, i, 0, 1]->[b, f, 0, 1]`
+                        cur.expect_punct('=')?;
+                        let a = op.conv_attrs.get_or_insert_with(ConvAttrs::default);
+                        a.input_layout = cur.layout_list()?;
+                        expect_x(cur)?;
+                        a.kernel_layout = cur.layout_list()?;
+                        match cur.next() {
+                            Some(Tok::Arrow) => {}
+                            other => bail!("line {line}: expected '->' in dim_numbers, got {other:?}"),
+                        }
+                        a.output_layout = cur.layout_list()?;
+                    }
+                    "window" => {
+                        // `window = { ... }` — handled when '{' arrives.
+                        cur.expect_punct('=')?;
+                        pending_ident = Some("window".to_string());
+                        continue;
+                    }
+                    _ => {
+                        // Generic `ident = [ints]` attr; other shapes of
+                        // attribute are skipped token-by-token.
+                        if matches!(cur.peek(), Some(t) if t.is_punct('='))
+                            && matches!(cur.peek_at(1), Some(t) if t.is_punct('['))
+                        {
+                            cur.next(); // '='
+                            // Only simple int lists are captured.
+                            let save = cur.pos;
+                            match cur.int_list() {
+                                Ok(list) => {
+                                    op.int_attrs.insert(w, list);
+                                }
+                                Err(_) => {
+                                    cur.pos = save;
+                                    cur.skip_balanced('[', ']')?;
+                                }
+                            }
+                        }
+                    }
+                }
+                pending_ident = None;
+            }
+            _ => {
+                cur.next();
+            }
+        }
+    }
+
+    // Generic-form dot_dimension_numbers arrive as a RawAngle attr inside
+    // the attr dict; parse_attr_dict_or_region handles it.
+    Ok(Some(op))
+}
+
+fn expect_x(cur: &mut Cursor) -> Result<()> {
+    match cur.next() {
+        Some(Tok::Ident(w)) if w == "x" => Ok(()),
+        other => bail!("line {}: expected 'x', got {:?}", cur.line(), other),
+    }
+}
+
+fn to_usizes(xs: &[i64]) -> Vec<usize> {
+    xs.iter().map(|&x| x.max(0) as usize).collect()
+}
+
+/// Parse `window = {stride = [..], pad = [[..]], lhs_dilate = [..], ...}`.
+fn parse_conv_window(cur: &mut Cursor, op: &mut OpInfo) -> Result<()> {
+    cur.expect_punct('{')?;
+    let attrs = op.conv_attrs.get_or_insert_with(ConvAttrs::default);
+    loop {
+        match cur.peek() {
+            Some(t) if t.is_punct('}') => {
+                cur.next();
+                return Ok(());
+            }
+            Some(t) if t.is_punct(',') => {
+                cur.next();
+            }
+            Some(Tok::Ident(w)) => {
+                let w = w.clone();
+                cur.next();
+                cur.expect_punct('=')?;
+                match w.as_str() {
+                    "stride" => attrs.strides = to_usizes(&cur.int_list()?),
+                    "pad" => attrs.pads = cur.int_pair_list()?,
+                    "lhs_dilate" => attrs.lhs_dilation = to_usizes(&cur.int_list()?),
+                    "rhs_dilate" => attrs.rhs_dilation = to_usizes(&cur.int_list()?),
+                    _ => {
+                        // `reverse = [false, false]` and friends: skip list
+                        // or single token.
+                        if matches!(cur.peek(), Some(t) if t.is_punct('[')) {
+                            cur.skip_balanced('[', ']')?;
+                        } else {
+                            cur.next();
+                        }
+                    }
+                }
+            }
+            other => bail!("line {}: bad window attr {:?}", cur.line(), other),
+        }
+    }
+}
+
+/// Parse an attr dict `{...}` (capturing conv group counts and generic-form
+/// dot dimension numbers) or skip a region.
+fn parse_attr_dict_or_region(cur: &mut Cursor, op: &mut OpInfo) -> Result<()> {
+    // Peek inside: a region starts with `^` or an SSA statement; an attr
+    // dict starts with `ident =` or `}`. We conservatively scan with
+    // balancing and capture the few attrs we care about.
+    let start = cur.pos;
+    cur.expect_punct('{')?;
+    let mut depth = 1i64;
+    while depth > 0 {
+        let Some(t) = cur.peek() else {
+            bail!("line {}: unterminated '{{' block", cur.line())
+        };
+        match t {
+            Tok::Punct('{') => {
+                depth += 1;
+                cur.next();
+            }
+            Tok::Punct('}') => {
+                depth -= 1;
+                cur.next();
+            }
+            Tok::Ident(w) if depth == 1 => {
+                let w = w.clone();
+                cur.next();
+                if !matches!(cur.peek(), Some(t) if t.is_punct('=')) {
+                    continue;
+                }
+                cur.next(); // '='
+                match (w.as_str(), cur.peek()) {
+                    ("batch_group_count", Some(Tok::Int(v))) => {
+                        let v = *v;
+                        cur.next();
+                        op.conv_attrs
+                            .get_or_insert_with(ConvAttrs::default)
+                            .batch_group_count = v.max(0) as usize;
+                    }
+                    ("feature_group_count", Some(Tok::Int(v))) => {
+                        let v = *v;
+                        cur.next();
+                        op.conv_attrs
+                            .get_or_insert_with(ConvAttrs::default)
+                            .feature_group_count = v.max(0) as usize;
+                    }
+                    ("dot_dimension_numbers", Some(Tok::RawAngle { head, body }))
+                        if head.starts_with("#stablehlo") =>
+                    {
+                        op.dot_dims = Some(parse_dot_attr(body)?);
+                        cur.next();
+                    }
+                    _ => {}
+                }
+            }
+            _ => {
+                cur.next();
+            }
+        }
+    }
+    let _ = start;
+    Ok(())
+}
+
+/// Parse the generic `#stablehlo.dot<...>` attribute body, e.g.
+/// `lhs_batching_dimensions = [0], rhs_batching_dimensions = [0],
+///  lhs_contracting_dimensions = [2], rhs_contracting_dimensions = [1]`.
+fn parse_dot_attr(body: &str) -> Result<DotDims> {
+    let mut dims = DotDims::default();
+    for part in body.split(',') {
+        let part = part.trim();
+        let Some((key, val)) = part.split_once('=') else {
+            continue;
+        };
+        let list = parse_bracket_ints(val)?;
+        match key.trim() {
+            "lhs_batching_dimensions" => dims.lhs_batch = list,
+            "rhs_batching_dimensions" => dims.rhs_batch = list,
+            "lhs_contracting_dimensions" => dims.lhs_contract = list,
+            "rhs_contracting_dimensions" => dims.rhs_contract = list,
+            _ => {}
+        }
+    }
+    Ok(dims)
+}
+
+fn parse_bracket_ints(s: &str) -> Result<Vec<usize>> {
+    let s = s.trim();
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .with_context(|| format!("expected [..] list, got '{s}'"))?;
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad int '{p}'"))
+        })
+        .collect()
+}
+
+/// Parse the trailing type signature and fill operand/result types.
+fn parse_type_signature(cur: &mut Cursor, op: &mut OpInfo) -> Result<()> {
+    match cur.peek() {
+        // `(t1, t2) -> t3` function type.
+        Some(t) if t.is_punct('(') => {
+            cur.next();
+            loop {
+                match cur.peek() {
+                    Some(t) if t.is_punct(')') => {
+                        cur.next();
+                        break;
+                    }
+                    Some(t) if t.is_punct(',') => {
+                        cur.next();
+                    }
+                    Some(Tok::TensorType(inner)) => {
+                        op.operand_types.push(TensorType::parse_inner(inner)?);
+                        cur.next();
+                    }
+                    other => bail!(
+                        "line {}: bad operand type {:?} in signature",
+                        cur.line(),
+                        other
+                    ),
+                }
+            }
+            if matches!(cur.peek(), Some(Tok::Arrow)) {
+                cur.next();
+                match cur.peek() {
+                    Some(Tok::TensorType(inner)) => {
+                        op.result_types.push(TensorType::parse_inner(inner)?);
+                        cur.next();
+                    }
+                    Some(t) if t.is_punct('(') => {
+                        cur.next();
+                        loop {
+                            match cur.peek() {
+                                Some(t) if t.is_punct(')') => {
+                                    cur.next();
+                                    break;
+                                }
+                                Some(t) if t.is_punct(',') => {
+                                    cur.next();
+                                }
+                                Some(Tok::TensorType(inner)) => {
+                                    op.result_types.push(TensorType::parse_inner(inner)?);
+                                    cur.next();
+                                }
+                                other => bail!(
+                                    "line {}: bad result type {:?} in signature",
+                                    cur.line(),
+                                    other
+                                ),
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Single type: operands and result share it.
+        Some(Tok::TensorType(inner)) => {
+            let t = TensorType::parse_inner(inner)?;
+            cur.next();
+            for _ in 0..op.operands.len().max(1) {
+                op.operand_types.push(t.clone());
+            }
+            op.result_types.push(t);
+        }
+        other => bail!("line {}: bad type signature start {:?}", cur.line(), other),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::types::DType;
+
+    const MLP: &str = r#"
+module @jit_f attributes {mhlo.num_partitions = 1 : i32} {
+  func.func public @main(%arg0: tensor<128x256xbf16>, %arg1: tensor<256x512xbf16>, %arg2: tensor<128x512xbf16>) -> (tensor<128x512xbf16> {jax.result_info = "result"}) {
+    %0 = stablehlo.dot_general %arg0, %arg1, contracting_dims = [1] x [0], precision = [DEFAULT, DEFAULT] : (tensor<128x256xbf16>, tensor<256x512xbf16>) -> tensor<128x512xbf16>
+    %1 = stablehlo.add %0, %arg2 : tensor<128x512xbf16>
+    %cst = stablehlo.constant dense<0.000000e+00> : tensor<bf16>
+    %2 = stablehlo.broadcast_in_dim %cst, dims = [] : (tensor<bf16>) -> tensor<128x512xbf16>
+    %3 = stablehlo.maximum %1, %2 : tensor<128x512xbf16>
+    return %3 : tensor<128x512xbf16>
+  }
+}
+"#;
+
+    #[test]
+    fn parse_mlp_module() {
+        let m = parse_module(MLP).unwrap();
+        assert_eq!(m.name, "jit_f");
+        let f = m.entry().unwrap();
+        assert_eq!(f.name, "main");
+        assert_eq!(f.arg_types.len(), 3);
+        assert_eq!(f.result_types.len(), 1);
+        assert_eq!(f.ops.len(), 5);
+    }
+
+    #[test]
+    fn dot_general_dims_extracted() {
+        let m = parse_module(MLP).unwrap();
+        let dot = &m.entry().unwrap().ops[0];
+        assert_eq!(dot.op_name, "stablehlo.dot_general");
+        assert_eq!(dot.operands, vec!["arg0", "arg1"]);
+        let d = dot.dot_dims.as_ref().unwrap();
+        assert_eq!(d.lhs_contract, vec![1]);
+        assert_eq!(d.rhs_contract, vec![0]);
+        assert!(d.lhs_batch.is_empty());
+        assert_eq!(dot.operand_types.len(), 2);
+        assert_eq!(dot.operand_types[0].dims, vec![128, 256]);
+        assert_eq!(dot.result_types[0].dims, vec![128, 512]);
+    }
+
+    #[test]
+    fn elementwise_single_type_signature() {
+        let m = parse_module(MLP).unwrap();
+        let add = &m.entry().unwrap().ops[1];
+        assert_eq!(add.short_name(), "add");
+        assert_eq!(add.operands, vec!["0", "arg2"]);
+        assert_eq!(add.operand_types.len(), 2);
+        assert_eq!(add.result_types[0].dims, vec![128, 512]);
+        assert_eq!(add.result_types[0].dtype, DType::Bf16);
+    }
+
+    #[test]
+    fn constant_and_broadcast() {
+        let m = parse_module(MLP).unwrap();
+        let f = m.entry().unwrap();
+        assert_eq!(f.ops[2].short_name(), "constant");
+        assert!(f.ops[2].operands.is_empty());
+        let bcast = &f.ops[3];
+        assert_eq!(bcast.short_name(), "broadcast_in_dim");
+        assert_eq!(bcast.result_types[0].num_elements(), 128 * 512);
+        assert_eq!(bcast.int_attrs.get("dims"), Some(&vec![]));
+    }
+
+    const CONV: &str = r#"
+module @jit_conv attributes {mhlo.num_partitions = 1 : i32} {
+  func.func public @main(%arg0: tensor<1x3x32x32xbf16>, %arg1: tensor<16x3x3x3xbf16>) -> (tensor<1x16x16x16xbf16>) {
+    %0 = stablehlo.convolution(%arg0, %arg1) dim_numbers = [b, f, 0, 1]x[o, i, 0, 1]->[b, f, 0, 1], window = {stride = [2, 2], pad = [[0, 1], [0, 1]], lhs_dilate = [1, 1], rhs_dilate = [1, 1], reverse = [false, false]} {batch_group_count = 1 : i64, feature_group_count = 1 : i64, precision_config = [#stablehlo<precision DEFAULT>, #stablehlo<precision DEFAULT>]} : (tensor<1x3x32x32xbf16>, tensor<16x3x3x3xbf16>) -> tensor<1x16x16x16xbf16>
+    return %0 : tensor<1x16x16x16xbf16>
+  }
+}
+"#;
+
+    #[test]
+    fn conv_attrs_extracted() {
+        let m = parse_module(CONV).unwrap();
+        let conv = &m.entry().unwrap().ops[0];
+        assert_eq!(conv.short_name(), "convolution");
+        assert_eq!(conv.operands, vec!["arg0", "arg1"]);
+        let a = conv.conv_attrs.as_ref().unwrap();
+        assert_eq!(a.strides, vec![2, 2]);
+        assert_eq!(a.pads, vec![(0, 1), (0, 1)]);
+        assert_eq!(a.feature_group_count, 1);
+        assert_eq!(a.input_layout[0], ConvDimLabel::Batch);
+        assert_eq!(a.input_layout[1], ConvDimLabel::Feature);
+        assert_eq!(a.kernel_layout[0], ConvDimLabel::KernelOut);
+        assert_eq!(a.output_layout.len(), 4);
+        assert_eq!(conv.operand_types[1].dims, vec![16, 3, 3, 3]);
+        assert_eq!(conv.result_types[0].dims, vec![1, 16, 16, 16]);
+    }
+
+    #[test]
+    fn generic_form_dot_attr() {
+        let text = r#"
+module {
+  func.func @main(%arg0: tensor<2x3x4xf32>, %arg1: tensor<2x4x5xf32>) -> tensor<2x3x5xf32> {
+    %0 = "stablehlo.dot_general"(%arg0, %arg1) {dot_dimension_numbers = #stablehlo.dot<lhs_batching_dimensions = [0], rhs_batching_dimensions = [0], lhs_contracting_dimensions = [2], rhs_contracting_dimensions = [1]>} : (tensor<2x3x4xf32>, tensor<2x4x5xf32>) -> tensor<2x3x5xf32>
+    return %0 : tensor<2x3x5xf32>
+  }
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let dot = &m.entry().unwrap().ops[0];
+        let d = dot.dot_dims.as_ref().unwrap();
+        assert_eq!(d.lhs_batch, vec![0]);
+        assert_eq!(d.rhs_batch, vec![0]);
+        assert_eq!(d.lhs_contract, vec![2]);
+        assert_eq!(d.rhs_contract, vec![1]);
+    }
+
+    #[test]
+    fn reduce_applies_form() {
+        let text = r#"
+module {
+  func.func @main(%arg0: tensor<8x128xf32>) -> tensor<8xf32> {
+    %cst = stablehlo.constant dense<0.000000e+00> : tensor<f32>
+    %0 = stablehlo.reduce(%arg0 init: %cst) applies stablehlo.add across dimensions = [1] : (tensor<8x128xf32>, tensor<f32>) -> tensor<8xf32>
+    return %0 : tensor<8xf32>
+  }
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let red = &m.entry().unwrap().ops[1];
+        assert_eq!(red.short_name(), "reduce");
+        assert_eq!(red.operands, vec!["arg0", "cst"]);
+        assert_eq!(red.int_attrs.get("dimensions"), Some(&vec![1]));
+        assert_eq!(red.result_types[0].dims, vec![8]);
+    }
+
+    #[test]
+    fn no_func_fails() {
+        assert!(parse_module("module @m attributes {a = 1 : i32} { }").is_err());
+    }
+
+    #[test]
+    fn multiple_funcs_entry_selection() {
+        let text = r#"
+module {
+  func.func private @helper(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0 = stablehlo.negate %arg0 : tensor<4xf32>
+    return %0 : tensor<4xf32>
+  }
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0 = stablehlo.abs %arg0 : tensor<4xf32>
+    return %0 : tensor<4xf32>
+  }
+}
+"#;
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.funcs.len(), 2);
+        assert_eq!(m.entry().unwrap().name, "main");
+    }
+}
+
+#[cfg(test)]
+mod region_tests {
+    use super::*;
+
+    /// Real jax output for a `lax.while_loop` body (pretty-printed while
+    /// with trailing cond/do regions) — the parser must survive it and
+    /// keep classifying the surrounding ops.
+    const WHILE_IR: &str = include_str!("../../tests/fixtures/while_loop.stablehlo.txt");
+
+    #[test]
+    fn while_loop_module_parses() {
+        let m = parse_module(WHILE_IR).unwrap();
+        let f = m.entry().unwrap();
+        assert_eq!(f.arg_types[0].dims, vec![8, 128]);
+        // The while op itself is recorded; region bodies are skipped, so
+        // none of the region-local ops (sine/multiply) leak out.
+        assert!(f.ops.iter().any(|o| o.short_name() == "while"));
+        assert!(!f.ops.iter().any(|o| o.short_name() == "sine"));
+        assert!(!f.ops.iter().any(|o| o.short_name() == "multiply"));
+    }
+
+    #[test]
+    fn while_op_records_operands_and_type() {
+        let m = parse_module(WHILE_IR).unwrap();
+        let f = m.entry().unwrap();
+        let w = f.ops.iter().find(|o| o.short_name() == "while").unwrap();
+        assert!(w.operands.len() >= 2);
+        assert!(!w.result_types.is_empty());
+    }
+}

@@ -1,0 +1,238 @@
+//! Tensor element types and shaped tensor types, with parsing of the MLIR
+//! textual form (`tensor<1x3x32x32xbf16>`, `tensor<f32>`, ...).
+
+use anyhow::{bail, Result};
+
+/// Element data type of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    Bf16,
+    F16,
+    F32,
+    F64,
+    I1,
+    I8,
+    I16,
+    I32,
+    I64,
+    U8,
+    U16,
+    U32,
+    U64,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "bf16" => DType::Bf16,
+            "f16" => DType::F16,
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            "i1" => DType::I1,
+            "i8" => DType::I8,
+            "i16" => DType::I16,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            "ui8" | "u8" => DType::U8,
+            "ui16" | "u16" => DType::U16,
+            "ui32" | "u32" => DType::U32,
+            "ui64" | "u64" => DType::U64,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::Bf16 => "bf16",
+            DType::F16 => "f16",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I1 => "i1",
+            DType::I8 => "i8",
+            DType::I16 => "i16",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U8 => "ui8",
+            DType::U16 => "ui16",
+            DType::U32 => "ui32",
+            DType::U64 => "ui64",
+        }
+    }
+
+    /// Size of one element in bytes (i1 counts as one byte, as stored).
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::I1 | DType::I8 | DType::U8 => 1,
+            DType::Bf16 | DType::F16 | DType::I16 | DType::U16 => 2,
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F64 | DType::I64 | DType::U64 => 8,
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, DType::Bf16 | DType::F16 | DType::F32 | DType::F64)
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A ranked tensor type: shape + element type. Scalars have rank 0.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorType {
+    pub fn new(dims: Vec<usize>, dtype: DType) -> TensorType {
+        TensorType { dims, dtype }
+    }
+
+    pub fn scalar(dtype: DType) -> TensorType {
+        TensorType { dims: vec![], dtype }
+    }
+
+    /// Total element count (1 for scalars).
+    pub fn num_elements(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.num_elements() * self.dtype.bytes() as u64
+    }
+
+    /// Parse the *inside* of `tensor<...>`: e.g. `1x3x32x32xbf16`, `f32`,
+    /// `128x256xbf16`. Dynamic dims (`?`) are rejected — the simulator
+    /// needs static shapes.
+    pub fn parse_inner(inner: &str) -> Result<TensorType> {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            bail!("empty tensor type");
+        }
+        // Split on 'x' but the final segment is the dtype, which itself
+        // contains no 'x'. Walk segments: leading integer segments are
+        // dims; the first non-integer segment starts the dtype.
+        let mut dims = Vec::new();
+        let mut rest = inner;
+        loop {
+            // Take the prefix up to the next 'x'.
+            match rest.split_once('x') {
+                Some((head, tail)) => {
+                    if let Ok(d) = head.trim().parse::<usize>() {
+                        dims.push(d);
+                        rest = tail;
+                    } else {
+                        // head is not an integer: the remainder (head + x +
+                        // tail) is the dtype... but dtypes contain no 'x',
+                        // so this must be an error unless it IS the dtype.
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+        let dtype_str = rest.trim();
+        if dtype_str == "?" || dtype_str.contains('?') {
+            bail!("dynamic dims unsupported: tensor<{inner}>");
+        }
+        let dtype = match DType::parse(dtype_str) {
+            Some(d) => d,
+            None => bail!("unknown element type '{dtype_str}' in tensor<{inner}>"),
+        };
+        Ok(TensorType { dims, dtype })
+    }
+
+    /// Parse a full type string like `tensor<128x256xbf16>`.
+    pub fn parse(text: &str) -> Result<TensorType> {
+        let t = text.trim();
+        if let Some(stripped) = t.strip_prefix("tensor<") {
+            if let Some(inner) = stripped.strip_suffix('>') {
+                return Self::parse_inner(inner);
+            }
+        }
+        bail!("not a tensor type: '{text}'")
+    }
+}
+
+impl std::fmt::Display for TensorType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tensor<")?;
+        for d in &self.dims {
+            write!(f, "{d}x")?;
+        }
+        write!(f, "{}>", self.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ranked() {
+        let t = TensorType::parse("tensor<128x256xbf16>").unwrap();
+        assert_eq!(t.dims, vec![128, 256]);
+        assert_eq!(t.dtype, DType::Bf16);
+        assert_eq!(t.num_elements(), 128 * 256);
+        assert_eq!(t.size_bytes(), 128 * 256 * 2);
+    }
+
+    #[test]
+    fn parse_scalar() {
+        let t = TensorType::parse("tensor<f32>").unwrap();
+        assert_eq!(t.rank(), 0);
+        assert_eq!(t.num_elements(), 1);
+        assert_eq!(t.dtype, DType::F32);
+    }
+
+    #[test]
+    fn parse_4d() {
+        let t = TensorType::parse("tensor<1x3x32x32xbf16>").unwrap();
+        assert_eq!(t.dims, vec![1, 3, 32, 32]);
+    }
+
+    #[test]
+    fn parse_i1_and_ints() {
+        assert_eq!(
+            TensorType::parse("tensor<10xi1>").unwrap().dtype,
+            DType::I1
+        );
+        assert_eq!(
+            TensorType::parse("tensor<4xui32>").unwrap().dtype,
+            DType::U32
+        );
+    }
+
+    #[test]
+    fn reject_dynamic_and_garbage() {
+        assert!(TensorType::parse("tensor<?x4xf32>").is_err());
+        assert!(TensorType::parse("tensor<4xunknown>").is_err());
+        assert!(TensorType::parse("memref<4xf32>").is_err());
+        assert!(TensorType::parse("tensor<>").is_err());
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for s in ["tensor<128x256xbf16>", "tensor<f32>", "tensor<1x1x1xi8>"] {
+            let t = TensorType::parse(s).unwrap();
+            assert_eq!(format!("{t}"), s);
+        }
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::Bf16.bytes(), 2);
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::I64.bytes(), 8);
+        assert!(DType::Bf16.is_float());
+        assert!(!DType::I32.is_float());
+    }
+}

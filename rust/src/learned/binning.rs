@@ -1,0 +1,165 @@
+//! Quantile feature binning for histogram-based gradient boosting.
+//!
+//! Continuous features are discretised into at most `max_bins` bins whose
+//! edges are (approximate) quantiles of the training distribution — the
+//! same trick LightGBM / sklearn's HistGradientBoosting use to make split
+//! finding O(bins) instead of O(samples).
+
+/// Per-feature bin mapper: sorted upper-bound thresholds. Value `x` maps
+/// to the first bin whose threshold is >= x; values above all thresholds
+/// map to the last bin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinMapper {
+    /// Upper (inclusive) boundary of each bin except the last, in
+    /// increasing order. `thresholds.len() + 1` bins exist.
+    pub thresholds: Vec<f64>,
+}
+
+impl BinMapper {
+    /// Fit thresholds from one feature column.
+    pub fn fit(values: &[f64], max_bins: usize) -> BinMapper {
+        assert!(max_bins >= 2);
+        let mut sorted: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.dedup();
+        if sorted.len() <= 1 {
+            return BinMapper { thresholds: vec![] };
+        }
+        if sorted.len() <= max_bins {
+            // One bin per distinct value: thresholds at midpoints.
+            let thresholds = sorted
+                .windows(2)
+                .map(|w| 0.5 * (w[0] + w[1]))
+                .collect();
+            return BinMapper { thresholds };
+        }
+        // Quantile cuts.
+        let mut thresholds = Vec::with_capacity(max_bins - 1);
+        for b in 1..max_bins {
+            let q = b as f64 / max_bins as f64;
+            let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+            let t = sorted[idx];
+            if thresholds.last().map(|&l| t > l).unwrap_or(true) {
+                thresholds.push(t);
+            }
+        }
+        BinMapper { thresholds }
+    }
+
+    /// Number of bins.
+    pub fn num_bins(&self) -> usize {
+        self.thresholds.len() + 1
+    }
+
+    /// Map a raw value to its bin index.
+    pub fn bin(&self, x: f64) -> u16 {
+        // partition_point: first index with threshold < x is false..
+        let idx = self.thresholds.partition_point(|&t| t < x);
+        idx as u16
+    }
+
+    /// The raw-value threshold separating bins `b` and `b+1` (split at
+    /// "x <= threshold goes left").
+    pub fn split_value(&self, b: u16) -> f64 {
+        self.thresholds[b as usize]
+    }
+}
+
+/// Binned training matrix: column-major bins plus the mappers.
+#[derive(Debug, Clone)]
+pub struct BinnedMatrix {
+    pub mappers: Vec<BinMapper>,
+    /// `bins[f][i]` = bin of sample i's feature f.
+    pub bins: Vec<Vec<u16>>,
+    pub num_samples: usize,
+}
+
+impl BinnedMatrix {
+    /// Fit mappers on `rows` (sample-major) and bin every sample.
+    pub fn fit(rows: &[Vec<f64>], max_bins: usize) -> BinnedMatrix {
+        assert!(!rows.is_empty());
+        let num_features = rows[0].len();
+        let num_samples = rows.len();
+        let mut mappers = Vec::with_capacity(num_features);
+        let mut bins = Vec::with_capacity(num_features);
+        for f in 0..num_features {
+            let col: Vec<f64> = rows.iter().map(|r| r[f]).collect();
+            let mapper = BinMapper::fit(&col, max_bins);
+            let col_bins: Vec<u16> = col.iter().map(|&v| mapper.bin(v)).collect();
+            mappers.push(mapper);
+            bins.push(col_bins);
+        }
+        BinnedMatrix {
+            mappers,
+            bins,
+            num_samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn few_distinct_values_get_exact_bins() {
+        let m = BinMapper::fit(&[1.0, 2.0, 2.0, 3.0], 256);
+        assert_eq!(m.num_bins(), 3);
+        assert_eq!(m.bin(1.0), 0);
+        assert_eq!(m.bin(2.0), 1);
+        assert_eq!(m.bin(3.0), 2);
+        assert_eq!(m.bin(0.0), 0);
+        assert_eq!(m.bin(99.0), 2);
+    }
+
+    #[test]
+    fn constant_feature_single_bin() {
+        let m = BinMapper::fit(&[5.0; 10], 256);
+        assert_eq!(m.num_bins(), 1);
+        assert_eq!(m.bin(5.0), 0);
+        assert_eq!(m.bin(-1.0), 0);
+    }
+
+    #[test]
+    fn quantile_bins_monotone() {
+        let values: Vec<f64> = (0..10_000).map(|i| (i as f64).sqrt()).collect();
+        let m = BinMapper::fit(&values, 64);
+        assert!(m.num_bins() <= 64);
+        assert!(m.num_bins() > 32);
+        // Thresholds strictly increasing.
+        for w in m.thresholds.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // Binning is monotone.
+        let mut prev = 0u16;
+        for v in [0.0, 1.0, 10.0, 50.0, 99.0] {
+            let b = m.bin(v);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn split_value_separates_bins() {
+        let m = BinMapper::fit(&[1.0, 2.0, 3.0, 4.0], 256);
+        let t = m.split_value(1); // between bins 1 and 2
+        assert!(t > 2.0 && t < 3.0);
+        assert!(m.bin(t) <= 1);
+        assert!(m.bin(t + 0.51) >= 2);
+    }
+
+    #[test]
+    fn binned_matrix_shape() {
+        let rows = vec![
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+        ];
+        let bm = BinnedMatrix::fit(&rows, 256);
+        assert_eq!(bm.mappers.len(), 2);
+        assert_eq!(bm.bins.len(), 2);
+        assert_eq!(bm.bins[0].len(), 3);
+        assert_eq!(bm.num_samples, 3);
+        assert_eq!(bm.bins[1], vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Measurement datasets for the learned latency models, with the paper's
+//! train/validation protocol: train on a subset of tensor *sizes* and
+//! evaluate on previously **unseen sizes** (§4.2, "Training and validation
+//! protocol"), so the split tests generalisation rather than memorisation.
+
+use std::collections::BTreeSet;
+
+use super::features::featurize;
+use crate::util::prng::Prng;
+
+/// One measured sample: a tensor shape and its (median) latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub dims: Vec<usize>,
+    pub latency_us: f64,
+}
+
+impl Sample {
+    pub fn num_elements(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product::<u64>().max(1)
+    }
+}
+
+/// A labelled dataset for one operator.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub op_name: String,
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    pub fn new(op_name: &str) -> Dataset {
+        Dataset {
+            op_name: op_name.to_string(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, dims: Vec<usize>, latency_us: f64) {
+        self.samples.push(Sample { dims, latency_us });
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Feature matrix (sample-major) and target vector.
+    pub fn features_targets(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let rows = self.samples.iter().map(|s| featurize(&s.dims)).collect();
+        let y = self.samples.iter().map(|s| s.latency_us).collect();
+        (rows, y)
+    }
+
+    /// Split by *distinct total size*: `train_fraction` of the distinct
+    /// element counts (randomly chosen) go to training; every sample whose
+    /// size fell in the held-out set goes to test. Guarantees the test set
+    /// contains only sizes never seen in training.
+    pub fn split_by_unseen_sizes(&self, train_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+        let sizes: BTreeSet<u64> = self.samples.iter().map(|s| s.num_elements()).collect();
+        let mut sizes: Vec<u64> = sizes.into_iter().collect();
+        let mut prng = Prng::new(seed);
+        prng.shuffle(&mut sizes);
+        let n_train = ((sizes.len() as f64) * train_fraction).round() as usize;
+        let train_sizes: BTreeSet<u64> = sizes.iter().take(n_train).copied().collect();
+
+        let mut train = Dataset::new(&self.op_name);
+        let mut test = Dataset::new(&self.op_name);
+        for s in &self.samples {
+            if train_sizes.contains(&s.num_elements()) {
+                train.samples.push(s.clone());
+            } else {
+                test.samples.push(s.clone());
+            }
+        }
+        (train, test)
+    }
+
+    /// CSV dump: `d0xd1x...,elements,latency_us`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("shape,elements,latency_us\n");
+        for s in &self.samples {
+            let shape = s
+                .dims
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x");
+            out.push_str(&format!(
+                "{},{},{:.6}\n",
+                if shape.is_empty() { "scalar".into() } else { shape },
+                s.num_elements(),
+                s.latency_us
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset_with_sizes() -> Dataset {
+        let mut d = Dataset::new("add");
+        // 10 distinct sizes, 2 shapes each.
+        for i in 1..=10usize {
+            let n = i * 64;
+            d.push(vec![n], n as f64 * 0.01);
+            d.push(vec![n / 2, 2], n as f64 * 0.011);
+        }
+        d
+    }
+
+    #[test]
+    fn split_keeps_sizes_disjoint() {
+        let d = dataset_with_sizes();
+        let (train, test) = d.split_by_unseen_sizes(0.7, 42);
+        assert_eq!(train.len() + test.len(), d.len());
+        assert!(!train.is_empty());
+        assert!(!test.is_empty());
+        let train_sizes: BTreeSet<u64> = train.samples.iter().map(|s| s.num_elements()).collect();
+        for s in &test.samples {
+            assert!(!train_sizes.contains(&s.num_elements()));
+        }
+    }
+
+    #[test]
+    fn same_size_stays_together() {
+        let d = dataset_with_sizes();
+        let (train, _test) = d.split_by_unseen_sizes(0.5, 7);
+        // Each size contributed 2 samples; they must travel together.
+        let mut counts = std::collections::BTreeMap::new();
+        for s in &train.samples {
+            *counts.entry(s.num_elements()).or_insert(0usize) += 1;
+        }
+        for (_, c) in counts {
+            assert_eq!(c, 2);
+        }
+    }
+
+    #[test]
+    fn features_align_with_targets() {
+        let d = dataset_with_sizes();
+        let (rows, y) = d.features_targets();
+        assert_eq!(rows.len(), y.len());
+        assert_eq!(rows[0][0], 64.0);
+        assert!((y[0] - 0.64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut d = Dataset::new("relu");
+        d.push(vec![4, 8], 1.5);
+        let csv = d.to_csv();
+        assert!(csv.contains("4x8,32,1.5"));
+    }
+}

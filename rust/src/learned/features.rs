@@ -1,0 +1,127 @@
+//! Feature extraction for the learned elementwise-latency models.
+//!
+//! Per the paper (§4.2), the features are the tensor *size* and *shape* —
+//! both statically known at compile time. We expose the shape as
+//! trailing-aligned dimensions (TPU layout effects attach to the minor
+//! dims) plus derived size features; the tree model learns alignment and
+//! vectorisation discontinuities from these raw values.
+
+/// Number of trailing dims encoded explicitly.
+pub const SHAPE_DIMS: usize = 4;
+
+/// Feature names, parallel to [`featurize`]'s output.
+pub fn feature_names() -> Vec<&'static str> {
+    vec![
+        "num_elements",
+        "log2_elements",
+        "rank",
+        "dim_minor",      // last dim (lane dim on TPU)
+        "dim_second",     // second-to-last (sublane dim)
+        "dim_third",
+        "dim_fourth",
+        "min_dim",
+        "max_dim",
+        "minor_mod_128",  // distance from lane alignment
+        "second_mod_8",   // distance from sublane alignment
+        "padded_elements", // elements after (8,128) layout padding
+        "log2_padded",
+        "pad_waste",      // padded / raw ratio
+    ]
+}
+
+/// Element count after TPU (8 sublanes × 128 lanes) layout padding — a
+/// deterministic function of the shape (compile-time metadata), so it is
+/// an admissible feature under the paper's "tensor size and shape" rule;
+/// it encodes the layout knowledge that drives the shape-dependent
+/// latency fluctuations the model must capture.
+pub fn layout_padded_elements(dims: &[usize]) -> u64 {
+    // XLA canonicalises away size-1 dims before choosing a layout.
+    let dims: Vec<u64> = dims.iter().filter(|&&d| d > 1).map(|&d| d as u64).collect();
+    match dims.len() {
+        0 => 8 * 128,
+        1 => dims[0].div_ceil(8 * 128) * (8 * 128),
+        _ => {
+            let minor = *dims.last().unwrap();
+            let rows: u64 = dims[..dims.len() - 1].iter().product();
+            rows.div_ceil(8) * 8 * minor.div_ceil(128) * 128
+        }
+    }
+}
+
+/// Build the feature row for a tensor shape.
+pub fn featurize(dims: &[usize]) -> Vec<f64> {
+    let elems: u64 = dims.iter().map(|&d| d as u64).product::<u64>().max(1);
+    let rank = dims.len();
+
+    // Trailing-aligned dims, padded with 1 for low ranks.
+    let mut trail = [1usize; SHAPE_DIMS];
+    for (i, &d) in dims.iter().rev().take(SHAPE_DIMS).enumerate() {
+        trail[i] = d;
+    }
+    let min_dim = dims.iter().copied().min().unwrap_or(1).max(1);
+    let max_dim = dims.iter().copied().max().unwrap_or(1).max(1);
+
+    let padded = layout_padded_elements(dims);
+    vec![
+        elems as f64,
+        (elems as f64).log2(),
+        rank as f64,
+        trail[0] as f64,
+        trail[1] as f64,
+        trail[2] as f64,
+        trail[3] as f64,
+        min_dim as f64,
+        max_dim as f64,
+        (trail[0] % 128) as f64,
+        (trail[1] % 8) as f64,
+        padded as f64,
+        (padded as f64).log2(),
+        padded as f64 / elems as f64,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_row_length() {
+        assert_eq!(feature_names().len(), featurize(&[4, 5]).len());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let f = featurize(&[]);
+        assert_eq!(f[0], 1.0); // elems
+        assert_eq!(f[2], 0.0); // rank
+        assert_eq!(f[3], 1.0); // minor dim padded
+    }
+
+    #[test]
+    fn trailing_alignment() {
+        let f = featurize(&[2, 3, 256]);
+        assert_eq!(f[0], 1536.0);
+        assert_eq!(f[2], 3.0);
+        assert_eq!(f[3], 256.0); // minor
+        assert_eq!(f[4], 3.0); // second-minor
+        assert_eq!(f[5], 2.0);
+        assert_eq!(f[6], 1.0);
+        assert_eq!(f[9], 0.0); // 256 % 128
+        assert_eq!(f[10], 3.0); // 3 % 8
+    }
+
+    #[test]
+    fn same_size_different_shape_distinct() {
+        let a = featurize(&[1024]);
+        let b = featurize(&[32, 32]);
+        assert_eq!(a[0], b[0]); // same size
+        assert_ne!(a, b); // but distinguishable
+    }
+
+    #[test]
+    fn min_max_dims() {
+        let f = featurize(&[7, 128, 3]);
+        assert_eq!(f[7], 3.0);
+        assert_eq!(f[8], 128.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! Linear-in-size latency baseline for the HGBR ablation.
+//!
+//! The paper motivates HGBR over "a single linear model" (§4.2, Model
+//! choice): latency is *approximately* linear in element count but has
+//! shape-dependent discontinuities a line cannot express. This model is
+//! that straw-man, fitted by OLS on element count alone.
+
+use crate::calibrate::linreg::LinearFit;
+
+use super::dataset::Dataset;
+
+/// Latency = α · elements + β.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearLatencyModel {
+    pub fit: LinearFit,
+}
+
+impl LinearLatencyModel {
+    pub fn fit(dataset: &Dataset) -> Option<LinearLatencyModel> {
+        let x: Vec<f64> = dataset
+            .samples
+            .iter()
+            .map(|s| s.num_elements() as f64)
+            .collect();
+        let y: Vec<f64> = dataset.samples.iter().map(|s| s.latency_us).collect();
+        LinearFit::fit(&x, &y).map(|fit| LinearLatencyModel { fit })
+    }
+
+    pub fn predict(&self, dims: &[usize]) -> f64 {
+        let elems: u64 = dims.iter().map(|&d| d as u64).product::<u64>().max(1);
+        self.fit.predict(elems as f64).max(0.0)
+    }
+
+    pub fn predict_dataset(&self, dataset: &Dataset) -> Vec<f64> {
+        dataset.samples.iter().map(|s| self.predict(&s.dims)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_linear_data() {
+        let mut d = Dataset::new("add");
+        for i in 1..=20usize {
+            d.push(vec![i * 100], 0.002 * (i * 100) as f64 + 3.0);
+        }
+        let m = LinearLatencyModel::fit(&d).unwrap();
+        assert!((m.fit.alpha - 0.002).abs() < 1e-9);
+        assert!((m.fit.beta - 3.0).abs() < 1e-9);
+        assert!((m.predict(&[500]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prediction_clamped_nonnegative() {
+        let mut d = Dataset::new("add");
+        d.push(vec![1000], 0.0);
+        d.push(vec![2000], 10.0);
+        let m = LinearLatencyModel::fit(&d).unwrap();
+        assert!(m.predict(&[1]) >= 0.0);
+    }
+
+    #[test]
+    fn empty_dataset_fails() {
+        let d = Dataset::new("add");
+        assert!(LinearLatencyModel::fit(&d).is_none());
+    }
+}

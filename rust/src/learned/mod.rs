@@ -1,0 +1,20 @@
+//! Learned latency models for non-systolic (elementwise) operators.
+//!
+//! The paper's second contribution: histogram-based gradient-boosting
+//! regression ([`hgbr`]) over tensor size/shape features ([`features`]),
+//! trained on hardware measurements ([`dataset`]) with a split that holds
+//! out entire tensor sizes. [`binning`] and [`tree`] are the from-scratch
+//! HGBR internals; [`linear`] is the single-linear-model baseline the
+//! paper argues trees beat.
+
+pub mod binning;
+pub mod dataset;
+pub mod features;
+pub mod hgbr;
+pub mod linear;
+pub mod tree;
+
+pub use dataset::{Dataset, Sample};
+pub use features::{feature_names, featurize};
+pub use hgbr::{Hgbr, HgbrParams};
+pub use linear::LinearLatencyModel;

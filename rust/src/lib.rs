@@ -1,0 +1,38 @@
+//! # SCALE-Sim TPU
+//!
+//! A validated and extended SCALE-Sim for TPU-style accelerators,
+//! reproducing *"SCALE-Sim TPU: Validating and Extending SCALE-Sim for
+//! TPUs"* (Dang et al., 2026) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate contains:
+//!
+//! * [`scalesim`] — the cycle-accurate systolic-array simulator substrate
+//!   (SCALE-Sim v3 rebuilt in Rust): dataflows, SRAM/DRAM model, conv,
+//!   multi-core partitioning.
+//! * [`frontend`] — the StableHLO text parser and operator classifier
+//!   (the paper's framework-agnostic interface).
+//! * [`learned`] — histogram-based gradient-boosting regression, written
+//!   from scratch, for non-systolic elementwise-operator latency.
+//! * [`calibrate`] — the cycle→time linear calibration and fit metrics.
+//! * [`tpu`] — the measurement substrate: a synthetic TPU v4 device model
+//!   (hardware substitute, see DESIGN.md) and a PJRT-backed harness that
+//!   times real executions.
+//! * [`runtime`] — the PJRT CPU client wrapper that loads AOT-compiled
+//!   HLO artifacts produced by the Python build path.
+//! * [`coordinator`] — the L3 orchestrator: job queue, worker pool,
+//!   operator routing and whole-model latency aggregation.
+//! * [`workloads`] — the paper's sweep generators.
+//! * [`report`] — tables, CSV and ASCII scatter plots for every figure.
+//! * [`util`] — std-only infrastructure (JSON, PRNG, stats, args).
+
+pub mod calibrate;
+pub mod coordinator;
+pub mod experiments;
+pub mod frontend;
+pub mod learned;
+pub mod report;
+pub mod runtime;
+pub mod scalesim;
+pub mod tpu;
+pub mod workloads;
+pub mod util;

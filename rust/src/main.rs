@@ -1,0 +1,350 @@
+//! SCALE-Sim TPU command-line interface (the L3 leader binary).
+//!
+//! Subcommands map 1:1 to the paper's artifacts and toolchain entry
+//! points; run `scalesim-tpu help` for the full list.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use scalesim_tpu::calibrate::Regime;
+use scalesim_tpu::coordinator::{default_workers, serve_lines};
+use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
+use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::report::{write_output, Table};
+use scalesim_tpu::scalesim::{
+    simulate_gemm, simulate_topology, GemmShape, ScaleConfig, Topology,
+};
+use scalesim_tpu::tpu::{Hardware, PjrtHardware, TpuV4Model};
+use scalesim_tpu::util::args::Args;
+
+const HELP: &str = "\
+scalesim-tpu — validated & extended SCALE-Sim for TPUs (paper reproduction)
+
+USAGE: scalesim-tpu <subcommand> [options]
+
+Paper artifacts:
+  table1                     print Table 1 (+ live capability check)
+  fig2                       cycles→latency regressions, 3 regimes
+  fig3                       elementwise-add latency sweeps (1D/2D)
+  fig4                       held-out cycle-to-latency accuracy
+  fig5                       learned elementwise models (add, ReLU)
+  all                        run every artifact in sequence
+
+Toolchain:
+  simulate --m M --k K --n N     simulate one GEMM (cycles + latency)
+           [--energy] [--sparsity D] [--trace out.csv]
+  simulate --topology FILE.csv   simulate a SCALE-Sim CSV topology
+  simulate --module FILE.txt     estimate a StableHLO module end to end
+           [--fused]               model XLA operator fusion
+  calibrate                      build + save modeling assets
+  serve --input FILE.jsonl       batch request service (JSONL in/out)
+
+Common options:
+  --hardware model|pjrt      measurement backend (default: model)
+  --seed N                   device-model noise seed (default 42)
+  --reps N                   median-of-N measurement (default 5)
+  --shapes N                 training shapes for learned models (default 2000)
+  --assets DIR               modeling-asset directory (default artifacts/assets)
+  --out DIR                  where to write CSV dumps (default results/)
+  --dataflow os|ws|is        SCALE-Sim dataflow (default ws)
+";
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+    let unknown = args.unknown_keys();
+    if !unknown.is_empty() {
+        eprintln!("warning: unrecognised options: {unknown:?}");
+    }
+}
+
+fn make_hardware(args: &Args) -> Result<Box<dyn Hardware>> {
+    match args.str_or("hardware", "model").as_str() {
+        "model" => Ok(Box::new(TpuV4Model::new(args.u64_or("seed", 42)))),
+        "pjrt" => Ok(Box::new(PjrtHardware::new()?)),
+        other => bail!("unknown hardware backend '{other}' (model|pjrt)"),
+    }
+}
+
+fn make_config(args: &Args) -> Result<ScaleConfig> {
+    let mut config = ScaleConfig::tpu_v4();
+    if let Some(df) = args.get("dataflow") {
+        config.dataflow = scalesim_tpu::scalesim::Dataflow::parse(df)
+            .with_context(|| format!("bad dataflow '{df}'"))?;
+    }
+    Ok(config)
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("out", "results"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some("table1") => {
+            println!("{}", table1::render());
+            Ok(())
+        }
+        Some("fig2") => cmd_fig2(args),
+        Some("fig3") => cmd_fig3(args),
+        Some("fig4") => cmd_fig4(args),
+        Some("fig5") => cmd_fig5(args),
+        Some("all") => {
+            println!("{}", table1::render());
+            cmd_fig2(args)?;
+            cmd_fig3(args)?;
+            cmd_fig4(args)?;
+            cmd_fig5(args)
+        }
+        Some("simulate") => cmd_simulate(args),
+        Some("calibrate") => cmd_calibrate(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => bail!("unknown subcommand '{other}' (try 'help')"),
+    }
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let config = make_config(args)?;
+    let mut hw = make_hardware(args)?;
+    let reps = args.usize_or("reps", 5);
+    let result = fig2::run(hw.as_mut(), &config, reps);
+    println!("{}", fig2::render(&result, hw.name()));
+    let csv_path = out_dir(args).join("fig2.csv");
+    write_output(&csv_path, &fig2::to_csv(&result))?;
+    println!("wrote {}", csv_path.display());
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let mut hw = make_hardware(args)?;
+    let reps = args.usize_or("reps", 5);
+    let result = fig3::run(hw.as_mut(), reps);
+    println!("{}", fig3::render(&result, hw.name()));
+    let csv_path = out_dir(args).join("fig3.csv");
+    write_output(&csv_path, &fig3::to_csv(&result))?;
+    println!("wrote {}", csv_path.display());
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let config = make_config(args)?;
+    let mut hw = make_hardware(args)?;
+    let reps = args.usize_or("reps", 5);
+    // Calibrate on the Fig. 2 sweep, evaluate on held-out shapes.
+    let f2 = fig2::run(hw.as_mut(), &config, reps);
+    let result = fig4::run(hw.as_mut(), &config, &f2.calibration, reps);
+    println!("{}", fig4::render(&result, hw.name()));
+    let csv_path = out_dir(args).join("fig4.csv");
+    write_output(&csv_path, &fig4::to_csv(&result))?;
+    println!("wrote {}", csv_path.display());
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let mut hw = make_hardware(args)?;
+    let reps = args.usize_or("reps", 5);
+    let shapes = args.usize_or("shapes", 2000);
+    let seed = args.u64_or("seed", 42);
+    let result = fig5::run(hw.as_mut(), shapes, reps, seed);
+    println!("{}", fig5::render(&result, hw.name()));
+    let csv_path = out_dir(args).join("fig5.csv");
+    write_output(&csv_path, &fig5::to_csv(&result))?;
+    println!("wrote {}", csv_path.display());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let config = make_config(args)?;
+
+    if let Some(path) = args.get("module") {
+        // StableHLO module → whole-model estimate via saved assets.
+        let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
+        let mut hw = make_hardware(args)?;
+        let est = assets::load_or_build(
+            &assets_dir,
+            hw.as_mut(),
+            &config,
+            args.usize_or("shapes", 1200),
+            args.usize_or("reps", 3),
+            args.u64_or("seed", 42),
+        )?;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading module {path}"))?;
+        let module = parse_module(&text)?;
+        let report = if args.flag("fused") {
+            scalesim_tpu::coordinator::estimate_fused(&est, &module)
+        } else {
+            est.estimate_module(&module)
+        };
+        let mut t = Table::new(&["#", "op", "source", "cycles", "latency us", "note"]);
+        for op in &report.ops {
+            t.row(&[
+                op.index.to_string(),
+                op.op_name.clone(),
+                op.source.tag().to_string(),
+                op.cycles.map(|c| c.to_string()).unwrap_or_default(),
+                format!("{:.3}", op.latency_us),
+                op.note.clone(),
+            ]);
+        }
+        println!("{}", t.markdown());
+        println!(
+            "module @{}: total {:.2} us (systolic {:.2}, elementwise {:.2}, other {:.2}); model coverage {:.0}%",
+            report.module_name,
+            report.total_us,
+            report.systolic_us,
+            report.elementwise_us,
+            report.other_us,
+            report.coverage() * 100.0
+        );
+        return Ok(());
+    }
+
+    if let Some(path) = args.get("topology") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading topology {path}"))?;
+        let topo = Topology::parse_csv(path, &text)?;
+        let reports = simulate_topology(&config, &topo);
+        let mut t = Table::new(&["layer", "GEMM (MxKxN)", "cycles", "util %", "DRAM words"]);
+        let mut total: u64 = 0;
+        for r in &reports {
+            let g = r.report.gemm;
+            t.row(&[
+                r.layer_name.clone(),
+                format!("{}x{}x{}", g.m, g.k, g.n),
+                r.report.total_cycles().to_string(),
+                format!("{:.1}", r.report.utilisation * 100.0),
+                r.report.total_dram_words().to_string(),
+            ]);
+            total += r.report.total_cycles();
+        }
+        println!("{}", t.markdown());
+        println!("total: {total} cycles");
+        return Ok(());
+    }
+
+    // Single GEMM.
+    let m = args.usize_or("m", 512);
+    let k = args.usize_or("k", 512);
+    let n = args.usize_or("n", 512);
+    let g = GemmShape::new(m, k, n);
+    let report = simulate_gemm(&config, g);
+    println!("{report}");
+    println!("regime: {}", Regime::of_gemm(&g));
+
+    // Optional extensions: energy, sparsity, fold trace.
+    if args.flag("energy") {
+        let e = scalesim_tpu::scalesim::estimate_energy(
+            &scalesim_tpu::scalesim::EnergyParams::default(),
+            &report,
+        );
+        println!(
+            "energy: {:.2} uJ (mac {:.2} / sram {:.2} / dram {:.2} / leak {:.2}); data movement {:.0}%; {:.2} TOPS/W",
+            e.total_uj(),
+            e.mac_uj,
+            e.sram_uj,
+            e.dram_uj,
+            e.leakage_uj,
+            e.data_movement_fraction() * 100.0,
+            e.tops_per_watt(&report)
+        );
+    }
+    if let Some(d) = args.get("sparsity") {
+        let density: f64 = d.parse().context("--sparsity expects a density in (0,1]")?;
+        let sp = scalesim_tpu::scalesim::Sparsity {
+            a_density: 1.0,
+            b_density: density,
+            gating_efficiency: 1.0,
+        };
+        let sr = scalesim_tpu::scalesim::simulate_sparse(&config, g, sp);
+        println!(
+            "sparse (B density {density}): {} cycles, speedup {:.2}x, dram {} words",
+            sr.effective_cycles,
+            sr.speedup(),
+            sr.effective_dram_words
+        );
+    }
+    if let Some(path) = args.get("trace") {
+        let trace = scalesim_tpu::scalesim::trace_gemm(&config, g);
+        write_output(std::path::Path::new(path), &trace.to_csv())?;
+        println!("wrote fold trace ({} folds) to {path}", trace.records.len());
+    }
+    // If calibration assets exist, also report estimated TPU time.
+    let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
+    if let Ok(est) = assets::load_assets(&assets_dir) {
+        println!(
+            "calibrated TPU latency estimate: {:.3} us",
+            est.calibration.cycles_to_us(&g, report.total_cycles())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let config = make_config(args)?;
+    let mut hw = make_hardware(args)?;
+    let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
+    let est = assets::build_estimator(
+        hw.as_mut(),
+        &config,
+        args.usize_or("shapes", 2000),
+        args.usize_or("reps", 5),
+        args.u64_or("seed", 42),
+    );
+    assets::save_assets(&assets_dir, &est)?;
+    println!(
+        "saved calibration + {} learned models to {}",
+        est.learned.len(),
+        assets_dir.display()
+    );
+    for (regime, metrics) in &est.calibration.metrics {
+        println!("  {regime}: {metrics}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = make_config(args)?;
+    let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
+    let mut hw = make_hardware(args)?;
+    let est = assets::load_or_build(
+        &assets_dir,
+        hw.as_mut(),
+        &config,
+        args.usize_or("shapes", 1200),
+        args.usize_or("reps", 3),
+        args.u64_or("seed", 42),
+    )?;
+    let lines: Vec<String> = match args.get("input") {
+        Some(path) => std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(str::to_string)
+            .collect(),
+        None => {
+            use std::io::BufRead;
+            std::io::stdin()
+                .lock()
+                .lines()
+                .collect::<std::io::Result<Vec<_>>>()?
+                .into_iter()
+                .filter(|l| !l.trim().is_empty())
+                .collect()
+        }
+    };
+    let responses = serve_lines(Arc::new(est), &lines, default_workers());
+    for r in responses {
+        println!("{r}");
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Reporting: markdown/CSV tables ([`table`]) and ASCII scatter plots
+//! ([`scatter`]) used by every figure harness.
+
+pub mod scatter;
+pub mod table;
+
+pub use scatter::Scatter;
+pub use table::{fnum, Table};
+
+use std::path::Path;
+
+/// Write a string to a file, creating parent directories.
+pub fn write_output(path: &Path, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_output_creates_dirs() {
+        let dir = std::env::temp_dir().join("scalesim_tpu_report_test/nested");
+        let path = dir.join("out.csv");
+        write_output(&path, "a,b\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a,b\n");
+        std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+    }
+}

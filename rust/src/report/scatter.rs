@@ -1,0 +1,206 @@
+//! ASCII scatter plots — the terminal rendition of the paper's figures.
+//!
+//! Each figure in the paper is a scatter of (x, y) points, optionally with
+//! a fitted line or the y = x diagonal. We render the same data as a
+//! character grid so every figure harness can *show* its result, not just
+//! print metrics.
+
+/// A scatter plot specification.
+pub struct Scatter {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub width: usize,
+    pub height: usize,
+    /// Point series: (marker, points).
+    pub series: Vec<(char, Vec<(f64, f64)>)>,
+    /// Optional line y = a·x + b drawn with '·'.
+    pub line: Option<(f64, f64)>,
+    /// Draw the y = x diagonal.
+    pub diagonal: bool,
+    /// Log-scale both axes.
+    pub log_log: bool,
+}
+
+impl Scatter {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Scatter {
+        Scatter {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 72,
+            height: 24,
+            series: Vec::new(),
+            line: None,
+            diagonal: false,
+            log_log: false,
+        }
+    }
+
+    pub fn add_series(&mut self, marker: char, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push((marker, points));
+        self
+    }
+
+    pub fn with_fit(&mut self, alpha: f64, beta: f64) -> &mut Self {
+        self.line = Some((alpha, beta));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for (_, s) in &self.series {
+            pts.extend_from_slice(s);
+        }
+        if pts.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let tf = |v: f64| -> f64 {
+            if self.log_log {
+                v.max(1e-12).log10()
+            } else {
+                v
+            }
+        };
+        let xs: Vec<f64> = pts.iter().map(|p| tf(p.0)).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| tf(p.1)).collect();
+        let (xmin, xmax) = bounds(&xs);
+        let (ymin, ymax) = bounds(&ys);
+        let xspan = (xmax - xmin).max(1e-12);
+        let yspan = (ymax - ymin).max(1e-12);
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+
+        // Fitted line / diagonal, drawn first so points overwrite.
+        for col in 0..self.width {
+            let x = xmin + xspan * (col as f64 + 0.5) / self.width as f64;
+            let raw_x = if self.log_log { 10f64.powf(x) } else { x };
+            let mut marks: Vec<f64> = Vec::new();
+            if let Some((a, b)) = self.line {
+                marks.push(tf(a * raw_x + b));
+            }
+            if self.diagonal {
+                marks.push(tf(raw_x));
+            }
+            for y in marks {
+                if y.is_finite() {
+                    let row = to_row(y, ymin, yspan, self.height);
+                    if row < self.height {
+                        grid[row][col] = '·';
+                    }
+                }
+            }
+        }
+
+        for (marker, series) in &self.series {
+            for &(px, py) in series {
+                let col = ((tf(px) - xmin) / xspan * (self.width as f64 - 1.0)).round() as usize;
+                let row = to_row(tf(py), ymin, yspan, self.height);
+                if row < self.height && col < self.width {
+                    grid[row][col] = *marker;
+                }
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("  {}\n", self.title));
+        let ylab = |v: f64| -> String {
+            let raw = if self.log_log { 10f64.powf(v) } else { v };
+            format!("{raw:>10.3}")
+        };
+        for (r, row) in grid.iter().enumerate() {
+            let label = if r == 0 {
+                ylab(ymax)
+            } else if r == self.height - 1 {
+                ylab(ymin)
+            } else if r == self.height / 2 {
+                ylab(ymin + yspan / 2.0)
+            } else {
+                " ".repeat(10)
+            };
+            out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{} +{}\n",
+            " ".repeat(10),
+            "-".repeat(self.width)
+        ));
+        let xlo = if self.log_log { 10f64.powf(xmin) } else { xmin };
+        let xhi = if self.log_log { 10f64.powf(xmax) } else { xmax };
+        out.push_str(&format!(
+            "{} {:<12.3}{:^width$}{:>12.3}\n",
+            " ".repeat(9),
+            xlo,
+            format!("{} → {}", self.x_label, self.y_label),
+            xhi,
+            width = self.width.saturating_sub(24)
+        ));
+        out
+    }
+}
+
+fn bounds(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    if !lo.is_finite() {
+        (0.0, 1.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// y grows upward: top row = ymax.
+fn to_row(y: f64, ymin: f64, yspan: f64, height: usize) -> usize {
+    let frac = ((y - ymin) / yspan).clamp(0.0, 1.0);
+    ((1.0 - frac) * (height as f64 - 1.0)).round() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_and_line() {
+        let mut s = Scatter::new("test", "x", "y");
+        s.add_series('o', vec![(0.0, 0.0), (10.0, 10.0), (5.0, 5.0)]);
+        s.with_fit(1.0, 0.0);
+        let out = s.render();
+        assert!(out.contains("test"));
+        assert!(out.contains('o'));
+        assert!(out.contains('·'));
+    }
+
+    #[test]
+    fn empty_plot_is_graceful() {
+        let s = Scatter::new("empty", "x", "y");
+        assert!(s.render().contains("no data"));
+    }
+
+    #[test]
+    fn log_log_handles_decades() {
+        let mut s = Scatter::new("ll", "n", "t");
+        s.log_log = true;
+        s.add_series('x', vec![(10.0, 1.0), (1e6, 1e3)]);
+        let out = s.render();
+        assert!(out.contains('x'));
+    }
+
+    #[test]
+    fn corner_points_inside_grid() {
+        let mut s = Scatter::new("c", "x", "y");
+        s.width = 10;
+        s.height = 5;
+        s.add_series('*', vec![(0.0, 0.0), (1.0, 1.0)]);
+        let out = s.render();
+        // Top row contains the max point, bottom data row the min.
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines[1].contains('*'));
+        assert!(lines[5].contains('*'));
+    }
+}

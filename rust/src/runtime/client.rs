@@ -1,0 +1,192 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (or synthesised HLO
+//! text), compile them once, and execute them from the Rust request path.
+//!
+//! This wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto` (text parser — jax ≥ 0.5 protos
+//! are not loadable on xla_extension 0.5.1, see python/compile/aot.py) →
+//! `client.compile` → `execute`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus compile/execute helpers.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text module from a string.
+    pub fn compile_text(&self, name: &str, hlo_text: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(hlo_text.as_bytes())
+            .with_context(|| format!("parsing HLO text for '{name}'"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling '{name}'"))?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Compile an HLO-text module from a file (an AOT artifact).
+    pub fn compile_file(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO artifact {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "artifact".to_string()),
+        })
+    }
+}
+
+/// Build an f32 literal of the given shape filled with a simple pattern.
+pub fn f32_literal(dims: &[usize], fill: impl Fn(usize) -> f32) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    let data: Vec<f32> = (0..n).map(fill).collect();
+    let lit = xla::Literal::vec1(&data);
+    if dims.is_empty() {
+        // Rank-0: reshape to scalar.
+        return lit.reshape(&[]).context("reshape to scalar");
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).context("reshape literal")
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the raw output literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing '{}'", self.name))?;
+        let mut outs = Vec::new();
+        for b in &bufs[0] {
+            outs.push(b.to_literal_sync()?);
+        }
+        Ok(outs)
+    }
+
+    /// Execute once and return the first output as a f32 vec, unwrapping a
+    /// 1-tuple if the module was lowered with `return_tuple=True`.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        let first = outs
+            .into_iter()
+            .next()
+            .context("executable produced no outputs")?;
+        let is_tuple = matches!(first.shape(), Ok(xla::Shape::Tuple(_)));
+        if is_tuple {
+            Ok(first.to_tuple1()?.to_vec::<f32>()?)
+        } else {
+            Ok(first.to_vec::<f32>()?)
+        }
+    }
+
+    /// Time the executable: `warmup` unmeasured runs, then `reps` measured
+    /// runs; returns per-run latencies in microseconds.
+    pub fn time_us(&self, inputs: &[xla::Literal], warmup: usize, reps: usize) -> Result<Vec<f64>> {
+        for _ in 0..warmup {
+            let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+            // Force completion.
+            let _ = bufs[0][0].to_literal_sync()?;
+        }
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let start = Instant::now();
+            let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+            let _ = bufs[0][0].to_literal_sync()?;
+            times.push(start.elapsed().as_secs_f64() * 1e6);
+        }
+        Ok(times)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::hlo_gen;
+    use crate::util::stats;
+
+    // The xla client is !Send (Rc internally), so each test builds its own.
+    fn runtime() -> Runtime {
+        Runtime::cpu().expect("PJRT CPU client")
+    }
+
+    #[test]
+    fn gemm_numerics() {
+        let rt = runtime();
+        let exe = rt.compile_text("gemm", &hlo_gen::gemm_hlo(2, 2, 2)).unwrap();
+        // A = [[1,2],[3,4]], B = I.
+        let a = f32_literal(&[2, 2], |i| (i + 1) as f32).unwrap();
+        let b = f32_literal(&[2, 2], |i| if i == 0 || i == 3 { 1.0 } else { 0.0 }).unwrap();
+        let out = exe.run_f32(&[a, b]).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn elementwise_add_numerics() {
+        let rt = runtime();
+        let exe = rt
+            .compile_text("add", &hlo_gen::binary_ew_hlo("add", &[2, 3]))
+            .unwrap();
+        let a = f32_literal(&[2, 3], |i| i as f32).unwrap();
+        let b = f32_literal(&[2, 3], |_| 10.0).unwrap();
+        let out = exe.run_f32(&[a, b]).unwrap();
+        assert_eq!(out, vec![10.0, 11.0, 12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn relu_numerics() {
+        let rt = runtime();
+        let exe = rt.compile_text("relu", &hlo_gen::relu_hlo(&[4])).unwrap();
+        let a = f32_literal(&[4], |i| i as f32 - 2.0).unwrap();
+        let out = exe.run_f32(&[a]).unwrap();
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn timing_returns_positive_medians() {
+        let rt = runtime();
+        let exe = rt
+            .compile_text("add", &hlo_gen::binary_ew_hlo("add", &[64, 64]))
+            .unwrap();
+        let a = f32_literal(&[64, 64], |i| i as f32).unwrap();
+        let b = f32_literal(&[64, 64], |i| i as f32).unwrap();
+        let times = exe.time_us(&[a, b], 2, 5).unwrap();
+        assert_eq!(times.len(), 5);
+        assert!(stats::median(&times) > 0.0);
+    }
+
+    #[test]
+    fn bad_hlo_fails_cleanly() {
+        let rt = runtime();
+        assert!(rt.compile_text("bad", "this is not hlo").is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! HLO-text synthesis for micro-kernels.
+//!
+//! The PJRT measurement backend ([`crate::tpu::pjrt_hw`]) needs one
+//! executable per (op, shape) point in a sweep. Rather than round-tripping
+//! through Python for every shape, we synthesise the (tiny) HLO text
+//! directly — the same text format the AOT artifacts use, parsed by the
+//! same `HloModuleProto::parse_and_return_unverified_module` entry point.
+
+/// Render a dims list as the HLO shape suffix: `[128,256]` (empty for
+/// scalars).
+fn dims_str(dims: &[usize]) -> String {
+    let inner = dims
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("[{inner}]")
+}
+
+/// HLO module computing `C = A×B` for f32 matrices.
+pub fn gemm_hlo(m: usize, k: usize, n: usize) -> String {
+    format!(
+        "HloModule gemm_m{m}_k{k}_n{n}\n\n\
+         ENTRY main {{\n  \
+           a = f32[{m},{k}] parameter(0)\n  \
+           b = f32[{k},{n}] parameter(1)\n  \
+           ROOT dot = f32[{m},{n}] dot(a, b), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         }}\n"
+    )
+}
+
+/// HLO module for a binary elementwise op (`add`, `multiply`, `subtract`,
+/// `maximum`, `minimum`, `divide`) over f32 tensors of shape `dims`.
+pub fn binary_ew_hlo(op: &str, dims: &[usize]) -> String {
+    let d = dims_str(dims);
+    format!(
+        "HloModule ew_{op}\n\n\
+         ENTRY main {{\n  \
+           a = f32{d} parameter(0)\n  \
+           b = f32{d} parameter(1)\n  \
+           ROOT r = f32{d} {op}(a, b)\n\
+         }}\n"
+    )
+}
+
+/// HLO module for ReLU (`maximum(x, 0)`) over f32 tensors of shape `dims`.
+pub fn relu_hlo(dims: &[usize]) -> String {
+    let d = dims_str(dims);
+    format!(
+        "HloModule ew_relu\n\n\
+         ENTRY main {{\n  \
+           a = f32{d} parameter(0)\n  \
+           zero = f32[] constant(0)\n  \
+           zeros = f32{d} broadcast(zero), dimensions={{}}\n  \
+           ROOT r = f32{d} maximum(a, zeros)\n\
+         }}\n"
+    )
+}
+
+/// HLO module for a unary elementwise op (`exponential`, `tanh`, `negate`,
+/// `abs`, `sqrt`, `rsqrt`, `log`, `logistic`).
+pub fn unary_ew_hlo(op: &str, dims: &[usize]) -> String {
+    let d = dims_str(dims);
+    format!(
+        "HloModule ew_{op}\n\n\
+         ENTRY main {{\n  \
+           a = f32{d} parameter(0)\n  \
+           ROOT r = f32{d} {op}(a)\n\
+         }}\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_text_shape() {
+        let t = gemm_hlo(128, 256, 512);
+        assert!(t.contains("f32[128,256] parameter(0)"));
+        assert!(t.contains("f32[256,512] parameter(1)"));
+        assert!(t.contains("ROOT dot = f32[128,512]"));
+        assert!(t.contains("lhs_contracting_dims={1}"));
+    }
+
+    #[test]
+    fn binary_text() {
+        let t = binary_ew_hlo("add", &[64, 32]);
+        assert!(t.contains("ROOT r = f32[64,32] add(a, b)"));
+    }
+
+    #[test]
+    fn scalar_dims() {
+        let t = binary_ew_hlo("multiply", &[]);
+        assert!(t.contains("f32[] parameter(0)"));
+    }
+
+    #[test]
+    fn relu_has_broadcast_zero() {
+        let t = relu_hlo(&[8, 128]);
+        assert!(t.contains("constant(0)"));
+        assert!(t.contains("broadcast(zero)"));
+        assert!(t.contains("maximum(a, zeros)"));
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime layer: loads AOT-compiled HLO artifacts (built once by
+//! `make artifacts` via python/compile/aot.py) and executes them on the
+//! PJRT CPU client. Python is never on this path.
+
+pub mod client;
+pub mod hlo_gen;
+
+pub use client::{f32_literal, Executable, Runtime};

@@ -1,0 +1,261 @@
+//! Simulator architecture configuration (the SCALE-Sim `[architecture]`
+//! section, rebuilt as a typed struct).
+//!
+//! A [`ScaleConfig`] describes one systolic core: the MAC-array geometry,
+//! the three SRAM operand buffers (ifmap / filter / ofmap, each double
+//! buffered), the DRAM interface bandwidths, the dataflow, and the clock.
+//! Presets are provided for the configurations the paper uses — most
+//! importantly [`ScaleConfig::tpu_v4`], the 128×128 MXU-like setup used
+//! for all validation experiments.
+
+use crate::util::json::{Json, JsonError};
+
+/// Which operand is held stationary in the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Output stationary: each PE accumulates one output element.
+    OutputStationary,
+    /// Weight stationary: filter values pinned, inputs stream through.
+    WeightStationary,
+    /// Input stationary: ifmap values pinned, weights stream through.
+    InputStationary,
+}
+
+impl Dataflow {
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s.to_ascii_lowercase().as_str() {
+            "os" | "output_stationary" => Some(Dataflow::OutputStationary),
+            "ws" | "weight_stationary" => Some(Dataflow::WeightStationary),
+            "is" | "input_stationary" => Some(Dataflow::InputStationary),
+            _ => None,
+        }
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            Dataflow::OutputStationary => "OS",
+            Dataflow::WeightStationary => "WS",
+            Dataflow::InputStationary => "IS",
+        }
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+/// One systolic core's architecture parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleConfig {
+    /// Human-readable config name (shows up in reports).
+    pub name: String,
+    /// MAC array rows (S_R).
+    pub array_rows: usize,
+    /// MAC array columns (S_C).
+    pub array_cols: usize,
+    /// IFMAP SRAM capacity in KiB (total; the sim double-buffers it).
+    pub ifmap_sram_kb: usize,
+    /// Filter SRAM capacity in KiB.
+    pub filter_sram_kb: usize,
+    /// OFMAP SRAM capacity in KiB.
+    pub ofmap_sram_kb: usize,
+    /// Dataflow (OS / WS / IS).
+    pub dataflow: Dataflow,
+    /// DRAM read bandwidth for ifmap operands, words/cycle.
+    pub ifmap_dram_bw: f64,
+    /// DRAM read bandwidth for filter operands, words/cycle.
+    pub filter_dram_bw: f64,
+    /// DRAM write bandwidth for ofmap results, words/cycle.
+    pub ofmap_dram_bw: f64,
+    /// Bytes per operand word (2 for bf16).
+    pub word_bytes: usize,
+    /// Core clock in MHz (used only to express cycles as time).
+    pub freq_mhz: f64,
+}
+
+impl ScaleConfig {
+    /// TPU v4-like configuration: one 128×128 MXU, bf16 operands,
+    /// 940 MHz clock, generous on-chip buffering (TPU v4 has 128 MiB CMEM;
+    /// we give each operand buffer a large slice so medium shapes are
+    /// single-pass, as on real hardware).
+    pub fn tpu_v4() -> ScaleConfig {
+        ScaleConfig {
+            name: "tpu_v4_mxu".to_string(),
+            array_rows: 128,
+            array_cols: 128,
+            ifmap_sram_kb: 8 * 1024,
+            filter_sram_kb: 8 * 1024,
+            ofmap_sram_kb: 8 * 1024,
+            dataflow: Dataflow::WeightStationary,
+            // ~1.2 TB/s HBM at 940 MHz and 2-byte words ≈ 640 words/cycle
+            // aggregate; split across the three operand streams.
+            ifmap_dram_bw: 256.0,
+            filter_dram_bw: 256.0,
+            ofmap_dram_bw: 128.0,
+            word_bytes: 2,
+            freq_mhz: 940.0,
+        }
+    }
+
+    /// A small Eyeriss-like config, used in tests to exercise folding.
+    pub fn eyeriss_like() -> ScaleConfig {
+        ScaleConfig {
+            name: "eyeriss_like".to_string(),
+            array_rows: 12,
+            array_cols: 14,
+            ifmap_sram_kb: 108,
+            filter_sram_kb: 108,
+            ofmap_sram_kb: 108,
+            dataflow: Dataflow::OutputStationary,
+            ifmap_dram_bw: 4.0,
+            filter_dram_bw: 4.0,
+            ofmap_dram_bw: 4.0,
+            word_bytes: 2,
+            freq_mhz: 200.0,
+        }
+    }
+
+    /// TPU v1-like 256×256 array (for ablations).
+    pub fn tpu_v1_like() -> ScaleConfig {
+        ScaleConfig {
+            name: "tpu_v1_like".to_string(),
+            array_rows: 256,
+            array_cols: 256,
+            ifmap_sram_kb: 12 * 1024,
+            filter_sram_kb: 12 * 1024,
+            ofmap_sram_kb: 4 * 1024,
+            dataflow: Dataflow::WeightStationary,
+            ifmap_dram_bw: 64.0,
+            filter_dram_bw: 64.0,
+            ofmap_dram_bw: 32.0,
+            word_bytes: 1,
+            freq_mhz: 700.0,
+        }
+    }
+
+    /// Words that fit in one half of a double-buffered SRAM.
+    pub fn half_buffer_words(&self, sram_kb: usize) -> usize {
+        (sram_kb * 1024) / (2 * self.word_bytes)
+    }
+
+    pub fn ifmap_half_words(&self) -> usize {
+        self.half_buffer_words(self.ifmap_sram_kb)
+    }
+
+    pub fn filter_half_words(&self) -> usize {
+        self.half_buffer_words(self.filter_sram_kb)
+    }
+
+    pub fn ofmap_half_words(&self) -> usize {
+        self.half_buffer_words(self.ofmap_sram_kb)
+    }
+
+    /// Seconds per cycle at the configured clock.
+    pub fn cycle_time_s(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+
+    /// Peak MACs/cycle of the array.
+    pub fn peak_macs_per_cycle(&self) -> f64 {
+        (self.array_rows * self.array_cols) as f64
+    }
+
+    /// Validate invariants; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        if self.array_rows == 0 || self.array_cols == 0 {
+            problems.push("array dimensions must be positive".to_string());
+        }
+        if self.ifmap_sram_kb == 0 || self.filter_sram_kb == 0 || self.ofmap_sram_kb == 0 {
+            problems.push("SRAM sizes must be positive".to_string());
+        }
+        if self.ifmap_dram_bw <= 0.0 || self.filter_dram_bw <= 0.0 || self.ofmap_dram_bw <= 0.0 {
+            problems.push("DRAM bandwidths must be positive".to_string());
+        }
+        if self.word_bytes == 0 {
+            problems.push("word_bytes must be positive".to_string());
+        }
+        if self.freq_mhz <= 0.0 {
+            problems.push("freq_mhz must be positive".to_string());
+        }
+        problems
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("array_rows", Json::Num(self.array_rows as f64))
+            .set("array_cols", Json::Num(self.array_cols as f64))
+            .set("ifmap_sram_kb", Json::Num(self.ifmap_sram_kb as f64))
+            .set("filter_sram_kb", Json::Num(self.filter_sram_kb as f64))
+            .set("ofmap_sram_kb", Json::Num(self.ofmap_sram_kb as f64))
+            .set("dataflow", Json::Str(self.dataflow.short().to_string()))
+            .set("ifmap_dram_bw", Json::Num(self.ifmap_dram_bw))
+            .set("filter_dram_bw", Json::Num(self.filter_dram_bw))
+            .set("ofmap_dram_bw", Json::Num(self.ofmap_dram_bw))
+            .set("word_bytes", Json::Num(self.word_bytes as f64))
+            .set("freq_mhz", Json::Num(self.freq_mhz));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScaleConfig, JsonError> {
+        Ok(ScaleConfig {
+            name: j.req_str("name")?.to_string(),
+            array_rows: j.req_f64("array_rows")? as usize,
+            array_cols: j.req_f64("array_cols")? as usize,
+            ifmap_sram_kb: j.req_f64("ifmap_sram_kb")? as usize,
+            filter_sram_kb: j.req_f64("filter_sram_kb")? as usize,
+            ofmap_sram_kb: j.req_f64("ofmap_sram_kb")? as usize,
+            dataflow: Dataflow::parse(j.req_str("dataflow")?)
+                .ok_or_else(|| JsonError::new("bad dataflow"))?,
+            ifmap_dram_bw: j.req_f64("ifmap_dram_bw")?,
+            filter_dram_bw: j.req_f64("filter_dram_bw")?,
+            ofmap_dram_bw: j.req_f64("ofmap_dram_bw")?,
+            word_bytes: j.req_f64("word_bytes")? as usize,
+            freq_mhz: j.req_f64("freq_mhz")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataflow_parse() {
+        assert_eq!(Dataflow::parse("ws"), Some(Dataflow::WeightStationary));
+        assert_eq!(Dataflow::parse("OS"), Some(Dataflow::OutputStationary));
+        assert_eq!(Dataflow::parse("input_stationary"), Some(Dataflow::InputStationary));
+        assert_eq!(Dataflow::parse("xx"), None);
+    }
+
+    #[test]
+    fn tpu_v4_preset_valid() {
+        let c = ScaleConfig::tpu_v4();
+        assert!(c.validate().is_empty());
+        assert_eq!(c.array_rows, 128);
+        assert_eq!(c.array_cols, 128);
+        // bf16: half of 8 MiB = 4 MiB = 2M words
+        assert_eq!(c.ifmap_half_words(), 2 * 1024 * 1024);
+        assert!((c.cycle_time_s() - 1.0 / 940e6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ScaleConfig::eyeriss_like();
+        let j = c.to_json();
+        let c2 = ScaleConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn validation_catches_problems() {
+        let mut c = ScaleConfig::tpu_v4();
+        c.array_rows = 0;
+        c.freq_mhz = -1.0;
+        let problems = c.validate();
+        assert_eq!(problems.len(), 2);
+    }
+}

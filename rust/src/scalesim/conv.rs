@@ -1,0 +1,96 @@
+//! Convolution simulation via im2col lowering, and whole-topology runs.
+
+use super::config::ScaleConfig;
+use super::gemm::simulate_gemm;
+use super::report::SimReport;
+use super::topology::{ConvLayer, Layer, Topology};
+
+/// Simulate a convolution layer by lowering to its im2col GEMM, exactly as
+/// SCALE-Sim maps convolutions onto the array.
+pub fn simulate_conv(config: &ScaleConfig, conv: &ConvLayer) -> SimReport {
+    simulate_gemm(config, conv.to_gemm())
+}
+
+/// Per-layer result of a topology run.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer_name: String,
+    pub report: SimReport,
+}
+
+/// Simulate every layer of a topology sequentially on one core.
+pub fn simulate_topology(config: &ScaleConfig, topo: &Topology) -> Vec<LayerReport> {
+    topo.layers
+        .iter()
+        .map(|layer| LayerReport {
+            layer_name: layer.name().to_string(),
+            report: match layer {
+                Layer::Gemm { shape, .. } => simulate_gemm(config, *shape),
+                Layer::Conv(c) => simulate_conv(config, c),
+            },
+        })
+        .collect()
+}
+
+/// Total cycles across a topology run.
+pub fn topology_total_cycles(reports: &[LayerReport]) -> u64 {
+    reports.iter().map(|r| r.report.total_cycles()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::topology::GemmShape;
+
+    fn conv(ih: usize, fh: usize, c: usize, nf: usize, s: usize) -> ConvLayer {
+        ConvLayer {
+            name: "conv".into(),
+            ifmap_h: ih,
+            ifmap_w: ih,
+            filter_h: fh,
+            filter_w: fh,
+            channels: c,
+            num_filters: nf,
+            stride_h: s,
+            stride_w: s,
+        }
+    }
+
+    #[test]
+    fn conv_equals_its_gemm() {
+        let cfg = ScaleConfig::tpu_v4();
+        let layer = conv(56, 3, 64, 128, 1);
+        let via_conv = simulate_conv(&cfg, &layer);
+        let via_gemm = simulate_gemm(&cfg, layer.to_gemm());
+        assert_eq!(via_conv.total_cycles(), via_gemm.total_cycles());
+    }
+
+    #[test]
+    fn stride_reduces_cycles() {
+        let cfg = ScaleConfig::tpu_v4();
+        let s1 = simulate_conv(&cfg, &conv(112, 3, 64, 64, 1));
+        let s2 = simulate_conv(&cfg, &conv(112, 3, 64, 64, 2));
+        assert!(s2.total_cycles() < s1.total_cycles());
+    }
+
+    #[test]
+    fn topology_run_sums() {
+        let cfg = ScaleConfig::tpu_v4();
+        let topo = Topology {
+            name: "mini".into(),
+            layers: vec![
+                Layer::Conv(conv(32, 3, 16, 32, 1)),
+                Layer::Gemm {
+                    name: "fc".into(),
+                    shape: GemmShape::new(1, 512, 10),
+                },
+            ],
+        };
+        let reports = simulate_topology(&cfg, &topo);
+        assert_eq!(reports.len(), 2);
+        assert_eq!(
+            topology_total_cycles(&reports),
+            reports[0].report.total_cycles() + reports[1].report.total_cycles()
+        );
+    }
+}

@@ -1,0 +1,309 @@
+//! Per-dataflow systolic compute-cycle models.
+//!
+//! These follow the SCALE-Sim analytical model: a GEMM C[M,N] = A[M,K] ×
+//! B[K,N] is executed on an S_R × S_C array as a sequence of *folds*; each
+//! fold processes the largest sub-problem the array can hold under the
+//! chosen dataflow, and costs a pipeline-fill skew, a streaming phase and a
+//! drain skew. Compute cycles here assume perfect operand supply; memory
+//! stalls are layered on by [`crate::scalesim::memory`].
+//!
+//! Mapping conventions (matching SCALE-Sim):
+//!
+//! * **Output stationary (OS)** — the array holds an S_R × S_C tile of C.
+//!   Rows of A enter from the left, columns of B from the top, partial sums
+//!   stay in place. Folds: ⌈M/S_R⌉ · ⌈N/S_C⌉, each streaming K terms.
+//! * **Weight stationary (WS)** — an S_R × S_C tile of B (K rows × N cols)
+//!   is pinned; A streams through. Folds: ⌈K/S_R⌉ · ⌈N/S_C⌉, each
+//!   streaming M rows of A.
+//! * **Input stationary (IS)** — an S_R × S_C tile of Aᵀ (K rows × M cols)
+//!   is pinned; B streams through. Folds: ⌈K/S_R⌉ · ⌈M/S_C⌉, each
+//!   streaming N columns of B.
+
+use super::config::{Dataflow, ScaleConfig};
+use super::topology::GemmShape;
+
+/// Ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// One fold's geometry and cost under a dataflow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FoldCost {
+    /// Rows of the array actually occupied this fold.
+    pub rows_used: usize,
+    /// Columns of the array actually occupied this fold.
+    pub cols_used: usize,
+    /// Streaming length (K for OS, M for WS, N for IS).
+    pub stream_len: usize,
+    /// Cycles to set up the stationary operand (0 for OS).
+    pub load_cycles: u64,
+    /// Cycles for the streaming + skew phases.
+    pub stream_cycles: u64,
+}
+
+impl FoldCost {
+    pub fn total_cycles(&self) -> u64 {
+        self.load_cycles + self.stream_cycles
+    }
+
+    /// Fraction of the array occupied (mapping efficiency of this fold).
+    pub fn occupancy(&self, config: &ScaleConfig) -> f64 {
+        (self.rows_used * self.cols_used) as f64
+            / (config.array_rows * config.array_cols) as f64
+    }
+}
+
+/// Aggregate compute-phase result for one GEMM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeModel {
+    pub dataflow: Dataflow,
+    /// Fold grid (row folds, col folds).
+    pub fold_grid: (usize, usize),
+    /// Total folds.
+    pub num_folds: usize,
+    /// Pure compute cycles, assuming no memory stalls.
+    pub compute_cycles: u64,
+    /// Average mapping efficiency: occupied PE-cycles / total PE-cycles in
+    /// the *streaming* phases (SCALE-Sim's "mapping efficiency").
+    pub mapping_efficiency: f64,
+    /// Overall compute utilisation: useful MACs / (PEs × compute_cycles).
+    pub compute_utilisation: f64,
+    /// Per-fold costs in execution order. For large fold counts only the
+    /// distinct fold geometries are stored with multiplicities.
+    pub fold_classes: Vec<(FoldCost, u64)>,
+}
+
+/// Compute the fold decomposition and cycle cost of `gemm` on `config`.
+///
+/// Folds with identical geometry are collapsed into classes (a 4096³ GEMM
+/// has millions of folds but at most 4 distinct geometries: interior,
+/// ragged-right, ragged-bottom, corner).
+pub fn compute_model(config: &ScaleConfig, gemm: GemmShape) -> ComputeModel {
+    assert!(gemm.valid(), "GEMM dims must be positive: {gemm}");
+    let (sr, sc) = (config.array_rows, config.array_cols);
+
+    // Dimension mapped across rows / cols / stream, per dataflow.
+    let (row_dim, col_dim, stream_dim) = match config.dataflow {
+        Dataflow::OutputStationary => (gemm.m, gemm.n, gemm.k),
+        Dataflow::WeightStationary => (gemm.k, gemm.n, gemm.m),
+        Dataflow::InputStationary => (gemm.k, gemm.m, gemm.n),
+    };
+
+    let row_folds = ceil_div(row_dim, sr);
+    let col_folds = ceil_div(col_dim, sc);
+    let num_folds = row_folds * col_folds;
+
+    // Ragged edge sizes.
+    let last_rows = row_dim - (row_folds - 1) * sr;
+    let last_cols = col_dim - (col_folds - 1) * sc;
+
+    // The four geometry classes and their multiplicities.
+    let mut classes: Vec<((usize, usize), u64)> = Vec::with_capacity(4);
+    let interior = ((row_folds - 1) * (col_folds - 1)) as u64;
+    if interior > 0 {
+        classes.push(((sr, sc), interior));
+    }
+    // Last grid row (ragged rows, full columns), excluding the corner.
+    let bottom = (col_folds - 1) as u64;
+    if bottom > 0 {
+        classes.push(((last_rows, sc), bottom));
+    }
+    // Last grid column (full rows, ragged columns), excluding the corner.
+    let right = (row_folds - 1) as u64;
+    if right > 0 {
+        classes.push(((sr, last_cols), right));
+    }
+    classes.push(((last_rows, last_cols), 1));
+
+    let mut compute_cycles = 0u64;
+    let mut occupied_pe_cycles = 0.0f64;
+    let mut fold_classes = Vec::with_capacity(classes.len());
+    for ((rows_used, cols_used), count) in classes {
+        let cost = fold_cost(config, rows_used, cols_used, stream_dim);
+        compute_cycles += cost.total_cycles() * count;
+        occupied_pe_cycles +=
+            (rows_used * cols_used) as f64 * cost.total_cycles() as f64 * count as f64;
+        fold_classes.push((cost, count));
+    }
+
+    let total_pe_cycles = config.peak_macs_per_cycle() * compute_cycles as f64;
+    let mapping_efficiency = if total_pe_cycles > 0.0 {
+        occupied_pe_cycles / total_pe_cycles
+    } else {
+        0.0
+    };
+    let compute_utilisation = if total_pe_cycles > 0.0 {
+        gemm.macs() as f64 / total_pe_cycles
+    } else {
+        0.0
+    };
+
+    ComputeModel {
+        dataflow: config.dataflow,
+        fold_grid: (row_folds, col_folds),
+        num_folds,
+        compute_cycles,
+        mapping_efficiency,
+        compute_utilisation,
+        fold_classes,
+    }
+}
+
+/// Cycle cost of one fold with `rows_used × cols_used` active PEs and a
+/// streaming dimension of `stream_len`.
+fn fold_cost(
+    config: &ScaleConfig,
+    rows_used: usize,
+    cols_used: usize,
+    stream_len: usize,
+) -> FoldCost {
+    let (r, c, t) = (rows_used as u64, cols_used as u64, stream_len as u64);
+    match config.dataflow {
+        // OS (SCALE-Sim v1 eq.): 2·S_R + S_C + T − 2 per fold — fill the
+        // array diagonally (S_R), stream T partial-sum terms, then shift
+        // results out (S_R) while the column skew (S_C) drains.
+        Dataflow::OutputStationary => FoldCost {
+            rows_used,
+            cols_used,
+            stream_len,
+            load_cycles: 0,
+            stream_cycles: 2 * r + c + t - 2,
+        },
+        // WS: load weights row-by-row (S_R cycles), then stream T = M rows
+        // of A through; first result after S_R + S_C − 1, last after
+        // S_R + S_C + T − 2 ⇒ stream phase costs S_R + S_C + T − 2.
+        Dataflow::WeightStationary => FoldCost {
+            rows_used,
+            cols_used,
+            stream_len,
+            load_cycles: r,
+            stream_cycles: r + c + t - 2,
+        },
+        // IS mirrors WS with A and B swapped.
+        Dataflow::InputStationary => FoldCost {
+            rows_used,
+            cols_used,
+            stream_len,
+            load_cycles: r,
+            stream_cycles: r + c + t - 2,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(df: Dataflow) -> ScaleConfig {
+        let mut c = ScaleConfig::tpu_v4();
+        c.array_rows = 8;
+        c.array_cols = 8;
+        c.dataflow = df;
+        c
+    }
+
+    #[test]
+    fn os_single_fold_formula() {
+        let c = cfg(Dataflow::OutputStationary);
+        let m = compute_model(&c, GemmShape::new(8, 16, 8));
+        assert_eq!(m.num_folds, 1);
+        // 2*8 + 8 + 16 - 2 = 38
+        assert_eq!(m.compute_cycles, 38);
+        assert!((m.mapping_efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ws_single_fold_formula() {
+        let c = cfg(Dataflow::WeightStationary);
+        let m = compute_model(&c, GemmShape::new(16, 8, 8));
+        assert_eq!(m.num_folds, 1);
+        // load 8 + (8 + 8 + 16 - 2) = 38
+        assert_eq!(m.compute_cycles, 38);
+    }
+
+    #[test]
+    fn is_single_fold_formula() {
+        let c = cfg(Dataflow::InputStationary);
+        // IS: rows = K, cols = M, stream = N
+        let m = compute_model(&c, GemmShape::new(8, 8, 16));
+        assert_eq!(m.num_folds, 1);
+        assert_eq!(m.compute_cycles, 8 + (8 + 8 + 16 - 2));
+    }
+
+    #[test]
+    fn fold_counts_by_dataflow() {
+        let g = GemmShape::new(20, 17, 9);
+        let m_os = compute_model(&cfg(Dataflow::OutputStationary), g);
+        assert_eq!(m_os.fold_grid, (3, 2)); // ceil(20/8), ceil(9/8)
+        let m_ws = compute_model(&cfg(Dataflow::WeightStationary), g);
+        assert_eq!(m_ws.fold_grid, (3, 2)); // ceil(17/8), ceil(9/8)
+        let m_is = compute_model(&cfg(Dataflow::InputStationary), g);
+        assert_eq!(m_is.fold_grid, (3, 3)); // ceil(17/8), ceil(20/8)
+    }
+
+    #[test]
+    fn fold_class_multiplicities_sum() {
+        let g = GemmShape::new(100, 50, 60);
+        for df in [
+            Dataflow::OutputStationary,
+            Dataflow::WeightStationary,
+            Dataflow::InputStationary,
+        ] {
+            let m = compute_model(&cfg(df), g);
+            let total: u64 = m.fold_classes.iter().map(|(_, n)| n).sum();
+            assert_eq!(total, m.num_folds as u64, "{df}");
+        }
+    }
+
+    #[test]
+    fn ragged_fold_occupancy() {
+        let c = cfg(Dataflow::OutputStationary);
+        // 12x12 outputs on an 8x8 array: folds (2,2); corner fold is 4x4.
+        let m = compute_model(&c, GemmShape::new(12, 16, 12));
+        assert_eq!(m.num_folds, 4);
+        assert!(m.mapping_efficiency < 1.0);
+        assert!(m.mapping_efficiency > 0.5);
+        let corner = m
+            .fold_classes
+            .iter()
+            .find(|(f, _)| f.rows_used == 4 && f.cols_used == 4)
+            .expect("corner fold");
+        assert!((corner.0.occupancy(&c) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilisation_improves_with_size() {
+        let c = ScaleConfig::tpu_v4(); // 128x128 WS
+        let small = compute_model(&c, GemmShape::new(32, 32, 32));
+        let medium = compute_model(&c, GemmShape::new(512, 512, 512));
+        let large = compute_model(&c, GemmShape::new(4096, 4096, 4096));
+        assert!(small.compute_utilisation < medium.compute_utilisation);
+        assert!(medium.compute_utilisation < large.compute_utilisation);
+        assert!(large.compute_utilisation > 0.9);
+    }
+
+    #[test]
+    fn cycles_monotone_in_each_dim() {
+        let c = ScaleConfig::tpu_v4();
+        let base = compute_model(&c, GemmShape::new(256, 256, 256)).compute_cycles;
+        for g in [
+            GemmShape::new(512, 256, 256),
+            GemmShape::new(256, 512, 256),
+            GemmShape::new(256, 256, 512),
+        ] {
+            assert!(compute_model(&c, g).compute_cycles > base, "{g}");
+        }
+    }
+
+    #[test]
+    fn macs_conserved_in_utilisation() {
+        // utilisation * PEs * cycles must equal MACs exactly.
+        let c = cfg(Dataflow::WeightStationary);
+        let g = GemmShape::new(30, 23, 17);
+        let m = compute_model(&c, g);
+        let macs = m.compute_utilisation * c.peak_macs_per_cycle() * m.compute_cycles as f64;
+        assert!((macs - g.macs() as f64).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,181 @@
+//! Detailed DRAM interface model (SCALE-Sim v3 integrates Ramulator; this
+//! is the analytical equivalent — "Ramulator-lite").
+//!
+//! The flat words/cycle bandwidths in [`super::config::ScaleConfig`]
+//! assume perfectly streaming traffic. Real DRAM delivers that bandwidth
+//! only on row-buffer hits; row misses pay tRP+tRCD-class penalties. This
+//! module derives *effective* per-stream bandwidth from access pattern
+//! granularity (contiguous run length per request) and device timing, and
+//! can refine a [`SimReport`]'s stall estimate accordingly.
+
+use super::config::ScaleConfig;
+use super::report::SimReport;
+use super::topology::GemmShape;
+
+/// DRAM device/channel timing parameters (DDR4-3200-class defaults,
+/// normalised to core cycles at the config clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramParams {
+    /// Peak words/cycle per stream on row hits (matches ScaleConfig bw).
+    pub peak_words_per_cycle: f64,
+    /// Row-buffer (page) size in words.
+    pub row_words: usize,
+    /// Core cycles lost per row activation (precharge + activate).
+    pub row_miss_penalty_cycles: f64,
+    /// Fraction of row switches hidden by bank-level parallelism (0..1).
+    pub bank_parallel_hide: f64,
+}
+
+impl Default for DramParams {
+    fn default() -> Self {
+        DramParams {
+            peak_words_per_cycle: 256.0,
+            // 2 KiB page at 2 B/word.
+            row_words: 1024,
+            // ~45 ns at ~1 GHz core clock.
+            row_miss_penalty_cycles: 45.0,
+            // HBM-class interfaces have dozens of banks/channels; with
+            // streaming engines nearly all activations overlap transfer.
+            bank_parallel_hide: 0.99,
+        }
+    }
+}
+
+impl DramParams {
+    /// Effective bandwidth (words/cycle) for a stream whose contiguous
+    /// run length is `run_words`: each run of rows pays an exposed
+    /// activation penalty amortised over the run.
+    pub fn effective_bandwidth(&self, run_words: usize) -> f64 {
+        let run = run_words.max(1) as f64;
+        // Rows touched per run (at least one activation per run — runs
+        // are non-contiguous with each other by definition).
+        let rows = (run / self.row_words as f64).ceil();
+        let exposed = rows * self.row_miss_penalty_cycles * (1.0 - self.bank_parallel_hide);
+        let transfer = run / self.peak_words_per_cycle;
+        run / (transfer + exposed)
+    }
+
+    /// Efficiency vs peak for a run length.
+    pub fn efficiency(&self, run_words: usize) -> f64 {
+        self.effective_bandwidth(run_words) / self.peak_words_per_cycle
+    }
+}
+
+/// Contiguous run lengths (words per access burst) of the three operand
+/// streams for a GEMM under the config's dataflow, assuming row-major A,
+/// B, C in DRAM.
+///
+/// * A is streamed row by row: runs of K words.
+/// * B tiles are fetched row by row of the tile: runs of `min(N, array)`.
+/// * C is written row by row: runs of N words.
+pub fn stream_runs(config: &ScaleConfig, gemm: GemmShape) -> (usize, usize, usize) {
+    let a_run = gemm.k;
+    let b_run = gemm.n.min(config.array_cols);
+    let c_run = gemm.n;
+    (a_run, b_run, c_run)
+}
+
+/// A refined report: stall cycles recomputed with effective bandwidths.
+#[derive(Debug, Clone)]
+pub struct DramRefinedReport {
+    pub base: SimReport,
+    pub a_efficiency: f64,
+    pub b_efficiency: f64,
+    pub c_efficiency: f64,
+    pub refined_total_cycles: u64,
+}
+
+impl DramRefinedReport {
+    /// Extra cycles attributable to row-buffer behaviour.
+    pub fn dram_detail_penalty(&self) -> u64 {
+        self.refined_total_cycles
+            .saturating_sub(self.base.total_cycles())
+    }
+}
+
+/// Re-simulate `gemm` with per-stream effective bandwidths derived from
+/// the DRAM model, producing a refined total-cycle count.
+pub fn refine(config: &ScaleConfig, params: &DramParams, gemm: GemmShape) -> DramRefinedReport {
+    let (a_run, b_run, c_run) = stream_runs(config, gemm);
+    let a_eff = params.efficiency(a_run);
+    let b_eff = params.efficiency(b_run);
+    let c_eff = params.efficiency(c_run);
+
+    let mut refined_config = config.clone();
+    refined_config.ifmap_dram_bw = (config.ifmap_dram_bw * a_eff).max(1e-3);
+    refined_config.filter_dram_bw = (config.filter_dram_bw * b_eff).max(1e-3);
+    refined_config.ofmap_dram_bw = (config.ofmap_dram_bw * c_eff).max(1e-3);
+
+    let base = super::gemm::simulate_gemm(config, gemm);
+    let refined = super::gemm::simulate_gemm(&refined_config, gemm);
+
+    DramRefinedReport {
+        base,
+        a_efficiency: a_eff,
+        b_efficiency: b_eff,
+        c_efficiency: c_eff,
+        refined_total_cycles: refined.total_cycles(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_runs_reach_peak() {
+        let p = DramParams::default();
+        // A whole-row run: one activation amortised over 1024 words.
+        let eff = p.efficiency(1024 * 64);
+        assert!(eff > 0.85, "eff {eff}");
+    }
+
+    #[test]
+    fn short_runs_degrade() {
+        let p = DramParams::default();
+        let short = p.efficiency(32);
+        let long = p.efficiency(4096);
+        assert!(short < long);
+        assert!(short < 0.5, "short-run efficiency {short}");
+    }
+
+    #[test]
+    fn efficiency_monotone_in_run_length() {
+        let p = DramParams::default();
+        let mut prev = 0.0;
+        for run in [16usize, 64, 256, 1024, 8192] {
+            let e = p.efficiency(run);
+            assert!(e >= prev, "run {run}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn refine_never_speeds_up() {
+        let config = ScaleConfig::tpu_v4();
+        let p = DramParams::default();
+        for g in [
+            GemmShape::new(128, 128, 128),
+            GemmShape::new(1024, 64, 2048),
+            GemmShape::new(4096, 4096, 32),
+        ] {
+            let r = refine(&config, &p, g);
+            assert!(
+                r.refined_total_cycles >= r.base.total_cycles(),
+                "{g}: {} < {}",
+                r.refined_total_cycles,
+                r.base.total_cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn skinny_k_hurts_a_stream() {
+        // Short A runs (K = 32) degrade the A stream badly; wide K is fine.
+        let config = ScaleConfig::tpu_v4();
+        let p = DramParams::default();
+        let skinny = refine(&config, &p, GemmShape::new(2048, 32, 2048));
+        let wide = refine(&config, &p, GemmShape::new(2048, 2048, 2048));
+        assert!(skinny.a_efficiency < wide.a_efficiency);
+    }
+}

@@ -1,0 +1,236 @@
+//! SRAM double-buffering and DRAM bandwidth stall model.
+//!
+//! SCALE-Sim models each operand SRAM as a double buffer: while one half
+//! feeds the array, the other half is prefetched from DRAM. A fold stalls
+//! when its operands have not finished prefetching by the time the
+//! previous fold's compute completes. We simulate this fold-by-fold (fold
+//! classes are expanded lazily, so a 4096³ GEMM is still cheap) instead of
+//! generating per-cycle address traces; the resulting stall counts match
+//! the trace model whenever accesses are streaming, which systolic GEMM
+//! operands are.
+//!
+//! Demand per fold depends on the dataflow:
+//!
+//! * **WS** — stationary: a tile of B (rows×cols words); streamed: `M`
+//!   rows of A (stream_len × rows_used words); drained: stream_len ×
+//!   cols_used words of C (only on the last K-fold of an output tile;
+//!   partial sums otherwise spill to the ofmap SRAM).
+//! * **OS** — streamed: K × rows_used words of A and K × cols_used words
+//!   of B per fold; drained: rows_used × cols_used words of C.
+//! * **IS** — stationary: a tile of Aᵀ; streamed: N columns of B; drained:
+//!   stream_len × rows? (mirror of WS).
+
+use super::config::{Dataflow, ScaleConfig};
+use super::dataflow::{ComputeModel, FoldCost};
+use super::topology::GemmShape;
+
+/// DRAM traffic and stall summary for one GEMM execution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryModel {
+    /// Words read from DRAM for the A / ifmap operand.
+    pub ifmap_dram_reads: u64,
+    /// Words read from DRAM for the B / filter operand.
+    pub filter_dram_reads: u64,
+    /// Words written to DRAM for the C / ofmap operand.
+    pub ofmap_dram_writes: u64,
+    /// Stall cycles waiting on operand prefetch.
+    pub stall_cycles: u64,
+    /// Cycles of the initial (non-overlappable) prefetch.
+    pub initial_fill_cycles: u64,
+    /// True if each fold's working set fits one SRAM half-buffer.
+    pub fits_on_chip: bool,
+}
+
+impl MemoryModel {
+    pub fn total_dram_words(&self) -> u64 {
+        self.ifmap_dram_reads + self.filter_dram_reads + self.ofmap_dram_writes
+    }
+}
+
+/// Per-fold operand demand in words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FoldDemand {
+    ifmap_words: u64,
+    filter_words: u64,
+    ofmap_words: u64,
+}
+
+fn fold_demand(dataflow: Dataflow, fold: &FoldCost) -> FoldDemand {
+    let r = fold.rows_used as u64;
+    let c = fold.cols_used as u64;
+    let t = fold.stream_len as u64;
+    match dataflow {
+        // OS: A tile is rows×K, B tile is K×cols, C tile is rows×cols.
+        Dataflow::OutputStationary => FoldDemand {
+            ifmap_words: r * t,
+            filter_words: t * c,
+            ofmap_words: r * c,
+        },
+        // WS: stationary B tile rows×cols (K-rows × N-cols), streamed A is
+        // T(M) × rows(K) words, produced C is T(M) × cols(N) words.
+        Dataflow::WeightStationary => FoldDemand {
+            ifmap_words: t * r,
+            filter_words: r * c,
+            ofmap_words: t * c,
+        },
+        // IS: stationary A tile rows(K)×cols(M), streamed B is T(N) ×
+        // rows(K), produced C is cols(M) × T(N).
+        Dataflow::InputStationary => FoldDemand {
+            ifmap_words: r * c,
+            filter_words: t * r,
+            ofmap_words: c * t,
+        },
+    }
+}
+
+/// Simulate the double-buffered prefetch pipeline over the fold sequence.
+///
+/// The fold classes of [`ComputeModel`] are walked with multiplicity; all
+/// folds in a class are identical, so per-class arithmetic replaces the
+/// per-fold loop when the class is homogeneous (O(#classes), not
+/// O(#folds)).
+pub fn memory_model(
+    config: &ScaleConfig,
+    _gemm: GemmShape,
+    compute: &ComputeModel,
+) -> MemoryModel {
+    let mut out = MemoryModel {
+        fits_on_chip: true,
+        ..Default::default()
+    };
+
+    // Read bandwidth is shared per-operand (SCALE-Sim models separate
+    // interfaces); prefetch time of a fold is the max over operands.
+    let read_time = |d: &FoldDemand| -> u64 {
+        let t_if = (d.ifmap_words as f64 / config.ifmap_dram_bw).ceil() as u64;
+        let t_fl = (d.filter_words as f64 / config.filter_dram_bw).ceil() as u64;
+        t_if.max(t_fl)
+    };
+    let write_time =
+        |d: &FoldDemand| -> u64 { (d.ofmap_words as f64 / config.ofmap_dram_bw).ceil() as u64 };
+
+    // Half-buffer capacities in words.
+    let if_half = config.ifmap_half_words() as u64;
+    let fl_half = config.filter_half_words() as u64;
+    let of_half = config.ofmap_half_words() as u64;
+
+    let mut first = true;
+    for (fold, count) in &compute.fold_classes {
+        let demand = fold_demand(config.dataflow, fold);
+        out.ifmap_dram_reads += demand.ifmap_words * count;
+        out.filter_dram_reads += demand.filter_words * count;
+        out.ofmap_dram_writes += demand.ofmap_words * count;
+        if demand.ifmap_words > if_half
+            || demand.filter_words > fl_half
+            || demand.ofmap_words > of_half
+        {
+            out.fits_on_chip = false;
+        }
+
+        let t_read = read_time(&demand);
+        let t_write = write_time(&demand);
+        let t_compute = fold.total_cycles();
+
+        let mut remaining = *count;
+        if first {
+            // The very first fold's prefetch cannot be hidden.
+            out.initial_fill_cycles = t_read;
+            first = false;
+            remaining -= 1;
+        }
+        // Steady state: the next fold's prefetch (and the previous fold's
+        // writeback) overlap the current fold's compute. Stall per fold is
+        // the shortfall of compute time vs. the slower of read/write.
+        let t_mem = t_read.max(t_write);
+        let stall_per_fold = t_mem.saturating_sub(t_compute);
+        out.stall_cycles += stall_per_fold * remaining;
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::dataflow::compute_model;
+
+    fn cfg(df: Dataflow, bw: f64) -> ScaleConfig {
+        let mut c = ScaleConfig::tpu_v4();
+        c.array_rows = 8;
+        c.array_cols = 8;
+        c.dataflow = df;
+        c.ifmap_dram_bw = bw;
+        c.filter_dram_bw = bw;
+        c.ofmap_dram_bw = bw;
+        c
+    }
+
+    #[test]
+    fn traffic_counts_ws_single_fold() {
+        let c = cfg(Dataflow::WeightStationary, 100.0);
+        let g = GemmShape::new(16, 8, 8); // K=8 rows, N=8 cols, stream M=16
+        let cm = compute_model(&c, g);
+        let mm = memory_model(&c, g, &cm);
+        assert_eq!(mm.filter_dram_reads, 64); // full B
+        assert_eq!(mm.ifmap_dram_reads, 128); // full A
+        assert_eq!(mm.ofmap_dram_writes, 128); // full C
+        assert!(mm.fits_on_chip);
+    }
+
+    #[test]
+    fn traffic_counts_os_reuse() {
+        // OS refetches A per column-fold and B per row-fold.
+        let c = cfg(Dataflow::OutputStationary, 100.0);
+        let g = GemmShape::new(16, 4, 16); // fold grid (2, 2)
+        let cm = compute_model(&c, g);
+        let mm = memory_model(&c, g, &cm);
+        // A words = M*K = 64, streamed once per col fold (2) = 128.
+        assert_eq!(mm.ifmap_dram_reads, 128);
+        // B words = K*N = 64, once per row fold (2) = 128.
+        assert_eq!(mm.filter_dram_reads, 128);
+        // C written exactly once.
+        assert_eq!(mm.ofmap_dram_writes, 256);
+    }
+
+    #[test]
+    fn high_bandwidth_no_stall() {
+        let c = cfg(Dataflow::WeightStationary, 1000.0);
+        let g = GemmShape::new(64, 64, 64);
+        let cm = compute_model(&c, g);
+        let mm = memory_model(&c, g, &cm);
+        assert_eq!(mm.stall_cycles, 0);
+        assert!(mm.initial_fill_cycles > 0);
+    }
+
+    #[test]
+    fn low_bandwidth_stalls() {
+        let lo = cfg(Dataflow::WeightStationary, 0.5);
+        let hi = cfg(Dataflow::WeightStationary, 64.0);
+        let g = GemmShape::new(64, 64, 64);
+        let stall_lo = memory_model(&lo, g, &compute_model(&lo, g)).stall_cycles;
+        let stall_hi = memory_model(&hi, g, &compute_model(&hi, g)).stall_cycles;
+        assert!(stall_lo > stall_hi);
+        assert!(stall_lo > 0);
+    }
+
+    #[test]
+    fn oversized_fold_flagged() {
+        let mut c = cfg(Dataflow::WeightStationary, 10.0);
+        c.ifmap_sram_kb = 1; // 256 words per half at 2B words
+        let g = GemmShape::new(1024, 8, 8); // A stream demand = 1024*8 words
+        let cm = compute_model(&c, g);
+        let mm = memory_model(&c, g, &cm);
+        assert!(!mm.fits_on_chip);
+    }
+
+    #[test]
+    fn dram_words_scale_with_folds() {
+        let c = cfg(Dataflow::WeightStationary, 10.0);
+        let small = GemmShape::new(32, 32, 32);
+        let big = GemmShape::new(64, 64, 64);
+        let t_small =
+            memory_model(&c, small, &compute_model(&c, small)).total_dram_words();
+        let t_big = memory_model(&c, big, &compute_model(&c, big)).total_dram_words();
+        assert!(t_big > t_small * 4); // superlinear growth from refetch
+    }
+}

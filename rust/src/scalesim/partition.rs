@@ -1,0 +1,154 @@
+//! Multi-core spatio-temporal partitioning (SCALE-Sim v3 feature).
+//!
+//! A GEMM can be sharded across `P` systolic cores along M (row-parallel)
+//! or N (column-parallel); each core simulates its shard independently and
+//! the ensemble finishes when the slowest shard finishes. This module is
+//! used by the ablation benches and by the coordinator's multi-core mode.
+
+use super::config::ScaleConfig;
+use super::gemm::simulate_gemm;
+use super::report::SimReport;
+use super::topology::GemmShape;
+
+/// Which GEMM dimension is split across cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionAxis {
+    M,
+    N,
+}
+
+impl std::fmt::Display for PartitionAxis {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionAxis::M => f.write_str("M"),
+            PartitionAxis::N => f.write_str("N"),
+        }
+    }
+}
+
+/// Result of a multi-core run.
+#[derive(Debug, Clone)]
+pub struct PartitionedReport {
+    pub axis: PartitionAxis,
+    pub num_cores: usize,
+    /// Per-core shard reports (cores with an empty shard are omitted).
+    pub shards: Vec<SimReport>,
+    /// Makespan: cycles until the slowest core finishes.
+    pub makespan_cycles: u64,
+}
+
+impl PartitionedReport {
+    /// Aggregate DRAM traffic across all cores.
+    pub fn total_dram_words(&self) -> u64 {
+        self.shards.iter().map(|s| s.total_dram_words()).sum()
+    }
+
+    /// Parallel speedup vs. a single-core run of the full GEMM.
+    pub fn speedup_vs(&self, single: &SimReport) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        single.total_cycles() as f64 / self.makespan_cycles as f64
+    }
+}
+
+/// Split `dim` into `parts` near-equal chunks (first chunks get the
+/// remainder). Empty chunks are not produced when parts > dim.
+pub fn split_dim(dim: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    let parts = parts.min(dim.max(1));
+    let base = dim / parts;
+    let rem = dim % parts;
+    (0..parts)
+        .map(|i| base + usize::from(i < rem))
+        .filter(|&c| c > 0)
+        .collect()
+}
+
+/// Simulate `gemm` sharded across `num_cores` cores along `axis`.
+pub fn simulate_partitioned(
+    config: &ScaleConfig,
+    gemm: GemmShape,
+    num_cores: usize,
+    axis: PartitionAxis,
+) -> PartitionedReport {
+    assert!(num_cores > 0);
+    let chunks = match axis {
+        PartitionAxis::M => split_dim(gemm.m, num_cores),
+        PartitionAxis::N => split_dim(gemm.n, num_cores),
+    };
+    let shards: Vec<SimReport> = chunks
+        .iter()
+        .map(|&c| {
+            let shard = match axis {
+                PartitionAxis::M => GemmShape::new(c, gemm.k, gemm.n),
+                PartitionAxis::N => GemmShape::new(gemm.m, gemm.k, c),
+            };
+            simulate_gemm(config, shard)
+        })
+        .collect();
+    let makespan_cycles = shards.iter().map(|s| s.total_cycles()).max().unwrap_or(0);
+    PartitionedReport {
+        axis,
+        num_cores,
+        shards,
+        makespan_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_dim_properties() {
+        assert_eq!(split_dim(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_dim(9, 3), vec![3, 3, 3]);
+        assert_eq!(split_dim(2, 4), vec![1, 1]); // no empty shards
+        assert_eq!(split_dim(0, 2), Vec::<usize>::new());
+        // Sum is preserved.
+        for dim in [1usize, 7, 127, 4096] {
+            for parts in [1usize, 2, 3, 8] {
+                assert_eq!(split_dim(dim, parts).iter().sum::<usize>(), dim);
+            }
+        }
+    }
+
+    #[test]
+    fn partitioning_speeds_up_large_gemm() {
+        let c = ScaleConfig::tpu_v4();
+        let g = GemmShape::new(4096, 1024, 1024);
+        let single = simulate_gemm(&c, g);
+        let quad = simulate_partitioned(&c, g, 4, PartitionAxis::M);
+        let speedup = quad.speedup_vs(&single);
+        assert!(speedup > 2.0, "speedup {speedup}");
+        assert!(speedup <= 4.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn makespan_is_max_shard() {
+        let c = ScaleConfig::tpu_v4();
+        let g = GemmShape::new(100, 256, 256); // uneven split over 3
+        let p = simulate_partitioned(&c, g, 3, PartitionAxis::M);
+        let max = p.shards.iter().map(|s| s.total_cycles()).max().unwrap();
+        assert_eq!(p.makespan_cycles, max);
+    }
+
+    #[test]
+    fn axis_matters_for_skewed_shapes() {
+        let c = ScaleConfig::tpu_v4();
+        let g = GemmShape::new(8192, 512, 128); // tall-skinny: split M better
+        let pm = simulate_partitioned(&c, g, 4, PartitionAxis::M);
+        let pn = simulate_partitioned(&c, g, 4, PartitionAxis::N);
+        assert!(pm.makespan_cycles < pn.makespan_cycles);
+    }
+
+    #[test]
+    fn work_conserved_across_shards() {
+        let c = ScaleConfig::tpu_v4();
+        let g = GemmShape::new(1000, 300, 700);
+        let p = simulate_partitioned(&c, g, 5, PartitionAxis::N);
+        let shard_macs: u64 = p.shards.iter().map(|s| s.gemm.macs()).sum();
+        assert_eq!(shard_macs, g.macs());
+    }
+}

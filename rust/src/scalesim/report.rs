@@ -1,0 +1,162 @@
+//! Simulation result types.
+
+use super::config::{Dataflow, ScaleConfig};
+use super::topology::GemmShape;
+use crate::util::json::Json;
+
+/// Full result of simulating one GEMM (or one conv via im2col) on one core.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    pub config_name: String,
+    pub dataflow: Dataflow,
+    pub gemm: GemmShape,
+    /// Pure compute cycles (fills, streams, drains; no stalls).
+    pub compute_cycles: u64,
+    /// Stall cycles from DRAM bandwidth shortfall.
+    pub stall_cycles: u64,
+    /// Non-overlapped initial prefetch cycles.
+    pub initial_fill_cycles: u64,
+    /// Folds executed.
+    pub num_folds: usize,
+    /// Occupied-PE fraction during compute.
+    pub mapping_efficiency: f64,
+    /// Useful MACs / (PEs × total cycles).
+    pub utilisation: f64,
+    /// DRAM traffic in words.
+    pub ifmap_dram_reads: u64,
+    pub filter_dram_reads: u64,
+    pub ofmap_dram_writes: u64,
+    /// Whether every fold's working set fit a half buffer.
+    pub fits_on_chip: bool,
+    /// Clock used for the time estimate, MHz.
+    pub freq_mhz: f64,
+}
+
+impl SimReport {
+    /// Total cycles: initial fill + compute + stalls.
+    pub fn total_cycles(&self) -> u64 {
+        self.initial_fill_cycles + self.compute_cycles + self.stall_cycles
+    }
+
+    /// Uncalibrated time estimate: cycles at the configured clock.
+    pub fn raw_time_s(&self) -> f64 {
+        self.total_cycles() as f64 / (self.freq_mhz * 1e6)
+    }
+
+    pub fn raw_time_us(&self) -> f64 {
+        self.raw_time_s() * 1e6
+    }
+
+    /// Total DRAM traffic in words.
+    pub fn total_dram_words(&self) -> u64 {
+        self.ifmap_dram_reads + self.filter_dram_reads + self.ofmap_dram_writes
+    }
+
+    /// Achieved DRAM bandwidth, words/cycle.
+    pub fn achieved_bw_words_per_cycle(&self) -> f64 {
+        if self.total_cycles() == 0 {
+            return 0.0;
+        }
+        self.total_dram_words() as f64 / self.total_cycles() as f64
+    }
+
+    /// Effective TFLOP/s at the configured clock (2 flops per MAC).
+    pub fn effective_tflops(&self, config: &ScaleConfig) -> f64 {
+        let secs = self.raw_time_s();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        let _ = config;
+        2.0 * self.gemm.macs() as f64 / secs / 1e12
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("config", Json::Str(self.config_name.clone()))
+            .set("dataflow", Json::Str(self.dataflow.short().into()))
+            .set("m", Json::Num(self.gemm.m as f64))
+            .set("k", Json::Num(self.gemm.k as f64))
+            .set("n", Json::Num(self.gemm.n as f64))
+            .set("compute_cycles", Json::Num(self.compute_cycles as f64))
+            .set("stall_cycles", Json::Num(self.stall_cycles as f64))
+            .set(
+                "initial_fill_cycles",
+                Json::Num(self.initial_fill_cycles as f64),
+            )
+            .set("total_cycles", Json::Num(self.total_cycles() as f64))
+            .set("num_folds", Json::Num(self.num_folds as f64))
+            .set("mapping_efficiency", Json::Num(self.mapping_efficiency))
+            .set("utilisation", Json::Num(self.utilisation))
+            .set("ifmap_dram_reads", Json::Num(self.ifmap_dram_reads as f64))
+            .set(
+                "filter_dram_reads",
+                Json::Num(self.filter_dram_reads as f64),
+            )
+            .set(
+                "ofmap_dram_writes",
+                Json::Num(self.ofmap_dram_writes as f64),
+            )
+            .set("fits_on_chip", Json::Bool(self.fits_on_chip))
+            .set("raw_time_us", Json::Num(self.raw_time_us()));
+        o
+    }
+}
+
+impl std::fmt::Display for SimReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}] cycles={} (compute={} stall={} fill={}) folds={} util={:.1}% map_eff={:.1}% dram={}w time={:.2}us",
+            self.gemm,
+            self.dataflow,
+            self.total_cycles(),
+            self.compute_cycles,
+            self.stall_cycles,
+            self.initial_fill_cycles,
+            self.num_folds,
+            self.utilisation * 100.0,
+            self.mapping_efficiency * 100.0,
+            self.total_dram_words(),
+            self.raw_time_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> SimReport {
+        SimReport {
+            config_name: "t".into(),
+            dataflow: Dataflow::WeightStationary,
+            gemm: GemmShape::new(128, 128, 128),
+            compute_cycles: 1000,
+            stall_cycles: 100,
+            initial_fill_cycles: 10,
+            num_folds: 1,
+            mapping_efficiency: 1.0,
+            utilisation: 0.8,
+            ifmap_dram_reads: 16384,
+            filter_dram_reads: 16384,
+            ofmap_dram_writes: 16384,
+            fits_on_chip: true,
+            freq_mhz: 1000.0,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let r = report();
+        assert_eq!(r.total_cycles(), 1110);
+        assert!((r.raw_time_us() - 1.11).abs() < 1e-9);
+        assert_eq!(r.total_dram_words(), 3 * 16384);
+    }
+
+    #[test]
+    fn json_has_fields() {
+        let j = report().to_json();
+        assert_eq!(j.req_f64("total_cycles").unwrap(), 1110.0);
+        assert_eq!(j.req_str("dataflow").unwrap(), "WS");
+    }
+}

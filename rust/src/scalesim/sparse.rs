@@ -1,0 +1,174 @@
+//! Sparse GEMM support (SCALE-Sim v3 lists sparse matrix multiplication
+//! among its extensions).
+//!
+//! Model: structured sparsity with density d ∈ (0, 1] on either operand.
+//! The array skips zero-operand MACs at `gating` efficiency (1.0 = ideal
+//! clock-gating: skipped MACs cost no time; 0.0 = dense timing, energy
+//! savings only). Operand fetch traffic shrinks with the stored density
+//! (compressed formats), while the produced output stays dense.
+
+use super::config::ScaleConfig;
+use super::gemm::simulate_gemm;
+use super::report::SimReport;
+use super::topology::GemmShape;
+
+/// Sparsity descriptor for one GEMM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sparsity {
+    /// Fraction of nonzeros in A (1.0 = dense).
+    pub a_density: f64,
+    /// Fraction of nonzeros in B.
+    pub b_density: f64,
+    /// Fraction of the skippable time actually saved (0..1).
+    pub gating_efficiency: f64,
+}
+
+impl Sparsity {
+    pub fn dense() -> Sparsity {
+        Sparsity {
+            a_density: 1.0,
+            b_density: 1.0,
+            gating_efficiency: 0.0,
+        }
+    }
+
+    /// 2:4 structured sparsity on the weight operand, ideal gating.
+    pub fn two_four_weights() -> Sparsity {
+        Sparsity {
+            a_density: 1.0,
+            b_density: 0.5,
+            gating_efficiency: 1.0,
+        }
+    }
+
+    pub fn validate(&self) -> bool {
+        (0.0..=1.0).contains(&self.gating_efficiency)
+            && self.a_density > 0.0
+            && self.a_density <= 1.0
+            && self.b_density > 0.0
+            && self.b_density <= 1.0
+    }
+
+    /// Fraction of MACs with both operands nonzero (independence
+    /// assumption).
+    pub fn effective_mac_fraction(&self) -> f64 {
+        self.a_density * self.b_density
+    }
+}
+
+/// Sparse simulation result: the dense report plus sparse-adjusted
+/// totals.
+#[derive(Debug, Clone)]
+pub struct SparseReport {
+    pub dense: SimReport,
+    pub sparsity: Sparsity,
+    pub effective_cycles: u64,
+    pub effective_macs: u64,
+    /// DRAM words after compressed operand storage.
+    pub effective_dram_words: u64,
+}
+
+impl SparseReport {
+    pub fn speedup(&self) -> f64 {
+        if self.effective_cycles == 0 {
+            return 0.0;
+        }
+        self.dense.total_cycles() as f64 / self.effective_cycles as f64
+    }
+}
+
+/// Simulate a GEMM with sparsity on top of the dense fold model.
+pub fn simulate_sparse(config: &ScaleConfig, gemm: GemmShape, sp: Sparsity) -> SparseReport {
+    assert!(sp.validate(), "invalid sparsity {sp:?}");
+    let dense = simulate_gemm(config, gemm);
+
+    // Compute time: only the streaming phases shrink (fills/drains and
+    // stalls are structural). Approximate the streaming share by the
+    // compute fraction attributable to MACs.
+    let mac_fraction = sp.effective_mac_fraction();
+    let saveable = dense.compute_cycles as f64;
+    let saved = saveable * (1.0 - mac_fraction) * sp.gating_efficiency;
+    let effective_cycles =
+        (dense.total_cycles() as f64 - saved).max(1.0).round() as u64;
+
+    let effective_macs = (gemm.macs() as f64 * mac_fraction).round() as u64;
+    let effective_dram_words = ((dense.ifmap_dram_reads as f64 * sp.a_density)
+        + (dense.filter_dram_reads as f64 * sp.b_density)
+        + dense.ofmap_dram_writes as f64)
+        .round() as u64;
+
+    SparseReport {
+        dense,
+        sparsity: sp,
+        effective_cycles,
+        effective_macs,
+        effective_dram_words,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ScaleConfig {
+        ScaleConfig::tpu_v4()
+    }
+
+    #[test]
+    fn dense_sparsity_is_identity() {
+        let g = GemmShape::new(512, 512, 512);
+        let r = simulate_sparse(&cfg(), g, Sparsity::dense());
+        assert_eq!(r.effective_cycles, r.dense.total_cycles());
+        assert_eq!(r.effective_macs, g.macs());
+        assert!((r.speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_four_weights_speedup() {
+        let g = GemmShape::new(1024, 1024, 1024);
+        let r = simulate_sparse(&cfg(), g, Sparsity::two_four_weights());
+        // 50% of MACs skipped with ideal gating on a compute-dominated
+        // GEMM → between 1.3x and 2x.
+        let s = r.speedup();
+        assert!(s > 1.3 && s <= 2.0, "speedup {s}");
+        assert_eq!(r.effective_macs, g.macs() / 2);
+        // B traffic halves, A and C unchanged.
+        assert!(r.effective_dram_words < r.dense.total_dram_words());
+    }
+
+    #[test]
+    fn gating_efficiency_interpolates() {
+        let g = GemmShape::new(512, 512, 512);
+        let mk = |e| {
+            simulate_sparse(
+                &cfg(),
+                g,
+                Sparsity {
+                    a_density: 0.5,
+                    b_density: 0.5,
+                    gating_efficiency: e,
+                },
+            )
+            .effective_cycles
+        };
+        let none = mk(0.0);
+        let half = mk(0.5);
+        let full = mk(1.0);
+        assert!(full < half && half < none);
+        assert_eq!(none, simulate_gemm(&cfg(), g).total_cycles());
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_density_rejected() {
+        simulate_sparse(
+            &cfg(),
+            GemmShape::new(8, 8, 8),
+            Sparsity {
+                a_density: 0.0,
+                b_density: 1.0,
+                gating_efficiency: 1.0,
+            },
+        );
+    }
+}

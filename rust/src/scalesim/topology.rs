@@ -1,0 +1,328 @@
+//! Workload topology descriptors: GEMM and convolution layers, plus the
+//! legacy SCALE-Sim CSV topology format and the im2col lowering that turns
+//! a convolution into a GEMM.
+
+use anyhow::{bail, Context, Result};
+
+/// A GEMM workload C[M,N] = A[M,K] × B[K,N].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { m, k, n }
+    }
+
+    /// Total multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Operand word counts (A, B, C).
+    pub fn a_words(&self) -> u64 {
+        self.m as u64 * self.k as u64
+    }
+
+    pub fn b_words(&self) -> u64 {
+        self.k as u64 * self.n as u64
+    }
+
+    pub fn c_words(&self) -> u64 {
+        self.m as u64 * self.n as u64
+    }
+
+    pub fn valid(&self) -> bool {
+        self.m > 0 && self.k > 0 && self.n > 0
+    }
+}
+
+impl std::fmt::Display for GemmShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GEMM {}x{}x{} (MxKxN)", self.m, self.k, self.n)
+    }
+}
+
+/// A 2D convolution layer in the classic SCALE-Sim topology format.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: String,
+    pub ifmap_h: usize,
+    pub ifmap_w: usize,
+    pub filter_h: usize,
+    pub filter_w: usize,
+    pub channels: usize,
+    pub num_filters: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+}
+
+impl ConvLayer {
+    /// Output feature-map height (valid padding, as SCALE-Sim assumes).
+    pub fn out_h(&self) -> usize {
+        if self.ifmap_h < self.filter_h {
+            0
+        } else {
+            (self.ifmap_h - self.filter_h) / self.stride_h + 1
+        }
+    }
+
+    pub fn out_w(&self) -> usize {
+        if self.ifmap_w < self.filter_w {
+            0
+        } else {
+            (self.ifmap_w - self.filter_w) / self.stride_w + 1
+        }
+    }
+
+    /// im2col lowering: each output pixel is a GEMM row, each filter a
+    /// column, and the contraction runs over the filter window × channels.
+    ///
+    ///   M = out_h · out_w
+    ///   K = filter_h · filter_w · channels
+    ///   N = num_filters
+    pub fn to_gemm(&self) -> GemmShape {
+        GemmShape {
+            m: self.out_h() * self.out_w(),
+            k: self.filter_h * self.filter_w * self.channels,
+            n: self.num_filters,
+        }
+    }
+
+    /// Total MACs for the convolution (equals the im2col GEMM's MACs).
+    pub fn macs(&self) -> u64 {
+        self.to_gemm().macs()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.ifmap_h == 0 || self.ifmap_w == 0 {
+            bail!("layer {}: ifmap dims must be positive", self.name);
+        }
+        if self.filter_h == 0 || self.filter_w == 0 {
+            bail!("layer {}: filter dims must be positive", self.name);
+        }
+        if self.filter_h > self.ifmap_h || self.filter_w > self.ifmap_w {
+            bail!("layer {}: filter larger than ifmap", self.name);
+        }
+        if self.channels == 0 || self.num_filters == 0 {
+            bail!("layer {}: channels/filters must be positive", self.name);
+        }
+        if self.stride_h == 0 || self.stride_w == 0 {
+            bail!("layer {}: strides must be positive", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// A workload layer: either a raw GEMM or a convolution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Gemm { name: String, shape: GemmShape },
+    Conv(ConvLayer),
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Gemm { name, .. } => name,
+            Layer::Conv(c) => &c.name,
+        }
+    }
+
+    /// The GEMM this layer maps to on the systolic array.
+    pub fn as_gemm(&self) -> GemmShape {
+        match self {
+            Layer::Gemm { shape, .. } => *shape,
+            Layer::Conv(c) => c.to_gemm(),
+        }
+    }
+}
+
+/// A named sequence of layers (one network).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Topology {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Topology {
+    /// Parse the legacy SCALE-Sim CSV topology format.
+    ///
+    /// Conv rows: `name, ifmap_h, ifmap_w, filt_h, filt_w, channels,
+    /// num_filters, stride,` — GEMM rows (v3 "gemm" topologies):
+    /// `name, M, K, N,`. A header line is skipped if present.
+    pub fn parse_csv(name: &str, text: &str) -> Result<Topology> {
+        let mut layers = Vec::new();
+        let mut header_allowed = true;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cells: Vec<&str> = line
+                .split(',')
+                .map(str::trim)
+                .filter(|c| !c.is_empty())
+                .collect();
+            if cells.is_empty() {
+                continue;
+            }
+            // One header row may lead the file (second cell not numeric);
+            // later non-numeric rows are data errors, not headers.
+            if cells.len() >= 2 && cells[1].parse::<usize>().is_err() {
+                if header_allowed {
+                    header_allowed = false;
+                    continue;
+                }
+                bail!("line {}: non-numeric cell '{}'", lineno + 1, cells[1]);
+            }
+            header_allowed = false;
+            let parse = |i: usize| -> Result<usize> {
+                cells
+                    .get(i)
+                    .with_context(|| format!("line {}: missing column {}", lineno + 1, i))?
+                    .parse::<usize>()
+                    .with_context(|| format!("line {}: bad integer '{}'", lineno + 1, cells[i]))
+            };
+            match cells.len() {
+                4 => {
+                    let shape = GemmShape::new(parse(1)?, parse(2)?, parse(3)?);
+                    if !shape.valid() {
+                        bail!("line {}: GEMM dims must be positive", lineno + 1);
+                    }
+                    layers.push(Layer::Gemm {
+                        name: cells[0].to_string(),
+                        shape,
+                    });
+                }
+                8 | 9 => {
+                    let layer = ConvLayer {
+                        name: cells[0].to_string(),
+                        ifmap_h: parse(1)?,
+                        ifmap_w: parse(2)?,
+                        filter_h: parse(3)?,
+                        filter_w: parse(4)?,
+                        channels: parse(5)?,
+                        num_filters: parse(6)?,
+                        stride_h: parse(7)?,
+                        stride_w: if cells.len() == 9 { parse(8)? } else { parse(7)? },
+                    };
+                    layer.validate()?;
+                    layers.push(Layer::Conv(layer));
+                }
+                nc => bail!("line {}: expected 4 (GEMM) or 8/9 (conv) columns, got {nc}", lineno + 1),
+            }
+        }
+        Ok(Topology {
+            name: name.to_string(),
+            layers,
+        })
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.as_gemm().macs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_counts() {
+        let g = GemmShape::new(4, 5, 6);
+        assert_eq!(g.macs(), 120);
+        assert_eq!(g.a_words(), 20);
+        assert_eq!(g.b_words(), 30);
+        assert_eq!(g.c_words(), 24);
+    }
+
+    #[test]
+    fn conv_output_dims_and_im2col() {
+        // Classic 3x3 stride-1 conv on 32x32x16 with 64 filters.
+        let c = ConvLayer {
+            name: "c1".into(),
+            ifmap_h: 32,
+            ifmap_w: 32,
+            filter_h: 3,
+            filter_w: 3,
+            channels: 16,
+            num_filters: 64,
+            stride_h: 1,
+            stride_w: 1,
+        };
+        assert_eq!(c.out_h(), 30);
+        assert_eq!(c.out_w(), 30);
+        let g = c.to_gemm();
+        assert_eq!(g, GemmShape::new(900, 144, 64));
+        assert_eq!(c.macs(), 900 * 144 * 64);
+    }
+
+    #[test]
+    fn conv_strided() {
+        let c = ConvLayer {
+            name: "c2".into(),
+            ifmap_h: 224,
+            ifmap_w: 224,
+            filter_h: 7,
+            filter_w: 7,
+            channels: 3,
+            num_filters: 64,
+            stride_h: 2,
+            stride_w: 2,
+        };
+        // (224-7)/2+1 = 109
+        assert_eq!(c.out_h(), 109);
+        assert_eq!(c.out_w(), 109);
+    }
+
+    #[test]
+    fn csv_conv_rows() {
+        let text = "Layer name, IFMAP H, IFMAP W, Filt H, Filt W, Channels, Num Filters, Stride,\n\
+                    conv1, 224, 224, 7, 7, 3, 64, 2,\n\
+                    conv2, 56, 56, 3, 3, 64, 64, 1,\n";
+        let topo = Topology::parse_csv("resnet_head", text).unwrap();
+        assert_eq!(topo.layers.len(), 2);
+        assert_eq!(topo.layers[0].name(), "conv1");
+        match &topo.layers[1] {
+            Layer::Conv(c) => assert_eq!(c.channels, 64),
+            _ => panic!("expected conv"),
+        }
+    }
+
+    #[test]
+    fn csv_gemm_rows() {
+        let text = "name, M, K, N\nffn1, 512, 768, 3072,\n";
+        let topo = Topology::parse_csv("ffn", text).unwrap();
+        assert_eq!(topo.layers.len(), 1);
+        assert_eq!(topo.layers[0].as_gemm(), GemmShape::new(512, 768, 3072));
+    }
+
+    #[test]
+    fn csv_bad_rows_fail() {
+        assert!(Topology::parse_csv("x", "a, 1, 2\n").is_err()); // 3 cols
+        assert!(Topology::parse_csv("x", "a, 0, 2, 3\n").is_err()); // zero dim
+        assert!(Topology::parse_csv("x", "c, 8, 8, 9, 9, 1, 1, 1,\n").is_err()); // filter > ifmap
+    }
+
+    #[test]
+    fn topology_total_macs() {
+        let topo = Topology {
+            name: "t".into(),
+            layers: vec![
+                Layer::Gemm {
+                    name: "g1".into(),
+                    shape: GemmShape::new(2, 3, 4),
+                },
+                Layer::Gemm {
+                    name: "g2".into(),
+                    shape: GemmShape::new(1, 1, 1),
+                },
+            ],
+        };
+        assert_eq!(topo.total_macs(), 25);
+    }
+}

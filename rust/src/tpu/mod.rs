@@ -1,0 +1,21 @@
+//! Measurement substrate: the "TPU v4" the experiments measure against.
+//!
+//! Two interchangeable [`traits::Hardware`] backends (see DESIGN.md
+//! §Hardware-substitution):
+//!
+//! * [`model::TpuV4Model`] — synthetic TPU-v4 device model (default);
+//!   deterministic physics + per-shape compiler effects + run-to-run
+//!   noise, built to reproduce the paper's three GEMM regimes and the
+//!   elementwise scaling/fluctuation structure.
+//! * [`pjrt_hw::PjrtHardware`] — times real kernel executions on the PJRT
+//!   CPU client via [`crate::runtime`].
+
+pub mod model;
+pub mod pjrt_hw;
+pub mod traits;
+pub mod vpu;
+
+pub use model::{MxuParams, TpuV4Model};
+pub use pjrt_hw::PjrtHardware;
+pub use traits::{measure_ew_median, measure_gemm_median, Hardware};
+pub use vpu::VpuParams;

@@ -1,0 +1,240 @@
+//! Synthetic TPU-v4 device model — the hardware substitute for the
+//! paper's measurements (DESIGN.md §Hardware-substitution).
+//!
+//! GEMM path: a 128×128 bf16 MXU at 940 MHz.
+//!
+//! * Weight tiles are 128×128; activations stream in (8,128)-padded rows.
+//!   Per weight tile: load (128 cycles, overlapped in steady state) +
+//!   `M_pad` streaming cycles + pipeline fill/drain (≈ 2×128). The fill/
+//!   drain term dominates the *small* regime — exactly the paper's
+//!   description of that regime.
+//! * HBM roofline on the operand footprint caps throughput for
+//!   bandwidth-starved shapes.
+//! * In the *large* regime the XLA compiler's tiling/layout choices add a
+//!   deterministic per-shape factor (hash-keyed), reproducing the extra
+//!   variance the paper attributes to "compiler tiling decisions, layout
+//!   transformations, and limits on memory bandwidth".
+//! * A fixed dispatch overhead plus lognormal run-to-run noise completes
+//!   the measurement model; the regression harness takes medians exactly
+//!   like the paper.
+
+use crate::frontend::classify::EwKind;
+use crate::scalesim::topology::GemmShape;
+use crate::util::prng::{hash_dims, Prng};
+
+use super::traits::Hardware;
+use super::vpu::{latency_us as vpu_latency_us, VpuParams};
+
+/// GEMM-path constants.
+#[derive(Debug, Clone)]
+pub struct MxuParams {
+    pub clock_ghz: f64,
+    /// Systolic array side.
+    pub array: usize,
+    /// Activation row granularity (sublane padding).
+    pub row_pad: usize,
+    /// Pipeline fill+drain cycles per weight tile.
+    pub fill_drain_cycles: f64,
+    /// Weight-tile load cycles (non-overlapped fraction).
+    pub tile_load_cycles: f64,
+    /// Fixed kernel dispatch overhead, µs.
+    pub dispatch_overhead_us: f64,
+    /// Per-shape overhead scatter amplitude, µs.
+    pub overhead_jitter_us: f64,
+    /// HBM bandwidth, bytes/µs.
+    pub hbm_bytes_per_us: f64,
+    pub bytes_per_elem: f64,
+    /// Amplitude of the large-regime compiler-tiling factor.
+    pub tiling_jitter_large: f64,
+    /// Amplitude of the medium-regime fusion-choice factor.
+    pub tiling_jitter_medium: f64,
+    /// Amplitude of the per-shape scheduling jitter (all regimes).
+    pub shape_jitter: f64,
+    /// Lognormal run-to-run noise sigma.
+    pub noise_sigma: f64,
+}
+
+impl Default for MxuParams {
+    fn default() -> Self {
+        MxuParams {
+            clock_ghz: 0.940,
+            array: 128,
+            row_pad: 8,
+            fill_drain_cycles: 256.0,
+            tile_load_cycles: 32.0,
+            dispatch_overhead_us: 2.0,
+            overhead_jitter_us: 0.15,
+            hbm_bytes_per_us: 1.2e6,
+            bytes_per_elem: 2.0,
+            tiling_jitter_large: 0.10,
+            tiling_jitter_medium: 0.12,
+            shape_jitter: 0.05,
+            noise_sigma: 0.015,
+        }
+    }
+}
+
+/// The synthetic device: MXU + VPU + noise stream.
+pub struct TpuV4Model {
+    pub mxu: MxuParams,
+    pub vpu: VpuParams,
+    prng: Prng,
+}
+
+impl TpuV4Model {
+    pub fn new(seed: u64) -> TpuV4Model {
+        TpuV4Model {
+            mxu: MxuParams::default(),
+            vpu: VpuParams::default(),
+            prng: Prng::new(seed),
+        }
+    }
+
+    /// Noise-free GEMM kernel time, µs. Deterministic in the shape.
+    pub fn gemm_latency_noise_free_us(&self, g: GemmShape) -> f64 {
+        let p = &self.mxu;
+        let kt = g.k.div_ceil(p.array) as f64;
+        let nt = g.n.div_ceil(p.array) as f64;
+        let m_pad = g.m.div_ceil(p.row_pad) as f64 * p.row_pad as f64;
+        // Average occupied rows/cols per weight tile (ragged edges pull
+        // the mean below the full 128).
+        let k_used = g.k as f64 / kt;
+        let n_used = g.n as f64 / nt;
+
+        // Compute: per weight tile, stream M_pad activation rows through
+        // a pipeline whose fill/drain skew tracks the occupied rows+cols.
+        let per_tile = m_pad + k_used + n_used + p.fill_drain_cycles + p.tile_load_cycles;
+        let cycles = kt * nt * per_tile;
+        let compute_us = cycles / (p.clock_ghz * 1e3);
+
+        // HBM roofline over operand + result footprints.
+        let bytes =
+            (g.a_words() + g.b_words() + g.c_words()) as f64 * p.bytes_per_elem;
+        let mem_us = bytes / p.hbm_bytes_per_us;
+
+        // Per-shape compiler effects (deterministic, hash-keyed): the
+        // large regime pays an extra tiling/layout factor (the paper's
+        // "compiler tiling decisions"), the medium regime a smaller
+        // fusion-choice factor — which is what keeps its Fig. 2 R² near
+        // but not at 1, and drives Fig. 4's mid-range deviations.
+        let h = hash_dims(&[g.m, g.k, g.n]);
+        let frac = (h >> 16) as f64 / (1u64 << 48) as f64; // [0, 1)
+        let maxdim = g.m.max(g.k).max(g.n);
+        let tiling = if maxdim > 1024 {
+            1.0 + p.tiling_jitter_large * frac
+        } else if maxdim > 128 {
+            1.0 + p.tiling_jitter_medium * frac
+        } else {
+            1.0
+        };
+        let jitter = 1.0 + p.shape_jitter * (((h >> 8) & 0xffff) as f64 / 65536.0 - 0.5) * 2.0;
+
+        // Dispatch overhead with a per-shape component: at small sizes
+        // this scatter is what limits the paper's small-regime R² (0.79).
+        let frac2 = ((h >> 32) & 0xffff) as f64 / 65536.0;
+        let overhead = p.dispatch_overhead_us + p.overhead_jitter_us * frac2;
+
+        overhead + compute_us.max(mem_us) * tiling * jitter
+    }
+
+    /// Noise-free elementwise kernel time, µs.
+    pub fn ew_latency_noise_free_us(&self, kind: EwKind, dims: &[usize]) -> f64 {
+        vpu_latency_us(&self.vpu, kind, dims)
+    }
+}
+
+impl Hardware for TpuV4Model {
+    fn name(&self) -> &str {
+        "tpu_v4_model"
+    }
+
+    fn gemm_latency_us(&mut self, gemm: GemmShape) -> f64 {
+        let t = self.gemm_latency_noise_free_us(gemm);
+        t * self.prng.lognormal_factor(self.mxu.noise_sigma)
+    }
+
+    fn elementwise_latency_us(&mut self, kind: EwKind, dims: &[usize]) -> f64 {
+        let t = self.ew_latency_noise_free_us(kind, dims);
+        // Elementwise kernels are shorter; relative noise is a bit higher.
+        t * self.prng.lognormal_factor(self.mxu.noise_sigma * 1.4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::{simulate_gemm, ScaleConfig};
+    use crate::util::stats;
+
+    #[test]
+    fn gemm_latency_monotone_in_each_dim() {
+        let hw = TpuV4Model::new(1);
+        let base = hw.gemm_latency_noise_free_us(GemmShape::new(512, 512, 512));
+        for g in [
+            GemmShape::new(2048, 512, 512),
+            GemmShape::new(512, 2048, 512),
+            GemmShape::new(512, 512, 2048),
+        ] {
+            // Jitter is ±5%, growth is ≥ ~3x: strictly larger.
+            assert!(hw.gemm_latency_noise_free_us(g) > base, "{g}");
+        }
+    }
+
+    #[test]
+    fn small_regime_overhead_dominated() {
+        let hw = TpuV4Model::new(1);
+        let t = hw.gemm_latency_noise_free_us(GemmShape::new(32, 32, 32));
+        assert!(t > hw.mxu.dispatch_overhead_us);
+        assert!(t < hw.mxu.dispatch_overhead_us * 2.0);
+    }
+
+    #[test]
+    fn large_gemm_sensible_tflops() {
+        // 4096^3 bf16 on a 128x128 MXU @940MHz: peak = 2*128*128*0.94e9
+        //  ≈ 30.8 TFLOP/s. The model should land within [25%, 100%] of peak.
+        let hw = TpuV4Model::new(1);
+        let g = GemmShape::new(4096, 4096, 4096);
+        let t_us = hw.gemm_latency_noise_free_us(g);
+        let tflops = 2.0 * g.macs() as f64 / (t_us * 1e-6) / 1e12;
+        assert!(tflops > 7.0 && tflops < 31.0, "tflops {tflops}");
+    }
+
+    #[test]
+    fn noise_is_small_and_multiplicative() {
+        let mut hw = TpuV4Model::new(7);
+        let g = GemmShape::new(512, 512, 512);
+        let clean = hw.gemm_latency_noise_free_us(g);
+        let samples: Vec<f64> = (0..200).map(|_| hw.gemm_latency_us(g)).collect();
+        let med = stats::median(&samples);
+        assert!((med / clean - 1.0).abs() < 0.01, "median drift");
+        let spread = stats::stddev(&samples) / med;
+        assert!(spread > 0.005 && spread < 0.05, "spread {spread}");
+    }
+
+    #[test]
+    fn correlates_with_scalesim_cycles_medium() {
+        // The core premise of Fig. 2: simulated cycles and device latency
+        // are strongly linearly related in the medium regime.
+        let hw = TpuV4Model::new(1);
+        let cfg = ScaleConfig::tpu_v4();
+        let mut cycles = Vec::new();
+        let mut times = Vec::new();
+        for d in (128..=1024).step_by(128) {
+            let g = GemmShape::new(d, 512, 512);
+            cycles.push(simulate_gemm(&cfg, g).total_cycles() as f64);
+            times.push(hw.gemm_latency_noise_free_us(g));
+        }
+        let r = stats::pearson(&cycles, &times);
+        assert!(r > 0.97, "pearson {r}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = TpuV4Model::new(9);
+        let mut b = TpuV4Model::new(9);
+        let g = GemmShape::new(256, 256, 256);
+        for _ in 0..10 {
+            assert_eq!(a.gemm_latency_us(g), b.gemm_latency_us(g));
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT-backed measurement backend: times *real* kernel executions on the
+//! PJRT CPU client. The numbers are CPU-shaped rather than TPU-shaped,
+//! but the entire measure → calibrate → predict pipeline is identical to
+//! the synthetic backend, which is the point: `--hardware pjrt` re-runs
+//! any experiment against genuine executions.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::frontend::classify::EwKind;
+use crate::runtime::{f32_literal, hlo_gen, Executable, Runtime};
+use crate::scalesim::topology::GemmShape;
+
+use super::traits::Hardware;
+
+/// Keys for the executable cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum KernelKey {
+    Gemm(GemmShape),
+    Ew(EwKind, Vec<usize>),
+}
+
+/// Hardware backend that compiles+caches micro-kernels via PJRT and times
+/// their execution.
+pub struct PjrtHardware {
+    runtime: Runtime,
+    cache: HashMap<KernelKey, (Executable, Vec<xla::Literal>)>,
+    /// Warmup runs per fresh executable.
+    pub warmup: usize,
+}
+
+impl PjrtHardware {
+    pub fn new() -> Result<PjrtHardware> {
+        Ok(PjrtHardware {
+            runtime: Runtime::cpu()?,
+            cache: HashMap::new(),
+            warmup: 1,
+        })
+    }
+
+    fn ensure_gemm(&mut self, g: GemmShape) -> Result<&(Executable, Vec<xla::Literal>)> {
+        let key = KernelKey::Gemm(g);
+        if !self.cache.contains_key(&key) {
+            let exe = self
+                .runtime
+                .compile_text(&format!("gemm_{g}"), &hlo_gen::gemm_hlo(g.m, g.k, g.n))?;
+            let a = f32_literal(&[g.m, g.k], |i| ((i % 7) as f32) * 0.25)?;
+            let b = f32_literal(&[g.k, g.n], |i| ((i % 5) as f32) * 0.5)?;
+            let _ = exe.time_us(&[a.clone(), b.clone()], self.warmup, 1)?;
+            self.cache.insert(key.clone(), (exe, vec![a, b]));
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    fn ensure_ew(
+        &mut self,
+        kind: EwKind,
+        dims: &[usize],
+    ) -> Result<&(Executable, Vec<xla::Literal>)> {
+        let key = KernelKey::Ew(kind, dims.to_vec());
+        if !self.cache.contains_key(&key) {
+            let (text, nargs) = match kind {
+                EwKind::Add => (hlo_gen::binary_ew_hlo("add", dims), 2),
+                EwKind::Subtract => (hlo_gen::binary_ew_hlo("subtract", dims), 2),
+                EwKind::Multiply => (hlo_gen::binary_ew_hlo("multiply", dims), 2),
+                EwKind::Divide => (hlo_gen::binary_ew_hlo("divide", dims), 2),
+                EwKind::Minimum => (hlo_gen::binary_ew_hlo("minimum", dims), 2),
+                // ReLU: maximum against broadcast zero (like the compiler).
+                EwKind::Maximum => (hlo_gen::relu_hlo(dims), 1),
+                EwKind::Exp => (hlo_gen::unary_ew_hlo("exponential", dims), 1),
+                EwKind::Tanh => (hlo_gen::unary_ew_hlo("tanh", dims), 1),
+                EwKind::Sqrt => (hlo_gen::unary_ew_hlo("sqrt", dims), 1),
+                EwKind::Rsqrt => (hlo_gen::unary_ew_hlo("rsqrt", dims), 1),
+                EwKind::Log => (hlo_gen::unary_ew_hlo("log", dims), 1),
+                EwKind::Negate => (hlo_gen::unary_ew_hlo("negate", dims), 1),
+                EwKind::Abs => (hlo_gen::unary_ew_hlo("abs", dims), 1),
+                _ => (hlo_gen::binary_ew_hlo("add", dims), 2),
+            };
+            let exe = self
+                .runtime
+                .compile_text(&format!("ew_{}", kind.name()), &text)?;
+            let mut inputs = Vec::new();
+            for a in 0..nargs {
+                inputs.push(f32_literal(dims, move |i| {
+                    ((i + a) % 11) as f32 * 0.125 + 0.5
+                })?);
+            }
+            let _ = exe.time_us(&inputs, self.warmup, 1)?;
+            self.cache.insert(key.clone(), (exe, inputs));
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+}
+
+impl Hardware for PjrtHardware {
+    fn name(&self) -> &str {
+        "pjrt_cpu"
+    }
+
+    fn gemm_latency_us(&mut self, gemm: GemmShape) -> f64 {
+        match self.ensure_gemm(gemm) {
+            Ok((exe, inputs)) => exe
+                .time_us(inputs, 0, 1)
+                .map(|t| t[0])
+                .unwrap_or(f64::NAN),
+            Err(e) => {
+                crate::log_warn!("pjrt gemm {gemm} failed: {e:#}");
+                f64::NAN
+            }
+        }
+    }
+
+    fn elementwise_latency_us(&mut self, kind: EwKind, dims: &[usize]) -> f64 {
+        match self.ensure_ew(kind, dims) {
+            Ok((exe, inputs)) => exe
+                .time_us(inputs, 0, 1)
+                .map(|t| t[0])
+                .unwrap_or(f64::NAN),
+            Err(e) => {
+                crate::log_warn!("pjrt ew {} {dims:?} failed: {e:#}", kind.name());
+                f64::NAN
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tpu::traits::{measure_ew_median, measure_gemm_median};
+
+    #[test]
+    fn measures_real_kernels() {
+        let mut hw = PjrtHardware::new().expect("PJRT client");
+        let t_small = measure_gemm_median(&mut hw, GemmShape::new(32, 32, 32), 3);
+        let t_big = measure_gemm_median(&mut hw, GemmShape::new(256, 256, 256), 3);
+        assert!(t_small.is_finite() && t_small > 0.0);
+        assert!(t_big > t_small * 0.5, "big {t_big} small {t_small}");
+
+        let t_ew = measure_ew_median(&mut hw, EwKind::Add, &[256, 256], 3);
+        assert!(t_ew.is_finite() && t_ew > 0.0);
+    }
+
+    #[test]
+    fn cache_makes_repeat_measurements_cheap() {
+        let mut hw = PjrtHardware::new().expect("PJRT client");
+        let g = GemmShape::new(64, 64, 64);
+        let _ = hw.gemm_latency_us(g); // compile + run
+        let start = std::time::Instant::now();
+        for _ in 0..5 {
+            let _ = hw.gemm_latency_us(g); // cached
+        }
+        assert!(start.elapsed().as_secs_f64() < 1.0);
+    }
+}

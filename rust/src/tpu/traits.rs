@@ -1,0 +1,80 @@
+//! The measurement-backend abstraction.
+//!
+//! The paper measures kernels on a real TPU v4. We cannot (repro band
+//! 0/5), so every experiment talks to a [`Hardware`] trait with two
+//! implementations: the synthetic TPU-v4 device model
+//! ([`super::model::TpuV4Model`], default — paper-shaped numbers) and the
+//! PJRT-backed harness ([`super::pjrt_hw::PjrtHardware`], real executions
+//! on the CPU plugin). See DESIGN.md §Hardware-substitution.
+
+use crate::frontend::classify::EwKind;
+use crate::scalesim::topology::GemmShape;
+use crate::util::stats;
+
+/// A device we can measure kernel latencies on. One call = one kernel
+/// execution (including run-to-run noise for the synthetic backend).
+pub trait Hardware {
+    fn name(&self) -> &str;
+
+    /// Latency of one GEMM kernel execution, microseconds. On-chip
+    /// execution only (the paper excludes HBM-to-core staging).
+    fn gemm_latency_us(&mut self, gemm: GemmShape) -> f64;
+
+    /// Latency of one elementwise kernel execution over a bf16 tensor of
+    /// shape `dims`, microseconds.
+    fn elementwise_latency_us(&mut self, kind: EwKind, dims: &[usize]) -> f64;
+}
+
+/// Median-of-N measurement, the paper's noise-reduction protocol
+/// ("latency is measured multiple times and we use the median").
+pub fn measure_gemm_median(hw: &mut dyn Hardware, gemm: GemmShape, reps: usize) -> f64 {
+    let times: Vec<f64> = (0..reps.max(1)).map(|_| hw.gemm_latency_us(gemm)).collect();
+    stats::median(&times)
+}
+
+/// Median-of-N elementwise measurement.
+pub fn measure_ew_median(
+    hw: &mut dyn Hardware,
+    kind: EwKind,
+    dims: &[usize],
+    reps: usize,
+) -> f64 {
+    let times: Vec<f64> = (0..reps.max(1))
+        .map(|_| hw.elementwise_latency_us(kind, dims))
+        .collect();
+    stats::median(&times)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fake {
+        seq: Vec<f64>,
+        i: usize,
+    }
+
+    impl Hardware for Fake {
+        fn name(&self) -> &str {
+            "fake"
+        }
+        fn gemm_latency_us(&mut self, _g: GemmShape) -> f64 {
+            let v = self.seq[self.i % self.seq.len()];
+            self.i += 1;
+            v
+        }
+        fn elementwise_latency_us(&mut self, _k: EwKind, _d: &[usize]) -> f64 {
+            self.gemm_latency_us(GemmShape::new(1, 1, 1))
+        }
+    }
+
+    #[test]
+    fn median_measurement_rejects_outliers() {
+        let mut hw = Fake {
+            seq: vec![10.0, 11.0, 100.0, 10.5, 10.2],
+            i: 0,
+        };
+        let med = measure_gemm_median(&mut hw, GemmShape::new(2, 2, 2), 5);
+        assert!((med - 10.5).abs() < 1e-12);
+    }
+}

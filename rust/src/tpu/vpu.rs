@@ -1,0 +1,259 @@
+//! VPU (vector processing unit) latency model — the elementwise path of
+//! the synthetic TPU-v4 device.
+//!
+//! Structure (all constants in [`VpuParams`]):
+//!
+//! * **Layout padding.** bf16 tensors tile as (8 sublanes × 128 lanes);
+//!   the minor dim pads to 128, the second-minor to 8. Shapes with the
+//!   same element count but different factorizations pad differently —
+//!   the shape-dependent fluctuation the paper's learned model captures.
+//! * **Compute.** Effective VPU throughput ramps from
+//!   `min_elems_per_cycle` for small tensors (issue/loop-overhead bound)
+//!   to `max_elems_per_cycle` for large ones (fully pipelined), with a
+//!   power-law ramp — producing the smooth-but-nonlinear scaling that
+//!   favours trees over a single linear model.
+//! * **Memory.** Elementwise ops are HBM-bound at large sizes:
+//!   `streams × padded bytes / HBM bandwidth`.
+//! * **Fixed overhead** per kernel launch, dominating small tensors
+//!   (where the paper sees its largest absolute errors).
+//! * **Alignment effects.** Unaligned minor dims pay a masking penalty;
+//!   a per-shape deterministic jitter stands in for compiler scheduling
+//!   choices keyed to exact shapes.
+
+use crate::frontend::classify::EwKind;
+use crate::util::prng::hash_dims;
+
+/// VPU model constants.
+#[derive(Debug, Clone)]
+pub struct VpuParams {
+    pub clock_ghz: f64,
+    /// HBM bandwidth in bytes/µs (1.2e6 ≈ 1.2 TB/s).
+    pub hbm_bytes_per_us: f64,
+    /// Kernel launch overhead, µs.
+    pub launch_overhead_us: f64,
+    /// Elements/cycle at the small-tensor end.
+    pub min_elems_per_cycle: f64,
+    /// Elements/cycle fully pipelined.
+    pub max_elems_per_cycle: f64,
+    /// Element count where the throughput ramp starts.
+    pub ramp_start_elems: f64,
+    /// Ramp exponent.
+    pub ramp_power: f64,
+    /// Relative penalty for an unaligned minor dim.
+    pub misalignment_penalty: f64,
+    /// Cap on the layout padding-waste factor (shape effects are slight).
+    pub padding_waste_cap: f64,
+    /// Amplitude of the deterministic per-shape jitter.
+    pub shape_jitter: f64,
+    pub bytes_per_elem: f64,
+}
+
+impl Default for VpuParams {
+    fn default() -> Self {
+        VpuParams {
+            clock_ghz: 0.940,
+            hbm_bytes_per_us: 1.2e6,
+            launch_overhead_us: 0.8,
+            min_elems_per_cycle: 4.0,
+            max_elems_per_cycle: 256.0,
+            ramp_start_elems: 524_288.0,
+            ramp_power: 0.9,
+            misalignment_penalty: 0.04,
+            padding_waste_cap: 0.10,
+            shape_jitter: 0.012,
+            bytes_per_elem: 2.0, // bf16
+        }
+    }
+}
+
+/// Padded element count under (8, 128) tiling.
+///
+/// Rank ≥ 2: the minor dim pads to 128 lanes and the *product* of the
+/// remaining dims to 8 sublanes (XLA flattens the majors into sublane
+/// rows). Rank-1 tensors are laid out across full (8×128) tiles, i.e.
+/// padded to the next multiple of 1024. Scalars occupy one tile.
+pub fn padded_elements(dims: &[usize]) -> u64 {
+    // XLA canonicalises away size-1 dims before choosing a layout.
+    let dims: Vec<u64> = dims.iter().filter(|&&d| d > 1).map(|&d| d as u64).collect();
+    match dims.len() {
+        0 => 8 * 128,
+        1 => dims[0].div_ceil(8 * 128) * (8 * 128),
+        _ => {
+            let minor = *dims.last().unwrap();
+            let rows: u64 = dims[..dims.len() - 1].iter().product();
+            rows.div_ceil(8) * 8 * minor.div_ceil(128) * 128
+        }
+    }
+}
+
+/// Memory streams (reads + writes) per element for an op kind.
+pub fn streams(kind: EwKind) -> f64 {
+    match kind {
+        // Binary: two reads, one write.
+        EwKind::Add
+        | EwKind::Subtract
+        | EwKind::Multiply
+        | EwKind::Divide
+        | EwKind::Minimum
+        | EwKind::Power
+        | EwKind::Compare => 3.0,
+        // ReLU lowered as max(x, broadcast 0): one read, one write.
+        EwKind::Maximum => 2.0,
+        // Select: three reads, one write.
+        EwKind::Select => 4.0,
+        // Unary.
+        EwKind::Exp
+        | EwKind::Tanh
+        | EwKind::Logistic
+        | EwKind::Rsqrt
+        | EwKind::Sqrt
+        | EwKind::Log
+        | EwKind::Negate
+        | EwKind::Abs
+        | EwKind::Convert
+        | EwKind::Other => 2.0,
+    }
+}
+
+/// Relative ALU cost per element.
+pub fn op_cost(kind: EwKind) -> f64 {
+    match kind {
+        EwKind::Add | EwKind::Subtract | EwKind::Multiply | EwKind::Negate | EwKind::Abs => 1.0,
+        // Comparison + select micro-ops.
+        EwKind::Maximum | EwKind::Minimum | EwKind::Compare | EwKind::Select => 1.15,
+        EwKind::Convert => 1.1,
+        EwKind::Divide | EwKind::Sqrt | EwKind::Rsqrt => 1.6,
+        EwKind::Exp | EwKind::Log | EwKind::Tanh | EwKind::Logistic | EwKind::Power => 2.2,
+        EwKind::Other => 1.2,
+    }
+}
+
+/// Noise-free elementwise latency, µs (the caller applies run-to-run
+/// noise). Deterministic in (kind, dims).
+pub fn latency_us(params: &VpuParams, kind: EwKind, dims: &[usize]) -> f64 {
+    let elems: u64 = dims.iter().map(|&d| d as u64).product::<u64>().max(1);
+    let n = elems as f64;
+
+    // Throughput: constant (issue-bound) below `ramp_start_elems`, so
+    // latency is *linear in size* across the paper's Fig. 3 sweeps; above
+    // it the kernel pipelines and effective throughput ramps up (a
+    // near-linear power 0.9), bending the curve toward the HBM roofline
+    // at the ~16M-element end of the training range.
+    let ramp = (n / params.ramp_start_elems).max(1.0);
+    let elems_per_cycle = (params.min_elems_per_cycle * ramp.powf(params.ramp_power))
+        .clamp(params.min_elems_per_cycle, params.max_elems_per_cycle);
+    let cycles = n * op_cost(kind) / elems_per_cycle;
+    let compute_us = cycles / (params.clock_ghz * 1e3);
+
+    // HBM roofline on the tensor footprint.
+    let bytes = n * params.bytes_per_elem * streams(kind);
+    let mem_us = bytes / params.hbm_bytes_per_us;
+
+    // Shape effects are *slight*, as the paper observes: a capped layout
+    // padding-waste factor (VMEM tiles process some dead lanes), a minor-
+    // dim misalignment penalty, and a small per-shape scheduling jitter.
+    let padded = padded_elements(dims) as f64;
+    let waste = (padded / n).clamp(1.0, 1.0 + params.padding_waste_cap);
+    let minor = dims.last().copied().unwrap_or(1);
+    let mis = if minor % 128 != 0 && !dims.is_empty() {
+        1.0 + params.misalignment_penalty
+    } else {
+        1.0
+    };
+    let h = hash_dims(dims);
+    let jitter = 1.0 + params.shape_jitter * ((h >> 16) as f64 / (1u64 << 48) as f64 - 0.5) * 2.0;
+
+    params.launch_overhead_us + compute_us.max(mem_us) * waste * mis * jitter
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> VpuParams {
+        VpuParams::default()
+    }
+
+    #[test]
+    fn padding_rules() {
+        // 1-D: padded to whole (8x128) tiles.
+        assert_eq!(padded_elements(&[128]), 1024);
+        assert_eq!(padded_elements(&[1024]), 1024);
+        assert_eq!(padded_elements(&[1025]), 2048);
+        // 2-D: minor to 128 lanes, rows to 8 sublanes.
+        assert_eq!(padded_elements(&[8, 128]), 1024);
+        assert_eq!(padded_elements(&[9, 128]), 16 * 128);
+        assert_eq!(padded_elements(&[8, 100]), 1024);
+        // Majors flatten into rows.
+        assert_eq!(padded_elements(&[2, 8, 128]), 16 * 128);
+        // Size-1 dims are canonicalised away.
+        assert_eq!(padded_elements(&[1, 1, 1024]), 1024);
+        assert_eq!(padded_elements(&[1024, 1]), 1024);
+        assert_eq!(padded_elements(&[]), 1024);
+    }
+
+    #[test]
+    fn latency_monotone_in_size() {
+        let mut prev = 0.0;
+        for n in [1024usize, 8192, 65_536, 1 << 20, 1 << 24] {
+            let t = latency_us(&p(), EwKind::Add, &[n / 128, 128]);
+            assert!(t > prev, "n={n} t={t} prev={prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn large_tensors_approach_roofline() {
+        // 16M elements: latency must stay above the HBM roofline and
+        // within a small multiple of it (pipelined regime).
+        let dims = [16 * 1024, 1024];
+        let t = latency_us(&p(), EwKind::Add, &dims);
+        let bytes = (16.0 * 1024.0 * 1024.0) * 2.0 * 3.0;
+        let roofline = bytes / p().hbm_bytes_per_us;
+        assert!(t >= roofline, "t={t} roofline={roofline}");
+        assert!(t < roofline * 4.0, "t={t} roofline={roofline}");
+    }
+
+    #[test]
+    fn same_size_different_shape_differs() {
+        let a = latency_us(&p(), EwKind::Add, &[1 << 16]);
+        let b = latency_us(&p(), EwKind::Add, &[256, 256]);
+        let c = latency_us(&p(), EwKind::Add, &[512, 128]);
+        assert!((a - b).abs() > 1e-9 || (b - c).abs() > 1e-9);
+    }
+
+    #[test]
+    fn misalignment_costs() {
+        let aligned = latency_us(&p(), EwKind::Add, &[1024, 128]);
+        let unaligned = latency_us(&p(), EwKind::Add, &[1024, 127]);
+        // Same padded footprint, but the unaligned minor pays the penalty
+        // (modulo the ±3% shape jitter).
+        assert!(unaligned > aligned * 0.98, "{unaligned} vs {aligned}");
+    }
+
+    #[test]
+    fn relu_and_add_differ_but_same_scale() {
+        // ReLU (compare+select, 2 streams) and add (1 ALU op, 3 streams)
+        // land at the same order of magnitude but not identical cost.
+        let dims = [16 * 1024, 1024];
+        let relu = latency_us(&p(), EwKind::Maximum, &dims);
+        let add = latency_us(&p(), EwKind::Add, &dims);
+        assert!((relu - add).abs() > 1e-9);
+        assert!(relu > add * 0.5 && relu < add * 2.0, "relu {relu} add {add}");
+    }
+
+    #[test]
+    fn transcendental_more_expensive_compute() {
+        let dims = [64, 128]; // small: compute-visible
+        let add = latency_us(&p(), EwKind::Add, &dims);
+        let exp = latency_us(&p(), EwKind::Exp, &dims);
+        assert!(exp > add);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = latency_us(&p(), EwKind::Add, &[77, 33]);
+        let b = latency_us(&p(), EwKind::Add, &[77, 33]);
+        assert_eq!(a, b);
+    }
+}

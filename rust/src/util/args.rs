@@ -1,0 +1,163 @@
+//! Tiny command-line argument parser (the offline registry has no `clap`).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`. Unknown keys are
+//! collected and reported by `finish()` so every binary gets consistent
+//! error messages and `--help` behaviour.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut subcommand = None;
+        let mut positional = Vec::new();
+        let mut kv = BTreeMap::new();
+        let mut items = iter.into_iter().peekable();
+        while let Some(arg) = items.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    kv.insert(k.to_string(), v.to_string());
+                } else if items
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = items.next().unwrap();
+                    kv.insert(stripped.to_string(), v);
+                } else {
+                    // Bare flag.
+                    kv.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if subcommand.is_none() && positional.is_empty() {
+                subcommand = Some(arg);
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args {
+            subcommand,
+            positional,
+            kv,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.kv.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+            None => default,
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+            None => default,
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+            None => default,
+        }
+    }
+
+    /// Return the list of provided-but-never-queried keys (likely typos).
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.kv
+            .keys()
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = args(&["fig2", "out.csv"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig2"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = args(&["sim", "--m", "128", "--n=256", "--verbose"]);
+        assert_eq!(a.usize_or("m", 0), 128);
+        assert_eq!(a.usize_or("n", 0), 256);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&["sim"]);
+        assert_eq!(a.usize_or("m", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert_eq!(a.str_or("mode", "ws"), "ws");
+    }
+
+    #[test]
+    fn unknown_keys_tracked() {
+        let a = args(&["sim", "--good", "1", "--typo", "2"]);
+        let _ = a.get("good");
+        assert_eq!(a.unknown_keys(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["x", "--a", "--b", "3"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.usize_or("b", 0), 3);
+    }
+}

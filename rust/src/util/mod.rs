@@ -1,0 +1,12 @@
+//! Std-only infrastructure: PRNG, stats, JSON, CLI args, logging.
+//!
+//! The offline crate registry only carries the `xla` crate's dependency
+//! closure (no serde, rand, clap, tokio or criterion), so this module
+//! provides the small, fully-tested equivalents the rest of the crate
+//! builds on.
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,273 @@
+//! Descriptive statistics and regression-quality metrics.
+//!
+//! These are the metrics the paper reports for every figure: R², RMSE,
+//! MAE, MAPE, and median absolute / relative error.
+
+/// Arithmetic mean. Returns 0.0 on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Median (interpolated for even lengths). Returns 0.0 on empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Min/max helpers that ignore NaN-free assumption violations gracefully.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Coefficient of determination of predictions vs truth:
+/// R² = 1 - SS_res / SS_tot.
+pub fn r2(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let m = mean(truth);
+    let ss_tot: f64 = truth.iter().map(|y| (y - m) * (y - m)).sum();
+    let ss_res: f64 = truth
+        .iter()
+        .zip(pred)
+        .map(|(y, p)| (y - p) * (y - p))
+        .sum();
+    if ss_tot == 0.0 {
+        // Constant truth: perfect iff residuals are zero.
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Root mean squared error.
+pub fn rmse(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let mse: f64 = truth
+        .iter()
+        .zip(pred)
+        .map(|(y, p)| (y - p) * (y - p))
+        .sum::<f64>()
+        / truth.len() as f64;
+    mse.sqrt()
+}
+
+/// Mean absolute error.
+pub fn mae(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    truth
+        .iter()
+        .zip(pred)
+        .map(|(y, p)| (y - p).abs())
+        .sum::<f64>()
+        / truth.len() as f64
+}
+
+/// Mean absolute percentage error, in percent. Skips zero-truth points.
+pub fn mape(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (y, p) in truth.iter().zip(pred) {
+        if y.abs() > 0.0 {
+            total += ((y - p) / y).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Median absolute error (the paper's headline elementwise metric).
+pub fn median_abs_error(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    let errs: Vec<f64> = truth.iter().zip(pred).map(|(y, p)| (y - p).abs()).collect();
+    median(&errs)
+}
+
+/// Median relative error, in percent. Skips zero-truth points.
+pub fn median_rel_error(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    let errs: Vec<f64> = truth
+        .iter()
+        .zip(pred)
+        .filter(|(y, _)| y.abs() > 0.0)
+        .map(|(y, p)| 100.0 * ((y - p) / y).abs())
+        .collect();
+    median(&errs)
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// A bundle of every fit metric the paper reports, computed in one pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitMetrics {
+    pub n: usize,
+    pub r2: f64,
+    pub rmse: f64,
+    pub mae: f64,
+    pub mape_pct: f64,
+    pub median_abs_err: f64,
+    pub median_rel_err_pct: f64,
+}
+
+impl FitMetrics {
+    pub fn compute(truth: &[f64], pred: &[f64]) -> Self {
+        Self {
+            n: truth.len(),
+            r2: r2(truth, pred),
+            rmse: rmse(truth, pred),
+            mae: mae(truth, pred),
+            mape_pct: mape(truth, pred),
+            median_abs_err: median_abs_error(truth, pred),
+            median_rel_err_pct: median_rel_error(truth, pred),
+        }
+    }
+}
+
+impl std::fmt::Display for FitMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} R2={:.4} RMSE={:.4} MAE={:.4} MAPE={:.2}% medAE={:.4} medRE={:.2}%",
+            self.n,
+            self.r2,
+            self.rmse,
+            self.mae,
+            self.mape_pct,
+            self.median_abs_err,
+            self.median_rel_err_pct
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+        assert!((percentile(&xs, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        assert!((r2(&y, &y) - 1.0).abs() < 1e-12);
+        let mean_pred = [2.5; 4];
+        assert!(r2(&y, &mean_pred).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_constant_truth() {
+        let y = [2.0, 2.0];
+        assert_eq!(r2(&y, &[2.0, 2.0]), 1.0);
+        assert_eq!(r2(&y, &[1.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let y = [10.0, 20.0];
+        let p = [12.0, 16.0];
+        assert!((mae(&y, &p) - 3.0).abs() < 1e-12);
+        assert!((rmse(&y, &p) - (10.0f64).sqrt()).abs() < 1e-12);
+        assert!((mape(&y, &p) - 20.0).abs() < 1e-9); // (20% + 20%) / 2
+        assert!((median_abs_error(&y, &p) - 3.0).abs() < 1e-12);
+        assert!((median_rel_error(&y, &p) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y_up = [2.0, 4.0, 6.0, 8.0];
+        let y_down = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &y_up) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &y_down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_metrics_display() {
+        let m = FitMetrics::compute(&[1.0, 2.0], &[1.0, 2.0]);
+        assert_eq!(m.n, 2);
+        assert!(m.r2 > 0.999);
+        let s = format!("{m}");
+        assert!(s.contains("R2=1.0000"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Elementwise shape sweeps and training-set samplers (§4.2).
+//!
+//! * Fig. 3 exploratory sweeps: 1-D lengths 32–8192 (step 32) and 2-D
+//!   shapes 64–1024 per dim (step 64).
+//! * Training data: total sizes sampled log-uniformly up to ~16M
+//!   elements, multiple factorizations per size, plus deliberate 2ⁿ
+//!   boundary cases — exactly the dataset construction the paper
+//!   describes.
+
+use crate::util::prng::Prng;
+
+/// Fig. 3a: 1-D lengths 32..=8192 step 32.
+pub fn sweep_1d() -> Vec<Vec<usize>> {
+    (32..=8192usize).step_by(32).map(|l| vec![l]).collect()
+}
+
+/// Fig. 3b: 2-D shapes, each dim 64..=1024 step 64.
+pub fn sweep_2d() -> Vec<Vec<usize>> {
+    let vals: Vec<usize> = (64..=1024).step_by(64).collect();
+    let mut out = Vec::with_capacity(vals.len() * vals.len());
+    for &a in &vals {
+        for &b in &vals {
+            out.push(vec![a, b]);
+        }
+    }
+    out
+}
+
+/// Maximum training tensor size (~16M elements).
+pub const MAX_TRAIN_ELEMS: u64 = 16 * 1024 * 1024;
+
+/// Sample `n` training shapes: log-uniform sizes, varied factorizations,
+/// and 2ⁿ boundary cases. Deterministic in `seed`.
+pub fn sample_training_shapes(n: usize, seed: u64) -> Vec<Vec<usize>> {
+    sample_training_shapes_bounded(n, seed, MAX_TRAIN_ELEMS)
+}
+
+/// As [`sample_training_shapes`] but with a custom size cap (the PJRT
+/// backend uses a smaller cap to keep real executions fast).
+pub fn sample_training_shapes_bounded(n: usize, seed: u64, max_elems: u64) -> Vec<Vec<usize>> {
+    let mut prng = Prng::new(seed);
+    let max_pow = (max_elems as f64).log2().floor() as i64;
+    let mut shapes = Vec::with_capacity(n);
+    for i in 0..n {
+        // Pick a size: mostly log-uniform, with a slice of the budget on
+        // power-of-two boundaries (and off-by-one neighbours).
+        let size = match i % 5 {
+            0 => 1u64 << prng.int_range(5, max_pow),
+            1 => {
+                let p = 1i64 << prng.int_range(5, max_pow);
+                (p + prng.int_range(-1, 1)).max(16) as u64
+            }
+            _ => prng.log_uniform(32.0, max_elems as f64).round() as u64,
+        };
+        let size = size.clamp(16, max_elems);
+        shapes.push(factorize(size, &mut prng));
+    }
+    shapes
+}
+
+/// Produce a random factorization of `size` into 1–3 dims.
+///
+/// Multiple calls with the same size can yield different shapes, giving
+/// the dataset "multiple factorizations of the same total element count".
+pub fn factorize(size: u64, prng: &mut Prng) -> Vec<usize> {
+    let rank = 1 + prng.index(3); // 1..=3
+    if rank == 1 || size < 4 {
+        return vec![size as usize];
+    }
+    // Split a roughly-random divisor off for each extra dim.
+    let mut dims: Vec<usize> = Vec::with_capacity(rank);
+    let mut rest = size;
+    for _ in 0..rank - 1 {
+        let d = random_divisor(rest, prng);
+        dims.push(d as usize);
+        rest /= d;
+    }
+    dims.push(rest as usize);
+    // Randomise which dim is minor (layout-relevant on TPU) — but mostly
+    // keep a reasonably wide minor dim, as real ML tensors (and the
+    // layouts XLA actually picks) do; a small fraction of degenerate
+    // minors (1–2 wide) is retained as boundary cases.
+    prng.shuffle(&mut dims);
+    let keep_degenerate = size <= (1 << 16) && prng.uniform() < 0.2;
+    if dims.last().copied().unwrap_or(1) < 8 && !keep_degenerate {
+        let max_pos = dims
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &d)| d)
+            .map(|(i, _)| i)
+            .unwrap();
+        let last = dims.len() - 1;
+        dims.swap(max_pos, last);
+    }
+    dims
+}
+
+/// A divisor of `n`, biased toward mid-sized factors.
+fn random_divisor(n: u64, prng: &mut Prng) -> u64 {
+    if n <= 3 {
+        return 1;
+    }
+    // Try a few random candidates near sqrt-scale; fall back to small
+    // divisors.
+    let target = prng.log_uniform(2.0, (n as f64).sqrt().max(2.0)).round() as u64;
+    // Scan outward from target for an actual divisor.
+    for delta in 0..target.max(8) {
+        for cand in [target.saturating_sub(delta), target + delta] {
+            if cand >= 2 && cand <= n && n % cand == 0 {
+                return cand;
+            }
+        }
+    }
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_1d_matches_paper() {
+        let s = sweep_1d();
+        assert_eq!(s.len(), 256);
+        assert_eq!(s[0], vec![32]);
+        assert_eq!(s[255], vec![8192]);
+    }
+
+    #[test]
+    fn sweep_2d_matches_paper() {
+        let s = sweep_2d();
+        assert_eq!(s.len(), 256);
+        assert_eq!(s[0], vec![64, 64]);
+        assert_eq!(s[255], vec![1024, 1024]);
+    }
+
+    #[test]
+    fn factorize_preserves_size() {
+        let mut prng = Prng::new(5);
+        for size in [16u64, 97, 1024, 65_536, 16_777_216, 999_983] {
+            for _ in 0..20 {
+                let dims = factorize(size, &mut prng);
+                let product: u64 = dims.iter().map(|&d| d as u64).product();
+                assert_eq!(product, size, "{dims:?}");
+                assert!(dims.len() <= 3);
+                assert!(dims.iter().all(|&d| d >= 1));
+            }
+        }
+    }
+
+    #[test]
+    fn training_sizes_bounded_and_diverse() {
+        let shapes = sample_training_shapes(2000, 42);
+        assert_eq!(shapes.len(), 2000);
+        let mut sizes = std::collections::BTreeSet::new();
+        let mut pow2 = 0usize;
+        for s in &shapes {
+            let n: u64 = s.iter().map(|&d| d as u64).product();
+            assert!(n >= 16 && n <= MAX_TRAIN_ELEMS);
+            sizes.insert(n);
+            if n.is_power_of_two() {
+                pow2 += 1;
+            }
+        }
+        assert!(sizes.len() > 800, "distinct sizes {}", sizes.len());
+        // ~20% of the budget targets 2^n exactly.
+        assert!(pow2 > 200, "pow2 cases {pow2}");
+    }
+
+    #[test]
+    fn training_has_repeated_sizes_with_different_shapes() {
+        let shapes = sample_training_shapes(3000, 7);
+        let mut by_size: std::collections::BTreeMap<u64, std::collections::BTreeSet<Vec<usize>>> =
+            Default::default();
+        for s in &shapes {
+            let n: u64 = s.iter().map(|&d| d as u64).product();
+            by_size.entry(n).or_default().insert(s.clone());
+        }
+        let multi = by_size.values().filter(|set| set.len() > 1).count();
+        assert!(multi > 20, "sizes with multiple factorizations: {multi}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        assert_eq!(sample_training_shapes(50, 1), sample_training_shapes(50, 1));
+        assert_ne!(sample_training_shapes(50, 1), sample_training_shapes(50, 2));
+    }
+}

@@ -1,0 +1,147 @@
+//! The paper's GEMM parameter sweeps (§4.1.1).
+//!
+//! For each size regime the paper sweeps *each of the three dimensions*
+//! (M, K, N) over the regime's range with a fixed step, holding the other
+//! two at regime baselines. We generate exactly those per-dimension
+//! sweeps at three baselines (low / mid / high) plus the cube diagonal,
+//! de-duplicated — a few dozen distinct shapes per regime, matching the
+//! paper's per-regime sample counts in spirit.
+
+use std::collections::BTreeSet;
+
+use crate::calibrate::Regime;
+use crate::scalesim::topology::GemmShape;
+
+/// All dimension values of a regime's sweep.
+pub fn regime_values(regime: Regime) -> Vec<usize> {
+    let (lo, hi, step) = regime.sweep_range();
+    (lo..=hi).step_by(step).collect()
+}
+
+/// Baselines (low, mid, high) used for the two non-swept dims.
+fn baselines(regime: Regime) -> [usize; 3] {
+    let vals = regime_values(regime);
+    [vals[0], vals[vals.len() / 2], vals[vals.len() - 1]]
+}
+
+/// The per-regime sweep: per-dimension sweeps at each baseline plus the
+/// (d, d, d) diagonal; sorted and de-duplicated.
+pub fn regime_sweep(regime: Regime) -> Vec<GemmShape> {
+    let vals = regime_values(regime);
+    let mut set: BTreeSet<(usize, usize, usize)> = BTreeSet::new();
+    for &b in &baselines(regime) {
+        for &v in &vals {
+            set.insert((v, b, b)); // sweep M
+            set.insert((b, v, b)); // sweep K
+            set.insert((b, b, v)); // sweep N
+        }
+    }
+    for &v in &vals {
+        set.insert((v, v, v)); // diagonal
+    }
+    // Regime ranges share endpoints (128, 1024); keep only shapes that
+    // classify back into this regime so the per-regime fits are clean.
+    set.into_iter()
+        .map(|(m, k, n)| GemmShape::new(m, k, n))
+        .filter(|g| Regime::of_gemm(g) == regime)
+        .collect()
+}
+
+/// The full three-regime sweep of Fig. 2.
+pub fn full_sweep() -> Vec<(Regime, GemmShape)> {
+    let mut out = Vec::new();
+    for regime in Regime::ALL {
+        for g in regime_sweep(regime) {
+            out.push((regime, g));
+        }
+    }
+    out
+}
+
+/// Held-out evaluation shapes for Fig. 4 (cycle-to-latency accuracy):
+/// off-sweep shapes (midpoints between sweep steps, skewed aspect ratios)
+/// across all regimes.
+pub fn heldout_shapes() -> Vec<GemmShape> {
+    let mut out = Vec::new();
+    for regime in Regime::ALL {
+        let (lo, hi, step) = regime.sweep_range();
+        // Off-grid: midpoints between sweep values.
+        let mid_step = step / 2;
+        let mut v = lo + mid_step;
+        while v < hi {
+            out.push(GemmShape::new(v, v, v));
+            v += step;
+        }
+        // Skewed aspect ratios inside the regime.
+        let a = lo + step;
+        let b = hi - step;
+        out.push(GemmShape::new(b, a, a));
+        out.push(GemmShape::new(a, b, a));
+        out.push(GemmShape::new(a, a, b));
+        out.push(GemmShape::new(b, b, a));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_values_match_paper() {
+        assert_eq!(regime_values(Regime::Small), vec![32, 48, 64, 80, 96, 112, 128]);
+        let med = regime_values(Regime::Medium);
+        assert_eq!(med.first(), Some(&128));
+        assert_eq!(med.last(), Some(&1024));
+        assert_eq!(med.len(), 8);
+        let large = regime_values(Regime::Large);
+        assert_eq!(large, vec![1024, 1536, 2048, 2560, 3072, 3584, 4096]);
+    }
+
+    #[test]
+    fn sweep_shapes_stay_in_regime() {
+        for regime in Regime::ALL {
+            for g in regime_sweep(regime) {
+                assert_eq!(Regime::of_gemm(&g), regime, "{g}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_has_reasonable_coverage() {
+        for regime in Regime::ALL {
+            let n = regime_sweep(regime).len();
+            assert!(n >= 40, "{regime}: {n} shapes");
+            assert!(n <= 80, "{regime}: {n} shapes");
+        }
+    }
+
+    #[test]
+    fn sweep_is_deduplicated() {
+        let shapes = regime_sweep(Regime::Small);
+        let mut sorted: Vec<_> = shapes.iter().map(|g| (g.m, g.k, g.n)).collect();
+        sorted.sort_unstable();
+        let len = sorted.len();
+        sorted.dedup();
+        assert_eq!(sorted.len(), len);
+    }
+
+    #[test]
+    fn heldout_disjoint_from_sweep() {
+        let sweep: std::collections::BTreeSet<(usize, usize, usize)> = full_sweep()
+            .into_iter()
+            .map(|(_, g)| (g.m, g.k, g.n))
+            .collect();
+        for g in heldout_shapes() {
+            assert!(!sweep.contains(&(g.m, g.k, g.n)), "{g} leaked into held-out");
+        }
+    }
+
+    #[test]
+    fn heldout_covers_all_regimes() {
+        let shapes = heldout_shapes();
+        for regime in Regime::ALL {
+            assert!(shapes.iter().any(|g| Regime::of_gemm(g) == regime));
+        }
+    }
+}

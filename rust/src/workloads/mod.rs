@@ -1,0 +1,7 @@
+//! Workload generators: the paper's GEMM sweeps ([`gemm_sweep`]), the
+//! elementwise shape sweeps and training samplers ([`elementwise_sweep`]),
+//! and whole-model topologies ([`models`]).
+
+pub mod elementwise_sweep;
+pub mod gemm_sweep;
+pub mod models;

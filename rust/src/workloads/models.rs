@@ -1,0 +1,114 @@
+//! Whole-model workload topologies used by examples and the end-to-end
+//! evaluation: a small MLP and a transformer block, both also authored in
+//! JAX on the Python side (python/compile/model.py) so the StableHLO
+//! frontend can be fed the *compiler's* view of the same models.
+
+use crate::scalesim::topology::{GemmShape, Layer, Topology};
+
+/// A 3-layer MLP classifier head: 784 → 512 → 256 → 10 at batch `b`.
+pub fn mlp(batch: usize) -> Topology {
+    Topology {
+        name: format!("mlp_b{batch}"),
+        layers: vec![
+            Layer::Gemm {
+                name: "fc1".into(),
+                shape: GemmShape::new(batch, 784, 512),
+            },
+            Layer::Gemm {
+                name: "fc2".into(),
+                shape: GemmShape::new(batch, 512, 256),
+            },
+            Layer::Gemm {
+                name: "fc3".into(),
+                shape: GemmShape::new(batch, 256, 10),
+            },
+        ],
+    }
+}
+
+/// The GEMMs of one transformer block (d_model, heads, seq, ffn multiple
+/// 4): QKV projections, attention scores and values, output projection,
+/// and the two FFN matmuls. Elementwise/softmax ops are added by the
+/// StableHLO path; this topology covers the systolic part.
+pub fn transformer_block(seq: usize, d_model: usize, heads: usize) -> Topology {
+    assert!(d_model % heads == 0);
+    let d_head = d_model / heads;
+    let mut layers = vec![
+        Layer::Gemm {
+            name: "qkv_proj".into(),
+            shape: GemmShape::new(seq, d_model, 3 * d_model),
+        },
+        Layer::Gemm {
+            name: "out_proj".into(),
+            shape: GemmShape::new(seq, d_model, d_model),
+        },
+        Layer::Gemm {
+            name: "ffn_up".into(),
+            shape: GemmShape::new(seq, d_model, 4 * d_model),
+        },
+        Layer::Gemm {
+            name: "ffn_down".into(),
+            shape: GemmShape::new(seq, 4 * d_model, d_model),
+        },
+    ];
+    // Per-head attention GEMMs (scores: seq×d_head×seq; values:
+    // seq×seq×d_head), repeated `heads` times.
+    for h in 0..heads {
+        layers.push(Layer::Gemm {
+            name: format!("attn_scores_h{h}"),
+            shape: GemmShape::new(seq, d_head, seq),
+        });
+        layers.push(Layer::Gemm {
+            name: format!("attn_values_h{h}"),
+            shape: GemmShape::new(seq, seq, d_head),
+        });
+    }
+    Topology {
+        name: format!("transformer_s{seq}_d{d_model}_h{heads}"),
+        layers,
+    }
+}
+
+/// A ResNet-ish convolutional stem, in the classic SCALE-Sim CSV format.
+pub fn resnet_stem_csv() -> &'static str {
+    "Layer, IFMAP H, IFMAP W, Filt H, Filt W, Channels, Num Filters, Stride,\n\
+     conv1, 224, 224, 7, 7, 3, 64, 2,\n\
+     conv2_1, 56, 56, 3, 3, 64, 64, 1,\n\
+     conv2_2, 56, 56, 3, 3, 64, 64, 1,\n\
+     conv3_1, 56, 56, 1, 1, 64, 128, 2,\n\
+     conv3_2, 28, 28, 3, 3, 128, 128, 1,\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::topology::Topology as T;
+
+    #[test]
+    fn mlp_layer_shapes() {
+        let t = mlp(32);
+        assert_eq!(t.layers.len(), 3);
+        assert_eq!(t.layers[0].as_gemm(), GemmShape::new(32, 784, 512));
+        assert_eq!(t.total_macs(), 32 * (784 * 512 + 512 * 256 + 256 * 10));
+    }
+
+    #[test]
+    fn transformer_block_macs() {
+        let t = transformer_block(128, 256, 4);
+        // 4 projection/FFN GEMMs + 2 per head.
+        assert_eq!(t.layers.len(), 4 + 8);
+        let expected: u64 = (128 * 256 * 768
+            + 128 * 256 * 256
+            + 128 * 256 * 1024
+            + 128 * 1024 * 256) as u64
+            + 4 * (128u64 * 64 * 128 + 128 * 128 * 64);
+        assert_eq!(t.total_macs(), expected);
+    }
+
+    #[test]
+    fn resnet_csv_parses() {
+        let t = T::parse_csv("resnet_stem", resnet_stem_csv()).unwrap();
+        assert_eq!(t.layers.len(), 5);
+        assert!(t.total_macs() > 100_000_000);
+    }
+}

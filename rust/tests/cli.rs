@@ -1,0 +1,83 @@
+//! CLI integration: drive the actual `scalesim-tpu` binary end to end
+//! (cargo builds it for integration tests; `CARGO_BIN_EXE_*` points at it).
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_scalesim-tpu"))
+        .args(args)
+        .output()
+        .expect("spawn scalesim-tpu");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (stdout, _, ok) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["table1", "fig2", "fig5", "simulate", "calibrate", "serve"] {
+        assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn table1_prints_comparison() {
+    let (stdout, _, ok) = run(&["table1"]);
+    assert!(ok);
+    assert!(stdout.contains("SCALE-Sim TPU (this work)"));
+    assert!(stdout.contains("StableHLO"));
+    assert!(stdout.contains("true"));
+}
+
+#[test]
+fn simulate_single_gemm_with_extensions() {
+    let trace = std::env::temp_dir().join("scalesim_cli_trace.csv");
+    let (stdout, _, ok) = run(&[
+        "simulate",
+        "--m",
+        "256",
+        "--k",
+        "256",
+        "--n",
+        "256",
+        "--energy",
+        "--sparsity",
+        "0.5",
+        "--trace",
+        trace.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("GEMM 256x256x256"));
+    assert!(stdout.contains("regime: medium"));
+    assert!(stdout.contains("energy:"));
+    assert!(stdout.contains("speedup"));
+    let csv = std::fs::read_to_string(&trace).unwrap();
+    assert!(csv.starts_with("fold,start_cycle"));
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn simulate_topology_csv() {
+    let (stdout, _, ok) = run(&["simulate", "--topology", "topologies/bert_base_layer.csv"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("ffn_up"));
+    assert!(stdout.contains("total:"));
+}
+
+#[test]
+fn unknown_subcommand_fails_cleanly() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn bad_dataflow_rejected() {
+    let (_, stderr, ok) = run(&["simulate", "--m", "8", "--k", "8", "--n", "8", "--dataflow", "zz"]);
+    assert!(!ok);
+    assert!(stderr.contains("bad dataflow"));
+}

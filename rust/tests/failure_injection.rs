@@ -1,0 +1,121 @@
+//! Failure injection: every external input the system consumes —
+//! artifacts, model files, IR text, requests — corrupted or missing, must
+//! produce a clean error (never a panic, never silent garbage).
+
+use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::learned::Hgbr;
+use scalesim_tpu::runtime::Runtime;
+use scalesim_tpu::scalesim::Topology;
+use scalesim_tpu::util::json::Json;
+
+fn tmp(name: &str, content: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("scalesim_failure_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    std::fs::write(&p, content).unwrap();
+    p
+}
+
+#[test]
+fn corrupt_stablehlo_is_an_error_not_a_panic() {
+    for text in [
+        "",
+        "module {",
+        "module { func.func @main( }",
+        "garbage % @ # <<<",
+        "module { func.func @main() -> tensor<4xf32> { %0 = stablehlo.add %1 ",
+        // Dynamic shapes rejected explicitly.
+        "module { func.func @main(%a: tensor<?x4xf32>) -> tensor<4xf32> { return %a : tensor<4xf32> } }",
+    ] {
+        let r = parse_module(text);
+        assert!(r.is_err(), "should reject: {text:?}");
+    }
+}
+
+#[test]
+fn corrupt_model_json_rejected() {
+    for content in [
+        "not json at all",
+        "{}",
+        r#"{"base": 1.0}"#,
+        r#"{"base": 1.0, "learning_rate": 0.1, "feature_names": [], "trees": [{"nodes": []}]}"#,
+    ] {
+        let p = tmp("bad_model.json", content);
+        assert!(Hgbr::load(&p).is_err(), "should reject: {content}");
+    }
+}
+
+#[test]
+fn corrupt_hlo_artifact_rejected_by_runtime() {
+    let rt = Runtime::cpu().expect("PJRT client");
+    let p = tmp("bad.hlo.txt", "HloModule broken\nENTRY main { this is not hlo }");
+    assert!(rt.compile_file(&p).is_err());
+    let missing = std::env::temp_dir().join("scalesim_failure_tests/nonexistent.hlo.txt");
+    assert!(rt.compile_file(&missing).is_err());
+}
+
+#[test]
+fn corrupt_topology_csv_rejected() {
+    for text in [
+        "layer, 1, 2\n",                 // wrong arity
+        "conv, 8, 8, 9, 9, 1, 1, 1,\n",  // filter > ifmap
+        "g, 0, 1, 1,\n",                 // zero dim
+        // Non-numeric rows after the (single allowed) header line.
+        "h1, 1, 1, 1,\nconv, a, b, c, d, e, f, g,\n",
+    ] {
+        assert!(Topology::parse_csv("x", text).is_err(), "{text:?}");
+    }
+    // But headers/comments/blank lines are tolerated.
+    let ok = Topology::parse_csv("x", "# comment\n\nLayer, IFMAP H, ...\nfc, 4, 4, 4,\n");
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn malformed_service_requests_answered_with_errors() {
+    use scalesim_tpu::calibrate::fit_regime_calibration;
+    use scalesim_tpu::coordinator::{serve_lines, Estimator};
+    use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 128, 256, 512, 1024, 2048, 4096] {
+        obs.push((GemmShape::new(d, d, d), (d * d) as u64, d as f64));
+    }
+    let est = std::sync::Arc::new(Estimator::new(
+        ScaleConfig::tpu_v4(),
+        fit_regime_calibration(&obs).unwrap(),
+    ));
+    let lines: Vec<String> = vec![
+        "not json".into(),
+        r#"{"type":"gemm"}"#.into(),                         // missing dims
+        r#"{"type":"gemm","m":-1,"k":2,"n":3}"#.into(),      // negative
+        r#"{"type":"elementwise","op":"nonsense","dims":[4]}"#.into(),
+        r#"{"type":"module","path":"/no/such/file"}"#.into(),
+    ];
+    let responses = serve_lines(est, &lines, 2);
+    assert_eq!(responses.len(), lines.len());
+    for (line, resp) in lines.iter().zip(&responses) {
+        let j = Json::parse(resp).expect("response must be valid JSON");
+        assert_eq!(
+            j.get("ok"),
+            Some(&Json::Bool(false)),
+            "should fail: {line} -> {resp}"
+        );
+        assert!(j.req_str("error").unwrap().len() > 3);
+    }
+}
+
+#[test]
+fn assets_dir_with_partial_contents_fails_loud() {
+    use scalesim_tpu::experiments::assets;
+    let dir = std::env::temp_dir().join("scalesim_failure_partial_assets");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    // config.json present but calibration missing.
+    std::fs::write(
+        dir.join("config.json"),
+        scalesim_tpu::scalesim::ScaleConfig::tpu_v4().to_json().pretty(),
+    )
+    .unwrap();
+    assert!(assets::load_assets(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,119 @@
+//! Integration: the real AOT artifacts produced by python/compile/aot.py.
+//!
+//! These tests exercise the frontend against *actual JAX output* (not
+//! hand-written IR). They skip gracefully when `make artifacts` has not
+//! run (e.g. a pure-Rust CI lane).
+
+use scalesim_tpu::frontend::{classify, parse_module, OpClass};
+use scalesim_tpu::scalesim::GemmShape;
+
+fn artifact(name: &str) -> Option<String> {
+    std::fs::read_to_string(format!("artifacts/{name}")).ok()
+}
+
+#[test]
+fn mlp_stablehlo_parses_and_classifies() {
+    let Some(text) = artifact("mlp_b32.stablehlo.txt") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let module = parse_module(&text).expect("parse mlp stablehlo");
+    let func = module.entry().expect("entry");
+    assert_eq!(func.arg_types.len(), 1);
+    assert_eq!(func.arg_types[0].dims, vec![32, 784]);
+    assert_eq!(func.result_types[0].dims, vec![32, 10]);
+
+    // The standard lowering has exactly the 3 matmuls of the MLP.
+    let gemms: Vec<GemmShape> = func
+        .ops
+        .iter()
+        .filter_map(|op| match classify(op) {
+            OpClass::SystolicGemm { gemm, .. } => Some(gemm),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        gemms,
+        vec![
+            GemmShape::new(32, 784, 512),
+            GemmShape::new(32, 512, 256),
+            GemmShape::new(32, 256, 10),
+        ]
+    );
+    // And the two ReLUs (maximum) + two bias adds.
+    let ew = func
+        .ops
+        .iter()
+        .filter(|op| matches!(classify(op), OpClass::Elementwise { .. }))
+        .count();
+    assert!(ew >= 4, "elementwise ops {ew}");
+}
+
+#[test]
+fn transformer_stablehlo_parses_with_attention_gemms() {
+    let Some(text) = artifact("transformer_s128_d256_h4.stablehlo.txt") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let module = parse_module(&text).expect("parse transformer stablehlo");
+    let func = module.entry().expect("entry");
+
+    let mut gemm_count = 0usize;
+    let mut total_macs: u64 = 0;
+    for op in &func.ops {
+        if let OpClass::SystolicGemm { gemm, count } = classify(op) {
+            gemm_count += 1;
+            total_macs += gemm.macs() * count;
+        }
+    }
+    // qkv/out/up/down + 2 per head (4 heads) = 12 dot_generals.
+    assert!(gemm_count >= 12, "gemms {gemm_count}");
+    // MAC count must match the analytic transformer topology.
+    let expected = scalesim_tpu::workloads::models::transformer_block(128, 256, 4).total_macs();
+    assert_eq!(total_macs, expected);
+
+    // Softmax pieces show up as reductions + elementwise.
+    let has_reduce = func
+        .ops
+        .iter()
+        .any(|op| matches!(classify(op), OpClass::Reduction { .. }));
+    assert!(has_reduce, "expected softmax reductions");
+}
+
+#[test]
+fn elementwise_artifacts_classify_to_learned_path() {
+    for (name, want) in [
+        ("ew_add_1024x1024.stablehlo.txt", "add"),
+        ("ew_relu_1024x1024.stablehlo.txt", "maximum"),
+    ] {
+        let Some(text) = artifact(name) else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let module = parse_module(&text).expect("parse ew stablehlo");
+        let func = module.entry().unwrap();
+        let found = func.ops.iter().any(|op| {
+            matches!(
+                classify(op),
+                OpClass::Elementwise { kind, ref out }
+                    if kind.name() == want && out.num_elements() == 1024 * 1024
+            )
+        });
+        assert!(found, "{name}: no {want} op over 1024x1024");
+    }
+}
+
+#[test]
+fn pallas_lowered_stablehlo_of_gemm_still_parses() {
+    // The *runtime* artifacts are HLO, but the Pallas path can also be
+    // exported as StableHLO (call-form). The parser + estimator must not
+    // choke on it: regenerate a small one inline from the hlo text is not
+    // possible, so parse the mlp HLO's stablehlo sibling and ensure calls
+    // are followed (callee recursion covered by unit tests).
+    let Some(text) = artifact("gemm_m128_k256_n512.stablehlo.txt") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let module = parse_module(&text).expect("parse");
+    assert!(module.entry().is_some());
+}

@@ -1,0 +1,135 @@
+//! Integration: the full modeling pipeline across modules — measure →
+//! calibrate → train → parse → route → estimate → serve — without
+//! touching the filesystem artifacts (inline StableHLO).
+
+use std::sync::Arc;
+
+use scalesim_tpu::coordinator::{serve_lines, Estimator};
+use scalesim_tpu::experiments::assets;
+use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+use scalesim_tpu::tpu::{Hardware, TpuV4Model};
+use scalesim_tpu::util::json::Json;
+
+const MODEL_TEXT: &str = r#"
+module @it_model {
+  func.func public @main(%x: tensor<64x784xf32>, %w1: tensor<784x512xf32>, %b1: tensor<64x512xf32>, %w2: tensor<512x10xf32>) -> (tensor<64x10xf32>) {
+    %0 = stablehlo.dot_general %x, %w1, contracting_dims = [1] x [0] : (tensor<64x784xf32>, tensor<784x512xf32>) -> tensor<64x512xf32>
+    %1 = stablehlo.add %0, %b1 : tensor<64x512xf32>
+    %cst = stablehlo.constant dense<0.0> : tensor<f32>
+    %2 = stablehlo.broadcast_in_dim %cst, dims = [] : (tensor<f32>) -> tensor<64x512xf32>
+    %3 = stablehlo.maximum %1, %2 : tensor<64x512xf32>
+    %4 = stablehlo.dot_general %3, %w2, contracting_dims = [1] x [0] : (tensor<64x512xf32>, tensor<512x10xf32>) -> tensor<64x10xf32>
+    return %4 : tensor<64x10xf32>
+  }
+}
+"#;
+
+fn build_estimator() -> Estimator {
+    let mut hw = TpuV4Model::new(77);
+    assets::build_estimator(&mut hw, &ScaleConfig::tpu_v4(), 300, 2, 9)
+}
+
+#[test]
+fn whole_pipeline_estimates_model() {
+    let est = build_estimator();
+    let module = parse_module(MODEL_TEXT).unwrap();
+    let report = est.estimate_module(&module);
+
+    assert_eq!(report.ops.len(), 6);
+    assert!(report.total_us > 0.0);
+    assert!(report.systolic_us > 0.0);
+    assert!(report.elementwise_us > 0.0);
+    // The two GEMMs must dominate this MLP-like graph.
+    assert!(report.systolic_us > report.elementwise_us);
+    // All elementwise ops covered by learned models (add/maximum trained).
+    assert!(report.coverage() > 0.6, "coverage {}", report.coverage());
+}
+
+#[test]
+fn estimates_are_plausible_vs_device() {
+    // The estimator's GEMM predictions should track the device it was
+    // calibrated on within a loose band (it IS a model, not the device).
+    let est = build_estimator();
+    let mut hw = TpuV4Model::new(77);
+    for g in [
+        GemmShape::new(96, 96, 96),
+        GemmShape::new(640, 384, 512),
+        GemmShape::new(2048, 1536, 1024),
+    ] {
+        let cycles = scalesim_tpu::scalesim::simulate_gemm(&est.config, g).total_cycles();
+        let predicted = est.calibration.cycles_to_us(&g, cycles);
+        let measured = scalesim_tpu::tpu::measure_gemm_median(&mut hw, g, 5);
+        let ratio = predicted / measured;
+        assert!(
+            ratio > 0.5 && ratio < 2.0,
+            "{g}: predicted {predicted:.1} vs measured {measured:.1}"
+        );
+    }
+}
+
+#[test]
+fn service_round_trip_json() {
+    let est = Arc::new(build_estimator());
+    let dir = std::env::temp_dir().join("scalesim_it_service");
+    std::fs::create_dir_all(&dir).unwrap();
+    let module_path = dir.join("model.stablehlo.txt");
+    std::fs::write(&module_path, MODEL_TEXT).unwrap();
+
+    let lines = vec![
+        r#"{"type":"gemm","m":256,"k":256,"n":256}"#.to_string(),
+        format!(r#"{{"type":"module","path":"{}"}}"#, module_path.display()),
+        r#"{"type":"elementwise","op":"add","dims":[512,512]}"#.to_string(),
+        r#"{"type":"elementwise","op":"tanh","dims":[64,64]}"#.to_string(),
+    ];
+    let responses = serve_lines(est, &lines, 4);
+    assert_eq!(responses.len(), 4);
+
+    let r0 = Json::parse(&responses[0]).unwrap();
+    assert_eq!(r0.get("ok"), Some(&Json::Bool(true)));
+    assert!(r0.req_f64("cycles").unwrap() > 0.0);
+
+    let r1 = Json::parse(&responses[1]).unwrap();
+    assert_eq!(r1.req_str("type").unwrap(), "module");
+    assert_eq!(r1.req_f64("num_ops").unwrap(), 6.0);
+
+    let r2 = Json::parse(&responses[2]).unwrap();
+    assert_eq!(r2.req_str("source").unwrap(), "learned");
+
+    // tanh has no dedicated model: proxied through add.
+    let r3 = Json::parse(&responses[3]).unwrap();
+    assert_eq!(r3.req_str("source").unwrap(), "learned-proxy");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn assets_roundtrip_preserves_estimates() {
+    let est = build_estimator();
+    let dir = std::env::temp_dir().join("scalesim_it_assets");
+    std::fs::remove_dir_all(&dir).ok();
+    assets::save_assets(&dir, &est).unwrap();
+    let est2 = assets::load_assets(&dir).unwrap();
+
+    let module = parse_module(MODEL_TEXT).unwrap();
+    let a = est.estimate_module(&module);
+    let b = est2.estimate_module(&module);
+    assert!((a.total_us - b.total_us).abs() < 1e-9);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hardware_backends_share_one_interface() {
+    // The experiments only see `dyn Hardware`; verify object safety and
+    // sane outputs through the trait object.
+    let mut backends: Vec<Box<dyn Hardware>> = vec![Box::new(TpuV4Model::new(1))];
+    for hw in backends.iter_mut() {
+        let t = hw.gemm_latency_us(GemmShape::new(128, 128, 128));
+        assert!(t.is_finite() && t > 0.0);
+        let e = hw.elementwise_latency_us(
+            scalesim_tpu::frontend::EwKind::Add,
+            &[256, 256],
+        );
+        assert!(e.is_finite() && e > 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration: the PJRT runtime executing real AOT artifacts, with
+//! cross-language numeric checks (Rust-computed oracles vs the
+//! JAX/Pallas-lowered executables).
+
+use scalesim_tpu::runtime::{f32_literal, hlo_gen, Runtime};
+
+#[test]
+fn synthesised_gemm_matches_rust_oracle() {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let (m, k, n) = (17, 23, 11);
+    let exe = rt
+        .compile_text("gemm", &hlo_gen::gemm_hlo(m, k, n))
+        .unwrap();
+
+    // Deterministic inputs.
+    let a_data: Vec<f32> = (0..m * k).map(|i| ((i % 7) as f32) * 0.5 - 1.0).collect();
+    let b_data: Vec<f32> = (0..k * n).map(|i| ((i % 5) as f32) * 0.25).collect();
+    let a = f32_literal(&[m, k], |i| a_data[i]).unwrap();
+    let b = f32_literal(&[k, n], |i| b_data[i]).unwrap();
+    let out = exe.run_f32(&[a, b]).unwrap();
+
+    // Naive Rust matmul oracle.
+    let mut expect = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += a_data[i * k + kk] * b_data[kk * n + j];
+            }
+            expect[i * n + j] = acc;
+        }
+    }
+    assert_eq!(out.len(), expect.len());
+    for (o, e) in out.iter().zip(&expect) {
+        assert!((o - e).abs() < 1e-3, "{o} vs {e}");
+    }
+}
+
+#[test]
+fn aot_gemm_artifact_matches_rust_oracle() {
+    // The Pallas-lowered artifact must compute the same matmul as a naive
+    // Rust triple loop — the strongest cross-layer correctness check.
+    let path = std::path::Path::new("artifacts/gemm_m128_k256_n512.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt.compile_file(path).expect("compile artifact");
+
+    let (m, k, n) = (128usize, 256usize, 512usize);
+    let a_data: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32) * 0.1 - 0.6).collect();
+    let b_data: Vec<f32> = (0..k * n).map(|i| ((i % 11) as f32) * 0.2 - 1.0).collect();
+    let a = f32_literal(&[m, k], |i| a_data[i]).unwrap();
+    let b = f32_literal(&[k, n], |i| b_data[i]).unwrap();
+    let out = exe.run_f32(&[a, b]).expect("execute artifact");
+    assert_eq!(out.len(), m * n);
+
+    // Spot-check a grid of output elements against the oracle.
+    for &(i, j) in &[(0, 0), (0, 511), (127, 0), (127, 511), (64, 256), (13, 87)] {
+        let mut acc = 0f32;
+        for kk in 0..k {
+            acc += a_data[i * k + kk] * b_data[kk * n + j];
+        }
+        let got = out[i * n + j];
+        assert!(
+            (got - acc).abs() < 1e-2 * acc.abs().max(1.0),
+            "C[{i},{j}] = {got}, expected {acc}"
+        );
+    }
+}
+
+#[test]
+fn aot_relu_artifact_behaviour() {
+    let path = std::path::Path::new("artifacts/ew_relu_1024x1024.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt.compile_file(path).expect("compile relu artifact");
+    let x = f32_literal(&[1024, 1024], |i| (i as f32 % 9.0) - 4.0).unwrap();
+    let out = exe.run_f32(&[x]).expect("execute relu");
+    assert_eq!(out.len(), 1024 * 1024);
+    assert!(out.iter().all(|&v| v >= 0.0));
+    // max(x, 0) of the pattern (-4..=4) keeps positives intact.
+    assert_eq!(out[5], 1.0); // (5 % 9) - 4 = 1
+    assert_eq!(out[0], 0.0); // -4 clamps
+}
+
+#[test]
+fn mlp_artifact_executes_finite() {
+    let path = std::path::Path::new("artifacts/mlp_b32.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt.compile_file(path).expect("compile mlp artifact");
+    let x = f32_literal(&[32, 784], |i| ((i % 255) as f32) / 255.0).unwrap();
+    let out = exe.run_f32(&[x]).expect("execute mlp");
+    assert_eq!(out.len(), 32 * 10);
+    assert!(out.iter().all(|v| v.is_finite()));
+    // Logits should not be identical across classes (weights are random
+    // but fixed at AOT time).
+    let first_row = &out[..10];
+    assert!(first_row.iter().any(|&v| (v - first_row[0]).abs() > 1e-6));
+}
+
+#[test]
+fn timing_is_reproducible_order_of_magnitude() {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt
+        .compile_text("add", &hlo_gen::binary_ew_hlo("add", &[512, 512]))
+        .unwrap();
+    let a = f32_literal(&[512, 512], |i| i as f32).unwrap();
+    let b = f32_literal(&[512, 512], |i| i as f32).unwrap();
+    let t1 = exe.time_us(&[a.clone(), b.clone()], 3, 9).unwrap();
+    let t2 = exe.time_us(&[a, b], 0, 9).unwrap();
+    let m1 = scalesim_tpu::util::stats::median(&t1);
+    let m2 = scalesim_tpu::util::stats::median(&t2);
+    assert!(m1 > 0.0 && m2 > 0.0);
+    assert!(m1 / m2 < 20.0 && m2 / m1 < 20.0, "{m1} vs {m2}");
+}

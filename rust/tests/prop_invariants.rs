@@ -1,0 +1,189 @@
+//! Property-based tests over coordinator/simulator invariants.
+//!
+//! The offline registry has no proptest, so these are randomized-input
+//! property checks driven by the crate's own deterministic PRNG: each
+//! property is evaluated over a few hundred random cases with a fixed
+//! seed (failures reproduce exactly).
+
+use scalesim_tpu::calibrate::Regime;
+use scalesim_tpu::coordinator::parallel_map;
+use scalesim_tpu::frontend::types::{DType, TensorType};
+use scalesim_tpu::frontend::{classify, parse_module, EwKind, OpClass};
+use scalesim_tpu::learned::featurize;
+use scalesim_tpu::scalesim::{
+    simulate_gemm, simulate_partitioned, Dataflow, GemmShape, PartitionAxis, ScaleConfig,
+};
+use scalesim_tpu::tpu::vpu;
+use scalesim_tpu::util::prng::Prng;
+
+fn random_gemm(prng: &mut Prng, max: usize) -> GemmShape {
+    GemmShape::new(
+        prng.int_range(1, max as i64) as usize,
+        prng.int_range(1, max as i64) as usize,
+        prng.int_range(1, max as i64) as usize,
+    )
+}
+
+#[test]
+fn prop_simulation_invariants_hold_for_random_shapes() {
+    let mut prng = Prng::new(2024);
+    for df in [
+        Dataflow::OutputStationary,
+        Dataflow::WeightStationary,
+        Dataflow::InputStationary,
+    ] {
+        let mut config = ScaleConfig::tpu_v4();
+        config.dataflow = df;
+        for _ in 0..300 {
+            let g = random_gemm(&mut prng, 3000);
+            let r = simulate_gemm(&config, g);
+            // Invariants: cycle decomposition, bounded ratios, work done.
+            assert_eq!(
+                r.total_cycles(),
+                r.compute_cycles + r.stall_cycles + r.initial_fill_cycles,
+                "{df} {g}"
+            );
+            assert!(r.utilisation > 0.0 && r.utilisation <= 1.0, "{df} {g}");
+            assert!(
+                r.mapping_efficiency > 0.0 && r.mapping_efficiency <= 1.0 + 1e-12,
+                "{df} {g}"
+            );
+            // Enough cycles to issue every MAC at peak rate.
+            let min_cycles = (g.macs() as f64 / config.peak_macs_per_cycle()).ceil() as u64;
+            assert!(r.total_cycles() >= min_cycles, "{df} {g}");
+            // DRAM reads at least one copy of each operand.
+            assert!(r.ifmap_dram_reads >= g.a_words(), "{df} {g}");
+            assert!(r.filter_dram_reads >= g.b_words(), "{df} {g}");
+            assert!(r.ofmap_dram_writes >= g.c_words(), "{df} {g}");
+        }
+    }
+}
+
+#[test]
+fn prop_partitioning_conserves_work_and_never_slows_down_makespan_much() {
+    let mut prng = Prng::new(7);
+    let config = ScaleConfig::tpu_v4();
+    for _ in 0..150 {
+        let g = random_gemm(&mut prng, 4096);
+        let cores = 1 + prng.index(8);
+        let axis = if prng.index(2) == 0 {
+            PartitionAxis::M
+        } else {
+            PartitionAxis::N
+        };
+        let p = simulate_partitioned(&config, g, cores, axis);
+        let shard_macs: u64 = p.shards.iter().map(|s| s.gemm.macs()).sum();
+        assert_eq!(shard_macs, g.macs(), "{g} cores={cores} {axis}");
+        // Makespan never exceeds the single-core run (shards are subsets).
+        let single = simulate_gemm(&config, g);
+        assert!(
+            p.makespan_cycles <= single.total_cycles(),
+            "{g} cores={cores} {axis}"
+        );
+    }
+}
+
+#[test]
+fn prop_regime_routing_total_and_exclusive() {
+    let mut prng = Prng::new(99);
+    for _ in 0..1000 {
+        let g = random_gemm(&mut prng, 8192);
+        let regime = Regime::of_gemm(&g);
+        // Exactly one regime claims each shape.
+        let claims = Regime::ALL
+            .iter()
+            .filter(|r| Regime::of_gemm(&g) == **r)
+            .count();
+        assert_eq!(claims, 1);
+        // Routing is by max dim.
+        let maxdim = g.m.max(g.k).max(g.n);
+        match regime {
+            Regime::Small => assert!(maxdim <= 128),
+            Regime::Medium => assert!(maxdim > 128 && maxdim <= 1024),
+            Regime::Large => assert!(maxdim > 1024),
+        }
+    }
+}
+
+#[test]
+fn prop_classifier_routes_every_generated_dot_general() {
+    // Generate random matmul modules textually and assert the classifier
+    // always produces the right GEMM (parser + classifier round-trip).
+    let mut prng = Prng::new(5);
+    for _ in 0..120 {
+        let (m, k, n) = (
+            prng.int_range(1, 2048) as usize,
+            prng.int_range(1, 2048) as usize,
+            prng.int_range(1, 2048) as usize,
+        );
+        let text = format!(
+            r#"module {{ func.func @main(%a: tensor<{m}x{k}xf32>, %b: tensor<{k}x{n}xf32>) -> tensor<{m}x{n}xf32> {{
+  %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<{m}x{k}xf32>, tensor<{k}x{n}xf32>) -> tensor<{m}x{n}xf32>
+  return %0 : tensor<{m}x{n}xf32>
+}} }}"#
+        );
+        let module = parse_module(&text).unwrap();
+        match classify(&module.entry().unwrap().ops[0]) {
+            OpClass::SystolicGemm { gemm, count } => {
+                assert_eq!(gemm, GemmShape::new(m, k, n));
+                assert_eq!(count, 1);
+            }
+            other => panic!("expected gemm, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn prop_vpu_latency_monotone_and_featurize_total() {
+    let mut prng = Prng::new(31);
+    let params = scalesim_tpu::tpu::VpuParams::default();
+    for _ in 0..500 {
+        let rank = 1 + prng.index(3);
+        let dims: Vec<usize> = (0..rank)
+            .map(|_| prng.int_range(1, 512) as usize)
+            .collect();
+        // Doubling the leading dim cannot reduce latency.
+        let mut bigger = dims.clone();
+        bigger[0] *= 2;
+        let t1 = vpu::latency_us(&params, EwKind::Add, &dims);
+        let t2 = vpu::latency_us(&params, EwKind::Add, &bigger);
+        assert!(
+            t2 > t1 * 0.96,
+            "latency dropped: {dims:?} {t1} -> {bigger:?} {t2}"
+        );
+        // Features are finite and the element count matches.
+        let f = featurize(&dims);
+        assert!(f.iter().all(|v| v.is_finite()));
+        let elems: u64 = dims.iter().map(|&d| d as u64).product();
+        assert_eq!(f[0] as u64, elems);
+    }
+}
+
+#[test]
+fn prop_parallel_map_equals_serial_for_random_workloads() {
+    let mut prng = Prng::new(63);
+    for _ in 0..20 {
+        let n = prng.index(200);
+        let items: Vec<u64> = (0..n).map(|_| prng.next_u64() % 1000).collect();
+        let serial: Vec<u64> = items.iter().map(|&x| x * 3 + 1).collect();
+        for workers in [1, 2, 7, 16] {
+            let par = parallel_map(&items, workers, |&x| x * 3 + 1);
+            assert_eq!(par, serial);
+        }
+    }
+}
+
+#[test]
+fn prop_tensor_type_roundtrip() {
+    let mut prng = Prng::new(17);
+    for _ in 0..300 {
+        let rank = prng.index(5);
+        let dims: Vec<usize> = (0..rank)
+            .map(|_| prng.int_range(1, 10_000) as usize)
+            .collect();
+        let t = TensorType::new(dims, DType::Bf16);
+        let s = format!("{t}");
+        let t2 = TensorType::parse(&s).unwrap();
+        assert_eq!(t, t2);
+    }
+}

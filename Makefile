@@ -1,0 +1,21 @@
+# Convenience targets; the Rust crate itself needs only cargo.
+
+.PHONY: build test bench artifacts fmt
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench paper
+	cargo bench --bench cache
+
+fmt:
+	cargo fmt --all --check
+
+# AOT-compile the JAX/Pallas workloads into artifacts/ (requires jax).
+# Rust tests that consume artifacts self-skip when this has not run.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -22,7 +22,7 @@ use scalesim_tpu::coordinator::Estimator;
 use scalesim_tpu::experiments::assets;
 use scalesim_tpu::frontend::parse_module;
 use scalesim_tpu::report::Table;
-use scalesim_tpu::runtime::{f32_literal, Runtime};
+use scalesim_tpu::runtime::{f32_literal, Literal, Runtime};
 use scalesim_tpu::scalesim::ScaleConfig;
 use scalesim_tpu::tpu::PjrtHardware;
 use scalesim_tpu::util::stats;
@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
 
         // Measured: execute the Pallas-path HLO on PJRT.
         let exe = runtime.compile_file(&hlo_path)?;
-        let inputs: Vec<xla::Literal> = module
+        let inputs: Vec<Literal> = module
             .entry()
             .expect("entry fn")
             .arg_types

@@ -1,0 +1,145 @@
+//! Benchmark: the sharded shape cache on repeated-shape traffic.
+//!
+//! The streaming service's workload is dominated by shape repetition
+//! (many models share layer dimensions), so the headline number is
+//! estimate throughput on a request mix with a small shape vocabulary,
+//! cached vs uncached. `harness = false` like benches/paper.rs (no
+//! criterion in the offline registry). Run via `cargo bench --bench
+//! cache`; results are recorded in EXPERIMENTS.md §Perf Cache.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use scalesim_tpu::calibrate::fit_regime_calibration;
+use scalesim_tpu::coordinator::{serve_stream, Estimator, StreamOptions};
+use scalesim_tpu::frontend::classify::OpClass;
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+
+fn estimator() -> Arc<Estimator> {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Arc::new(Estimator::new(
+        ScaleConfig::tpu_v4(),
+        fit_regime_calibration(&obs).unwrap(),
+    ))
+}
+
+/// Transformer-ish shape vocabulary: a few dozen distinct GEMMs that
+/// every request re-draws from.
+fn vocabulary() -> Vec<GemmShape> {
+    let mut v = Vec::new();
+    for seq in [128usize, 512, 2048] {
+        for d in [768usize, 1024, 4096] {
+            v.push(GemmShape::new(seq, d, d));
+            v.push(GemmShape::new(seq, d, 4 * d));
+            v.push(GemmShape::new(seq, 4 * d, d));
+        }
+    }
+    v
+}
+
+/// Estimate-layer throughput: raw estimate_op calls, no JSON.
+fn bench_estimate_layer(reqs: usize) {
+    let vocab = vocabulary();
+    let classes: Vec<OpClass> = (0..reqs)
+        .map(|i| OpClass::SystolicGemm {
+            gemm: vocab[i % vocab.len()],
+            count: 1,
+        })
+        .collect();
+
+    let run = |est: &Estimator| -> (f64, f64) {
+        let t0 = Instant::now();
+        let mut checksum = 0.0f64;
+        for c in &classes {
+            checksum += est.estimate_op(0, "dot", c).latency_us;
+        }
+        (t0.elapsed().as_secs_f64(), checksum)
+    };
+
+    let est = estimator();
+    est.cache.set_enabled(false);
+    let (uncached_s, sum_u) = run(&est);
+
+    est.cache.set_enabled(true);
+    let (_prime_s, _) = run(&est); // first pass fills the 27 entries
+    let (cached_s, sum_c) = run(&est);
+
+    assert_eq!(sum_u.to_bits(), sum_c.to_bits(), "cached != uncached");
+    let stats = est.cache.stats();
+    println!(
+        "  estimate layer, {reqs} requests over {} shapes:",
+        vocabulary().len()
+    );
+    println!(
+        "    uncached: {:>8.1} ms  ({:>9.0} req/s)",
+        uncached_s * 1e3,
+        reqs as f64 / uncached_s
+    );
+    println!(
+        "    cached:   {:>8.1} ms  ({:>9.0} req/s)   speedup {:.1}x",
+        cached_s * 1e3,
+        reqs as f64 / cached_s,
+        uncached_s / cached_s
+    );
+    println!(
+        "    cache: {} hits / {} misses ({} entries)",
+        stats.hits, stats.misses, stats.entries
+    );
+}
+
+/// End-to-end streaming throughput: JSONL in, JSONL out, worker pool,
+/// reorder buffer — the `scalesim-tpu serve` hot path.
+fn bench_serve_stream(reqs: usize) {
+    let vocab = vocabulary();
+    let mut input = String::new();
+    for i in 0..reqs {
+        let g = vocab[i % vocab.len()];
+        input.push_str(&format!(
+            "{{\"type\":\"gemm\",\"m\":{},\"k\":{},\"n\":{}}}\n",
+            g.m, g.k, g.n
+        ));
+    }
+    let opts = StreamOptions {
+        workers: 8,
+        queue_cap: 64,
+    };
+
+    let run = |est: Arc<Estimator>| -> (f64, Vec<u8>) {
+        let mut out = Vec::with_capacity(reqs * 64);
+        let t0 = Instant::now();
+        serve_stream(est, input.as_bytes(), &mut out, &opts).expect("serve");
+        (t0.elapsed().as_secs_f64(), out)
+    };
+
+    let uncached_est = estimator();
+    uncached_est.cache.set_enabled(false);
+    let (uncached_s, out_u) = run(Arc::clone(&uncached_est));
+
+    let cached_est = estimator();
+    let (cached_s, out_c) = run(Arc::clone(&cached_est));
+
+    assert_eq!(out_u, out_c, "stream outputs must be identical");
+    println!("  serve_stream (8 workers), {reqs} JSONL requests:");
+    println!(
+        "    uncached: {:>8.1} ms  ({:>9.0} req/s)",
+        uncached_s * 1e3,
+        reqs as f64 / uncached_s
+    );
+    println!(
+        "    cached:   {:>8.1} ms  ({:>9.0} req/s)   speedup {:.1}x",
+        cached_s * 1e3,
+        reqs as f64 / cached_s,
+        uncached_s / cached_s
+    );
+}
+
+fn main() {
+    println!("== shape cache: repeated-shape estimate throughput ==");
+    bench_estimate_layer(100_000);
+    println!();
+    bench_serve_stream(50_000);
+}

@@ -1,0 +1,364 @@
+//! Sharded, shape-keyed memo cache for operator cost estimates.
+//!
+//! Downstream compiler tooling queries the service with heavy shape
+//! repetition — many models share layer dimensions — so the estimator
+//! memoises per-op results keyed by (op class, shape, dtype). The map is
+//! striped over N mutex-guarded shards (the key hash picks the shard) so
+//! concurrent workers rarely contend on the same lock, and hit/miss plus
+//! per-source counters are lock-free atomics. Cached and uncached
+//! estimates are bit-identical: every input of the cost functions is part
+//! of [`ShapeKey`]. Measurements live in EXPERIMENTS.md §Perf Cache.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::frontend::classify::{EwKind, OpClass};
+use crate::frontend::types::DType;
+use crate::scalesim::topology::GemmShape;
+use crate::util::json::Json;
+
+use super::estimator::{EstimateSource, OpEstimate};
+
+/// Default stripe count: enough shards that the default worker pool (up
+/// to 16 threads) rarely collides on one lock.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// The shape-level identity of an op's cost.
+///
+/// Everything the estimator's cost functions read is captured here, so an
+/// entry is valid for any op instance with the same class/shape/dtype
+/// regardless of its position or SSA name in the module.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ShapeKey {
+    /// Systolic GEMM (dot_general, or convolution after im2col lowering).
+    Gemm { gemm: GemmShape, count: u64 },
+    /// Elementwise op over an output tensor.
+    Elementwise {
+        kind: EwKind,
+        dims: Vec<usize>,
+        dtype: DType,
+    },
+}
+
+impl ShapeKey {
+    /// The cacheable identity of a classified op, if it has one. The
+    /// bandwidth/free classes are a handful of arithmetic ops — cheaper
+    /// than the map probe they would save.
+    pub fn of_class(class: &OpClass) -> Option<ShapeKey> {
+        match class {
+            OpClass::SystolicGemm { gemm, count }
+            | OpClass::SystolicConv { gemm, count, .. } => Some(ShapeKey::Gemm {
+                gemm: *gemm,
+                count: *count,
+            }),
+            OpClass::Elementwise { kind, out } => Some(ShapeKey::Elementwise {
+                kind: *kind,
+                dims: out.dims.clone(),
+                dtype: out.dtype,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// The cached cost of one shape: every [`OpEstimate`] field that does not
+/// depend on the op's position in its module.
+#[derive(Debug, Clone)]
+pub struct CachedCost {
+    pub source: EstimateSource,
+    pub cycles: Option<u64>,
+    pub latency_us: f64,
+    pub note: String,
+}
+
+impl CachedCost {
+    pub fn of(est: &OpEstimate) -> CachedCost {
+        CachedCost {
+            source: est.source.clone(),
+            cycles: est.cycles,
+            latency_us: est.latency_us,
+            note: est.note.clone(),
+        }
+    }
+
+    /// Rehydrate a full estimate row for a concrete op instance.
+    pub fn into_estimate(self, index: usize, op_name: &str) -> OpEstimate {
+        OpEstimate {
+            index,
+            op_name: op_name.to_string(),
+            source: self.source,
+            cycles: self.cycles,
+            latency_us: self.latency_us,
+            note: self.note,
+        }
+    }
+}
+
+/// A monotonic snapshot of the cache and routing counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: u64,
+    pub systolic: u64,
+    pub learned: u64,
+    pub learned_proxy: u64,
+    pub bandwidth: u64,
+    pub free: u64,
+    pub fallback: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Serialise for the service's `{"type":"stats"}` response.
+    pub fn to_json(&self) -> Json {
+        let mut sources = Json::obj();
+        sources
+            .set("systolic", Json::Num(self.systolic as f64))
+            .set("learned", Json::Num(self.learned as f64))
+            .set("learned-proxy", Json::Num(self.learned_proxy as f64))
+            .set("bandwidth", Json::Num(self.bandwidth as f64))
+            .set("free", Json::Num(self.free as f64))
+            .set("fallback", Json::Num(self.fallback as f64));
+        let mut o = Json::obj();
+        o.set("cache_hits", Json::Num(self.hits as f64))
+            .set("cache_misses", Json::Num(self.misses as f64))
+            .set("cache_entries", Json::Num(self.entries as f64))
+            .set("hit_rate", Json::Num(self.hit_rate()))
+            .set("sources", sources);
+        o
+    }
+}
+
+fn source_index(src: &EstimateSource) -> usize {
+    match src {
+        EstimateSource::SystolicCalibrated => 0,
+        EstimateSource::Learned => 1,
+        EstimateSource::LearnedProxy(_) => 2,
+        EstimateSource::Bandwidth => 3,
+        EstimateSource::Free => 4,
+        EstimateSource::Fallback => 5,
+    }
+}
+
+/// The mutex-striped shape cache itself.
+pub struct ShardedCache {
+    shards: Vec<Mutex<HashMap<ShapeKey, CachedCost>>>,
+    enabled: AtomicBool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Indexed by [`source_index`]: systolic, learned, learned-proxy,
+    /// bandwidth, free, fallback.
+    sources: [AtomicU64; 6],
+}
+
+impl ShardedCache {
+    pub fn new() -> ShardedCache {
+        ShardedCache::with_shards(DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(n: usize) -> ShardedCache {
+        let n = n.max(1);
+        ShardedCache {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            enabled: AtomicBool::new(true),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            sources: Default::default(),
+        }
+    }
+
+    /// Turn memoisation on/off (off = every lookup misses silently; used
+    /// by the uncached baseline in benches and tests).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    fn shard_of(&self, key: &ShapeKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Probe the cache, counting a hit or a miss.
+    pub fn lookup(&self, key: &ShapeKey) -> Option<CachedCost> {
+        if !self.is_enabled() {
+            return None;
+        }
+        let got = self.shards[self.shard_of(key)]
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned();
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Store a computed cost. Two workers racing on the same fresh key
+    /// both compute and both store — the values are identical because the
+    /// cost functions are deterministic in the key.
+    pub fn store(&self, key: ShapeKey, cost: CachedCost) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.shards[self.shard_of(&key)]
+            .lock()
+            .unwrap()
+            .insert(key, cost);
+    }
+
+    /// Count which model answered an op (hit or miss).
+    pub fn record_source(&self, src: &EstimateSource) {
+        self.sources[source_index(src)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all entries (counters are kept; they are monotonic).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+            systolic: self.sources[0].load(Ordering::Relaxed),
+            learned: self.sources[1].load(Ordering::Relaxed),
+            learned_proxy: self.sources[2].load(Ordering::Relaxed),
+            bandwidth: self.sources[3].load(Ordering::Relaxed),
+            free: self.sources[4].load(Ordering::Relaxed),
+            fallback: self.sources[5].load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for ShardedCache {
+    fn default() -> Self {
+        ShardedCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm_key(d: usize) -> ShapeKey {
+        ShapeKey::Gemm {
+            gemm: GemmShape::new(d, d, d),
+            count: 1,
+        }
+    }
+
+    fn cost(us: f64) -> CachedCost {
+        CachedCost {
+            source: EstimateSource::SystolicCalibrated,
+            cycles: Some(42),
+            latency_us: us,
+            note: "t".into(),
+        }
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let c = ShardedCache::with_shards(4);
+        assert!(c.lookup(&gemm_key(64)).is_none());
+        c.store(gemm_key(64), cost(1.5));
+        let hit = c.lookup(&gemm_key(64)).expect("hit");
+        assert_eq!(hit.latency_us, 1.5);
+        assert!(c.lookup(&gemm_key(128)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_cache_never_hits_or_counts() {
+        let c = ShardedCache::new();
+        c.set_enabled(false);
+        c.store(gemm_key(64), cost(1.0));
+        assert!(c.lookup(&gemm_key(64)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+        c.set_enabled(true);
+        c.store(gemm_key(64), cost(1.0));
+        assert!(c.lookup(&gemm_key(64)).is_some());
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let c = ShardedCache::with_shards(2);
+        for d in [8usize, 16, 32, 64, 128, 256] {
+            c.store(gemm_key(d), cost(d as f64));
+        }
+        assert_eq!(c.len(), 6);
+        for d in [8usize, 16, 32, 64, 128, 256] {
+            assert_eq!(c.lookup(&gemm_key(d)).unwrap().latency_us, d as f64);
+        }
+        // Same dims, different count → different key.
+        let k2 = ShapeKey::Gemm {
+            gemm: GemmShape::new(8, 8, 8),
+            count: 2,
+        };
+        assert!(c.lookup(&k2).is_none());
+    }
+
+    #[test]
+    fn elementwise_keys_include_dtype() {
+        let a = ShapeKey::Elementwise {
+            kind: EwKind::Add,
+            dims: vec![128, 128],
+            dtype: DType::Bf16,
+        };
+        let b = ShapeKey::Elementwise {
+            kind: EwKind::Add,
+            dims: vec![128, 128],
+            dtype: DType::F32,
+        };
+        assert_ne!(a, b);
+        let c = ShardedCache::new();
+        c.store(a.clone(), cost(1.0));
+        assert!(c.lookup(&b).is_none());
+        assert!(c.lookup(&a).is_some());
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let c = ShardedCache::new();
+        c.record_source(&EstimateSource::Learned);
+        c.record_source(&EstimateSource::Fallback);
+        let j = c.stats().to_json();
+        assert_eq!(j.req_f64("cache_hits").unwrap(), 0.0);
+        let sources = j.get("sources").unwrap();
+        assert_eq!(sources.req_f64("learned").unwrap(), 1.0);
+        assert_eq!(sources.req_f64("fallback").unwrap(), 1.0);
+    }
+}

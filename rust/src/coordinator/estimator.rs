@@ -15,6 +15,8 @@ use crate::learned::hgbr::CompiledHgbr;
 use crate::learned::Hgbr;
 use crate::scalesim::{simulate_gemm, ScaleConfig};
 
+use super::cache::{CachedCost, ShapeKey, ShardedCache};
+
 /// How one op's latency was obtained.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EstimateSource {
@@ -89,8 +91,14 @@ pub struct Estimator {
     /// Flattened inference forms (built lazily from `learned`; see
     /// EXPERIMENTS.md §Perf L3 — ~4x faster than tree walking).
     compiled: std::sync::RwLock<HashMap<String, CompiledHgbr>>,
-    /// HBM bandwidth for the data-movement fallback, bytes/µs.
-    pub hbm_bytes_per_us: f64,
+    /// HBM bandwidth for the data-movement fallback, bytes/µs. Private:
+    /// it feeds cached costs, so mutation must go through
+    /// [`Estimator::set_hbm_bytes_per_us`], which invalidates the cache.
+    hbm_bytes_per_us: f64,
+    /// Sharded shape-keyed memo cache: repeated shapes (the common case
+    /// when many models share layer dimensions) skip cycle-accurate
+    /// re-simulation entirely. See [`super::cache`].
+    pub cache: ShardedCache,
 }
 
 impl Estimator {
@@ -101,6 +109,7 @@ impl Estimator {
             learned: HashMap::new(),
             compiled: std::sync::RwLock::new(HashMap::new()),
             hbm_bytes_per_us: 1.2e6,
+            cache: ShardedCache::new(),
         }
     }
 
@@ -110,6 +119,20 @@ impl Estimator {
             .unwrap()
             .insert(kind.name().to_string(), model.compile());
         self.learned.insert(kind.name().to_string(), model);
+        // Elementwise entries may have been memoised against the old model
+        // set (e.g. as fallbacks); drop them rather than serve stale costs.
+        self.cache.clear();
+    }
+
+    pub fn hbm_bytes_per_us(&self) -> f64 {
+        self.hbm_bytes_per_us
+    }
+
+    /// Change the fallback HBM bandwidth, invalidating memoised estimates
+    /// that were computed against the old value.
+    pub fn set_hbm_bytes_per_us(&mut self, bytes_per_us: f64) {
+        self.hbm_bytes_per_us = bytes_per_us;
+        self.cache.clear();
     }
 
     /// Predict via the flattened model for `name`, compiling on first use
@@ -229,8 +252,28 @@ impl Estimator {
         est
     }
 
-    /// Estimate one classified op.
+    /// Estimate one classified op, memoising through the shape cache.
+    ///
+    /// The cost functions are deterministic in the [`ShapeKey`], so cached
+    /// and freshly computed estimates are bit-identical.
     pub fn estimate_op(&self, index: usize, op_name: &str, class: &OpClass) -> OpEstimate {
+        let est = match ShapeKey::of_class(class) {
+            Some(key) => match self.cache.lookup(&key) {
+                Some(hit) => hit.into_estimate(index, op_name),
+                None => {
+                    let est = self.estimate_op_uncached(index, op_name, class);
+                    self.cache.store(key, CachedCost::of(&est));
+                    est
+                }
+            },
+            None => self.estimate_op_uncached(index, op_name, class),
+        };
+        self.cache.record_source(&est.source);
+        est
+    }
+
+    /// The raw (un-memoised) per-class cost model.
+    fn estimate_op_uncached(&self, index: usize, op_name: &str, class: &OpClass) -> OpEstimate {
         match class {
             OpClass::SystolicGemm { gemm, count }
             | OpClass::SystolicConv { gemm, count, .. } => {
@@ -401,6 +444,51 @@ module @test_model {
             .ops
             .iter()
             .any(|o| o.source == EstimateSource::Fallback));
+    }
+
+    #[test]
+    fn cache_returns_bit_identical_estimates() {
+        let est = Estimator::new(ScaleConfig::tpu_v4(), trivial_calibration());
+        let class = OpClass::SystolicGemm {
+            gemm: GemmShape::new(384, 384, 384),
+            count: 2,
+        };
+        let cold = est.estimate_op(3, "dot", &class);
+        let warm = est.estimate_op(9, "dot2", &class);
+        assert_eq!(cold.latency_us.to_bits(), warm.latency_us.to_bits());
+        assert_eq!(cold.cycles, warm.cycles);
+        assert_eq!(cold.source, warm.source);
+        assert_eq!(cold.note, warm.note);
+        // Instance fields are rehydrated per call, not cached.
+        assert_eq!(warm.index, 9);
+        assert_eq!(warm.op_name, "dot2");
+        let s = est.cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.systolic, 2);
+        // An uncached recomputation matches the memoised value exactly.
+        est.cache.set_enabled(false);
+        let raw = est.estimate_op(0, "dot", &class);
+        assert_eq!(raw.latency_us.to_bits(), cold.latency_us.to_bits());
+        assert_eq!(raw.cycles, cold.cycles);
+    }
+
+    #[test]
+    fn add_learned_invalidates_cached_fallbacks() {
+        let mut est = Estimator::new(ScaleConfig::tpu_v4(), trivial_calibration());
+        let class = OpClass::Elementwise {
+            kind: EwKind::Add,
+            out: crate::frontend::types::TensorType::new(
+                vec![512, 512],
+                crate::frontend::types::DType::Bf16,
+            ),
+        };
+        let before = est.estimate_op(0, "add", &class);
+        assert_eq!(before.source, EstimateSource::Fallback);
+        assert_eq!(est.cache.len(), 1);
+        est.add_learned(EwKind::Add, learned_add_model());
+        assert_eq!(est.cache.len(), 0, "stale entries must be dropped");
+        let after = est.estimate_op(0, "add", &class);
+        assert_eq!(after.source, EstimateSource::Learned);
     }
 
     #[test]

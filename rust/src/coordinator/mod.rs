@@ -1,13 +1,16 @@
-//! L3 coordinator: the whole-model estimator ([`estimator`]), the scoped
-//! worker pool driving parallel sweeps ([`pool`]), and the JSONL batch
-//! service loop ([`service`]).
+//! L3 coordinator: the whole-model estimator ([`estimator`]), its sharded
+//! shape-keyed memo cache ([`cache`]), the worker pools driving parallel
+//! sweeps and the streaming service ([`pool`]), and the JSONL request
+//! loop itself ([`service`]).
 
+pub mod cache;
 pub mod estimator;
 pub mod fusion;
 pub mod pool;
 pub mod service;
 
+pub use cache::{CacheStats, CachedCost, ShapeKey, ShardedCache};
 pub use estimator::{Estimator, EstimateSource, ModelEstimate, OpEstimate};
 pub use fusion::estimate_fused;
-pub use pool::{default_workers, parallel_map};
-pub use service::{serve_lines, Request};
+pub use pool::{default_workers, parallel_map, WorkerPool};
+pub use service::{serve_lines, serve_stream, Request, StreamOptions, StreamSummary};

@@ -1,13 +1,21 @@
-//! Scoped worker pool for parallel sweeps.
+//! Worker pools: a scoped ordered `parallel_map` for batch sweeps, and a
+//! long-lived [`WorkerPool`] for the streaming service.
 //!
 //! The measurement and simulation sweeps are embarrassingly parallel over
-//! shapes; this module provides an ordered `parallel_map` on top of
-//! `std::thread::scope` (no external executor in the offline registry).
-//! Work is handed out via an atomic cursor, so uneven per-item costs
-//! (e.g. large vs small GEMMs) balance automatically.
+//! shapes; `parallel_map` runs them on top of `std::thread::scope` (no
+//! external executor in the offline registry). Work is handed out via an
+//! atomic cursor, so uneven per-item costs (e.g. large vs small GEMMs)
+//! balance automatically.
+//!
+//! `WorkerPool` complements it for open-ended streams: jobs are submitted
+//! one at a time through a *bounded* queue (submission blocks when the
+//! workers fall behind — backpressure on the producer), results come back
+//! tagged with their sequence number for reordering at the consumer.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 /// Number of workers: respects `SCALESIM_THREADS`, defaulting to the
 /// available parallelism (capped at 16).
@@ -73,6 +81,95 @@ where
     out
 }
 
+/// A long-lived pool of worker threads fed by a bounded job queue.
+///
+/// Each job carries a caller-chosen sequence number; the worker function
+/// receives it along with the payload and the result comes back tagged
+/// with it, so an in-order consumer can reorder completions (see
+/// `service::serve_stream`). [`WorkerPool::submit`] blocks while the
+/// queue is full, which is the backpressure that keeps an arbitrarily
+/// long input stream from ballooning memory.
+pub struct WorkerPool<T: Send + 'static, R: Send + 'static> {
+    job_tx: Option<mpsc::SyncSender<(u64, T)>>,
+    result_rx: mpsc::Receiver<(u64, R)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
+    /// Spawn `workers` threads running `f` over submitted jobs, with at
+    /// most `queue_cap` jobs waiting unclaimed.
+    pub fn new<F>(workers: usize, queue_cap: usize, f: F) -> WorkerPool<T, R>
+    where
+        F: Fn(u64, T) -> R + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let (job_tx, job_rx) = mpsc::sync_channel::<(u64, T)>(queue_cap.max(1));
+        let (result_tx, result_rx) = mpsc::channel::<(u64, R)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let job_rx = Arc::clone(&job_rx);
+            let result_tx = result_tx.clone();
+            let f = Arc::clone(&f);
+            handles.push(std::thread::spawn(move || loop {
+                // Holding the lock across the blocking recv is fine: the
+                // holder wakes with a job, releases, and the next worker
+                // takes its place waiting.
+                let job = job_rx.lock().unwrap().recv();
+                match job {
+                    Ok((seq, item)) => {
+                        if result_tx.send((seq, f(seq, item))).is_err() {
+                            break; // consumer gone
+                        }
+                    }
+                    Err(_) => break, // queue closed
+                }
+            }));
+        }
+        WorkerPool {
+            job_tx: Some(job_tx),
+            result_rx,
+            handles,
+        }
+    }
+
+    /// Enqueue a job; blocks while the queue is full (backpressure).
+    pub fn submit(&self, seq: u64, job: T) {
+        self.job_tx
+            .as_ref()
+            .expect("submit after close")
+            .send((seq, job))
+            .expect("worker pool died");
+    }
+
+    /// Collect one finished result without blocking.
+    pub fn try_recv(&self) -> Option<(u64, R)> {
+        self.result_rx.try_recv().ok()
+    }
+
+    /// Collect one finished result, blocking; `None` once the pool is
+    /// closed and fully drained.
+    pub fn recv(&self) -> Option<(u64, R)> {
+        self.result_rx.recv().ok()
+    }
+
+    /// Stop accepting jobs. Workers finish what is queued; drain the
+    /// remaining results with [`WorkerPool::recv`] until it yields `None`.
+    pub fn close(&mut self) {
+        self.job_tx.take();
+    }
+}
+
+impl<T: Send + 'static, R: Send + 'static> Drop for WorkerPool<T, R> {
+    fn drop(&mut self) {
+        self.job_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +201,53 @@ mod tests {
     fn workers_capped_to_items() {
         let out = parallel_map(&[5], 32, |&i| i);
         assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn worker_pool_processes_all_jobs_with_tiny_queue() {
+        // queue_cap 1 forces submit() to block repeatedly (backpressure);
+        // every job must still complete exactly once.
+        let mut pool: WorkerPool<u64, u64> = WorkerPool::new(4, 1, |_seq, x| x * 2);
+        for i in 0..200u64 {
+            pool.submit(i, i);
+        }
+        pool.close();
+        let mut got = std::collections::BTreeMap::new();
+        while let Some((seq, r)) = pool.recv() {
+            got.insert(seq, r);
+        }
+        assert_eq!(got.len(), 200);
+        for (seq, r) in got {
+            assert_eq!(r, seq * 2);
+        }
+    }
+
+    #[test]
+    fn worker_pool_results_reorderable_by_seq() {
+        // Uneven job costs scramble completion order; seq tags restore it.
+        let mut pool: WorkerPool<u64, u64> =
+            WorkerPool::new(8, 16, |seq, cost| {
+                std::thread::sleep(std::time::Duration::from_micros(cost));
+                seq
+            });
+        for i in 0..64u64 {
+            pool.submit(i, (64 - i) * 50);
+        }
+        pool.close();
+        let mut seqs: Vec<u64> = Vec::new();
+        while let Some((seq, r)) = pool.recv() {
+            assert_eq!(seq, r);
+            seqs.push(seq);
+        }
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_pool_drop_without_drain_does_not_hang() {
+        let pool: WorkerPool<u64, u64> = WorkerPool::new(2, 4, |_s, x| x);
+        pool.submit(0, 1);
+        pool.submit(1, 2);
+        drop(pool);
     }
 }

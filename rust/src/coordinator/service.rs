@@ -1,21 +1,33 @@
-//! Batch simulation service: the coordinator's request loop.
+//! Streaming simulation service: the coordinator's request loop.
 //!
-//! Requests arrive as JSON objects (one per line — JSONL), are batched,
-//! fanned out across the worker pool, and answered in order:
+//! Requests arrive as JSON objects (one per line — JSONL), are fanned out
+//! across the worker pool, and answered incrementally *in submission
+//! order*:
 //!
 //! ```json
 //! {"type": "gemm", "m": 512, "k": 512, "n": 512}
 //! {"type": "module", "path": "artifacts/mlp.stablehlo.txt"}
 //! {"type": "elementwise", "op": "add", "dims": [1024, 1024]}
+//! {"type": "stats"}
 //! ```
 //!
 //! This is the "leader" entry point (`scalesim-tpu serve`): downstream
 //! tooling pipes compiler output in and gets latency estimates back
-//! without ever invoking Python.
+//! without ever invoking Python. Two modes share one answer path:
+//!
+//! * [`serve_stream`] — persistent: reads the input line by line, pushes
+//!   each request through a bounded-queue [`WorkerPool`] (backpressure on
+//!   the producer), and emits responses as soon as their turn comes. A
+//!   `{"type":"stats"}` request drains outstanding work and reports the
+//!   shape-cache and routing counters.
+//! * [`serve_lines`] — batch: answers a pre-collected slice of lines via
+//!   the scoped `parallel_map` (used by tests and `serve --batch`).
 
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::frontend::classify::{EwKind, OpClass};
 use crate::frontend::parse_module;
@@ -23,8 +35,9 @@ use crate::frontend::types::{DType, TensorType};
 use crate::scalesim::topology::GemmShape;
 use crate::util::json::Json;
 
+use super::cache::CacheStats;
 use super::estimator::Estimator;
-use super::pool::parallel_map;
+use super::pool::{default_workers, parallel_map, WorkerPool};
 
 /// A parsed request.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +45,8 @@ pub enum Request {
     Gemm(GemmShape),
     Elementwise { op: String, dims: Vec<usize> },
     Module { path: String },
+    /// Report cache/routing counters for the requests answered so far.
+    Stats,
 }
 
 impl Request {
@@ -39,9 +54,9 @@ impl Request {
         let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
         match j.req_str("type").map_err(|e| anyhow::anyhow!("{e}"))? {
             "gemm" => {
-                let m = j.req_f64("m").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
-                let k = j.req_f64("k").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
-                let n = j.req_f64("n").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+                let m = j.req_usize("m").map_err(|e| anyhow::anyhow!("{e}"))?;
+                let k = j.req_usize("k").map_err(|e| anyhow::anyhow!("{e}"))?;
+                let n = j.req_usize("n").map_err(|e| anyhow::anyhow!("{e}"))?;
                 if m == 0 || k == 0 || n == 0 {
                     bail!("gemm dims must be positive");
                 }
@@ -53,13 +68,19 @@ impl Request {
                     .num_arr("dims")
                     .map_err(|e| anyhow::anyhow!("{e}"))?
                     .into_iter()
-                    .map(|d| d as usize)
-                    .collect();
+                    .map(|d| {
+                        if !d.is_finite() || d < 0.0 || d.fract() != 0.0 {
+                            bail!("elementwise dims must be non-negative integers, got {d}");
+                        }
+                        Ok(d as usize)
+                    })
+                    .collect::<Result<Vec<usize>>>()?;
                 Ok(Request::Elementwise { op, dims })
             }
             "module" => Ok(Request::Module {
                 path: j.req_str("path").map_err(|e| anyhow::anyhow!("{e}"))?.to_string(),
             }),
+            "stats" => Ok(Request::Stats),
             other => bail!("unknown request type '{other}'"),
         }
     }
@@ -67,36 +88,51 @@ impl Request {
 
 /// Serve a batch of JSONL requests; returns one JSON response line per
 /// request, in order.
+///
+/// `{"type":"stats"}` requests are answered *after* the rest of the
+/// batch completes (the whole batch is their prefix), so the counters
+/// are deterministic rather than racing the in-flight workers. The
+/// streaming path instead treats stats as a drain barrier at its
+/// position — see [`serve_stream`].
 pub fn serve_lines(estimator: Arc<Estimator>, lines: &[String], workers: usize) -> Vec<String> {
     let items: Vec<(usize, String)> = lines
         .iter()
         .enumerate()
         .map(|(i, l)| (i, l.clone()))
         .collect();
-    parallel_map(&items, workers, |(i, line)| {
-        let resp = handle_line(&estimator, line);
-        let mut obj = match resp {
-            Ok(mut ok) => {
-                ok.set("ok", Json::Bool(true));
-                ok
-            }
-            Err(e) => {
-                let mut o = Json::obj();
-                o.set("ok", Json::Bool(false))
-                    .set("error", Json::Str(format!("{e:#}")));
-                o
-            }
-        };
-        obj.set("id", Json::Num(*i as f64));
-        obj.dump()
-    })
+    let mut responses: Vec<Option<String>> = parallel_map(&items, workers, |(i, line)| {
+        match Request::parse(line) {
+            Ok(Request::Stats) => None, // deferred below
+            parsed => Some(respond(&estimator, *i as u64, parsed).1),
+        }
+    });
+    for (i, slot) in responses.iter_mut().enumerate() {
+        if slot.is_none() {
+            *slot = Some(respond(&estimator, i as u64, Ok(Request::Stats)).1);
+        }
+    }
+    responses.into_iter().map(Option::unwrap).collect()
 }
 
-fn handle_line(estimator: &Estimator, line: &str) -> Result<Json> {
-    let req = Request::parse(line)?;
+/// Answer one (possibly failed-to-parse) request; returns `(ok, line)`.
+fn respond(estimator: &Estimator, id: u64, req: Result<Request>) -> (bool, String) {
+    let (ok, mut obj) = match req.and_then(|r| handle_request(estimator, &r)) {
+        Ok(o) => (true, o),
+        Err(e) => {
+            let mut o = Json::obj();
+            o.set("error", Json::Str(format!("{e:#}")));
+            (false, o)
+        }
+    };
+    obj.set("ok", Json::Bool(ok));
+    obj.set("id", Json::Num(id as f64));
+    (ok, obj.dump())
+}
+
+fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
     match req {
         Request::Gemm(g) => {
-            let class = OpClass::SystolicGemm { gemm: g, count: 1 };
+            let class = OpClass::SystolicGemm { gemm: *g, count: 1 };
             let est = estimator.estimate_op(0, "gemm", &class);
             let mut o = Json::obj();
             o.set("type", Json::Str("gemm".into()))
@@ -105,11 +141,11 @@ fn handle_line(estimator: &Estimator, line: &str) -> Result<Json> {
             Ok(o)
         }
         Request::Elementwise { op, dims } => {
-            let kind = EwKind::from_name(&op)
+            let kind = EwKind::from_name(op)
                 .ok_or_else(|| anyhow::anyhow!("unknown elementwise op '{op}'"))?;
             let out = TensorType::new(dims.clone(), DType::Bf16);
             let class = OpClass::Elementwise { kind, out };
-            let est = estimator.estimate_op(0, &op, &class);
+            let est = estimator.estimate_op(0, op, &class);
             let mut o = Json::obj();
             o.set("type", Json::Str("elementwise".into()))
                 .set("latency_us", Json::Num(est.latency_us))
@@ -117,7 +153,7 @@ fn handle_line(estimator: &Estimator, line: &str) -> Result<Json> {
             Ok(o)
         }
         Request::Module { path } => {
-            let text = std::fs::read_to_string(&path)?;
+            let text = std::fs::read_to_string(path)?;
             let module = parse_module(&text)?;
             let report = estimator.estimate_module(&module);
             let mut o = Json::obj();
@@ -131,7 +167,216 @@ fn handle_line(estimator: &Estimator, line: &str) -> Result<Json> {
                 .set("coverage", Json::Num(report.coverage()));
             Ok(o)
         }
+        Request::Stats => {
+            let mut o = estimator.cache.stats().to_json();
+            o.set("type", Json::Str("stats".into()));
+            Ok(o)
+        }
     }
+}
+
+/// Knobs for [`serve_stream`].
+#[derive(Debug, Clone)]
+pub struct StreamOptions {
+    /// Worker threads answering requests.
+    pub workers: usize,
+    /// Bounded job-queue depth; 0 means `workers * 4`.
+    pub queue_cap: usize,
+}
+
+impl Default for StreamOptions {
+    fn default() -> StreamOptions {
+        StreamOptions {
+            workers: default_workers(),
+            queue_cap: 0,
+        }
+    }
+}
+
+/// End-of-stream accounting, rendered on shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct StreamSummary {
+    pub requests: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub gemm: u64,
+    pub elementwise: u64,
+    pub module: u64,
+    pub stats_requests: u64,
+    pub cache: CacheStats,
+}
+
+impl StreamSummary {
+    /// One-line human summary (written to stderr so stdout stays JSONL).
+    pub fn render(&self) -> String {
+        format!(
+            "serve: {} requests ({} ok, {} errors; {} gemm / {} elementwise / {} module / {} stats); \
+             cache: {} hits, {} misses ({:.1}% hit rate, {} entries); \
+             sources: {} systolic, {} learned, {} learned-proxy, {} bandwidth, {} free, {} fallback",
+            self.requests,
+            self.ok,
+            self.errors,
+            self.gemm,
+            self.elementwise,
+            self.module,
+            self.stats_requests,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate() * 100.0,
+            self.cache.entries,
+            self.cache.systolic,
+            self.cache.learned,
+            self.cache.learned_proxy,
+            self.cache.bandwidth,
+            self.cache.free,
+            self.cache.fallback,
+        )
+    }
+}
+
+/// Serve an open-ended JSONL stream incrementally.
+///
+/// Reads `input` line by line and answers onto `output`, one JSON line
+/// per request, **in input order** — a completion reorder buffer bridges
+/// the gap between out-of-order workers and the in-order contract. Memory
+/// stays bounded for arbitrarily long streams: the job queue blocks the
+/// reader when workers fall behind, which also caps the reorder buffer at
+/// `queue_cap + workers` entries.
+pub fn serve_stream<In: BufRead, Out: Write>(
+    estimator: Arc<Estimator>,
+    input: In,
+    output: &mut Out,
+    opts: &StreamOptions,
+) -> Result<StreamSummary> {
+    let workers = opts.workers.max(1);
+    let queue_cap = if opts.queue_cap == 0 {
+        workers * 4
+    } else {
+        opts.queue_cap
+    };
+    let est = Arc::clone(&estimator);
+    let mut pool: WorkerPool<Request, (bool, String)> =
+        WorkerPool::new(workers, queue_cap, move |seq, req| {
+            respond(&est, seq, Ok(req))
+        });
+
+    let mut summary = StreamSummary::default();
+    // Completed-but-not-yet-emitted responses, keyed by sequence number.
+    let mut pending: BTreeMap<u64, String> = BTreeMap::new();
+    let mut next_seq: u64 = 0; // next sequence number to assign
+    let mut emitted: u64 = 0; // responses written so far == next seq to emit
+
+    for line in input.lines() {
+        let line = line.context("reading request stream")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let seq = next_seq;
+        next_seq += 1;
+        summary.requests += 1;
+        match Request::parse(&line) {
+            Ok(Request::Stats) => {
+                // Stats are a barrier: every earlier request is answered
+                // first, so the counters reflect the full prefix. Each gap
+                // member is either already in `pending` or in flight in
+                // the pool, so recv() below can never block indefinitely.
+                emit_ready(output, &mut pending, &mut emitted)?;
+                while emitted < seq {
+                    let Some((s, (ok, resp))) = pool.recv() else {
+                        bail!("worker pool terminated with requests outstanding");
+                    };
+                    tally(&mut summary, ok);
+                    pending.insert(s, resp);
+                    emit_ready(output, &mut pending, &mut emitted)?;
+                }
+                summary.stats_requests += 1;
+                let (ok, resp) = respond(&estimator, seq, Ok(Request::Stats));
+                tally(&mut summary, ok);
+                writeln!(output, "{resp}")?;
+                output.flush()?;
+                emitted += 1;
+            }
+            Ok(req) => {
+                match &req {
+                    Request::Gemm(_) => summary.gemm += 1,
+                    Request::Elementwise { .. } => summary.elementwise += 1,
+                    Request::Module { .. } => summary.module += 1,
+                    Request::Stats => unreachable!(),
+                }
+                // Blocks while the queue is full: backpressure.
+                pool.submit(seq, req);
+            }
+            Err(e) => {
+                let (ok, resp) = respond(&estimator, seq, Err(e));
+                tally(&mut summary, ok);
+                pending.insert(seq, resp);
+            }
+        }
+        // Collect whatever finished while we were reading, then flush the
+        // in-order prefix so responses stream out incrementally.
+        while let Some((s, (ok, resp))) = pool.try_recv() {
+            tally(&mut summary, ok);
+            pending.insert(s, resp);
+        }
+        emit_ready(output, &mut pending, &mut emitted)?;
+        // Second half of the backpressure: if the head-of-line response
+        // is slow, fast completions behind it pile up in `pending` (the
+        // job-queue bound alone does not cap them — workers keep
+        // draining). Wait for the head of line instead of reading more
+        // input, keeping `pending` at O(queue_cap + workers).
+        while pending.len() > queue_cap + workers {
+            let Some((s, (ok, resp))) = pool.recv() else {
+                bail!("worker pool terminated with requests outstanding");
+            };
+            tally(&mut summary, ok);
+            pending.insert(s, resp);
+            emit_ready(output, &mut pending, &mut emitted)?;
+        }
+    }
+
+    // End of input: finish the tail in order.
+    pool.close();
+    while let Some((s, (ok, resp))) = pool.recv() {
+        tally(&mut summary, ok);
+        pending.insert(s, resp);
+        emit_ready(output, &mut pending, &mut emitted)?;
+    }
+    emit_ready(output, &mut pending, &mut emitted)?;
+    if emitted != next_seq {
+        bail!(
+            "worker pool lost {} of {} responses",
+            next_seq - emitted,
+            next_seq
+        );
+    }
+    summary.cache = estimator.cache.stats();
+    Ok(summary)
+}
+
+fn tally(summary: &mut StreamSummary, ok: bool) {
+    if ok {
+        summary.ok += 1;
+    } else {
+        summary.errors += 1;
+    }
+}
+
+/// Write the contiguous run of completed responses starting at `emitted`.
+fn emit_ready<Out: Write>(
+    output: &mut Out,
+    pending: &mut BTreeMap<u64, String>,
+    emitted: &mut u64,
+) -> Result<()> {
+    let mut wrote = false;
+    while let Some(resp) = pending.remove(emitted) {
+        writeln!(output, "{resp}")?;
+        *emitted += 1;
+        wrote = true;
+    }
+    if wrote {
+        output.flush()?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -165,7 +410,12 @@ mod tests {
                 dims: vec![8, 128]
             }
         );
+        assert_eq!(Request::parse(r#"{"type":"stats"}"#).unwrap(), Request::Stats);
         assert!(Request::parse(r#"{"type":"gemm","m":0,"k":1,"n":1}"#).is_err());
+        assert!(Request::parse(r#"{"type":"gemm","m":-1,"k":1,"n":1}"#).is_err());
+        assert!(Request::parse(r#"{"type":"gemm","m":2.5,"k":1,"n":1}"#).is_err());
+        assert!(Request::parse(r#"{"type":"elementwise","op":"add","dims":[-1,256]}"#).is_err());
+        assert!(Request::parse(r#"{"type":"elementwise","op":"add","dims":[2.5]}"#).is_err());
         assert!(Request::parse("not json").is_err());
     }
 
@@ -214,5 +464,101 @@ module @m { func.func @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> ten
         assert_eq!(r.req_f64("num_ops").unwrap(), 2.0);
         assert!(r.req_f64("total_us").unwrap() > 0.0);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn batch_stats_are_deterministic_over_the_whole_batch() {
+        let mut lines: Vec<String> = (0..40)
+            .map(|i| {
+                let d = 64 * (1 + i % 2);
+                format!(r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#)
+            })
+            .collect();
+        lines.insert(10, r#"{"type":"stats"}"#.to_string());
+        let run = || {
+            let responses = serve_lines(estimator(), &lines, 8);
+            let stats = Json::parse(&responses[10]).unwrap();
+            assert_eq!(stats.req_str("type").unwrap(), "stats");
+            assert_eq!(stats.req_f64("id").unwrap(), 10.0);
+            stats.req_f64("cache_hits").unwrap() + stats.req_f64("cache_misses").unwrap()
+        };
+        // Stats are answered after the batch drains: counters always
+        // cover all 40 costed requests, run after run.
+        assert_eq!(run(), 40.0);
+        assert_eq!(run(), 40.0);
+    }
+
+    #[test]
+    fn stream_answers_in_order_with_stats() {
+        let est = estimator();
+        let mut input = String::new();
+        for i in 0..200 {
+            let d = 64 + 64 * (i % 4);
+            input.push_str(&format!(r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#));
+            input.push('\n');
+        }
+        input.push_str("{\"type\":\"stats\"}\n");
+        input.push_str("garbage\n");
+        let mut out = Vec::new();
+        let summary = serve_stream(
+            Arc::clone(&est),
+            input.as_bytes(),
+            &mut out,
+            &StreamOptions {
+                workers: 8,
+                queue_cap: 4,
+            },
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 202);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).expect("valid json");
+            assert_eq!(j.req_f64("id").unwrap(), i as f64, "out of order: {line}");
+        }
+        // The stats barrier saw all 200 gemm answers: 4 distinct shapes.
+        // Two workers racing on the same fresh key may both miss, so the
+        // miss count is bounded, not exact.
+        let stats = Json::parse(lines[200]).unwrap();
+        assert_eq!(stats.req_str("type").unwrap(), "stats");
+        let misses = stats.req_f64("cache_misses").unwrap();
+        let hits = stats.req_f64("cache_hits").unwrap();
+        assert_eq!(hits + misses, 200.0);
+        assert!((4.0..=32.0).contains(&misses), "misses {misses}");
+        assert_eq!(stats.req_f64("cache_entries").unwrap(), 4.0);
+        // The garbage line is an error but still answered in order.
+        let last = Json::parse(lines[201]).unwrap();
+        assert_eq!(last.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(summary.requests, 202);
+        assert_eq!(summary.errors, 1);
+        assert_eq!(summary.gemm, 200);
+        assert_eq!(summary.stats_requests, 1);
+    }
+
+    #[test]
+    fn stream_and_batch_agree() {
+        let lines: Vec<String> = (0..50)
+            .map(|i| match i % 3 {
+                0 => r#"{"type":"gemm","m":256,"k":256,"n":256}"#.to_string(),
+                1 => r#"{"type":"elementwise","op":"add","dims":[512,512]}"#.to_string(),
+                _ => r#"{"type":"gemm","m":128,"k":512,"n":64}"#.to_string(),
+            })
+            .collect();
+        let batch = serve_lines(estimator(), &lines, 4);
+        let mut out = Vec::new();
+        serve_stream(
+            estimator(),
+            lines.join("\n").as_bytes(),
+            &mut out,
+            &StreamOptions::default(),
+        )
+        .unwrap();
+        let stream: Vec<String> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(str::to_string)
+            .collect();
+        assert_eq!(batch, stream);
     }
 }

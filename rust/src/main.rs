@@ -9,7 +9,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use scalesim_tpu::calibrate::Regime;
-use scalesim_tpu::coordinator::{default_workers, serve_lines};
+use scalesim_tpu::coordinator::{default_workers, serve_lines, serve_stream, StreamOptions};
 use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
 use scalesim_tpu::frontend::parse_module;
 use scalesim_tpu::report::{write_output, Table};
@@ -39,7 +39,16 @@ Toolchain:
   simulate --module FILE.txt     estimate a StableHLO module end to end
            [--fused]               model XLA operator fusion
   calibrate                      build + save modeling assets
-  serve --input FILE.jsonl       batch request service (JSONL in/out)
+  serve [--input FILE.jsonl]     streaming request service (JSONL in/out);
+        [--workers N]              reads stdin when no --input is given and
+        [--queue N]                answers incrementally, in order, through
+        [--batch] [--quiet]        a sharded shape cache. {"type":"stats"}
+                                   requests report cache/routing counters;
+                                   a summary goes to stderr on shutdown
+                                   (--quiet suppresses it). --batch restores
+                                   the legacy slurp-whole-input mode; --queue
+                                   bounds the in-flight job queue (default
+                                   4 x workers).
 
 Common options:
   --hardware model|pjrt      measurement backend (default: model)
@@ -313,38 +322,52 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::{BufRead, Write};
+
     let config = make_config(args)?;
     let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
     let mut hw = make_hardware(args)?;
-    let est = assets::load_or_build(
+    let est = Arc::new(assets::load_or_build(
         &assets_dir,
         hw.as_mut(),
         &config,
         args.usize_or("shapes", 1200),
         args.usize_or("reps", 3),
         args.u64_or("seed", 42),
-    )?;
-    let lines: Vec<String> = match args.get("input") {
-        Some(path) => std::fs::read_to_string(path)
-            .with_context(|| format!("reading {path}"))?
-            .lines()
-            .filter(|l| !l.trim().is_empty())
-            .map(str::to_string)
-            .collect(),
-        None => {
-            use std::io::BufRead;
-            std::io::stdin()
-                .lock()
-                .lines()
-                .collect::<std::io::Result<Vec<_>>>()?
-                .into_iter()
-                .filter(|l| !l.trim().is_empty())
-                .collect()
-        }
+    )?);
+    let workers = args.usize_or("workers", default_workers());
+    let input: Box<dyn BufRead> = match args.get("input") {
+        Some(path) => Box::new(std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
+        )),
+        None => Box::new(std::io::stdin().lock()),
     };
-    let responses = serve_lines(Arc::new(est), &lines, default_workers());
-    for r in responses {
-        println!("{r}");
+
+    if args.flag("batch") {
+        // Legacy mode: slurp the whole input, answer as one batch.
+        let lines: Vec<String> = input
+            .lines()
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .filter(|l| !l.trim().is_empty())
+            .collect();
+        for r in serve_lines(est, &lines, workers) {
+            println!("{r}");
+        }
+        let _ = args.flag("quiet");
+        let _ = args.usize_or("queue", 0);
+        return Ok(());
+    }
+
+    let opts = StreamOptions {
+        workers,
+        queue_cap: args.usize_or("queue", 0),
+    };
+    let mut out = std::io::BufWriter::new(std::io::stdout().lock());
+    let summary = serve_stream(est, input, &mut out, &opts)?;
+    out.flush()?;
+    if !args.flag("quiet") {
+        eprintln!("{}", summary.render());
     }
     Ok(())
 }

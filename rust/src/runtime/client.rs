@@ -1,7 +1,8 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts (or synthesised HLO
 //! text), compile them once, and execute them from the Rust request path.
 //!
-//! This wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! This wraps the `xla` bindings crate (stubbed offline — see
+//! `super::xla_stub` and DESIGN.md §Hardware-substitution):
 //! `PjRtClient::cpu()` → `HloModuleProto` (text parser — jax ≥ 0.5 protos
 //! are not loadable on xla_extension 0.5.1, see python/compile/aot.py) →
 //! `client.compile` → `execute`.
@@ -9,6 +10,15 @@
 use std::time::Instant;
 
 use anyhow::{Context, Result};
+
+// Without the `pjrt` feature the offline stub stands in for the real
+// bindings; the code below is identical either way.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
+/// The literal type used for runtime inputs/outputs, re-exported so
+/// callers never name the backend crate directly.
+pub type Literal = xla::Literal;
 
 /// A PJRT client plus compile/execute helpers.
 pub struct Runtime {
@@ -128,7 +138,9 @@ impl Executable {
     }
 }
 
-#[cfg(test)]
+// These tests execute real kernels, so they only run with the real
+// bindings compiled in.
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::runtime::hlo_gen;

@@ -4,5 +4,7 @@
 
 pub mod client;
 pub mod hlo_gen;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
 
-pub use client::{f32_literal, Executable, Runtime};
+pub use client::{f32_literal, Executable, Literal, Runtime};

@@ -1,0 +1,161 @@
+//! Compile-time stand-in for the `xla` PJRT bindings crate.
+//!
+//! The offline build registry does not carry the `xla` crate, so by
+//! default the runtime layer compiles against this stub, which mirrors
+//! the exact API subset that [`crate::runtime::client`] and
+//! [`crate::tpu::pjrt_hw`] use. The only reachable constructor,
+//! [`PjRtClient::cpu`], fails with a clear error, so every `--hardware
+//! pjrt` path degrades to a clean runtime error instead of a link
+//! failure. Building with `--features pjrt` (plus a vendored `xla`
+//! crate) swaps the real bindings back in — see DESIGN.md
+//! §Hardware-substitution.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type standing in for the bindings' error. Implements
+/// `std::error::Error` so `anyhow::Context` works on stub results.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(
+        "PJRT support not compiled in (offline build without the `xla` crate); \
+         rebuild with `--features pjrt` — see DESIGN.md §Hardware-substitution"
+            .to_string(),
+    ))
+}
+
+/// Stub PJRT client: construction always fails, so the `&self` methods
+/// below are unreachable — they exist only to type-check the call sites.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unreachable!("stub PjRtLoadedExecutable cannot be constructed")
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unreachable!("stub PjRtBuffer cannot be constructed")
+    }
+}
+
+/// Stub HLO module proto: parsing always fails (no HLO parser offline).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn parse_and_return_unverified_module(_text: &[u8]) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Stub literal: carries only its shape so host-side construction
+/// (`f32_literal`) still works; device-side accessors fail cleanly.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Literal {
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn shape(&self) -> Result<Shape, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        let _ = &self.dims;
+        unavailable()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Tuple(Vec<Shape>),
+    Array,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_guidance() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = format!("{err}");
+        assert!(msg.contains("--features pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims, vec![2, 2]);
+        assert!(r.clone().to_tuple1().is_err());
+        assert!(r.to_vec::<f32>().is_err());
+    }
+}

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::frontend::classify::EwKind;
-use crate::runtime::{f32_literal, hlo_gen, Executable, Runtime};
+use crate::runtime::{f32_literal, hlo_gen, Executable, Literal, Runtime};
 use crate::scalesim::topology::GemmShape;
 
 use super::traits::Hardware;
@@ -25,7 +25,7 @@ enum KernelKey {
 /// their execution.
 pub struct PjrtHardware {
     runtime: Runtime,
-    cache: HashMap<KernelKey, (Executable, Vec<xla::Literal>)>,
+    cache: HashMap<KernelKey, (Executable, Vec<Literal>)>,
     /// Warmup runs per fresh executable.
     pub warmup: usize,
 }
@@ -39,7 +39,7 @@ impl PjrtHardware {
         })
     }
 
-    fn ensure_gemm(&mut self, g: GemmShape) -> Result<&(Executable, Vec<xla::Literal>)> {
+    fn ensure_gemm(&mut self, g: GemmShape) -> Result<&(Executable, Vec<Literal>)> {
         let key = KernelKey::Gemm(g);
         if !self.cache.contains_key(&key) {
             let exe = self
@@ -57,7 +57,7 @@ impl PjrtHardware {
         &mut self,
         kind: EwKind,
         dims: &[usize],
-    ) -> Result<&(Executable, Vec<xla::Literal>)> {
+    ) -> Result<&(Executable, Vec<Literal>)> {
         let key = KernelKey::Ew(kind, dims.to_vec());
         if !self.cache.contains_key(&key) {
             let (text, nargs) = match kind {
@@ -125,7 +125,8 @@ impl Hardware for PjrtHardware {
     }
 }
 
-#[cfg(test)]
+// Real-execution tests: only meaningful with the real bindings.
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::tpu::traits::{measure_ew_median, measure_gemm_median};

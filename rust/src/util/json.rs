@@ -88,6 +88,18 @@ impl Json {
             .ok_or_else(|| JsonError::new(format!("missing/invalid string field '{key}'")))
     }
 
+    /// Required non-negative integer field: rejects negatives and
+    /// fractional values instead of silently truncating them.
+    pub fn req_usize(&self, key: &str) -> Result<usize, JsonError> {
+        let n = self.req_f64(key)?;
+        if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > u64::MAX as f64 {
+            return Err(JsonError::new(format!(
+                "field '{key}' must be a non-negative integer, got {n}"
+            )));
+        }
+        Ok(n as usize)
+    }
+
     pub fn req_arr(&self, key: &str) -> Result<&[Json], JsonError> {
         self.get(key)
             .and_then(Json::as_arr)
@@ -499,5 +511,15 @@ mod tests {
     #[test]
     fn nan_serializes_as_null() {
         assert_eq!(Json::Num(f64::NAN).dump(), "null");
+    }
+
+    #[test]
+    fn req_usize_rejects_non_integers() {
+        let v = Json::parse(r#"{"a": 12, "b": -3, "c": 2.5, "d": "x"}"#).unwrap();
+        assert_eq!(v.req_usize("a").unwrap(), 12);
+        assert!(v.req_usize("b").is_err());
+        assert!(v.req_usize("c").is_err());
+        assert!(v.req_usize("d").is_err());
+        assert!(v.req_usize("missing").is_err());
     }
 }

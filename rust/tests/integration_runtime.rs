@@ -4,9 +4,23 @@
 
 use scalesim_tpu::runtime::{f32_literal, hlo_gen, Runtime};
 
+/// Obtain a PJRT runtime or skip: offline builds (no `pjrt` feature)
+/// stub the client out and every construction fails cleanly.
+macro_rules! runtime_or_skip {
+    () => {
+        match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: PJRT runtime unavailable ({e:#})");
+                return;
+            }
+        }
+    };
+}
+
 #[test]
 fn synthesised_gemm_matches_rust_oracle() {
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = runtime_or_skip!();
     let (m, k, n) = (17, 23, 11);
     let exe = rt
         .compile_text("gemm", &hlo_gen::gemm_hlo(m, k, n))
@@ -45,7 +59,7 @@ fn aot_gemm_artifact_matches_rust_oracle() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = runtime_or_skip!();
     let exe = rt.compile_file(path).expect("compile artifact");
 
     let (m, k, n) = (128usize, 256usize, 512usize);
@@ -77,7 +91,7 @@ fn aot_relu_artifact_behaviour() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = runtime_or_skip!();
     let exe = rt.compile_file(path).expect("compile relu artifact");
     let x = f32_literal(&[1024, 1024], |i| (i as f32 % 9.0) - 4.0).unwrap();
     let out = exe.run_f32(&[x]).expect("execute relu");
@@ -95,7 +109,7 @@ fn mlp_artifact_executes_finite() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = runtime_or_skip!();
     let exe = rt.compile_file(path).expect("compile mlp artifact");
     let x = f32_literal(&[32, 784], |i| ((i % 255) as f32) / 255.0).unwrap();
     let out = exe.run_f32(&[x]).expect("execute mlp");
@@ -109,7 +123,7 @@ fn mlp_artifact_executes_finite() {
 
 #[test]
 fn timing_is_reproducible_order_of_magnitude() {
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = runtime_or_skip!();
     let exe = rt
         .compile_text("add", &hlo_gen::binary_ew_hlo("add", &[512, 512]))
         .unwrap();

@@ -1,0 +1,227 @@
+//! Integration: the streaming estimation service and its sharded shape
+//! cache — the acceptance path of the "serve" subcommand.
+//!
+//! Covers: ≥10k mixed JSONL requests answered incrementally and in
+//! order; hit/miss accounting; cross-thread consistency under
+//! `parallel_map`; and bit-identical cached vs uncached outputs.
+
+use std::sync::Arc;
+
+use scalesim_tpu::calibrate::fit_regime_calibration;
+use scalesim_tpu::coordinator::{
+    parallel_map, serve_stream, Estimator, ShapeKey, StreamOptions,
+};
+use scalesim_tpu::frontend::classify::OpClass;
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+use scalesim_tpu::util::json::Json;
+
+fn estimator() -> Arc<Estimator> {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Arc::new(Estimator::new(
+        ScaleConfig::tpu_v4(),
+        fit_regime_calibration(&obs).unwrap(),
+    ))
+}
+
+/// A mixed request stream: gemms over a small shape vocabulary (heavy
+/// repetition, as compiler traffic looks), elementwise ops, and a few
+/// malformed lines.
+fn mixed_stream(n: usize) -> String {
+    let mut s = String::new();
+    for i in 0..n {
+        match i % 10 {
+            9 => s.push_str("{\"type\":\"nope\"}\n"),
+            7 | 8 => {
+                let d = 128 << (i % 3); // 128/256/512 square elementwise
+                s.push_str(&format!(
+                    "{{\"type\":\"elementwise\",\"op\":\"add\",\"dims\":[{d},{d}]}}\n"
+                ));
+            }
+            r => {
+                let d = 64 * (1 + (r % 5)); // 5 distinct gemm shapes
+                s.push_str(&format!("{{\"type\":\"gemm\",\"m\":{d},\"k\":{d},\"n\":{d}}}\n"));
+            }
+        }
+    }
+    s
+}
+
+#[test]
+fn ten_thousand_mixed_requests_stream_in_order() {
+    const N: usize = 10_000;
+    let input = mixed_stream(N);
+    let mut out = Vec::new();
+    let summary = serve_stream(
+        estimator(),
+        input.as_bytes(),
+        &mut out,
+        &StreamOptions {
+            workers: 8,
+            queue_cap: 32,
+        },
+    )
+    .expect("stream serves");
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), N, "one response per request");
+    let mut ok_count = 0u64;
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).expect("valid JSON response");
+        assert_eq!(
+            j.req_f64("id").unwrap(),
+            i as f64,
+            "response {i} out of order: {line}"
+        );
+        if j.get("ok") == Some(&Json::Bool(true)) {
+            ok_count += 1;
+            assert!(j.req_f64("latency_us").unwrap_or(f64::MAX) >= 0.0);
+        }
+    }
+    assert_eq!(summary.requests, N as u64);
+    assert_eq!(summary.ok, ok_count);
+    assert_eq!(summary.errors, N as u64 / 10);
+    // Only 5 gemm + 3 elementwise shapes exist: the cache must have
+    // absorbed nearly all of the 9000 costed requests.
+    assert_eq!(summary.cache.entries, 8);
+    assert!(
+        summary.cache.hits > 8_800,
+        "expected heavy hit traffic, got {:?}",
+        summary.cache
+    );
+    assert!(summary.cache.systolic >= 7_000);
+    assert!(summary.cache.fallback >= 2_000); // no learned models loaded
+}
+
+#[test]
+fn cached_and_uncached_streams_are_bit_identical() {
+    let input = mixed_stream(600);
+
+    let cached_est = estimator();
+    let mut cached_out = Vec::new();
+    serve_stream(
+        Arc::clone(&cached_est),
+        input.as_bytes(),
+        &mut cached_out,
+        &StreamOptions::default(),
+    )
+    .unwrap();
+
+    let uncached_est = estimator();
+    uncached_est.cache.set_enabled(false);
+    let mut uncached_out = Vec::new();
+    serve_stream(
+        Arc::clone(&uncached_est),
+        input.as_bytes(),
+        &mut uncached_out,
+        &StreamOptions::default(),
+    )
+    .unwrap();
+
+    assert!(cached_est.cache.stats().hits > 0, "cache saw traffic");
+    assert_eq!(uncached_est.cache.stats().hits, 0, "baseline bypassed");
+    // Byte-for-byte identical responses, including every f64 digit.
+    assert_eq!(
+        String::from_utf8(cached_out).unwrap(),
+        String::from_utf8(uncached_out).unwrap()
+    );
+}
+
+#[test]
+fn cache_is_consistent_across_parallel_map_workers() {
+    let est = estimator();
+    let shapes: Vec<GemmShape> = (0..512)
+        .map(|i| {
+            let d = 128 * (1 + (i % 4));
+            GemmShape::new(d, d, d)
+        })
+        .collect();
+
+    let latencies = parallel_map(&shapes, 8, |g| {
+        let class = OpClass::SystolicGemm { gemm: *g, count: 1 };
+        est.estimate_op(0, "dot", &class).latency_us
+    });
+
+    // Every occurrence of a shape got the exact same answer.
+    for (g, us) in shapes.iter().zip(&latencies) {
+        let class = OpClass::SystolicGemm { gemm: *g, count: 1 };
+        let again = est.estimate_op(0, "dot", &class).latency_us;
+        assert_eq!(us.to_bits(), again.to_bits(), "{g} diverged");
+    }
+
+    let s = est.cache.stats();
+    // 512 parallel lookups + 512 verification lookups, all accounted for.
+    assert_eq!(s.hits + s.misses, 1024);
+    assert_eq!(s.entries, 4);
+    // Racing workers may both miss a fresh key, but never more than once
+    // per worker per key.
+    assert!((4u64..=32).contains(&s.misses), "misses {}", s.misses);
+}
+
+#[test]
+fn repeated_shapes_estimate_faster_through_the_cache() {
+    // A coarse guard (the precise numbers live in `cargo bench cache`):
+    // re-estimating a repeated shape through the cache must beat
+    // cycle-accurate re-simulation by a clear margin.
+    let est = estimator();
+    let shapes: Vec<GemmShape> = (0..8)
+        .map(|i| GemmShape::new(1024 + 128 * i, 2048, 1024))
+        .collect();
+    let classes: Vec<OpClass> = shapes
+        .iter()
+        .map(|g| OpClass::SystolicGemm { gemm: *g, count: 1 })
+        .collect();
+    const ROUNDS: usize = 200;
+
+    est.cache.set_enabled(false);
+    let t0 = std::time::Instant::now();
+    for _ in 0..ROUNDS {
+        for c in &classes {
+            std::hint::black_box(est.estimate_op(0, "dot", c));
+        }
+    }
+    let uncached = t0.elapsed();
+
+    est.cache.set_enabled(true);
+    for c in &classes {
+        std::hint::black_box(est.estimate_op(0, "dot", c)); // prime
+    }
+    let t1 = std::time::Instant::now();
+    for _ in 0..ROUNDS {
+        for c in &classes {
+            std::hint::black_box(est.estimate_op(0, "dot", c));
+        }
+    }
+    let cached = t1.elapsed();
+
+    assert!(
+        uncached.as_secs_f64() > cached.as_secs_f64() * 1.5,
+        "cache gave no speedup: uncached {uncached:?} vs cached {cached:?}"
+    );
+}
+
+#[test]
+fn shape_key_distinguishes_conv_count_but_shares_gemm() {
+    // dot_general and an im2col-lowered convolution with the same GEMM
+    // share one entry; a different batch count is a different key.
+    let k1 = ShapeKey::Gemm {
+        gemm: GemmShape::new(196, 27, 64),
+        count: 1,
+    };
+    let k2 = ShapeKey::Gemm {
+        gemm: GemmShape::new(196, 27, 64),
+        count: 4,
+    };
+    assert_ne!(k1, k2);
+    assert_eq!(
+        k1,
+        ShapeKey::Gemm {
+            gemm: GemmShape::new(196, 27, 64),
+            count: 1
+        }
+    );
+}

@@ -1,6 +1,6 @@
 # Convenience targets; the Rust crate itself needs only cargo.
 
-.PHONY: build test bench artifacts fmt
+.PHONY: build test bench artifacts fmt clippy check
 
 build:
 	cargo build --release
@@ -14,6 +14,12 @@ bench:
 
 fmt:
 	cargo fmt --all --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# The CI gate: format, lints and the full test suite.
+check: fmt clippy test
 
 # AOT-compile the JAX/Pallas workloads into artifacts/ (requires jax).
 # Rust tests that consume artifacts self-skip when this has not run.

@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             OpClass::Elementwise { .. } => "elementwise",
             OpClass::Reduction { .. } => "reduction",
             OpClass::DataMovement { .. } => "data-movement",
+            OpClass::Collective { .. } => "collective",
             OpClass::Free => "free",
             OpClass::Unmodeled { .. } => "unmodeled",
         };

@@ -15,7 +15,8 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::frontend::classify::{EwKind, OpClass};
+use crate::distributed::ici::{IciTopology, SliceConfig};
+use crate::frontend::classify::{CollectiveKind, EwKind, OpClass};
 use crate::frontend::types::DType;
 use crate::scalesim::topology::GemmShape;
 use crate::util::json::Json;
@@ -41,9 +42,40 @@ pub enum ShapeKey {
         dims: Vec<usize>,
         dtype: DType,
     },
+    /// An ICI collective on a multi-chip slice. The full slice config is
+    /// part of the key so requests against different slices — or the
+    /// single-chip path, which never produces this variant — can never
+    /// alias, even for identical payloads.
+    Collective {
+        kind: CollectiveKind,
+        bytes_in: u64,
+        bytes_out: u64,
+        chips: usize,
+        topology: IciTopology,
+        /// Bit patterns of the slice's f64 knobs (exact identity).
+        link_gbps_bits: u64,
+        hop_us_bits: u64,
+    },
 }
 
 impl ShapeKey {
+    /// The cache identity of one collective on one slice.
+    pub fn collective(
+        kind: CollectiveKind,
+        bytes_in: u64,
+        bytes_out: u64,
+        slice: &SliceConfig,
+    ) -> ShapeKey {
+        ShapeKey::Collective {
+            kind,
+            bytes_in,
+            bytes_out,
+            chips: slice.chips,
+            topology: slice.topology,
+            link_gbps_bits: slice.link_gbps.to_bits(),
+            hop_us_bits: slice.hop_latency_us.to_bits(),
+        }
+    }
     /// The cacheable identity of a classified op, if it has one. The
     /// bandwidth/free classes are a handful of arithmetic ops — cheaper
     /// than the map probe they would save.
@@ -348,6 +380,39 @@ mod tests {
         c.store(a.clone(), cost(1.0));
         assert!(c.lookup(&b).is_none());
         assert!(c.lookup(&a).is_some());
+    }
+
+    #[test]
+    fn collective_keys_carry_the_slice_config() {
+        let slice4 = SliceConfig::ring(4, 100.0);
+        let a = ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &slice4);
+        // Different chip count, bandwidth, hop latency or topology each
+        // produce a distinct key.
+        let slice8 = SliceConfig::ring(8, 100.0);
+        assert_ne!(
+            a,
+            ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &slice8)
+        );
+        let fat = SliceConfig::ring(4, 200.0);
+        assert_ne!(
+            a,
+            ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &fat)
+        );
+        let torus = SliceConfig {
+            chips: 4,
+            topology: IciTopology::Torus2D { x: 2, y: 2 },
+            link_gbps: 100.0,
+            hop_latency_us: 1.0,
+        };
+        assert_ne!(
+            a,
+            ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &torus)
+        );
+        // And collective entries never collide with plain gemm entries.
+        let c = ShardedCache::new();
+        c.store(a.clone(), cost(7.0));
+        assert!(c.lookup(&gemm_key(64)).is_none());
+        assert_eq!(c.lookup(&a).unwrap().latency_us, 7.0);
     }
 
     #[test]

@@ -240,7 +240,10 @@ impl Estimator {
                     }
                     est.total_costed_ops += 1;
                 }
-                OpClass::Free => {}
+                // Free ops cost nothing; collectives are also free on a
+                // single chip (XLA elides them) — the distributed
+                // estimator costs them against a real slice.
+                OpClass::Free | OpClass::Collective { .. } => {}
                 _ => {
                     est.other_us += row.latency_us;
                     est.total_costed_ops += 1;
@@ -334,6 +337,14 @@ impl Estimator {
                 cycles: None,
                 latency_us: 0.0,
                 note: String::new(),
+            },
+            OpClass::Collective { kind, out, .. } => OpEstimate {
+                index,
+                op_name: op_name.to_string(),
+                source: EstimateSource::Free,
+                cycles: None,
+                latency_us: 0.0,
+                note: format!("{kind} {out}: zero-cost on one chip (use --chips)"),
             },
             OpClass::Unmodeled { reason, out } => OpEstimate {
                 index,

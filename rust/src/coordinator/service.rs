@@ -29,6 +29,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::distributed::{
+    estimate_gemm_sliced, estimate_module_distributed, IciTopology, SliceConfig,
+    DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
+};
 use crate::frontend::classify::{EwKind, OpClass};
 use crate::frontend::parse_module;
 use crate::frontend::types::{DType, TensorType};
@@ -42,11 +46,62 @@ use super::pool::{default_workers, parallel_map, WorkerPool};
 /// A parsed request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Gemm(GemmShape),
+    Gemm {
+        gemm: GemmShape,
+        /// Multi-chip slice to shard across (`"chips"`, `"ici_gbps"`,
+        /// `"ici_topology"`, `"ici_latency_us"` fields); `None` answers
+        /// on a single chip.
+        slice: Option<SliceConfig>,
+    },
     Elementwise { op: String, dims: Vec<usize> },
-    Module { path: String },
+    Module { path: String, slice: Option<SliceConfig> },
     /// Report cache/routing counters for the requests answered so far.
     Stats,
+}
+
+/// Extract the optional slice config carried by a request object.
+fn parse_slice(j: &Json) -> Result<Option<SliceConfig>> {
+    if j.get("chips").is_none() {
+        // Refuse to silently drop distributed knobs on a request that
+        // forgot the chip count — the caller would trust a single-chip
+        // answer for a slice question.
+        for key in ["ici_gbps", "ici_topology", "ici_latency_us"] {
+            if j.get(key).is_some() {
+                bail!("'{key}' given without 'chips'");
+            }
+        }
+        return Ok(None);
+    }
+    let chips = j.req_usize("chips").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let link_gbps = match j.get("ici_gbps") {
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'ici_gbps' must be a number"))?,
+        None => DEFAULT_LINK_GBPS,
+    };
+    let hop_latency_us = match j.get("ici_latency_us") {
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'ici_latency_us' must be a number"))?,
+        None => DEFAULT_HOP_LATENCY_US,
+    };
+    let topology = match j.get("ici_topology") {
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'ici_topology' must be a string"))?;
+            IciTopology::parse(s, chips)?
+        }
+        None => IciTopology::Ring,
+    };
+    let slice = SliceConfig {
+        chips,
+        topology,
+        link_gbps,
+        hop_latency_us,
+    };
+    slice.validate()?;
+    Ok(Some(slice))
 }
 
 impl Request {
@@ -60,9 +115,17 @@ impl Request {
                 if m == 0 || k == 0 || n == 0 {
                     bail!("gemm dims must be positive");
                 }
-                Ok(Request::Gemm(GemmShape::new(m, k, n)))
+                Ok(Request::Gemm {
+                    gemm: GemmShape::new(m, k, n),
+                    slice: parse_slice(&j)?,
+                })
             }
             "elementwise" => {
+                // No distributed elementwise path: refuse slice knobs
+                // rather than silently answering for a single chip.
+                if parse_slice(&j)?.is_some() {
+                    bail!("distributed elementwise requests are not supported; wrap the op in a module request");
+                }
                 let op = j.req_str("op").map_err(|e| anyhow::anyhow!("{e}"))?.to_string();
                 let dims = j
                     .num_arr("dims")
@@ -79,6 +142,7 @@ impl Request {
             }
             "module" => Ok(Request::Module {
                 path: j.req_str("path").map_err(|e| anyhow::anyhow!("{e}"))?.to_string(),
+                slice: parse_slice(&j)?,
             }),
             "stats" => Ok(Request::Stats),
             other => bail!("unknown request type '{other}'"),
@@ -131,13 +195,28 @@ fn respond(estimator: &Estimator, id: u64, req: Result<Request>) -> (bool, Strin
 
 fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
     match req {
-        Request::Gemm(g) => {
-            let class = OpClass::SystolicGemm { gemm: *g, count: 1 };
+        Request::Gemm { gemm, slice: None } => {
+            let class = OpClass::SystolicGemm { gemm: *gemm, count: 1 };
             let est = estimator.estimate_op(0, "gemm", &class);
             let mut o = Json::obj();
             o.set("type", Json::Str("gemm".into()))
                 .set("cycles", Json::Num(est.cycles.unwrap_or(0) as f64))
                 .set("latency_us", Json::Num(est.latency_us));
+            Ok(o)
+        }
+        Request::Gemm {
+            gemm,
+            slice: Some(slice),
+        } => {
+            let r = estimate_gemm_sliced(estimator, *gemm, slice);
+            let mut o = Json::obj();
+            o.set("type", Json::Str("gemm".into()))
+                .set("chips", Json::Num(slice.chips as f64))
+                .set("latency_us", Json::Num(r.total_us()))
+                .set("compute_us", Json::Num(r.compute_us))
+                .set("collective_us", Json::Num(r.collective_us))
+                .set("single_chip_us", Json::Num(r.single_chip_us))
+                .set("parallel_efficiency", Json::Num(r.parallel_efficiency()));
             Ok(o)
         }
         Request::Elementwise { op, dims } => {
@@ -152,20 +231,38 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                 .set("source", Json::Str(est.source.tag().into()));
             Ok(o)
         }
-        Request::Module { path } => {
+        Request::Module { path, slice } => {
             let text = std::fs::read_to_string(path)?;
             let module = parse_module(&text)?;
-            let report = estimator.estimate_module(&module);
-            let mut o = Json::obj();
-            o.set("type", Json::Str("module".into()))
-                .set("module", Json::Str(report.module_name.clone()))
-                .set("total_us", Json::Num(report.total_us))
-                .set("systolic_us", Json::Num(report.systolic_us))
-                .set("elementwise_us", Json::Num(report.elementwise_us))
-                .set("other_us", Json::Num(report.other_us))
-                .set("num_ops", Json::Num(report.ops.len() as f64))
-                .set("coverage", Json::Num(report.coverage()));
-            Ok(o)
+            match slice {
+                None => {
+                    let report = estimator.estimate_module(&module);
+                    let mut o = Json::obj();
+                    o.set("type", Json::Str("module".into()))
+                        .set("module", Json::Str(report.module_name.clone()))
+                        .set("total_us", Json::Num(report.total_us))
+                        .set("systolic_us", Json::Num(report.systolic_us))
+                        .set("elementwise_us", Json::Num(report.elementwise_us))
+                        .set("other_us", Json::Num(report.other_us))
+                        .set("num_ops", Json::Num(report.ops.len() as f64))
+                        .set("coverage", Json::Num(report.coverage()));
+                    Ok(o)
+                }
+                Some(slice) => {
+                    let d = estimate_module_distributed(estimator, &module, slice);
+                    let mut o = Json::obj();
+                    o.set("type", Json::Str("module".into()))
+                        .set("module", Json::Str(d.module_name.clone()))
+                        .set("chips", Json::Num(slice.chips as f64))
+                        .set("total_us", Json::Num(d.total_us))
+                        .set("compute_us", Json::Num(d.compute_us))
+                        .set("collective_us", Json::Num(d.collective_us))
+                        .set("single_chip_us", Json::Num(d.single_chip_us))
+                        .set("parallel_efficiency", Json::Num(d.parallel_efficiency()))
+                        .set("num_ops", Json::Num(d.ops.len() as f64));
+                    Ok(o)
+                }
+            }
         }
         Request::Stats => {
             let mut o = estimator.cache.stats().to_json();
@@ -298,7 +395,7 @@ pub fn serve_stream<In: BufRead, Out: Write>(
             }
             Ok(req) => {
                 match &req {
-                    Request::Gemm(_) => summary.gemm += 1,
+                    Request::Gemm { .. } => summary.gemm += 1,
                     Request::Elementwise { .. } => summary.elementwise += 1,
                     Request::Module { .. } => summary.module += 1,
                     Request::Stats => unreachable!(),
@@ -401,8 +498,56 @@ mod tests {
     fn parse_requests() {
         assert_eq!(
             Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3}"#).unwrap(),
-            Request::Gemm(GemmShape::new(1, 2, 3))
+            Request::Gemm {
+                gemm: GemmShape::new(1, 2, 3),
+                slice: None
+            }
         );
+        assert_eq!(
+            Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"chips":4,"ici_gbps":50}"#)
+                .unwrap(),
+            Request::Gemm {
+                gemm: GemmShape::new(1, 2, 3),
+                slice: Some(SliceConfig {
+                    chips: 4,
+                    topology: IciTopology::Ring,
+                    link_gbps: 50.0,
+                    hop_latency_us: DEFAULT_HOP_LATENCY_US,
+                })
+            }
+        );
+        assert_eq!(
+            Request::parse(
+                r#"{"type":"module","path":"x.mlir","chips":8,"ici_topology":"torus"}"#
+            )
+            .unwrap(),
+            Request::Module {
+                path: "x.mlir".into(),
+                slice: Some(SliceConfig {
+                    chips: 8,
+                    topology: IciTopology::Torus2D { x: 2, y: 4 },
+                    link_gbps: DEFAULT_LINK_GBPS,
+                    hop_latency_us: DEFAULT_HOP_LATENCY_US,
+                })
+            }
+        );
+        assert!(Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"chips":0}"#).is_err());
+        // Distributed knobs without a chip count are an error, not a
+        // silent single-chip answer — and elementwise has no distributed
+        // path at all.
+        assert!(Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"ici_gbps":50}"#).is_err());
+        assert!(
+            Request::parse(r#"{"type":"elementwise","op":"add","dims":[8,8],"chips":4}"#)
+                .is_err()
+        );
+        assert!(
+            Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"chips":4,"ici_gbps":0}"#)
+                .is_err()
+        );
+        assert!(Request::parse(
+            r#"{"type":"gemm","m":1,"k":2,"n":3,"chips":4,"ici_topology":"3x5"}"#
+        )
+        .is_err());
         assert_eq!(
             Request::parse(r#"{"type":"elementwise","op":"add","dims":[8,128]}"#).unwrap(),
             Request::Elementwise {
@@ -439,6 +584,37 @@ mod tests {
         assert_eq!(r2.req_str("type").unwrap(), "elementwise");
         // Fallback source since no learned models were registered.
         assert_eq!(r2.req_str("source").unwrap(), "fallback");
+    }
+
+    #[test]
+    fn distributed_and_single_chip_gemm_do_not_alias() {
+        // Regression: same shape through a single-chip request, a 4-chip
+        // slice, and a fatter-linked 4-chip slice must hit distinct cache
+        // entries and produce distinct answers.
+        let est = estimator();
+        let lines: Vec<String> = vec![
+            r#"{"type":"gemm","m":64,"k":512,"n":2048}"#.into(),
+            r#"{"type":"gemm","m":64,"k":512,"n":2048,"chips":4,"ici_gbps":50}"#.into(),
+            r#"{"type":"gemm","m":64,"k":512,"n":2048,"chips":4,"ici_gbps":200}"#.into(),
+            r#"{"type":"gemm","m":64,"k":512,"n":2048}"#.into(),
+        ];
+        let responses = serve_lines(Arc::clone(&est), &lines, 2);
+        let lat: Vec<f64> = responses
+            .iter()
+            .map(|r| Json::parse(r).unwrap().req_f64("latency_us").unwrap())
+            .collect();
+        // Single-chip answers are bit-identical (cache hit)...
+        assert_eq!(lat[0].to_bits(), lat[3].to_bits());
+        // ...but never alias the distributed answers, and slices with
+        // different link bandwidth differ from each other (the N-sharded
+        // GEMM pays a bandwidth-dependent all-gather).
+        assert_ne!(lat[0].to_bits(), lat[1].to_bits());
+        assert_ne!(lat[1].to_bits(), lat[2].to_bits());
+        let dist = Json::parse(&responses[1]).unwrap();
+        assert_eq!(dist.req_f64("chips").unwrap(), 4.0);
+        assert!(dist.req_f64("collective_us").unwrap() > 0.0);
+        let eff = dist.req_f64("parallel_efficiency").unwrap();
+        assert!(eff > 0.0 && eff <= 1.0);
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Inter-chip interconnect (ICI) collective cost model.
+//!
+//! TPU slices connect chips with dedicated ICI links arranged as a ring
+//! or a 2-D torus. Collectives are costed with the classic alpha-beta
+//! model: a schedule of `steps` link hops, each paying a fixed per-hop
+//! latency `alpha` (µs), plus a bandwidth term — the bytes each chip must
+//! push through its links divided by the effective link bandwidth `beta`
+//! (bytes/µs). The formulas are the standard ring-algorithm costs
+//! (Chan et al., "Collective communication: theory, practice, and
+//! experience"); a 2-D torus shortens the latency term to the sum of the
+//! per-dimension ring lengths and doubles usable bandwidth (one
+//! concurrent ring per torus dimension). See DESIGN.md §Multi-chip
+//! slices for the assumptions.
+
+use anyhow::{bail, Result};
+
+use crate::frontend::classify::CollectiveKind;
+
+/// Default per-link bandwidth, GB/s (order of a TPU v4 ICI link pair).
+pub const DEFAULT_LINK_GBPS: f64 = 100.0;
+
+/// Default per-hop latency, µs.
+pub const DEFAULT_HOP_LATENCY_US: f64 = 1.0;
+
+/// Physical arrangement of the slice's ICI links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IciTopology {
+    /// A single bidirectional ring over all chips.
+    Ring,
+    /// A 2-D torus of `x * y` chips (rings in both dimensions).
+    Torus2D { x: usize, y: usize },
+}
+
+impl IciTopology {
+    /// Parse a CLI/service spelling: `ring`, `torus` (auto-factored into
+    /// a near-square grid), or an explicit `XxY`.
+    pub fn parse(spec: &str, chips: usize) -> Result<IciTopology> {
+        match spec {
+            "ring" => Ok(IciTopology::Ring),
+            "torus" | "torus2d" | "2d" => Ok(IciTopology::torus(chips)),
+            dims => {
+                let Some((xs, ys)) = dims.split_once('x') else {
+                    bail!("unknown ICI topology '{spec}' (ring|torus|XxY)");
+                };
+                let (x, y): (usize, usize) = match (xs.parse(), ys.parse()) {
+                    (Ok(x), Ok(y)) => (x, y),
+                    _ => bail!("bad torus spec '{spec}' (expected XxY)"),
+                };
+                if x * y != chips {
+                    bail!("torus {x}x{y} holds {} chips, slice has {chips}", x * y);
+                }
+                Ok(IciTopology::Torus2D { x, y })
+            }
+        }
+    }
+
+    /// The near-square 2-D torus for `chips` chips.
+    pub fn torus(chips: usize) -> IciTopology {
+        let chips = chips.max(1);
+        let mut x = (chips as f64).sqrt().floor() as usize;
+        x = x.max(1);
+        while x > 1 && chips % x != 0 {
+            x -= 1;
+        }
+        IciTopology::Torus2D { x, y: chips / x }
+    }
+
+    /// Number of chips the topology wires up (ring adapts to any count).
+    pub fn chips_or(&self, slice_chips: usize) -> usize {
+        match self {
+            IciTopology::Ring => slice_chips,
+            IciTopology::Torus2D { x, y } => x * y,
+        }
+    }
+
+    /// Ring-schedule step count for reduce/gather-style collectives.
+    fn reduce_steps(&self, chips: usize) -> u64 {
+        match self {
+            IciTopology::Ring => chips.saturating_sub(1) as u64,
+            IciTopology::Torus2D { x, y } => {
+                (x.saturating_sub(1) + y.saturating_sub(1)) as u64
+            }
+        }
+    }
+
+    /// Concurrent rings (bandwidth multiplier): a torus streams along
+    /// both dimensions at once — unless one dimension is degenerate, in
+    /// which case it is physically a ring and earns no extra links.
+    fn ports(&self) -> f64 {
+        match self {
+            IciTopology::Ring => 1.0,
+            IciTopology::Torus2D { x, y } if *x <= 1 || *y <= 1 => 1.0,
+            IciTopology::Torus2D { .. } => 2.0,
+        }
+    }
+}
+
+impl std::fmt::Display for IciTopology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IciTopology::Ring => f.write_str("ring"),
+            IciTopology::Torus2D { x, y } => write!(f, "{x}x{y} torus"),
+        }
+    }
+}
+
+/// A multi-chip slice: how many chips, how they are wired, and how fast
+/// the wires are.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SliceConfig {
+    pub chips: usize,
+    pub topology: IciTopology,
+    /// Per-link bandwidth in GB/s.
+    pub link_gbps: f64,
+    /// Per-hop latency (the alpha term), µs.
+    pub hop_latency_us: f64,
+}
+
+impl SliceConfig {
+    /// A ring slice with the default hop latency.
+    pub fn ring(chips: usize, link_gbps: f64) -> SliceConfig {
+        SliceConfig {
+            chips,
+            topology: IciTopology::Ring,
+            link_gbps,
+            hop_latency_us: DEFAULT_HOP_LATENCY_US,
+        }
+    }
+
+    /// The degenerate one-chip slice (no ICI traffic at all).
+    pub fn single_chip() -> SliceConfig {
+        SliceConfig::ring(1, DEFAULT_LINK_GBPS)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.chips == 0 {
+            bail!("slice needs at least one chip");
+        }
+        if !(self.link_gbps.is_finite() && self.link_gbps > 0.0) {
+            bail!("link bandwidth must be positive, got {}", self.link_gbps);
+        }
+        if !(self.hop_latency_us.is_finite() && self.hop_latency_us >= 0.0) {
+            bail!("hop latency must be non-negative, got {}", self.hop_latency_us);
+        }
+        if self.topology.chips_or(self.chips) != self.chips {
+            bail!(
+                "topology {} wires {} chips, slice has {}",
+                self.topology,
+                self.topology.chips_or(self.chips),
+                self.chips
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The alpha-beta collective cost model over one [`SliceConfig`].
+pub struct IciModel {
+    slice: SliceConfig,
+}
+
+impl IciModel {
+    pub fn new(slice: &SliceConfig) -> IciModel {
+        IciModel { slice: *slice }
+    }
+
+    /// Effective bytes/µs each chip can stream through its ICI ports
+    /// (1 GB/s = 1000 bytes/µs).
+    fn bytes_per_us(&self) -> f64 {
+        self.slice.link_gbps * 1e3 * self.slice.topology.ports()
+    }
+
+    /// Cost one collective in µs. `bytes_in` is the operand payload each
+    /// chip contributes, `bytes_out` the result each chip ends up with
+    /// (they differ for all-gather / reduce-scatter).
+    pub fn collective_us(&self, kind: CollectiveKind, bytes_in: u64, bytes_out: u64) -> f64 {
+        let chips = self.slice.chips;
+        if chips <= 1 {
+            return 0.0;
+        }
+        let p = chips as f64;
+        let steps = self.slice.topology.reduce_steps(chips) as f64;
+        let alpha = self.slice.hop_latency_us;
+        let bw = self.bytes_per_us();
+        match kind {
+            // Ring all-reduce = reduce-scatter + all-gather: 2(P-1) steps,
+            // 2(P-1)/P of the payload over the wire.
+            CollectiveKind::AllReduce => {
+                2.0 * steps * alpha + 2.0 * (p - 1.0) / p * bytes_in as f64 / bw
+            }
+            CollectiveKind::ReduceScatter => {
+                steps * alpha + (p - 1.0) / p * bytes_in as f64 / bw
+            }
+            // Each chip must receive (P-1)/P of the gathered result.
+            CollectiveKind::AllGather => {
+                steps * alpha + (p - 1.0) / p * bytes_out as f64 / bw
+            }
+            // One neighbour hop over a single link (no ring parallelism).
+            CollectiveKind::CollectivePermute => {
+                alpha + bytes_in as f64 / (self.slice.link_gbps * 1e3)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_chip_is_free() {
+        let m = IciModel::new(&SliceConfig::single_chip());
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::CollectivePermute,
+        ] {
+            assert_eq!(m.collective_us(kind, 1 << 20, 1 << 20), 0.0);
+        }
+    }
+
+    #[test]
+    fn all_reduce_formula() {
+        // 4 chips, ring, 100 GB/s, 1 us/hop, 4 MiB payload.
+        let m = IciModel::new(&SliceConfig::ring(4, 100.0));
+        let bytes = 4u64 << 20;
+        let got = m.collective_us(CollectiveKind::AllReduce, bytes, bytes);
+        let want = 2.0 * 3.0 * 1.0 + 2.0 * (3.0 / 4.0) * bytes as f64 / 100e3;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        // All-reduce = reduce-scatter + all-gather.
+        let rs = m.collective_us(CollectiveKind::ReduceScatter, bytes, bytes / 4);
+        let ag = m.collective_us(CollectiveKind::AllGather, bytes / 4, bytes);
+        assert!((got - (rs + ag)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn costs_monotone_in_bandwidth_and_payload() {
+        let kinds = [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::CollectivePermute,
+        ];
+        for kind in kinds {
+            let mut last = f64::INFINITY;
+            for gbps in [10.0, 50.0, 100.0, 400.0] {
+                let m = IciModel::new(&SliceConfig::ring(8, gbps));
+                let t = m.collective_us(kind, 1 << 24, 1 << 24);
+                assert!(t <= last, "{kind} not monotone in bandwidth");
+                last = t;
+            }
+            let m = IciModel::new(&SliceConfig::ring(8, 100.0));
+            assert!(
+                m.collective_us(kind, 1 << 24, 1 << 24)
+                    >= m.collective_us(kind, 1 << 20, 1 << 20)
+            );
+        }
+    }
+
+    #[test]
+    fn torus_beats_ring_for_large_slices() {
+        let bytes = 64u64 << 20;
+        let ring = IciModel::new(&SliceConfig::ring(16, 100.0));
+        let torus = IciModel::new(&SliceConfig {
+            chips: 16,
+            topology: IciTopology::torus(16),
+            link_gbps: 100.0,
+            hop_latency_us: DEFAULT_HOP_LATENCY_US,
+        });
+        assert!(
+            torus.collective_us(CollectiveKind::AllReduce, bytes, bytes)
+                < ring.collective_us(CollectiveKind::AllReduce, bytes, bytes)
+        );
+    }
+
+    #[test]
+    fn degenerate_torus_is_a_ring() {
+        // A 1xN torus has no second dimension of links: same cost as a
+        // ring of N chips.
+        let bytes = 8u64 << 20;
+        let ring = IciModel::new(&SliceConfig::ring(8, 100.0));
+        let flat = IciModel::new(&SliceConfig {
+            chips: 8,
+            topology: IciTopology::Torus2D { x: 1, y: 8 },
+            link_gbps: 100.0,
+            hop_latency_us: DEFAULT_HOP_LATENCY_US,
+        });
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::CollectivePermute,
+        ] {
+            assert_eq!(
+                ring.collective_us(kind, bytes, bytes).to_bits(),
+                flat.collective_us(kind, bytes, bytes).to_bits(),
+                "{kind}"
+            );
+        }
+    }
+
+    #[test]
+    fn topology_parsing() {
+        assert_eq!(IciTopology::parse("ring", 8).unwrap(), IciTopology::Ring);
+        assert_eq!(
+            IciTopology::parse("torus", 16).unwrap(),
+            IciTopology::Torus2D { x: 4, y: 4 }
+        );
+        assert_eq!(
+            IciTopology::parse("2x4", 8).unwrap(),
+            IciTopology::Torus2D { x: 2, y: 4 }
+        );
+        assert!(IciTopology::parse("3x3", 8).is_err());
+        assert!(IciTopology::parse("blob", 8).is_err());
+        // Auto-factoring prefers near-square grids.
+        assert_eq!(IciTopology::torus(12), IciTopology::Torus2D { x: 3, y: 4 });
+        assert_eq!(IciTopology::torus(7), IciTopology::Torus2D { x: 1, y: 7 });
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(SliceConfig::ring(0, 100.0).validate().is_err());
+        assert!(SliceConfig::ring(4, 0.0).validate().is_err());
+        assert!(SliceConfig::ring(4, f64::NAN).validate().is_err());
+        let mut bad = SliceConfig::ring(8, 100.0);
+        bad.topology = IciTopology::Torus2D { x: 2, y: 2 };
+        assert!(bad.validate().is_err());
+        assert!(SliceConfig::ring(8, 100.0).validate().is_ok());
+    }
+}

@@ -1,0 +1,20 @@
+//! Multi-chip distributed simulation: slices, ICI collectives, and the
+//! per-chip timeline estimator.
+//!
+//! Extends the single-chip estimator to an `N`-chip TPU slice: systolic
+//! ops shard across chips via the SCALE-Sim multi-core partitioning
+//! machinery, collectives are costed by an alpha-beta ICI model
+//! ([`ici`]), and a two-engine per-chip timeline overlaps collectives
+//! with independent compute ([`slice`]). A 1-chip slice reproduces the
+//! single-chip estimate bit for bit.
+
+pub mod ici;
+pub mod slice;
+
+pub use ici::{
+    IciModel, IciTopology, SliceConfig, DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
+};
+pub use slice::{
+    estimate_gemm_sliced, estimate_module_distributed, DistOpEstimate, DistributedEstimate,
+    GemmSliceReport,
+};

@@ -1,0 +1,514 @@
+//! Slice-level (multi-chip) module estimation.
+//!
+//! The distributed estimator runs a StableHLO module across an `N`-chip
+//! slice under the SPMD assumptions XLA's GSPMD partitioner uses:
+//!
+//! * Tensors are row-sharded (leading axis split across chips) unless an
+//!   `mhlo.sharding` annotation says otherwise; weights are replicated.
+//! * Systolic ops shard along M (row-parallel) via the same
+//!   [`split_dim`] machinery the multi-core partitioner uses; each chip
+//!   simulates its largest shard (SPMD chips are symmetric, so the
+//!   critical chip's timeline is the slice's timeline).
+//! * A `{devices=[1,N]}`-annotated GEMM (model parallelism) shards along
+//!   N instead and pays an implicit all-gather of its output to restore
+//!   the row-sharded layout.
+//! * Explicit collectives (`all_reduce`, `all_gather`, `reduce_scatter`,
+//!   `collective_permute`) are costed by the [`IciModel`].
+//!
+//! Each chip is modeled as two engines — compute (MXU/VPU) and ICI —
+//! with a dependence-driven timeline: a collective occupies the ICI
+//! engine and overlaps with any later compute that does not consume its
+//! result. On a 1-chip slice every collective costs zero and the
+//! timeline degenerates to the plain op sum, so the result is
+//! bit-identical to [`Estimator::estimate_module`] (tested).
+
+use std::collections::HashMap;
+
+use crate::coordinator::cache::{CachedCost, ShapeKey};
+use crate::coordinator::estimator::{EstimateSource, Estimator};
+use crate::frontend::classify::{classify, CollectiveKind, OpClass};
+use crate::frontend::opinfo::{ModuleInfo, OpInfo, ShardingAttr};
+use crate::scalesim::partition::split_dim;
+use crate::scalesim::topology::GemmShape;
+
+use super::ici::{IciModel, SliceConfig};
+
+/// Per-op row of a distributed estimate.
+#[derive(Debug, Clone)]
+pub struct DistOpEstimate {
+    pub index: usize,
+    pub op_name: String,
+    /// Compute-engine time for this op's shard, µs.
+    pub compute_us: f64,
+    /// ICI-engine time (explicit collective or implicit all-gather), µs.
+    pub collective_us: f64,
+    /// Timeline completion of the op's results, µs.
+    pub finish_us: f64,
+    pub note: String,
+}
+
+/// Whole-module estimate across a slice (per-chip view; SPMD chips are
+/// symmetric).
+#[derive(Debug, Clone)]
+pub struct DistributedEstimate {
+    pub module_name: String,
+    pub slice: SliceConfig,
+    /// Per-chip makespan: when the last engine goes idle, µs.
+    pub total_us: f64,
+    /// Per-chip busy time on the compute engine, µs.
+    pub compute_us: f64,
+    /// Per-chip busy time on the ICI engine, µs.
+    pub collective_us: f64,
+    /// The same module estimated on one chip (the baseline).
+    pub single_chip_us: f64,
+    pub ops: Vec<DistOpEstimate>,
+}
+
+/// Parallel efficiency `T1 / (P * TP)`, clamped into `(0, 1]` (shard
+/// regime shifts can make the cycle-accurate model superlinear; the
+/// clamp keeps those artifacts from reading as >100%).
+fn efficiency(single_us: f64, chips: usize, total_us: f64) -> f64 {
+    if total_us <= 0.0 {
+        return 1.0;
+    }
+    let e = single_us / (chips as f64 * total_us);
+    e.min(1.0).max(f64::MIN_POSITIVE)
+}
+
+impl DistributedEstimate {
+    /// Speedup over the single-chip estimate.
+    pub fn speedup(&self) -> f64 {
+        if self.total_us <= 0.0 {
+            1.0
+        } else {
+            self.single_chip_us / self.total_us
+        }
+    }
+
+    /// Parallel efficiency `T1 / (P * TP)` in `(0, 1]`.
+    pub fn parallel_efficiency(&self) -> f64 {
+        efficiency(self.single_chip_us, self.slice.chips, self.total_us)
+    }
+
+    /// Collective time hidden under compute by the overlap model, µs.
+    pub fn overlapped_us(&self) -> f64 {
+        (self.compute_us + self.collective_us - self.total_us).max(0.0)
+    }
+}
+
+/// Estimate `module` across `slice`, reusing `est`'s calibrated models
+/// and shape cache for every shard.
+pub fn estimate_module_distributed(
+    est: &Estimator,
+    module: &ModuleInfo,
+    slice: &SliceConfig,
+) -> DistributedEstimate {
+    let single = est.estimate_module(module);
+    let mut out = walk_func(est, module, module.entry().map(|f| f.name.as_str()), slice, 0);
+    out.single_chip_us = single.total_us;
+    out
+}
+
+/// One GEMM across a slice (the `serve` gemm-request and CLI path).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmSliceReport {
+    pub chips: usize,
+    pub compute_us: f64,
+    pub collective_us: f64,
+    pub single_chip_us: f64,
+}
+
+impl GemmSliceReport {
+    pub fn total_us(&self) -> f64 {
+        self.compute_us + self.collective_us
+    }
+
+    pub fn parallel_efficiency(&self) -> f64 {
+        efficiency(self.single_chip_us, self.chips, self.total_us())
+    }
+}
+
+/// Estimate one GEMM sharded across the slice (auto axis, no sharding
+/// annotation available).
+pub fn estimate_gemm_sliced(
+    est: &Estimator,
+    gemm: GemmShape,
+    slice: &SliceConfig,
+) -> GemmSliceReport {
+    let class = OpClass::SystolicGemm { gemm, count: 1 };
+    let single = est.estimate_op(0, "gemm", &class).latency_us;
+    let (sharded, gather) = shard_class(&class, None, None, slice.chips);
+    let compute = est.estimate_op(0, "gemm", &sharded).latency_us;
+    let collective = match gather {
+        Some((bytes_in, bytes_out)) => {
+            collective_cost(est, slice, CollectiveKind::AllGather, bytes_in, bytes_out)
+        }
+        None => 0.0,
+    };
+    GemmSliceReport {
+        chips: slice.chips,
+        compute_us: compute,
+        collective_us: collective,
+        single_chip_us: single,
+    }
+}
+
+/// Cost one collective through the estimator's shape cache: the key
+/// carries the full slice config, so entries for different slices (or
+/// the single-chip path) can never alias.
+fn collective_cost(
+    est: &Estimator,
+    slice: &SliceConfig,
+    kind: CollectiveKind,
+    bytes_in: u64,
+    bytes_out: u64,
+) -> f64 {
+    if slice.chips <= 1 {
+        return 0.0;
+    }
+    let key = ShapeKey::collective(kind, bytes_in, bytes_out, slice);
+    if let Some(hit) = est.cache.lookup(&key) {
+        return hit.latency_us;
+    }
+    let us = IciModel::new(slice).collective_us(kind, bytes_in, bytes_out);
+    est.cache.store(
+        key,
+        CachedCost {
+            source: EstimateSource::Bandwidth,
+            cycles: None,
+            latency_us: us,
+            note: format!("{kind} over {} chips ({})", slice.chips, slice.topology),
+        },
+    );
+    us
+}
+
+/// Largest chunk of `dim` split across `chips` (the critical shard).
+fn max_shard(dim: usize, chips: usize) -> usize {
+    split_dim(dim, chips).first().copied().unwrap_or(dim.max(1))
+}
+
+/// Row-shard a tensor in place: split the leading axis across chips.
+fn shard_leading_dim(t: &mut crate::frontend::types::TensorType, chips: usize) {
+    if let Some(d) = t.dims.first_mut() {
+        if *d >= 2 {
+            *d = max_shard(*d, chips);
+        }
+    }
+}
+
+/// Shard a classified op for SPMD execution on `chips` chips.
+///
+/// Returns the per-chip class plus, for model-parallel (N-sharded)
+/// systolic ops, the `(bytes_in, bytes_out)` of the implicit all-gather
+/// that restores the row-sharded layout. With `chips <= 1` the class is
+/// returned unchanged.
+fn shard_class(
+    class: &OpClass,
+    sharding: Option<&ShardingAttr>,
+    out_bytes: Option<u64>,
+    chips: usize,
+) -> (OpClass, Option<(u64, u64)>) {
+    if chips <= 1 {
+        return (class.clone(), None);
+    }
+    if sharding.map(ShardingAttr::is_replicated).unwrap_or(false) {
+        return (class.clone(), None);
+    }
+    let model_parallel = sharding.map(ShardingAttr::model_parallel).unwrap_or(false);
+    match class {
+        OpClass::SystolicGemm { gemm, count } => {
+            let split_n = model_parallel || (sharding.is_none() && gemm.n > gemm.m);
+            if split_n {
+                let sharded = GemmShape::new(gemm.m, gemm.k, max_shard(gemm.n, chips));
+                // `out_bytes` (when known) is the full batched output
+                // tensor; the bf16 fallback must scale by the batch count
+                // itself.
+                let bytes_out = out_bytes.unwrap_or(gemm.c_words() * 2 * *count).max(1);
+                (
+                    OpClass::SystolicGemm { gemm: sharded, count: *count },
+                    Some((bytes_out / chips as u64, bytes_out)),
+                )
+            } else {
+                let sharded = GemmShape::new(max_shard(gemm.m, chips), gemm.k, gemm.n);
+                (OpClass::SystolicGemm { gemm: sharded, count: *count }, None)
+            }
+        }
+        OpClass::SystolicConv { conv, gemm, count } => {
+            // Output pixels (M) are row-parallel across chips.
+            let sharded = GemmShape::new(max_shard(gemm.m, chips), gemm.k, gemm.n);
+            (
+                OpClass::SystolicConv {
+                    conv: conv.clone(),
+                    gemm: sharded,
+                    count: *count,
+                },
+                None,
+            )
+        }
+        OpClass::Elementwise { kind, out } => {
+            let mut out = out.clone();
+            shard_leading_dim(&mut out, chips);
+            (OpClass::Elementwise { kind: *kind, out }, None)
+        }
+        OpClass::Reduction { input, out } => {
+            let mut input = input.clone();
+            shard_leading_dim(&mut input, chips);
+            (OpClass::Reduction { input, out: out.clone() }, None)
+        }
+        OpClass::DataMovement { out, .. } => {
+            let mut out = out.clone();
+            shard_leading_dim(&mut out, chips);
+            let bytes = out.size_bytes();
+            (OpClass::DataMovement { bytes, out }, None)
+        }
+        // Collectives are scheduled on the ICI engine by the caller;
+        // free and unmodeled ops replicate.
+        other => (other.clone(), None),
+    }
+}
+
+/// The two-engine per-chip timeline over one function.
+fn walk_func(
+    est: &Estimator,
+    module: &ModuleInfo,
+    func_name: Option<&str>,
+    slice: &SliceConfig,
+    depth: usize,
+) -> DistributedEstimate {
+    let mut result = DistributedEstimate {
+        module_name: module.name.clone(),
+        slice: *slice,
+        total_us: 0.0,
+        compute_us: 0.0,
+        collective_us: 0.0,
+        single_chip_us: 0.0,
+        ops: Vec::new(),
+    };
+    let Some(func) = func_name.and_then(|n| module.funcs.iter().find(|f| f.name == n))
+    else {
+        return result;
+    };
+
+    let mut t_compute = 0.0f64;
+    let mut t_ici = 0.0f64;
+    let mut ready: HashMap<&str, f64> = HashMap::new();
+    let ready_of = |ready: &HashMap<&str, f64>, op: &OpInfo| -> f64 {
+        op.operands
+            .iter()
+            .filter_map(|o| ready.get(o.as_str()).copied())
+            .fold(0.0f64, f64::max)
+    };
+
+    for op in &func.ops {
+        // Inline calls (mirrors Estimator::estimate_func): the callee is
+        // estimated as its own timeline and enters this one as a single
+        // compute block.
+        if (op.short_name() == "call" || op.op_name == "func.call") && depth < 4 {
+            if let Some(callee) = &op.callee {
+                let sub = walk_func(est, module, Some(callee), slice, depth + 1);
+                let start = ready_of(&ready, op).max(t_compute);
+                let finish = start + sub.total_us;
+                t_compute = finish;
+                t_ici = t_ici.max(finish);
+                result.compute_us += sub.compute_us;
+                result.collective_us += sub.collective_us;
+                for r in &op.results {
+                    ready.insert(r.as_str(), finish);
+                }
+                result.ops.push(DistOpEstimate {
+                    index: op.index,
+                    op_name: format!("call @{callee}"),
+                    compute_us: sub.compute_us,
+                    collective_us: sub.collective_us,
+                    finish_us: finish,
+                    note: format!("inlined {} ops", sub.ops.len()),
+                });
+                continue;
+            }
+        }
+
+        let class = classify(op);
+        if let OpClass::Collective { kind, bytes_in, out } = &class {
+            let dur = collective_cost(est, slice, *kind, *bytes_in, out.size_bytes());
+            let start = ready_of(&ready, op).max(t_ici);
+            let finish = start + dur;
+            t_ici = finish;
+            result.collective_us += dur;
+            for r in &op.results {
+                ready.insert(r.as_str(), finish);
+            }
+            result.ops.push(DistOpEstimate {
+                index: op.index,
+                op_name: op.op_name.clone(),
+                compute_us: 0.0,
+                collective_us: dur,
+                finish_us: finish,
+                note: format!("{kind} {out} over ICI"),
+            });
+            continue;
+        }
+
+        let out_bytes = op.out_type().map(|t| t.size_bytes());
+        let (sharded, gather) =
+            shard_class(&class, op.sharding.as_ref(), out_bytes, slice.chips);
+        let e = est.estimate_op(op.index, &op.op_name, &sharded);
+        let start = ready_of(&ready, op).max(t_compute);
+        let compute_finish = start + e.latency_us;
+        t_compute = compute_finish;
+        result.compute_us += e.latency_us;
+
+        let mut finish = compute_finish;
+        let mut coll = 0.0;
+        if let Some((bytes_in, bytes_out)) = gather {
+            coll = collective_cost(est, slice, CollectiveKind::AllGather, bytes_in, bytes_out);
+            let s2 = t_ici.max(compute_finish);
+            finish = s2 + coll;
+            t_ici = finish;
+            result.collective_us += coll;
+        }
+        for r in &op.results {
+            ready.insert(r.as_str(), finish);
+        }
+        let note = if coll > 0.0 {
+            format!("{} + all_gather(out)", e.note)
+        } else {
+            e.note
+        };
+        result.ops.push(DistOpEstimate {
+            index: op.index,
+            op_name: op.op_name.clone(),
+            compute_us: e.latency_us,
+            collective_us: coll,
+            finish_us: finish,
+            note,
+        });
+    }
+
+    result.total_us = t_compute.max(t_ici);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::fit_regime_calibration;
+    use crate::frontend::parse_module;
+    use crate::scalesim::ScaleConfig;
+
+    fn estimator() -> Estimator {
+        let mut obs = Vec::new();
+        for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+            let g = GemmShape::new(d, d, d);
+            obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+        }
+        Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+    }
+
+    const MLP: &str = r#"
+module @m { func.func @main(%x: tensor<1024x1024xf32>, %w: tensor<1024x1024xf32>) -> tensor<1024x1024xf32> {
+  %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] : (tensor<1024x1024xf32>, tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+  %1 = stablehlo.add %0, %x : tensor<1024x1024xf32>
+  return %1 : tensor<1024x1024xf32>
+} }"#;
+
+    #[test]
+    fn one_chip_slice_matches_single_chip_bit_for_bit() {
+        let est = estimator();
+        let module = parse_module(MLP).unwrap();
+        let single = est.estimate_module(&module);
+        let dist =
+            estimate_module_distributed(&est, &module, &SliceConfig::single_chip());
+        assert_eq!(dist.total_us.to_bits(), single.total_us.to_bits());
+        assert_eq!(dist.collective_us, 0.0);
+        assert_eq!(dist.parallel_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn sharding_speeds_up_and_efficiency_is_sane() {
+        let est = estimator();
+        let module = parse_module(MLP).unwrap();
+        let single = est.estimate_module(&module).total_us;
+        let dist = estimate_module_distributed(&est, &module, &SliceConfig::ring(4, 100.0));
+        assert!(dist.total_us < single, "{} !< {single}", dist.total_us);
+        let e = dist.parallel_efficiency();
+        assert!(e > 0.0 && e <= 1.0, "efficiency {e}");
+        assert!(dist.speedup() > 1.0);
+    }
+
+    #[test]
+    fn model_parallel_sharding_pays_an_all_gather() {
+        let text = r#"
+module @m { func.func @main(%x: tensor<128x1024xf32>, %w: tensor<1024x4096xf32>) -> tensor<128x4096xf32> {
+  %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] {mhlo.sharding = "{devices=[1,4]<=[4]}"} : (tensor<128x1024xf32>, tensor<1024x4096xf32>) -> tensor<128x4096xf32>
+  return %0 : tensor<128x4096xf32>
+} }"#;
+        let est = estimator();
+        let module = parse_module(text).unwrap();
+        let dist = estimate_module_distributed(&est, &module, &SliceConfig::ring(4, 100.0));
+        assert!(dist.collective_us > 0.0, "implicit all-gather missing");
+        assert!(dist.ops[0].note.contains("all_gather"));
+    }
+
+    #[test]
+    fn explicit_collectives_ride_the_ici_engine_and_overlap() {
+        let text = r#"
+module @m { func.func @main(%x: tensor<1024x1024xf32>, %w: tensor<1024x1024xf32>) -> tensor<1024x1024xf32> {
+  %0 = "stablehlo.all_reduce"(%x) ({
+  ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+    %s = stablehlo.add %a, %b : tensor<f32>
+    stablehlo.return %s : tensor<f32>
+  }) {replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+  %1 = stablehlo.dot_general %w, %w, contracting_dims = [1] x [0] : (tensor<1024x1024xf32>, tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+  %2 = stablehlo.add %0, %1 : tensor<1024x1024xf32>
+  return %2 : tensor<1024x1024xf32>
+} }"#;
+        let est = estimator();
+        let module = parse_module(text).unwrap();
+        let slice = SliceConfig::ring(4, 25.0);
+        let dist = estimate_module_distributed(&est, &module, &slice);
+        assert!(dist.collective_us > 0.0);
+        // The all_reduce does not feed the dot: the timeline overlaps
+        // them, so the makespan is below the serial sum of busy times.
+        assert!(
+            dist.total_us < dist.compute_us + dist.collective_us,
+            "no overlap: makespan {} vs busy {} + {}",
+            dist.total_us,
+            dist.compute_us,
+            dist.collective_us
+        );
+        assert!(dist.overlapped_us() > 0.0);
+    }
+
+    #[test]
+    fn latency_monotone_in_link_bandwidth() {
+        let text = r#"
+module @m { func.func @main(%x: tensor<128x1024xf32>, %w: tensor<1024x4096xf32>) -> tensor<128x4096xf32> {
+  %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] {mhlo.sharding = "{devices=[1,8]<=[8]}"} : (tensor<128x1024xf32>, tensor<1024x4096xf32>) -> tensor<128x4096xf32>
+  return %0 : tensor<128x4096xf32>
+} }"#;
+        let est = estimator();
+        let module = parse_module(text).unwrap();
+        let mut last = f64::INFINITY;
+        for gbps in [5.0, 20.0, 80.0, 320.0] {
+            let d = estimate_module_distributed(&est, &module, &SliceConfig::ring(8, gbps));
+            assert!(d.total_us < last, "not monotone at {gbps} GB/s");
+            last = d.total_us;
+        }
+    }
+
+    #[test]
+    fn gemm_slice_report_roundtrip() {
+        let est = estimator();
+        let g = GemmShape::new(4096, 1024, 1024);
+        let one = estimate_gemm_sliced(&est, g, &SliceConfig::single_chip());
+        let single = est
+            .estimate_op(0, "gemm", &OpClass::SystolicGemm { gemm: g, count: 1 })
+            .latency_us;
+        assert_eq!(one.total_us().to_bits(), single.to_bits());
+        let four = estimate_gemm_sliced(&est, g, &SliceConfig::ring(4, 100.0));
+        assert!(four.total_us() < single);
+        let e = four.parallel_efficiency();
+        assert!(e > 0.0 && e <= 1.0);
+    }
+}

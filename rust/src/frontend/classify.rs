@@ -97,6 +97,43 @@ impl EwKind {
     }
 }
 
+/// Cross-chip collective communication kind (costed by the ICI model in
+/// `crate::distributed`; zero-cost on a single chip).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    CollectivePermute,
+}
+
+impl CollectiveKind {
+    pub fn from_name(short: &str) -> Option<CollectiveKind> {
+        Some(match short {
+            "all_reduce" => CollectiveKind::AllReduce,
+            "all_gather" => CollectiveKind::AllGather,
+            "reduce_scatter" => CollectiveKind::ReduceScatter,
+            "collective_permute" => CollectiveKind::CollectivePermute,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "all_reduce",
+            CollectiveKind::AllGather => "all_gather",
+            CollectiveKind::ReduceScatter => "reduce_scatter",
+            CollectiveKind::CollectivePermute => "collective_permute",
+        }
+    }
+}
+
+impl std::fmt::Display for CollectiveKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Classification of one op.
 #[derive(Debug, Clone, PartialEq)]
 pub enum OpClass {
@@ -111,6 +148,14 @@ pub enum OpClass {
     Reduction { input: TensorType, out: TensorType },
     /// Pure data movement (reshape/transpose/broadcast/...).
     DataMovement { bytes: u64, out: TensorType },
+    /// Cross-chip collective (`all_reduce`, `all_gather`, ...): free on a
+    /// single chip, costed by the ICI model on a multi-chip slice.
+    Collective {
+        kind: CollectiveKind,
+        /// Input payload bytes (the per-chip shard the op consumes).
+        bytes_in: u64,
+        out: TensorType,
+    },
     /// No runtime cost (constants, iota, metadata ops).
     Free,
     /// Not modeled; conservatively treated as elementwise on the output.
@@ -158,6 +203,20 @@ pub fn classify(op: &OpInfo) -> OpClass {
                 reason: format!("convolution not supported: {e}"),
                 out: op.out_type().cloned(),
             },
+        };
+    }
+
+    if let Some(kind) = CollectiveKind::from_name(short) {
+        if let (Some(input), Some(out)) = (op.operand_types.first(), op.out_type()) {
+            return OpClass::Collective {
+                kind,
+                bytes_in: input.size_bytes(),
+                out: out.clone(),
+            };
+        }
+        return OpClass::Unmodeled {
+            reason: format!("collective '{short}' missing operand/result types"),
+            out: op.out_type().cloned(),
         };
     }
 
@@ -522,6 +581,31 @@ module { func.func @main(%a: tensor<4xf32>) -> tensor<4xf32> {
                 assert!(out.is_some());
             }
             other => panic!("expected unmodeled, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_collectives() {
+        let text = r#"
+module { func.func @main(%a: tensor<256x1024xf32>) -> tensor<1024x1024xf32> {
+  %0 = "stablehlo.all_gather"(%a) {all_gather_dim = 0 : i64, replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<256x1024xf32>) -> tensor<1024x1024xf32>
+  return %0 : tensor<1024x1024xf32>
+} }"#;
+        match first_op_class(text) {
+            OpClass::Collective { kind, bytes_in, out } => {
+                assert_eq!(kind, CollectiveKind::AllGather);
+                assert_eq!(bytes_in, 256 * 1024 * 4);
+                assert_eq!(out.size_bytes(), 1024 * 1024 * 4);
+            }
+            other => panic!("expected collective, got {other:?}"),
+        }
+        for (name, kind) in [
+            ("all_reduce", CollectiveKind::AllReduce),
+            ("reduce_scatter", CollectiveKind::ReduceScatter),
+            ("collective_permute", CollectiveKind::CollectivePermute),
+        ] {
+            assert_eq!(CollectiveKind::from_name(name), Some(kind));
+            assert_eq!(kind.name(), name);
         }
     }
 

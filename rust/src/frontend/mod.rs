@@ -13,7 +13,7 @@ pub mod opinfo;
 pub mod parser;
 pub mod types;
 
-pub use classify::{classify, conv_to_gemm, dot_to_gemm, EwKind, OpClass};
-pub use opinfo::{ConvAttrs, DotDims, FuncInfo, ModuleInfo, OpInfo};
+pub use classify::{classify, conv_to_gemm, dot_to_gemm, CollectiveKind, EwKind, OpClass};
+pub use opinfo::{ConvAttrs, DotDims, FuncInfo, ModuleInfo, OpInfo, ShardingAttr};
 pub use parser::parse_module;
 pub use types::{DType, TensorType};

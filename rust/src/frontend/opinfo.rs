@@ -44,6 +44,84 @@ pub struct ConvAttrs {
     pub batch_group_count: usize,
 }
 
+/// Parsed `mhlo.sharding` annotation (the GSPMD sharding attribute XLA
+/// attaches to partitioned modules). Only the structure relevant to the
+/// distributed estimator is kept: whether the value is replicated,
+/// pinned to one device, or tiled over a device mesh.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardingAttr {
+    /// `{replicated}` — every chip holds the full value.
+    Replicated,
+    /// `{maximal device=N}` — the value lives on one device.
+    Maximal { device: usize },
+    /// `{devices=[a,b,...]...}` — tiled: `mesh[i]` shards along tensor
+    /// axis `i` (trailing iota/permutation device lists are ignored).
+    Devices { mesh: Vec<usize> },
+}
+
+impl ShardingAttr {
+    /// Parse the textual form, e.g. `{devices=[2,1]<=[2]}`,
+    /// `{devices=[2,2]0,1,2,3}`, `{replicated}`, `{maximal device=0}`.
+    /// Returns `None` for forms we do not model.
+    pub fn parse(text: &str) -> Option<ShardingAttr> {
+        let s = text.trim();
+        let s = s.strip_prefix('{').unwrap_or(s);
+        let s = s.strip_suffix('}').unwrap_or(s).trim();
+        if s.starts_with("replicated") {
+            return Some(ShardingAttr::Replicated);
+        }
+        if s.starts_with("maximal") {
+            let digits: String = s
+                .split("device=")
+                .nth(1)
+                .unwrap_or("")
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            return Some(ShardingAttr::Maximal {
+                device: digits.parse().unwrap_or(0),
+            });
+        }
+        if let Some(rest) = s.strip_prefix("devices=") {
+            let inner = rest.strip_prefix('[')?.split(']').next()?;
+            let mesh: Option<Vec<usize>> = inner
+                .split(',')
+                .map(|p| p.trim().parse::<usize>().ok())
+                .collect();
+            let mut mesh = mesh?;
+            // GSPMD `{devices=[1,4]<=[4] last_tile_dim_replicate}`: the
+            // trailing mesh dim replicates rather than tiles — drop it
+            // so the value is not misread as model-parallel.
+            if rest.contains("last_tile_dim_replicate") {
+                mesh.pop();
+            }
+            return Some(ShardingAttr::Devices { mesh });
+        }
+        None
+    }
+
+    /// True when no tensor axis is split (replicated or single-device).
+    pub fn is_replicated(&self) -> bool {
+        match self {
+            ShardingAttr::Replicated | ShardingAttr::Maximal { .. } => true,
+            ShardingAttr::Devices { mesh } => mesh.iter().all(|&d| d <= 1),
+        }
+    }
+
+    /// True when the split is along a non-leading axis only (model
+    /// parallelism for a GEMM: the output needs an all-gather to get
+    /// back to the row-sharded layout the estimator assumes).
+    pub fn model_parallel(&self) -> bool {
+        match self {
+            ShardingAttr::Devices { mesh } => {
+                mesh.first().copied().unwrap_or(1) <= 1
+                    && mesh.iter().skip(1).any(|&d| d > 1)
+            }
+            _ => false,
+        }
+    }
+}
+
 /// Uniform per-operation record: type, operands, shapes, dtypes and the
 /// attributes relevant to performance modeling.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,6 +149,8 @@ pub struct OpInfo {
     pub int_attrs: BTreeMap<String, Vec<i64>>,
     /// Callee symbol for `call` / `func.call` ops.
     pub callee: Option<String>,
+    /// Parsed `mhlo.sharding` attribute, if the op carries one.
+    pub sharding: Option<ShardingAttr>,
 }
 
 impl OpInfo {
@@ -116,5 +196,48 @@ impl ModuleInfo {
             .iter()
             .find(|f| f.name == "main")
             .or_else(|| self.funcs.first())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharding_attr_forms() {
+        assert_eq!(
+            ShardingAttr::parse("{replicated}"),
+            Some(ShardingAttr::Replicated)
+        );
+        assert_eq!(
+            ShardingAttr::parse("{maximal device=3}"),
+            Some(ShardingAttr::Maximal { device: 3 })
+        );
+        assert_eq!(
+            ShardingAttr::parse("{devices=[4,1]<=[4]}"),
+            Some(ShardingAttr::Devices { mesh: vec![4, 1] })
+        );
+        assert_eq!(
+            ShardingAttr::parse("{devices=[2,2]0,1,2,3}"),
+            Some(ShardingAttr::Devices { mesh: vec![2, 2] })
+        );
+        // The replicated trailing tile dim must not read as tiling.
+        let ltdr = ShardingAttr::parse("{devices=[1,4]<=[4] last_tile_dim_replicate}").unwrap();
+        assert_eq!(ltdr, ShardingAttr::Devices { mesh: vec![1] });
+        assert!(ltdr.is_replicated());
+        assert!(!ltdr.model_parallel());
+        assert_eq!(ShardingAttr::parse("{manual}"), None);
+    }
+
+    #[test]
+    fn sharding_attr_predicates() {
+        assert!(ShardingAttr::Replicated.is_replicated());
+        assert!(ShardingAttr::Maximal { device: 0 }.is_replicated());
+        assert!(ShardingAttr::Devices { mesh: vec![1, 1] }.is_replicated());
+        let row = ShardingAttr::Devices { mesh: vec![4, 1] };
+        assert!(!row.is_replicated());
+        assert!(!row.model_parallel());
+        let col = ShardingAttr::Devices { mesh: vec![1, 4] };
+        assert!(col.model_parallel());
     }
 }

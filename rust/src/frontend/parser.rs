@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use super::lexer::{lex, SpannedTok, Tok};
-use super::opinfo::{ConvAttrs, ConvDimLabel, DotDims, FuncInfo, ModuleInfo, OpInfo};
+use super::opinfo::{ConvAttrs, ConvDimLabel, DotDims, FuncInfo, ModuleInfo, OpInfo, ShardingAttr};
 use super::types::TensorType;
 
 /// Parse a StableHLO module from text.
@@ -444,6 +444,7 @@ fn parse_op(cur: &mut Cursor, index: usize) -> Result<Option<OpInfo>> {
         conv_attrs: None,
         int_attrs: BTreeMap::new(),
         callee: None,
+        sharding: None,
     };
 
     // Scan until the top-level ':' that precedes the type signature.
@@ -670,6 +671,26 @@ fn parse_attr_dict_or_region(cur: &mut Cursor, op: &mut OpInfo) -> Result<()> {
                     {
                         op.dot_dims = Some(parse_dot_attr(body)?);
                         cur.next();
+                    }
+                    ("mhlo.sharding", Some(Tok::Str(s))) => {
+                        let parsed = ShardingAttr::parse(s);
+                        cur.next();
+                        if op.sharding.is_none() {
+                            op.sharding = parsed;
+                        }
+                    }
+                    // Scalar integer attributes collectives carry
+                    // (`all_gather_dim = 0 : i64`, ...).
+                    (key, Some(Tok::Int(v)))
+                        if matches!(
+                            key,
+                            "all_gather_dim" | "scatter_dimension" | "split_dimension"
+                                | "concat_dimension"
+                        ) =>
+                    {
+                        let v = *v;
+                        cur.next();
+                        op.int_attrs.insert(key.to_string(), vec![v]);
                     }
                     _ => {}
                 }
@@ -929,6 +950,44 @@ module {
         assert_eq!(red.operands, vec!["arg0", "cst"]);
         assert_eq!(red.int_attrs.get("dimensions"), Some(&vec![1]));
         assert_eq!(red.result_types[0].dims, vec![8]);
+    }
+
+    #[test]
+    fn sharding_attr_captured() {
+        let text = r#"
+module @m {
+  func.func @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> tensor<64x64xf32> {
+    %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] {mhlo.sharding = "{devices=[2,1]<=[2]}"} : (tensor<64x64xf32>, tensor<64x64xf32>) -> tensor<64x64xf32>
+    %1 = stablehlo.add %0, %a {mhlo.sharding = "{replicated}"} : tensor<64x64xf32>
+    return %1 : tensor<64x64xf32>
+  }
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let f = m.entry().unwrap();
+        assert_eq!(
+            f.ops[0].sharding,
+            Some(ShardingAttr::Devices { mesh: vec![2, 1] })
+        );
+        assert_eq!(f.ops[1].sharding, Some(ShardingAttr::Replicated));
+    }
+
+    #[test]
+    fn collective_generic_form_parsed() {
+        let text = r#"
+module @m {
+  func.func @main(%a: tensor<8x128xf32>) -> tensor<32x128xf32> {
+    %0 = "stablehlo.all_gather"(%a) {all_gather_dim = 0 : i64, replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<8x128xf32>) -> tensor<32x128xf32>
+    return %0 : tensor<32x128xf32>
+  }
+}
+"#;
+        let m = parse_module(text).unwrap();
+        let op = &m.entry().unwrap().ops[0];
+        assert_eq!(op.short_name(), "all_gather");
+        assert_eq!(op.int_attrs.get("all_gather_dim"), Some(&vec![0]));
+        assert_eq!(op.operand_types[0].dims, vec![8, 128]);
+        assert_eq!(op.result_types[0].dims, vec![32, 128]);
     }
 
     #[test]

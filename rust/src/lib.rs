@@ -21,12 +21,16 @@
 //!   HLO artifacts produced by the Python build path.
 //! * [`coordinator`] — the L3 orchestrator: job queue, worker pool,
 //!   operator routing and whole-model latency aggregation.
+//! * [`distributed`] — multi-chip slice simulation: the ICI collective
+//!   cost model and the per-chip timeline that overlaps collectives
+//!   with compute.
 //! * [`workloads`] — the paper's sweep generators.
 //! * [`report`] — tables, CSV and ASCII scatter plots for every figure.
 //! * [`util`] — std-only infrastructure (JSON, PRNG, stats, args).
 
 pub mod calibrate;
 pub mod coordinator;
+pub mod distributed;
 pub mod experiments;
 pub mod frontend;
 pub mod learned;

@@ -10,6 +10,10 @@ use anyhow::{bail, Context, Result};
 
 use scalesim_tpu::calibrate::Regime;
 use scalesim_tpu::coordinator::{default_workers, serve_lines, serve_stream, StreamOptions};
+use scalesim_tpu::distributed::{
+    estimate_gemm_sliced, estimate_module_distributed, IciTopology, SliceConfig,
+    DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
+};
 use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
 use scalesim_tpu::frontend::parse_module;
 use scalesim_tpu::report::{write_output, Table};
@@ -38,6 +42,12 @@ Toolchain:
   simulate --topology FILE.csv   simulate a SCALE-Sim CSV topology
   simulate --module FILE.txt     estimate a StableHLO module end to end
            [--fused]               model XLA operator fusion
+           [--chips N]             distribute across an N-chip slice:
+           [--ici-gbps G]          per-link ICI bandwidth (default 100)
+           [--ici-topology T]      ring | torus | XxY (default ring)
+           [--ici-latency-us A]    per-hop latency (default 1.0); prints
+                                   per-chip busy time, collective time
+                                   and parallel efficiency
   calibrate                      build + save modeling assets
   serve [--input FILE.jsonl]     streaming request service (JSONL in/out);
         [--workers N]              reads stdin when no --input is given and
@@ -91,6 +101,25 @@ fn make_config(args: &Args) -> Result<ScaleConfig> {
 
 fn out_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("out", "results"))
+}
+
+/// Slice config from `--chips/--ici-*`; `None` when `--chips` is absent.
+fn make_slice(args: &Args) -> Result<Option<SliceConfig>> {
+    let Some(chips) = args.get("chips") else {
+        return Ok(None);
+    };
+    let chips: usize = chips
+        .parse()
+        .with_context(|| format!("--chips expects an integer, got '{chips}'"))?;
+    let topology = IciTopology::parse(&args.str_or("ici-topology", "ring"), chips)?;
+    let slice = SliceConfig {
+        chips,
+        topology,
+        link_gbps: args.f64_or("ici-gbps", DEFAULT_LINK_GBPS),
+        hop_latency_us: args.f64_or("ici-latency-us", DEFAULT_HOP_LATENCY_US),
+    };
+    slice.validate()?;
+    Ok(Some(slice))
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -189,6 +218,41 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading module {path}"))?;
         let module = parse_module(&text)?;
+
+        if let Some(slice) = make_slice(args)? {
+            let d = estimate_module_distributed(&est, &module, &slice);
+            let mut t = Table::new(&["#", "op", "compute us", "ici us", "note"]);
+            for op in &d.ops {
+                t.row(&[
+                    op.index.to_string(),
+                    op.op_name.clone(),
+                    format!("{:.3}", op.compute_us),
+                    format!("{:.3}", op.collective_us),
+                    op.note.clone(),
+                ]);
+            }
+            println!("{}", t.markdown());
+            println!(
+                "slice: {} chips ({}, {} GB/s/link, {} us/hop)",
+                slice.chips, slice.topology, slice.link_gbps, slice.hop_latency_us
+            );
+            println!(
+                "per-chip busy time: {:.2} us compute, {:.2} us collective (ICI); {:.2} us overlapped",
+                d.compute_us,
+                d.collective_us,
+                d.overlapped_us()
+            );
+            println!(
+                "module @{}: per-chip makespan {:.2} us; single-chip {:.2} us; speedup {:.2}x; parallel efficiency {:.1}%",
+                d.module_name,
+                d.total_us,
+                d.single_chip_us,
+                d.speedup(),
+                d.parallel_efficiency() * 100.0
+            );
+            return Ok(());
+        }
+
         let report = if args.flag("fused") {
             scalesim_tpu::coordinator::estimate_fused(&est, &module)
         } else {
@@ -249,6 +313,38 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let report = simulate_gemm(&config, g);
     println!("{report}");
     println!("regime: {}", Regime::of_gemm(&g));
+
+    if let Some(slice) = make_slice(args)? {
+        // Slice the GEMM without needing calibration assets: build a
+        // cycle-proportional estimator so relative numbers are exact.
+        let est = assets::load_assets(&PathBuf::from(args.str_or("assets", "artifacts/assets")))
+            .unwrap_or_else(|_| {
+                let obs: Vec<_> = [64usize, 128, 256, 512, 1024, 2048, 4096]
+                    .iter()
+                    .map(|&d| {
+                        let gd = GemmShape::new(d, d, d);
+                        let c = simulate_gemm(&config, gd).total_cycles();
+                        (gd, c, c as f64 * 1e-3)
+                    })
+                    .collect();
+                scalesim_tpu::coordinator::Estimator::new(
+                    config.clone(),
+                    scalesim_tpu::calibrate::fit_regime_calibration(&obs)
+                        .expect("synthetic calibration"),
+                )
+            });
+        let r = estimate_gemm_sliced(&est, g, &slice);
+        println!(
+            "slice: {} chips ({}, {} GB/s/link): per-chip busy time {:.3} us compute + {:.3} us collective = {:.3} us; parallel efficiency {:.1}%",
+            slice.chips,
+            slice.topology,
+            slice.link_gbps,
+            r.compute_us,
+            r.collective_us,
+            r.total_us(),
+            r.parallel_efficiency() * 100.0
+        );
+    }
 
     // Optional extensions: energy, sparsity, fold trace.
     if args.flag("energy") {

@@ -1,0 +1,136 @@
+//! Integration: the distributed (multi-chip) estimator over the
+//! checked-in BERT-layer and collectives fixtures — the acceptance path
+//! of `scalesim-tpu simulate --module <fixture> --chips N`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use scalesim_tpu::calibrate::fit_regime_calibration;
+use scalesim_tpu::coordinator::{serve_lines, Estimator};
+use scalesim_tpu::distributed::{
+    estimate_module_distributed, IciTopology, SliceConfig,
+};
+use scalesim_tpu::frontend::{parse_module, ModuleInfo};
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+use scalesim_tpu::util::json::Json;
+
+fn estimator() -> Estimator {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+}
+
+fn fixture_path(name: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn fixture(name: &str) -> ModuleInfo {
+    let text = std::fs::read_to_string(fixture_path(name)).unwrap();
+    parse_module(&text).unwrap()
+}
+
+#[test]
+fn bert_layer_one_chip_matches_single_chip_estimate_exactly() {
+    let est = estimator();
+    let module = fixture("bert_layer.mlir");
+    let single = est.estimate_module(&module);
+    let one = estimate_module_distributed(&est, &module, &SliceConfig::single_chip());
+    assert_eq!(
+        one.total_us.to_bits(),
+        single.total_us.to_bits(),
+        "1-chip slice diverged from the single-chip estimate"
+    );
+    assert_eq!(one.collective_us, 0.0);
+    assert_eq!(one.parallel_efficiency(), 1.0);
+    assert_eq!(one.ops.len(), single.ops.len());
+}
+
+#[test]
+fn bert_layer_scales_across_chips() {
+    let est = estimator();
+    let module = fixture("bert_layer.mlir");
+    let single = est.estimate_module(&module).total_us;
+
+    let mut last = f64::INFINITY;
+    for chips in [1usize, 4, 8] {
+        let d = estimate_module_distributed(&est, &module, &SliceConfig::ring(chips, 100.0));
+        assert!(
+            d.total_us <= last,
+            "{chips} chips slower than fewer: {} > {last}",
+            d.total_us
+        );
+        let e = d.parallel_efficiency();
+        assert!(e > 0.0 && e <= 1.0, "efficiency {e} at {chips} chips");
+        last = d.total_us;
+    }
+
+    // 8 chips must beat one chip clearly on a layer this parallel, and
+    // the sharded FFN-up matmul pays a real all-gather.
+    let d8 = estimate_module_distributed(&est, &module, &SliceConfig::ring(8, 100.0));
+    assert!(d8.total_us < single / 2.0, "{} vs {single}", d8.total_us);
+    assert!(d8.collective_us > 0.0, "sharded FFN paid no all-gather");
+}
+
+#[test]
+fn collectives_fixture_costs_ici_time_and_respects_bandwidth() {
+    let est = estimator();
+    let module = fixture("collectives.mlir");
+
+    let slow = estimate_module_distributed(&est, &module, &SliceConfig::ring(4, 10.0));
+    let fast = estimate_module_distributed(&est, &module, &SliceConfig::ring(4, 400.0));
+    assert!(slow.collective_us > fast.collective_us);
+    assert!(slow.total_us > fast.total_us);
+
+    // A 2x2 torus finishes the same collectives no slower than the ring.
+    let torus = estimate_module_distributed(
+        &est,
+        &module,
+        &SliceConfig {
+            chips: 4,
+            topology: IciTopology::Torus2D { x: 2, y: 2 },
+            link_gbps: 10.0,
+            hop_latency_us: 1.0,
+        },
+    );
+    assert!(torus.collective_us <= slow.collective_us);
+
+    // All four collective kinds got a nonzero ICI cost.
+    let ici_ops: Vec<_> = slow
+        .ops
+        .iter()
+        .filter(|o| o.collective_us > 0.0 && o.compute_us == 0.0)
+        .collect();
+    assert_eq!(ici_ops.len(), 4, "{ici_ops:?}");
+}
+
+#[test]
+fn serve_answers_distributed_module_requests() {
+    let est = Arc::new(estimator());
+    let path = fixture_path("bert_layer.mlir");
+    let single_line = format!(r#"{{"type":"module","path":"{}"}}"#, path.display());
+    let dist_line = format!(
+        r#"{{"type":"module","path":"{}","chips":8,"ici_gbps":100}}"#,
+        path.display()
+    );
+    let responses = serve_lines(est, &[single_line, dist_line], 2);
+
+    let single = Json::parse(&responses[0]).unwrap();
+    assert_eq!(single.get("ok"), Some(&Json::Bool(true)), "{single:?}");
+    let dist = Json::parse(&responses[1]).unwrap();
+    assert_eq!(dist.get("ok"), Some(&Json::Bool(true)), "{dist:?}");
+    assert_eq!(dist.req_f64("chips").unwrap(), 8.0);
+    assert!(dist.req_f64("total_us").unwrap() < single.req_f64("total_us").unwrap());
+    assert!(dist.req_f64("collective_us").unwrap() > 0.0);
+    let eff = dist.req_f64("parallel_efficiency").unwrap();
+    assert!(eff > 0.0 && eff <= 1.0);
+    // The distributed response reports the baseline it was compared to.
+    assert_eq!(
+        dist.req_f64("single_chip_us").unwrap().to_bits(),
+        single.req_f64("total_us").unwrap().to_bits()
+    );
+}

@@ -1,0 +1,19 @@
+module @collectives attributes {mhlo.num_partitions = 4 : i32} {
+  func.func public @main(%arg0: tensor<1024x1024xf32>, %arg1: tensor<256x1024xf32>) -> (tensor<1024x1024xf32>) {
+    %0 = "stablehlo.all_reduce"(%arg0) ({
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %s = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }) {replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>, channel_handle = #stablehlo.channel_handle<handle = 1, type = 1>} : (tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+    %1 = "stablehlo.all_gather"(%arg1) {all_gather_dim = 0 : i64, replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<256x1024xf32>) -> tensor<1024x1024xf32>
+    %2 = "stablehlo.reduce_scatter"(%0) ({
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %s = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }) {scatter_dimension = 0 : i64, replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<1024x1024xf32>) -> tensor<256x1024xf32>
+    %3 = "stablehlo.collective_permute"(%1) {source_target_pairs = dense<[[0, 1], [1, 2], [2, 3], [3, 0]]> : tensor<4x2xi64>} : (tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+    %4 = stablehlo.multiply %2, %2 : tensor<256x1024xf32>
+    %5 = stablehlo.dot_general %3, %0, contracting_dims = [1] x [0] : (tensor<1024x1024xf32>, tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+    return %5 : tensor<1024x1024xf32>
+  }
+}

@@ -1,0 +1,8 @@
+module @sharded_mlp attributes {mhlo.num_partitions = 4 : i32} {
+  func.func public @main(%arg0: tensor<512x1024xbf16> {mhlo.sharding = "{devices=[4,1]<=[4]}"}, %arg1: tensor<1024x2048xbf16> {mhlo.sharding = "{replicated}"}, %arg2: tensor<512x2048xbf16>) -> (tensor<512x2048xbf16>) {
+    %0 = stablehlo.dot_general %arg0, %arg1, contracting_dims = [1] x [0] {mhlo.sharding = "{devices=[4,1]<=[4]}"} : (tensor<512x1024xbf16>, tensor<1024x2048xbf16>) -> tensor<512x2048xbf16>
+    %1 = stablehlo.add %0, %arg2 {mhlo.sharding = "{devices=[4,1]<=[4]}"} : tensor<512x2048xbf16>
+    %2 = stablehlo.tanh %1 {mhlo.sharding = "{replicated}"} : tensor<512x2048xbf16>
+    return %2 : tensor<512x2048xbf16>
+  }
+}

@@ -1,0 +1,216 @@
+//! Golden-file tests for the StableHLO frontend: checked-in `.mlir`
+//! fixtures are parsed and classified, and the resulting op counts,
+//! shapes, dtypes and classifications are asserted exactly. Any frontend
+//! regression that changes what the estimator sees fails here first.
+
+use std::path::Path;
+
+use scalesim_tpu::frontend::types::DType;
+use scalesim_tpu::frontend::{
+    classify, parse_module, CollectiveKind, ModuleInfo, OpClass, ShardingAttr,
+};
+use scalesim_tpu::scalesim::GemmShape;
+
+fn fixture(name: &str) -> ModuleInfo {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    parse_module(&text).unwrap_or_else(|e| panic!("parsing {name}: {e}"))
+}
+
+/// Histogram of classifications over the entry function.
+#[derive(Debug, Default, PartialEq, Eq)]
+struct ClassCounts {
+    gemm: usize,
+    conv: usize,
+    elementwise: usize,
+    reduction: usize,
+    movement: usize,
+    collective: usize,
+    free: usize,
+    unmodeled: usize,
+}
+
+fn count_classes(m: &ModuleInfo) -> ClassCounts {
+    let mut c = ClassCounts::default();
+    for op in &m.entry().unwrap().ops {
+        match classify(op) {
+            OpClass::SystolicGemm { .. } => c.gemm += 1,
+            OpClass::SystolicConv { .. } => c.conv += 1,
+            OpClass::Elementwise { .. } => c.elementwise += 1,
+            OpClass::Reduction { .. } => c.reduction += 1,
+            OpClass::DataMovement { .. } => c.movement += 1,
+            OpClass::Collective { .. } => c.collective += 1,
+            OpClass::Free => c.free += 1,
+            OpClass::Unmodeled { .. } => c.unmodeled += 1,
+        }
+    }
+    c
+}
+
+#[test]
+fn bert_layer_golden() {
+    let m = fixture("bert_layer.mlir");
+    assert_eq!(m.name, "bert_layer");
+    let f = m.entry().unwrap();
+    assert_eq!(f.arg_types.len(), 7);
+    assert_eq!(f.ops.len(), 33, "op count drifted");
+
+    assert_eq!(
+        count_classes(&m),
+        ClassCounts {
+            gemm: 8,
+            conv: 0,
+            elementwise: 7,
+            reduction: 2,
+            movement: 12,
+            collective: 0,
+            free: 4,
+            unmodeled: 0,
+        }
+    );
+
+    // Every op that produces a tensor produces bf16.
+    for op in &f.ops {
+        if let Some(t) = op.out_type() {
+            assert_eq!(t.dtype, DType::Bf16, "op {} is not bf16", op.op_name);
+        }
+    }
+
+    // The eight GEMMs, in program order, with exact shapes and batch
+    // counts (the attention dots are 12-way batched).
+    let gemms: Vec<(GemmShape, u64)> = f
+        .ops
+        .iter()
+        .filter_map(|op| match classify(op) {
+            OpClass::SystolicGemm { gemm, count } => Some((gemm, count)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        gemms,
+        vec![
+            (GemmShape::new(128, 768, 768), 1),  // Q proj
+            (GemmShape::new(128, 768, 768), 1),  // K proj
+            (GemmShape::new(128, 768, 768), 1),  // V proj
+            (GemmShape::new(128, 64, 128), 12),  // QK^T
+            (GemmShape::new(128, 128, 64), 12),  // probs * V
+            (GemmShape::new(128, 768, 768), 1),  // output proj
+            (GemmShape::new(128, 768, 3072), 1), // FFN up
+            (GemmShape::new(128, 3072, 768), 1), // FFN down
+        ]
+    );
+
+    // The FFN-up matmul carries a column-parallel sharding annotation.
+    let ffn1 = f
+        .ops
+        .iter()
+        .find(|op| op.sharding.is_some())
+        .expect("sharded op present");
+    assert_eq!(
+        ffn1.sharding,
+        Some(ShardingAttr::Devices { mesh: vec![1, 4] })
+    );
+    assert!(ffn1.sharding.as_ref().unwrap().model_parallel());
+}
+
+#[test]
+fn sharded_mlp_golden() {
+    let m = fixture("sharded_mlp.mlir");
+    assert_eq!(m.name, "sharded_mlp");
+    let f = m.entry().unwrap();
+    assert_eq!(f.ops.len(), 3);
+
+    match classify(&f.ops[0]) {
+        OpClass::SystolicGemm { gemm, count } => {
+            assert_eq!(gemm, GemmShape::new(512, 1024, 2048));
+            assert_eq!(count, 1);
+        }
+        other => panic!("expected gemm, got {other:?}"),
+    }
+    assert_eq!(
+        f.ops[0].sharding,
+        Some(ShardingAttr::Devices { mesh: vec![4, 1] })
+    );
+    assert!(!f.ops[0].sharding.as_ref().unwrap().model_parallel());
+
+    match classify(&f.ops[1]) {
+        OpClass::Elementwise { out, .. } => {
+            assert_eq!(out.dims, vec![512, 2048]);
+            assert_eq!(out.dtype, DType::Bf16);
+        }
+        other => panic!("expected elementwise, got {other:?}"),
+    }
+    assert_eq!(
+        f.ops[1].sharding,
+        Some(ShardingAttr::Devices { mesh: vec![4, 1] })
+    );
+    assert_eq!(f.ops[2].sharding, Some(ShardingAttr::Replicated));
+}
+
+#[test]
+fn collectives_golden() {
+    let m = fixture("collectives.mlir");
+    assert_eq!(m.name, "collectives");
+    let f = m.entry().unwrap();
+    assert_eq!(f.ops.len(), 6);
+
+    assert_eq!(
+        count_classes(&m),
+        ClassCounts {
+            gemm: 1,
+            conv: 0,
+            elementwise: 1,
+            reduction: 0,
+            movement: 0,
+            collective: 4,
+            free: 0,
+            unmodeled: 0,
+        }
+    );
+
+    let classes: Vec<OpClass> = f.ops.iter().map(classify).collect();
+    match &classes[0] {
+        OpClass::Collective { kind, bytes_in, out } => {
+            assert_eq!(*kind, CollectiveKind::AllReduce);
+            assert_eq!(*bytes_in, 1024 * 1024 * 4);
+            assert_eq!(out.size_bytes(), 1024 * 1024 * 4);
+            assert_eq!(out.dtype, DType::F32);
+        }
+        other => panic!("expected all_reduce, got {other:?}"),
+    }
+    match &classes[1] {
+        OpClass::Collective { kind, bytes_in, out } => {
+            assert_eq!(*kind, CollectiveKind::AllGather);
+            assert_eq!(*bytes_in, 256 * 1024 * 4);
+            assert_eq!(out.dims, vec![1024, 1024]);
+        }
+        other => panic!("expected all_gather, got {other:?}"),
+    }
+    match &classes[2] {
+        OpClass::Collective { kind, out, .. } => {
+            assert_eq!(*kind, CollectiveKind::ReduceScatter);
+            assert_eq!(out.dims, vec![256, 1024]);
+        }
+        other => panic!("expected reduce_scatter, got {other:?}"),
+    }
+    match &classes[3] {
+        OpClass::Collective { kind, bytes_in, .. } => {
+            assert_eq!(*kind, CollectiveKind::CollectivePermute);
+            assert_eq!(*bytes_in, 1024 * 1024 * 4);
+        }
+        other => panic!("expected collective_permute, got {other:?}"),
+    }
+    match &classes[5] {
+        OpClass::SystolicGemm { gemm, .. } => {
+            assert_eq!(*gemm, GemmShape::new(1024, 1024, 1024));
+        }
+        other => panic!("expected gemm, got {other:?}"),
+    }
+
+    // The dimension attributes made it through the generic form.
+    assert_eq!(f.ops[1].int_attrs.get("all_gather_dim"), Some(&vec![0]));
+    assert_eq!(f.ops[2].int_attrs.get("scatter_dimension"), Some(&vec![0]));
+}

@@ -5,8 +5,9 @@
 //! property is evaluated over a few hundred random cases with a fixed
 //! seed (failures reproduce exactly).
 
-use scalesim_tpu::calibrate::Regime;
-use scalesim_tpu::coordinator::parallel_map;
+use scalesim_tpu::calibrate::{fit_regime_calibration, Regime};
+use scalesim_tpu::coordinator::{parallel_map, Estimator};
+use scalesim_tpu::distributed::{estimate_module_distributed, IciTopology, SliceConfig};
 use scalesim_tpu::frontend::types::{DType, TensorType};
 use scalesim_tpu::frontend::{classify, parse_module, EwKind, OpClass};
 use scalesim_tpu::learned::featurize;
@@ -156,6 +157,106 @@ fn prop_vpu_latency_monotone_and_featurize_total() {
         assert!(f.iter().all(|v| v.is_finite()));
         let elems: u64 = dims.iter().map(|&d| d as u64).product();
         assert_eq!(f[0] as u64, elems);
+    }
+}
+
+fn calibrated_estimator() -> Estimator {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+}
+
+/// A random matmul+epilogue module, optionally with an all_reduce of the
+/// GEMM output (gradient-sync style).
+fn random_module_text(prng: &mut Prng, with_collective: bool) -> String {
+    let m = 8 * prng.int_range(1, 256) as usize;
+    let k = 8 * prng.int_range(1, 256) as usize;
+    let n = 8 * prng.int_range(1, 256) as usize;
+    let collective = if with_collective {
+        format!(
+            r#"    %2 = "stablehlo.all_reduce"(%1) ({{
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %s = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }}) {{replica_groups = dense<[[0, 1]]> : tensor<1x2xi64>}} : (tensor<{m}x{n}xf32>) -> tensor<{m}x{n}xf32>
+    return %2 : tensor<{m}x{n}xf32>"#
+        )
+    } else {
+        format!("    return %1 : tensor<{m}x{n}xf32>")
+    };
+    format!(
+        r#"module @rand {{
+  func.func @main(%a: tensor<{m}x{k}xf32>, %b: tensor<{k}x{n}xf32>) -> tensor<{m}x{n}xf32> {{
+    %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<{m}x{k}xf32>, tensor<{k}x{n}xf32>) -> tensor<{m}x{n}xf32>
+    %1 = stablehlo.add %0, %0 : tensor<{m}x{n}xf32>
+{collective}
+  }}
+}}"#
+    )
+}
+
+#[test]
+fn prop_one_chip_slice_is_bit_identical_to_single_chip() {
+    let mut prng = Prng::new(411);
+    let est = calibrated_estimator();
+    for i in 0..40 {
+        let module = parse_module(&random_module_text(&mut prng, i % 2 == 0)).unwrap();
+        let single = est.estimate_module(&module);
+        let one = estimate_module_distributed(&est, &module, &SliceConfig::single_chip());
+        assert_eq!(
+            one.total_us.to_bits(),
+            single.total_us.to_bits(),
+            "1-chip slice diverged on case {i}"
+        );
+        assert_eq!(one.collective_us, 0.0);
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_link_bandwidth() {
+    let mut prng = Prng::new(613);
+    let est = calibrated_estimator();
+    for _ in 0..25 {
+        let module = parse_module(&random_module_text(&mut prng, true)).unwrap();
+        let chips = 2 + prng.index(7);
+        let mut last = f64::INFINITY;
+        for gbps in [2.0, 10.0, 50.0, 250.0, 1000.0] {
+            let d = estimate_module_distributed(&est, &module, &SliceConfig::ring(chips, gbps));
+            assert!(
+                d.total_us <= last,
+                "latency rose with bandwidth: chips={chips} gbps={gbps}"
+            );
+            last = d.total_us;
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_efficiency_in_unit_interval() {
+    let mut prng = Prng::new(827);
+    let est = calibrated_estimator();
+    for i in 0..40 {
+        let module = parse_module(&random_module_text(&mut prng, i % 3 == 0)).unwrap();
+        let chips = 1 + prng.index(8);
+        let slice = if prng.index(2) == 0 {
+            SliceConfig::ring(chips, 5.0 + 200.0 * prng.index(4) as f64)
+        } else {
+            SliceConfig {
+                chips,
+                topology: IciTopology::torus(chips),
+                link_gbps: 50.0,
+                hop_latency_us: 0.5,
+            }
+        };
+        let d = estimate_module_distributed(&est, &module, &slice);
+        let e = d.parallel_efficiency();
+        assert!(
+            e > 0.0 && e <= 1.0,
+            "efficiency {e} out of (0,1]: chips={chips} case={i}"
+        );
     }
 }
 

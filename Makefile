@@ -1,6 +1,6 @@
 # Convenience targets; the Rust crate itself needs only cargo.
 
-.PHONY: build test bench artifacts fmt clippy check
+.PHONY: build test bench bench-schedule artifacts fmt clippy check
 
 build:
 	cargo build --release
@@ -11,6 +11,12 @@ test:
 bench:
 	cargo bench --bench paper
 	cargo bench --bench cache
+	cargo bench --bench schedule
+
+# The dependence-graph scheduler throughput numbers (EXPERIMENTS.md
+# §Perf Schedule).
+bench-schedule:
+	cargo bench --bench schedule
 
 fmt:
 	cargo fmt --all --check

@@ -1,0 +1,93 @@
+//! Benchmark: dependence-graph scheduling throughput.
+//!
+//! The scheduler sits on the serve hot path (every single-chip module
+//! request now also answers a scheduled total), so its per-module cost
+//! matters. With a warm shape cache the estimator lookups are O(1), and
+//! the headline number is schedules/second over (a) the checked-in
+//! BERT-layer fixture and (b) a synthetic 1000-op chain-with-diamonds
+//! module. `harness = false` like benches/paper.rs (no criterion in the
+//! offline registry). Run via `cargo bench --bench schedule` or
+//! `make bench-schedule`.
+
+use std::time::Instant;
+
+use scalesim_tpu::calibrate::fit_regime_calibration;
+use scalesim_tpu::coordinator::Estimator;
+use scalesim_tpu::frontend::{parse_module, ModuleInfo};
+use scalesim_tpu::graph::{schedule_estimate, EngineConfig};
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+
+const BERT: &str = include_str!("../tests/fixtures/bert_layer.mlir");
+
+fn estimator() -> Estimator {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+}
+
+/// A deep synthetic module: alternating elementwise ops and periodic
+/// dots, each op consuming the previous result plus a two-back value
+/// (so the DAG has both a long chain and cross-links).
+fn synthetic_module(n_ops: usize) -> String {
+    let mut body = String::new();
+    let mut prev = "a".to_string();
+    let mut prev2 = "b".to_string();
+    for i in 0..n_ops {
+        let op = match i % 4 {
+            0 => format!(
+                "    %v{i} = stablehlo.add %{prev}, %{prev2} : tensor<256x256xf32>\n"
+            ),
+            1 => format!(
+                "    %v{i} = stablehlo.multiply %{prev}, %{prev2} : tensor<256x256xf32>\n"
+            ),
+            2 => format!(
+                "    %v{i} = stablehlo.transpose %{prev}, dims = [1, 0] : (tensor<256x256xf32>) -> tensor<256x256xf32>\n"
+            ),
+            _ => format!(
+                "    %v{i} = stablehlo.dot_general %{prev}, %{prev2}, contracting_dims = [1] x [0] : (tensor<256x256xf32>, tensor<256x256xf32>) -> tensor<256x256xf32>\n"
+            ),
+        };
+        body.push_str(&op);
+        prev2 = prev;
+        prev = format!("v{i}");
+    }
+    format!(
+        "module @synthetic {{\n  func.func @main(%a: tensor<256x256xf32>, %b: tensor<256x256xf32>) -> tensor<256x256xf32> {{\n{body}    return %{prev} : tensor<256x256xf32>\n  }}\n}}"
+    )
+}
+
+fn bench_module(est: &Estimator, module: &ModuleInfo, label: &str, iters: usize) {
+    // One estimation walk up front; the loop then measures pure
+    // scheduling (DAG build + placement + analyses), which is what the
+    // serve path pays per request once the shape cache is warm.
+    let report = est.estimate_module(module);
+    for config in [EngineConfig::Serialized, EngineConfig::ComputeIci, EngineConfig::Tpu] {
+        let t0 = Instant::now();
+        let mut checksum = 0.0f64;
+        for _ in 0..iters {
+            checksum += schedule_estimate(module, &report, config).makespan_us;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "schedule {label} ({} ops, {}): {:.1} us/schedule, {:.0} schedules/s (checksum {checksum:.1})",
+            module.entry().map(|f| f.ops.len()).unwrap_or(0),
+            config.name(),
+            dt * 1e6 / iters as f64,
+            iters as f64 / dt,
+        );
+    }
+}
+
+fn main() {
+    let est = estimator();
+
+    let bert = parse_module(BERT).expect("bert fixture parses");
+    bench_module(&est, &bert, "bert_layer", 5_000);
+
+    let text = synthetic_module(1_000);
+    let big = parse_module(&text).expect("synthetic module parses");
+    bench_module(&est, &big, "synthetic_1k", 200);
+}

@@ -21,7 +21,7 @@ use crate::frontend::types::DType;
 use crate::scalesim::topology::GemmShape;
 use crate::util::json::Json;
 
-use super::estimator::{EstimateSource, OpEstimate};
+use super::estimator::{EstimateMode, EstimateSource, OpEstimate};
 
 /// Default stripe count: enough shards that the default worker pool (up
 /// to 16 threads) rarely collides on one lock.
@@ -129,8 +129,16 @@ impl CachedCost {
     }
 }
 
+/// Per-estimation-mode accounting: how many whole-module answers were
+/// served in one mode, and the total estimated time they reported.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ModeStat {
+    pub requests: u64,
+    pub total_us: f64,
+}
+
 /// A monotonic snapshot of the cache and routing counters.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
@@ -141,6 +149,8 @@ pub struct CacheStats {
     pub bandwidth: u64,
     pub free: u64,
     pub fallback: u64,
+    /// Indexed like [`EstimateMode::ALL`]: unfused, fused, scheduled.
+    pub modes: [ModeStat; 3],
 }
 
 impl CacheStats {
@@ -163,12 +173,20 @@ impl CacheStats {
             .set("bandwidth", Json::Num(self.bandwidth as f64))
             .set("free", Json::Num(self.free as f64))
             .set("fallback", Json::Num(self.fallback as f64));
+        let mut modes = Json::obj();
+        for (mode, stat) in EstimateMode::ALL.iter().zip(&self.modes) {
+            let mut m = Json::obj();
+            m.set("requests", Json::Num(stat.requests as f64))
+                .set("total_us", Json::Num(stat.total_us));
+            modes.set(mode.name(), m);
+        }
         let mut o = Json::obj();
         o.set("cache_hits", Json::Num(self.hits as f64))
             .set("cache_misses", Json::Num(self.misses as f64))
             .set("cache_entries", Json::Num(self.entries as f64))
             .set("hit_rate", Json::Num(self.hit_rate()))
-            .set("sources", sources);
+            .set("sources", sources)
+            .set("modes", modes);
         o
     }
 }
@@ -193,6 +211,11 @@ pub struct ShardedCache {
     /// Indexed by [`source_index`]: systolic, learned, learned-proxy,
     /// bandwidth, free, fallback.
     sources: [AtomicU64; 6],
+    /// Indexed like [`EstimateMode::ALL`]: whole-module answer counts.
+    mode_requests: [AtomicU64; 3],
+    /// Indexed like [`EstimateMode::ALL`]: accumulated estimated time
+    /// per mode, stored as `f64` bit patterns.
+    mode_total_us: [AtomicU64; 3],
 }
 
 impl ShardedCache {
@@ -208,6 +231,8 @@ impl ShardedCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             sources: Default::default(),
+            mode_requests: Default::default(),
+            mode_total_us: Default::default(),
         }
     }
 
@@ -263,6 +288,28 @@ impl ShardedCache {
         self.sources[source_index(src)].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Account one whole-module answer under its estimation mode, so
+    /// service traffic is attributable per mode (unfused / fused /
+    /// scheduled) in `{"type":"stats"}` responses and the shutdown
+    /// summary.
+    pub fn record_mode(&self, mode: EstimateMode, total_us: f64) {
+        let i = mode as usize;
+        self.mode_requests[i].fetch_add(1, Ordering::Relaxed);
+        // f64 accumulation over an AtomicU64 bit pattern (no AtomicF64
+        // in std): a plain CAS loop — contention here is a handful of
+        // module requests, not the per-op hot path.
+        let cell = &self.mode_total_us[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + total_us).to_bits();
+            match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
@@ -279,6 +326,11 @@ impl ShardedCache {
     }
 
     pub fn stats(&self) -> CacheStats {
+        let mut modes = [ModeStat::default(); 3];
+        for (i, slot) in modes.iter_mut().enumerate() {
+            slot.requests = self.mode_requests[i].load(Ordering::Relaxed);
+            slot.total_us = f64::from_bits(self.mode_total_us[i].load(Ordering::Relaxed));
+        }
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -289,6 +341,7 @@ impl ShardedCache {
             bandwidth: self.sources[3].load(Ordering::Relaxed),
             free: self.sources[4].load(Ordering::Relaxed),
             fallback: self.sources[5].load(Ordering::Relaxed),
+            modes,
         }
     }
 }
@@ -425,5 +478,31 @@ mod tests {
         let sources = j.get("sources").unwrap();
         assert_eq!(sources.req_f64("learned").unwrap(), 1.0);
         assert_eq!(sources.req_f64("fallback").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn mode_accounting_accumulates_per_mode() {
+        let c = ShardedCache::new();
+        c.record_mode(EstimateMode::Unfused, 10.0);
+        c.record_mode(EstimateMode::Unfused, 2.5);
+        c.record_mode(EstimateMode::Scheduled, 7.0);
+        let s = c.stats();
+        assert_eq!(s.modes[0].requests, 2);
+        assert_eq!(s.modes[0].total_us, 12.5);
+        assert_eq!(s.modes[1].requests, 0);
+        assert_eq!(s.modes[1].total_us, 0.0);
+        assert_eq!(s.modes[2].requests, 1);
+        assert_eq!(s.modes[2].total_us, 7.0);
+        let j = s.to_json();
+        let modes = j.get("modes").unwrap();
+        assert_eq!(
+            modes.get("unfused").unwrap().req_f64("requests").unwrap(),
+            2.0
+        );
+        assert_eq!(
+            modes.get("scheduled").unwrap().req_f64("total_us").unwrap(),
+            7.0
+        );
+        assert_eq!(modes.get("fused").unwrap().req_f64("requests").unwrap(), 0.0);
     }
 }

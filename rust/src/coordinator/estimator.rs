@@ -34,6 +34,33 @@ pub enum EstimateSource {
     Fallback,
 }
 
+/// Which whole-module estimation mode answered a request: the plain
+/// unfused sum, the fusion bracket, or the dependence-graph schedule.
+/// The service accounts module traffic per mode (see
+/// [`ShardedCache::record_mode`](super::cache::ShardedCache::record_mode)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EstimateMode {
+    Unfused,
+    Fused,
+    Scheduled,
+}
+
+impl EstimateMode {
+    pub const ALL: [EstimateMode; 3] = [
+        EstimateMode::Unfused,
+        EstimateMode::Fused,
+        EstimateMode::Scheduled,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EstimateMode::Unfused => "unfused",
+            EstimateMode::Fused => "fused",
+            EstimateMode::Scheduled => "scheduled",
+        }
+    }
+}
+
 impl EstimateSource {
     pub fn tag(&self) -> &'static str {
         match self {

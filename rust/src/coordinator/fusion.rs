@@ -18,10 +18,9 @@
 //! The result is a second estimate (`fused_total_us`) bracketing the real
 //! latency from below, with the unfused sum bracketing from above.
 
-use std::collections::HashMap;
-
 use crate::frontend::classify::{classify, OpClass};
 use crate::frontend::opinfo::{FuncInfo, ModuleInfo};
+use crate::graph::producer_map;
 
 use super::estimator::{Estimator, ModelEstimate};
 
@@ -37,13 +36,9 @@ pub struct FusionPlan {
 
 /// Build a fusion plan over the entry function.
 pub fn plan(func: &FuncInfo) -> FusionPlan {
-    // Map SSA result id -> producing op index.
-    let mut producer: HashMap<&str, usize> = HashMap::new();
-    for (i, op) in func.ops.iter().enumerate() {
-        for r in &op.results {
-            producer.insert(r.as_str(), i);
-        }
-    }
+    // SSA result id -> producing op index (shared with the scheduler's
+    // dependence-DAG builder in `crate::graph::dag`).
+    let producer = producer_map(func);
 
     let classes: Vec<OpClass> = func.ops.iter().map(classify).collect();
     let mut group_of = vec![usize::MAX; func.ops.len()];
@@ -96,6 +91,14 @@ pub fn plan(func: &FuncInfo) -> FusionPlan {
 /// expensive member, not the sum).
 pub fn estimate_fused(est: &Estimator, module: &ModuleInfo) -> ModelEstimate {
     let unfused = est.estimate_module(module);
+    estimate_fused_with(module, unfused)
+}
+
+/// Fusion estimate from an already-computed unfused estimate — callers
+/// that hold one (the serve module path computes unfused, fused and
+/// scheduled from the same walk) avoid a second `estimate_module` pass
+/// and the cache-counter traffic it generates.
+pub fn estimate_fused_with(module: &ModuleInfo, unfused: ModelEstimate) -> ModelEstimate {
     let Some(func) = module.entry() else {
         return unfused;
     };

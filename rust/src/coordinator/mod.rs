@@ -9,8 +9,8 @@ pub mod fusion;
 pub mod pool;
 pub mod service;
 
-pub use cache::{CacheStats, CachedCost, ShapeKey, ShardedCache};
-pub use estimator::{Estimator, EstimateSource, ModelEstimate, OpEstimate};
-pub use fusion::estimate_fused;
+pub use cache::{CacheStats, CachedCost, ModeStat, ShapeKey, ShardedCache};
+pub use estimator::{EstimateMode, Estimator, EstimateSource, ModelEstimate, OpEstimate};
+pub use fusion::{estimate_fused, estimate_fused_with};
 pub use pool::{default_workers, parallel_map, WorkerPool};
 pub use service::{serve_lines, serve_stream, Request, StreamOptions, StreamSummary};

@@ -36,11 +36,13 @@ use crate::distributed::{
 use crate::frontend::classify::{EwKind, OpClass};
 use crate::frontend::parse_module;
 use crate::frontend::types::{DType, TensorType};
+use crate::graph::{schedule_estimate, EngineConfig};
 use crate::scalesim::topology::GemmShape;
 use crate::util::json::Json;
 
 use super::cache::CacheStats;
-use super::estimator::Estimator;
+use super::estimator::{EstimateMode, Estimator};
+use super::fusion::estimate_fused_with;
 use super::pool::{default_workers, parallel_map, WorkerPool};
 
 /// A parsed request.
@@ -236,7 +238,25 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
             let module = parse_module(&text)?;
             match slice {
                 None => {
+                    // Single-chip module answers carry all three
+                    // estimation modes: the unfused sum, the fusion
+                    // bracket, and the overlap-aware schedule — each
+                    // recorded so stats can attribute traffic per mode.
+                    // Fused and scheduled both reuse the one unfused
+                    // walk's per-op costs, so the cache counters see the
+                    // module exactly once.
                     let report = estimator.estimate_module(&module);
+                    let fused = estimate_fused_with(&module, report.clone());
+                    let sched = schedule_estimate(&module, &report, EngineConfig::Tpu);
+                    estimator
+                        .cache
+                        .record_mode(EstimateMode::Unfused, report.total_us);
+                    estimator
+                        .cache
+                        .record_mode(EstimateMode::Fused, fused.total_us);
+                    estimator
+                        .cache
+                        .record_mode(EstimateMode::Scheduled, sched.makespan_us);
                     let mut o = Json::obj();
                     o.set("type", Json::Str("module".into()))
                         .set("module", Json::Str(report.module_name.clone()))
@@ -244,12 +264,17 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                         .set("systolic_us", Json::Num(report.systolic_us))
                         .set("elementwise_us", Json::Num(report.elementwise_us))
                         .set("other_us", Json::Num(report.other_us))
+                        .set("fused_us", Json::Num(fused.total_us))
+                        .set("scheduled_us", Json::Num(sched.makespan_us))
+                        .set("critical_path_us", Json::Num(sched.critical_path_us))
+                        .set("engines", sched.engines_to_json())
                         .set("num_ops", Json::Num(report.ops.len() as f64))
                         .set("coverage", Json::Num(report.coverage()));
                     Ok(o)
                 }
                 Some(slice) => {
                     let d = estimate_module_distributed(estimator, &module, slice);
+                    estimator.cache.record_mode(EstimateMode::Scheduled, d.total_us);
                     let mut o = Json::obj();
                     o.set("type", Json::Str("module".into()))
                         .set("module", Json::Str(d.module_name.clone()))
@@ -257,6 +282,7 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                         .set("total_us", Json::Num(d.total_us))
                         .set("compute_us", Json::Num(d.compute_us))
                         .set("collective_us", Json::Num(d.collective_us))
+                        .set("critical_path_us", Json::Num(d.critical_path_us))
                         .set("single_chip_us", Json::Num(d.single_chip_us))
                         .set("parallel_efficiency", Json::Num(d.parallel_efficiency()))
                         .set("num_ops", Json::Num(d.ops.len() as f64));
@@ -306,10 +332,12 @@ pub struct StreamSummary {
 impl StreamSummary {
     /// One-line human summary (written to stderr so stdout stays JSONL).
     pub fn render(&self) -> String {
+        let [unfused, fused, scheduled] = self.cache.modes;
         format!(
             "serve: {} requests ({} ok, {} errors; {} gemm / {} elementwise / {} module / {} stats); \
              cache: {} hits, {} misses ({:.1}% hit rate, {} entries); \
-             sources: {} systolic, {} learned, {} learned-proxy, {} bandwidth, {} free, {} fallback",
+             sources: {} systolic, {} learned, {} learned-proxy, {} bandwidth, {} free, {} fallback; \
+             modes: {} unfused ({:.1} us), {} fused ({:.1} us), {} scheduled ({:.1} us)",
             self.requests,
             self.ok,
             self.errors,
@@ -327,6 +355,12 @@ impl StreamSummary {
             self.cache.bandwidth,
             self.cache.free,
             self.cache.fallback,
+            unfused.requests,
+            unfused.total_us,
+            fused.requests,
+            fused.total_us,
+            scheduled.requests,
+            scheduled.total_us,
         )
     }
 }
@@ -634,11 +668,36 @@ module @m { func.func @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> ten
         )
         .unwrap();
         let line = format!(r#"{{"type":"module","path":"{}"}}"#, path.display());
-        let responses = serve_lines(est, &[line], 1);
+        let stats_line = r#"{"type":"stats"}"#.to_string();
+        let responses = serve_lines(est, &[line, stats_line], 1);
         let r = Json::parse(&responses[0]).unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
         assert_eq!(r.req_f64("num_ops").unwrap(), 2.0);
-        assert!(r.req_f64("total_us").unwrap() > 0.0);
+        let total = r.req_f64("total_us").unwrap();
+        assert!(total > 0.0);
+        // The module answer carries all three estimation modes and the
+        // scheduler's analyses.
+        let fused = r.req_f64("fused_us").unwrap();
+        let scheduled = r.req_f64("scheduled_us").unwrap();
+        let critical = r.req_f64("critical_path_us").unwrap();
+        assert!(fused <= total + 1e-9);
+        assert!(critical <= scheduled + 1e-9);
+        assert!(scheduled <= total + 1e-9);
+        assert!(r.get("engines").unwrap().get("mxu").is_some());
+        // Stats attribute the module answer to every mode it computed.
+        let stats = Json::parse(&responses[1]).unwrap();
+        let modes = stats.get("modes").expect("stats carry per-mode counters");
+        for mode in ["unfused", "fused", "scheduled"] {
+            assert_eq!(
+                modes.get(mode).unwrap().req_f64("requests").unwrap(),
+                1.0,
+                "{mode} not recorded"
+            );
+        }
+        assert_eq!(
+            modes.get("unfused").unwrap().req_f64("total_us").unwrap(),
+            total
+        );
         std::fs::remove_file(&path).ok();
     }
 

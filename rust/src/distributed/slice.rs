@@ -15,19 +15,24 @@
 //! * Explicit collectives (`all_reduce`, `all_gather`, `reduce_scatter`,
 //!   `collective_permute`) are costed by the [`IciModel`].
 //!
-//! Each chip is modeled as two engines — compute (MXU/VPU) and ICI —
-//! with a dependence-driven timeline: a collective occupies the ICI
-//! engine and overlaps with any later compute that does not consume its
-//! result. On a 1-chip slice every collective costs zero and the
-//! timeline degenerates to the plain op sum, so the result is
-//! bit-identical to [`Estimator::estimate_module`] (tested).
-
-use std::collections::HashMap;
+//! Each chip is modeled with the generic dependence-graph scheduler
+//! from [`crate::graph`] under its compute+ICI engine configuration
+//! ([`crate::graph::EngineConfig::ComputeIci`]) — one compute lane
+//! (MXU/VPU) plus the ICI lane: a
+//! collective occupies the ICI engine and overlaps with any later
+//! compute that does not consume its result. A model-parallel GEMM's
+//! implicit all-gather becomes a synthetic ICI node depending on the
+//! GEMM, and downstream consumers depend on the gather. On a 1-chip
+//! slice every collective costs zero and the timeline degenerates to
+//! the plain op sum, so the result is bit-identical to
+//! [`Estimator::estimate_module`] (tested).
 
 use crate::coordinator::cache::{CachedCost, ShapeKey};
 use crate::coordinator::estimator::{EstimateSource, Estimator};
 use crate::frontend::classify::{classify, CollectiveKind, OpClass};
-use crate::frontend::opinfo::{ModuleInfo, OpInfo, ShardingAttr};
+use crate::frontend::opinfo::{ModuleInfo, ShardingAttr};
+use crate::graph::analysis::critical_path;
+use crate::graph::{place, DepGraph, Engine, SchedNode};
 use crate::scalesim::partition::split_dim;
 use crate::scalesim::topology::GemmShape;
 
@@ -42,6 +47,8 @@ pub struct DistOpEstimate {
     pub compute_us: f64,
     /// ICI-engine time (explicit collective or implicit all-gather), µs.
     pub collective_us: f64,
+    /// Timeline start of the op, µs.
+    pub start_us: f64,
     /// Timeline completion of the op's results, µs.
     pub finish_us: f64,
     pub note: String,
@@ -59,6 +66,9 @@ pub struct DistributedEstimate {
     pub compute_us: f64,
     /// Per-chip busy time on the ICI engine, µs.
     pub collective_us: f64,
+    /// Longest dependence chain ignoring engine contention, µs: no
+    /// overlap schedule on this slice can finish faster.
+    pub critical_path_us: f64,
     /// The same module estimated on one chip (the baseline).
     pub single_chip_us: f64,
     pub ops: Vec<DistOpEstimate>,
@@ -268,7 +278,23 @@ fn shard_class(
     }
 }
 
-/// The two-engine per-chip timeline over one function.
+/// Per-op build record: which scheduler nodes realize the op, and how
+/// its busy time splits across the two engines.
+struct RowPlan {
+    index: usize,
+    op_name: String,
+    /// Node id of the op's main (compute or collective) segment.
+    main: usize,
+    /// Node id of the implicit all-gather segment, if any.
+    gather: Option<usize>,
+    /// (compute, ici) busy-time contribution of the main segment — call
+    /// blocks split their callee's busy time across both engines.
+    busy: (f64, f64),
+    note: String,
+}
+
+/// The per-chip timeline over one function, built as scheduler nodes
+/// (compute lane + ICI lane) and placed by [`place`].
 fn walk_func(
     est: &Estimator,
     module: &ModuleInfo,
@@ -282,6 +308,7 @@ fn walk_func(
         total_us: 0.0,
         compute_us: 0.0,
         collective_us: 0.0,
+        critical_path_us: 0.0,
         single_chip_us: 0.0,
         ops: Vec::new(),
     };
@@ -290,40 +317,54 @@ fn walk_func(
         return result;
     };
 
-    let mut t_compute = 0.0f64;
-    let mut t_ici = 0.0f64;
-    let mut ready: HashMap<&str, f64> = HashMap::new();
-    let ready_of = |ready: &HashMap<&str, f64>, op: &OpInfo| -> f64 {
-        op.operands
-            .iter()
-            .filter_map(|o| ready.get(o.as_str()).copied())
-            .fold(0.0f64, f64::max)
-    };
+    let graph = DepGraph::build(func);
+    let mut nodes: Vec<SchedNode> = Vec::new();
+    let mut rows: Vec<RowPlan> = Vec::with_capacity(func.ops.len());
+    // For each op, the node whose finish marks its results ready (the
+    // gather node when the op pays an implicit all-gather).
+    let mut provider: Vec<usize> = Vec::with_capacity(func.ops.len());
 
-    for op in &func.ops {
+    for (i, op) in func.ops.iter().enumerate() {
+        let preds: Vec<usize> = graph.preds[i].iter().map(|&p| provider[p]).collect();
+
         // Inline calls (mirrors Estimator::estimate_func): the callee is
         // estimated as its own timeline and enters this one as a single
         // compute block.
         if (op.short_name() == "call" || op.op_name == "func.call") && depth < 4 {
             if let Some(callee) = &op.callee {
                 let sub = walk_func(est, module, Some(callee), slice, depth + 1);
-                let start = ready_of(&ready, op).max(t_compute);
-                let finish = start + sub.total_us;
-                t_compute = finish;
-                t_ici = t_ici.max(finish);
-                result.compute_us += sub.compute_us;
-                result.collective_us += sub.collective_us;
-                for r in &op.results {
-                    ready.insert(r.as_str(), finish);
-                }
-                result.ops.push(DistOpEstimate {
+                let main = nodes.len();
+                nodes.push(SchedNode {
                     index: op.index,
                     op_name: format!("call @{callee}"),
-                    compute_us: sub.compute_us,
-                    collective_us: sub.collective_us,
-                    finish_us: finish,
+                    engine: Some(Engine::Mxu),
+                    cost_us: sub.total_us,
+                    preds,
+                    source: "call",
+                    note: String::new(),
+                });
+                // The callee block may use the physical ICI link
+                // internally, so a zero-width barrier keeps the caller's
+                // ICI lane busy until the call finishes (no
+                // double-booking against the callee's own collectives).
+                nodes.push(SchedNode {
+                    index: op.index,
+                    op_name: format!("call @{callee}.ici"),
+                    engine: Some(Engine::Ici),
+                    cost_us: 0.0,
+                    preds: vec![main],
+                    source: "call",
+                    note: String::new(),
+                });
+                rows.push(RowPlan {
+                    index: op.index,
+                    op_name: format!("call @{callee}"),
+                    main,
+                    gather: None,
+                    busy: (sub.compute_us, sub.collective_us),
                     note: format!("inlined {} ops", sub.ops.len()),
                 });
+                provider.push(main);
                 continue;
             }
         }
@@ -331,21 +372,24 @@ fn walk_func(
         let class = classify(op);
         if let OpClass::Collective { kind, bytes_in, out } = &class {
             let dur = collective_cost(est, slice, *kind, *bytes_in, out.size_bytes());
-            let start = ready_of(&ready, op).max(t_ici);
-            let finish = start + dur;
-            t_ici = finish;
-            result.collective_us += dur;
-            for r in &op.results {
-                ready.insert(r.as_str(), finish);
-            }
-            result.ops.push(DistOpEstimate {
+            nodes.push(SchedNode {
                 index: op.index,
                 op_name: op.op_name.clone(),
-                compute_us: 0.0,
-                collective_us: dur,
-                finish_us: finish,
+                engine: Some(Engine::Ici),
+                cost_us: dur,
+                preds,
+                source: "bandwidth",
+                note: String::new(),
+            });
+            rows.push(RowPlan {
+                index: op.index,
+                op_name: op.op_name.clone(),
+                main: nodes.len() - 1,
+                gather: None,
+                busy: (0.0, dur),
                 note: format!("{kind} {out} over ICI"),
             });
+            provider.push(nodes.len() - 1);
             continue;
         }
 
@@ -353,39 +397,82 @@ fn walk_func(
         let (sharded, gather) =
             shard_class(&class, op.sharding.as_ref(), out_bytes, slice.chips);
         let e = est.estimate_op(op.index, &op.op_name, &sharded);
-        let start = ready_of(&ready, op).max(t_compute);
-        let compute_finish = start + e.latency_us;
-        t_compute = compute_finish;
-        result.compute_us += e.latency_us;
-
-        let mut finish = compute_finish;
-        let mut coll = 0.0;
-        if let Some((bytes_in, bytes_out)) = gather {
-            coll = collective_cost(est, slice, CollectiveKind::AllGather, bytes_in, bytes_out);
-            let s2 = t_ici.max(compute_finish);
-            finish = s2 + coll;
-            t_ici = finish;
-            result.collective_us += coll;
-        }
-        for r in &op.results {
-            ready.insert(r.as_str(), finish);
-        }
-        let note = if coll > 0.0 {
-            format!("{} + all_gather(out)", e.note)
-        } else {
-            e.note
-        };
-        result.ops.push(DistOpEstimate {
+        let main = nodes.len();
+        nodes.push(SchedNode {
             index: op.index,
             op_name: op.op_name.clone(),
-            compute_us: e.latency_us,
-            collective_us: coll,
-            finish_us: finish,
-            note,
+            engine: Some(Engine::Mxu),
+            cost_us: e.latency_us,
+            preds,
+            source: e.source.tag(),
+            note: String::new(),
         });
+        match gather {
+            Some((bytes_in, bytes_out)) => {
+                let coll =
+                    collective_cost(est, slice, CollectiveKind::AllGather, bytes_in, bytes_out);
+                nodes.push(SchedNode {
+                    index: op.index,
+                    op_name: format!("{}.all_gather", op.op_name),
+                    engine: Some(Engine::Ici),
+                    cost_us: coll,
+                    preds: vec![main],
+                    source: "bandwidth",
+                    note: String::new(),
+                });
+                rows.push(RowPlan {
+                    index: op.index,
+                    op_name: op.op_name.clone(),
+                    main,
+                    gather: Some(main + 1),
+                    busy: (e.latency_us, 0.0),
+                    note: if coll > 0.0 {
+                        format!("{} + all_gather(out)", e.note)
+                    } else {
+                        e.note
+                    },
+                });
+                provider.push(main + 1);
+            }
+            None => {
+                rows.push(RowPlan {
+                    index: op.index,
+                    op_name: op.op_name.clone(),
+                    main,
+                    gather: None,
+                    busy: (e.latency_us, 0.0),
+                    note: e.note,
+                });
+                provider.push(main);
+            }
+        }
     }
 
-    result.total_us = t_compute.max(t_ici);
+    let placements = place(&nodes);
+    result.total_us = placements.iter().fold(0.0f64, |acc, p| acc.max(p.end_us));
+    result.critical_path_us = critical_path(&nodes);
+    // Busy-time accounting in node order (same accumulation order as the
+    // timeline walk it replaced, so existing totals are bit-identical).
+    for row in &rows {
+        result.compute_us += row.busy.0;
+        result.collective_us += row.busy.1;
+        if let Some(g) = row.gather {
+            result.collective_us += nodes[g].cost_us;
+        }
+    }
+    for row in rows {
+        let gather_us = row.gather.map(|g| nodes[g].cost_us).unwrap_or(0.0);
+        let finish = placements[row.gather.unwrap_or(row.main)].end_us;
+        result.ops.push(DistOpEstimate {
+            index: row.index,
+            op_name: row.op_name,
+            compute_us: row.busy.0,
+            collective_us: row.busy.1 + gather_us,
+            start_us: placements[row.main].start_us,
+            finish_us: finish,
+            note: row.note,
+        });
+    }
     result
 }
 
@@ -494,6 +581,26 @@ module @m { func.func @main(%x: tensor<128x1024xf32>, %w: tensor<1024x4096xf32>)
             let d = estimate_module_distributed(&est, &module, &SliceConfig::ring(8, gbps));
             assert!(d.total_us < last, "not monotone at {gbps} GB/s");
             last = d.total_us;
+        }
+    }
+
+    #[test]
+    fn critical_path_bounds_the_makespan() {
+        let est = estimator();
+        let module = parse_module(MLP).unwrap();
+        for chips in [1usize, 4, 8] {
+            let d = estimate_module_distributed(&est, &module, &SliceConfig::ring(chips, 50.0));
+            assert!(
+                d.critical_path_us <= d.total_us,
+                "critical path {} > makespan {} at {chips} chips",
+                d.critical_path_us,
+                d.total_us
+            );
+            assert!(d.critical_path_us > 0.0);
+            // Ops report timeline placement: start before finish.
+            for op in &d.ops {
+                assert!(op.start_us <= op.finish_us, "{op:?}");
+            }
         }
     }
 

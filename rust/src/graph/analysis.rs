@@ -1,0 +1,375 @@
+//! Schedule analysis: critical path, per-op slack, per-engine busy/idle
+//! breakdown, and the serialized timeline.
+//!
+//! Slack is *dependence slack against the realized schedule*: how far an
+//! op's finish could slip — holding every other placement fixed and
+//! honoring only data dependences — before the module's makespan moves.
+//! Ops with zero slack form the schedule's critical chain(s); the
+//! separate `critical_path_us` is the resource-unconstrained longest
+//! dependence chain (a lower bound on any schedule's makespan).
+
+use crate::util::json::Json;
+
+use super::engine::{Engine, EngineConfig};
+use super::schedule::{place, ready_time, Placement, SchedNode};
+
+/// One op's placement in the final schedule.
+#[derive(Debug, Clone)]
+pub struct ScheduledOp {
+    /// Index of the source op within its function.
+    pub index: usize,
+    pub op_name: String,
+    /// `None` for zero-width ops (no engine occupied).
+    pub engine: Option<Engine>,
+    pub latency_us: f64,
+    pub start_us: f64,
+    pub end_us: f64,
+    /// Dependence slack against the realized makespan (>= 0).
+    pub slack_us: f64,
+    /// Cost-model tag (an `EstimateSource` tag or `"call"`).
+    pub source: &'static str,
+    pub note: String,
+}
+
+impl ScheduledOp {
+    /// On the critical chain: the makespan moves if this op slips.
+    pub fn critical(&self) -> bool {
+        self.slack_us <= 1e-9
+    }
+
+    fn engine_name(&self) -> &'static str {
+        self.engine.map(|e| e.name()).unwrap_or("-")
+    }
+
+    /// The op row's schedule fields as one JSON object — the single
+    /// source of truth for the per-op schema (the CLI `--json` path
+    /// layers estimator-only fields like `cycles` on top of this).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("index", Json::Num(self.index as f64))
+            .set("op", Json::Str(self.op_name.clone()))
+            .set(
+                "engine",
+                match self.engine {
+                    Some(e) => Json::Str(e.name().to_string()),
+                    None => Json::Null,
+                },
+            )
+            .set("latency_us", Json::Num(self.latency_us))
+            .set("start_us", Json::Num(self.start_us))
+            .set("end_us", Json::Num(self.end_us))
+            .set("slack_us", Json::Num(self.slack_us))
+            .set("critical", Json::Bool(self.critical()))
+            .set("source", Json::Str(self.source.to_string()))
+            .set("note", Json::Str(self.note.clone()));
+        o
+    }
+}
+
+/// Busy/idle accounting for one engine over the whole schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineUsage {
+    pub engine: Engine,
+    pub busy_us: f64,
+    pub idle_us: f64,
+    /// Ops placed on this engine.
+    pub ops: usize,
+}
+
+impl EngineUsage {
+    /// Fraction of the makespan this engine was busy, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        let span = self.busy_us + self.idle_us;
+        if span > 0.0 {
+            self.busy_us / span
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A whole-module schedule plus its analyses.
+#[derive(Debug, Clone)]
+pub struct ModuleSchedule {
+    pub module_name: String,
+    pub config: EngineConfig,
+    /// When the last engine goes idle.
+    pub makespan_us: f64,
+    /// Longest dependence chain ignoring engine contention: no schedule
+    /// on any engine set can beat this.
+    pub critical_path_us: f64,
+    pub ops: Vec<ScheduledOp>,
+    /// One entry per engine in `config.engines()`, in display order.
+    pub engines: Vec<EngineUsage>,
+}
+
+/// Longest dependence chain through costed nodes, ignoring engines.
+///
+/// Computed with the same fold order as [`place`]'s ready times, so
+/// `critical_path(nodes) <= makespan` holds exactly in floating point.
+pub fn critical_path(nodes: &[SchedNode]) -> f64 {
+    let mut cp: Vec<Placement> = Vec::with_capacity(nodes.len());
+    for node in nodes {
+        let ready = ready_time(&node.preds, &cp);
+        cp.push(Placement {
+            start_us: ready,
+            end_us: ready + node.cost_us,
+        });
+    }
+    cp.iter().fold(0.0f64, |acc, p| acc.max(p.end_us))
+}
+
+/// Run the scheduler over prepared nodes and attach every analysis.
+pub fn finish_schedule(
+    module_name: String,
+    config: EngineConfig,
+    nodes: Vec<SchedNode>,
+) -> ModuleSchedule {
+    let placements = place(&nodes);
+    let makespan_us = placements.iter().fold(0.0f64, |acc, p| acc.max(p.end_us));
+    let critical_path_us = critical_path(&nodes);
+
+    // Latest dependence-feasible finish times, walked sinks-first.
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for (i, node) in nodes.iter().enumerate() {
+        for &p in &node.preds {
+            succs[p].push(i);
+        }
+    }
+    let mut late = vec![makespan_us; nodes.len()];
+    for i in (0..nodes.len()).rev() {
+        for &s in &succs[i] {
+            late[i] = late[i].min(late[s] - nodes[s].cost_us);
+        }
+    }
+
+    let mut engines: Vec<EngineUsage> = config
+        .engines()
+        .iter()
+        .map(|&engine| EngineUsage {
+            engine,
+            busy_us: 0.0,
+            idle_us: 0.0,
+            ops: 0,
+        })
+        .collect();
+    for node in &nodes {
+        if let Some(e) = node.engine {
+            if let Some(u) = engines.iter_mut().find(|u| u.engine == e) {
+                // Sum costs (not end-start spans): the same accumulation
+                // order as the estimator's per-class totals, so e.g. MXU
+                // busy time is bit-identical to `systolic_us`.
+                u.busy_us += node.cost_us;
+                u.ops += 1;
+            }
+        }
+    }
+    for u in &mut engines {
+        u.idle_us = (makespan_us - u.busy_us).max(0.0);
+    }
+
+    let ops: Vec<ScheduledOp> = nodes
+        .into_iter()
+        .zip(&placements)
+        .zip(&late)
+        .map(|((node, p), &l)| ScheduledOp {
+            index: node.index,
+            op_name: node.op_name,
+            engine: node.engine,
+            latency_us: node.cost_us,
+            start_us: p.start_us,
+            end_us: p.end_us,
+            slack_us: (l - p.end_us).max(0.0),
+            source: node.source,
+            note: node.note,
+        })
+        .collect();
+
+    ModuleSchedule {
+        module_name,
+        config,
+        makespan_us,
+        critical_path_us,
+        ops,
+        engines,
+    }
+}
+
+impl ModuleSchedule {
+    /// Usage row for one engine, if the config schedules onto it.
+    pub fn usage(&self, engine: Engine) -> Option<&EngineUsage> {
+        self.engines.iter().find(|u| u.engine == engine)
+    }
+
+    /// Busy time summed over every engine (the schedule's work content).
+    pub fn busy_us(&self) -> f64 {
+        self.engines.iter().map(|u| u.busy_us).sum()
+    }
+
+    /// Human-readable timeline, one line per op sorted by start time.
+    /// Critical-chain ops are starred.
+    pub fn render_timeline(&self) -> String {
+        let mut order: Vec<usize> = (0..self.ops.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.ops[a]
+                .start_us
+                .partial_cmp(&self.ops[b].start_us)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut out = format!(
+            "timeline @{} ({} engines): makespan {:.3} us, critical path {:.3} us\n",
+            self.module_name,
+            self.config.name(),
+            self.makespan_us,
+            self.critical_path_us
+        );
+        for &i in &order {
+            let op = &self.ops[i];
+            out.push_str(&format!(
+                "  [{:>10.3} ..{:>10.3}] {:<7} #{:<3} {}{}{}\n",
+                op.start_us,
+                op.end_us,
+                op.engine_name(),
+                op.index,
+                op.op_name,
+                if op.critical() { " *" } else { "" },
+                if op.note.is_empty() {
+                    String::new()
+                } else {
+                    format!("  ({})", op.note)
+                },
+            ));
+        }
+        for u in &self.engines {
+            out.push_str(&format!(
+                "  engine {:<7} busy {:.3} us / idle {:.3} us ({:.1}% utilized, {} ops)\n",
+                u.engine.name(),
+                u.busy_us,
+                u.idle_us,
+                u.utilization() * 100.0,
+                u.ops
+            ));
+        }
+        out
+    }
+
+    /// Per-engine usage as a JSON object keyed by engine name.
+    pub fn engines_to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for u in &self.engines {
+            let mut e = Json::obj();
+            e.set("busy_us", Json::Num(u.busy_us))
+                .set("idle_us", Json::Num(u.idle_us))
+                .set("utilization", Json::Num(u.utilization()))
+                .set("ops", Json::Num(u.ops as f64));
+            obj.set(u.engine.name(), e);
+        }
+        obj
+    }
+
+    /// The full schedule (totals, engines, per-op rows) as one JSON
+    /// object — the machine-readable form of [`Self::render_timeline`].
+    pub fn to_json(&self) -> Json {
+        let ops: Vec<Json> = self.ops.iter().map(ScheduledOp::to_json).collect();
+        let mut j = Json::obj();
+        j.set("module", Json::Str(self.module_name.clone()))
+            .set("config", Json::Str(self.config.name().to_string()))
+            .set("makespan_us", Json::Num(self.makespan_us))
+            .set("critical_path_us", Json::Num(self.critical_path_us))
+            .set("engines", self.engines_to_json())
+            .set("ops", Json::Arr(ops));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(engine: Option<Engine>, cost: f64, preds: &[usize]) -> SchedNode {
+        SchedNode {
+            index: 0,
+            op_name: "n".into(),
+            engine,
+            cost_us: cost,
+            preds: preds.to_vec(),
+            source: "free",
+            note: String::new(),
+        }
+    }
+
+    /// Diamond: a 10us MXU op and a 2us VPU op feed a 1us VPU op.
+    fn diamond() -> Vec<SchedNode> {
+        vec![
+            node(Some(Engine::Mxu), 10.0, &[]),
+            node(Some(Engine::Vpu), 2.0, &[]),
+            node(Some(Engine::Vpu), 1.0, &[0, 1]),
+        ]
+    }
+
+    #[test]
+    fn critical_path_is_longest_chain() {
+        assert_eq!(critical_path(&diamond()), 11.0);
+        // A pure chain sums.
+        let chain = vec![
+            node(Some(Engine::Mxu), 3.0, &[]),
+            node(Some(Engine::Vpu), 4.0, &[0]),
+        ];
+        assert_eq!(critical_path(&chain), 7.0);
+        assert_eq!(critical_path(&[]), 0.0);
+    }
+
+    #[test]
+    fn slack_and_usage_on_the_diamond() {
+        let s = finish_schedule("d".into(), EngineConfig::Tpu, diamond());
+        assert_eq!(s.makespan_us, 11.0);
+        assert_eq!(s.critical_path_us, 11.0);
+        // The MXU op and the join are critical; the small VPU op has
+        // 8us of slack (it may finish any time before t=10).
+        assert!(s.ops[0].critical());
+        assert!(s.ops[2].critical());
+        assert_eq!(s.ops[1].slack_us, 8.0);
+        assert!(!s.ops[1].critical());
+        let mxu = s.usage(Engine::Mxu).unwrap();
+        assert_eq!(mxu.busy_us, 10.0);
+        assert_eq!(mxu.idle_us, 1.0);
+        assert_eq!(mxu.ops, 1);
+        let vpu = s.usage(Engine::Vpu).unwrap();
+        assert_eq!(vpu.busy_us, 3.0);
+        assert_eq!(vpu.ops, 2);
+        let dma = s.usage(Engine::Dma).unwrap();
+        assert_eq!(dma.busy_us, 0.0);
+        assert_eq!(dma.idle_us, 11.0);
+        assert_eq!(dma.utilization(), 0.0);
+    }
+
+    #[test]
+    fn timeline_renders_sorted_and_starred() {
+        let s = finish_schedule("d".into(), EngineConfig::Tpu, diamond());
+        let text = s.render_timeline();
+        assert!(text.contains("makespan 11.000 us"));
+        assert!(text.contains("critical path 11.000 us"));
+        assert!(text.contains('*'), "critical ops must be starred");
+        assert!(text.contains("engine mxu"));
+        // Both roots start at 0; the join line comes last.
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[3].contains("10.000 ..    11.000"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let s = finish_schedule("d".into(), EngineConfig::Tpu, diamond());
+        let j = s.to_json();
+        assert_eq!(j.req_f64("makespan_us").unwrap(), 11.0);
+        assert_eq!(j.req_str("config").unwrap(), "tpu");
+        let ops = j.req_arr("ops").unwrap();
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[0].req_str("engine").unwrap(), "mxu");
+        let engines = j.get("engines").unwrap();
+        assert_eq!(
+            engines.get("vpu").unwrap().req_f64("busy_us").unwrap(),
+            3.0
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! SSA dependence DAG over a parsed function.
+//!
+//! The frontend emits ops in SSA order, which is already topological:
+//! every operand is produced by an earlier op or is a function argument.
+//! [`producer_map`] is the single source of truth for "which op defines
+//! this SSA value" — the fusion planner and the scheduler both build on
+//! it instead of re-walking the op list.
+
+use std::collections::HashMap;
+
+use crate::frontend::opinfo::FuncInfo;
+
+/// Map SSA result id (without `%`) to the index of the op producing it.
+///
+/// Function arguments never appear as keys: an operand that misses this
+/// map is a free input with no intra-function dependence.
+pub fn producer_map(func: &FuncInfo) -> HashMap<&str, usize> {
+    let mut producer: HashMap<&str, usize> = HashMap::new();
+    for (i, op) in func.ops.iter().enumerate() {
+        for r in &op.results {
+            producer.insert(r.as_str(), i);
+        }
+    }
+    producer
+}
+
+/// The dependence DAG of one function: node `i` is `func.ops[i]`, and an
+/// edge `p -> i` means op `i` consumes a value op `p` produces.
+#[derive(Debug, Clone)]
+pub struct DepGraph {
+    /// For each op, the (deduplicated, operand-ordered) producer indices.
+    pub preds: Vec<Vec<usize>>,
+    /// For each op, the ops consuming any of its results.
+    pub succs: Vec<Vec<usize>>,
+}
+
+impl DepGraph {
+    pub fn build(func: &FuncInfo) -> DepGraph {
+        let producer = producer_map(func);
+        let n = func.ops.len();
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, op) in func.ops.iter().enumerate() {
+            for operand in &op.operands {
+                if let Some(&p) = producer.get(operand.as_str()) {
+                    // `p < i` always holds for well-formed SSA; the guard
+                    // keeps a malformed module from producing a cycle.
+                    if p < i && !preds[i].contains(&p) {
+                        preds[i].push(p);
+                        succs[p].push(i);
+                    }
+                }
+            }
+        }
+        DepGraph { preds, succs }
+    }
+
+    /// Number of nodes (= ops in the function).
+    pub fn len(&self) -> usize {
+        self.preds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.preds.is_empty()
+    }
+
+    /// Ops with no intra-function dependences (sources of the DAG).
+    pub fn roots(&self) -> impl Iterator<Item = usize> + '_ {
+        self.preds
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_empty())
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_module;
+
+    const DIAMOND: &str = r#"
+module { func.func @main(%a: tensor<64x64xf32>) -> tensor<64x64xf32> {
+  %0 = stablehlo.add %a, %a : tensor<64x64xf32>
+  %1 = stablehlo.multiply %0, %a : tensor<64x64xf32>
+  %2 = stablehlo.tanh %0 : tensor<64x64xf32>
+  %3 = stablehlo.add %1, %2 : tensor<64x64xf32>
+  return %3 : tensor<64x64xf32>
+} }"#;
+
+    #[test]
+    fn builds_diamond_dependences() {
+        let m = parse_module(DIAMOND).unwrap();
+        let func = m.entry().unwrap();
+        let g = DepGraph::build(func);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.preds[0], Vec::<usize>::new());
+        assert_eq!(g.preds[1], vec![0]);
+        assert_eq!(g.preds[2], vec![0]);
+        assert_eq!(g.preds[3], vec![1, 2]);
+        assert_eq!(g.succs[0], vec![1, 2]);
+        assert_eq!(g.succs[3], Vec::<usize>::new());
+        assert_eq!(g.roots().collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn repeated_operand_deduplicates() {
+        let m = parse_module(
+            r#"module { func.func @main(%a: tensor<8x8xf32>) -> tensor<8x8xf32> {
+  %0 = stablehlo.add %a, %a : tensor<8x8xf32>
+  %1 = stablehlo.multiply %0, %0 : tensor<8x8xf32>
+  return %1 : tensor<8x8xf32>
+} }"#,
+        )
+        .unwrap();
+        let g = DepGraph::build(m.entry().unwrap());
+        assert_eq!(g.preds[1], vec![0], "duplicate edge not collapsed");
+        assert_eq!(g.succs[0], vec![1]);
+    }
+
+    #[test]
+    fn producer_map_covers_all_results() {
+        let m = parse_module(DIAMOND).unwrap();
+        let func = m.entry().unwrap();
+        let p = producer_map(func);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.get("0"), Some(&0));
+        assert_eq!(p.get("3"), Some(&3));
+        assert_eq!(p.get("a"), None, "arguments have no producer");
+    }
+}

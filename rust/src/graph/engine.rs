@@ -1,0 +1,198 @@
+//! The engine model: which hardware unit executes each op class.
+//!
+//! A TPU chip is modeled as a small set of concurrently running engines.
+//! The scheduler places each op on the engine its [`OpClass`] routes to;
+//! ops on different engines overlap as long as their data dependences
+//! allow. Three configurations are provided:
+//!
+//! * [`EngineConfig::Serialized`] — one lane, every op in program order.
+//!   This is the degenerate baseline: its makespan is *bit-identical* to
+//!   the unfused [`estimate_module`](crate::coordinator::Estimator::estimate_module)
+//!   sum (tested), which anchors the scheduler against the existing
+//!   estimator.
+//! * [`EngineConfig::ComputeIci`] — one compute lane plus the ICI lane:
+//!   the per-chip timeline the distributed slice estimator uses (only
+//!   collectives overlap with compute).
+//! * [`EngineConfig::Tpu`] — the full engine set: MXU (systolic GEMM /
+//!   conv), VPU (elementwise, reductions), DMA (bandwidth-class data
+//!   movement), ICI (collectives). Compile-time-free ops occupy no
+//!   engine at all.
+
+use crate::frontend::classify::OpClass;
+
+/// One hardware execution engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// Systolic matrix unit: GEMMs and im2col-lowered convolutions.
+    Mxu,
+    /// Vector unit: elementwise arithmetic and reductions.
+    Vpu,
+    /// HBM DMA: relayouts and other bandwidth-bound byte movement.
+    Dma,
+    /// Inter-chip interconnect: collectives.
+    Ici,
+    /// The single lane of the serialized baseline configuration.
+    Unified,
+}
+
+impl Engine {
+    pub const ALL: [Engine; 5] = [
+        Engine::Mxu,
+        Engine::Vpu,
+        Engine::Dma,
+        Engine::Ici,
+        Engine::Unified,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Mxu => "mxu",
+            Engine::Vpu => "vpu",
+            Engine::Dma => "dma",
+            Engine::Ici => "ici",
+            Engine::Unified => "unified",
+        }
+    }
+
+    /// Dense lane index for the scheduler's availability array.
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            Engine::Mxu => 0,
+            Engine::Vpu => 1,
+            Engine::Dma => 2,
+            Engine::Ici => 3,
+            Engine::Unified => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How op classes map onto engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineConfig {
+    /// Every op serializes on one lane in program order. Reproduces the
+    /// plain unfused module sum bit for bit.
+    Serialized,
+    /// One compute lane + the ICI lane (the distributed slice model).
+    ComputeIci,
+    /// The full TPU engine set: MXU / VPU / DMA / ICI.
+    Tpu,
+}
+
+impl EngineConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineConfig::Serialized => "serialized",
+            EngineConfig::ComputeIci => "compute+ici",
+            EngineConfig::Tpu => "tpu",
+        }
+    }
+
+    /// The engines this configuration schedules onto, in display order.
+    pub fn engines(&self) -> &'static [Engine] {
+        match self {
+            EngineConfig::Serialized => &[Engine::Unified],
+            EngineConfig::ComputeIci => &[Engine::Mxu, Engine::Ici],
+            EngineConfig::Tpu => &[Engine::Mxu, Engine::Vpu, Engine::Dma, Engine::Ici],
+        }
+    }
+
+    /// Route a classified op to its engine. `None` means the op is
+    /// zero-width: it occupies no engine and finishes the instant its
+    /// operands are ready.
+    pub fn engine_of(&self, class: &OpClass) -> Option<Engine> {
+        match self {
+            EngineConfig::Serialized => Some(Engine::Unified),
+            EngineConfig::ComputeIci => match class {
+                OpClass::Collective { .. } => Some(Engine::Ici),
+                _ => Some(Engine::Mxu),
+            },
+            EngineConfig::Tpu => match class {
+                OpClass::SystolicGemm { .. } | OpClass::SystolicConv { .. } => {
+                    Some(Engine::Mxu)
+                }
+                OpClass::Elementwise { .. } | OpClass::Reduction { .. } => Some(Engine::Vpu),
+                OpClass::DataMovement { .. } | OpClass::Unmodeled { .. } => Some(Engine::Dma),
+                OpClass::Collective { .. } => Some(Engine::Ici),
+                OpClass::Free => None,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::classify::{CollectiveKind, EwKind};
+    use crate::frontend::types::{DType, TensorType};
+    use crate::scalesim::topology::GemmShape;
+
+    fn t(dims: &[usize]) -> TensorType {
+        TensorType::new(dims.to_vec(), DType::Bf16)
+    }
+
+    #[test]
+    fn tpu_routing_table() {
+        let config = EngineConfig::Tpu;
+        let gemm = OpClass::SystolicGemm {
+            gemm: GemmShape::new(8, 8, 8),
+            count: 1,
+        };
+        assert_eq!(config.engine_of(&gemm), Some(Engine::Mxu));
+        let ew = OpClass::Elementwise {
+            kind: EwKind::Add,
+            out: t(&[8, 8]),
+        };
+        assert_eq!(config.engine_of(&ew), Some(Engine::Vpu));
+        let red = OpClass::Reduction {
+            input: t(&[8, 8]),
+            out: t(&[8]),
+        };
+        assert_eq!(config.engine_of(&red), Some(Engine::Vpu));
+        let mv = OpClass::DataMovement {
+            bytes: 64,
+            out: t(&[8, 8]),
+        };
+        assert_eq!(config.engine_of(&mv), Some(Engine::Dma));
+        let coll = OpClass::Collective {
+            kind: CollectiveKind::AllReduce,
+            bytes_in: 64,
+            out: t(&[8, 8]),
+        };
+        assert_eq!(config.engine_of(&coll), Some(Engine::Ici));
+        assert_eq!(config.engine_of(&OpClass::Free), None);
+    }
+
+    #[test]
+    fn serialized_routes_everything_to_one_lane() {
+        let config = EngineConfig::Serialized;
+        assert_eq!(config.engine_of(&OpClass::Free), Some(Engine::Unified));
+        assert_eq!(config.engines(), &[Engine::Unified]);
+    }
+
+    #[test]
+    fn compute_ici_splits_only_collectives() {
+        let config = EngineConfig::ComputeIci;
+        let coll = OpClass::Collective {
+            kind: CollectiveKind::AllGather,
+            bytes_in: 64,
+            out: t(&[8, 8]),
+        };
+        assert_eq!(config.engine_of(&coll), Some(Engine::Ici));
+        assert_eq!(config.engine_of(&OpClass::Free), Some(Engine::Mxu));
+    }
+
+    #[test]
+    fn lanes_are_dense_and_distinct() {
+        let mut seen = [false; Engine::ALL.len()];
+        for e in Engine::ALL {
+            assert!(!seen[e.lane()], "lane collision for {e}");
+            seen[e.lane()] = true;
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! The multi-engine list scheduler.
+//!
+//! Ops (already costed by the [`Estimator`]) are placed onto the engines
+//! of an [`EngineConfig`] in program order — which is topological for
+//! SSA — with the classic list-scheduling rule: an op starts when its
+//! operands are ready *and* its engine is free. Two invariants anchor
+//! the result (both follow from the monotonicity of `max`/`+` on
+//! non-negative floats, so they hold *exactly*, not just within an
+//! epsilon — property-tested in `tests/graph_schedule.rs`):
+//!
+//! * `critical_path_us <= makespan_us` — the dependence-only relaxation
+//!   can never exceed the resource-constrained schedule;
+//! * `makespan_us <=` the unfused program-order sum — overlap can only
+//!   help; with [`EngineConfig::Serialized`] the makespan *equals* the
+//!   unfused sum bit for bit.
+
+use crate::coordinator::estimator::{Estimator, ModelEstimate};
+use crate::frontend::classify::classify;
+use crate::frontend::opinfo::{ModuleInfo, OpInfo};
+
+use super::analysis::{finish_schedule, ModuleSchedule};
+use super::dag::DepGraph;
+use super::engine::{Engine, EngineConfig};
+
+/// One schedulable unit: a costed op (or synthetic segment, e.g. the
+/// implicit all-gather a model-parallel GEMM pays) plus its dependences.
+#[derive(Debug, Clone)]
+pub struct SchedNode {
+    /// Index of the source op within its function (synthetic nodes reuse
+    /// their producer's index).
+    pub index: usize,
+    pub op_name: String,
+    /// `None` = zero-width: finishes the instant its operands are ready.
+    pub engine: Option<Engine>,
+    pub cost_us: f64,
+    /// Node ids (positions in the node list) this node depends on; every
+    /// entry must be smaller than the node's own position.
+    pub preds: Vec<usize>,
+    /// Which cost model produced `cost_us` (an [`EstimateSource`] tag,
+    /// or `"call"` for inlined sub-functions).
+    ///
+    /// [`EstimateSource`]: crate::coordinator::EstimateSource
+    pub source: &'static str,
+    pub note: String,
+}
+
+/// Where one node landed on the timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+/// The moment all of a node's predecessors have finished.
+pub(crate) fn ready_time(preds: &[usize], finished: &[Placement]) -> f64 {
+    preds
+        .iter()
+        .fold(0.0f64, |acc, &p| acc.max(finished[p].end_us))
+}
+
+/// Greedy in-order list schedule over topologically sorted nodes.
+///
+/// Panics if a node depends on a later node (the builder APIs in this
+/// module only produce forward edges).
+pub fn place(nodes: &[SchedNode]) -> Vec<Placement> {
+    let mut lane_free = [0.0f64; Engine::ALL.len()];
+    let mut placed: Vec<Placement> = Vec::with_capacity(nodes.len());
+    for node in nodes {
+        let ready = ready_time(&node.preds, &placed);
+        let start = match node.engine {
+            Some(e) => ready.max(lane_free[e.lane()]),
+            None => ready,
+        };
+        let end = start + node.cost_us;
+        if let Some(e) = node.engine {
+            lane_free[e.lane()] = end;
+        }
+        placed.push(Placement {
+            start_us: start,
+            end_us: end,
+        });
+    }
+    placed
+}
+
+/// An inlined call into a private sub-function (mirrors the condition
+/// `Estimator::estimate_func` uses at entry depth): the estimate row
+/// holds the callee's whole inlined cost, and the scheduler treats it
+/// as one opaque compute block.
+fn is_inlined_call(op: &OpInfo) -> bool {
+    (op.short_name() == "call" || op.op_name == "func.call") && op.callee.is_some()
+}
+
+/// Schedule a whole module's entry function onto `config`'s engines.
+///
+/// Costs each op through `est` (and therefore through the shape cache)
+/// via one `estimate_module` walk. Callers that already hold the
+/// unfused [`ModelEstimate`] should use [`schedule_estimate`] instead —
+/// it reuses those per-op costs and leaves the cache counters alone.
+pub fn schedule_module(
+    est: &Estimator,
+    module: &ModuleInfo,
+    config: EngineConfig,
+) -> ModuleSchedule {
+    let report = est.estimate_module(module);
+    schedule_estimate(module, &report, config)
+}
+
+/// Schedule a module from its already-computed unfused estimate: the
+/// `report` rows (one per entry-function op, calls inlined as single
+/// rows) supply every cost, so no re-estimation — and no cache-counter
+/// traffic — happens here. The serialized config reproduces
+/// `report.total_us` bit for bit.
+pub fn schedule_estimate(
+    module: &ModuleInfo,
+    report: &ModelEstimate,
+    config: EngineConfig,
+) -> ModuleSchedule {
+    let Some(func) = module.entry() else {
+        return finish_schedule(module.name.clone(), config, Vec::new());
+    };
+    debug_assert_eq!(
+        report.ops.len(),
+        func.ops.len(),
+        "estimate rows must align 1:1 with the entry function's ops"
+    );
+    let graph = DepGraph::build(func);
+    let mut nodes: Vec<SchedNode> = Vec::with_capacity(func.ops.len());
+    for ((i, op), row) in func.ops.iter().enumerate().zip(&report.ops) {
+        let engine = if is_inlined_call(op) {
+            // The row is the callee's whole inlined timeline: an opaque
+            // compute block (never zero-width, never ICI).
+            Some(match config {
+                EngineConfig::Serialized => Engine::Unified,
+                _ => Engine::Mxu,
+            })
+        } else {
+            config.engine_of(&classify(op))
+        };
+        nodes.push(SchedNode {
+            index: row.index,
+            op_name: row.op_name.clone(),
+            engine,
+            cost_us: row.latency_us,
+            preds: graph.preds[i].clone(),
+            source: row.source.tag(),
+            note: row.note.clone(),
+        });
+    }
+    finish_schedule(module.name.clone(), config, nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::fit_regime_calibration;
+    use crate::frontend::parse_module;
+    use crate::scalesim::{GemmShape, ScaleConfig};
+
+    fn estimator() -> Estimator {
+        let mut obs = Vec::new();
+        for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+            let g = GemmShape::new(d, d, d);
+            obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+        }
+        Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+    }
+
+    fn node(engine: Option<Engine>, cost: f64, preds: &[usize]) -> SchedNode {
+        SchedNode {
+            index: 0,
+            op_name: "n".into(),
+            engine,
+            cost_us: cost,
+            preds: preds.to_vec(),
+            source: "free",
+            note: String::new(),
+        }
+    }
+
+    #[test]
+    fn independent_ops_on_distinct_engines_overlap() {
+        let nodes = vec![
+            node(Some(Engine::Mxu), 10.0, &[]),
+            node(Some(Engine::Vpu), 4.0, &[]),
+            node(Some(Engine::Vpu), 3.0, &[0]),
+        ];
+        let p = place(&nodes);
+        assert_eq!(p[0].start_us, 0.0);
+        assert_eq!(p[1].start_us, 0.0, "vpu op should not wait for mxu");
+        // Node 2 waits for its MXU producer, then for the VPU lane
+        // (already free at 4.0), so the dependence dominates.
+        assert_eq!(p[2].start_us, 10.0);
+        assert_eq!(p[2].end_us, 13.0);
+    }
+
+    #[test]
+    fn same_engine_serializes_even_without_dependences() {
+        let nodes = vec![
+            node(Some(Engine::Mxu), 5.0, &[]),
+            node(Some(Engine::Mxu), 5.0, &[]),
+        ];
+        let p = place(&nodes);
+        assert_eq!(p[1].start_us, 5.0);
+        assert_eq!(p[1].end_us, 10.0);
+    }
+
+    #[test]
+    fn zero_width_nodes_finish_at_ready_time() {
+        let nodes = vec![
+            node(Some(Engine::Mxu), 7.0, &[]),
+            node(None, 0.0, &[0]),
+            node(Some(Engine::Vpu), 1.0, &[1]),
+        ];
+        let p = place(&nodes);
+        assert_eq!(p[1].start_us, 7.0);
+        assert_eq!(p[1].end_us, 7.0);
+        assert_eq!(p[2].start_us, 7.0);
+    }
+
+    #[test]
+    fn serialized_schedule_matches_unfused_sum_bitwise() {
+        let text = r#"
+module @m { func.func @main(%x: tensor<256x256xf32>, %w: tensor<256x256xf32>) -> tensor<256x256xf32> {
+  %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] : (tensor<256x256xf32>, tensor<256x256xf32>) -> tensor<256x256xf32>
+  %1 = stablehlo.add %0, %x : tensor<256x256xf32>
+  %2 = stablehlo.transpose %1, dims = [1, 0] : (tensor<256x256xf32>) -> tensor<256x256xf32>
+  %3 = stablehlo.dot_general %2, %w, contracting_dims = [1] x [0] : (tensor<256x256xf32>, tensor<256x256xf32>) -> tensor<256x256xf32>
+  return %3 : tensor<256x256xf32>
+} }"#;
+        let est = estimator();
+        let module = parse_module(text).unwrap();
+        let unfused = est.estimate_module(&module);
+        let sched = schedule_module(&est, &module, EngineConfig::Serialized);
+        assert_eq!(sched.makespan_us.to_bits(), unfused.total_us.to_bits());
+        assert_eq!(sched.ops.len(), unfused.ops.len());
+        // One lane: starts are non-decreasing in program order.
+        for w in sched.ops.windows(2) {
+            assert!(w[1].start_us >= w[0].start_us);
+        }
+    }
+
+    #[test]
+    fn call_rows_schedule_as_opaque_compute_blocks() {
+        let text = r#"
+module @m {
+  func.func @main(%x: tensor<128x128xf32>) -> tensor<128x128xf32> {
+    %0 = func.call @helper(%x) : (tensor<128x128xf32>) -> tensor<128x128xf32>
+    %1 = stablehlo.add %0, %x : tensor<128x128xf32>
+    return %1 : tensor<128x128xf32>
+  }
+  func.func private @helper(%a: tensor<128x128xf32>) -> tensor<128x128xf32> {
+    %0 = stablehlo.dot_general %a, %a, contracting_dims = [1] x [0] : (tensor<128x128xf32>, tensor<128x128xf32>) -> tensor<128x128xf32>
+    %1 = stablehlo.tanh %0 : tensor<128x128xf32>
+    return %1 : tensor<128x128xf32>
+  }
+}"#;
+        let est = estimator();
+        let module = parse_module(text).unwrap();
+        let unfused = est.estimate_module(&module);
+        assert_eq!(unfused.ops.len(), 2, "call should inline as one row");
+        let serialized = schedule_module(&est, &module, EngineConfig::Serialized);
+        assert_eq!(serialized.makespan_us.to_bits(), unfused.total_us.to_bits());
+        let tpu = schedule_module(&est, &module, EngineConfig::Tpu);
+        assert_eq!(tpu.ops[0].engine, Some(Engine::Mxu), "call is an opaque block");
+        assert!(tpu.ops[0].op_name.starts_with("call @helper"));
+        assert!(tpu.ops[0].latency_us > 0.0);
+        assert!(tpu.makespan_us <= unfused.total_us);
+    }
+
+    #[test]
+    fn schedule_estimate_reuses_rows_without_cache_traffic() {
+        let text = r#"
+module @m { func.func @main(%x: tensor<256x256xf32>, %w: tensor<256x256xf32>) -> tensor<256x256xf32> {
+  %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] : (tensor<256x256xf32>, tensor<256x256xf32>) -> tensor<256x256xf32>
+  %1 = stablehlo.add %0, %x : tensor<256x256xf32>
+  return %1 : tensor<256x256xf32>
+} }"#;
+        let est = estimator();
+        let module = parse_module(text).unwrap();
+        let report = est.estimate_module(&module);
+        let before = est.cache.stats();
+        let sched = schedule_estimate(&module, &report, EngineConfig::Tpu);
+        let after = est.cache.stats();
+        assert_eq!(
+            (before.hits, before.misses),
+            (after.hits, after.misses),
+            "schedule_estimate must not touch the cache"
+        );
+        assert_eq!(sched.ops.len(), 2);
+        // Row costs are carried over verbatim.
+        assert_eq!(
+            sched.ops[0].latency_us.to_bits(),
+            report.ops[0].latency_us.to_bits()
+        );
+        assert_eq!(sched.ops[1].note, report.ops[1].note);
+        // And the serialized variant is the unfused sum, bitwise.
+        let ser = schedule_estimate(&module, &report, EngineConfig::Serialized);
+        assert_eq!(ser.makespan_us.to_bits(), report.total_us.to_bits());
+    }
+
+    #[test]
+    fn tpu_schedule_overlaps_independent_engines() {
+        // The transpose (DMA) of an argument is independent of the dot
+        // (MXU), so the tpu schedule must beat the serialized sum.
+        let text = r#"
+module @m { func.func @main(%x: tensor<1024x1024xf32>, %w: tensor<1024x1024xf32>) -> tensor<1024x1024xf32> {
+  %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] : (tensor<1024x1024xf32>, tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+  %1 = stablehlo.transpose %w, dims = [1, 0] : (tensor<1024x1024xf32>) -> tensor<1024x1024xf32>
+  %2 = stablehlo.add %0, %1 : tensor<1024x1024xf32>
+  return %2 : tensor<1024x1024xf32>
+} }"#;
+        let est = estimator();
+        let module = parse_module(text).unwrap();
+        let unfused = est.estimate_module(&module);
+        let sched = schedule_module(&est, &module, EngineConfig::Tpu);
+        assert!(
+            sched.makespan_us < unfused.total_us,
+            "no overlap: {} vs {}",
+            sched.makespan_us,
+            unfused.total_us
+        );
+        assert!(sched.critical_path_us <= sched.makespan_us);
+        // The add depends on both, so it is last and critical.
+        let add = &sched.ops[2];
+        assert_eq!(add.end_us.to_bits(), sched.makespan_us.to_bits());
+        assert_eq!(add.slack_us, 0.0);
+    }
+}

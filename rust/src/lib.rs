@@ -24,6 +24,8 @@
 //! * [`distributed`] — multi-chip slice simulation: the ICI collective
 //!   cost model and the per-chip timeline that overlaps collectives
 //!   with compute.
+//! * [`graph`] — the SSA dependence DAG and the multi-engine list
+//!   scheduler (MXU/VPU/DMA/ICI) with critical-path and slack analysis.
 //! * [`workloads`] — the paper's sweep generators.
 //! * [`report`] — tables, CSV and ASCII scatter plots for every figure.
 //! * [`util`] — std-only infrastructure (JSON, PRNG, stats, args).
@@ -33,6 +35,7 @@ pub mod coordinator;
 pub mod distributed;
 pub mod experiments;
 pub mod frontend;
+pub mod graph;
 pub mod learned;
 pub mod report;
 pub mod runtime;

@@ -11,12 +11,14 @@ use anyhow::{bail, Context, Result};
 use scalesim_tpu::calibrate::Regime;
 use scalesim_tpu::coordinator::{default_workers, serve_lines, serve_stream, StreamOptions};
 use scalesim_tpu::distributed::{
-    estimate_gemm_sliced, estimate_module_distributed, IciTopology, SliceConfig,
-    DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
+    estimate_gemm_sliced, estimate_module_distributed, DistributedEstimate, IciTopology,
+    SliceConfig, DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
 };
 use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
 use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::graph::{schedule_estimate, EngineConfig, ModuleSchedule};
 use scalesim_tpu::report::{write_output, Table};
+use scalesim_tpu::util::json::Json;
 use scalesim_tpu::scalesim::{
     simulate_gemm, simulate_topology, GemmShape, ScaleConfig, Topology,
 };
@@ -40,8 +42,18 @@ Toolchain:
   simulate --m M --k K --n N     simulate one GEMM (cycles + latency)
            [--energy] [--sparsity D] [--trace out.csv]
   simulate --topology FILE.csv   simulate a SCALE-Sim CSV topology
-  simulate --module FILE.txt     estimate a StableHLO module end to end
-           [--fused]               model XLA operator fusion
+  simulate --module FILE.txt     estimate a StableHLO module end to end:
+                                   reports the unfused sum, the fused
+                                   bracket and the overlap-aware multi-
+                                   engine (MXU/VPU/DMA/ICI) schedule with
+                                   critical path, per-op slack and
+                                   per-engine utilization
+           [--json]                emit the full per-op table (incl.
+                                   schedule start/end and engine) as one
+                                   JSON object
+           [--timeline]            print the serialized schedule timeline
+           [--fused]               (kept for compat; the fused total is
+                                   always reported now)
            [--chips N]             distribute across an N-chip slice:
            [--ici-gbps G]          per-link ICI bandwidth (default 100)
            [--ici-topology T]      ring | torus | XxY (default ring)
@@ -221,13 +233,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
         if let Some(slice) = make_slice(args)? {
             let d = estimate_module_distributed(&est, &module, &slice);
-            let mut t = Table::new(&["#", "op", "compute us", "ici us", "note"]);
+            if args.flag("json") {
+                println!("{}", distributed_json(&d, &slice).dump());
+                return Ok(());
+            }
+            let mut t = Table::new(&[
+                "#", "op", "compute us", "ici us", "start us", "finish us", "note",
+            ]);
             for op in &d.ops {
                 t.row(&[
                     op.index.to_string(),
                     op.op_name.clone(),
                     format!("{:.3}", op.compute_us),
                     format!("{:.3}", op.collective_us),
+                    format!("{:.3}", op.start_us),
+                    format!("{:.3}", op.finish_us),
                     op.note.clone(),
                 ]);
             }
@@ -242,6 +262,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 d.collective_us,
                 d.overlapped_us()
             );
+            let util = |busy: f64| {
+                if d.total_us > 0.0 {
+                    100.0 * busy / d.total_us
+                } else {
+                    0.0
+                }
+            };
+            println!(
+                "critical path {:.2} us; engine utilization: compute {:.1}%, ici {:.1}%",
+                d.critical_path_us,
+                util(d.compute_us),
+                util(d.collective_us)
+            );
             println!(
                 "module @{}: per-chip makespan {:.2} us; single-chip {:.2} us; speedup {:.2}x; parallel efficiency {:.1}%",
                 d.module_name,
@@ -253,32 +286,66 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             return Ok(());
         }
 
-        let report = if args.flag("fused") {
-            scalesim_tpu::coordinator::estimate_fused(&est, &module)
-        } else {
-            est.estimate_module(&module)
-        };
-        let mut t = Table::new(&["#", "op", "source", "cycles", "latency us", "note"]);
-        for op in &report.ops {
+        let report = est.estimate_module(&module);
+        let fused = scalesim_tpu::coordinator::estimate_fused_with(&module, report.clone());
+        let sched = schedule_estimate(&module, &report, EngineConfig::Tpu);
+        // The fused total is always reported now; the old flag stays
+        // accepted so existing invocations keep working.
+        let _ = args.flag("fused");
+        if args.flag("json") {
+            println!("{}", module_json(&report, &fused, &sched).dump());
+            return Ok(());
+        }
+        let mut t = Table::new(&[
+            "#", "op", "source", "cycles", "latency us", "engine", "start us", "end us",
+            "slack us", "note",
+        ]);
+        for (op, s) in report.ops.iter().zip(&sched.ops) {
             t.row(&[
                 op.index.to_string(),
                 op.op_name.clone(),
                 op.source.tag().to_string(),
                 op.cycles.map(|c| c.to_string()).unwrap_or_default(),
                 format!("{:.3}", op.latency_us),
+                s.engine
+                    .map(|e| e.name().to_string())
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.3}", s.start_us),
+                format!("{:.3}", s.end_us),
+                format!("{:.3}", s.slack_us),
                 op.note.clone(),
             ]);
         }
         println!("{}", t.markdown());
+        if args.flag("timeline") {
+            println!("{}", sched.render_timeline());
+        }
         println!(
-            "module @{}: total {:.2} us (systolic {:.2}, elementwise {:.2}, other {:.2}); model coverage {:.0}%",
+            "module @{}: unfused {:.2} us (systolic {:.2}, elementwise {:.2}, other {:.2}); fused {:.2} us; scheduled {:.2} us (critical path {:.2} us); model coverage {:.0}%",
             report.module_name,
             report.total_us,
             report.systolic_us,
             report.elementwise_us,
             report.other_us,
+            fused.total_us,
+            sched.makespan_us,
+            sched.critical_path_us,
             report.coverage() * 100.0
         );
+        let engines: Vec<String> = sched
+            .engines
+            .iter()
+            .map(|u| {
+                format!(
+                    "{} {:.2} us busy ({:.1}%, {} ops)",
+                    u.engine.name(),
+                    u.busy_us,
+                    u.utilization() * 100.0,
+                    u.ops
+                )
+            })
+            .collect();
+        println!("engine utilization: {}", engines.join("; "));
         return Ok(());
     }
 
@@ -392,6 +459,69 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// The single-chip `simulate --module --json` payload: the full per-op
+/// estimate table merged with the schedule (engine, start/end, slack).
+fn module_json(
+    report: &scalesim_tpu::coordinator::ModelEstimate,
+    fused: &scalesim_tpu::coordinator::ModelEstimate,
+    sched: &ModuleSchedule,
+) -> Json {
+    // The schedule rows carry the estimate's cost/source/note verbatim
+    // (schedule_estimate reuses them); only `cycles` is estimator-only.
+    let mut ops = Vec::with_capacity(report.ops.len());
+    for (op, s) in report.ops.iter().zip(&sched.ops) {
+        let mut o = s.to_json();
+        if let Some(c) = op.cycles {
+            o.set("cycles", Json::Num(c as f64));
+        }
+        ops.push(o);
+    }
+    let mut j = Json::obj();
+    j.set("module", Json::Str(report.module_name.clone()))
+        .set("unfused_us", Json::Num(report.total_us))
+        .set("systolic_us", Json::Num(report.systolic_us))
+        .set("elementwise_us", Json::Num(report.elementwise_us))
+        .set("other_us", Json::Num(report.other_us))
+        .set("fused_us", Json::Num(fused.total_us))
+        .set("scheduled_us", Json::Num(sched.makespan_us))
+        .set("critical_path_us", Json::Num(sched.critical_path_us))
+        .set("coverage", Json::Num(report.coverage()))
+        .set("engines", sched.engines_to_json())
+        .set("ops", Json::Arr(ops));
+    j
+}
+
+/// The distributed `simulate --module --chips N --json` payload.
+fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig) -> Json {
+    let mut ops = Vec::with_capacity(d.ops.len());
+    for op in &d.ops {
+        let mut o = Json::obj();
+        o.set("index", Json::Num(op.index as f64))
+            .set("op", Json::Str(op.op_name.clone()))
+            .set("compute_us", Json::Num(op.compute_us))
+            .set("collective_us", Json::Num(op.collective_us))
+            .set("start_us", Json::Num(op.start_us))
+            .set("finish_us", Json::Num(op.finish_us))
+            .set("note", Json::Str(op.note.clone()));
+        ops.push(o);
+    }
+    let mut j = Json::obj();
+    j.set("module", Json::Str(d.module_name.clone()))
+        .set("chips", Json::Num(slice.chips as f64))
+        .set("ici_topology", Json::Str(slice.topology.to_string()))
+        .set("ici_gbps", Json::Num(slice.link_gbps))
+        .set("ici_latency_us", Json::Num(slice.hop_latency_us))
+        .set("total_us", Json::Num(d.total_us))
+        .set("compute_us", Json::Num(d.compute_us))
+        .set("collective_us", Json::Num(d.collective_us))
+        .set("critical_path_us", Json::Num(d.critical_path_us))
+        .set("single_chip_us", Json::Num(d.single_chip_us))
+        .set("speedup", Json::Num(d.speedup()))
+        .set("parallel_efficiency", Json::Num(d.parallel_efficiency()))
+        .set("ops", Json::Arr(ops));
+    j
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {

@@ -183,6 +183,60 @@ fn simulate_module_single_and_distributed() {
 }
 
 #[test]
+fn simulate_module_reports_schedule_and_engines() {
+    let s = Scratch::new("module_sched");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--timeline",
+    ]);
+    assert!(ok, "{stdout}");
+    for needle in ["unfused", "fused", "scheduled", "critical path", "engine utilization", "mxu"] {
+        assert!(stdout.contains(needle), "missing '{needle}' in: {stdout}");
+    }
+    assert!(stdout.contains("timeline @bert_layer"), "{stdout}");
+}
+
+#[test]
+fn simulate_module_json_emits_full_table() {
+    use scalesim_tpu::util::json::Json;
+
+    let s = Scratch::new("module_json");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let j = Json::parse(stdout.trim()).expect("one JSON object on stdout");
+    assert_eq!(j.req_str("module").unwrap(), "bert_layer");
+    let unfused = j.req_f64("unfused_us").unwrap();
+    let scheduled = j.req_f64("scheduled_us").unwrap();
+    let critical = j.req_f64("critical_path_us").unwrap();
+    assert!(critical <= scheduled && scheduled <= unfused, "{j:?}");
+    let ops = j.req_arr("ops").unwrap();
+    assert_eq!(ops.len(), 33);
+    let first = &ops[0];
+    assert_eq!(first.req_str("engine").unwrap(), "mxu");
+    assert!(first.req_f64("end_us").unwrap() >= first.req_f64("start_us").unwrap());
+    assert!(j.get("engines").unwrap().get("vpu").is_some());
+
+    // Distributed --json carries the slice and per-op timeline.
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--chips", "4", "--shapes", "30", "--reps", "1",
+        "--assets", &assets, "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let j = Json::parse(stdout.trim()).expect("one JSON object on stdout");
+    assert_eq!(j.req_f64("chips").unwrap(), 4.0);
+    assert!(j.req_f64("critical_path_us").unwrap() <= j.req_f64("total_us").unwrap());
+    assert_eq!(j.req_arr("ops").unwrap().len(), 33);
+}
+
+#[test]
 fn simulate_gemm_with_chips() {
     let (stdout, _, ok) = run(&[
         "simulate", "--m", "4096", "--k", "1024", "--n", "1024", "--chips", "4", "--ici-gbps",

@@ -1,0 +1,270 @@
+//! Scheduler invariants over random DAGs and every checked-in fixture,
+//! plus the golden timeline on the BERT-layer fixture.
+//!
+//! The load-bearing properties:
+//!
+//! * `critical_path <= scheduled makespan <= unfused sum` for every
+//!   engine configuration (the schedule is bracketed by the dependence
+//!   bound below and the serial sum above);
+//! * the serialized single-engine schedule is **bit-identical** to the
+//!   unfused `estimate_module` total (the acceptance anchor);
+//! * slack is non-negative and zero on the chain that realizes the
+//!   makespan.
+
+use std::path::Path;
+
+use scalesim_tpu::calibrate::fit_regime_calibration;
+use scalesim_tpu::coordinator::Estimator;
+use scalesim_tpu::distributed::{estimate_module_distributed, SliceConfig};
+use scalesim_tpu::frontend::{parse_module, ModuleInfo};
+use scalesim_tpu::graph::{schedule_module, DepGraph, Engine, EngineConfig, ModuleSchedule};
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+use scalesim_tpu::util::prng::Prng;
+
+fn estimator() -> Estimator {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+}
+
+/// A random type-consistent DAG over square `DxD` f32 tensors: each op
+/// draws its operands uniformly from the arguments and all earlier
+/// results, mixing MXU (dot), VPU (add/multiply/maximum/tanh) and DMA
+/// (transpose) work.
+fn random_dag_module(prng: &mut Prng) -> String {
+    let d = 64 * (1 + prng.index(4));
+    let n_ops = 4 + prng.index(12);
+    let mut vals: Vec<String> = vec!["a".into(), "b".into()];
+    let mut body = String::new();
+    for i in 0..n_ops {
+        let x = vals[prng.index(vals.len())].clone();
+        let y = vals[prng.index(vals.len())].clone();
+        let line = match prng.index(6) {
+            0 => format!(
+                "    %v{i} = stablehlo.dot_general %{x}, %{y}, contracting_dims = [1] x [0] : (tensor<{d}x{d}xf32>, tensor<{d}x{d}xf32>) -> tensor<{d}x{d}xf32>\n"
+            ),
+            1 => format!("    %v{i} = stablehlo.add %{x}, %{y} : tensor<{d}x{d}xf32>\n"),
+            2 => format!("    %v{i} = stablehlo.multiply %{x}, %{y} : tensor<{d}x{d}xf32>\n"),
+            3 => format!("    %v{i} = stablehlo.maximum %{x}, %{y} : tensor<{d}x{d}xf32>\n"),
+            4 => format!("    %v{i} = stablehlo.tanh %{x} : tensor<{d}x{d}xf32>\n"),
+            _ => format!(
+                "    %v{i} = stablehlo.transpose %{x}, dims = [1, 0] : (tensor<{d}x{d}xf32>) -> tensor<{d}x{d}xf32>\n"
+            ),
+        };
+        body.push_str(&line);
+        vals.push(format!("v{i}"));
+    }
+    let last = vals.last().unwrap();
+    format!(
+        "module @rand_dag {{\n  func.func @main(%a: tensor<{d}x{d}xf32>, %b: tensor<{d}x{d}xf32>) -> tensor<{d}x{d}xf32> {{\n{body}    return %{last} : tensor<{d}x{d}xf32>\n  }}\n}}"
+    )
+}
+
+/// Assert every scheduler invariant on one module.
+fn check_invariants(est: &Estimator, module: &ModuleInfo, label: &str) {
+    let unfused = est.estimate_module(module);
+
+    // The serialized single-engine schedule IS the unfused sum.
+    let serialized = schedule_module(est, module, EngineConfig::Serialized);
+    assert_eq!(
+        serialized.makespan_us.to_bits(),
+        unfused.total_us.to_bits(),
+        "{label}: serialized schedule diverged from the unfused sum"
+    );
+    assert_eq!(serialized.ops.len(), unfused.ops.len(), "{label}");
+
+    for config in [EngineConfig::ComputeIci, EngineConfig::Tpu] {
+        let sched = schedule_module(est, module, config);
+        assert!(
+            sched.critical_path_us <= sched.makespan_us,
+            "{label} ({}): critical path {} > makespan {}",
+            config.name(),
+            sched.critical_path_us,
+            sched.makespan_us
+        );
+        assert!(
+            sched.makespan_us <= unfused.total_us,
+            "{label} ({}): makespan {} > unfused sum {}",
+            config.name(),
+            sched.makespan_us,
+            unfused.total_us
+        );
+        check_schedule_consistency(module, &sched, label);
+    }
+}
+
+/// Structural validity: dependences respected, slack sane, makespan is
+/// the max finish, engine busy/idle adds up.
+fn check_schedule_consistency(module: &ModuleInfo, sched: &ModuleSchedule, label: &str) {
+    let max_end = sched
+        .ops
+        .iter()
+        .fold(0.0f64, |acc, o| acc.max(o.end_us));
+    assert_eq!(
+        max_end.to_bits(),
+        sched.makespan_us.to_bits(),
+        "{label}: makespan is not the last finish"
+    );
+    for op in &sched.ops {
+        assert!(op.start_us >= 0.0 && op.end_us >= op.start_us, "{label} {op:?}");
+        assert!(op.slack_us >= 0.0, "{label} {op:?}");
+        assert!(
+            op.end_us + op.slack_us <= sched.makespan_us + 1e-9,
+            "{label}: slack past the makespan: {op:?}"
+        );
+    }
+    // At least one op realizes the makespan with zero slack.
+    if !sched.ops.is_empty() && sched.makespan_us > 0.0 {
+        assert!(
+            sched.ops.iter().any(|o| o.critical()),
+            "{label}: no critical op"
+        );
+    }
+    // Dependences: every op starts at or after each producer's finish
+    // (only checkable when node ids == op ids, i.e. no call inlining —
+    // true for all modules exercised here).
+    if let Some(func) = module.entry() {
+        if func.ops.len() == sched.ops.len() {
+            let graph = DepGraph::build(func);
+            for (i, op) in sched.ops.iter().enumerate() {
+                for &p in &graph.preds[i] {
+                    assert!(
+                        op.start_us >= sched.ops[p].end_us,
+                        "{label}: op {i} starts before producer {p}"
+                    );
+                }
+            }
+        }
+    }
+    for u in &sched.engines {
+        assert!(u.busy_us >= 0.0 && u.idle_us >= 0.0, "{label} {u:?}");
+        let span = u.busy_us + u.idle_us;
+        assert!(
+            span <= sched.makespan_us + 1e-9,
+            "{label}: engine span {span} exceeds makespan {}",
+            sched.makespan_us
+        );
+        let util = u.utilization();
+        assert!((0.0..=1.0).contains(&util), "{label}: utilization {util}");
+    }
+}
+
+#[test]
+fn prop_random_dags_bracketed_and_consistent() {
+    let mut prng = Prng::new(2026);
+    let est = estimator();
+    for case in 0..30 {
+        let text = random_dag_module(&mut prng);
+        let module = parse_module(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        check_invariants(&est, &module, &format!("random case {case}"));
+    }
+}
+
+#[test]
+fn prop_all_mlir_fixtures_bracketed_and_consistent() {
+    let est = estimator();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("mlir") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let module = parse_module(&text).unwrap();
+        check_invariants(&est, &module, path.file_name().unwrap().to_str().unwrap());
+        seen += 1;
+    }
+    assert!(seen >= 3, "expected the checked-in fixtures, saw {seen}");
+}
+
+#[test]
+fn distributed_schedule_is_bracketed_too() {
+    let est = estimator();
+    let text = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/bert_layer.mlir"),
+    )
+    .unwrap();
+    let module = parse_module(&text).unwrap();
+    for chips in [1usize, 4, 8] {
+        let d = estimate_module_distributed(&est, &module, &SliceConfig::ring(chips, 100.0));
+        assert!(
+            d.critical_path_us <= d.total_us,
+            "{chips} chips: critical {} > makespan {}",
+            d.critical_path_us,
+            d.total_us
+        );
+        // The slice timeline can never be slower than fully serializing
+        // its own busy time.
+        assert!(d.total_us <= d.compute_us + d.collective_us + 1e-9);
+    }
+}
+
+/// Golden timeline on the BERT-layer fixture: the engine assignment of
+/// all 33 ops is pinned, MXU busy time is bit-identical to the
+/// estimator's systolic total, and the schedule strictly beats the
+/// serial sum (transposes/reshapes overlap the projection matmuls).
+#[test]
+fn golden_timeline_bert_layer() {
+    let est = estimator();
+    let text = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/bert_layer.mlir"),
+    )
+    .unwrap();
+    let module = parse_module(&text).unwrap();
+    let unfused = est.estimate_module(&module);
+    let sched = schedule_module(&est, &module, EngineConfig::Tpu);
+
+    let engines: Vec<&str> = sched
+        .ops
+        .iter()
+        .map(|o| o.engine.map(|e| e.name()).unwrap_or("-"))
+        .collect();
+    #[rustfmt::skip]
+    let golden = vec![
+        "mxu", "mxu", "mxu",                      // q/k/v projections
+        "dma", "dma", "dma", "dma", "dma", "dma", // head reshapes + transposes
+        "mxu",                                    // scores (batched dot)
+        "-", "dma", "vpu",                        // scale constant, broadcast, divide
+        "-", "vpu", "dma", "vpu", "vpu",          // softmax max/sub/exp
+        "-", "vpu", "dma", "vpu",                 // softmax sum/normalize
+        "mxu", "dma", "dma", "mxu",               // context, re-layout, output proj
+        "vpu",                                    // residual 1
+        "mxu", "-", "dma", "vpu",                 // FFN up + relu
+        "mxu", "vpu",                             // FFN down + residual 2
+    ];
+    assert_eq!(engines, golden, "engine assignment drifted");
+
+    // MXU busy time is exactly the estimator's systolic share.
+    let mxu = sched.usage(Engine::Mxu).unwrap();
+    assert_eq!(mxu.busy_us.to_bits(), unfused.systolic_us.to_bits());
+    assert_eq!(mxu.ops, 8);
+
+    // Real overlap: DMA/VPU work hides under the matmuls.
+    assert!(
+        sched.makespan_us < unfused.total_us,
+        "no overlap on bert_layer: {} vs {}",
+        sched.makespan_us,
+        unfused.total_us
+    );
+    assert!(sched.critical_path_us <= sched.makespan_us);
+
+    // The final residual add closes the module: it finishes last and
+    // sits on the critical chain.
+    let last = sched.ops.last().unwrap();
+    assert_eq!(last.op_name, "stablehlo.add");
+    assert_eq!(last.end_us.to_bits(), sched.makespan_us.to_bits());
+    assert_eq!(last.slack_us, 0.0);
+
+    // The rendered timeline is stable in structure.
+    let timeline = sched.render_timeline();
+    assert!(timeline.starts_with("timeline @bert_layer (tpu engines)"));
+    for needle in ["stablehlo.dot_general", "engine mxu", "engine vpu", "engine dma", "*"] {
+        assert!(timeline.contains(needle), "timeline missing '{needle}':\n{timeline}");
+    }
+    // 1 header + 33 ops + 4 engine summary lines.
+    assert_eq!(timeline.lines().count(), 38);
+}

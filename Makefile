@@ -1,6 +1,14 @@
 # Convenience targets; the Rust crate itself needs only cargo.
+#
+# The binary surface these targets build (see `scalesim-tpu help`):
+#   paper artifacts  table1 / fig2..fig5 / all
+#   simulate         one GEMM, a CSV topology, or a StableHLO module
+#                    (--json, --timeline, --chips N distributed slices,
+#                    --memory for the DMA/residency timeline + roofline)
+#   calibrate        build + save modeling assets
+#   serve            streaming JSONL estimation service (sharded cache)
 
-.PHONY: build test bench bench-schedule artifacts fmt clippy check
+.PHONY: build test bench bench-schedule artifacts fmt clippy doc check
 
 build:
 	cargo build --release
@@ -24,8 +32,14 @@ fmt:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
-# The CI gate: format, lints and the full test suite.
-check: fmt clippy test
+# Rustdoc with warnings denied: broken intra-doc links and missing docs
+# (the crate sets #![warn(missing_docs)]) fail the build, matching the
+# CI `doc` job.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# The CI gate: format, lints, docs and the full test suite.
+check: fmt clippy doc test
 
 # AOT-compile the JAX/Pallas workloads into artifacts/ (requires jax).
 # Rust tests that consume artifacts self-skip when this has not run.

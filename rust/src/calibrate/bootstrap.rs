@@ -13,15 +13,19 @@ use super::linreg::LinearFit;
 /// Percentile confidence interval.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Interval {
+    /// Lower bound.
     pub lo: f64,
+    /// Upper bound.
     pub hi: f64,
 }
 
 impl Interval {
+    /// Is `v` inside the interval (inclusive)?
     pub fn contains(&self, v: f64) -> bool {
         v >= self.lo && v <= self.hi
     }
 
+    /// Interval width.
     pub fn width(&self) -> f64 {
         self.hi - self.lo
     }
@@ -30,9 +34,13 @@ impl Interval {
 /// Bootstrap result for one linear fit.
 #[derive(Debug, Clone)]
 pub struct BootstrapResult {
+    /// Confidence interval of the intercept.
     pub alpha: Interval,
+    /// Confidence interval of the slope.
     pub beta: Interval,
+    /// Confidence interval of R².
     pub r2: Interval,
+    /// Bootstrap resamples drawn.
     pub resamples: usize,
 }
 

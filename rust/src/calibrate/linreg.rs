@@ -37,10 +37,12 @@ impl LinearFit {
         Some(LinearFit { alpha, beta })
     }
 
+    /// Predicted y at `x`.
     pub fn predict(&self, x: f64) -> f64 {
         self.alpha * x + self.beta
     }
 
+    /// Predictions for a batch of x values.
     pub fn predict_batch(&self, xs: &[f64]) -> Vec<f64> {
         xs.iter().map(|&x| self.predict(x)).collect()
     }
@@ -56,6 +58,7 @@ impl LinearFit {
         stats::r2(y, &self.predict_batch(x))
     }
 
+    /// Serialize for the asset files.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("alpha", Json::Num(self.alpha))
@@ -63,6 +66,7 @@ impl LinearFit {
         o
     }
 
+    /// Deserialize from the asset files.
     pub fn from_json(j: &Json) -> Result<LinearFit, JsonError> {
         Ok(LinearFit {
             alpha: j.req_f64("alpha")?,

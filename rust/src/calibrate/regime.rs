@@ -20,8 +20,10 @@ pub enum Regime {
 }
 
 impl Regime {
+    /// Every regime, small to large.
     pub const ALL: [Regime; 3] = [Regime::Small, Regime::Medium, Regime::Large];
 
+    /// Lowercase regime name.
     pub fn name(&self) -> &'static str {
         match self {
             Regime::Small => "small",
@@ -30,6 +32,7 @@ impl Regime {
         }
     }
 
+    /// Parse a lowercase regime name.
     pub fn parse(s: &str) -> Option<Regime> {
         match s {
             "small" => Some(Regime::Small),
@@ -72,14 +75,18 @@ impl std::fmt::Display for Regime {
 /// reused by §4.1.2 to report TPU latency directly).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RegimeCalibration {
+    /// Fit for the small regime.
     pub small: LinearFit,
+    /// Fit for the medium regime.
     pub medium: LinearFit,
+    /// Fit for the large regime.
     pub large: LinearFit,
     /// Fit diagnostics per regime (as in Fig. 2's insets).
     pub metrics: Vec<(Regime, FitMetrics)>,
 }
 
 impl RegimeCalibration {
+    /// The fit responsible for one regime.
     pub fn fit_for(&self, regime: Regime) -> &LinearFit {
         match regime {
             Regime::Small => &self.small,
@@ -93,6 +100,7 @@ impl RegimeCalibration {
         self.fit_for(Regime::of_gemm(gemm)).predict(cycles as f64)
     }
 
+    /// Serialize for the asset files.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("small", self.small.to_json())
@@ -101,6 +109,7 @@ impl RegimeCalibration {
         o
     }
 
+    /// Deserialize from the asset files.
     pub fn from_json(j: &Json) -> Result<RegimeCalibration, JsonError> {
         Ok(RegimeCalibration {
             small: LinearFit::from_json(
@@ -117,10 +126,12 @@ impl RegimeCalibration {
         })
     }
 
+    /// Write the calibration JSON to disk.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().pretty())
     }
 
+    /// Read a calibration JSON from disk.
     pub fn load(path: &std::path::Path) -> anyhow::Result<RegimeCalibration> {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;

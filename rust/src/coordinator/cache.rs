@@ -35,11 +35,19 @@ pub const DEFAULT_SHARDS: usize = 16;
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum ShapeKey {
     /// Systolic GEMM (dot_general, or convolution after im2col lowering).
-    Gemm { gemm: GemmShape, count: u64 },
+    Gemm {
+        /// The GEMM dimensions.
+        gemm: GemmShape,
+        /// Sequential repetitions (batch count).
+        count: u64,
+    },
     /// Elementwise op over an output tensor.
     Elementwise {
+        /// The operator kind.
         kind: EwKind,
+        /// Output dimensions.
         dims: Vec<usize>,
+        /// Output element type.
         dtype: DType,
     },
     /// An ICI collective on a multi-chip slice. The full slice config is
@@ -47,13 +55,19 @@ pub enum ShapeKey {
     /// single-chip path, which never produces this variant — can never
     /// alias, even for identical payloads.
     Collective {
+        /// The collective kind.
         kind: CollectiveKind,
+        /// Input payload bytes per chip.
         bytes_in: u64,
+        /// Output payload bytes.
         bytes_out: u64,
+        /// Chips in the slice.
         chips: usize,
+        /// Slice topology.
         topology: IciTopology,
         /// Bit patterns of the slice's f64 knobs (exact identity).
         link_gbps_bits: u64,
+        /// Bit pattern of the per-hop latency (exact identity).
         hop_us_bits: u64,
     },
 }
@@ -100,13 +114,18 @@ impl ShapeKey {
 /// depend on the op's position in its module.
 #[derive(Debug, Clone)]
 pub struct CachedCost {
+    /// Which cost model produced the entry.
     pub source: EstimateSource,
+    /// Simulated cycles (systolic entries only).
     pub cycles: Option<u64>,
+    /// Estimated latency, µs.
     pub latency_us: f64,
+    /// Human-readable shape/context note.
     pub note: String,
 }
 
 impl CachedCost {
+    /// Strip an estimate row down to its cacheable fields.
     pub fn of(est: &OpEstimate) -> CachedCost {
         CachedCost {
             source: est.source.clone(),
@@ -133,27 +152,39 @@ impl CachedCost {
 /// served in one mode, and the total estimated time they reported.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct ModeStat {
+    /// Module requests answered in this mode.
     pub requests: u64,
+    /// Accumulated estimated time across those requests, µs.
     pub total_us: f64,
 }
 
 /// A monotonic snapshot of the cache and routing counters.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct CacheStats {
+    /// Lookups answered from the cache.
     pub hits: u64,
+    /// Lookups that computed fresh.
     pub misses: u64,
+    /// Entries currently resident.
     pub entries: u64,
+    /// Ops routed to the calibrated systolic model.
     pub systolic: u64,
+    /// Ops answered by their own learned model.
     pub learned: u64,
+    /// Ops answered by a proxy learned model.
     pub learned_proxy: u64,
+    /// Ops costed by the analytic bandwidth model.
     pub bandwidth: u64,
+    /// Zero-cost ops.
     pub free: u64,
+    /// Ops with no model (conservative fallback).
     pub fallback: u64,
     /// Indexed like [`EstimateMode::ALL`]: unfused, fused, scheduled.
     pub modes: [ModeStat; 3],
 }
 
 impl CacheStats {
+    /// Hits over lookups, in [0, 1].
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -219,10 +250,12 @@ pub struct ShardedCache {
 }
 
 impl ShardedCache {
+    /// A cache with the default 16 shards.
     pub fn new() -> ShardedCache {
         ShardedCache::with_shards(DEFAULT_SHARDS)
     }
 
+    /// A cache with `n` mutex-striped shards (rounded up to 1).
     pub fn with_shards(n: usize) -> ShardedCache {
         let n = n.max(1);
         ShardedCache {
@@ -242,6 +275,7 @@ impl ShardedCache {
         self.enabled.store(on, Ordering::Relaxed);
     }
 
+    /// Is memoisation currently on?
     pub fn is_enabled(&self) -> bool {
         self.enabled.load(Ordering::Relaxed)
     }
@@ -310,10 +344,12 @@ impl ShardedCache {
         }
     }
 
+    /// Total entries across all shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// True when no entry is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -325,6 +361,7 @@ impl ShardedCache {
         }
     }
 
+    /// Snapshot of every counter (entries counted live).
     pub fn stats(&self) -> CacheStats {
         let mut modes = [ModeStat::default(); 3];
         for (i, slot) in modes.iter_mut().enumerate() {

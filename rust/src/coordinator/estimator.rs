@@ -40,18 +40,23 @@ pub enum EstimateSource {
 /// [`ShardedCache::record_mode`](super::cache::ShardedCache::record_mode)).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EstimateMode {
+    /// Plain per-op program-order sum.
     Unfused,
+    /// Fusion-bracket estimate (groups costed at their priciest member).
     Fused,
+    /// Overlap-aware multi-engine schedule.
     Scheduled,
 }
 
 impl EstimateMode {
+    /// Every mode, in reporting order.
     pub const ALL: [EstimateMode; 3] = [
         EstimateMode::Unfused,
         EstimateMode::Fused,
         EstimateMode::Scheduled,
     ];
 
+    /// Stable lowercase name (stats keys, summaries).
     pub fn name(&self) -> &'static str {
         match self {
             EstimateMode::Unfused => "unfused",
@@ -62,6 +67,7 @@ impl EstimateMode {
 }
 
 impl EstimateSource {
+    /// Stable lowercase tag (per-op tables, JSON `source` fields).
     pub fn tag(&self) -> &'static str {
         match self {
             EstimateSource::SystolicCalibrated => "systolic",
@@ -77,30 +83,43 @@ impl EstimateSource {
 /// Per-op estimate row.
 #[derive(Debug, Clone)]
 pub struct OpEstimate {
+    /// Index of the op within its function.
     pub index: usize,
+    /// Fully qualified op name (calls render as `call @callee`).
     pub op_name: String,
+    /// Which cost model answered.
     pub source: EstimateSource,
     /// Simulated cycles (systolic ops only).
     pub cycles: Option<u64>,
+    /// Estimated latency, µs.
     pub latency_us: f64,
+    /// Shape/context note for tables.
     pub note: String,
 }
 
 /// Whole-module estimate.
 #[derive(Debug, Clone)]
 pub struct ModelEstimate {
+    /// Module the estimate covers.
     pub module_name: String,
+    /// One row per entry-function op (calls inlined as single rows).
     pub ops: Vec<OpEstimate>,
+    /// Unfused program-order sum, µs.
     pub total_us: f64,
+    /// Share spent in systolic (MXU) ops, µs.
     pub systolic_us: f64,
+    /// Share spent in elementwise (VPU) ops, µs.
     pub elementwise_us: f64,
+    /// Share spent in everything else (bandwidth/fallback), µs.
     pub other_us: f64,
     /// Ops covered by a first-class model (systolic or learned).
     pub covered_ops: usize,
+    /// Ops that carry any nonzero cost model.
     pub total_costed_ops: usize,
 }
 
 impl ModelEstimate {
+    /// Fraction of costed ops covered by a first-class model, in [0, 1].
     pub fn coverage(&self) -> f64 {
         if self.total_costed_ops == 0 {
             return 1.0;
@@ -111,7 +130,9 @@ impl ModelEstimate {
 
 /// The estimator: config + calibration + learned models.
 pub struct Estimator {
+    /// SCALE-Sim architecture config for systolic simulation.
     pub config: ScaleConfig,
+    /// Per-regime cycle-to-time linear calibration.
     pub calibration: RegimeCalibration,
     /// Per-operator learned models (keyed by EwKind name).
     pub learned: HashMap<String, Hgbr>,
@@ -129,6 +150,7 @@ pub struct Estimator {
 }
 
 impl Estimator {
+    /// An estimator with no learned models and an empty cache.
     pub fn new(config: ScaleConfig, calibration: RegimeCalibration) -> Estimator {
         Estimator {
             config,
@@ -140,6 +162,7 @@ impl Estimator {
         }
     }
 
+    /// Register (and pre-compile) the learned model for one op kind.
     pub fn add_learned(&mut self, kind: EwKind, model: Hgbr) {
         self.compiled
             .write()
@@ -151,6 +174,7 @@ impl Estimator {
         self.cache.clear();
     }
 
+    /// HBM bandwidth used by the bandwidth fallback (and the memory timeline).
     pub fn hbm_bytes_per_us(&self) -> f64 {
         self.hbm_bytes_per_us
     }

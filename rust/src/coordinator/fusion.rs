@@ -31,6 +31,7 @@ pub struct FusionPlan {
     pub group_of: Vec<usize>,
     /// group id -> index of the op that pays the group's cost.
     pub group_root: Vec<usize>,
+    /// Fusion groups the planner formed.
     pub num_groups: usize,
 }
 

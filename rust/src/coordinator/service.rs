@@ -37,6 +37,7 @@ use crate::frontend::classify::{EwKind, OpClass};
 use crate::frontend::parse_module;
 use crate::frontend::types::{DType, TensorType};
 use crate::graph::{schedule_estimate, EngineConfig};
+use crate::memory::{schedule_estimate_memory, MemoryConfig};
 use crate::scalesim::topology::GemmShape;
 use crate::util::json::Json;
 
@@ -48,15 +49,29 @@ use super::pool::{default_workers, parallel_map, WorkerPool};
 /// A parsed request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
+    /// One GEMM (optionally sharded across a slice).
     Gemm {
+        /// The GEMM dimensions.
         gemm: GemmShape,
         /// Multi-chip slice to shard across (`"chips"`, `"ici_gbps"`,
         /// `"ici_topology"`, `"ici_latency_us"` fields); `None` answers
         /// on a single chip.
         slice: Option<SliceConfig>,
     },
-    Elementwise { op: String, dims: Vec<usize> },
-    Module { path: String, slice: Option<SliceConfig> },
+    /// One elementwise op over a bf16 tensor.
+    Elementwise {
+        /// Short op name (e.g. `add`).
+        op: String,
+        /// Tensor shape.
+        dims: Vec<usize>,
+    },
+    /// A whole StableHLO module from a file path.
+    Module {
+        /// Path to the StableHLO text file.
+        path: String,
+        /// Optional multi-chip slice to estimate across.
+        slice: Option<SliceConfig>,
+    },
     /// Report cache/routing counters for the requests answered so far.
     Stats,
 }
@@ -107,6 +122,7 @@ fn parse_slice(j: &Json) -> Result<Option<SliceConfig>> {
 }
 
 impl Request {
+    /// Parse one JSONL request line.
     pub fn parse(line: &str) -> Result<Request> {
         let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
         match j.req_str("type").map_err(|e| anyhow::anyhow!("{e}"))? {
@@ -248,6 +264,14 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                     let report = estimator.estimate_module(&module);
                     let fused = estimate_fused_with(&module, report.clone());
                     let sched = schedule_estimate(&module, &report, EngineConfig::Tpu);
+                    // Memory-aware makespan + roofline: reuses the one
+                    // unfused walk's rows, so no extra cache traffic.
+                    let mem = schedule_estimate_memory(
+                        &module,
+                        &report,
+                        EngineConfig::Tpu,
+                        &MemoryConfig::for_bandwidth(estimator.hbm_bytes_per_us()),
+                    );
                     estimator
                         .cache
                         .record_mode(EstimateMode::Unfused, report.total_us);
@@ -267,6 +291,8 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                         .set("fused_us", Json::Num(fused.total_us))
                         .set("scheduled_us", Json::Num(sched.makespan_us))
                         .set("critical_path_us", Json::Num(sched.critical_path_us))
+                        .set("memory_us", Json::Num(mem.makespan_us()))
+                        .set("roofline", mem.roofline_json())
                         .set("engines", sched.engines_to_json())
                         .set("num_ops", Json::Num(report.ops.len() as f64))
                         .set("coverage", Json::Num(report.coverage()));
@@ -319,13 +345,21 @@ impl Default for StreamOptions {
 /// End-of-stream accounting, rendered on shutdown.
 #[derive(Debug, Clone, Default)]
 pub struct StreamSummary {
+    /// Total requests read.
     pub requests: u64,
+    /// Requests answered successfully.
     pub ok: u64,
+    /// Requests answered with an error object.
     pub errors: u64,
+    /// `gemm` requests.
     pub gemm: u64,
+    /// `elementwise` requests.
     pub elementwise: u64,
+    /// `module` requests.
     pub module: u64,
+    /// `stats` barrier requests.
     pub stats_requests: u64,
+    /// Final cache/routing counters.
     pub cache: CacheStats,
 }
 
@@ -684,6 +718,21 @@ module @m { func.func @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> ten
         assert!(critical <= scheduled + 1e-9);
         assert!(scheduled <= total + 1e-9);
         assert!(r.get("engines").unwrap().get("mxu").is_some());
+        // Memory-aware makespan and the per-op roofline verdicts ride
+        // along on every single-chip module answer.
+        let memory_us = r.req_f64("memory_us").unwrap();
+        assert!(
+            memory_us >= scheduled,
+            "memory-aware {memory_us} beat compute-only {scheduled}"
+        );
+        let roofline = r.get("roofline").expect("roofline summary");
+        assert!(roofline.req_str("verdict").is_ok());
+        let verdict_ops = roofline.req_arr("ops").unwrap();
+        assert_eq!(verdict_ops.len(), 2);
+        for vo in verdict_ops {
+            let bound = vo.req_str("bound").unwrap();
+            assert!(["compute", "bandwidth", "free"].contains(&bound), "{bound}");
+        }
         // Stats attribute the module answer to every mode it computed.
         let stats = Json::parse(&responses[1]).unwrap();
         let modes = stats.get("modes").expect("stats carry per-mode counters");

@@ -28,7 +28,12 @@ pub enum IciTopology {
     /// A single bidirectional ring over all chips.
     Ring,
     /// A 2-D torus of `x * y` chips (rings in both dimensions).
-    Torus2D { x: usize, y: usize },
+    Torus2D {
+        /// Chips along the first torus axis.
+        x: usize,
+        /// Chips along the second torus axis.
+        y: usize,
+    },
 }
 
 impl IciTopology {
@@ -108,7 +113,9 @@ impl std::fmt::Display for IciTopology {
 /// the wires are.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SliceConfig {
+    /// Chips in the slice.
     pub chips: usize,
+    /// Physical link arrangement.
     pub topology: IciTopology,
     /// Per-link bandwidth in GB/s.
     pub link_gbps: f64,
@@ -132,6 +139,7 @@ impl SliceConfig {
         SliceConfig::ring(1, DEFAULT_LINK_GBPS)
     }
 
+    /// Reject inconsistent chip counts / non-positive link parameters.
     pub fn validate(&self) -> Result<()> {
         if self.chips == 0 {
             bail!("slice needs at least one chip");
@@ -160,6 +168,7 @@ pub struct IciModel {
 }
 
 impl IciModel {
+    /// A collective model for one slice.
     pub fn new(slice: &SliceConfig) -> IciModel {
         IciModel { slice: *slice }
     }

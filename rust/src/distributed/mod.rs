@@ -15,6 +15,6 @@ pub use ici::{
     IciModel, IciTopology, SliceConfig, DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
 };
 pub use slice::{
-    estimate_gemm_sliced, estimate_module_distributed, DistOpEstimate, DistributedEstimate,
-    GemmSliceReport,
+    estimate_gemm_sliced, estimate_module_distributed, estimate_module_distributed_memory,
+    DistOpEstimate, DistributedEstimate, GemmSliceReport,
 };

@@ -33,6 +33,8 @@ use crate::frontend::classify::{classify, CollectiveKind, OpClass};
 use crate::frontend::opinfo::{ModuleInfo, ShardingAttr};
 use crate::graph::analysis::critical_path;
 use crate::graph::{place, DepGraph, Engine, SchedNode};
+use crate::memory::timeline::push_unique;
+use crate::memory::{DmaTimeline, FetchDma, MemoryConfig, RetireDma};
 use crate::scalesim::partition::split_dim;
 use crate::scalesim::topology::GemmShape;
 
@@ -41,16 +43,22 @@ use super::ici::{IciModel, SliceConfig};
 /// Per-op row of a distributed estimate.
 #[derive(Debug, Clone)]
 pub struct DistOpEstimate {
+    /// Index of the source op within its function.
     pub index: usize,
+    /// Display name (calls render as `call @callee`).
     pub op_name: String,
     /// Compute-engine time for this op's shard, µs.
     pub compute_us: f64,
     /// ICI-engine time (explicit collective or implicit all-gather), µs.
     pub collective_us: f64,
+    /// HBM DMA time behind this op (memory-aware walks only; zero when
+    /// the slice was estimated without a [`MemoryConfig`]), µs.
+    pub dma_us: f64,
     /// Timeline start of the op, µs.
     pub start_us: f64,
     /// Timeline completion of the op's results, µs.
     pub finish_us: f64,
+    /// Sharding / collective context note.
     pub note: String,
 }
 
@@ -58,7 +66,9 @@ pub struct DistOpEstimate {
 /// symmetric).
 #[derive(Debug, Clone)]
 pub struct DistributedEstimate {
+    /// Module the estimate covers.
     pub module_name: String,
+    /// The slice this was estimated for.
     pub slice: SliceConfig,
     /// Per-chip makespan: when the last engine goes idle, µs.
     pub total_us: f64,
@@ -66,11 +76,15 @@ pub struct DistributedEstimate {
     pub compute_us: f64,
     /// Per-chip busy time on the ICI engine, µs.
     pub collective_us: f64,
+    /// Per-chip busy time on the HBM DMA engine (memory-aware walks
+    /// only; zero otherwise), µs.
+    pub dma_us: f64,
     /// Longest dependence chain ignoring engine contention, µs: no
     /// overlap schedule on this slice can finish faster.
     pub critical_path_us: f64,
     /// The same module estimated on one chip (the baseline).
     pub single_chip_us: f64,
+    /// Per-op rows in program order.
     pub ops: Vec<DistOpEstimate>,
 }
 
@@ -114,7 +128,40 @@ pub fn estimate_module_distributed(
     slice: &SliceConfig,
 ) -> DistributedEstimate {
     let single = est.estimate_module(module);
-    let mut out = walk_func(est, module, module.entry().map(|f| f.name.as_str()), slice, 0);
+    let mut out = walk_func(
+        est,
+        module,
+        module.entry().map(|f| f.name.as_str()),
+        slice,
+        0,
+        None,
+    );
+    out.single_chip_us = single.total_us;
+    out
+}
+
+/// Memory-aware variant of [`estimate_module_distributed`]: threads a
+/// [`DmaTimeline`] through each per-chip timeline, so every op's cold
+/// operand shards pay HBM traffic on the DMA engine next to the compute
+/// and ICI lanes. Footprints are the per-chip shards (full tensor bytes
+/// divided across the slice). With [`MemoryConfig::infinite`] the walk
+/// reproduces the memory-blind estimate bit for bit (tested in
+/// `tests/memory_model.rs`).
+pub fn estimate_module_distributed_memory(
+    est: &Estimator,
+    module: &ModuleInfo,
+    slice: &SliceConfig,
+    memory: &MemoryConfig,
+) -> DistributedEstimate {
+    let single = est.estimate_module(module);
+    let mut out = walk_func(
+        est,
+        module,
+        module.entry().map(|f| f.name.as_str()),
+        slice,
+        0,
+        Some(memory),
+    );
     out.single_chip_us = single.total_us;
     out
 }
@@ -122,17 +169,23 @@ pub fn estimate_module_distributed(
 /// One GEMM across a slice (the `serve` gemm-request and CLI path).
 #[derive(Debug, Clone, Copy)]
 pub struct GemmSliceReport {
+    /// Chips in the slice.
     pub chips: usize,
+    /// Per-chip compute time of the sharded GEMM, µs.
     pub compute_us: f64,
+    /// Implicit all-gather time, µs (0 for row-parallel shards).
     pub collective_us: f64,
+    /// The same GEMM estimated on one chip, µs.
     pub single_chip_us: f64,
 }
 
 impl GemmSliceReport {
+    /// Per-chip total: compute plus collective, µs.
     pub fn total_us(&self) -> f64 {
         self.compute_us + self.collective_us
     }
 
+    /// Parallel efficiency `T1 / (P * TP)` in `(0, 1]`.
     pub fn parallel_efficiency(&self) -> f64 {
         efficiency(self.single_chip_us, self.chips, self.total_us())
     }
@@ -290,6 +343,8 @@ struct RowPlan {
     /// (compute, ici) busy-time contribution of the main segment — call
     /// blocks split their callee's busy time across both engines.
     busy: (f64, f64),
+    /// DMA busy time attributable to the op (memory-aware walks only).
+    dma_us: f64,
     note: String,
 }
 
@@ -301,6 +356,7 @@ fn walk_func(
     func_name: Option<&str>,
     slice: &SliceConfig,
     depth: usize,
+    memory: Option<&MemoryConfig>,
 ) -> DistributedEstimate {
     let mut result = DistributedEstimate {
         module_name: module.name.clone(),
@@ -308,6 +364,7 @@ fn walk_func(
         total_us: 0.0,
         compute_us: 0.0,
         collective_us: 0.0,
+        dma_us: 0.0,
         critical_path_us: 0.0,
         single_chip_us: 0.0,
         ops: Vec::new(),
@@ -318,6 +375,10 @@ fn walk_func(
     };
 
     let graph = DepGraph::build(func);
+    // Memory-aware walks thread tensor residency through the timeline:
+    // each op may grow a DMA-in node (cold operand shards) and a DMA-out
+    // node (spills / dirty evictions / escapes) on the DMA lane.
+    let mut dma = memory.map(|m| DmaTimeline::new(*m, func, slice.chips));
     let mut nodes: Vec<SchedNode> = Vec::new();
     let mut rows: Vec<RowPlan> = Vec::with_capacity(func.ops.len());
     // For each op, the node whose finish marks its results ready (the
@@ -325,14 +386,30 @@ fn walk_func(
     let mut provider: Vec<usize> = Vec::with_capacity(func.ops.len());
 
     for (i, op) in func.ops.iter().enumerate() {
-        let preds: Vec<usize> = graph.preds[i].iter().map(|&p| provider[p]).collect();
+        let mut preds: Vec<usize> = graph.preds[i].iter().map(|&p| provider[p]).collect();
+
+        // Fetch cold operands over HBM before the op runs (`return`
+        // reads nothing on chip; its escape is handled at retire).
+        let fetch = match dma.as_mut() {
+            Some(d) if op.short_name() != "return" => d.fetch(op, &mut nodes),
+            _ => FetchDma::default(),
+        };
+        for &n in fetch.hit_preds.iter().chain(fetch.node.iter()) {
+            push_unique(&mut preds, n);
+        }
 
         // Inline calls (mirrors Estimator::estimate_func): the callee is
         // estimated as its own timeline and enters this one as a single
         // compute block.
         if (op.short_name() == "call" || op.op_name == "func.call") && depth < 4 {
             if let Some(callee) = &op.callee {
-                let sub = walk_func(est, module, Some(callee), slice, depth + 1);
+                // The callee enters this timeline as an opaque block, so
+                // its internal HBM traffic is NOT modeled (the caller
+                // already charged the call's operands above; threading
+                // `memory` down too would bill the arguments twice) —
+                // the same non-goal as the single-chip expansion, see
+                // DESIGN.md §memory-model.
+                let sub = walk_func(est, module, Some(callee), slice, depth + 1, None);
                 let main = nodes.len();
                 nodes.push(SchedNode {
                     index: op.index,
@@ -356,12 +433,17 @@ fn walk_func(
                     source: "call",
                     note: String::new(),
                 });
+                let retire = match dma.as_mut() {
+                    Some(d) => d.retire(op, main, &mut nodes),
+                    None => RetireDma::default(),
+                };
                 rows.push(RowPlan {
                     index: op.index,
                     op_name: format!("call @{callee}"),
                     main,
                     gather: None,
                     busy: (sub.compute_us, sub.collective_us),
+                    dma_us: fetch.dma_us + retire.dma_us,
                     note: format!("inlined {} ops", sub.ops.len()),
                 });
                 provider.push(main);
@@ -372,6 +454,7 @@ fn walk_func(
         let class = classify(op);
         if let OpClass::Collective { kind, bytes_in, out } = &class {
             let dur = collective_cost(est, slice, *kind, *bytes_in, out.size_bytes());
+            let main = nodes.len();
             nodes.push(SchedNode {
                 index: op.index,
                 op_name: op.op_name.clone(),
@@ -381,15 +464,20 @@ fn walk_func(
                 source: "bandwidth",
                 note: String::new(),
             });
+            let retire = match dma.as_mut() {
+                Some(d) => d.retire(op, main, &mut nodes),
+                None => RetireDma::default(),
+            };
             rows.push(RowPlan {
                 index: op.index,
                 op_name: op.op_name.clone(),
-                main: nodes.len() - 1,
+                main,
                 gather: None,
                 busy: (0.0, dur),
+                dma_us: fetch.dma_us + retire.dma_us,
                 note: format!("{kind} {out} over ICI"),
             });
-            provider.push(nodes.len() - 1);
+            provider.push(main);
             continue;
         }
 
@@ -411,6 +499,7 @@ fn walk_func(
             Some((bytes_in, bytes_out)) => {
                 let coll =
                     collective_cost(est, slice, CollectiveKind::AllGather, bytes_in, bytes_out);
+                let gnode = nodes.len();
                 nodes.push(SchedNode {
                     index: op.index,
                     op_name: format!("{}.all_gather", op.op_name),
@@ -420,27 +509,37 @@ fn walk_func(
                     source: "bandwidth",
                     note: String::new(),
                 });
+                let retire = match dma.as_mut() {
+                    Some(d) => d.retire(op, gnode, &mut nodes),
+                    None => RetireDma::default(),
+                };
                 rows.push(RowPlan {
                     index: op.index,
                     op_name: op.op_name.clone(),
                     main,
-                    gather: Some(main + 1),
+                    gather: Some(gnode),
                     busy: (e.latency_us, 0.0),
+                    dma_us: fetch.dma_us + retire.dma_us,
                     note: if coll > 0.0 {
                         format!("{} + all_gather(out)", e.note)
                     } else {
                         e.note
                     },
                 });
-                provider.push(main + 1);
+                provider.push(gnode);
             }
             None => {
+                let retire = match dma.as_mut() {
+                    Some(d) => d.retire(op, main, &mut nodes),
+                    None => RetireDma::default(),
+                };
                 rows.push(RowPlan {
                     index: op.index,
                     op_name: op.op_name.clone(),
                     main,
                     gather: None,
                     busy: (e.latency_us, 0.0),
+                    dma_us: fetch.dma_us + retire.dma_us,
                     note: e.note,
                 });
                 provider.push(main);
@@ -456,6 +555,7 @@ fn walk_func(
     for row in &rows {
         result.compute_us += row.busy.0;
         result.collective_us += row.busy.1;
+        result.dma_us += row.dma_us;
         if let Some(g) = row.gather {
             result.collective_us += nodes[g].cost_us;
         }
@@ -468,6 +568,7 @@ fn walk_func(
             op_name: row.op_name,
             compute_us: row.busy.0,
             collective_us: row.busy.1 + gather_us,
+            dma_us: row.dma_us,
             start_us: placements[row.main].start_us,
             finish_us: finish,
             note: row.note,

@@ -17,24 +17,33 @@ use crate::workloads::gemm_sweep::regime_sweep;
 /// One observed point.
 #[derive(Debug, Clone)]
 pub struct Observation {
+    /// Swept GEMM shape.
     pub gemm: GemmShape,
+    /// Simulated SCALE-Sim cycles.
     pub cycles: u64,
+    /// Median measured latency, µs.
     pub measured_us: f64,
 }
 
 /// Per-regime regression panel.
 #[derive(Debug, Clone)]
 pub struct RegimePanel {
+    /// The regime this panel covers.
     pub regime: Regime,
+    /// (cycles, latency) observations.
     pub points: Vec<Observation>,
+    /// OLS fit of latency on cycles.
     pub fit: LinearFit,
+    /// Fit quality metrics.
     pub metrics: FitMetrics,
 }
 
 /// The full Fig. 2 result.
 #[derive(Debug, Clone)]
 pub struct Fig2Result {
+    /// One regression panel per regime.
     pub panels: Vec<RegimePanel>,
+    /// The calibration fitted from the panels.
     pub calibration: RegimeCalibration,
 }
 

@@ -14,17 +14,24 @@ use crate::workloads::elementwise_sweep::{sweep_1d, sweep_2d};
 /// One measured sweep point.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Swept tensor shape.
     pub dims: Vec<usize>,
+    /// Element count.
     pub elements: u64,
+    /// Median measured latency, µs.
     pub latency_us: f64,
 }
 
+/// Figure 3: elementwise-add latency sweeps.
 #[derive(Debug, Clone)]
 pub struct Fig3Result {
+    /// 1-D sweep points.
     pub one_d: Vec<SweepPoint>,
+    /// 2-D sweep points.
     pub two_d: Vec<SweepPoint>,
     /// Pearson correlation of latency vs size for each sweep.
     pub linearity_1d: f64,
+    /// Pearson r of latency vs elements on the 2-D sweep.
     pub linearity_2d: f64,
     /// Max relative spread among same-size 2-D shapes (the fluctuation).
     pub max_same_size_spread: f64,
@@ -49,6 +56,7 @@ fn measure_sweep(
         .collect()
 }
 
+/// Run both sweeps on a backend.
 pub fn run(hw: &mut dyn Hardware, reps: usize) -> Fig3Result {
     let one_d = measure_sweep(hw, sweep_1d(), reps);
     let two_d = measure_sweep(hw, sweep_2d(), reps);
@@ -84,6 +92,7 @@ pub fn run(hw: &mut dyn Hardware, reps: usize) -> Fig3Result {
     }
 }
 
+/// Human-readable Figure 3 report.
 pub fn render(result: &Fig3Result, hw_name: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!(
@@ -131,6 +140,7 @@ pub fn render(result: &Fig3Result, hw_name: &str) -> String {
     out
 }
 
+/// CSV dump of both sweeps.
 pub fn to_csv(result: &Fig3Result) -> String {
     let mut out = String::from("sweep,shape,elements,latency_us\n");
     for (tag, pts) in [("1d", &result.one_d), ("2d", &result.two_d)] {

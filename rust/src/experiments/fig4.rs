@@ -15,21 +15,31 @@ use crate::tpu::traits::{measure_gemm_median, Hardware};
 use crate::util::stats::{self, FitMetrics};
 use crate::workloads::gemm_sweep::heldout_shapes;
 
+/// One held-out shape's prediction vs measurement.
 #[derive(Debug, Clone)]
 pub struct Fig4Point {
+    /// The held-out GEMM.
     pub gemm: GemmShape,
+    /// Size regime it falls in.
     pub regime: Regime,
+    /// Calibrated prediction, µs.
     pub predicted_us: f64,
+    /// Median measured latency, µs.
     pub measured_us: f64,
 }
 
+/// Figure 4: held-out cycle-to-latency accuracy.
 #[derive(Debug, Clone)]
 pub struct Fig4Result {
+    /// All held-out points.
     pub points: Vec<Fig4Point>,
+    /// Metrics over every point.
     pub overall: FitMetrics,
+    /// MAPE split per regime.
     pub per_regime_mape: Vec<(Regime, f64)>,
 }
 
+/// Evaluate a fitted calibration on held-out shapes.
 pub fn run(
     hw: &mut dyn Hardware,
     config: &ScaleConfig,
@@ -72,6 +82,7 @@ pub fn run(
     }
 }
 
+/// Human-readable Figure 4 report.
 pub fn render(result: &Fig4Result, hw_name: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!(
@@ -118,6 +129,7 @@ pub fn render(result: &Fig4Result, hw_name: &str) -> String {
     out
 }
 
+/// CSV dump of predictions vs measurements.
 pub fn to_csv(result: &Fig4Result) -> String {
     let mut t = Table::new(&["regime", "m", "k", "n", "predicted_us", "measured_us"]);
     for p in &result.points {

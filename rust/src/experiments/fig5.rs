@@ -17,17 +17,24 @@ use crate::workloads::elementwise_sweep::sample_training_shapes;
 /// Result for one operator.
 #[derive(Debug, Clone)]
 pub struct OperatorEval {
+    /// Operator the model was trained for.
     pub op: EwKind,
+    /// The trained model.
     pub model: Hgbr,
+    /// Training samples used.
     pub train_size: usize,
+    /// Held-out (dims, measured, predicted) triples.
     pub test_points: Vec<(Vec<usize>, f64, f64)>, // (dims, measured, predicted)
+    /// Held-out fit metrics.
     pub metrics: FitMetrics,
     /// Linear-in-size baseline metrics on the same test set (ablation).
     pub linear_baseline: FitMetrics,
 }
 
+/// Every operator's evaluation for Figure 5.
 #[derive(Debug, Clone)]
 pub struct Fig5Result {
+    /// One evaluation per trained operator.
     pub evals: Vec<OperatorEval>,
 }
 
@@ -102,6 +109,7 @@ pub fn run(hw: &mut dyn Hardware, num_shapes: usize, reps: usize, seed: u64) -> 
     Fig5Result { evals }
 }
 
+/// Human-readable Figure 5 report.
 pub fn render(result: &Fig5Result, hw_name: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!(
@@ -145,6 +153,7 @@ pub fn render(result: &Fig5Result, hw_name: &str) -> String {
     out
 }
 
+/// CSV dump of the held-out points.
 pub fn to_csv(result: &Fig5Result) -> String {
     let mut out = String::from("op,shape,measured_us,predicted_us\n");
     for e in &result.evals {

@@ -23,28 +23,48 @@ use crate::scalesim::topology::{ConvLayer, GemmShape};
 /// Elementwise operator kind (the learned models key on this).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EwKind {
+    /// `add`
     Add,
+    /// `subtract`
     Subtract,
+    /// `multiply`
     Multiply,
+    /// `divide`
     Divide,
+    /// `maximum`
     Maximum,
+    /// `minimum`
     Minimum,
+    /// `exponential`
     Exp,
+    /// `tanh`
     Tanh,
+    /// `logistic` (sigmoid)
     Logistic,
+    /// `rsqrt`
     Rsqrt,
+    /// `sqrt`
     Sqrt,
+    /// `log`
     Log,
+    /// `negate`
     Negate,
+    /// `abs`
     Abs,
+    /// `compare`
     Compare,
+    /// `select`
     Select,
+    /// `convert` (dtype cast)
     Convert,
+    /// `power`
     Power,
+    /// Any other recognised elementwise op (proxied).
     Other,
 }
 
 impl EwKind {
+    /// Map a short StableHLO op name to its elementwise kind.
     pub fn from_name(short: &str) -> Option<EwKind> {
         Some(match short {
             "add" => EwKind::Add,
@@ -72,6 +92,7 @@ impl EwKind {
         })
     }
 
+    /// The canonical short name (learned-model key).
     pub fn name(&self) -> &'static str {
         match self {
             EwKind::Add => "add",
@@ -101,13 +122,18 @@ impl EwKind {
 /// `crate::distributed`; zero-cost on a single chip).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CollectiveKind {
+    /// Sum across chips, full result everywhere.
     AllReduce,
+    /// Concatenate shards across chips.
     AllGather,
+    /// Sum then shard the result.
     ReduceScatter,
+    /// Point-to-point shard exchange.
     CollectivePermute,
 }
 
 impl CollectiveKind {
+    /// Map a short StableHLO op name to its collective kind.
     pub fn from_name(short: &str) -> Option<CollectiveKind> {
         Some(match short {
             "all_reduce" => CollectiveKind::AllReduce,
@@ -118,6 +144,7 @@ impl CollectiveKind {
         })
     }
 
+    /// The canonical short op name.
     pub fn name(&self) -> &'static str {
         match self {
             CollectiveKind::AllReduce => "all_reduce",
@@ -139,27 +166,61 @@ impl std::fmt::Display for CollectiveKind {
 pub enum OpClass {
     /// Runs on the systolic array as `count` sequential GEMMs (count > 1
     /// for batched dot_general).
-    SystolicGemm { gemm: GemmShape, count: u64 },
+    SystolicGemm {
+        /// Derived (M, K, N).
+        gemm: GemmShape,
+        /// Sequential GEMM repetitions (batch count).
+        count: u64,
+    },
     /// A 2-D convolution with full SCALE-Sim conv parameters.
-    SystolicConv { conv: ConvLayer, gemm: GemmShape, count: u64 },
+    SystolicConv {
+        /// Full convolution parameters.
+        conv: ConvLayer,
+        /// The im2col-lowered GEMM.
+        gemm: GemmShape,
+        /// Sequential repetitions (batch count).
+        count: u64,
+    },
     /// Elementwise op over `out` (routed to the learned model).
-    Elementwise { kind: EwKind, out: TensorType },
+    Elementwise {
+        /// The operator kind (learned-model key).
+        kind: EwKind,
+        /// Output tensor type.
+        out: TensorType,
+    },
     /// Reduction: contraction over `dimensions`; costed on input size.
-    Reduction { input: TensorType, out: TensorType },
+    Reduction {
+        /// Input tensor type.
+        input: TensorType,
+        /// Output tensor type.
+        out: TensorType,
+    },
     /// Pure data movement (reshape/transpose/broadcast/...).
-    DataMovement { bytes: u64, out: TensorType },
+    DataMovement {
+        /// Bytes moved (output footprint).
+        bytes: u64,
+        /// Output tensor type.
+        out: TensorType,
+    },
     /// Cross-chip collective (`all_reduce`, `all_gather`, ...): free on a
     /// single chip, costed by the ICI model on a multi-chip slice.
     Collective {
+        /// The collective kind.
         kind: CollectiveKind,
         /// Input payload bytes (the per-chip shard the op consumes).
         bytes_in: u64,
+        /// Output tensor type.
         out: TensorType,
     },
     /// No runtime cost (constants, iota, metadata ops).
     Free,
     /// Not modeled; conservatively treated as elementwise on the output.
-    Unmodeled { reason: String, out: Option<TensorType> },
+    Unmodeled {
+        /// Why no model applies.
+        reason: String,
+        /// Output tensor type, when known.
+        out: Option<TensorType>,
+    },
 }
 
 /// Ops that move/relayout data without arithmetic.

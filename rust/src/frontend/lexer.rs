@@ -12,6 +12,7 @@
 
 use anyhow::{bail, Result};
 
+/// One lexed StableHLO token.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tok {
     /// Identifier or keyword, possibly dotted: `stablehlo.dot_general`,
@@ -31,7 +32,12 @@ pub enum Tok {
     TensorType(String),
     /// `dense<...>`, `#stablehlo<...>`, `array<...>` etc. — raw payload
     /// with the sigil/keyword preserved in `head`.
-    RawAngle { head: String, body: String },
+    RawAngle {
+        /// The sigil/keyword before `<`.
+        head: String,
+        /// The raw text inside the angle brackets.
+        body: String,
+    },
     /// `->`
     Arrow,
     /// Single punctuation: ( ) [ ] { } < > = , : ^
@@ -39,10 +45,12 @@ pub enum Tok {
 }
 
 impl Tok {
+    /// Is this the punctuation character `c`?
     pub fn is_punct(&self, c: char) -> bool {
         matches!(self, Tok::Punct(p) if *p == c)
     }
 
+    /// The identifier text, if this is an identifier.
     pub fn ident(&self) -> Option<&str> {
         match self {
             Tok::Ident(s) => Some(s),
@@ -54,10 +62,13 @@ impl Tok {
 /// A token plus its 1-based source line (for diagnostics).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpannedTok {
+    /// The token.
     pub tok: Tok,
+    /// 1-based source line.
     pub line: usize,
 }
 
+/// Lex StableHLO text into spanned tokens.
 pub fn lex(text: &str) -> Result<Vec<SpannedTok>> {
     let bytes = text.as_bytes();
     let mut toks = Vec::new();

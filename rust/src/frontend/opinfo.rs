@@ -8,9 +8,13 @@ use super::types::TensorType;
 /// `dot_general` dimension numbers.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DotDims {
+    /// Batch dims of the lhs.
     pub lhs_batch: Vec<usize>,
+    /// Batch dims of the rhs.
     pub rhs_batch: Vec<usize>,
+    /// Contracting dims of the lhs.
     pub lhs_contract: Vec<usize>,
+    /// Contracting dims of the rhs.
     pub rhs_contract: Vec<usize>,
 }
 
@@ -32,15 +36,23 @@ pub enum ConvDimLabel {
 /// Convolution attributes extracted from the pretty-printed form.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ConvAttrs {
+    /// Input (ifmap) dimension labels, e.g. `b01f`.
     pub input_layout: Vec<ConvDimLabel>,
+    /// Kernel dimension labels, e.g. `01io`.
     pub kernel_layout: Vec<ConvDimLabel>,
+    /// Output dimension labels.
     pub output_layout: Vec<ConvDimLabel>,
+    /// Window stride per spatial dim.
     pub strides: Vec<usize>,
     /// (low, high) padding per spatial dim.
     pub pads: Vec<(i64, i64)>,
+    /// Input (lhs) dilation per spatial dim.
     pub lhs_dilation: Vec<usize>,
+    /// Kernel (rhs) dilation per spatial dim.
     pub rhs_dilation: Vec<usize>,
+    /// Grouped-convolution feature groups.
     pub feature_group_count: usize,
+    /// Batch groups.
     pub batch_group_count: usize,
 }
 
@@ -53,10 +65,16 @@ pub enum ShardingAttr {
     /// `{replicated}` — every chip holds the full value.
     Replicated,
     /// `{maximal device=N}` — the value lives on one device.
-    Maximal { device: usize },
+    Maximal {
+        /// The owning device id.
+        device: usize,
+    },
     /// `{devices=[a,b,...]...}` — tiled: `mesh[i]` shards along tensor
     /// axis `i` (trailing iota/permutation device lists are ignored).
-    Devices { mesh: Vec<usize> },
+    Devices {
+        /// Shards along each tensor axis.
+        mesh: Vec<usize>,
+    },
 }
 
 impl ShardingAttr {
@@ -176,16 +194,22 @@ impl OpInfo {
 /// A parsed function: signature plus op sequence.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FuncInfo {
+    /// Function symbol name (no `@`).
     pub name: String,
+    /// Argument tensor types, in order.
     pub arg_types: Vec<TensorType>,
+    /// Result tensor types, in order.
     pub result_types: Vec<TensorType>,
+    /// Body operations in SSA order.
     pub ops: Vec<OpInfo>,
 }
 
 /// A parsed module: one or more functions (entry point is usually `main`).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct ModuleInfo {
+    /// Module symbol name (no `@`).
     pub name: String,
+    /// Functions, entry usually named `main`.
     pub funcs: Vec<FuncInfo>,
 }
 

@@ -6,22 +6,36 @@ use anyhow::{bail, Result};
 /// Element data type of a tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// Brain float 16.
     Bf16,
+    /// IEEE half.
     F16,
+    /// IEEE single.
     F32,
+    /// IEEE double.
     F64,
+    /// 1-bit predicate.
     I1,
+    /// Signed 8-bit.
     I8,
+    /// Signed 16-bit.
     I16,
+    /// Signed 32-bit.
     I32,
+    /// Signed 64-bit.
     I64,
+    /// Unsigned 8-bit.
     U8,
+    /// Unsigned 16-bit.
     U16,
+    /// Unsigned 32-bit.
     U32,
+    /// Unsigned 64-bit.
     U64,
 }
 
 impl DType {
+    /// Parse a StableHLO element-type name (`bf16`, `f32`, ...).
     pub fn parse(s: &str) -> Option<DType> {
         Some(match s {
             "bf16" => DType::Bf16,
@@ -41,6 +55,7 @@ impl DType {
         })
     }
 
+    /// The StableHLO spelling.
     pub fn name(&self) -> &'static str {
         match self {
             DType::Bf16 => "bf16",
@@ -69,6 +84,7 @@ impl DType {
         }
     }
 
+    /// Is this a floating-point type?
     pub fn is_float(&self) -> bool {
         matches!(self, DType::Bf16 | DType::F16 | DType::F32 | DType::F64)
     }
@@ -83,15 +99,19 @@ impl std::fmt::Display for DType {
 /// A ranked tensor type: shape + element type. Scalars have rank 0.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct TensorType {
+    /// Dimensions, outermost first (empty = scalar).
     pub dims: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 impl TensorType {
+    /// A tensor type from explicit dims and element type.
     pub fn new(dims: Vec<usize>, dtype: DType) -> TensorType {
         TensorType { dims, dtype }
     }
 
+    /// A rank-0 tensor.
     pub fn scalar(dtype: DType) -> TensorType {
         TensorType { dims: vec![], dtype }
     }
@@ -101,10 +121,12 @@ impl TensorType {
         self.dims.iter().map(|&d| d as u64).product()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.dims.len()
     }
 
+    /// Total byte footprint (elements x element width).
     pub fn size_bytes(&self) -> u64 {
         self.num_elements() * self.dtype.bytes() as u64
     }

@@ -18,16 +18,21 @@ use super::schedule::{place, ready_time, Placement, SchedNode};
 pub struct ScheduledOp {
     /// Index of the source op within its function.
     pub index: usize,
+    /// Display name of the op.
     pub op_name: String,
     /// `None` for zero-width ops (no engine occupied).
     pub engine: Option<Engine>,
+    /// Cost carried from the estimate row, µs.
     pub latency_us: f64,
+    /// Placed start time, µs.
     pub start_us: f64,
+    /// Placed finish time, µs.
     pub end_us: f64,
     /// Dependence slack against the realized makespan (>= 0).
     pub slack_us: f64,
     /// Cost-model tag (an `EstimateSource` tag or `"call"`).
     pub source: &'static str,
+    /// Shape/context note carried from the estimate.
     pub note: String,
 }
 
@@ -66,11 +71,96 @@ impl ScheduledOp {
     }
 }
 
+/// Roofline verdict for one op: which resource its time is dominated by.
+///
+/// An op is *bandwidth-bound* when the HBM traffic behind it (DMA-in +
+/// DMA-out, as modeled by [`crate::memory`]) takes longer than its
+/// compute; ops with neither compute nor traffic are *free*.
+pub fn op_bound(compute_us: f64, dma_us: f64) -> &'static str {
+    if compute_us <= 0.0 && dma_us <= 0.0 {
+        "free"
+    } else if dma_us > compute_us {
+        "bandwidth"
+    } else {
+        "compute"
+    }
+}
+
+/// Aggregate roofline summary over a memory-aware schedule: how many ops
+/// land on each side of the compute-vs-bandwidth roofline, and the busy
+/// time each side contributes. Built by
+/// [`schedule_estimate_memory`](crate::memory::schedule_estimate_memory);
+/// reported by the CLI and the `serve` module responses.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RooflineSummary {
+    /// Ops whose compute time dominates their HBM traffic.
+    pub compute_bound: usize,
+    /// Ops whose HBM traffic dominates their compute time.
+    pub bandwidth_bound: usize,
+    /// Ops with neither compute nor traffic.
+    pub free_ops: usize,
+    /// Total compute time across all ops, µs.
+    pub compute_us: f64,
+    /// Total DMA (HBM traffic) time across all ops, µs.
+    pub dma_us: f64,
+}
+
+impl RooflineSummary {
+    /// Fold one op's compute/DMA split into the summary.
+    pub fn record(&mut self, compute_us: f64, dma_us: f64) {
+        match op_bound(compute_us, dma_us) {
+            "bandwidth" => self.bandwidth_bound += 1,
+            "compute" => self.compute_bound += 1,
+            _ => self.free_ops += 1,
+        }
+        self.compute_us += compute_us;
+        self.dma_us += dma_us;
+    }
+
+    /// Whole-module verdict: which side dominates the total busy time.
+    pub fn verdict(&self) -> &'static str {
+        if self.dma_us > self.compute_us {
+            "bandwidth-bound"
+        } else {
+            "compute-bound"
+        }
+    }
+
+    /// One human-readable summary line.
+    pub fn render(&self) -> String {
+        format!(
+            "roofline: {} compute-bound / {} bandwidth-bound / {} free ops; compute {:.2} us vs dma {:.2} us => {}",
+            self.compute_bound,
+            self.bandwidth_bound,
+            self.free_ops,
+            self.compute_us,
+            self.dma_us,
+            self.verdict()
+        )
+    }
+
+    /// The summary as a JSON object (the `roofline` payload of `--json`
+    /// and `serve` module responses).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("compute_bound", Json::Num(self.compute_bound as f64))
+            .set("bandwidth_bound", Json::Num(self.bandwidth_bound as f64))
+            .set("free", Json::Num(self.free_ops as f64))
+            .set("compute_us", Json::Num(self.compute_us))
+            .set("dma_us", Json::Num(self.dma_us))
+            .set("verdict", Json::Str(self.verdict().to_string()));
+        j
+    }
+}
+
 /// Busy/idle accounting for one engine over the whole schedule.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineUsage {
+    /// The engine accounted.
     pub engine: Engine,
+    /// Summed cost of ops placed here, µs.
     pub busy_us: f64,
+    /// Makespan minus busy time, µs.
     pub idle_us: f64,
     /// Ops placed on this engine.
     pub ops: usize,
@@ -91,13 +181,16 @@ impl EngineUsage {
 /// A whole-module schedule plus its analyses.
 #[derive(Debug, Clone)]
 pub struct ModuleSchedule {
+    /// Module the schedule covers.
     pub module_name: String,
+    /// Engine configuration scheduled onto.
     pub config: EngineConfig,
     /// When the last engine goes idle.
     pub makespan_us: f64,
     /// Longest dependence chain ignoring engine contention: no schedule
     /// on any engine set can beat this.
     pub critical_path_us: f64,
+    /// Per-node rows in node order.
     pub ops: Vec<ScheduledOp>,
     /// One entry per engine in `config.engines()`, in display order.
     pub engines: Vec<EngineUsage>,

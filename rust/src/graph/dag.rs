@@ -35,6 +35,7 @@ pub struct DepGraph {
 }
 
 impl DepGraph {
+    /// Build the dependence DAG of one function.
     pub fn build(func: &FuncInfo) -> DepGraph {
         let producer = producer_map(func);
         let n = func.ops.len();
@@ -60,6 +61,7 @@ impl DepGraph {
         self.preds.len()
     }
 
+    /// True for an empty function.
     pub fn is_empty(&self) -> bool {
         self.preds.is_empty()
     }

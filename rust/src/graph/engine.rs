@@ -36,6 +36,7 @@ pub enum Engine {
 }
 
 impl Engine {
+    /// Every engine, in lane order.
     pub const ALL: [Engine; 5] = [
         Engine::Mxu,
         Engine::Vpu,
@@ -44,6 +45,7 @@ impl Engine {
         Engine::Unified,
     ];
 
+    /// Lowercase engine name.
     pub fn name(&self) -> &'static str {
         match self {
             Engine::Mxu => "mxu",
@@ -85,6 +87,7 @@ pub enum EngineConfig {
 }
 
 impl EngineConfig {
+    /// Lowercase configuration name.
     pub fn name(&self) -> &'static str {
         match self {
             EngineConfig::Serialized => "serialized",

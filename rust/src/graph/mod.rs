@@ -22,7 +22,9 @@ pub mod dag;
 pub mod engine;
 pub mod schedule;
 
-pub use analysis::{critical_path, EngineUsage, ModuleSchedule, ScheduledOp};
+pub use analysis::{
+    critical_path, op_bound, EngineUsage, ModuleSchedule, RooflineSummary, ScheduledOp,
+};
 pub use dag::{producer_map, DepGraph};
 pub use engine::{Engine, EngineConfig};
 pub use schedule::{place, schedule_estimate, schedule_module, Placement, SchedNode};

@@ -29,9 +29,11 @@ pub struct SchedNode {
     /// Index of the source op within its function (synthetic nodes reuse
     /// their producer's index).
     pub index: usize,
+    /// Display name of the op (or synthetic segment).
     pub op_name: String,
     /// `None` = zero-width: finishes the instant its operands are ready.
     pub engine: Option<Engine>,
+    /// Time the node occupies its engine, µs.
     pub cost_us: f64,
     /// Node ids (positions in the node list) this node depends on; every
     /// entry must be smaller than the node's own position.
@@ -41,13 +43,16 @@ pub struct SchedNode {
     ///
     /// [`EstimateSource`]: crate::coordinator::EstimateSource
     pub source: &'static str,
+    /// Shape/context note carried from the estimate.
     pub note: String,
 }
 
 /// Where one node landed on the timeline.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Placement {
+    /// Placed start time, µs.
     pub start_us: f64,
+    /// Placed finish time, µs.
     pub end_us: f64,
 }
 
@@ -86,8 +91,9 @@ pub fn place(nodes: &[SchedNode]) -> Vec<Placement> {
 /// An inlined call into a private sub-function (mirrors the condition
 /// `Estimator::estimate_func` uses at entry depth): the estimate row
 /// holds the callee's whole inlined cost, and the scheduler treats it
-/// as one opaque compute block.
-fn is_inlined_call(op: &OpInfo) -> bool {
+/// as one opaque compute block. Shared with the memory-aware expansion
+/// in [`crate::memory`], which must route calls identically.
+pub(crate) fn is_inlined_call(op: &OpInfo) -> bool {
     (op.short_name() == "call" || op.op_name == "func.call") && op.callee.is_some()
 }
 

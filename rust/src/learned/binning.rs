@@ -68,9 +68,11 @@ impl BinMapper {
 /// Binned training matrix: column-major bins plus the mappers.
 #[derive(Debug, Clone)]
 pub struct BinnedMatrix {
+    /// One mapper per feature column.
     pub mappers: Vec<BinMapper>,
     /// `bins[f][i]` = bin of sample i's feature f.
     pub bins: Vec<Vec<u16>>,
+    /// Rows the mappers were fit on.
     pub num_samples: usize,
 }
 

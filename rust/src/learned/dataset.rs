@@ -11,11 +11,14 @@ use crate::util::prng::Prng;
 /// One measured sample: a tensor shape and its (median) latency.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Sample {
+    /// Tensor shape of the measured kernel.
     pub dims: Vec<usize>,
+    /// Median measured latency, µs.
     pub latency_us: f64,
 }
 
 impl Sample {
+    /// Element count of the shape.
     pub fn num_elements(&self) -> u64 {
         self.dims.iter().map(|&d| d as u64).product::<u64>().max(1)
     }
@@ -24,11 +27,14 @@ impl Sample {
 /// A labelled dataset for one operator.
 #[derive(Debug, Clone, Default)]
 pub struct Dataset {
+    /// Operator the samples measure (e.g. `add`).
     pub op_name: String,
+    /// Measured (shape, latency) pairs.
     pub samples: Vec<Sample>,
 }
 
 impl Dataset {
+    /// An empty dataset for one operator.
     pub fn new(op_name: &str) -> Dataset {
         Dataset {
             op_name: op_name.to_string(),
@@ -36,14 +42,17 @@ impl Dataset {
         }
     }
 
+    /// Append one measurement.
     pub fn push(&mut self, dims: Vec<usize>, latency_us: f64) {
         self.samples.push(Sample { dims, latency_us });
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when no sample was recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }

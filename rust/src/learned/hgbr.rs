@@ -19,9 +19,13 @@ use crate::util::prng::Prng;
 /// Training hyper-parameters.
 #[derive(Debug, Clone)]
 pub struct HgbrParams {
+    /// Boosting rounds (trees).
     pub max_iter: usize,
+    /// Shrinkage per boosting round.
     pub learning_rate: f64,
+    /// Histogram bins per feature.
     pub max_bins: usize,
+    /// Per-tree growth limits.
     pub tree: TreeParams,
     /// Fraction of training data held out for early stopping (0 = off).
     pub validation_fraction: f64,
@@ -51,9 +55,13 @@ impl Default for HgbrParams {
 /// A fitted model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Hgbr {
+    /// Base prediction (mean of the target).
     pub base: f64,
+    /// Shrinkage the trees were fit with.
     pub learning_rate: f64,
+    /// Boosted trees, applied in order.
     pub trees: Vec<Tree>,
+    /// Model was fit in log-latency space.
     pub log_target: bool,
     /// Names of the input features (documentation + sanity checks).
     pub feature_names: Vec<String>,
@@ -174,10 +182,12 @@ impl Hgbr {
         rows.iter().map(|r| self.predict(r)).collect()
     }
 
+    /// Number of boosted trees.
     pub fn num_trees(&self) -> usize {
         self.trees.len()
     }
 
+    /// Serialize for the asset files.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("base", Json::Num(self.base))
@@ -199,6 +209,7 @@ impl Hgbr {
         o
     }
 
+    /// Deserialize from the asset files.
     pub fn from_json(j: &Json) -> Result<Hgbr, JsonError> {
         let trees = j
             .req_arr("trees")?

@@ -12,10 +12,12 @@ use super::dataset::Dataset;
 /// Latency = α · elements + β.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinearLatencyModel {
+    /// OLS fit of latency vs element count.
     pub fit: LinearFit,
 }
 
 impl LinearLatencyModel {
+    /// Fit the baseline on a dataset (None when degenerate).
     pub fn fit(dataset: &Dataset) -> Option<LinearLatencyModel> {
         let x: Vec<f64> = dataset
             .samples
@@ -26,11 +28,13 @@ impl LinearLatencyModel {
         LinearFit::fit(&x, &y).map(|fit| LinearLatencyModel { fit })
     }
 
+    /// Predicted latency for a shape, µs.
     pub fn predict(&self, dims: &[usize]) -> f64 {
         let elems: u64 = dims.iter().map(|&d| d as u64).product::<u64>().max(1);
         self.fit.predict(elems as f64).max(0.0)
     }
 
+    /// Predictions for every sample in the dataset.
     pub fn predict_dataset(&self, dataset: &Dataset) -> Vec<f64> {
         dataset.samples.iter().map(|s| self.predict(&s.dims)).collect()
     }

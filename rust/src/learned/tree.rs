@@ -17,14 +17,20 @@ use crate::util::json::{Json, JsonError};
 /// value), leaves carry a prediction.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Node {
+    /// An internal split node.
     Split {
+        /// Feature column index the split tests.
         feature: usize,
         /// Raw-value threshold: x <= threshold → left.
         threshold: f64,
+        /// Arena index of the left (x <= threshold) child.
         left: usize,
+        /// Arena index of the right child.
         right: usize,
     },
+    /// A terminal prediction node.
     Leaf {
+        /// Predicted value (residual contribution).
         value: f64,
     },
 }
@@ -32,14 +38,18 @@ pub enum Node {
 /// A fitted regression tree (arena-allocated nodes, root = index 0).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tree {
+    /// Flat node storage; index 0 is the root.
     pub nodes: Vec<Node>,
 }
 
 /// Hyper-parameters for one tree fit.
 #[derive(Debug, Clone, Copy)]
 pub struct TreeParams {
+    /// Leaf budget per tree.
     pub max_leaves: usize,
+    /// Depth cap.
     pub max_depth: usize,
+    /// Minimum samples a leaf may hold.
     pub min_samples_leaf: usize,
     /// L2 regularisation λ on leaf values.
     pub l2: f64,
@@ -160,6 +170,7 @@ impl Tree {
         }
     }
 
+    /// Number of leaf nodes.
     pub fn num_leaves(&self) -> usize {
         self.nodes
             .iter()
@@ -167,6 +178,7 @@ impl Tree {
             .count()
     }
 
+    /// Serialize for the asset files.
     pub fn to_json(&self) -> Json {
         let nodes: Vec<Json> = self
             .nodes
@@ -197,6 +209,7 @@ impl Tree {
         o
     }
 
+    /// Deserialize from the asset files.
     pub fn from_json(j: &Json) -> Result<Tree, JsonError> {
         let arr = j.req_arr("nodes")?;
         let mut nodes = Vec::with_capacity(arr.len());

@@ -26,9 +26,14 @@
 //!   with compute.
 //! * [`graph`] — the SSA dependence DAG and the multi-engine list
 //!   scheduler (MXU/VPU/DMA/ICI) with critical-path and slack analysis.
+//! * [`memory`] — the memory-aware DMA timeline: HBM traffic behind
+//!   every op, tensor residency (bounded buffer, LRU eviction) and the
+//!   compute-vs-bandwidth roofline.
 //! * [`workloads`] — the paper's sweep generators.
 //! * [`report`] — tables, CSV and ASCII scatter plots for every figure.
 //! * [`util`] — std-only infrastructure (JSON, PRNG, stats, args).
+
+#![warn(missing_docs)]
 
 pub mod calibrate;
 pub mod coordinator;
@@ -37,6 +42,7 @@ pub mod experiments;
 pub mod frontend;
 pub mod graph;
 pub mod learned;
+pub mod memory;
 pub mod report;
 pub mod runtime;
 pub mod scalesim;

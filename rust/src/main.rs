@@ -11,12 +11,13 @@ use anyhow::{bail, Context, Result};
 use scalesim_tpu::calibrate::Regime;
 use scalesim_tpu::coordinator::{default_workers, serve_lines, serve_stream, StreamOptions};
 use scalesim_tpu::distributed::{
-    estimate_gemm_sliced, estimate_module_distributed, DistributedEstimate, IciTopology,
-    SliceConfig, DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
+    estimate_gemm_sliced, estimate_module_distributed, estimate_module_distributed_memory,
+    DistributedEstimate, IciTopology, SliceConfig, DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
 };
 use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
 use scalesim_tpu::frontend::parse_module;
 use scalesim_tpu::graph::{schedule_estimate, EngineConfig, ModuleSchedule};
+use scalesim_tpu::memory::{schedule_estimate_memory, MemoryConfig, MemorySchedule};
 use scalesim_tpu::report::{write_output, Table};
 use scalesim_tpu::util::json::Json;
 use scalesim_tpu::scalesim::{
@@ -52,8 +53,21 @@ Toolchain:
                                    schedule start/end and engine) as one
                                    JSON object
            [--timeline]            print the serialized schedule timeline
+                                   (with --memory also the expanded
+                                   DMA-in/compute/DMA-out timeline)
            [--fused]               (kept for compat; the fused total is
                                    always reported now)
+           [--memory]              memory-aware DMA timeline: every op's
+                                   cold operands pay HBM traffic on the
+                                   DMA engine, values consumed while
+                                   resident (bounded LRU buffer) skip the
+                                   re-fetch; reports makespan, residency
+                                   stats and the compute-vs-bandwidth
+                                   roofline (works with --chips too)
+           [--vmem-mb MB]          residency buffer for --memory
+                                   (default 32 MiB)
+           [--hbm-gbps G]          HBM bandwidth for --memory (default:
+                                   the estimator's 1200 GB/s)
            [--chips N]             distribute across an N-chip slice:
            [--ici-gbps G]          per-link ICI bandwidth (default 100)
            [--ici-topology T]      ring | torus | XxY (default ring)
@@ -113,6 +127,32 @@ fn make_config(args: &Args) -> Result<ScaleConfig> {
 
 fn out_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("out", "results"))
+}
+
+/// Memory config from `--memory/--vmem-mb/--hbm-gbps`; `None` when
+/// `--memory` is absent. The knobs are read unconditionally so they
+/// never trip the unknown-option warning.
+fn make_memory(args: &Args, default_bytes_per_us: f64) -> Result<Option<MemoryConfig>> {
+    let vmem_mb = args.f64_or(
+        "vmem-mb",
+        MemoryConfig::DEFAULT_BUFFER_BYTES as f64 / (1024.0 * 1024.0),
+    );
+    // 1 GB/s == 1e3 bytes/us.
+    let bytes_per_us = args.f64_or("hbm-gbps", default_bytes_per_us / 1e3) * 1e3;
+    if !args.flag("memory") {
+        return Ok(None);
+    }
+    // Mirror SliceConfig::validate: a non-positive bandwidth would make
+    // DMA costs negative/infinite and silently break the exact
+    // compute-only <= memory-aware <= serialized-bound bracket.
+    if !bytes_per_us.is_finite() || bytes_per_us <= 0.0 {
+        bail!("--hbm-gbps must be a positive number");
+    }
+    if !vmem_mb.is_finite() || vmem_mb < 0.0 {
+        bail!("--vmem-mb must be non-negative");
+    }
+    let buffer = (vmem_mb * 1024.0 * 1024.0) as u64;
+    Ok(Some(MemoryConfig::new(bytes_per_us, Some(buffer))))
 }
 
 /// Slice config from `--chips/--ici-*`; `None` when `--chips` is absent.
@@ -232,24 +272,39 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let module = parse_module(&text)?;
 
         if let Some(slice) = make_slice(args)? {
-            let d = estimate_module_distributed(&est, &module, &slice);
+            let mem = make_memory(args, est.hbm_bytes_per_us())?;
+            let d = match &mem {
+                Some(m) => estimate_module_distributed_memory(&est, &module, &slice, m),
+                None => estimate_module_distributed(&est, &module, &slice),
+            };
             if args.flag("json") {
-                println!("{}", distributed_json(&d, &slice).dump());
+                println!("{}", distributed_json(&d, &slice, mem.is_some()).dump());
                 return Ok(());
             }
-            let mut t = Table::new(&[
-                "#", "op", "compute us", "ici us", "start us", "finish us", "note",
-            ]);
+            // The `dma us` column appears only under --memory (the
+            // memory-blind table keeps its historical shape).
+            let mut headers = vec!["#", "op", "compute us", "ici us"];
+            if mem.is_some() {
+                headers.push("dma us");
+            }
+            headers.extend(["start us", "finish us", "note"]);
+            let mut t = Table::new(&headers);
             for op in &d.ops {
-                t.row(&[
+                let mut cells = vec![
                     op.index.to_string(),
                     op.op_name.clone(),
                     format!("{:.3}", op.compute_us),
                     format!("{:.3}", op.collective_us),
+                ];
+                if mem.is_some() {
+                    cells.push(format!("{:.3}", op.dma_us));
+                }
+                cells.extend([
                     format!("{:.3}", op.start_us),
                     format!("{:.3}", op.finish_us),
                     op.note.clone(),
                 ]);
+                t.row(&cells);
             }
             println!("{}", t.markdown());
             println!(
@@ -262,6 +317,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 d.collective_us,
                 d.overlapped_us()
             );
+            if mem.is_some() {
+                println!(
+                    "memory-aware: {:.2} us per-chip dma busy (HBM traffic behind the sharded ops)",
+                    d.dma_us
+                );
+            }
             let util = |busy: f64| {
                 if d.total_us > 0.0 {
                     100.0 * busy / d.total_us
@@ -289,11 +350,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let report = est.estimate_module(&module);
         let fused = scalesim_tpu::coordinator::estimate_fused_with(&module, report.clone());
         let sched = schedule_estimate(&module, &report, EngineConfig::Tpu);
+        let mem = make_memory(args, est.hbm_bytes_per_us())?
+            .map(|m| schedule_estimate_memory(&module, &report, EngineConfig::Tpu, &m));
         // The fused total is always reported now; the old flag stays
         // accepted so existing invocations keep working.
         let _ = args.flag("fused");
         if args.flag("json") {
-            println!("{}", module_json(&report, &fused, &sched).dump());
+            println!("{}", module_json(&report, &fused, &sched, mem.as_ref()).dump());
             return Ok(());
         }
         let mut t = Table::new(&[
@@ -319,6 +382,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("{}", t.markdown());
         if args.flag("timeline") {
             println!("{}", sched.render_timeline());
+            if let Some(m) = &mem {
+                println!("{}", m.schedule.render_timeline());
+            }
         }
         println!(
             "module @{}: unfused {:.2} us (systolic {:.2}, elementwise {:.2}, other {:.2}); fused {:.2} us; scheduled {:.2} us (critical path {:.2} us); model coverage {:.0}%",
@@ -346,6 +412,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             })
             .collect();
         println!("engine utilization: {}", engines.join("; "));
+        if let Some(m) = &mem {
+            println!("{}", m.render_summary(sched.makespan_us));
+        }
         return Ok(());
     }
 
@@ -462,19 +531,29 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 /// The single-chip `simulate --module --json` payload: the full per-op
-/// estimate table merged with the schedule (engine, start/end, slack).
+/// estimate table merged with the schedule (engine, start/end, slack)
+/// and, under `--memory`, the per-op DMA/residency fields plus the
+/// module-level memory and roofline blocks.
 fn module_json(
     report: &scalesim_tpu::coordinator::ModelEstimate,
     fused: &scalesim_tpu::coordinator::ModelEstimate,
     sched: &ModuleSchedule,
+    mem: Option<&MemorySchedule>,
 ) -> Json {
     // The schedule rows carry the estimate's cost/source/note verbatim
     // (schedule_estimate reuses them); only `cycles` is estimator-only.
     let mut ops = Vec::with_capacity(report.ops.len());
-    for (op, s) in report.ops.iter().zip(&sched.ops) {
+    for (i, (op, s)) in report.ops.iter().zip(&sched.ops).enumerate() {
         let mut o = s.to_json();
         if let Some(c) = op.cycles {
             o.set("cycles", Json::Num(c as f64));
+        }
+        if let Some(m) = mem {
+            let row = &m.ops[i];
+            o.set("dma_in_us", Json::Num(row.dma_in_us))
+                .set("dma_out_us", Json::Num(row.dma_out_us))
+                .set("resident", Json::Bool(row.resident()))
+                .set("bound", Json::Str(row.bound().to_string()));
         }
         ops.push(o);
     }
@@ -490,11 +569,18 @@ fn module_json(
         .set("coverage", Json::Num(report.coverage()))
         .set("engines", sched.engines_to_json())
         .set("ops", Json::Arr(ops));
+    if let Some(m) = mem {
+        j.set("memory_us", Json::Num(m.makespan_us()))
+            .set("memory", m.to_json())
+            .set("roofline", m.roofline_json());
+    }
     j
 }
 
-/// The distributed `simulate --module --chips N --json` payload.
-fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig) -> Json {
+/// The distributed `simulate --module --chips N --json` payload. The
+/// `dma_us` keys appear only for memory-aware runs, keeping the
+/// memory-blind schema identical to the pre-memory one.
+fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig, with_memory: bool) -> Json {
     let mut ops = Vec::with_capacity(d.ops.len());
     for op in &d.ops {
         let mut o = Json::obj();
@@ -505,6 +591,9 @@ fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig) -> Json {
             .set("start_us", Json::Num(op.start_us))
             .set("finish_us", Json::Num(op.finish_us))
             .set("note", Json::Str(op.note.clone()));
+        if with_memory {
+            o.set("dma_us", Json::Num(op.dma_us));
+        }
         ops.push(o);
     }
     let mut j = Json::obj();
@@ -521,6 +610,9 @@ fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig) -> Json {
         .set("speedup", Json::Num(d.speedup()))
         .set("parallel_efficiency", Json::Num(d.parallel_efficiency()))
         .set("ops", Json::Arr(ops));
+    if with_memory {
+        j.set("dma_us", Json::Num(d.dma_us));
+    }
     j
 }
 

@@ -1,0 +1,38 @@
+//! Memory-aware DMA timeline: HBM traffic modeling with tensor
+//! residency.
+//!
+//! The dependence-graph scheduler ([`crate::graph`]) overlaps compute
+//! across engines but only places *explicit* data-movement ops on the
+//! DMA engine; the HBM bytes behind every GEMM and elementwise op are
+//! invisible to it. This subsystem makes that traffic first-class:
+//!
+//! * [`residency`] — the bounded on-chip tensor buffer with LRU
+//!   eviction ([`ResidencyTracker`]): values consumed by their SSA
+//!   successors while still resident skip the re-fetch;
+//! * [`timeline`] — the DMA expansion ([`DmaTimeline`]): every op grows
+//!   DMA-in / compute / DMA-out sub-nodes, cold operands pay
+//!   `bytes / hbm_bytes_per_us` on the DMA engine, and the expanded
+//!   node list goes through the *existing* list scheduler. The result
+//!   ([`MemorySchedule`]) carries per-op traffic rows, residency stats
+//!   and a compute-vs-bandwidth roofline
+//!   ([`crate::graph::RooflineSummary`]).
+//!
+//! Exact invariants (property-tested in `tests/memory_model.rs` over
+//! random DAGs and every checked-in `.mlir` fixture):
+//!
+//! * compute-only makespan `<=` memory-aware makespan `<=`
+//!   compute + total cold traffic serialized
+//!   ([`MemorySchedule::serialized_bound_us`]);
+//! * [`MemoryConfig::infinite`] reproduces the compute-only schedule
+//!   bit for bit;
+//! * a zero-byte buffer never hits, and no buffer out-hits the
+//!   unbounded one.
+
+pub mod residency;
+pub mod timeline;
+
+pub use residency::{Evicted, InsertOutcome, ResidencyStats, ResidencyTracker};
+pub use timeline::{
+    schedule_estimate_memory, schedule_module_memory, DmaTimeline, FetchDma, MemoryConfig,
+    MemorySchedule, MemoryStats, OpMemory, RetireDma,
+};

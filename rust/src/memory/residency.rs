@@ -1,0 +1,347 @@
+//! The tensor-residency tracker: a bounded on-chip buffer with LRU
+//! eviction.
+//!
+//! The tracker answers one question for the DMA timeline: *is this SSA
+//! value already on chip?* Values are keyed by their SSA id, occupy
+//! their tensor's byte footprint, and are evicted least-recently-used
+//! when an insertion would overflow the buffer. Entries can be *pinned*
+//! for the duration of one insertion (an op's live operands must not be
+//! evicted to make room for each other), and carry a *dirty* bit so the
+//! caller knows whether an eviction owes a write-back to HBM.
+//!
+//! The tracker is pure mechanism: it never touches the clock or the
+//! schedule. All decisions depend only on the access order, so a given
+//! program always produces the same residency trace — the property the
+//! memory-model invariants in `tests/memory_model.rs` build on.
+
+use std::collections::HashMap;
+
+/// One value evicted by [`ResidencyTracker::insert`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Evicted {
+    /// SSA id of the evicted value.
+    pub id: String,
+    /// Byte footprint it freed.
+    pub bytes: u64,
+    /// True if the on-chip copy was newer than HBM (write-back owed).
+    pub dirty: bool,
+}
+
+/// Result of one [`ResidencyTracker::insert`] call.
+#[derive(Debug, Clone, Default)]
+pub struct InsertOutcome {
+    /// False when the value could not fit (larger than the whole buffer,
+    /// or everything evictable was pinned). Nothing is evicted then.
+    pub inserted: bool,
+    /// Values evicted (LRU first) to make room, empty unless `inserted`.
+    pub evicted: Vec<Evicted>,
+}
+
+/// Aggregate counters over a tracker's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Accesses that found the value resident.
+    pub hits: usize,
+    /// Accesses that missed (cold).
+    pub misses: usize,
+    /// Values evicted to make room for insertions.
+    pub evictions: usize,
+    /// Insertions refused because the value could not fit.
+    pub rejected: usize,
+    /// High-water mark of resident bytes.
+    pub peak_resident_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: u64,
+    dirty: bool,
+}
+
+/// A bounded on-chip tensor buffer with LRU eviction.
+///
+/// ```
+/// use scalesim_tpu::memory::ResidencyTracker;
+///
+/// let mut t = ResidencyTracker::new(Some(100));
+/// assert!(!t.access("a"), "first touch is cold");
+/// t.insert("a", 60, false, &[]);
+/// assert!(t.access("a"), "now resident");
+///
+/// // Inserting 60 more bytes into the 100-byte buffer evicts `a`.
+/// let out = t.insert("b", 60, true, &[]);
+/// assert!(out.inserted);
+/// assert_eq!(out.evicted.len(), 1);
+/// assert_eq!(out.evicted[0].id, "a");
+/// assert!(!t.access("a"), "evicted values are cold again");
+///
+/// // A pinned value cannot be evicted: the insert is refused instead.
+/// let pins = ["b".to_string()];
+/// let refused = t.insert("c", 60, false, &pins);
+/// assert!(!refused.inserted);
+/// assert!(refused.evicted.is_empty());
+/// ```
+#[derive(Debug, Clone)]
+pub struct ResidencyTracker {
+    /// Buffer capacity in bytes; `None` is unbounded.
+    capacity: Option<u64>,
+    /// Resident bytes right now.
+    used: u64,
+    /// Ids in recency order: front = least recently used.
+    order: Vec<String>,
+    entries: HashMap<String, Entry>,
+    stats: ResidencyStats,
+}
+
+impl ResidencyTracker {
+    /// New tracker with `capacity` bytes of on-chip buffer (`None` =
+    /// unbounded).
+    pub fn new(capacity: Option<u64>) -> ResidencyTracker {
+        ResidencyTracker {
+            capacity,
+            used: 0,
+            order: Vec::new(),
+            entries: HashMap::new(),
+            stats: ResidencyStats::default(),
+        }
+    }
+
+    /// Is `id` resident? Does not touch recency or counters.
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.contains_key(id)
+    }
+
+    /// Resident bytes right now.
+    pub fn resident_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Number of resident values.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> ResidencyStats {
+        self.stats
+    }
+
+    /// Record one access: returns true (and refreshes recency) on a hit,
+    /// false on a miss. Misses do not insert — see [`Self::insert`].
+    pub fn access(&mut self, id: &str) -> bool {
+        if self.entries.contains_key(id) {
+            self.stats.hits += 1;
+            self.touch(id);
+            true
+        } else {
+            self.stats.misses += 1;
+            false
+        }
+    }
+
+    /// Move `id` to the most-recently-used position (no counters).
+    fn touch(&mut self, id: &str) {
+        if let Some(pos) = self.order.iter().position(|x| x == id) {
+            let v = self.order.remove(pos);
+            self.order.push(v);
+        }
+    }
+
+    /// Insert `id` (`bytes` wide), evicting least-recently-used unpinned
+    /// values as needed. `dirty` marks the on-chip copy as newer than
+    /// HBM. Re-inserting a resident value refreshes recency and ors the
+    /// dirty bit. When the value cannot fit — it is larger than the
+    /// whole buffer, or freeing enough would require evicting a pinned
+    /// value — nothing is evicted and `inserted` is false.
+    pub fn insert(
+        &mut self,
+        id: &str,
+        bytes: u64,
+        dirty: bool,
+        pinned: &[String],
+    ) -> InsertOutcome {
+        if let Some(e) = self.entries.get_mut(id) {
+            e.dirty = e.dirty || dirty;
+            self.touch(id);
+            return InsertOutcome {
+                inserted: true,
+                evicted: Vec::new(),
+            };
+        }
+        if let Some(cap) = self.capacity {
+            if bytes > cap {
+                self.stats.rejected += 1;
+                return InsertOutcome::default();
+            }
+            if self.used + bytes > cap {
+                // Plan the eviction run LRU-first; commit only if it frees
+                // enough without touching a pinned value's slot.
+                let need = self.used + bytes - cap;
+                let mut freed = 0u64;
+                let mut victims: Vec<String> = Vec::new();
+                for vid in &self.order {
+                    if freed >= need {
+                        break;
+                    }
+                    if pinned.iter().any(|p| p == vid) {
+                        continue;
+                    }
+                    freed += self.entries[vid].bytes;
+                    victims.push(vid.clone());
+                }
+                if freed < need {
+                    self.stats.rejected += 1;
+                    return InsertOutcome::default();
+                }
+                let mut evicted = Vec::with_capacity(victims.len());
+                for vid in victims {
+                    let entry = self.entries.remove(&vid).expect("victim resident");
+                    self.used -= entry.bytes;
+                    self.order.retain(|x| x != &vid);
+                    self.stats.evictions += 1;
+                    evicted.push(Evicted {
+                        id: vid,
+                        bytes: entry.bytes,
+                        dirty: entry.dirty,
+                    });
+                }
+                self.finish_insert(id, bytes, dirty);
+                return InsertOutcome {
+                    inserted: true,
+                    evicted,
+                };
+            }
+        }
+        self.finish_insert(id, bytes, dirty);
+        InsertOutcome {
+            inserted: true,
+            evicted: Vec::new(),
+        }
+    }
+
+    fn finish_insert(&mut self, id: &str, bytes: u64, dirty: bool) {
+        self.entries.insert(id.to_string(), Entry { bytes, dirty });
+        self.order.push(id.to_string());
+        self.used += bytes;
+        self.stats.peak_resident_bytes = self.stats.peak_resident_bytes.max(self.used);
+    }
+
+    /// Drop `id` without eviction accounting (a dead value: its last
+    /// consumer has run). Returns true if it was resident.
+    pub fn remove(&mut self, id: &str) -> bool {
+        match self.entries.remove(id) {
+            Some(e) => {
+                self.used -= e.bytes;
+                self.order.retain(|x| x != id);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_recency() {
+        let mut t = ResidencyTracker::new(Some(100));
+        assert!(!t.access("a"));
+        assert!(t.insert("a", 40, false, &[]).inserted);
+        assert!(t.access("a"));
+        assert!(t.insert("b", 40, false, &[]).inserted);
+        // Touch `a` so `b` becomes LRU; inserting 40 more evicts `b`.
+        assert!(t.access("a"));
+        let out = t.insert("c", 40, false, &[]);
+        assert!(out.inserted);
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(out.evicted[0].id, "b");
+        assert!(t.contains("a") && t.contains("c") && !t.contains("b"));
+        let s = t.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 1, 1));
+        assert_eq!(s.peak_resident_bytes, 80);
+    }
+
+    #[test]
+    fn oversized_value_is_rejected_without_evicting() {
+        let mut t = ResidencyTracker::new(Some(64));
+        t.insert("a", 32, true, &[]);
+        let out = t.insert("huge", 128, false, &[]);
+        assert!(!out.inserted);
+        assert!(out.evicted.is_empty());
+        assert!(t.contains("a"), "rejection must not evict");
+        assert_eq!(t.stats().rejected, 1);
+    }
+
+    #[test]
+    fn pinned_values_survive_and_block_insertion() {
+        let mut t = ResidencyTracker::new(Some(100));
+        t.insert("a", 60, true, &[]);
+        let pins = ["a".to_string()];
+        let out = t.insert("b", 60, false, &pins);
+        assert!(!out.inserted, "only a pinned value could have made room");
+        assert!(t.contains("a"));
+        // Without the pin the same insert succeeds and reports the
+        // dirty eviction.
+        let out = t.insert("b", 60, false, &[]);
+        assert!(out.inserted);
+        assert!(out.evicted[0].dirty);
+    }
+
+    #[test]
+    fn unbounded_never_evicts() {
+        let mut t = ResidencyTracker::new(None);
+        for i in 0..100 {
+            assert!(t.insert(&format!("v{i}"), 1 << 20, true, &[]).inserted);
+        }
+        assert_eq!(t.len(), 100);
+        assert_eq!(t.stats().evictions, 0);
+        assert_eq!(t.resident_bytes(), 100 << 20);
+    }
+
+    #[test]
+    fn reinsert_refreshes_and_ors_dirty() {
+        let mut t = ResidencyTracker::new(Some(100));
+        t.insert("a", 40, false, &[]);
+        t.insert("b", 40, false, &[]);
+        // Re-inserting `a` makes it MRU and dirty; the next eviction
+        // takes `b` and reports it clean.
+        let out = t.insert("a", 40, true, &[]);
+        assert!(out.inserted && out.evicted.is_empty());
+        let out = t.insert("c", 60, false, &[]);
+        assert!(out.inserted);
+        assert_eq!(out.evicted[0].id, "b");
+        assert!(!out.evicted[0].dirty);
+        assert!(t.contains("a"));
+    }
+
+    #[test]
+    fn remove_frees_without_eviction_stats() {
+        let mut t = ResidencyTracker::new(Some(64));
+        t.insert("a", 64, true, &[]);
+        assert!(t.remove("a"));
+        assert!(!t.remove("a"));
+        assert_eq!(t.resident_bytes(), 0);
+        assert_eq!(t.stats().evictions, 0);
+        assert!(t.insert("b", 64, false, &[]).inserted);
+    }
+
+    #[test]
+    fn multi_victim_eviction_is_lru_ordered() {
+        let mut t = ResidencyTracker::new(Some(100));
+        t.insert("a", 30, true, &[]);
+        t.insert("b", 30, false, &[]);
+        t.insert("c", 30, false, &[]);
+        let out = t.insert("d", 50, false, &[]);
+        assert!(out.inserted);
+        let ids: Vec<&str> = out.evicted.iter().map(|e| e.id.as_str()).collect();
+        assert_eq!(ids, vec!["a", "b"], "LRU-first eviction order");
+        assert_eq!(t.resident_bytes(), 30 + 50);
+    }
+}

@@ -1,0 +1,924 @@
+//! The memory-aware DMA timeline: expand every scheduled op into
+//! DMA-in / compute / DMA-out sub-nodes and place them with the
+//! existing list scheduler.
+//!
+//! The plain scheduler (`crate::graph::schedule`) only puts *explicit*
+//! data-movement ops on the DMA engine — the HBM bytes behind every
+//! GEMM and elementwise op never appear on the timeline, so scheduled
+//! makespans are compute-optimistic. This module closes that gap:
+//!
+//! * each op's *cold* operands (not resident on chip) pay
+//!   `bytes / hbm_bytes_per_us` on the DMA engine before the op can
+//!   start;
+//! * operands that are still resident from their SSA producer skip the
+//!   re-fetch entirely ([`ResidencyTracker`]: a bounded buffer with LRU
+//!   eviction);
+//! * results enter the buffer dirty; evictions and spills pay the
+//!   write-back, and `return` escapes its operands to HBM.
+//!
+//! Exact invariants (property-tested in `tests/memory_model.rs`; they
+//! follow from the monotonicity of `max`/`+` on non-negative floats, so
+//! they hold bit-for-bit, not within an epsilon):
+//!
+//! * compute-only makespan `<=` memory-aware makespan `<=`
+//!   [`MemorySchedule::serialized_bound_us`] (every compute *and* cold
+//!   transfer run back to back);
+//! * [`MemoryConfig::infinite`] (unbounded buffer, infinite bandwidth)
+//!   reproduces the compute-only schedule **bit-identically** — all DMA
+//!   sub-nodes collapse to zero-width nodes that occupy no engine;
+//! * residency hits are bounded by the unbounded-buffer hit count, and
+//!   a zero-byte buffer can never hit.
+
+use std::collections::HashMap;
+
+use crate::coordinator::estimator::{Estimator, ModelEstimate};
+use crate::frontend::classify::classify;
+use crate::frontend::opinfo::{FuncInfo, ModuleInfo, OpInfo};
+use crate::graph::analysis::{finish_schedule, op_bound, ModuleSchedule, RooflineSummary};
+use crate::graph::schedule::is_inlined_call;
+use crate::graph::{DepGraph, Engine, EngineConfig, SchedNode};
+use crate::tpu::MxuParams;
+use crate::util::json::Json;
+
+use super::residency::ResidencyTracker;
+
+/// HBM bandwidth and on-chip buffer budget for the DMA timeline.
+///
+/// ```
+/// use scalesim_tpu::memory::MemoryConfig;
+///
+/// let m = MemoryConfig::tpu_v4();
+/// // ~1 us to move 1.2 MB at the TPU-v4 model's 1.2e6 bytes/us.
+/// assert!((m.transfer_us(1_200_000) - 1.0).abs() < 1e-9);
+///
+/// // The infinite config moves any payload in zero time: this is the
+/// // configuration that reproduces the compute-only schedule exactly.
+/// assert_eq!(MemoryConfig::infinite().transfer_us(u64::MAX), 0.0);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryConfig {
+    /// HBM bandwidth in bytes per microsecond (`f64::INFINITY` makes
+    /// every transfer free).
+    pub hbm_bytes_per_us: f64,
+    /// On-chip residency buffer in bytes; `None` is unbounded.
+    pub buffer_bytes: Option<u64>,
+}
+
+impl MemoryConfig {
+    /// Default residency buffer: 32 MiB (TPU-v4-class VMEM).
+    pub const DEFAULT_BUFFER_BYTES: u64 = 32 * 1024 * 1024;
+
+    /// A config from explicit bandwidth and buffer size.
+    pub fn new(hbm_bytes_per_us: f64, buffer_bytes: Option<u64>) -> MemoryConfig {
+        MemoryConfig {
+            hbm_bytes_per_us,
+            buffer_bytes,
+        }
+    }
+
+    /// The TPU-v4 device-model constants: the same HBM bandwidth the
+    /// synthetic device's roofline uses
+    /// ([`MxuParams::hbm_bytes_per_us`]) and the default 32 MiB buffer.
+    pub fn tpu_v4() -> MemoryConfig {
+        MemoryConfig::new(
+            MxuParams::default().hbm_bytes_per_us,
+            Some(Self::DEFAULT_BUFFER_BYTES),
+        )
+    }
+
+    /// The default buffer with a caller-supplied bandwidth (used by the
+    /// service so the timeline shares the estimator's HBM constant).
+    pub fn for_bandwidth(hbm_bytes_per_us: f64) -> MemoryConfig {
+        MemoryConfig::new(hbm_bytes_per_us, Some(Self::DEFAULT_BUFFER_BYTES))
+    }
+
+    /// Unbounded buffer and infinite bandwidth: every DMA sub-node is
+    /// zero-width, so the schedule is bit-identical to the compute-only
+    /// one (tested).
+    pub fn infinite() -> MemoryConfig {
+        MemoryConfig::new(f64::INFINITY, None)
+    }
+
+    /// Time to move `bytes` over HBM, µs. Pure `bytes / bandwidth` — no
+    /// fixed overhead, so infinite bandwidth is exactly zero cost.
+    pub fn transfer_us(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.hbm_bytes_per_us
+    }
+}
+
+/// Aggregate traffic/residency counters for one timeline build.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoryStats {
+    /// Operand accesses answered from the residency buffer.
+    pub hits: usize,
+    /// Operand accesses that paid an HBM fetch.
+    pub cold_fetches: usize,
+    /// Bytes fetched cold from HBM.
+    pub cold_bytes: u64,
+    /// Write-backs to HBM (dirty evictions, spills, escapes).
+    pub writebacks: usize,
+    /// Bytes written back to HBM.
+    pub writeback_bytes: u64,
+    /// Values evicted from the residency buffer.
+    pub evictions: usize,
+    /// High-water mark of resident bytes.
+    pub peak_resident_bytes: u64,
+}
+
+/// Per-value bookkeeping inside [`DmaTimeline`].
+#[derive(Debug, Clone)]
+struct ValueState {
+    /// Byte footprint (per chip).
+    bytes: u64,
+    /// Remaining consumers (drops to zero at the last use).
+    uses: usize,
+    /// Node after which the value is available on chip.
+    chip_node: Option<usize>,
+    /// Node after which HBM holds the value (`None` for function
+    /// arguments, which live in HBM from the start).
+    hbm_node: Option<usize>,
+    /// On-chip copy is newer than HBM.
+    dirty: bool,
+}
+
+/// Inbound-DMA expansion of one op.
+#[derive(Debug, Clone, Default)]
+pub struct FetchDma {
+    /// The fetch node pushed for this op, if it moved any bytes.
+    pub node: Option<usize>,
+    /// Producer nodes of operands that were resident (extra compute
+    /// dependences: data must be on chip before the op reads it).
+    pub hit_preds: Vec<usize>,
+    /// Time of the fetch node, µs (cold fetches plus any eviction
+    /// write-backs they forced).
+    pub dma_us: f64,
+    /// Bytes fetched cold.
+    pub cold_bytes: u64,
+    /// Write-back bytes folded into this fetch (dirty evictions).
+    pub writeback_bytes: u64,
+    /// Operand accesses that missed.
+    pub cold_fetches: usize,
+    /// Operand accesses answered on chip.
+    pub hits: usize,
+}
+
+/// Outbound-DMA expansion of one op.
+#[derive(Debug, Clone, Default)]
+pub struct RetireDma {
+    /// The write-back node pushed for this op, if it moved any bytes.
+    pub node: Option<usize>,
+    /// Time of the write-back node, µs.
+    pub dma_us: f64,
+    /// Bytes written back (spills, dirty evictions, escapes).
+    pub bytes: u64,
+}
+
+/// The shared DMA-expansion engine: walks a function in program order,
+/// tracks tensor residency, and pushes DMA sub-nodes onto a scheduler
+/// node list. [`schedule_estimate_memory`] drives it for single-chip
+/// schedules; the distributed slice walker threads it through each
+/// per-chip timeline.
+#[derive(Debug)]
+pub struct DmaTimeline {
+    config: MemoryConfig,
+    tracker: ResidencyTracker,
+    values: HashMap<String, ValueState>,
+    stats: MemoryStats,
+}
+
+fn dedup_operands(op: &OpInfo) -> Vec<String> {
+    let mut v: Vec<String> = Vec::new();
+    for o in &op.operands {
+        if !v.iter().any(|x| x == o) {
+            v.push(o.clone());
+        }
+    }
+    v
+}
+
+/// Append a pred id unless already present (shared with the distributed
+/// walker so the dedup rule cannot drift).
+pub(crate) fn push_unique(v: &mut Vec<usize>, n: usize) {
+    if !v.contains(&n) {
+        v.push(n);
+    }
+}
+
+/// Per-chip shard of a tensor footprint (leading-axis SPMD split).
+fn shard_bytes(bytes: u64, chips: usize) -> u64 {
+    if chips <= 1 {
+        bytes
+    } else {
+        bytes.div_ceil(chips as u64)
+    }
+}
+
+impl DmaTimeline {
+    /// Prime a timeline over `func`: registers every SSA value's byte
+    /// footprint (divided across `chips` for SPMD slices) and consumer
+    /// count, so dead values free their buffer space at their last use.
+    pub fn new(config: MemoryConfig, func: &FuncInfo, chips: usize) -> DmaTimeline {
+        let mut values: HashMap<String, ValueState> = HashMap::new();
+        for op in &func.ops {
+            for (k, r) in op.results.iter().enumerate() {
+                let bytes = op.result_types.get(k).map(|t| t.size_bytes()).unwrap_or(0);
+                values.insert(
+                    r.clone(),
+                    ValueState {
+                        bytes: shard_bytes(bytes, chips),
+                        uses: 0,
+                        chip_node: None,
+                        hbm_node: None,
+                        dirty: false,
+                    },
+                );
+            }
+        }
+        for op in &func.ops {
+            let mut seen: Vec<&str> = Vec::new();
+            for (k, operand) in op.operands.iter().enumerate() {
+                if seen.contains(&operand.as_str()) {
+                    continue;
+                }
+                seen.push(operand.as_str());
+                let state = values.entry(operand.clone()).or_insert_with(|| {
+                    // Unknown producer: a function argument living in HBM.
+                    let bytes = op
+                        .operand_types
+                        .get(k)
+                        .or_else(|| op.operand_types.first())
+                        .map(|t| t.size_bytes())
+                        .unwrap_or(0);
+                    ValueState {
+                        bytes: shard_bytes(bytes, chips),
+                        uses: 0,
+                        chip_node: None,
+                        hbm_node: None,
+                        dirty: false,
+                    }
+                });
+                state.uses += 1;
+            }
+        }
+        DmaTimeline {
+            config,
+            tracker: ResidencyTracker::new(config.buffer_bytes),
+            values,
+            stats: MemoryStats::default(),
+        }
+    }
+
+    /// Expand the inbound side of `op` (call in program order, before
+    /// pushing the op's compute node): cold operands pay an HBM fetch on
+    /// the DMA engine, resident operands only contribute a dependence.
+    /// At most one node is pushed; it is zero-width (no engine) when the
+    /// transfer is free.
+    pub fn fetch(&mut self, op: &OpInfo, nodes: &mut Vec<SchedNode>) -> FetchDma {
+        let mut out = FetchDma::default();
+        let operands = dedup_operands(op);
+        let mut fetch_preds: Vec<usize> = Vec::new();
+        let mut cold_ids: Vec<String> = Vec::new();
+        let mut written_back: Vec<String> = Vec::new();
+
+        for id in &operands {
+            let Some((bytes, chip_node, hbm_node)) = self
+                .values
+                .get(id.as_str())
+                .map(|v| (v.bytes, v.chip_node, v.hbm_node))
+            else {
+                continue;
+            };
+            if bytes == 0 {
+                continue;
+            }
+            if self.tracker.access(id) {
+                out.hits += 1;
+                self.stats.hits += 1;
+                if let Some(n) = chip_node {
+                    push_unique(&mut out.hit_preds, n);
+                }
+            } else {
+                out.cold_fetches += 1;
+                out.cold_bytes += bytes;
+                self.stats.cold_fetches += 1;
+                self.stats.cold_bytes += bytes;
+                if let Some(h) = hbm_node {
+                    push_unique(&mut fetch_preds, h);
+                }
+                let outcome = self.tracker.insert(id, bytes, false, &operands);
+                if outcome.inserted {
+                    cold_ids.push(id.clone());
+                }
+                for ev in outcome.evicted {
+                    let Some(st) = self.values.get_mut(&ev.id) else {
+                        continue;
+                    };
+                    if ev.dirty {
+                        out.writeback_bytes += ev.bytes;
+                        self.stats.writebacks += 1;
+                        self.stats.writeback_bytes += ev.bytes;
+                        if let Some(c) = st.chip_node {
+                            push_unique(&mut fetch_preds, c);
+                        }
+                        st.dirty = false;
+                        written_back.push(ev.id);
+                    }
+                }
+            }
+        }
+
+        let total_bytes = out.cold_bytes + out.writeback_bytes;
+        if total_bytes > 0 {
+            let cost = self.config.transfer_us(total_bytes);
+            let node_id = nodes.len();
+            nodes.push(SchedNode {
+                index: op.index,
+                op_name: format!("{}.dma_in", op.op_name),
+                engine: if cost > 0.0 { Some(Engine::Dma) } else { None },
+                cost_us: cost,
+                preds: fetch_preds,
+                source: "dma",
+                note: format!(
+                    "fetch {} B ({} cold / {} resident)",
+                    out.cold_bytes, out.cold_fetches, out.hits
+                ),
+            });
+            for id in &cold_ids {
+                if let Some(v) = self.values.get_mut(id.as_str()) {
+                    v.chip_node = Some(node_id);
+                }
+            }
+            for id in &written_back {
+                if let Some(v) = self.values.get_mut(id.as_str()) {
+                    v.hbm_node = Some(node_id);
+                }
+            }
+            out.dma_us = cost;
+            out.node = Some(node_id);
+        }
+        out
+    }
+
+    /// Expand the outbound side of `op` after its availability node
+    /// `avail` was pushed: results enter the buffer dirty, spills and
+    /// dirty evictions pay a write-back, dead operands free their space,
+    /// and `return` escapes its resident operands to HBM.
+    pub fn retire(&mut self, op: &OpInfo, avail: usize, nodes: &mut Vec<SchedNode>) -> RetireDma {
+        let mut out = RetireDma::default();
+        let operands = dedup_operands(op);
+        let mut preds: Vec<usize> = vec![avail];
+        let mut bytes: u64 = 0;
+        let mut hbm_updates: Vec<String> = Vec::new();
+
+        // `return` escapes its operands: dirty resident results must
+        // land in HBM. Non-resident operands were already written back.
+        if op.short_name() == "return" {
+            for id in &operands {
+                let Some((vbytes, dirty, chip_node)) = self
+                    .values
+                    .get(id.as_str())
+                    .map(|v| (v.bytes, v.dirty, v.chip_node))
+                else {
+                    continue;
+                };
+                if vbytes > 0 && dirty && self.tracker.contains(id) {
+                    bytes += vbytes;
+                    self.stats.writebacks += 1;
+                    self.stats.writeback_bytes += vbytes;
+                    if let Some(c) = chip_node {
+                        push_unique(&mut preds, c);
+                    }
+                    hbm_updates.push(id.clone());
+                }
+            }
+        }
+
+        // Release operands: the last consumer drops a dead value on the
+        // spot, freeing buffer space without a write-back.
+        for id in &operands {
+            if let Some(v) = self.values.get_mut(id.as_str()) {
+                v.uses = v.uses.saturating_sub(1);
+                if v.uses == 0 {
+                    self.tracker.remove(id);
+                }
+            }
+        }
+
+        // Results enter the buffer dirty. A result that cannot fit
+        // spills straight to HBM; dirty values its insertion evicts owe
+        // their write-back here too.
+        let results: Vec<String> = op.results.clone();
+        for r in &results {
+            let Some((rbytes, uses)) = self.values.get(r.as_str()).map(|v| (v.bytes, v.uses))
+            else {
+                continue;
+            };
+            if rbytes == 0 || uses == 0 {
+                continue; // dead or zero-footprint: never materialized
+            }
+            let outcome = self.tracker.insert(r, rbytes, true, &results);
+            if outcome.inserted {
+                if let Some(v) = self.values.get_mut(r.as_str()) {
+                    v.chip_node = Some(avail);
+                    v.dirty = true;
+                }
+                for ev in outcome.evicted {
+                    let Some(st) = self.values.get_mut(&ev.id) else {
+                        continue;
+                    };
+                    if ev.dirty {
+                        bytes += ev.bytes;
+                        self.stats.writebacks += 1;
+                        self.stats.writeback_bytes += ev.bytes;
+                        if let Some(c) = st.chip_node {
+                            push_unique(&mut preds, c);
+                        }
+                        st.dirty = false;
+                        hbm_updates.push(ev.id);
+                    }
+                }
+            } else {
+                // Spill: stream the result straight to HBM.
+                bytes += rbytes;
+                self.stats.writebacks += 1;
+                self.stats.writeback_bytes += rbytes;
+                if let Some(v) = self.values.get_mut(r.as_str()) {
+                    v.dirty = false;
+                }
+                hbm_updates.push(r.clone());
+            }
+        }
+
+        if bytes > 0 {
+            let cost = self.config.transfer_us(bytes);
+            let node_id = nodes.len();
+            nodes.push(SchedNode {
+                index: op.index,
+                op_name: format!("{}.dma_out", op.op_name),
+                engine: if cost > 0.0 { Some(Engine::Dma) } else { None },
+                cost_us: cost,
+                preds,
+                source: "dma",
+                note: format!("write back {bytes} B"),
+            });
+            for id in &hbm_updates {
+                if let Some(v) = self.values.get_mut(id.as_str()) {
+                    v.hbm_node = Some(node_id);
+                }
+            }
+            out.dma_us = cost;
+            out.node = Some(node_id);
+        }
+        out.bytes = bytes;
+        out
+    }
+
+    /// Traffic and residency counters accumulated so far.
+    pub fn stats(&self) -> MemoryStats {
+        let t = self.tracker.stats();
+        MemoryStats {
+            evictions: t.evictions,
+            peak_resident_bytes: t.peak_resident_bytes,
+            ..self.stats
+        }
+    }
+}
+
+/// One entry-function op's memory-aware row.
+#[derive(Debug, Clone)]
+pub struct OpMemory {
+    /// Index of the source op within its function.
+    pub index: usize,
+    /// Display name of the op.
+    pub op_name: String,
+    /// Compute time carried over from the estimate row, µs.
+    pub compute_us: f64,
+    /// Inbound DMA time (cold fetches + forced eviction write-backs), µs.
+    pub dma_in_us: f64,
+    /// Outbound DMA time (spills, dirty evictions, escapes), µs.
+    pub dma_out_us: f64,
+    /// Bytes this op fetched cold from HBM.
+    pub cold_bytes: u64,
+    /// Bytes this op wrote back to HBM (both directions' nodes).
+    pub writeback_bytes: u64,
+    /// Operand accesses answered from the residency buffer.
+    pub hits: usize,
+    /// Operand accesses that paid an HBM fetch.
+    pub cold_fetches: usize,
+    /// Timeline start (the op's fetch node, or its compute node), µs.
+    pub start_us: f64,
+    /// Timeline end (the op's write-back node, or its compute node), µs.
+    pub end_us: f64,
+}
+
+impl OpMemory {
+    /// True when every operand was already resident (no cold fetch).
+    pub fn resident(&self) -> bool {
+        self.cold_fetches == 0
+    }
+
+    /// Roofline verdict for this op: `"compute"`, `"bandwidth"` or
+    /// `"free"`.
+    pub fn bound(&self) -> &'static str {
+        op_bound(self.compute_us, self.dma_in_us + self.dma_out_us)
+    }
+}
+
+/// A memory-aware module schedule: the expanded sub-node timeline plus
+/// per-op DMA accounting, residency stats and the roofline summary.
+#[derive(Debug, Clone)]
+pub struct MemorySchedule {
+    /// The placed schedule over the expanded (DMA-in / compute /
+    /// DMA-out) node list: makespan, critical path, per-engine busy
+    /// (including the DMA engine) and the renderable timeline.
+    pub schedule: ModuleSchedule,
+    /// The bandwidth/buffer configuration this timeline was built with.
+    pub memory: MemoryConfig,
+    /// One row per entry-function op, aligned with the estimate rows.
+    pub ops: Vec<OpMemory>,
+    /// Upper bound: every compute op and every cold transfer serialized
+    /// back to back (prefix-sum in expansion order, so the makespan
+    /// bound holds exactly in floating point).
+    pub serialized_bound_us: f64,
+    /// Aggregate traffic/residency counters.
+    pub stats: MemoryStats,
+    /// Aggregate compute-vs-bandwidth roofline.
+    pub roofline: RooflineSummary,
+}
+
+impl MemorySchedule {
+    /// Memory-aware makespan, µs.
+    pub fn makespan_us(&self) -> f64 {
+        self.schedule.makespan_us
+    }
+
+    /// Longest dependence chain over the expanded nodes, µs.
+    pub fn critical_path_us(&self) -> f64 {
+        self.schedule.critical_path_us
+    }
+
+    /// Total DMA busy time (inbound + outbound across all ops), µs.
+    pub fn dma_busy_us(&self) -> f64 {
+        self.ops.iter().map(|o| o.dma_in_us + o.dma_out_us).sum()
+    }
+
+    /// The memory block of the `--json` payload: totals, config and
+    /// residency counters.
+    pub fn to_json(&self) -> Json {
+        let finite_num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let mut j = Json::obj();
+        j.set("makespan_us", Json::Num(self.makespan_us()))
+            .set("critical_path_us", Json::Num(self.critical_path_us()))
+            .set("serialized_bound_us", Json::Num(self.serialized_bound_us))
+            .set("dma_busy_us", Json::Num(self.dma_busy_us()))
+            .set("hbm_bytes_per_us", finite_num(self.memory.hbm_bytes_per_us))
+            .set(
+                "buffer_bytes",
+                match self.memory.buffer_bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            )
+            .set("hits", Json::Num(self.stats.hits as f64))
+            .set("cold_fetches", Json::Num(self.stats.cold_fetches as f64))
+            .set("cold_bytes", Json::Num(self.stats.cold_bytes as f64))
+            .set("writeback_bytes", Json::Num(self.stats.writeback_bytes as f64))
+            .set("evictions", Json::Num(self.stats.evictions as f64))
+            .set(
+                "peak_resident_bytes",
+                Json::Num(self.stats.peak_resident_bytes as f64),
+            );
+        j
+    }
+
+    /// The roofline payload: aggregate counters plus a per-op verdict
+    /// (`"compute"` / `"bandwidth"` / `"free"`).
+    pub fn roofline_json(&self) -> Json {
+        let mut j = self.roofline.to_json();
+        let ops: Vec<Json> = self
+            .ops
+            .iter()
+            .map(|o| {
+                let mut row = Json::obj();
+                row.set("index", Json::Num(o.index as f64))
+                    .set("op", Json::Str(o.op_name.clone()))
+                    .set("bound", Json::Str(o.bound().to_string()))
+                    .set("dma_us", Json::Num(o.dma_in_us + o.dma_out_us));
+                row
+            })
+            .collect();
+        j.set("ops", Json::Arr(ops));
+        j
+    }
+
+    /// Human-readable summary block for the CLI (`compute_only_us` is
+    /// the memory-blind scheduled makespan for comparison).
+    pub fn render_summary(&self, compute_only_us: f64) -> String {
+        let buffer = match self.memory.buffer_bytes {
+            Some(b) => format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0)),
+            None => "unbounded".to_string(),
+        };
+        format!(
+            "memory-aware: makespan {:.2} us (compute-only {:.2} us, serialized bound {:.2} us); dma busy {:.2} us\n\
+             residency ({buffer} buffer): {} hits / {} cold fetches; {:.2} MB cold traffic, {:.2} MB written back, {} evictions\n\
+             {}",
+            self.makespan_us(),
+            compute_only_us,
+            self.serialized_bound_us,
+            self.dma_busy_us(),
+            self.stats.hits,
+            self.stats.cold_fetches,
+            self.stats.cold_bytes as f64 / 1e6,
+            self.stats.writeback_bytes as f64 / 1e6,
+            self.stats.evictions,
+            self.roofline.render()
+        )
+    }
+}
+
+/// Build the memory-aware schedule for a module from its already-
+/// computed unfused estimate (no re-estimation, no cache traffic — the
+/// same contract as [`crate::graph::schedule_estimate`]).
+///
+/// Each estimate row becomes a compute node on its usual engine; the
+/// [`DmaTimeline`] threads residency through the walk and adds the
+/// DMA-in/DMA-out sub-nodes around it.
+pub fn schedule_estimate_memory(
+    module: &ModuleInfo,
+    report: &ModelEstimate,
+    config: EngineConfig,
+    memory: &MemoryConfig,
+) -> MemorySchedule {
+    let Some(func) = module.entry() else {
+        return MemorySchedule {
+            schedule: finish_schedule(module.name.clone(), config, Vec::new()),
+            memory: *memory,
+            ops: Vec::new(),
+            serialized_bound_us: 0.0,
+            stats: MemoryStats::default(),
+            roofline: RooflineSummary::default(),
+        };
+    };
+    debug_assert_eq!(
+        report.ops.len(),
+        func.ops.len(),
+        "estimate rows must align 1:1 with the entry function's ops"
+    );
+    let graph = DepGraph::build(func);
+    let mut dma = DmaTimeline::new(*memory, func, 1);
+    let mut nodes: Vec<SchedNode> = Vec::with_capacity(func.ops.len() * 2);
+    let mut provider: Vec<usize> = Vec::with_capacity(func.ops.len());
+    struct Plan {
+        fetch: FetchDma,
+        main: usize,
+        retire: RetireDma,
+    }
+    let mut plans: Vec<Plan> = Vec::with_capacity(func.ops.len());
+
+    for ((i, op), row) in func.ops.iter().enumerate().zip(&report.ops) {
+        // `return` reads nothing on chip — its retire step escapes any
+        // still-dirty results to HBM instead.
+        let fetch = if op.short_name() == "return" {
+            FetchDma::default()
+        } else {
+            dma.fetch(op, &mut nodes)
+        };
+        let engine = if is_inlined_call(op) {
+            Some(match config {
+                EngineConfig::Serialized => Engine::Unified,
+                _ => Engine::Mxu,
+            })
+        } else {
+            config.engine_of(&classify(op))
+        };
+        let mut preds: Vec<usize> = Vec::new();
+        for &p in &graph.preds[i] {
+            push_unique(&mut preds, provider[p]);
+        }
+        for &n in &fetch.hit_preds {
+            push_unique(&mut preds, n);
+        }
+        if let Some(n) = fetch.node {
+            push_unique(&mut preds, n);
+        }
+        let main = nodes.len();
+        nodes.push(SchedNode {
+            index: row.index,
+            op_name: row.op_name.clone(),
+            engine,
+            cost_us: row.latency_us,
+            preds,
+            source: row.source.tag(),
+            note: row.note.clone(),
+        });
+        provider.push(main);
+        let retire = dma.retire(op, main, &mut nodes);
+        plans.push(Plan { fetch, main, retire });
+    }
+
+    // Left-to-right prefix sum in expansion order: the fold order the
+    // exact upper-bound proof relies on (f64 Sum adds in iteration
+    // order).
+    let serialized_bound_us: f64 = nodes.iter().map(|n| n.cost_us).sum();
+    let stats = dma.stats();
+    let schedule = finish_schedule(module.name.clone(), config, nodes);
+
+    let mut roofline = RooflineSummary::default();
+    let mut ops: Vec<OpMemory> = Vec::with_capacity(plans.len());
+    for (plan, row) in plans.iter().zip(&report.ops) {
+        let dma_us = plan.fetch.dma_us + plan.retire.dma_us;
+        roofline.record(row.latency_us, dma_us);
+        let first = plan.fetch.node.unwrap_or(plan.main);
+        let last = plan.retire.node.unwrap_or(plan.main);
+        ops.push(OpMemory {
+            index: row.index,
+            op_name: row.op_name.clone(),
+            compute_us: row.latency_us,
+            dma_in_us: plan.fetch.dma_us,
+            dma_out_us: plan.retire.dma_us,
+            cold_bytes: plan.fetch.cold_bytes,
+            writeback_bytes: plan.fetch.writeback_bytes + plan.retire.bytes,
+            hits: plan.fetch.hits,
+            cold_fetches: plan.fetch.cold_fetches,
+            start_us: schedule.ops[first].start_us,
+            end_us: schedule.ops[last].end_us,
+        });
+    }
+    MemorySchedule {
+        schedule,
+        memory: *memory,
+        ops,
+        serialized_bound_us,
+        stats,
+        roofline,
+    }
+}
+
+/// Estimate `module` through `est` and build its memory-aware schedule
+/// in one call (one `estimate_module` walk, same as
+/// [`crate::graph::schedule_module`]).
+///
+/// ```
+/// use scalesim_tpu::calibrate::fit_regime_calibration;
+/// use scalesim_tpu::coordinator::Estimator;
+/// use scalesim_tpu::frontend::parse_module;
+/// use scalesim_tpu::graph::EngineConfig;
+/// use scalesim_tpu::memory::{schedule_module_memory, MemoryConfig};
+/// use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+///
+/// let obs: Vec<_> = [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096]
+///     .iter()
+///     .map(|&d| (GemmShape::new(d, d, d), (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0))
+///     .collect();
+/// let est = Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap());
+/// let module = parse_module(
+///     r#"module @m { func.func @main(%x: tensor<256x256xf32>, %w: tensor<256x256xf32>) -> tensor<256x256xf32> {
+///   %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] : (tensor<256x256xf32>, tensor<256x256xf32>) -> tensor<256x256xf32>
+///   %1 = stablehlo.add %0, %x : tensor<256x256xf32>
+///   return %1 : tensor<256x256xf32>
+/// } }"#,
+/// )
+/// .unwrap();
+///
+/// let mem = schedule_module_memory(&est, &module, EngineConfig::Tpu, &MemoryConfig::tpu_v4());
+/// // The makespan sits inside its exact bracket.
+/// assert!(mem.makespan_us() > 0.0);
+/// assert!(mem.makespan_us() <= mem.serialized_bound_us);
+/// // %0 is consumed immediately by the add: a residency hit.
+/// assert!(mem.stats.hits >= 1);
+/// ```
+pub fn schedule_module_memory(
+    est: &Estimator,
+    module: &ModuleInfo,
+    config: EngineConfig,
+    memory: &MemoryConfig,
+) -> MemorySchedule {
+    let report = est.estimate_module(module);
+    schedule_estimate_memory(module, &report, config, memory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::fit_regime_calibration;
+    use crate::frontend::parse_module;
+    use crate::graph::schedule_estimate;
+    use crate::scalesim::{GemmShape, ScaleConfig};
+
+    fn estimator() -> Estimator {
+        let mut obs = Vec::new();
+        for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+            let g = GemmShape::new(d, d, d);
+            obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+        }
+        Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+    }
+
+    const CHAIN: &str = r#"
+module @m { func.func @main(%x: tensor<256x256xf32>, %w: tensor<256x256xf32>) -> tensor<256x256xf32> {
+  %0 = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] : (tensor<256x256xf32>, tensor<256x256xf32>) -> tensor<256x256xf32>
+  %1 = stablehlo.add %0, %x : tensor<256x256xf32>
+  return %1 : tensor<256x256xf32>
+} }"#;
+
+    #[test]
+    fn chain_pays_cold_args_and_hits_the_intermediate() {
+        let est = estimator();
+        let module = parse_module(CHAIN).unwrap();
+        let report = est.estimate_module(&module);
+        let mem =
+            schedule_estimate_memory(&module, &report, EngineConfig::Tpu, &MemoryConfig::tpu_v4());
+        assert_eq!(mem.ops.len(), 3);
+        // The dot fetches both arguments cold (2 x 256KiB).
+        let dot = &mem.ops[0];
+        assert_eq!(dot.cold_fetches, 2);
+        assert_eq!(dot.cold_bytes, 2 * 256 * 256 * 4);
+        assert!(dot.dma_in_us > 0.0);
+        assert!(!dot.resident());
+        // The add hits both %0 and the still-resident %x.
+        let add = &mem.ops[1];
+        assert_eq!(add.hits, 2);
+        assert_eq!(add.cold_fetches, 0);
+        assert!(add.resident());
+        assert_eq!(add.dma_in_us, 0.0);
+        // `return` escapes the dirty result: exactly one write-back.
+        let ret = &mem.ops[2];
+        assert_eq!(ret.writeback_bytes, 256 * 256 * 4);
+        assert!(ret.dma_out_us > 0.0);
+        // Totals line up.
+        assert_eq!(mem.stats.hits, 2);
+        assert_eq!(mem.stats.cold_fetches, 2);
+        assert_eq!(mem.stats.writeback_bytes, 256 * 256 * 4);
+    }
+
+    #[test]
+    fn infinite_config_is_bit_identical_to_compute_only() {
+        let est = estimator();
+        let module = parse_module(CHAIN).unwrap();
+        let report = est.estimate_module(&module);
+        let base = schedule_estimate(&module, &report, EngineConfig::Tpu);
+        let mem = schedule_estimate_memory(
+            &module,
+            &report,
+            EngineConfig::Tpu,
+            &MemoryConfig::infinite(),
+        );
+        assert_eq!(mem.makespan_us().to_bits(), base.makespan_us.to_bits());
+        assert_eq!(mem.dma_busy_us(), 0.0);
+        // Residency still tracks (args are cold), but transfers are free.
+        assert_eq!(mem.stats.cold_fetches, 2);
+        assert_eq!(mem.ops[0].dma_in_us, 0.0);
+    }
+
+    #[test]
+    fn zero_buffer_never_hits_and_still_brackets() {
+        let est = estimator();
+        let module = parse_module(CHAIN).unwrap();
+        let report = est.estimate_module(&module);
+        let base = schedule_estimate(&module, &report, EngineConfig::Tpu);
+        let cfg = MemoryConfig::new(est.hbm_bytes_per_us(), Some(0));
+        let mem = schedule_estimate_memory(&module, &report, EngineConfig::Tpu, &cfg);
+        assert_eq!(mem.stats.hits, 0);
+        // Every operand access is cold now: 2 for the dot, 2 for the add.
+        assert_eq!(mem.stats.cold_fetches, 4);
+        // Both results spill straight to HBM.
+        assert!(mem.stats.writeback_bytes >= 2 * 256 * 256 * 4);
+        assert!(base.makespan_us <= mem.makespan_us());
+        assert!(mem.makespan_us() <= mem.serialized_bound_us);
+    }
+
+    #[test]
+    fn roofline_flags_bandwidth_bound_ops() {
+        let est = estimator();
+        let module = parse_module(CHAIN).unwrap();
+        let report = est.estimate_module(&module);
+        // Starve the bandwidth so every costed op goes bandwidth-bound.
+        let cfg = MemoryConfig::new(1.0, Some(0));
+        let mem = schedule_estimate_memory(&module, &report, EngineConfig::Tpu, &cfg);
+        assert_eq!(mem.ops[0].bound(), "bandwidth");
+        assert!(mem.roofline.bandwidth_bound >= 2);
+        assert_eq!(mem.roofline.verdict(), "bandwidth-bound");
+        let j = mem.roofline_json();
+        assert_eq!(j.req_str("verdict").unwrap(), "bandwidth-bound");
+        assert_eq!(j.req_arr("ops").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn json_and_summary_render() {
+        let est = estimator();
+        let module = parse_module(CHAIN).unwrap();
+        let mem =
+            schedule_module_memory(&est, &module, EngineConfig::Tpu, &MemoryConfig::tpu_v4());
+        let j = mem.to_json();
+        assert!(j.req_f64("makespan_us").unwrap() > 0.0);
+        assert!(j.req_f64("cold_bytes").unwrap() > 0.0);
+        assert_eq!(
+            j.req_f64("buffer_bytes").unwrap(),
+            MemoryConfig::DEFAULT_BUFFER_BYTES as f64
+        );
+        let text = mem.render_summary(0.0);
+        assert!(text.contains("memory-aware:"));
+        assert!(text.contains("residency"));
+        assert!(text.contains("roofline:"));
+    }
+}

@@ -7,10 +7,15 @@
 
 /// A scatter plot specification.
 pub struct Scatter {
+    /// Plot title.
     pub title: String,
+    /// X-axis label.
     pub x_label: String,
+    /// Y-axis label.
     pub y_label: String,
+    /// Plot width in characters.
     pub width: usize,
+    /// Plot height in characters.
     pub height: usize,
     /// Point series: (marker, points).
     pub series: Vec<(char, Vec<(f64, f64)>)>,
@@ -23,6 +28,7 @@ pub struct Scatter {
 }
 
 impl Scatter {
+    /// An empty plot with default dimensions.
     pub fn new(title: &str, x_label: &str, y_label: &str) -> Scatter {
         Scatter {
             title: title.to_string(),
@@ -37,16 +43,19 @@ impl Scatter {
         }
     }
 
+    /// Add one point series drawn with `marker`.
     pub fn add_series(&mut self, marker: char, points: Vec<(f64, f64)>) -> &mut Self {
         self.series.push((marker, points));
         self
     }
 
+    /// Overlay the line `y = alpha + beta * x`.
     pub fn with_fit(&mut self, alpha: f64, beta: f64) -> &mut Self {
         self.line = Some((alpha, beta));
         self
     }
 
+    /// Render the ASCII plot.
     pub fn render(&self) -> String {
         let mut pts: Vec<(f64, f64)> = Vec::new();
         for (_, s) in &self.series {

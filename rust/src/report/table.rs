@@ -3,11 +3,14 @@
 /// A simple column-aligned table builder.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Column headers.
     pub header: Vec<String>,
+    /// Row cells (same arity as the header).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given columns.
     pub fn new(header: &[&str]) -> Table {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -15,6 +18,7 @@ impl Table {
         }
     }
 
+    /// Append one row of owned cells.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -25,6 +29,7 @@ impl Table {
         self
     }
 
+    /// Append one row of string literals.
     pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
         let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
         self.row(&owned)

@@ -28,6 +28,7 @@ pub struct Runtime {
 /// One compiled executable.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact stem (e.g. `gemm_512`).
     pub name: String,
 }
 
@@ -38,6 +39,7 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -41,34 +41,41 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// Always fails offline: PJRT is behind the `pjrt` feature.
     pub fn cpu() -> Result<PjRtClient, XlaError> {
         unavailable()
     }
 
+    /// Unreachable on the stub.
     pub fn platform_name(&self) -> String {
         unreachable!("stub PjRtClient cannot be constructed")
     }
 
+    /// Unreachable on the stub.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
         unreachable!("stub PjRtClient cannot be constructed")
     }
 }
 
+/// Stub compiled executable (never constructible offline).
 pub struct PjRtLoadedExecutable {
     _priv: (),
 }
 
 impl PjRtLoadedExecutable {
+    /// Unreachable on the stub.
     pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         unreachable!("stub PjRtLoadedExecutable cannot be constructed")
     }
 }
 
+/// Stub device buffer (never constructible offline).
 pub struct PjRtBuffer {
     _priv: (),
 }
 
 impl PjRtBuffer {
+    /// Unreachable on the stub.
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         unreachable!("stub PjRtBuffer cannot be constructed")
     }
@@ -80,20 +87,24 @@ pub struct HloModuleProto {
 }
 
 impl HloModuleProto {
+    /// Always fails offline (no HLO parser).
     pub fn parse_and_return_unverified_module(_text: &[u8]) -> Result<HloModuleProto, XlaError> {
         unavailable()
     }
 
+    /// Always fails offline (no HLO parser).
     pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, XlaError> {
         unavailable()
     }
 }
 
+/// Stub XLA computation handle.
 pub struct XlaComputation {
     _priv: (),
 }
 
 impl XlaComputation {
+    /// Wrap a (stub) proto; trivially constructible.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation { _priv: () }
     }
@@ -107,35 +118,43 @@ pub struct Literal {
 }
 
 impl Literal {
+    /// Host-side 1-D literal (shape only).
     pub fn vec1(data: &[f32]) -> Literal {
         Literal {
             dims: vec![data.len() as i64],
         }
     }
 
+    /// Reshape the carried dims (host-side only).
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
         Ok(Literal {
             dims: dims.to_vec(),
         })
     }
 
+    /// Always fails offline.
     pub fn shape(&self) -> Result<Shape, XlaError> {
         unavailable()
     }
 
+    /// Always fails offline.
     pub fn to_tuple1(self) -> Result<Literal, XlaError> {
         unavailable()
     }
 
+    /// Always fails offline.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
         let _ = &self.dims;
         unavailable()
     }
 }
 
+/// Stub shape mirror of the `xla` crate's type.
 #[derive(Debug, Clone)]
 pub enum Shape {
+    /// A tuple of sub-shapes.
     Tuple(Vec<Shape>),
+    /// A dense array.
     Array,
 }
 

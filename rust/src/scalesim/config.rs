@@ -22,6 +22,7 @@ pub enum Dataflow {
 }
 
 impl Dataflow {
+    /// Parse `os` / `ws` / `is`.
     pub fn parse(s: &str) -> Option<Dataflow> {
         match s.to_ascii_lowercase().as_str() {
             "os" | "output_stationary" => Some(Dataflow::OutputStationary),
@@ -31,6 +32,7 @@ impl Dataflow {
         }
     }
 
+    /// The two-letter dataflow code.
     pub fn short(&self) -> &'static str {
         match self {
             Dataflow::OutputStationary => "OS",
@@ -140,14 +142,17 @@ impl ScaleConfig {
         (sram_kb * 1024) / (2 * self.word_bytes)
     }
 
+    /// Words per ifmap SRAM half-buffer.
     pub fn ifmap_half_words(&self) -> usize {
         self.half_buffer_words(self.ifmap_sram_kb)
     }
 
+    /// Words per filter SRAM half-buffer.
     pub fn filter_half_words(&self) -> usize {
         self.half_buffer_words(self.filter_sram_kb)
     }
 
+    /// Words per ofmap SRAM half-buffer.
     pub fn ofmap_half_words(&self) -> usize {
         self.half_buffer_words(self.ofmap_sram_kb)
     }
@@ -183,6 +188,7 @@ impl ScaleConfig {
         problems
     }
 
+    /// Serialize for the asset files.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", Json::Str(self.name.clone()))
@@ -200,6 +206,7 @@ impl ScaleConfig {
         o
     }
 
+    /// Deserialize from the asset files.
     pub fn from_json(j: &Json) -> Result<ScaleConfig, JsonError> {
         Ok(ScaleConfig {
             name: j.req_str("name")?.to_string(),

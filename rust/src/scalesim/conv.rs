@@ -14,7 +14,9 @@ pub fn simulate_conv(config: &ScaleConfig, conv: &ConvLayer) -> SimReport {
 /// Per-layer result of a topology run.
 #[derive(Debug, Clone)]
 pub struct LayerReport {
+    /// Name of the simulated layer.
     pub layer_name: String,
+    /// Its simulation report.
     pub report: SimReport,
 }
 

@@ -44,6 +44,7 @@ pub struct FoldCost {
 }
 
 impl FoldCost {
+    /// Cycles of one fold including stalls.
     pub fn total_cycles(&self) -> u64 {
         self.load_cycles + self.stream_cycles
     }
@@ -58,6 +59,7 @@ impl FoldCost {
 /// Aggregate compute-phase result for one GEMM.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ComputeModel {
+    /// Dataflow the model was built for.
     pub dataflow: Dataflow,
     /// Fold grid (row folds, col folds).
     pub fold_grid: (usize, usize),

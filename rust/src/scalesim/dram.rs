@@ -78,10 +78,15 @@ pub fn stream_runs(config: &ScaleConfig, gemm: GemmShape) -> (usize, usize, usiz
 /// A refined report: stall cycles recomputed with effective bandwidths.
 #[derive(Debug, Clone)]
 pub struct DramRefinedReport {
+    /// The unrefined simulation.
     pub base: SimReport,
+    /// A-stream bandwidth efficiency vs peak, in (0, 1].
     pub a_efficiency: f64,
+    /// B-stream bandwidth efficiency vs peak, in (0, 1].
     pub b_efficiency: f64,
+    /// C-stream bandwidth efficiency vs peak, in (0, 1].
     pub c_efficiency: f64,
+    /// Total cycles re-simulated with effective bandwidths.
     pub refined_total_cycles: u64,
 }
 

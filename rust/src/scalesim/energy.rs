@@ -41,13 +41,18 @@ impl Default for EnergyParams {
 /// Energy breakdown for one simulated GEMM.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EnergyReport {
+    /// Compute (MAC array) energy, µJ.
     pub mac_uj: f64,
+    /// On-chip SRAM access energy, µJ.
     pub sram_uj: f64,
+    /// DRAM access energy, µJ.
     pub dram_uj: f64,
+    /// Static leakage over the runtime, µJ.
     pub leakage_uj: f64,
 }
 
 impl EnergyReport {
+    /// Total energy, µJ.
     pub fn total_uj(&self) -> f64 {
         self.mac_uj + self.sram_uj + self.dram_uj + self.leakage_uj
     }
@@ -71,6 +76,7 @@ impl EnergyReport {
         ops / joules / 1e12
     }
 
+    /// Serialize the breakdown.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("mac_uj", Json::Num(self.mac_uj))

@@ -42,6 +42,7 @@ pub struct MemoryModel {
 }
 
 impl MemoryModel {
+    /// Total DRAM traffic in words (reads + writes).
     pub fn total_dram_words(&self) -> u64 {
         self.ifmap_dram_reads + self.filter_dram_reads + self.ofmap_dram_writes
     }

@@ -13,7 +13,9 @@ use super::topology::GemmShape;
 /// Which GEMM dimension is split across cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionAxis {
+    /// Split the M (output rows) dimension.
     M,
+    /// Split the N (output columns) dimension.
     N,
 }
 
@@ -29,7 +31,9 @@ impl std::fmt::Display for PartitionAxis {
 /// Result of a multi-core run.
 #[derive(Debug, Clone)]
 pub struct PartitionedReport {
+    /// Axis the GEMM was split along.
     pub axis: PartitionAxis,
+    /// Cores the work was split across.
     pub num_cores: usize,
     /// Per-core shard reports (cores with an empty shard are omitted).
     pub shards: Vec<SimReport>,

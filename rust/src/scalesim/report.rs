@@ -7,8 +7,11 @@ use crate::util::json::Json;
 /// Full result of simulating one GEMM (or one conv via im2col) on one core.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
+    /// Architecture config the run used.
     pub config_name: String,
+    /// Dataflow the run used.
     pub dataflow: Dataflow,
+    /// The simulated GEMM.
     pub gemm: GemmShape,
     /// Pure compute cycles (fills, streams, drains; no stalls).
     pub compute_cycles: u64,
@@ -24,7 +27,9 @@ pub struct SimReport {
     pub utilisation: f64,
     /// DRAM traffic in words.
     pub ifmap_dram_reads: u64,
+    /// Words read from DRAM for the filter operand.
     pub filter_dram_reads: u64,
+    /// Words written to DRAM for the result.
     pub ofmap_dram_writes: u64,
     /// Whether every fold's working set fit a half buffer.
     pub fits_on_chip: bool,
@@ -43,6 +48,7 @@ impl SimReport {
         self.total_cycles() as f64 / (self.freq_mhz * 1e6)
     }
 
+    /// Wall time at the config clock (no calibration), µs.
     pub fn raw_time_us(&self) -> f64 {
         self.raw_time_s() * 1e6
     }
@@ -70,6 +76,7 @@ impl SimReport {
         2.0 * self.gemm.macs() as f64 / secs / 1e12
     }
 
+    /// Serialize the report.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("config", Json::Str(self.config_name.clone()))

@@ -24,6 +24,7 @@ pub struct Sparsity {
 }
 
 impl Sparsity {
+    /// Fully dense operands (no gating win).
     pub fn dense() -> Sparsity {
         Sparsity {
             a_density: 1.0,
@@ -41,6 +42,7 @@ impl Sparsity {
         }
     }
 
+    /// Densities and efficiency all within (0, 1].
     pub fn validate(&self) -> bool {
         (0.0..=1.0).contains(&self.gating_efficiency)
             && self.a_density > 0.0
@@ -60,15 +62,20 @@ impl Sparsity {
 /// totals.
 #[derive(Debug, Clone)]
 pub struct SparseReport {
+    /// The dense baseline simulation.
     pub dense: SimReport,
+    /// Sparsity pattern applied.
     pub sparsity: Sparsity,
+    /// Cycles after gating savings.
     pub effective_cycles: u64,
+    /// MACs actually performed.
     pub effective_macs: u64,
     /// DRAM words after compressed operand storage.
     pub effective_dram_words: u64,
 }
 
 impl SparseReport {
+    /// Dense cycles over effective cycles.
     pub fn speedup(&self) -> f64 {
         if self.effective_cycles == 0 {
             return 0.0;

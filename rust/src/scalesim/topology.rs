@@ -7,12 +7,16 @@ use anyhow::{bail, Context, Result};
 /// A GEMM workload C[M,N] = A[M,K] × B[K,N].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GemmShape {
+    /// Rows of A / C.
     pub m: usize,
+    /// Contraction (columns of A, rows of B).
     pub k: usize,
+    /// Columns of B / C.
     pub n: usize,
 }
 
 impl GemmShape {
+    /// A GEMM of `m x k` times `k x n`.
     pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
         GemmShape { m, k, n }
     }
@@ -27,14 +31,17 @@ impl GemmShape {
         self.m as u64 * self.k as u64
     }
 
+    /// Words in the B operand.
     pub fn b_words(&self) -> u64 {
         self.k as u64 * self.n as u64
     }
 
+    /// Words in the C result.
     pub fn c_words(&self) -> u64 {
         self.m as u64 * self.n as u64
     }
 
+    /// All dimensions positive.
     pub fn valid(&self) -> bool {
         self.m > 0 && self.k > 0 && self.n > 0
     }
@@ -49,14 +56,23 @@ impl std::fmt::Display for GemmShape {
 /// A 2D convolution layer in the classic SCALE-Sim topology format.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConvLayer {
+    /// Layer name from the CSV.
     pub name: String,
+    /// Input feature-map height.
     pub ifmap_h: usize,
+    /// Input feature-map width.
     pub ifmap_w: usize,
+    /// Filter height.
     pub filter_h: usize,
+    /// Filter width.
     pub filter_w: usize,
+    /// Input channels.
     pub channels: usize,
+    /// Output channels (filter count).
     pub num_filters: usize,
+    /// Vertical stride.
     pub stride_h: usize,
+    /// Horizontal stride.
     pub stride_w: usize,
 }
 
@@ -70,6 +86,7 @@ impl ConvLayer {
         }
     }
 
+    /// Output feature-map width.
     pub fn out_w(&self) -> usize {
         if self.ifmap_w < self.filter_w {
             0
@@ -97,6 +114,7 @@ impl ConvLayer {
         self.to_gemm().macs()
     }
 
+    /// Reject degenerate dimensions with a descriptive error.
     pub fn validate(&self) -> Result<()> {
         if self.ifmap_h == 0 || self.ifmap_w == 0 {
             bail!("layer {}: ifmap dims must be positive", self.name);
@@ -120,11 +138,19 @@ impl ConvLayer {
 /// A workload layer: either a raw GEMM or a convolution.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Layer {
-    Gemm { name: String, shape: GemmShape },
+    /// A dense GEMM layer.
+    Gemm {
+        /// Layer name from the CSV.
+        name: String,
+        /// The GEMM dimensions.
+        shape: GemmShape,
+    },
+    /// A 2-D convolution layer.
     Conv(ConvLayer),
 }
 
 impl Layer {
+    /// The layer's name (either kind).
     pub fn name(&self) -> &str {
         match self {
             Layer::Gemm { name, .. } => name,
@@ -144,7 +170,9 @@ impl Layer {
 /// A named sequence of layers (one network).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Topology {
+    /// Workload name (CSV stem).
     pub name: String,
+    /// Layers in execution order.
     pub layers: Vec<Layer>,
 }
 
@@ -222,6 +250,7 @@ impl Topology {
         })
     }
 
+    /// Total multiply-accumulates across all layers.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.as_gemm().macs()).sum()
     }

@@ -15,20 +15,30 @@ use super::topology::GemmShape;
 /// One scheduled fold.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FoldRecord {
+    /// Fold sequence number.
     pub index: u64,
+    /// Cycle the fold starts computing.
     pub start_cycle: u64,
+    /// Cycle the fold finishes.
     pub end_cycle: u64,
+    /// Array rows occupied.
     pub rows_used: usize,
+    /// Array columns occupied.
     pub cols_used: usize,
+    /// Activation stream length.
     pub stream_len: usize,
+    /// Prefetch stall cycles charged to the fold.
     pub stall_cycles: u64,
 }
 
 /// The fold schedule of one GEMM.
 #[derive(Debug, Clone)]
 pub struct FoldTrace {
+    /// The traced GEMM.
     pub gemm: GemmShape,
+    /// Per-fold records in execution order.
     pub records: Vec<FoldRecord>,
+    /// Total cycles including fill and stalls.
     pub total_cycles: u64,
 }
 

@@ -28,6 +28,7 @@ use super::vpu::{latency_us as vpu_latency_us, VpuParams};
 /// GEMM-path constants.
 #[derive(Debug, Clone)]
 pub struct MxuParams {
+    /// MXU clock, GHz.
     pub clock_ghz: f64,
     /// Systolic array side.
     pub array: usize,
@@ -43,6 +44,7 @@ pub struct MxuParams {
     pub overhead_jitter_us: f64,
     /// HBM bandwidth, bytes/µs.
     pub hbm_bytes_per_us: f64,
+    /// Bytes per element (bf16 = 2).
     pub bytes_per_elem: f64,
     /// Amplitude of the large-regime compiler-tiling factor.
     pub tiling_jitter_large: f64,
@@ -76,12 +78,15 @@ impl Default for MxuParams {
 
 /// The synthetic device: MXU + VPU + noise stream.
 pub struct TpuV4Model {
+    /// GEMM-path constants.
     pub mxu: MxuParams,
+    /// Elementwise-path constants.
     pub vpu: VpuParams,
     prng: Prng,
 }
 
 impl TpuV4Model {
+    /// A device with the default constants and a seeded noise stream.
     pub fn new(seed: u64) -> TpuV4Model {
         TpuV4Model {
             mxu: MxuParams::default(),

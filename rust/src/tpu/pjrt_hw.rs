@@ -31,6 +31,7 @@ pub struct PjrtHardware {
 }
 
 impl PjrtHardware {
+    /// Connect to the PJRT CPU client (fails cleanly without the `pjrt` feature).
     pub fn new() -> Result<PjrtHardware> {
         Ok(PjrtHardware {
             runtime: Runtime::cpu()?,

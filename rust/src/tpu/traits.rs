@@ -14,6 +14,7 @@ use crate::util::stats;
 /// A device we can measure kernel latencies on. One call = one kernel
 /// execution (including run-to-run noise for the synthetic backend).
 pub trait Hardware {
+    /// Backend identifier for reports (e.g. `tpu_v4_model`, `pjrt_cpu`).
     fn name(&self) -> &str;
 
     /// Latency of one GEMM kernel execution, microseconds. On-chip

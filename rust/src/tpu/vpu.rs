@@ -26,6 +26,7 @@ use crate::util::prng::hash_dims;
 /// VPU model constants.
 #[derive(Debug, Clone)]
 pub struct VpuParams {
+    /// VPU clock, GHz.
     pub clock_ghz: f64,
     /// HBM bandwidth in bytes/µs (1.2e6 ≈ 1.2 TB/s).
     pub hbm_bytes_per_us: f64,
@@ -45,6 +46,7 @@ pub struct VpuParams {
     pub padding_waste_cap: f64,
     /// Amplitude of the deterministic per-shape jitter.
     pub shape_jitter: f64,
+    /// Bytes per element (bf16 = 2).
     pub bytes_per_elem: f64,
 }
 

@@ -7,9 +7,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positionals and `--key value` pairs.
 #[derive(Debug, Clone)]
 pub struct Args {
+    /// First bare word (e.g. `simulate`).
     pub subcommand: Option<String>,
+    /// Bare words after the subcommand.
     pub positional: Vec<String>,
     kv: BTreeMap<String, String>,
     consumed: std::cell::RefCell<Vec<String>>,
@@ -21,6 +24,7 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Parse an explicit argument iterator (tests and embedding).
     pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
         let mut subcommand = None;
         let mut positional = Vec::new();
@@ -59,24 +63,29 @@ impl Args {
         self.consumed.borrow_mut().push(key.to_string());
     }
 
+    /// Was `--key` provided (with or without a value)?
     pub fn has(&self, key: &str) -> bool {
         self.mark(key);
         self.kv.contains_key(key)
     }
 
+    /// The raw value of `--key`, if provided.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.mark(key);
         self.kv.get(key).map(String::as_str)
     }
 
+    /// String value of `--key`, or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// True when `--key` was given as a bare flag (or `=true`).
     pub fn flag(&self, key: &str) -> bool {
         self.get(key).map(|v| v != "false").unwrap_or(false)
     }
 
+    /// Integer value of `--key`, or `default`; panics on a non-integer.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         match self.get(key) {
             Some(v) => v
@@ -86,6 +95,7 @@ impl Args {
         }
     }
 
+    /// u64 value of `--key`, or `default`; panics on a non-integer.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         match self.get(key) {
             Some(v) => v
@@ -95,6 +105,7 @@ impl Args {
         }
     }
 
+    /// Float value of `--key`, or `default`; panics on a non-number.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         match self.get(key) {
             Some(v) => v

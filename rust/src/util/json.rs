@@ -12,15 +12,22 @@ use std::fmt;
 /// A JSON value. Objects use a BTreeMap so output is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (all JSON numbers are f64 here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with deterministic key order.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object (build with [`Json::set`]).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -36,6 +43,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup; `None` on non-objects.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -43,6 +51,7 @@ impl Json {
         }
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -50,10 +59,12 @@ impl Json {
         }
     }
 
+    /// The number value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,6 +72,7 @@ impl Json {
         }
     }
 
+    /// The bool value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -68,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -82,6 +95,7 @@ impl Json {
             .ok_or_else(|| JsonError::new(format!("missing/invalid number field '{key}'")))
     }
 
+    /// Required string field.
     pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
         self.get(key)
             .and_then(Json::as_str)
@@ -100,12 +114,14 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// Required array field.
     pub fn req_arr(&self, key: &str) -> Result<&[Json], JsonError> {
         self.get(key)
             .and_then(Json::as_arr)
             .ok_or_else(|| JsonError::new(format!("missing/invalid array field '{key}'")))
     }
 
+    /// Required array-of-numbers field.
     pub fn num_arr(&self, key: &str) -> Result<Vec<f64>, JsonError> {
         let arr = self.req_arr(key)?;
         arr.iter()
@@ -116,10 +132,12 @@ impl Json {
             .collect()
     }
 
+    /// An array from a float slice.
     pub fn from_f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// An array from an integer slice.
     pub fn from_usizes(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
@@ -236,10 +254,12 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Error with byte offset for diagnostics.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// Human-readable description.
     pub msg: String,
 }
 
 impl JsonError {
+    /// Wrap a message.
     pub fn new(msg: impl Into<String>) -> Self {
         Self { msg: msg.into() }
     }

@@ -6,12 +6,18 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, most to least severe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// High-level progress (the default).
     Info = 2,
+    /// Developer detail.
     Debug = 3,
+    /// Per-iteration firehose.
     Trace = 4,
 }
 
@@ -29,10 +35,12 @@ fn init_from_env() -> u8 {
     lvl
 }
 
+/// Override the log level programmatically (wins over `SCALESIM_LOG`).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Is `level` currently emitted? Initialises from the environment on first call.
 pub fn enabled(level: Level) -> bool {
     let mut cur = LEVEL.load(Ordering::Relaxed);
     if cur == 255 {
@@ -41,6 +49,7 @@ pub fn enabled(level: Level) -> bool {
     (level as u8) <= cur
 }
 
+/// Write one message to stderr if `level` is enabled (use the `log_*` macros).
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(level) {
         let tag = match level {
@@ -54,6 +63,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at info level with `format!` syntax.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -65,6 +75,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at warn level with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -76,6 +87,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at debug level with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {
@@ -87,6 +99,7 @@ macro_rules! log_debug {
     };
 }
 
+/// Log at error level with `format!` syntax.
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => {

@@ -13,10 +13,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the mixer.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 pseudo-random bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -56,6 +58,7 @@ impl Prng {
         Prng::new(self.next_u64() ^ h)
     }
 
+    /// Next 64 pseudo-random bits of the main stream.
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
             .rotate_left(23)

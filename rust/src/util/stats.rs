@@ -20,6 +20,7 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
 }
 
+/// Population standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
@@ -52,6 +53,7 @@ pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum, `-inf` on empty input.
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -168,16 +170,24 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 /// A bundle of every fit metric the paper reports, computed in one pass.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FitMetrics {
+    /// Number of (truth, prediction) pairs.
     pub n: usize,
+    /// Coefficient of determination.
     pub r2: f64,
+    /// Root-mean-square error.
     pub rmse: f64,
+    /// Mean absolute error.
     pub mae: f64,
+    /// Mean absolute percentage error.
     pub mape_pct: f64,
+    /// Median absolute error.
     pub median_abs_err: f64,
+    /// Median relative error, percent.
     pub median_rel_err_pct: f64,
 }
 
 impl FitMetrics {
+    /// Compute every metric over parallel truth/prediction slices.
     pub fn compute(truth: &[f64], pred: &[f64]) -> Self {
         Self {
             n: truth.len(),

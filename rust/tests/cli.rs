@@ -237,6 +237,85 @@ fn simulate_module_json_emits_full_table() {
 }
 
 #[test]
+fn simulate_module_memory_reports_residency_and_roofline() {
+    let s = Scratch::new("module_memory");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--memory",
+    ]);
+    assert!(ok, "{stdout}");
+    for needle in [
+        "memory-aware:",
+        "serialized bound",
+        "dma busy",
+        "residency",
+        "cold fetches",
+        "roofline:",
+    ] {
+        assert!(stdout.contains(needle), "missing '{needle}' in: {stdout}");
+    }
+
+    // The distributed path threads the same model through the slice.
+    let (dist_out, _, ok) = run(&[
+        "simulate", "--module", &module, "--chips", "4", "--shapes", "30", "--reps", "1",
+        "--assets", &assets, "--memory",
+    ]);
+    assert!(ok, "{dist_out}");
+    assert!(dist_out.contains("dma us"), "{dist_out}");
+    assert!(dist_out.contains("per-chip dma busy"), "{dist_out}");
+}
+
+#[test]
+fn simulate_module_memory_json_schema() {
+    use scalesim_tpu::util::json::Json;
+
+    let s = Scratch::new("module_memory_json");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--memory", "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let j = Json::parse(stdout.trim()).expect("one JSON object on stdout");
+    let scheduled = j.req_f64("scheduled_us").unwrap();
+    let memory_us = j.req_f64("memory_us").unwrap();
+    assert!(
+        memory_us >= scheduled,
+        "memory-aware {memory_us} beat compute-only {scheduled}"
+    );
+    let mem = j.get("memory").expect("memory block");
+    assert!(mem.req_f64("serialized_bound_us").unwrap() >= memory_us);
+    assert!(mem.req_f64("cold_bytes").unwrap() > 0.0);
+    let roofline = j.get("roofline").expect("roofline block");
+    assert!(roofline.req_str("verdict").is_ok());
+    assert_eq!(roofline.req_arr("ops").unwrap().len(), 33);
+    // Every op row gains the dma/residency fields.
+    let ops = j.req_arr("ops").unwrap();
+    assert_eq!(ops.len(), 33);
+    for op in ops {
+        assert!(op.req_f64("dma_in_us").unwrap() >= 0.0);
+        assert!(op.req_f64("dma_out_us").unwrap() >= 0.0);
+        assert!(op.get("resident").is_some(), "{op:?}");
+        let bound = op.req_str("bound").unwrap();
+        assert!(["compute", "bandwidth", "free"].contains(&bound), "{bound}");
+    }
+    // Without --memory the schema is unchanged: no memory keys.
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let j = Json::parse(stdout.trim()).unwrap();
+    assert!(j.get("memory_us").is_none());
+    assert!(j.req_arr("ops").unwrap()[0].get("dma_in_us").is_none());
+}
+
+#[test]
 fn simulate_gemm_with_chips() {
     let (stdout, _, ok) = run(&[
         "simulate", "--m", "4096", "--k", "1024", "--n", "1024", "--chips", "4", "--ici-gbps",

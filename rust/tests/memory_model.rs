@@ -1,0 +1,313 @@
+//! Memory-model invariants over random DAGs and every checked-in
+//! `.mlir` fixture.
+//!
+//! The load-bearing properties (all exact, no epsilon — they follow
+//! from the monotonicity of `max`/`+` on non-negative floats):
+//!
+//! * compute-only makespan `<=` memory-aware makespan `<=` the
+//!   serialized bound (every compute op and cold transfer back to
+//!   back);
+//! * the infinite config (unbounded buffer + infinite bandwidth) is
+//!   **bit-identical** to the compute-only schedule — single-chip and
+//!   across a distributed slice;
+//! * a zero-byte buffer never hits; no buffer out-hits the unbounded
+//!   one; cold traffic never drops below the unbounded buffer's
+//!   first-touch traffic;
+//! * with uniform tensor sizes (LRU inclusion holds), hits are
+//!   monotone non-decreasing in buffer size.
+
+use std::path::Path;
+
+use scalesim_tpu::calibrate::fit_regime_calibration;
+use scalesim_tpu::coordinator::Estimator;
+use scalesim_tpu::distributed::{
+    estimate_module_distributed, estimate_module_distributed_memory, SliceConfig,
+};
+use scalesim_tpu::frontend::{parse_module, ModuleInfo};
+use scalesim_tpu::graph::{schedule_estimate, EngineConfig};
+use scalesim_tpu::memory::{schedule_estimate_memory, MemoryConfig, MemorySchedule};
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+use scalesim_tpu::util::prng::Prng;
+
+fn estimator() -> Estimator {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+}
+
+/// A random type-consistent DAG over square `DxD` f32 tensors (uniform
+/// footprints, so the LRU inclusion property applies), mixing MXU
+/// (dot), VPU (add/multiply/maximum/tanh) and DMA (transpose) work.
+fn random_dag_module(prng: &mut Prng, d: usize) -> String {
+    let n_ops = 4 + prng.index(12);
+    let mut vals: Vec<String> = vec!["a".into(), "b".into()];
+    let mut body = String::new();
+    for i in 0..n_ops {
+        let x = vals[prng.index(vals.len())].clone();
+        let y = vals[prng.index(vals.len())].clone();
+        let line = match prng.index(6) {
+            0 => format!(
+                "    %v{i} = stablehlo.dot_general %{x}, %{y}, contracting_dims = [1] x [0] : (tensor<{d}x{d}xf32>, tensor<{d}x{d}xf32>) -> tensor<{d}x{d}xf32>\n"
+            ),
+            1 => format!("    %v{i} = stablehlo.add %{x}, %{y} : tensor<{d}x{d}xf32>\n"),
+            2 => format!("    %v{i} = stablehlo.multiply %{x}, %{y} : tensor<{d}x{d}xf32>\n"),
+            3 => format!("    %v{i} = stablehlo.maximum %{x}, %{y} : tensor<{d}x{d}xf32>\n"),
+            4 => format!("    %v{i} = stablehlo.tanh %{x} : tensor<{d}x{d}xf32>\n"),
+            _ => format!(
+                "    %v{i} = stablehlo.transpose %{x}, dims = [1, 0] : (tensor<{d}x{d}xf32>) -> tensor<{d}x{d}xf32>\n"
+            ),
+        };
+        body.push_str(&line);
+        vals.push(format!("v{i}"));
+    }
+    let last = vals.last().unwrap();
+    format!(
+        "module @rand_mem {{\n  func.func @main(%a: tensor<{d}x{d}xf32>, %b: tensor<{d}x{d}xf32>) -> tensor<{d}x{d}xf32> {{\n{body}    return %{last} : tensor<{d}x{d}xf32>\n  }}\n}}"
+    )
+}
+
+/// Structural sanity of the per-op memory rows.
+fn check_rows(mem: &MemorySchedule, label: &str) {
+    let mut hits = 0usize;
+    let mut cold = 0usize;
+    let mut cold_bytes = 0u64;
+    let mut writeback_bytes = 0u64;
+    for op in &mem.ops {
+        assert!(op.dma_in_us >= 0.0 && op.dma_out_us >= 0.0, "{label} {op:?}");
+        assert!(op.start_us <= op.end_us, "{label} {op:?}");
+        assert_eq!(op.resident(), op.cold_fetches == 0, "{label} {op:?}");
+        assert!(
+            ["compute", "bandwidth", "free"].contains(&op.bound()),
+            "{label} {op:?}"
+        );
+        hits += op.hits;
+        cold += op.cold_fetches;
+        cold_bytes += op.cold_bytes;
+        writeback_bytes += op.writeback_bytes;
+    }
+    assert_eq!(hits, mem.stats.hits, "{label}: per-op hits disagree");
+    assert_eq!(cold, mem.stats.cold_fetches, "{label}: per-op colds disagree");
+    assert_eq!(cold_bytes, mem.stats.cold_bytes, "{label}: cold bytes disagree");
+    assert_eq!(
+        writeback_bytes, mem.stats.writeback_bytes,
+        "{label}: write-back bytes disagree"
+    );
+}
+
+/// Assert every memory-model invariant on one module.
+fn check_invariants(est: &Estimator, module: &ModuleInfo, label: &str) {
+    let report = est.estimate_module(module);
+    let base = schedule_estimate(module, &report, EngineConfig::Tpu);
+
+    // Infinite buffer + infinite bandwidth: bit-identical to the
+    // compute-only schedule.
+    let inf = schedule_estimate_memory(
+        module,
+        &report,
+        EngineConfig::Tpu,
+        &MemoryConfig::infinite(),
+    );
+    assert_eq!(
+        inf.makespan_us().to_bits(),
+        base.makespan_us.to_bits(),
+        "{label}: infinite memory config diverged from the compute-only schedule"
+    );
+    assert_eq!(inf.dma_busy_us(), 0.0, "{label}");
+    assert_eq!(inf.ops.len(), base.ops.len(), "{label}");
+
+    let hbm = est.hbm_bytes_per_us();
+    let unbounded = schedule_estimate_memory(
+        module,
+        &report,
+        EngineConfig::Tpu,
+        &MemoryConfig::new(hbm, None),
+    );
+    check_rows(&unbounded, label);
+
+    for cap in [0u64, 64 << 10, 1 << 20, 32 << 20] {
+        let cfg = MemoryConfig::new(hbm, Some(cap));
+        let mem = schedule_estimate_memory(module, &report, EngineConfig::Tpu, &cfg);
+        // The exact bracket.
+        assert!(
+            base.makespan_us <= mem.makespan_us(),
+            "{label} (cap {cap}): memory-aware makespan {} beat compute-only {}",
+            mem.makespan_us(),
+            base.makespan_us
+        );
+        assert!(
+            mem.makespan_us() <= mem.serialized_bound_us,
+            "{label} (cap {cap}): makespan {} exceeds serialized bound {}",
+            mem.makespan_us(),
+            mem.serialized_bound_us
+        );
+        assert!(
+            mem.critical_path_us() <= mem.makespan_us(),
+            "{label} (cap {cap}): critical path above the makespan"
+        );
+        // Residency bounds: zero buffer never hits, no buffer out-hits
+        // the unbounded one, and first-touch traffic is the floor.
+        if cap == 0 {
+            assert_eq!(mem.stats.hits, 0, "{label}: hits with a zero buffer");
+        }
+        assert!(
+            mem.stats.hits <= unbounded.stats.hits,
+            "{label} (cap {cap}): {} hits beat the unbounded buffer's {}",
+            mem.stats.hits,
+            unbounded.stats.hits
+        );
+        assert!(
+            mem.stats.cold_bytes >= unbounded.stats.cold_bytes,
+            "{label} (cap {cap}): cold traffic below the first-touch floor"
+        );
+        check_rows(&mem, label);
+    }
+}
+
+#[test]
+fn prop_random_dags_bracketed_and_consistent() {
+    let mut prng = Prng::new(4242);
+    let est = estimator();
+    for case in 0..25 {
+        let d = 64 * (1 + prng.index(4));
+        let text = random_dag_module(&mut prng, d);
+        let module = parse_module(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        check_invariants(&est, &module, &format!("random case {case}"));
+    }
+}
+
+#[test]
+fn prop_all_mlir_fixtures_bracketed_and_consistent() {
+    let est = estimator();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("mlir") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let module = parse_module(&text).unwrap();
+        check_invariants(&est, &module, path.file_name().unwrap().to_str().unwrap());
+        seen += 1;
+    }
+    assert!(seen >= 3, "expected the checked-in fixtures, saw {seen}");
+}
+
+#[test]
+fn prop_hits_monotone_in_buffer_size_for_uniform_tensors() {
+    // 128x128xf32 = 64 KiB per tensor, uniform across the module: LRU is
+    // a stack algorithm here, so hits are monotone in capacity.
+    let mut prng = Prng::new(77);
+    let est = estimator();
+    let tensor = 128 * 128 * 4u64;
+    let caps: Vec<Option<u64>> = vec![
+        Some(0),
+        Some(tensor),
+        Some(2 * tensor),
+        Some(3 * tensor),
+        Some(5 * tensor),
+        Some(16 * tensor),
+        None,
+    ];
+    for case in 0..12 {
+        let text = random_dag_module(&mut prng, 128);
+        let module = parse_module(&text).unwrap();
+        let report = est.estimate_module(&module);
+        let mut last_hits = 0usize;
+        let mut last_cold = u64::MAX;
+        for cap in &caps {
+            let mem = schedule_estimate_memory(
+                &module,
+                &report,
+                EngineConfig::Tpu,
+                &MemoryConfig::new(est.hbm_bytes_per_us(), *cap),
+            );
+            assert!(
+                mem.stats.hits >= last_hits,
+                "case {case}: hits dropped from {last_hits} to {} at cap {cap:?}",
+                mem.stats.hits
+            );
+            assert!(
+                mem.stats.cold_bytes <= last_cold,
+                "case {case}: cold traffic grew at cap {cap:?}"
+            );
+            last_hits = mem.stats.hits;
+            last_cold = mem.stats.cold_bytes;
+        }
+    }
+}
+
+#[test]
+fn distributed_memory_brackets_and_infinite_identity() {
+    let est = estimator();
+    let text = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/bert_layer.mlir"),
+    )
+    .unwrap();
+    let module = parse_module(&text).unwrap();
+    for chips in [1usize, 4] {
+        let slice = SliceConfig::ring(chips, 100.0);
+        let plain = estimate_module_distributed(&est, &module, &slice);
+        // Infinite config: the memory-aware walk is bit-identical to the
+        // memory-blind one — totals, busy split and critical path.
+        let inf =
+            estimate_module_distributed_memory(&est, &module, &slice, &MemoryConfig::infinite());
+        assert_eq!(inf.total_us.to_bits(), plain.total_us.to_bits(), "{chips} chips");
+        assert_eq!(inf.compute_us.to_bits(), plain.compute_us.to_bits());
+        assert_eq!(inf.collective_us.to_bits(), plain.collective_us.to_bits());
+        assert_eq!(
+            inf.critical_path_us.to_bits(),
+            plain.critical_path_us.to_bits()
+        );
+        assert_eq!(inf.dma_us, 0.0);
+        // A finite config pays real HBM traffic and can only slow the
+        // per-chip timeline down.
+        let mem = estimate_module_distributed_memory(
+            &est,
+            &module,
+            &slice,
+            &MemoryConfig::new(est.hbm_bytes_per_us(), Some(32 << 20)),
+        );
+        assert!(mem.dma_us > 0.0, "{chips} chips: no HBM traffic modeled");
+        assert!(
+            mem.total_us >= plain.total_us,
+            "{chips} chips: memory-aware {} beat memory-blind {}",
+            mem.total_us,
+            plain.total_us
+        );
+        assert!(mem.critical_path_us <= mem.total_us);
+        for op in &mem.ops {
+            assert!(op.dma_us >= 0.0 && op.start_us <= op.finish_us, "{op:?}");
+        }
+    }
+}
+
+#[test]
+fn smaller_hbm_bandwidth_never_speeds_up_the_module() {
+    let est = estimator();
+    let text = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/bert_layer.mlir"),
+    )
+    .unwrap();
+    let module = parse_module(&text).unwrap();
+    let report = est.estimate_module(&module);
+    let mut last = f64::INFINITY;
+    // Bandwidth sweep from starved to generous: makespan is monotone
+    // non-increasing in bandwidth.
+    for bw in [1e4f64, 1e5, 1e6, 1e7] {
+        let mem = schedule_estimate_memory(
+            &module,
+            &report,
+            EngineConfig::Tpu,
+            &MemoryConfig::new(bw, Some(32 << 20)),
+        );
+        assert!(
+            mem.makespan_us() <= last,
+            "makespan grew with bandwidth at {bw}"
+        );
+        last = mem.makespan_us();
+    }
+}

@@ -8,7 +8,7 @@
 #   calibrate        build + save modeling assets
 #   serve            streaming JSONL estimation service (sharded cache)
 
-.PHONY: build test bench bench-schedule artifacts fmt clippy doc check
+.PHONY: build test bench bench-schedule bench-devices devices artifacts fmt clippy doc check
 
 build:
 	cargo build --release
@@ -25,6 +25,19 @@ bench:
 # §Perf Schedule).
 bench-schedule:
 	cargo bench --bench schedule
+
+# Per-module estimate throughput across the device presets (guards the
+# DeviceSpec refactor against per-op lookup overhead).
+bench-devices:
+	cargo bench --bench device_sweep
+
+# Round-trip every checked-in device file through the loader, verify the
+# preset-named ones match the registry, and smoke the compare path
+# against all presets (the CI device job).
+devices: build
+	cargo run --release -- devices --check --dir rust/devices
+	cargo run --release -- compare --module rust/tests/fixtures/bert_layer.mlir \
+		--chips 4 --shapes 30 --reps 1 --assets target/device-smoke-assets
 
 fmt:
 	cargo fmt --all --check

@@ -7,6 +7,7 @@
 //!   cargo run --release --example calibrate_tpu -- pjrt      # real PJRT runs
 
 use scalesim_tpu::experiments::{assets, fig2, fig4};
+use scalesim_tpu::device::DeviceSpec;
 use scalesim_tpu::scalesim::ScaleConfig;
 use scalesim_tpu::tpu::{Hardware, PjrtHardware, TpuV4Model};
 
@@ -19,7 +20,7 @@ fn main() -> anyhow::Result<()> {
             // Real executions are slow; use the reduced calibration set.
             let mut hw = PjrtHardware::new()?;
             println!("calibrating against real PJRT executions ({})...", hw.name());
-            let est = assets::build_estimator_fast(&mut hw, &config, 3, 42);
+            let est = assets::build_estimator_fast(&mut hw, &DeviceSpec::tpu_v4(), 3, 42);
             for (regime, m) in &est.calibration.metrics {
                 println!("  {regime}: {m}");
             }

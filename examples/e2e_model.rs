@@ -19,11 +19,11 @@
 use std::path::Path;
 
 use scalesim_tpu::coordinator::Estimator;
+use scalesim_tpu::device::DeviceSpec;
 use scalesim_tpu::experiments::assets;
 use scalesim_tpu::frontend::parse_module;
 use scalesim_tpu::report::Table;
 use scalesim_tpu::runtime::{f32_literal, Literal, Runtime};
-use scalesim_tpu::scalesim::ScaleConfig;
 use scalesim_tpu::tpu::PjrtHardware;
 use scalesim_tpu::util::stats;
 
@@ -47,14 +47,13 @@ fn main() -> anyhow::Result<()> {
 
     // --- Calibrate against the same backend we will measure on. ---
     println!("[1/3] calibrating SCALE-Sim against real PJRT executions...");
-    let config = ScaleConfig::tpu_v4();
     let assets_dir = artifacts.join("assets_pjrt");
     let est: Estimator = if assets_dir.join("calibration.json").exists() {
         println!("      (cached: {})", assets_dir.display());
         assets::load_assets(&assets_dir)?
     } else {
         let mut hw = PjrtHardware::new()?;
-        let est = assets::build_estimator_fast(&mut hw, &config, 3, 42);
+        let est = assets::build_estimator_fast(&mut hw, &DeviceSpec::tpu_v4(), 3, 42);
         assets::save_assets(&assets_dir, &est)?;
         est
     };

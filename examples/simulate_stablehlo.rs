@@ -9,10 +9,10 @@
 
 use std::path::PathBuf;
 
+use scalesim_tpu::device::DeviceSpec;
 use scalesim_tpu::experiments::assets;
 use scalesim_tpu::frontend::{classify, parse_module, OpClass};
 use scalesim_tpu::report::Table;
-use scalesim_tpu::scalesim::ScaleConfig;
 use scalesim_tpu::tpu::TpuV4Model;
 
 fn main() -> anyhow::Result<()> {
@@ -50,12 +50,12 @@ fn main() -> anyhow::Result<()> {
     println!("classification census: {census:?}\n");
 
     // Build (or load cached) modeling assets, then estimate.
-    let config = ScaleConfig::tpu_v4();
+    let device = DeviceSpec::tpu_v4();
     let mut hw = TpuV4Model::new(42);
     let est = assets::load_or_build(
         &PathBuf::from("artifacts/assets"),
         &mut hw,
-        &config,
+        &device,
         1200,
         3,
         42,

@@ -1,0 +1,70 @@
+//! Benchmark: per-module estimate throughput across the device presets.
+//!
+//! The DeviceSpec refactor threads a device through the estimator's hot
+//! path (fingerprint in every cache key, the elementwise transfer
+//! scale), so this bench guards against per-op spec-lookup overhead
+//! creeping in: it measures warm-cache module estimates per second on
+//! each preset, plus the cold-cache retarget cost, over the checked-in
+//! BERT-layer fixture. `harness = false` like the other benches (no
+//! criterion in the offline registry). Run via
+//! `cargo bench --bench device_sweep` or `make bench-devices`.
+
+use std::time::Instant;
+
+use scalesim_tpu::calibrate::fit_regime_calibration;
+use scalesim_tpu::coordinator::Estimator;
+use scalesim_tpu::device::DeviceSpec;
+use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+
+const BERT: &str = include_str!("../tests/fixtures/bert_layer.mlir");
+
+fn estimator() -> Estimator {
+    let mut obs = Vec::new();
+    for d in [32usize, 64, 96, 128, 256, 512, 1024, 2048, 4096] {
+        let g = GemmShape::new(d, d, d);
+        obs.push((g, (d * d) as u64, (d * d) as f64 * 1e-3 + 1.0));
+    }
+    Estimator::new(ScaleConfig::tpu_v4(), fit_regime_calibration(&obs).unwrap())
+}
+
+fn main() {
+    let base = estimator();
+    let module = parse_module(BERT).expect("bert fixture parses");
+    let ops = module.entry().map(|f| f.ops.len()).unwrap_or(0);
+    let iters = 2_000usize;
+
+    for spec in DeviceSpec::presets() {
+        // Retarget + first (cold) walk: what one new device costs.
+        let t0 = Instant::now();
+        let est = base.retarget(&spec);
+        let cold = est.estimate_module(&module);
+        let cold_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        // Warm walks: the serve steady state (shared cache, all hits).
+        let t1 = Instant::now();
+        let mut checksum = 0.0f64;
+        for _ in 0..iters {
+            checksum += est.estimate_module(&module).total_us;
+        }
+        let dt = t1.elapsed().as_secs_f64();
+        println!(
+            "device {} ({ops} ops): cold {cold_us:.0} us, warm {:.1} us/estimate, {:.0} estimates/s (total {:.2} us, checksum {checksum:.1})",
+            spec.name,
+            dt * 1e6 / iters as f64,
+            iters as f64 / dt,
+            cold.total_us,
+        );
+    }
+
+    // All presets share the base cache: entries must accumulate per
+    // device, never alias (4 devices x same shapes).
+    let stats = base.cache.stats();
+    println!(
+        "shared cache after sweep: {} entries, {} hits, {} misses ({:.1}% hit rate)",
+        stats.entries,
+        stats.hits,
+        stats.misses,
+        stats.hit_rate() * 100.0
+    );
+}

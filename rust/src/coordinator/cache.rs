@@ -2,7 +2,8 @@
 //!
 //! Downstream compiler tooling queries the service with heavy shape
 //! repetition — many models share layer dimensions — so the estimator
-//! memoises per-op results keyed by (op class, shape, dtype). The map is
+//! memoises per-op results keyed by (device fingerprint, op class,
+//! shape, dtype). The map is
 //! striped over N mutex-guarded shards (the key hash picks the shard) so
 //! concurrent workers rarely contend on the same lock, and hit/miss plus
 //! per-source counters are lock-free atomics. Cached and uncached
@@ -27,13 +28,33 @@ use super::estimator::{EstimateMode, EstimateSource, OpEstimate};
 /// to 16 threads) rarely collides on one lock.
 pub const DEFAULT_SHARDS: usize = 16;
 
+/// The identity of an op's cost: which cost model it was computed
+/// against (the estimator's cache fingerprint — its
+/// [`DeviceSpec::fingerprint`](crate::device::DeviceSpec::fingerprint)
+/// mixed with the active systolic config and HBM bandwidth) plus the
+/// device-independent [`ShapeClass`].
+///
+/// The fingerprint is part of the key so estimators retargeted onto
+/// different [`DeviceSpec`](crate::device::DeviceSpec)s can share one
+/// cache — a serve stream mixing `"device"` fields must never alias
+/// entries for the same shape (regression-tested in
+/// `tests/device_spec.rs`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    /// Fingerprint of the cost model the entry was computed against.
+    pub device: u64,
+    /// The device-independent shape identity.
+    pub shape: ShapeClass,
+}
+
 /// The shape-level identity of an op's cost.
 ///
-/// Everything the estimator's cost functions read is captured here, so an
-/// entry is valid for any op instance with the same class/shape/dtype
+/// Everything the estimator's cost functions read — besides the device
+/// spec, which the wrapping [`ShapeKey`] carries — is captured here, so
+/// an entry is valid for any op instance with the same class/shape/dtype
 /// regardless of its position or SSA name in the module.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub enum ShapeKey {
+pub enum ShapeClass {
     /// Systolic GEMM (dot_general, or convolution after im2col lowering).
     Gemm {
         /// The GEMM dimensions.
@@ -73,34 +94,48 @@ pub enum ShapeKey {
 }
 
 impl ShapeKey {
-    /// The cache identity of one collective on one slice.
+    /// The cache identity of one collective on one slice, on the device
+    /// with fingerprint `device`.
     pub fn collective(
+        device: u64,
         kind: CollectiveKind,
         bytes_in: u64,
         bytes_out: u64,
         slice: &SliceConfig,
     ) -> ShapeKey {
-        ShapeKey::Collective {
-            kind,
-            bytes_in,
-            bytes_out,
-            chips: slice.chips,
-            topology: slice.topology,
-            link_gbps_bits: slice.link_gbps.to_bits(),
-            hop_us_bits: slice.hop_latency_us.to_bits(),
+        ShapeKey {
+            device,
+            shape: ShapeClass::Collective {
+                kind,
+                bytes_in,
+                bytes_out,
+                chips: slice.chips,
+                topology: slice.topology,
+                link_gbps_bits: slice.link_gbps.to_bits(),
+                hop_us_bits: slice.hop_latency_us.to_bits(),
+            },
         }
     }
-    /// The cacheable identity of a classified op, if it has one. The
-    /// bandwidth/free classes are a handful of arithmetic ops — cheaper
-    /// than the map probe they would save.
-    pub fn of_class(class: &OpClass) -> Option<ShapeKey> {
+
+    /// The cacheable identity of a classified op on the device with
+    /// fingerprint `device`, if it has one. The bandwidth/free classes
+    /// are a handful of arithmetic ops — cheaper than the map probe they
+    /// would save.
+    pub fn of_class(device: u64, class: &OpClass) -> Option<ShapeKey> {
+        ShapeClass::of_class(class).map(|shape| ShapeKey { device, shape })
+    }
+}
+
+impl ShapeClass {
+    /// The device-independent identity of a classified op, if it has one.
+    pub fn of_class(class: &OpClass) -> Option<ShapeClass> {
         match class {
             OpClass::SystolicGemm { gemm, count }
-            | OpClass::SystolicConv { gemm, count, .. } => Some(ShapeKey::Gemm {
+            | OpClass::SystolicConv { gemm, count, .. } => Some(ShapeClass::Gemm {
                 gemm: *gemm,
                 count: *count,
             }),
-            OpClass::Elementwise { kind, out } => Some(ShapeKey::Elementwise {
+            OpClass::Elementwise { kind, out } => Some(ShapeClass::Elementwise {
                 kind: *kind,
                 dims: out.dims.clone(),
                 dtype: out.dtype,
@@ -394,9 +429,16 @@ mod tests {
     use super::*;
 
     fn gemm_key(d: usize) -> ShapeKey {
-        ShapeKey::Gemm {
-            gemm: GemmShape::new(d, d, d),
-            count: 1,
+        gemm_key_on(0, d)
+    }
+
+    fn gemm_key_on(device: u64, d: usize) -> ShapeKey {
+        ShapeKey {
+            device,
+            shape: ShapeClass::Gemm {
+                gemm: GemmShape::new(d, d, d),
+                count: 1,
+            },
         }
     }
 
@@ -446,24 +488,47 @@ mod tests {
             assert_eq!(c.lookup(&gemm_key(d)).unwrap().latency_us, d as f64);
         }
         // Same dims, different count → different key.
-        let k2 = ShapeKey::Gemm {
-            gemm: GemmShape::new(8, 8, 8),
-            count: 2,
+        let k2 = ShapeKey {
+            device: 0,
+            shape: ShapeClass::Gemm {
+                gemm: GemmShape::new(8, 8, 8),
+                count: 2,
+            },
         };
         assert!(c.lookup(&k2).is_none());
     }
 
     #[test]
+    fn same_shape_on_different_devices_does_not_alias() {
+        // The regression behind the device refactor: one shared cache
+        // serving estimators for several devices must keep their entries
+        // apart even for identical shapes.
+        let c = ShardedCache::new();
+        c.store(gemm_key_on(1, 64), cost(1.0));
+        c.store(gemm_key_on(2, 64), cost(2.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup(&gemm_key_on(1, 64)).unwrap().latency_us, 1.0);
+        assert_eq!(c.lookup(&gemm_key_on(2, 64)).unwrap().latency_us, 2.0);
+        assert!(c.lookup(&gemm_key_on(3, 64)).is_none());
+    }
+
+    #[test]
     fn elementwise_keys_include_dtype() {
-        let a = ShapeKey::Elementwise {
-            kind: EwKind::Add,
-            dims: vec![128, 128],
-            dtype: DType::Bf16,
+        let a = ShapeKey {
+            device: 0,
+            shape: ShapeClass::Elementwise {
+                kind: EwKind::Add,
+                dims: vec![128, 128],
+                dtype: DType::Bf16,
+            },
         };
-        let b = ShapeKey::Elementwise {
-            kind: EwKind::Add,
-            dims: vec![128, 128],
-            dtype: DType::F32,
+        let b = ShapeKey {
+            device: 0,
+            shape: ShapeClass::Elementwise {
+                kind: EwKind::Add,
+                dims: vec![128, 128],
+                dtype: DType::F32,
+            },
         };
         assert_ne!(a, b);
         let c = ShardedCache::new();
@@ -475,18 +540,18 @@ mod tests {
     #[test]
     fn collective_keys_carry_the_slice_config() {
         let slice4 = SliceConfig::ring(4, 100.0);
-        let a = ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &slice4);
-        // Different chip count, bandwidth, hop latency or topology each
-        // produce a distinct key.
+        let a = ShapeKey::collective(0, CollectiveKind::AllReduce, 1 << 20, 1 << 20, &slice4);
+        // Different chip count, bandwidth, hop latency, topology or
+        // device each produce a distinct key.
         let slice8 = SliceConfig::ring(8, 100.0);
         assert_ne!(
             a,
-            ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &slice8)
+            ShapeKey::collective(0, CollectiveKind::AllReduce, 1 << 20, 1 << 20, &slice8)
         );
         let fat = SliceConfig::ring(4, 200.0);
         assert_ne!(
             a,
-            ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &fat)
+            ShapeKey::collective(0, CollectiveKind::AllReduce, 1 << 20, 1 << 20, &fat)
         );
         let torus = SliceConfig {
             chips: 4,
@@ -496,7 +561,11 @@ mod tests {
         };
         assert_ne!(
             a,
-            ShapeKey::collective(CollectiveKind::AllReduce, 1 << 20, 1 << 20, &torus)
+            ShapeKey::collective(0, CollectiveKind::AllReduce, 1 << 20, 1 << 20, &torus)
+        );
+        assert_ne!(
+            a,
+            ShapeKey::collective(7, CollectiveKind::AllReduce, 1 << 20, 1 << 20, &slice4)
         );
         // And collective entries never collide with plain gemm entries.
         let c = ShardedCache::new();

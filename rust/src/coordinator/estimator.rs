@@ -6,8 +6,10 @@
 //! per-op table plus totals and coverage statistics.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::calibrate::RegimeCalibration;
+use crate::device::DeviceSpec;
 use crate::frontend::classify::{classify, EwKind, OpClass};
 use crate::frontend::opinfo::ModuleInfo;
 use crate::learned::features::featurize;
@@ -128,38 +130,205 @@ impl ModelEstimate {
     }
 }
 
-/// The estimator: config + calibration + learned models.
+/// The estimator: device model + config + calibration + learned models.
 pub struct Estimator {
-    /// SCALE-Sim architecture config for systolic simulation.
+    /// SCALE-Sim architecture config for systolic simulation. Prefer
+    /// [`Estimator::set_config`] over assigning this field directly:
+    /// the setter keeps the cache identity in sync, direct assignment
+    /// on an estimator that already memoised estimates does not.
     pub config: ScaleConfig,
-    /// Per-regime cycle-to-time linear calibration.
+    /// Per-regime cycle-to-time linear calibration, already transferred
+    /// onto this estimator's device.
     pub calibration: RegimeCalibration,
     /// Per-operator learned models (keyed by EwKind name).
     pub learned: HashMap<String, Hgbr>,
     /// Flattened inference forms (built lazily from `learned`; see
     /// EXPERIMENTS.md §Perf L3 — ~4x faster than tree walking).
     compiled: std::sync::RwLock<HashMap<String, CompiledHgbr>>,
-    /// HBM bandwidth for the data-movement fallback, bytes/µs. Private:
-    /// it feeds cached costs, so mutation must go through
-    /// [`Estimator::set_hbm_bytes_per_us`], which invalidates the cache.
+    /// HBM bandwidth for the data-movement fallback, bytes/µs. Private
+    /// and immutable: it feeds cached costs (it is part of `cache_fp`),
+    /// so a different bandwidth means a different estimator
+    /// ([`Estimator::for_device`] / [`Estimator::retarget`]).
     hbm_bytes_per_us: f64,
+    /// The device this estimator answers for. Private: every derived
+    /// field (`config`, `hbm_bytes_per_us`, the cache fingerprint, the
+    /// elementwise transfer scale) must move with it, so switching
+    /// devices goes through [`Estimator::retarget`].
+    device: DeviceSpec,
+    /// Cached [`DeviceSpec::fingerprint`] of `device` (the "same
+    /// hardware?" identity [`Estimator::retarget`] compares).
+    device_fp: u64,
+    /// The cost-model identity folded into every [`ShapeKey`]: the
+    /// device fingerprint mixed with the *active* systolic config and
+    /// HBM bandwidth. Estimators sharing a cache can then never alias
+    /// even if one was constructed with a config its device tag does
+    /// not imply (e.g. an asset file's saved config).
+    cache_fp: u64,
+    /// Latency multiplier applied to learned elementwise predictions
+    /// (the models are trained on `ref_device`); exactly 1 on the
+    /// reference device.
+    ew_scale: f64,
+    /// The device the calibration + learned models were measured on
+    /// (the retarget source; see [`Estimator::retarget`]).
+    ref_device: DeviceSpec,
+    /// The calibration as measured on `ref_device`, before any transfer.
+    ref_calibration: RegimeCalibration,
     /// Sharded shape-keyed memo cache: repeated shapes (the common case
     /// when many models share layer dimensions) skip cycle-accurate
-    /// re-simulation entirely. See [`super::cache`].
-    pub cache: ShardedCache,
+    /// re-simulation entirely. Behind an [`Arc`] so estimators
+    /// retargeted onto other devices share one cache (and one set of
+    /// hit/miss/mode counters). See [`super::cache`].
+    pub cache: Arc<ShardedCache>,
 }
 
 impl Estimator {
-    /// An estimator with no learned models and an empty cache.
+    /// The [`ShapeKey`] fingerprint: the device identity mixed with the
+    /// active systolic config and HBM bandwidth — everything a cached
+    /// cost depends on besides the shape itself (the calibration and
+    /// learned-model set are pure functions of the device within one
+    /// retarget lineage, and [`Estimator::add_learned`] clears the
+    /// cache).
+    fn mix_cache_fp(device_fp: u64, config: &ScaleConfig, hbm_bytes_per_us: f64) -> u64 {
+        let mut h = device_fp ^ 0x9e37_79b9_7f4a_7c15;
+        let mut put = |v: u64| {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        put(config.array_rows as u64);
+        put(config.array_cols as u64);
+        put(match config.dataflow {
+            crate::scalesim::Dataflow::OutputStationary => 0,
+            crate::scalesim::Dataflow::WeightStationary => 1,
+            crate::scalesim::Dataflow::InputStationary => 2,
+        });
+        put(config.ifmap_sram_kb as u64);
+        put(config.filter_sram_kb as u64);
+        put(config.ofmap_sram_kb as u64);
+        put(config.ifmap_dram_bw.to_bits());
+        put(config.filter_dram_bw.to_bits());
+        put(config.ofmap_dram_bw.to_bits());
+        put(config.word_bytes as u64);
+        put(config.freq_mhz.to_bits());
+        put(hbm_bytes_per_us.to_bits());
+        h
+    }
+
+    /// An estimator with no learned models and an empty cache, answering
+    /// for the reference device ([`DeviceSpec::tpu_v4`]).
     pub fn new(config: ScaleConfig, calibration: RegimeCalibration) -> Estimator {
+        let device = DeviceSpec::tpu_v4();
+        let device_fp = device.fingerprint();
+        let hbm_bytes_per_us = 1.2e6;
+        let cache_fp = Estimator::mix_cache_fp(device_fp, &config, hbm_bytes_per_us);
         Estimator {
             config,
-            calibration,
+            calibration: calibration.clone(),
             learned: HashMap::new(),
             compiled: std::sync::RwLock::new(HashMap::new()),
-            hbm_bytes_per_us: 1.2e6,
-            cache: ShardedCache::new(),
+            hbm_bytes_per_us,
+            ref_device: device.clone(),
+            ref_calibration: calibration,
+            device,
+            device_fp,
+            cache_fp,
+            ew_scale: 1.0,
+            cache: Arc::new(ShardedCache::new()),
         }
+    }
+
+    /// An estimator answering for `device`, deriving its systolic config
+    /// and HBM bandwidth from the spec. `calibration` must have been
+    /// measured on this same device (it becomes the retarget reference).
+    pub fn for_device(device: DeviceSpec, calibration: RegimeCalibration) -> Estimator {
+        let device_fp = device.fingerprint();
+        let config = device.scale_config();
+        let hbm_bytes_per_us = device.hbm_bytes_per_us();
+        let cache_fp = Estimator::mix_cache_fp(device_fp, &config, hbm_bytes_per_us);
+        Estimator {
+            config,
+            calibration: calibration.clone(),
+            learned: HashMap::new(),
+            compiled: std::sync::RwLock::new(HashMap::new()),
+            hbm_bytes_per_us,
+            ref_device: device.clone(),
+            ref_calibration: calibration,
+            device,
+            device_fp,
+            cache_fp,
+            ew_scale: 1.0,
+            cache: Arc::new(ShardedCache::new()),
+        }
+    }
+
+    /// A new estimator answering for `device`, sharing this estimator's
+    /// learned models, reference calibration and shape cache.
+    ///
+    /// Retargeting always starts from the *reference* assets (the device
+    /// the models were measured on), never from an already-transferred
+    /// calibration, so retargets do not compound: `a.retarget(x)` and
+    /// `a.retarget(y).retarget(x)` answer identically. Retargeting onto
+    /// the estimator's own device is bit-identical to the original
+    /// (tested in `tests/device_spec.rs`); the shared cache stays safe
+    /// because every entry is keyed by the cost-model fingerprint
+    /// (device + active config + bandwidth).
+    pub fn retarget(&self, device: &DeviceSpec) -> Estimator {
+        let device_fp = device.fingerprint();
+        let compiled = self.compiled.read().unwrap().clone();
+        if device_fp == self.device_fp {
+            // Same hardware: keep the active config/calibration exactly
+            // as they are (they may carry asset-file state the spec
+            // derivation would normalize away). The cache identity is
+            // copied too — identical cost model, shared entries.
+            return Estimator {
+                config: self.config.clone(),
+                calibration: self.calibration.clone(),
+                learned: self.learned.clone(),
+                compiled: std::sync::RwLock::new(compiled),
+                hbm_bytes_per_us: self.hbm_bytes_per_us,
+                ref_device: self.ref_device.clone(),
+                ref_calibration: self.ref_calibration.clone(),
+                device: device.clone(),
+                device_fp,
+                cache_fp: self.cache_fp,
+                ew_scale: self.ew_scale,
+                cache: Arc::clone(&self.cache),
+            };
+        }
+        let config = device.scale_config();
+        let hbm_bytes_per_us = device.hbm_bytes_per_us();
+        let cache_fp = Estimator::mix_cache_fp(device_fp, &config, hbm_bytes_per_us);
+        Estimator {
+            config,
+            calibration: device.transfer_calibration(&self.ref_device, &self.ref_calibration),
+            learned: self.learned.clone(),
+            compiled: std::sync::RwLock::new(compiled),
+            hbm_bytes_per_us,
+            ref_device: self.ref_device.clone(),
+            ref_calibration: self.ref_calibration.clone(),
+            ew_scale: device.ew_scale(&self.ref_device),
+            device: device.clone(),
+            device_fp,
+            cache_fp,
+            cache: Arc::clone(&self.cache),
+        }
+    }
+
+    /// The device this estimator answers for.
+    pub fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+
+    /// The cached fingerprint of [`Estimator::device`] (the hardware
+    /// identity [`Estimator::retarget`] compares).
+    pub fn device_fingerprint(&self) -> u64 {
+        self.device_fp
+    }
+
+    /// The cost-model identity folded into every [`ShapeKey`] (device
+    /// fingerprint + active config + HBM bandwidth).
+    pub(crate) fn cache_fingerprint(&self) -> u64 {
+        self.cache_fp
     }
 
     /// Register (and pre-compile) the learned model for one op kind.
@@ -174,16 +343,22 @@ impl Estimator {
         self.cache.clear();
     }
 
-    /// HBM bandwidth used by the bandwidth fallback (and the memory timeline).
+    /// HBM bandwidth used by the bandwidth fallback (and the memory
+    /// timeline). Immutable after construction: it is part of the cache
+    /// identity, so changing it means building a new estimator
+    /// ([`Estimator::for_device`] / [`Estimator::retarget`]).
     pub fn hbm_bytes_per_us(&self) -> f64 {
         self.hbm_bytes_per_us
     }
 
-    /// Change the fallback HBM bandwidth, invalidating memoised estimates
-    /// that were computed against the old value.
-    pub fn set_hbm_bytes_per_us(&mut self, bytes_per_us: f64) {
-        self.hbm_bytes_per_us = bytes_per_us;
-        self.cache.clear();
+    /// Replace the active systolic config (the asset loader installs
+    /// the exact config the saved calibration was simulated with). The
+    /// cache identity follows the config, so entries memoised by other
+    /// estimators sharing this cache can never be aliased.
+    pub fn set_config(&mut self, config: ScaleConfig) {
+        self.config = config;
+        self.cache_fp =
+            Estimator::mix_cache_fp(self.device_fp, &self.config, self.hbm_bytes_per_us);
     }
 
     /// Predict via the flattened model for `name`, compiling on first use
@@ -311,7 +486,7 @@ impl Estimator {
     /// The cost functions are deterministic in the [`ShapeKey`], so cached
     /// and freshly computed estimates are bit-identical.
     pub fn estimate_op(&self, index: usize, op_name: &str, class: &OpClass) -> OpEstimate {
-        let est = match ShapeKey::of_class(class) {
+        let est = match ShapeKey::of_class(self.cache_fp, class) {
             Some(key) => match self.cache.lookup(&key) {
                 Some(hit) => hit.into_estimate(index, op_name),
                 None => {
@@ -345,7 +520,14 @@ impl Estimator {
             }
             OpClass::Elementwise { kind, out } => match self.learned_for(*kind) {
                 Some((model_name, source)) => {
-                    let t = self.predict_compiled(&model_name, &featurize(&out.dims));
+                    // The learned models were trained on the reference
+                    // device; other devices scale the prediction by the
+                    // elementwise roofline ratio (exactly 1 on the
+                    // reference, so the skip preserves bit-identity).
+                    let mut t = self.predict_compiled(&model_name, &featurize(&out.dims));
+                    if self.ew_scale != 1.0 {
+                        t *= self.ew_scale;
+                    }
                     OpEstimate {
                         index,
                         op_name: op_name.to_string(),
@@ -551,6 +733,50 @@ module @test_model {
         assert_eq!(est.cache.len(), 0, "stale entries must be dropped");
         let after = est.estimate_op(0, "add", &class);
         assert_eq!(after.source, EstimateSource::Learned);
+    }
+
+    #[test]
+    fn retarget_onto_own_device_is_bit_identical_and_shares_the_cache() {
+        let module = parse_module(MODULE).unwrap();
+        let mut est = Estimator::new(ScaleConfig::tpu_v4(), trivial_calibration());
+        est.add_learned(EwKind::Add, learned_add_model());
+        let base = est.estimate_module(&module);
+        let rt = est.retarget(&crate::device::DeviceSpec::tpu_v4());
+        assert_eq!(rt.device_fingerprint(), est.device_fingerprint());
+        let again = rt.estimate_module(&module);
+        assert_eq!(base.total_us.to_bits(), again.total_us.to_bits());
+        for (a, b) in base.ops.iter().zip(&again.ops) {
+            assert_eq!(a.latency_us.to_bits(), b.latency_us.to_bits());
+        }
+        // One shared cache: the retargeted walk re-used the entries the
+        // first walk stored (same device fingerprint).
+        let s = est.cache.stats();
+        assert!(s.hits >= 2, "retargeted walk missed the shared cache: {s:?}");
+    }
+
+    #[test]
+    fn retarget_onto_another_device_differs_and_never_aliases() {
+        let module = parse_module(MODULE).unwrap();
+        let mut est = Estimator::new(ScaleConfig::tpu_v4(), trivial_calibration());
+        est.add_learned(EwKind::Add, learned_add_model());
+        let v5e = est.retarget(&crate::device::DeviceSpec::tpu_v5e());
+        assert_ne!(v5e.device_fingerprint(), est.device_fingerprint());
+        let base = est.estimate_module(&module);
+        let other = v5e.estimate_module(&module);
+        // v5e is slower on every axis in this module: smaller SRAM /
+        // DRAM interface, scaled elementwise models.
+        assert!(other.total_us > base.total_us);
+        // Same shapes, two devices, one cache: entries never alias, and
+        // re-asking the original device reproduces its answer exactly.
+        let again = est.estimate_module(&module);
+        assert_eq!(base.total_us.to_bits(), again.total_us.to_bits());
+        // Retargets never compound: going v5e -> v5p equals v4 -> v5p.
+        let via = v5e.retarget(&crate::device::DeviceSpec::tpu_v5p());
+        let direct = est.retarget(&crate::device::DeviceSpec::tpu_v5p());
+        assert_eq!(
+            via.estimate_module(&module).total_us.to_bits(),
+            direct.estimate_module(&module).total_us.to_bits()
+        );
     }
 
     #[test]

@@ -89,7 +89,10 @@ pub fn plan(func: &FuncInfo) -> FusionPlan {
 
 /// Estimate a module with fusion: each group costs the max of its
 /// members' standalone costs (the fused kernel is bound by its most
-/// expensive member, not the sum).
+/// expensive member, not the sum). Device-aware for free: the per-op
+/// costs come from `est`, which answers for whatever
+/// [`DeviceSpec`](crate::device::DeviceSpec) it was built or
+/// [retargeted](Estimator::retarget) for.
 pub fn estimate_fused(est: &Estimator, module: &ModuleInfo) -> ModelEstimate {
     let unfused = est.estimate_module(module);
     estimate_fused_with(module, unfused)

@@ -9,8 +9,11 @@ pub mod fusion;
 pub mod pool;
 pub mod service;
 
-pub use cache::{CacheStats, CachedCost, ModeStat, ShapeKey, ShardedCache};
+pub use cache::{CacheStats, CachedCost, ModeStat, ShapeClass, ShapeKey, ShardedCache};
 pub use estimator::{EstimateMode, Estimator, EstimateSource, ModelEstimate, OpEstimate};
 pub use fusion::{estimate_fused, estimate_fused_with};
 pub use pool::{default_workers, parallel_map, WorkerPool};
-pub use service::{serve_lines, serve_stream, Request, StreamOptions, StreamSummary};
+pub use service::{
+    serve_lines, serve_stream, DeviceEstimators, Request, SliceRequest, StreamOptions,
+    StreamSummary,
+};

@@ -23,15 +23,15 @@
 //! * [`serve_lines`] — batch: answers a pre-collected slice of lines via
 //!   the scoped `parallel_map` (used by tests and `serve --batch`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, Write};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
 
+use crate::device::{DeviceSpec, PRESET_NAMES};
 use crate::distributed::{
     estimate_gemm_sliced, estimate_module_distributed, IciTopology, SliceConfig,
-    DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
 };
 use crate::frontend::classify::{EwKind, OpClass};
 use crate::frontend::parse_module;
@@ -55,8 +55,12 @@ pub enum Request {
         gemm: GemmShape,
         /// Multi-chip slice to shard across (`"chips"`, `"ici_gbps"`,
         /// `"ici_topology"`, `"ici_latency_us"` fields); `None` answers
-        /// on a single chip.
-        slice: Option<SliceConfig>,
+        /// on a single chip. Unset knobs inherit the request's device
+        /// spec at answer time.
+        slice: Option<SliceRequest>,
+        /// Device preset to answer for (`"device"` field); `None` uses
+        /// the service's default device.
+        device: Option<String>,
     },
     /// One elementwise op over a bf16 tensor.
     Elementwise {
@@ -64,20 +68,61 @@ pub enum Request {
         op: String,
         /// Tensor shape.
         dims: Vec<usize>,
+        /// Device preset to answer for; `None` uses the default.
+        device: Option<String>,
     },
     /// A whole StableHLO module from a file path.
     Module {
         /// Path to the StableHLO text file.
         path: String,
-        /// Optional multi-chip slice to estimate across.
-        slice: Option<SliceConfig>,
+        /// Optional multi-chip slice to estimate across (unset knobs
+        /// inherit the request's device spec).
+        slice: Option<SliceRequest>,
+        /// Device preset to answer for; `None` uses the default.
+        device: Option<String>,
     },
     /// Report cache/routing counters for the requests answered so far.
     Stats,
 }
 
-/// Extract the optional slice config carried by a request object.
-fn parse_slice(j: &Json) -> Result<Option<SliceConfig>> {
+/// A partially-specified slice from a request: `chips` is mandatory,
+/// every other knob optional. Unset knobs inherit the request's device
+/// spec at answer time ([`SliceRequest::resolve`]) — the same
+/// flag > spec > default precedence the CLI applies, so a
+/// `"device":"tpu-v5p"` request costs its collectives on v5p's links,
+/// not on the reference defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceRequest {
+    /// Chips in the slice.
+    pub chips: usize,
+    /// Explicit per-link bandwidth, GB/s.
+    pub link_gbps: Option<f64>,
+    /// Explicit per-hop latency, µs.
+    pub hop_latency_us: Option<f64>,
+    /// Explicit link wiring (already resolved against `chips`).
+    pub topology: Option<IciTopology>,
+}
+
+impl SliceRequest {
+    /// Resolve into a validated [`SliceConfig`]: explicit knobs win,
+    /// the rest come from `spec`'s ICI parameters.
+    pub fn resolve(&self, spec: &DeviceSpec) -> Result<SliceConfig> {
+        let slice = SliceConfig {
+            chips: self.chips,
+            topology: self
+                .topology
+                .unwrap_or_else(|| spec.default_topology(self.chips)),
+            link_gbps: self.link_gbps.unwrap_or(spec.ici_link_gbps),
+            hop_latency_us: self.hop_latency_us.unwrap_or(spec.ici_hop_latency_us),
+        };
+        slice.validate()?;
+        Ok(slice)
+    }
+}
+
+/// Extract the optional slice request carried by a request object,
+/// validating every explicitly-given knob.
+fn parse_slice(j: &Json) -> Result<Option<SliceRequest>> {
     if j.get("chips").is_none() {
         // Refuse to silently drop distributed knobs on a request that
         // forgot the chip count — the caller would trust a single-chip
@@ -90,35 +135,60 @@ fn parse_slice(j: &Json) -> Result<Option<SliceConfig>> {
         return Ok(None);
     }
     let chips = j.req_usize("chips").map_err(|e| anyhow::anyhow!("{e}"))?;
+    if chips == 0 {
+        bail!("slice needs at least one chip");
+    }
     let link_gbps = match j.get("ici_gbps") {
-        Some(v) => v
-            .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("'ici_gbps' must be a number"))?,
-        None => DEFAULT_LINK_GBPS,
+        Some(v) => {
+            let g = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'ici_gbps' must be a number"))?;
+            if !(g.is_finite() && g > 0.0) {
+                bail!("link bandwidth must be positive, got {g}");
+            }
+            Some(g)
+        }
+        None => None,
     };
     let hop_latency_us = match j.get("ici_latency_us") {
-        Some(v) => v
-            .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("'ici_latency_us' must be a number"))?,
-        None => DEFAULT_HOP_LATENCY_US,
+        Some(v) => {
+            let a = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'ici_latency_us' must be a number"))?;
+            if !(a.is_finite() && a >= 0.0) {
+                bail!("hop latency must be non-negative, got {a}");
+            }
+            Some(a)
+        }
+        None => None,
     };
     let topology = match j.get("ici_topology") {
         Some(v) => {
             let s = v
                 .as_str()
                 .ok_or_else(|| anyhow::anyhow!("'ici_topology' must be a string"))?;
-            IciTopology::parse(s, chips)?
+            Some(IciTopology::parse(s, chips)?)
         }
-        None => IciTopology::Ring,
+        None => None,
     };
-    let slice = SliceConfig {
+    Ok(Some(SliceRequest {
         chips,
-        topology,
         link_gbps,
         hop_latency_us,
-    };
-    slice.validate()?;
-    Ok(Some(slice))
+        topology,
+    }))
+}
+
+/// Extract the optional `"device"` field carried by a request object.
+fn parse_device(j: &Json) -> Result<Option<String>> {
+    match j.get("device") {
+        None => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_str()
+                .ok_or_else(|| anyhow::anyhow!("'device' must be a string"))?
+                .to_string(),
+        )),
+    }
 }
 
 impl Request {
@@ -136,6 +206,7 @@ impl Request {
                 Ok(Request::Gemm {
                     gemm: GemmShape::new(m, k, n),
                     slice: parse_slice(&j)?,
+                    device: parse_device(&j)?,
                 })
             }
             "elementwise" => {
@@ -156,15 +227,89 @@ impl Request {
                         Ok(d as usize)
                     })
                     .collect::<Result<Vec<usize>>>()?;
-                Ok(Request::Elementwise { op, dims })
+                Ok(Request::Elementwise {
+                    op,
+                    dims,
+                    device: parse_device(&j)?,
+                })
             }
             "module" => Ok(Request::Module {
                 path: j.req_str("path").map_err(|e| anyhow::anyhow!("{e}"))?.to_string(),
                 slice: parse_slice(&j)?,
+                device: parse_device(&j)?,
             }),
             "stats" => Ok(Request::Stats),
             other => bail!("unknown request type '{other}'"),
         }
+    }
+
+    /// The device name the request asks for, if any.
+    pub fn device(&self) -> Option<&str> {
+        match self {
+            Request::Gemm { device, .. }
+            | Request::Elementwise { device, .. }
+            | Request::Module { device, .. } => device.as_deref(),
+            Request::Stats => None,
+        }
+    }
+}
+
+/// The service's per-device estimator registry.
+///
+/// One default estimator answers requests without a `"device"` field;
+/// requests that name another preset get a lazily-built
+/// [`Estimator::retarget`] clone. All of them share the default
+/// estimator's shape cache (safe: every cache key carries the device
+/// fingerprint), so the `{"type":"stats"}` counters and the shutdown
+/// summary stay unified across devices.
+pub struct DeviceEstimators {
+    default: Arc<Estimator>,
+    retargeted: RwLock<HashMap<String, Arc<Estimator>>>,
+}
+
+impl DeviceEstimators {
+    /// A registry answering for `default` when no device is named.
+    pub fn new(default: Arc<Estimator>) -> DeviceEstimators {
+        DeviceEstimators {
+            default,
+            retargeted: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// The default-device estimator.
+    pub fn default_estimator(&self) -> &Arc<Estimator> {
+        &self.default
+    }
+
+    /// The estimator for `name` (the default when `None`), retargeting
+    /// and memoising on first use. Unknown names are an error.
+    ///
+    /// The memoised path takes only a read lock, and the first-use
+    /// retarget (which clones the learned-model set) runs *outside* the
+    /// write lock so one cold device never stalls the others; two
+    /// workers racing on the same cold name both retarget and the first
+    /// insert wins (retargets are deterministic, so the loser's work is
+    /// identical, merely wasted).
+    pub fn get(&self, name: Option<&str>) -> Result<Arc<Estimator>> {
+        let Some(name) = name else {
+            return Ok(Arc::clone(&self.default));
+        };
+        if name == self.default.device().name {
+            return Ok(Arc::clone(&self.default));
+        }
+        if let Some(est) = self.retargeted.read().unwrap().get(name) {
+            return Ok(Arc::clone(est));
+        }
+        let Some(spec) = DeviceSpec::preset(name) else {
+            bail!(
+                "unknown device '{name}' (presets: {})",
+                PRESET_NAMES.join(", ")
+            );
+        };
+        let est = Arc::new(self.default.retarget(&spec));
+        let mut map = self.retargeted.write().unwrap();
+        let entry = map.entry(name.to_string()).or_insert(est);
+        Ok(Arc::clone(entry))
     }
 }
 
@@ -177,6 +322,7 @@ impl Request {
 /// streaming path instead treats stats as a drain barrier at its
 /// position — see [`serve_stream`].
 pub fn serve_lines(estimator: Arc<Estimator>, lines: &[String], workers: usize) -> Vec<String> {
+    let devices = DeviceEstimators::new(estimator);
     let items: Vec<(usize, String)> = lines
         .iter()
         .enumerate()
@@ -185,20 +331,20 @@ pub fn serve_lines(estimator: Arc<Estimator>, lines: &[String], workers: usize) 
     let mut responses: Vec<Option<String>> = parallel_map(&items, workers, |(i, line)| {
         match Request::parse(line) {
             Ok(Request::Stats) => None, // deferred below
-            parsed => Some(respond(&estimator, *i as u64, parsed).1),
+            parsed => Some(respond(&devices, *i as u64, parsed).1),
         }
     });
     for (i, slot) in responses.iter_mut().enumerate() {
         if slot.is_none() {
-            *slot = Some(respond(&estimator, i as u64, Ok(Request::Stats)).1);
+            *slot = Some(respond(&devices, i as u64, Ok(Request::Stats)).1);
         }
     }
     responses.into_iter().map(Option::unwrap).collect()
 }
 
 /// Answer one (possibly failed-to-parse) request; returns `(ok, line)`.
-fn respond(estimator: &Estimator, id: u64, req: Result<Request>) -> (bool, String) {
-    let (ok, mut obj) = match req.and_then(|r| handle_request(estimator, &r)) {
+fn respond(devices: &DeviceEstimators, id: u64, req: Result<Request>) -> (bool, String) {
+    let (ok, mut obj) = match req.and_then(|r| handle_request(devices, &r)) {
         Ok(o) => (true, o),
         Err(e) => {
             let mut o = Json::obj();
@@ -211,13 +357,22 @@ fn respond(estimator: &Estimator, id: u64, req: Result<Request>) -> (bool, Strin
     (ok, obj.dump())
 }
 
-fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
+fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<Json> {
+    // Resolve the estimator for the request's device up front: an
+    // unknown device name is an error response, never a silent
+    // default-device answer.
+    let est = devices.get(req.device())?;
+    let estimator: &Estimator = &est;
+    let device_name = || Json::Str(estimator.device().name.clone());
     match req {
-        Request::Gemm { gemm, slice: None } => {
+        Request::Gemm {
+            gemm, slice: None, ..
+        } => {
             let class = OpClass::SystolicGemm { gemm: *gemm, count: 1 };
             let est = estimator.estimate_op(0, "gemm", &class);
             let mut o = Json::obj();
             o.set("type", Json::Str("gemm".into()))
+                .set("device", device_name())
                 .set("cycles", Json::Num(est.cycles.unwrap_or(0) as f64))
                 .set("latency_us", Json::Num(est.latency_us));
             Ok(o)
@@ -225,10 +380,13 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
         Request::Gemm {
             gemm,
             slice: Some(slice),
+            ..
         } => {
-            let r = estimate_gemm_sliced(estimator, *gemm, slice);
+            let slice = slice.resolve(estimator.device())?;
+            let r = estimate_gemm_sliced(estimator, *gemm, &slice);
             let mut o = Json::obj();
             o.set("type", Json::Str("gemm".into()))
+                .set("device", device_name())
                 .set("chips", Json::Num(slice.chips as f64))
                 .set("latency_us", Json::Num(r.total_us()))
                 .set("compute_us", Json::Num(r.compute_us))
@@ -237,7 +395,7 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                 .set("parallel_efficiency", Json::Num(r.parallel_efficiency()));
             Ok(o)
         }
-        Request::Elementwise { op, dims } => {
+        Request::Elementwise { op, dims, .. } => {
             let kind = EwKind::from_name(op)
                 .ok_or_else(|| anyhow::anyhow!("unknown elementwise op '{op}'"))?;
             let out = TensorType::new(dims.clone(), DType::Bf16);
@@ -245,13 +403,18 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
             let est = estimator.estimate_op(0, op, &class);
             let mut o = Json::obj();
             o.set("type", Json::Str("elementwise".into()))
+                .set("device", device_name())
                 .set("latency_us", Json::Num(est.latency_us))
                 .set("source", Json::Str(est.source.tag().into()));
             Ok(o)
         }
-        Request::Module { path, slice } => {
+        Request::Module { path, slice, .. } => {
             let text = std::fs::read_to_string(path)?;
             let module = parse_module(&text)?;
+            let slice = match slice {
+                Some(s) => Some(s.resolve(estimator.device())?),
+                None => None,
+            };
             match slice {
                 None => {
                     // Single-chip module answers carry all three
@@ -263,14 +426,23 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                     // module exactly once.
                     let report = estimator.estimate_module(&module);
                     let fused = estimate_fused_with(&module, report.clone());
-                    let sched = schedule_estimate(&module, &report, EngineConfig::Tpu);
+                    let sched = schedule_estimate(
+                        &module,
+                        &report,
+                        EngineConfig::for_device(estimator.device()),
+                    );
                     // Memory-aware makespan + roofline: reuses the one
                     // unfused walk's rows, so no extra cache traffic.
+                    // The residency buffer and bandwidth both come from
+                    // the request's device.
                     let mem = schedule_estimate_memory(
                         &module,
                         &report,
-                        EngineConfig::Tpu,
-                        &MemoryConfig::for_bandwidth(estimator.hbm_bytes_per_us()),
+                        EngineConfig::for_device(estimator.device()),
+                        &MemoryConfig::new(
+                            estimator.hbm_bytes_per_us(),
+                            Some(estimator.device().vmem_bytes),
+                        ),
                     );
                     estimator
                         .cache
@@ -283,6 +455,7 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                         .record_mode(EstimateMode::Scheduled, sched.makespan_us);
                     let mut o = Json::obj();
                     o.set("type", Json::Str("module".into()))
+                        .set("device", device_name())
                         .set("module", Json::Str(report.module_name.clone()))
                         .set("total_us", Json::Num(report.total_us))
                         .set("systolic_us", Json::Num(report.systolic_us))
@@ -299,10 +472,11 @@ fn handle_request(estimator: &Estimator, req: &Request) -> Result<Json> {
                     Ok(o)
                 }
                 Some(slice) => {
-                    let d = estimate_module_distributed(estimator, &module, slice);
+                    let d = estimate_module_distributed(estimator, &module, &slice);
                     estimator.cache.record_mode(EstimateMode::Scheduled, d.total_us);
                     let mut o = Json::obj();
                     o.set("type", Json::Str("module".into()))
+                        .set("device", device_name())
                         .set("module", Json::Str(d.module_name.clone()))
                         .set("chips", Json::Num(slice.chips as f64))
                         .set("total_us", Json::Num(d.total_us))
@@ -419,10 +593,11 @@ pub fn serve_stream<In: BufRead, Out: Write>(
     } else {
         opts.queue_cap
     };
-    let est = Arc::clone(&estimator);
+    let devices = Arc::new(DeviceEstimators::new(Arc::clone(&estimator)));
+    let pool_devices = Arc::clone(&devices);
     let mut pool: WorkerPool<Request, (bool, String)> =
         WorkerPool::new(workers, queue_cap, move |seq, req| {
-            respond(&est, seq, Ok(req))
+            respond(&pool_devices, seq, Ok(req))
         });
 
     let mut summary = StreamSummary::default();
@@ -455,7 +630,7 @@ pub fn serve_stream<In: BufRead, Out: Write>(
                     emit_ready(output, &mut pending, &mut emitted)?;
                 }
                 summary.stats_requests += 1;
-                let (ok, resp) = respond(&estimator, seq, Ok(Request::Stats));
+                let (ok, resp) = respond(&devices, seq, Ok(Request::Stats));
                 tally(&mut summary, ok);
                 writeln!(output, "{resp}")?;
                 output.flush()?;
@@ -472,7 +647,7 @@ pub fn serve_stream<In: BufRead, Out: Write>(
                 pool.submit(seq, req);
             }
             Err(e) => {
-                let (ok, resp) = respond(&estimator, seq, Err(e));
+                let (ok, resp) = respond(&devices, seq, Err(e));
                 tally(&mut summary, ok);
                 pending.insert(seq, resp);
             }
@@ -568,20 +743,31 @@ mod tests {
             Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3}"#).unwrap(),
             Request::Gemm {
                 gemm: GemmShape::new(1, 2, 3),
-                slice: None
+                slice: None,
+                device: None
             }
         );
+        assert_eq!(
+            Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"device":"tpu-v5e"}"#).unwrap(),
+            Request::Gemm {
+                gemm: GemmShape::new(1, 2, 3),
+                slice: None,
+                device: Some("tpu-v5e".into())
+            }
+        );
+        assert!(Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"device":7}"#).is_err());
         assert_eq!(
             Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"chips":4,"ici_gbps":50}"#)
                 .unwrap(),
             Request::Gemm {
                 gemm: GemmShape::new(1, 2, 3),
-                slice: Some(SliceConfig {
+                slice: Some(SliceRequest {
                     chips: 4,
-                    topology: IciTopology::Ring,
-                    link_gbps: 50.0,
-                    hop_latency_us: DEFAULT_HOP_LATENCY_US,
-                })
+                    link_gbps: Some(50.0),
+                    hop_latency_us: None,
+                    topology: None,
+                }),
+                device: None
             }
         );
         assert_eq!(
@@ -591,14 +777,35 @@ mod tests {
             .unwrap(),
             Request::Module {
                 path: "x.mlir".into(),
-                slice: Some(SliceConfig {
+                slice: Some(SliceRequest {
                     chips: 8,
-                    topology: IciTopology::Torus2D { x: 2, y: 4 },
-                    link_gbps: DEFAULT_LINK_GBPS,
-                    hop_latency_us: DEFAULT_HOP_LATENCY_US,
-                })
+                    link_gbps: None,
+                    hop_latency_us: None,
+                    topology: Some(IciTopology::Torus2D { x: 2, y: 4 }),
+                }),
+                device: None
             }
         );
+        // Unset slice knobs resolve against the request's device spec
+        // (flag > spec > default, same as the CLI).
+        let sreq = SliceRequest {
+            chips: 4,
+            link_gbps: None,
+            hop_latency_us: None,
+            topology: None,
+        };
+        let v4 = sreq.resolve(&DeviceSpec::tpu_v4()).unwrap();
+        assert_eq!(v4, SliceConfig::ring(4, 100.0));
+        let v5e = sreq.resolve(&DeviceSpec::tpu_v5e()).unwrap();
+        assert_eq!(v5e.topology, IciTopology::Torus2D { x: 2, y: 2 });
+        assert_eq!(v5e.link_gbps, 50.0);
+        let forced = SliceRequest {
+            link_gbps: Some(400.0),
+            ..sreq
+        }
+        .resolve(&DeviceSpec::tpu_v5e())
+        .unwrap();
+        assert_eq!(forced.link_gbps, 400.0);
         assert!(Request::parse(r#"{"type":"gemm","m":1,"k":2,"n":3,"chips":0}"#).is_err());
         // Distributed knobs without a chip count are an error, not a
         // silent single-chip answer — and elementwise has no distributed
@@ -620,7 +827,8 @@ mod tests {
             Request::parse(r#"{"type":"elementwise","op":"add","dims":[8,128]}"#).unwrap(),
             Request::Elementwise {
                 op: "add".into(),
-                dims: vec![8, 128]
+                dims: vec![8, 128],
+                device: None
             }
         );
         assert_eq!(Request::parse(r#"{"type":"stats"}"#).unwrap(), Request::Stats);
@@ -683,6 +891,69 @@ mod tests {
         assert!(dist.req_f64("collective_us").unwrap() > 0.0);
         let eff = dist.req_f64("parallel_efficiency").unwrap();
         assert!(eff > 0.0 && eff <= 1.0);
+    }
+
+    #[test]
+    fn mixed_device_requests_never_alias_and_report_their_device() {
+        // The cache-aliasing regression behind the DeviceSpec refactor:
+        // one serve stream mixing devices on the SAME shape must answer
+        // each device from its own cache entries.
+        let est = estimator();
+        let lines: Vec<String> = vec![
+            r#"{"type":"gemm","m":512,"k":512,"n":512}"#.into(),
+            r#"{"type":"gemm","m":512,"k":512,"n":512,"device":"generic-256x256"}"#.into(),
+            r#"{"type":"gemm","m":512,"k":512,"n":512,"device":"tpu-v4"}"#.into(),
+            r#"{"type":"gemm","m":512,"k":512,"n":512}"#.into(),
+            r#"{"type":"gemm","m":512,"k":512,"n":512,"device":"nope"}"#.into(),
+        ];
+        let responses = serve_lines(Arc::clone(&est), &lines, 1);
+        let parsed: Vec<Json> = responses.iter().map(|r| Json::parse(r).unwrap()).collect();
+        let lat = |i: usize| parsed[i].req_f64("latency_us").unwrap();
+        // The default device IS tpu-v4: naming it explicitly must hit
+        // the same cache entry bit for bit.
+        assert_eq!(lat(0).to_bits(), lat(2).to_bits());
+        assert_eq!(lat(0).to_bits(), lat(3).to_bits());
+        // A different device answers differently (256x256 array at a
+        // slower clock simulates different cycles).
+        assert_ne!(lat(0).to_bits(), lat(1).to_bits());
+        assert_eq!(parsed[0].req_str("device").unwrap(), "tpu-v4");
+        assert_eq!(parsed[1].req_str("device").unwrap(), "generic-256x256");
+        // Unknown devices are an error response, not a default answer.
+        assert_eq!(parsed[4].get("ok"), Some(&Json::Bool(false)));
+        assert!(parsed[4].req_str("error").unwrap().contains("unknown device"));
+        // Two devices x one shape = two cache entries; the second v4
+        // request and the repeat were hits on the first entry.
+        let s = est.cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn request_slice_defaults_come_from_the_request_device() {
+        // Regression: a "device" request with "chips" must cost its
+        // collectives on THAT device's ICI (torus, 50 GB/s for v5e),
+        // not on the reference defaults (ring, 100 GB/s). If defaults
+        // leaked from the reference, the first two answers would match.
+        let est = estimator();
+        let shape = r#""m":128,"k":1024,"n":8192"#; // N-sharded: pays an all-gather
+        let lines: Vec<String> = vec![
+            format!(r#"{{"type":"gemm",{shape},"chips":4,"device":"tpu-v5e"}}"#),
+            format!(
+                r#"{{"type":"gemm",{shape},"chips":4,"device":"tpu-v5e","ici_gbps":100,"ici_topology":"ring","ici_latency_us":1}}"#
+            ),
+        ];
+        let responses = serve_lines(est, &lines, 1);
+        let coll: Vec<f64> = responses
+            .iter()
+            .map(|r| Json::parse(r).unwrap().req_f64("collective_us").unwrap())
+            .collect();
+        assert!(coll[0] > 0.0 && coll[1] > 0.0);
+        assert_ne!(
+            coll[0].to_bits(),
+            coll[1].to_bits(),
+            "spec ICI defaults did not apply: {coll:?}"
+        );
     }
 
     #[test]

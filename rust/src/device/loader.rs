@@ -1,0 +1,328 @@
+//! Device-file loading: a dependency-free TOML-subset parser plus the
+//! JSON fallback, and the `--device <name|file>` resolution rule.
+//!
+//! The grammar covers exactly what `rust/devices/*.toml` uses (and what
+//! a user-authored device file needs): `# comments`, `[section]`
+//! headers, and `key = value` pairs where a value is a number, a
+//! `"quoted string"`, or `true`/`false`. Unknown sections or keys are
+//! hard errors — a typoed `hbm_gpbs` must not silently leave the
+//! reference value in place. Keys that are *absent* inherit the
+//! [`DeviceSpec::tpu_v4`] reference value, so a file only needs to spell
+//! out what differs.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::scalesim::Dataflow;
+use crate::util::json::Json;
+
+use super::spec::{DeviceSpec, TopologyKind, PRESET_NAMES};
+
+/// Strip a `# comment` (outside of double quotes) and surrounding
+/// whitespace from one line.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return line[..i].trim(),
+            _ => {}
+        }
+    }
+    line.trim()
+}
+
+/// Parse one TOML value: `"string"`, `true`/`false`, or a number
+/// (returned as the raw token; the field applier knows the type).
+fn unquote(value: &str) -> Result<String> {
+    let v = value.trim();
+    if let Some(inner) = v.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string '{v}'");
+        };
+        return Ok(inner.to_string());
+    }
+    Ok(v.to_string())
+}
+
+/// Apply one `section.key = value` triple onto the spec being built.
+fn apply(spec: &mut DeviceSpec, section: &str, key: &str, value: &str) -> Result<()> {
+    let sval = unquote(value)?;
+    let as_f64 = || -> Result<f64> {
+        sval.parse::<f64>()
+            .with_context(|| format!("'{key}' expects a number, got '{value}'"))
+    };
+    let as_usize = || -> Result<usize> {
+        sval.parse::<usize>()
+            .with_context(|| format!("'{key}' expects an integer, got '{value}'"))
+    };
+    match (section, key) {
+        ("", "name") => spec.name = sval,
+        ("", "description") => spec.description = sval,
+        ("systolic", "array_rows") => spec.array_rows = as_usize()?,
+        ("systolic", "array_cols") => spec.array_cols = as_usize()?,
+        ("systolic", "dataflow") => {
+            spec.dataflow =
+                Dataflow::parse(&sval).with_context(|| format!("bad dataflow '{sval}'"))?;
+        }
+        ("systolic", "ifmap_sram_kb") => spec.ifmap_sram_kb = as_usize()?,
+        ("systolic", "filter_sram_kb") => spec.filter_sram_kb = as_usize()?,
+        ("systolic", "ofmap_sram_kb") => spec.ofmap_sram_kb = as_usize()?,
+        ("systolic", "ifmap_dram_bw") => spec.ifmap_dram_bw = as_f64()?,
+        ("systolic", "filter_dram_bw") => spec.filter_dram_bw = as_f64()?,
+        ("systolic", "ofmap_dram_bw") => spec.ofmap_dram_bw = as_f64()?,
+        ("systolic", "word_bytes") => spec.word_bytes = as_usize()?,
+        ("systolic", "clock_mhz") => spec.clock_mhz = as_f64()?,
+        ("vector", "elems_per_cycle") => spec.vpu_elems_per_cycle = as_f64()?,
+        ("memory", "hbm_gbps") => spec.hbm_gbps = as_f64()?,
+        ("memory", "vmem_mib") => {
+            let mib = as_f64()?;
+            // The f64 -> u64 cast would silently saturate a negative
+            // value to 0 (a zero residency buffer), so reject it here.
+            if !(mib.is_finite() && mib >= 0.0) {
+                bail!("'vmem_mib' must be non-negative, got {mib}");
+            }
+            spec.vmem_bytes = (mib * 1024.0 * 1024.0) as u64;
+        }
+        ("memory", "vmem_bytes") => spec.vmem_bytes = as_usize()? as u64,
+        ("memory", "dma_engines") => spec.dma_engines = as_usize()?,
+        ("ici", "link_gbps") => spec.ici_link_gbps = as_f64()?,
+        ("ici", "hop_latency_us") => spec.ici_hop_latency_us = as_f64()?,
+        ("ici", "topology") => {
+            spec.ici_topology = TopologyKind::parse(&sval)
+                .with_context(|| format!("bad topology '{sval}' (ring|torus)"))?;
+        }
+        ("latency", "dispatch_overhead_us") => spec.dispatch_overhead_us = as_f64()?,
+        _ => {
+            let at = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            bail!("unknown device-file key '{at}'");
+        }
+    }
+    Ok(())
+}
+
+/// Parse a device file in the TOML subset. Unspecified keys inherit the
+/// [`DeviceSpec::tpu_v4`] reference values; `name` is mandatory.
+///
+/// ```
+/// use scalesim_tpu::device::parse_device_toml;
+///
+/// let spec = parse_device_toml(
+///     "name = \"half-bandwidth\"\n[memory]\nhbm_gbps = 600.0\n",
+/// )
+/// .unwrap();
+/// assert_eq!(spec.name, "half-bandwidth");
+/// assert_eq!(spec.hbm_gbps, 600.0);
+/// assert_eq!(spec.array_rows, 128); // inherited from the reference
+/// ```
+pub fn parse_device_toml(text: &str) -> Result<DeviceSpec> {
+    let mut spec = DeviceSpec::tpu_v4();
+    spec.name = String::new();
+    spec.description = String::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let Some(inner) = inner.strip_suffix(']') else {
+                bail!("line {}: unterminated section header '{line}'", lineno + 1);
+            };
+            section = inner.trim().to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+        };
+        apply(&mut spec, &section, key.trim(), value.trim())
+            .with_context(|| format!("line {}", lineno + 1))?;
+    }
+    if spec.name.is_empty() {
+        bail!("device file must set 'name'");
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Every key the flat JSON device schema accepts (the
+/// [`DeviceSpec::to_json`] field set).
+const JSON_KEYS: [&str; 21] = [
+    "name",
+    "description",
+    "array_rows",
+    "array_cols",
+    "dataflow",
+    "ifmap_sram_kb",
+    "filter_sram_kb",
+    "ofmap_sram_kb",
+    "ifmap_dram_bw",
+    "filter_dram_bw",
+    "ofmap_dram_bw",
+    "word_bytes",
+    "clock_mhz",
+    "vpu_elems_per_cycle",
+    "hbm_gbps",
+    "vmem_bytes",
+    "dma_engines",
+    "ici_link_gbps",
+    "ici_hop_latency_us",
+    "ici_topology",
+    "dispatch_overhead_us",
+];
+
+/// Load a device file, sniffing the format: content starting with `{`
+/// parses as the flat JSON schema, everything else as TOML. Both
+/// formats reject unknown keys — a typoed `hbm_gpbs` must not silently
+/// leave the reference value in place.
+pub fn load_device_file(path: &Path) -> Result<DeviceSpec> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading device file {}", path.display()))?;
+    let spec = if text.trim_start().starts_with('{') {
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Json::Obj(pairs) = &j {
+            for key in pairs.keys() {
+                if !JSON_KEYS.contains(&key.as_str()) {
+                    bail!(
+                        "unknown device-file key '{key}' in {}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        let spec = DeviceSpec::from_json(&j).map_err(|e| anyhow::anyhow!("{e}"))?;
+        spec.validate()?;
+        spec
+    } else {
+        parse_device_toml(&text)?
+    };
+    Ok(spec)
+}
+
+/// Resolve a `--device` argument: a preset name first, else a path to a
+/// device file.
+pub fn resolve_device(arg: &str) -> Result<DeviceSpec> {
+    if let Some(spec) = DeviceSpec::preset(arg) {
+        return Ok(spec);
+    }
+    let path = Path::new(arg);
+    if path.exists() {
+        return load_device_file(path);
+    }
+    bail!(
+        "unknown device '{arg}' (presets: {}; or pass a .toml/.json device file)",
+        PRESET_NAMES.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_toml_roundtrips_a_preset() {
+        let text = r#"
+# TPU v5e preset, spelled out in full.
+name = "tpu-v5e"
+description = "d"
+
+[systolic]
+array_rows = 128
+array_cols = 128
+dataflow = "ws"
+ifmap_sram_kb = 4096
+filter_sram_kb = 4096
+ofmap_sram_kb = 4096
+ifmap_dram_bw = 176.0
+filter_dram_bw = 176.0
+ofmap_dram_bw = 88.0
+word_bytes = 2
+clock_mhz = 940.0
+
+[vector]
+elems_per_cycle = 128.0
+
+[memory]
+hbm_gbps = 819.0
+vmem_mib = 16.0
+dma_engines = 1
+
+[ici]
+link_gbps = 50.0
+hop_latency_us = 1.0
+topology = "torus"
+
+[latency]
+dispatch_overhead_us = 1.5
+"#;
+        let spec = parse_device_toml(text).unwrap();
+        assert_eq!(spec.fingerprint(), DeviceSpec::tpu_v5e().fingerprint());
+    }
+
+    #[test]
+    fn sparse_toml_inherits_reference_values() {
+        let spec = parse_device_toml("name = \"mini\"\n[memory]\nhbm_gbps = 600 # half\n")
+            .unwrap();
+        assert_eq!(spec.name, "mini");
+        assert_eq!(spec.hbm_gbps, 600.0);
+        assert_eq!(spec.vmem_bytes, DeviceSpec::tpu_v4().vmem_bytes);
+        assert_eq!(spec.clock_mhz, 940.0);
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        // Missing name.
+        assert!(parse_device_toml("[memory]\nhbm_gbps = 600\n").is_err());
+        // Typoed key.
+        let err = parse_device_toml("name = \"x\"\n[memory]\nhbm_gpbs = 600\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 3"), "{err}");
+        // Wrong type.
+        assert!(parse_device_toml("name = \"x\"\n[systolic]\narray_rows = \"wide\"\n").is_err());
+        // Invalid resulting spec.
+        assert!(parse_device_toml("name = \"x\"\n[memory]\nhbm_gbps = 0\n").is_err());
+        // A negative VMEM must not saturate to a zero-byte buffer.
+        assert!(parse_device_toml("name = \"x\"\n[memory]\nvmem_mib = -8\n").is_err());
+        // Garbage line.
+        assert!(parse_device_toml("name = \"x\"\nwhat is this\n").is_err());
+        // Unterminated section.
+        assert!(parse_device_toml("name = \"x\"\n[memory\n").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let spec = parse_device_toml("name = \"has#hash\"\n").unwrap();
+        assert_eq!(spec.name, "has#hash");
+    }
+
+    #[test]
+    fn resolve_prefers_presets_then_files() {
+        assert_eq!(resolve_device("tpu-v5p").unwrap().name, "tpu-v5p");
+        assert!(resolve_device("no-such-device").is_err());
+        let dir = std::env::temp_dir().join("scalesim_device_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let toml_path = dir.join("custom.toml");
+        std::fs::write(&toml_path, "name = \"custom\"\n[ici]\nlink_gbps = 10\n").unwrap();
+        let spec = resolve_device(toml_path.to_str().unwrap()).unwrap();
+        assert_eq!(spec.name, "custom");
+        assert_eq!(spec.ici_link_gbps, 10.0);
+        // JSON files load through the same entry point.
+        let json_path = dir.join("custom.json");
+        std::fs::write(&json_path, r#"{"name":"jdev","hbm_gbps":700}"#).unwrap();
+        let spec = load_device_file(&json_path).unwrap();
+        assert_eq!(spec.name, "jdev");
+        assert_eq!(spec.hbm_gbps, 700.0);
+        // JSON typos are hard errors, same as TOML.
+        let typo_path = dir.join("typo.json");
+        std::fs::write(&typo_path, r#"{"name":"jdev","hbm_gpbs":700}"#).unwrap();
+        let err = load_device_file(&typo_path).unwrap_err().to_string();
+        assert!(err.contains("hbm_gpbs"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,32 @@
+//! The unified device-model layer.
+//!
+//! One [`DeviceSpec`] owns *every* hardware parameter the simulator
+//! reads — systolic-array geometry and dataflow, MXU/VPU rates, HBM
+//! bandwidth, on-chip buffer budget, DMA engines, ICI topology / link
+//! bandwidth / hop latency, and the cycle→latency mapping priors — and
+//! every subsystem derives its private config from it:
+//!
+//! * [`DeviceSpec::scale_config`] → the SCALE-Sim architecture config
+//!   ([`crate::scalesim::ScaleConfig`]),
+//! * [`DeviceSpec::memory_config`] → the DMA-timeline bandwidth/buffer
+//!   ([`crate::memory::MemoryConfig`]),
+//! * [`DeviceSpec::slice_config`] → the multi-chip ICI wiring
+//!   ([`crate::distributed::SliceConfig`]),
+//! * [`DeviceSpec::mxu_params`] / [`DeviceSpec::vpu_params`] → the
+//!   synthetic measurement substrate ([`crate::tpu::TpuV4Model`]),
+//! * [`DeviceSpec::transfer_calibration`] / [`DeviceSpec::ew_scale`] →
+//!   the estimator's retargeting rules
+//!   ([`crate::coordinator::Estimator::retarget`]).
+//!
+//! Four presets ship in the registry (`tpu-v4` — the reference that
+//! reproduces the historical hard-coded constants bit for bit —
+//! `tpu-v5e`, `tpu-v5p`, `generic-256x256`), and user-defined devices
+//! load from TOML or JSON files ([`load_device_file`]); the checked-in
+//! preset files live under `rust/devices/`. See DESIGN.md §Device model
+//! for the schema and the override-precedence rules.
+
+mod loader;
+mod spec;
+
+pub use loader::{load_device_file, parse_device_toml, resolve_device};
+pub use spec::{DeviceSpec, TopologyKind, PRESET_NAMES};

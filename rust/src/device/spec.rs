@@ -1,0 +1,710 @@
+//! The [`DeviceSpec`] itself: every hardware parameter the simulator
+//! reads, in one struct, plus the preset registry and the derivation
+//! methods that hand each subsystem its private config.
+//!
+//! Derivations are *exact* for the reference preset: deriving a
+//! [`ScaleConfig`], [`MemoryConfig`], [`MxuParams`] or [`VpuParams`]
+//! from [`DeviceSpec::tpu_v4`] reproduces the historical hard-coded
+//! constants bit for bit (tested in `tests/device_spec.rs`), so the
+//! refactor cannot perturb any existing estimate.
+
+use anyhow::{bail, Result};
+
+use crate::calibrate::{LinearFit, RegimeCalibration};
+use crate::distributed::ici::{IciTopology, SliceConfig};
+use crate::memory::MemoryConfig;
+use crate::scalesim::{Dataflow, ScaleConfig};
+use crate::tpu::{MxuParams, VpuParams};
+use crate::util::json::{Json, JsonError};
+
+/// Names of the built-in device presets, in registry order.
+pub const PRESET_NAMES: [&str; 4] = ["tpu-v4", "tpu-v5e", "tpu-v5p", "generic-256x256"];
+
+/// Which ICI wiring a device defaults to when the caller does not pick a
+/// topology explicitly (the chip count is only known per run, so a torus
+/// default auto-factors into a near-square grid at slice-build time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// One bidirectional ring over all chips.
+    Ring,
+    /// A near-square 2-D torus ([`IciTopology::torus`]).
+    Torus,
+}
+
+impl TopologyKind {
+    /// Lowercase kind name (device files, tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Torus => "torus",
+        }
+    }
+
+    /// Parse `ring` / `torus`.
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s {
+            "ring" => Some(TopologyKind::Ring),
+            "torus" | "torus2d" | "2d" => Some(TopologyKind::Torus),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One accelerator device model: systolic array, vector unit, memory
+/// system, interconnect and the latency-mapping priors, all in one
+/// place. Everything downstream ([`ScaleConfig`], [`MemoryConfig`],
+/// [`SliceConfig`], [`MxuParams`], [`VpuParams`], the estimator's
+/// calibration transfer) is *derived* from a spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Registry/display name (`tpu-v4`, or whatever a device file says).
+    pub name: String,
+    /// One-line human description for tables.
+    pub description: String,
+    /// Systolic MAC-array rows (S_R).
+    pub array_rows: usize,
+    /// Systolic MAC-array columns (S_C).
+    pub array_cols: usize,
+    /// Dataflow the array runs (OS / WS / IS).
+    pub dataflow: Dataflow,
+    /// IFMAP SRAM capacity, KiB (double-buffered by the simulator).
+    pub ifmap_sram_kb: usize,
+    /// Filter SRAM capacity, KiB.
+    pub filter_sram_kb: usize,
+    /// OFMAP SRAM capacity, KiB.
+    pub ofmap_sram_kb: usize,
+    /// DRAM read bandwidth for ifmap operands, words/cycle.
+    pub ifmap_dram_bw: f64,
+    /// DRAM read bandwidth for filter operands, words/cycle.
+    pub filter_dram_bw: f64,
+    /// DRAM write bandwidth for ofmap results, words/cycle.
+    pub ofmap_dram_bw: f64,
+    /// Bytes per operand word (2 for bf16).
+    pub word_bytes: usize,
+    /// Core clock, MHz (the MXU and VPU share it in this model).
+    pub clock_mhz: f64,
+    /// Peak vector-unit throughput, elements/cycle (fully pipelined).
+    pub vpu_elems_per_cycle: f64,
+    /// HBM bandwidth, GB/s (1 GB/s = 1000 bytes/µs).
+    pub hbm_gbps: f64,
+    /// On-chip residency buffer (VMEM) for the memory timeline, bytes.
+    pub vmem_bytes: u64,
+    /// DMA engines moving HBM traffic concurrently with compute. A
+    /// device with zero dedicated engines serializes explicit data
+    /// movement onto its compute lane (see
+    /// [`EngineConfig::for_device`](crate::graph::EngineConfig::for_device)).
+    pub dma_engines: usize,
+    /// Per-ICI-link bandwidth, GB/s.
+    pub ici_link_gbps: f64,
+    /// Per-ICI-hop latency (the alpha term), µs.
+    pub ici_hop_latency_us: f64,
+    /// Default link wiring when the caller does not pick one.
+    pub ici_topology: TopologyKind,
+    /// Fixed kernel dispatch overhead, µs — the intercept prior of the
+    /// cycle-to-latency mapping (the slope prior is `1 / clock`).
+    pub dispatch_overhead_us: f64,
+}
+
+impl DeviceSpec {
+    /// The reference preset: reproduces every historical hard-coded
+    /// constant ([`ScaleConfig::tpu_v4`], [`MxuParams::default`],
+    /// [`VpuParams::default`], [`MemoryConfig::tpu_v4`], the ICI
+    /// defaults) bit for bit.
+    pub fn tpu_v4() -> DeviceSpec {
+        DeviceSpec {
+            name: "tpu-v4".to_string(),
+            description: "128x128 MXU @ 940 MHz, 1.2 TB/s HBM, 32 MiB VMEM (reference)"
+                .to_string(),
+            array_rows: 128,
+            array_cols: 128,
+            dataflow: Dataflow::WeightStationary,
+            ifmap_sram_kb: 8 * 1024,
+            filter_sram_kb: 8 * 1024,
+            ofmap_sram_kb: 8 * 1024,
+            ifmap_dram_bw: 256.0,
+            filter_dram_bw: 256.0,
+            ofmap_dram_bw: 128.0,
+            word_bytes: 2,
+            clock_mhz: 940.0,
+            vpu_elems_per_cycle: 256.0,
+            hbm_gbps: 1200.0,
+            vmem_bytes: 32 * 1024 * 1024,
+            dma_engines: 1,
+            ici_link_gbps: 100.0,
+            ici_hop_latency_us: 1.0,
+            ici_topology: TopologyKind::Ring,
+            dispatch_overhead_us: 2.0,
+        }
+    }
+
+    /// TPU v5e-like efficiency part: same 128x128 array, leaner memory
+    /// system (819 GB/s HBM, 16 MiB VMEM), slimmer ICI links, torus
+    /// wiring by default.
+    pub fn tpu_v5e() -> DeviceSpec {
+        DeviceSpec {
+            name: "tpu-v5e".to_string(),
+            description: "128x128 MXU @ 940 MHz, 819 GB/s HBM, 16 MiB VMEM (efficiency)"
+                .to_string(),
+            array_rows: 128,
+            array_cols: 128,
+            dataflow: Dataflow::WeightStationary,
+            ifmap_sram_kb: 4 * 1024,
+            filter_sram_kb: 4 * 1024,
+            ofmap_sram_kb: 4 * 1024,
+            ifmap_dram_bw: 176.0,
+            filter_dram_bw: 176.0,
+            ofmap_dram_bw: 88.0,
+            word_bytes: 2,
+            clock_mhz: 940.0,
+            vpu_elems_per_cycle: 128.0,
+            hbm_gbps: 819.0,
+            vmem_bytes: 16 * 1024 * 1024,
+            dma_engines: 1,
+            ici_link_gbps: 50.0,
+            ici_hop_latency_us: 1.0,
+            ici_topology: TopologyKind::Torus,
+            dispatch_overhead_us: 1.5,
+        }
+    }
+
+    /// TPU v5p-like performance part: faster clock, 2.77 TB/s HBM,
+    /// bigger buffers, fat torus links.
+    pub fn tpu_v5p() -> DeviceSpec {
+        DeviceSpec {
+            name: "tpu-v5p".to_string(),
+            description: "128x128 MXU @ 1.1 GHz, 2.77 TB/s HBM, 64 MiB VMEM (performance)"
+                .to_string(),
+            array_rows: 128,
+            array_cols: 128,
+            dataflow: Dataflow::WeightStationary,
+            ifmap_sram_kb: 12 * 1024,
+            filter_sram_kb: 12 * 1024,
+            ofmap_sram_kb: 12 * 1024,
+            ifmap_dram_bw: 512.0,
+            filter_dram_bw: 512.0,
+            ofmap_dram_bw: 256.0,
+            word_bytes: 2,
+            clock_mhz: 1100.0,
+            vpu_elems_per_cycle: 512.0,
+            hbm_gbps: 2765.0,
+            vmem_bytes: 64 * 1024 * 1024,
+            dma_engines: 2,
+            ici_link_gbps: 200.0,
+            ici_hop_latency_us: 0.75,
+            ici_topology: TopologyKind::Torus,
+            dispatch_overhead_us: 2.0,
+        }
+    }
+
+    /// A generic TPU-v1-style 256x256 systolic part: big array, slow
+    /// clock, modest memory system. The "what if" scenario preset.
+    pub fn generic_256x256() -> DeviceSpec {
+        DeviceSpec {
+            name: "generic-256x256".to_string(),
+            description: "generic 256x256 systolic array @ 700 MHz, 600 GB/s HBM".to_string(),
+            array_rows: 256,
+            array_cols: 256,
+            dataflow: Dataflow::WeightStationary,
+            ifmap_sram_kb: 8 * 1024,
+            filter_sram_kb: 8 * 1024,
+            ofmap_sram_kb: 8 * 1024,
+            ifmap_dram_bw: 128.0,
+            filter_dram_bw: 128.0,
+            ofmap_dram_bw: 64.0,
+            word_bytes: 2,
+            clock_mhz: 700.0,
+            vpu_elems_per_cycle: 256.0,
+            hbm_gbps: 600.0,
+            vmem_bytes: 24 * 1024 * 1024,
+            dma_engines: 1,
+            ici_link_gbps: 25.0,
+            ici_hop_latency_us: 2.0,
+            ici_topology: TopologyKind::Ring,
+            dispatch_overhead_us: 3.0,
+        }
+    }
+
+    /// Look up a built-in preset by name.
+    pub fn preset(name: &str) -> Option<DeviceSpec> {
+        match name {
+            "tpu-v4" => Some(DeviceSpec::tpu_v4()),
+            "tpu-v5e" => Some(DeviceSpec::tpu_v5e()),
+            "tpu-v5p" => Some(DeviceSpec::tpu_v5p()),
+            "generic-256x256" => Some(DeviceSpec::generic_256x256()),
+            _ => None,
+        }
+    }
+
+    /// Every built-in preset, in [`PRESET_NAMES`] order.
+    pub fn presets() -> Vec<DeviceSpec> {
+        PRESET_NAMES
+            .iter()
+            .map(|n| DeviceSpec::preset(n).expect("registered preset"))
+            .collect()
+    }
+
+    /// HBM bandwidth in the memory timeline's unit, bytes/µs.
+    pub fn hbm_bytes_per_us(&self) -> f64 {
+        self.hbm_gbps * 1e3
+    }
+
+    /// Core clock in GHz (`clock_mhz / 1e3`; exact for the presets).
+    pub fn clock_ghz(&self) -> f64 {
+        self.clock_mhz / 1e3
+    }
+
+    /// Reject non-positive / non-finite parameters before they poison a
+    /// simulation (a zero bandwidth would make DMA costs infinite).
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("device needs a name");
+        }
+        if self.array_rows == 0 || self.array_cols == 0 {
+            bail!("device '{}': array dims must be positive", self.name);
+        }
+        if self.ifmap_sram_kb == 0 || self.filter_sram_kb == 0 || self.ofmap_sram_kb == 0 {
+            bail!("device '{}': SRAM sizes must be positive", self.name);
+        }
+        if self.word_bytes == 0 {
+            bail!("device '{}': word_bytes must be positive", self.name);
+        }
+        for (what, v) in [
+            ("ifmap_dram_bw", self.ifmap_dram_bw),
+            ("filter_dram_bw", self.filter_dram_bw),
+            ("ofmap_dram_bw", self.ofmap_dram_bw),
+            ("clock_mhz", self.clock_mhz),
+            ("vpu_elems_per_cycle", self.vpu_elems_per_cycle),
+            ("hbm_gbps", self.hbm_gbps),
+            ("ici_link_gbps", self.ici_link_gbps),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("device '{}': {what} must be positive, got {v}", self.name);
+            }
+        }
+        if !(self.ici_hop_latency_us.is_finite() && self.ici_hop_latency_us >= 0.0) {
+            bail!(
+                "device '{}': ici_hop_latency_us must be non-negative",
+                self.name
+            );
+        }
+        if !(self.dispatch_overhead_us.is_finite() && self.dispatch_overhead_us > 0.0) {
+            bail!(
+                "device '{}': dispatch_overhead_us must be positive",
+                self.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Derive the SCALE-Sim architecture config (the systolic-simulation
+    /// input). Bit-identical to [`ScaleConfig::tpu_v4`] for the
+    /// reference preset.
+    pub fn scale_config(&self) -> ScaleConfig {
+        ScaleConfig {
+            name: format!("{}_mxu", self.name.replace('-', "_")),
+            array_rows: self.array_rows,
+            array_cols: self.array_cols,
+            ifmap_sram_kb: self.ifmap_sram_kb,
+            filter_sram_kb: self.filter_sram_kb,
+            ofmap_sram_kb: self.ofmap_sram_kb,
+            dataflow: self.dataflow,
+            ifmap_dram_bw: self.ifmap_dram_bw,
+            filter_dram_bw: self.filter_dram_bw,
+            ofmap_dram_bw: self.ofmap_dram_bw,
+            word_bytes: self.word_bytes,
+            freq_mhz: self.clock_mhz,
+        }
+    }
+
+    /// Derive the memory timeline's bandwidth + residency-buffer config.
+    /// Bit-identical to [`MemoryConfig::tpu_v4`] for the reference
+    /// preset.
+    pub fn memory_config(&self) -> MemoryConfig {
+        MemoryConfig::new(self.hbm_bytes_per_us(), Some(self.vmem_bytes))
+    }
+
+    /// The concrete ICI wiring for a slice of `chips` chips under this
+    /// device's default topology kind.
+    pub fn default_topology(&self, chips: usize) -> IciTopology {
+        match self.ici_topology {
+            TopologyKind::Ring => IciTopology::Ring,
+            TopologyKind::Torus => IciTopology::torus(chips),
+        }
+    }
+
+    /// Derive a validated slice config for `chips` chips, wiring them
+    /// with `topology` (or this device's default when `None`).
+    pub fn slice_config(
+        &self,
+        chips: usize,
+        topology: Option<IciTopology>,
+    ) -> Result<SliceConfig> {
+        let slice = SliceConfig {
+            chips,
+            topology: topology.unwrap_or_else(|| self.default_topology(chips)),
+            link_gbps: self.ici_link_gbps,
+            hop_latency_us: self.ici_hop_latency_us,
+        };
+        slice.validate()?;
+        Ok(slice)
+    }
+
+    /// Derive the synthetic device model's GEMM-path constants.
+    /// Field-identical to [`MxuParams::default`] for the reference
+    /// preset.
+    pub fn mxu_params(&self) -> MxuParams {
+        MxuParams {
+            clock_ghz: self.clock_ghz(),
+            array: self.array_rows,
+            dispatch_overhead_us: self.dispatch_overhead_us,
+            hbm_bytes_per_us: self.hbm_bytes_per_us(),
+            bytes_per_elem: self.word_bytes as f64,
+            ..MxuParams::default()
+        }
+    }
+
+    /// Derive the synthetic device model's elementwise-path constants.
+    /// Field-identical to [`VpuParams::default`] for the reference
+    /// preset.
+    pub fn vpu_params(&self) -> VpuParams {
+        VpuParams {
+            clock_ghz: self.clock_ghz(),
+            hbm_bytes_per_us: self.hbm_bytes_per_us(),
+            max_elems_per_cycle: self.vpu_elems_per_cycle,
+            bytes_per_elem: self.word_bytes as f64,
+            ..VpuParams::default()
+        }
+    }
+
+    /// Transfer a cycle→time calibration fitted on device `from` onto
+    /// this device: the slope scales with the clock ratio (same cycles,
+    /// different cycle time) and the intercept with the dispatch-
+    /// overhead ratio. When both ratios are exactly 1 the input is
+    /// returned unchanged, so retargeting a spec onto itself is
+    /// bit-identical.
+    pub fn transfer_calibration(
+        &self,
+        from: &DeviceSpec,
+        base: &RegimeCalibration,
+    ) -> RegimeCalibration {
+        let slope_scale = from.clock_mhz / self.clock_mhz;
+        let intercept_scale = self.dispatch_overhead_us / from.dispatch_overhead_us;
+        if slope_scale == 1.0 && intercept_scale == 1.0 {
+            return base.clone();
+        }
+        let scale = |f: &LinearFit| LinearFit {
+            alpha: f.alpha * slope_scale,
+            beta: f.beta * intercept_scale,
+        };
+        RegimeCalibration {
+            small: scale(&base.small),
+            medium: scale(&base.medium),
+            large: scale(&base.large),
+            metrics: base.metrics.clone(),
+        }
+    }
+
+    /// Latency multiplier for learned elementwise models trained on
+    /// device `from`: elementwise kernels are roofline-limited by the
+    /// slower of the vector unit and HBM, so the transfer takes the
+    /// larger of the two rate ratios. Exactly 1 when `from` is this
+    /// device.
+    pub fn ew_scale(&self, from: &DeviceSpec) -> f64 {
+        let hbm = from.hbm_gbps / self.hbm_gbps;
+        let vpu = (from.vpu_elems_per_cycle * from.clock_mhz)
+            / (self.vpu_elems_per_cycle * self.clock_mhz);
+        hbm.max(vpu)
+    }
+
+    /// A stable 64-bit identity of every *numeric* parameter (name and
+    /// description excluded: two specs with identical hardware cost the
+    /// same and may share cache entries). The basis of the estimator's
+    /// cache fingerprint — every
+    /// [`ShapeKey`](crate::coordinator::ShapeKey) carries it (mixed
+    /// with the active config), so estimators for different devices can
+    /// share one cache without aliasing.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut put = |v: u64| {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        put(self.array_rows as u64);
+        put(self.array_cols as u64);
+        put(match self.dataflow {
+            Dataflow::OutputStationary => 0,
+            Dataflow::WeightStationary => 1,
+            Dataflow::InputStationary => 2,
+        });
+        put(self.ifmap_sram_kb as u64);
+        put(self.filter_sram_kb as u64);
+        put(self.ofmap_sram_kb as u64);
+        put(self.ifmap_dram_bw.to_bits());
+        put(self.filter_dram_bw.to_bits());
+        put(self.ofmap_dram_bw.to_bits());
+        put(self.word_bytes as u64);
+        put(self.clock_mhz.to_bits());
+        put(self.vpu_elems_per_cycle.to_bits());
+        put(self.hbm_gbps.to_bits());
+        put(self.vmem_bytes);
+        put(self.dma_engines as u64);
+        put(self.ici_link_gbps.to_bits());
+        put(self.ici_hop_latency_us.to_bits());
+        put(match self.ici_topology {
+            TopologyKind::Ring => 0,
+            TopologyKind::Torus => 1,
+        });
+        put(self.dispatch_overhead_us.to_bits());
+        h
+    }
+
+    /// Serialize the full spec (device files, `--json` payloads).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("description", Json::Str(self.description.clone()))
+            .set("array_rows", Json::Num(self.array_rows as f64))
+            .set("array_cols", Json::Num(self.array_cols as f64))
+            .set("dataflow", Json::Str(self.dataflow.short().to_lowercase()))
+            .set("ifmap_sram_kb", Json::Num(self.ifmap_sram_kb as f64))
+            .set("filter_sram_kb", Json::Num(self.filter_sram_kb as f64))
+            .set("ofmap_sram_kb", Json::Num(self.ofmap_sram_kb as f64))
+            .set("ifmap_dram_bw", Json::Num(self.ifmap_dram_bw))
+            .set("filter_dram_bw", Json::Num(self.filter_dram_bw))
+            .set("ofmap_dram_bw", Json::Num(self.ofmap_dram_bw))
+            .set("word_bytes", Json::Num(self.word_bytes as f64))
+            .set("clock_mhz", Json::Num(self.clock_mhz))
+            .set("vpu_elems_per_cycle", Json::Num(self.vpu_elems_per_cycle))
+            .set("hbm_gbps", Json::Num(self.hbm_gbps))
+            .set("vmem_bytes", Json::Num(self.vmem_bytes as f64))
+            .set("dma_engines", Json::Num(self.dma_engines as f64))
+            .set("ici_link_gbps", Json::Num(self.ici_link_gbps))
+            .set("ici_hop_latency_us", Json::Num(self.ici_hop_latency_us))
+            .set("ici_topology", Json::Str(self.ici_topology.name().to_string()))
+            .set("dispatch_overhead_us", Json::Num(self.dispatch_overhead_us));
+        o
+    }
+
+    /// Deserialize a spec from the flat JSON schema [`Self::to_json`]
+    /// emits. Only `name` is required; every other key defaults to the
+    /// [`DeviceSpec::tpu_v4`] reference value, mirroring the TOML loader.
+    pub fn from_json(j: &Json) -> Result<DeviceSpec, JsonError> {
+        let mut spec = DeviceSpec::tpu_v4();
+        spec.name = j.req_str("name")?.to_string();
+        spec.description = match j.get("description") {
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| JsonError::new("description must be a string"))?
+                .to_string(),
+            None => String::new(),
+        };
+        let f64_or = |key: &str, default: f64| -> Result<f64, JsonError> {
+            match j.get(key) {
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| JsonError::new(format!("{key} must be a number"))),
+                None => Ok(default),
+            }
+        };
+        let usize_or = |key: &str, default: usize| -> Result<usize, JsonError> {
+            match j.get(key) {
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| JsonError::new(format!("{key} must be an integer"))),
+                None => Ok(default),
+            }
+        };
+        spec.array_rows = usize_or("array_rows", spec.array_rows)?;
+        spec.array_cols = usize_or("array_cols", spec.array_cols)?;
+        if let Some(v) = j.get("dataflow") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| JsonError::new("dataflow must be a string"))?;
+            spec.dataflow =
+                Dataflow::parse(s).ok_or_else(|| JsonError::new("bad dataflow (os|ws|is)"))?;
+        }
+        spec.ifmap_sram_kb = usize_or("ifmap_sram_kb", spec.ifmap_sram_kb)?;
+        spec.filter_sram_kb = usize_or("filter_sram_kb", spec.filter_sram_kb)?;
+        spec.ofmap_sram_kb = usize_or("ofmap_sram_kb", spec.ofmap_sram_kb)?;
+        spec.ifmap_dram_bw = f64_or("ifmap_dram_bw", spec.ifmap_dram_bw)?;
+        spec.filter_dram_bw = f64_or("filter_dram_bw", spec.filter_dram_bw)?;
+        spec.ofmap_dram_bw = f64_or("ofmap_dram_bw", spec.ofmap_dram_bw)?;
+        spec.word_bytes = usize_or("word_bytes", spec.word_bytes)?;
+        spec.clock_mhz = f64_or("clock_mhz", spec.clock_mhz)?;
+        spec.vpu_elems_per_cycle = f64_or("vpu_elems_per_cycle", spec.vpu_elems_per_cycle)?;
+        spec.hbm_gbps = f64_or("hbm_gbps", spec.hbm_gbps)?;
+        let vmem = f64_or("vmem_bytes", spec.vmem_bytes as f64)?;
+        if !(vmem.is_finite() && vmem >= 0.0) {
+            return Err(JsonError::new("vmem_bytes must be non-negative"));
+        }
+        spec.vmem_bytes = vmem as u64;
+        spec.dma_engines = usize_or("dma_engines", spec.dma_engines)?;
+        spec.ici_link_gbps = f64_or("ici_link_gbps", spec.ici_link_gbps)?;
+        spec.ici_hop_latency_us = f64_or("ici_hop_latency_us", spec.ici_hop_latency_us)?;
+        if let Some(v) = j.get("ici_topology") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| JsonError::new("ici_topology must be a string"))?;
+            spec.ici_topology = TopologyKind::parse(s)
+                .ok_or_else(|| JsonError::new("bad ici_topology (ring|torus)"))?;
+        }
+        spec.dispatch_overhead_us = f64_or("dispatch_overhead_us", spec.dispatch_overhead_us)?;
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for DeviceSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {}x{} {} @ {:.0} MHz, {:.0} GB/s HBM, {:.0} MiB VMEM, ICI {:.0} GB/s/link ({})",
+            self.name,
+            self.array_rows,
+            self.array_cols,
+            self.dataflow,
+            self.clock_mhz,
+            self.hbm_gbps,
+            self.vmem_bytes as f64 / (1024.0 * 1024.0),
+            self.ici_link_gbps,
+            self.ici_topology,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_preset_reproduces_hardcoded_configs() {
+        let v4 = DeviceSpec::tpu_v4();
+        assert_eq!(v4.scale_config(), ScaleConfig::tpu_v4());
+        assert_eq!(v4.memory_config(), MemoryConfig::tpu_v4());
+        assert_eq!(v4.mxu_params(), MxuParams::default());
+        assert_eq!(v4.vpu_params(), VpuParams::default());
+        let slice = v4.slice_config(4, None).unwrap();
+        assert_eq!(slice, SliceConfig::ring(4, 100.0));
+        // The derived clocks are exact, not merely close.
+        assert_eq!(v4.clock_ghz().to_bits(), 0.94f64.to_bits());
+        assert_eq!(v4.hbm_bytes_per_us().to_bits(), 1.2e6f64.to_bits());
+    }
+
+    #[test]
+    fn presets_are_registered_valid_and_distinct() {
+        let specs = DeviceSpec::presets();
+        assert_eq!(specs.len(), PRESET_NAMES.len());
+        let mut fps = Vec::new();
+        for s in &specs {
+            s.validate().unwrap();
+            assert!(DeviceSpec::preset(&s.name).is_some());
+            fps.push(s.fingerprint());
+        }
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), specs.len(), "fingerprint collision");
+        assert!(DeviceSpec::preset("tpu-v9").is_none());
+    }
+
+    #[test]
+    fn fingerprint_ignores_name_but_not_hardware() {
+        let a = DeviceSpec::tpu_v4();
+        let mut b = a.clone();
+        b.name = "renamed".into();
+        b.description = "other".into();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.hbm_gbps = 1201.0;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn self_transfer_is_identity() {
+        let v4 = DeviceSpec::tpu_v4();
+        let cal = RegimeCalibration {
+            small: LinearFit { alpha: 1e-3, beta: 2.0 },
+            medium: LinearFit { alpha: 2e-3, beta: 1.0 },
+            large: LinearFit { alpha: 3e-3, beta: 0.5 },
+            metrics: Vec::new(),
+        };
+        let out = v4.transfer_calibration(&v4, &cal);
+        assert_eq!(out.small, cal.small);
+        assert_eq!(out.large, cal.large);
+        assert_eq!(v4.ew_scale(&v4).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn transfer_scales_with_clock_and_overhead() {
+        let v4 = DeviceSpec::tpu_v4();
+        let mut fast = v4.clone();
+        fast.clock_mhz = 1880.0; // 2x clock
+        fast.dispatch_overhead_us = 1.0; // half the overhead
+        let cal = RegimeCalibration {
+            small: LinearFit { alpha: 1.0, beta: 2.0 },
+            medium: LinearFit { alpha: 1.0, beta: 2.0 },
+            large: LinearFit { alpha: 1.0, beta: 2.0 },
+            metrics: Vec::new(),
+        };
+        let out = fast.transfer_calibration(&v4, &cal);
+        assert!((out.small.alpha - 0.5).abs() < 1e-12);
+        assert!((out.small.beta - 1.0).abs() < 1e-12);
+        // A device slower on both axes scales elementwise latency up.
+        let v5e = DeviceSpec::tpu_v5e();
+        assert!(v5e.ew_scale(&v4) > 1.0);
+        // A device faster on both axes scales it down.
+        let v5p = DeviceSpec::tpu_v5p();
+        assert!(v5p.ew_scale(&v4) < 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip_and_defaults() {
+        for spec in DeviceSpec::presets() {
+            let back = DeviceSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, back);
+            assert_eq!(spec.fingerprint(), back.fingerprint());
+        }
+        // Partial JSON inherits the reference values.
+        let j = Json::parse(r#"{"name":"mini","hbm_gbps":600}"#).unwrap();
+        let spec = DeviceSpec::from_json(&j).unwrap();
+        assert_eq!(spec.name, "mini");
+        assert_eq!(spec.hbm_gbps, 600.0);
+        assert_eq!(spec.array_rows, 128);
+        assert!(DeviceSpec::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let mut bad = DeviceSpec::tpu_v4();
+        bad.hbm_gbps = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = DeviceSpec::tpu_v4();
+        bad.array_rows = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = DeviceSpec::tpu_v4();
+        bad.clock_mhz = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = DeviceSpec::tpu_v4();
+        bad.ici_hop_latency_us = -1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn torus_default_topology_factors_by_chip_count() {
+        let v5e = DeviceSpec::tpu_v5e();
+        assert_eq!(
+            v5e.default_topology(16),
+            IciTopology::Torus2D { x: 4, y: 4 }
+        );
+        let slice = v5e.slice_config(8, None).unwrap();
+        assert_eq!(slice.topology, IciTopology::Torus2D { x: 2, y: 4 });
+        assert_eq!(slice.link_gbps, 50.0);
+        // An explicit topology overrides the device default.
+        let ring = v5e.slice_config(8, Some(IciTopology::Ring)).unwrap();
+        assert_eq!(ring.topology, IciTopology::Ring);
+    }
+}

@@ -139,6 +139,13 @@ impl SliceConfig {
         SliceConfig::ring(1, DEFAULT_LINK_GBPS)
     }
 
+    /// A validated slice wired with a device's ICI parameters and
+    /// default topology (delegates to
+    /// [`DeviceSpec::slice_config`](crate::device::DeviceSpec::slice_config)).
+    pub fn for_device(spec: &crate::device::DeviceSpec, chips: usize) -> Result<SliceConfig> {
+        spec.slice_config(chips, None)
+    }
+
     /// Reject inconsistent chip counts / non-positive link parameters.
     pub fn validate(&self) -> Result<()> {
         if self.chips == 0 {

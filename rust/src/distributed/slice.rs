@@ -217,8 +217,9 @@ pub fn estimate_gemm_sliced(
 }
 
 /// Cost one collective through the estimator's shape cache: the key
-/// carries the full slice config, so entries for different slices (or
-/// the single-chip path) can never alias.
+/// carries the device fingerprint and the full slice config, so entries
+/// for different devices, different slices, or the single-chip path can
+/// never alias.
 fn collective_cost(
     est: &Estimator,
     slice: &SliceConfig,
@@ -229,7 +230,7 @@ fn collective_cost(
     if slice.chips <= 1 {
         return 0.0;
     }
-    let key = ShapeKey::collective(kind, bytes_in, bytes_out, slice);
+    let key = ShapeKey::collective(est.cache_fingerprint(), kind, bytes_in, bytes_out, slice);
     if let Some(hit) = est.cache.lookup(&key) {
         return hit.latency_us;
     }

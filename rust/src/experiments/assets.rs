@@ -2,6 +2,13 @@
 //! hardware backend, persist to disk, and load back into an
 //! [`Estimator`]. The CLI and the end-to-end example use this so the
 //! expensive measure/train steps run once and are reused.
+//!
+//! Assets record the [`DeviceSpec`] they were measured on
+//! (`device.json`): the loaded estimator's retarget reference is that
+//! device, so calibrating against a non-reference device and then
+//! retargeting never double-applies a transfer. Asset directories
+//! written before the device record existed load as reference
+//! (`tpu-v4`) measurements, which is what they were.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -10,6 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::calibrate::RegimeCalibration;
 use crate::coordinator::Estimator;
+use crate::device::DeviceSpec;
 use crate::frontend::classify::EwKind;
 use crate::learned::{Hgbr, HgbrParams};
 use crate::scalesim::ScaleConfig;
@@ -27,15 +35,17 @@ pub const LEARNED_OPS: [EwKind; 4] = [
 
 /// Build a fully-populated estimator from scratch: run the Fig. 2
 /// calibration sweep and train learned models for [`LEARNED_OPS`].
+/// `spec` must be the device `hw` models — it becomes the estimator's
+/// device tag and retarget reference.
 pub fn build_estimator(
     hw: &mut dyn Hardware,
-    config: &ScaleConfig,
+    spec: &DeviceSpec,
     num_shapes: usize,
     reps: usize,
     seed: u64,
 ) -> Estimator {
-    let f2 = fig2::run(hw, config, reps);
-    let mut est = Estimator::new(config.clone(), f2.calibration);
+    let f2 = fig2::run(hw, &spec.scale_config(), reps);
+    let mut est = Estimator::for_device(spec.clone(), f2.calibration);
     let params = HgbrParams::default();
     for (i, op) in LEARNED_OPS.iter().enumerate() {
         let ds = fig5::collect_dataset(hw, *op, num_shapes, reps, seed + i as u64);
@@ -51,12 +61,14 @@ pub fn build_estimator(
 /// capped elementwise training sets for add/maximum only.
 pub fn build_estimator_fast(
     hw: &mut dyn Hardware,
-    config: &ScaleConfig,
+    spec: &DeviceSpec,
     reps: usize,
     seed: u64,
 ) -> Estimator {
     use crate::scalesim::{simulate_gemm, GemmShape};
     use crate::workloads::elementwise_sweep::sample_training_shapes_bounded;
+
+    let config = &spec.scale_config();
 
     // Diagonal + lightly skewed shapes across the regimes (capped at 2048
     // so CPU-backed GEMMs stay sub-second).
@@ -91,7 +103,7 @@ pub fn build_estimator_fast(
         .collect();
     let calibration =
         crate::calibrate::fit_regime_calibration(&obs).expect("fast calibration fit");
-    let mut est = Estimator::new(config.clone(), calibration);
+    let mut est = Estimator::for_device(spec.clone(), calibration);
 
     let params = HgbrParams {
         max_iter: 300,
@@ -112,12 +124,15 @@ pub fn build_estimator_fast(
     est
 }
 
-/// Persist calibration + learned models under `dir`.
+/// Persist calibration + learned models + the measurement device
+/// under `dir`.
 pub fn save_assets(dir: &Path, est: &Estimator) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     est.calibration
         .save(&dir.join("calibration.json"))
         .context("saving calibration")?;
+    std::fs::write(dir.join("device.json"), est.device().to_json().pretty())
+        .context("saving device record")?;
     for (name, model) in &est.learned {
         model
             .save(&dir.join(format!("learned_{name}.json")))
@@ -130,7 +145,10 @@ pub fn save_assets(dir: &Path, est: &Estimator) -> Result<()> {
     Ok(())
 }
 
-/// Load previously saved assets.
+/// Load previously saved assets. The estimator's device tag (and
+/// retarget reference) comes from the directory's `device.json`;
+/// directories written before that record existed load as reference
+/// (`tpu-v4`) measurements.
 pub fn load_assets(dir: &Path) -> Result<Estimator> {
     let config_text = std::fs::read_to_string(dir.join("config.json"))
         .with_context(|| format!("no config.json under {}", dir.display()))?;
@@ -139,7 +157,20 @@ pub fn load_assets(dir: &Path) -> Result<Estimator> {
     )
     .map_err(|e| anyhow::anyhow!("{e}"))?;
     let calibration = RegimeCalibration::load(&dir.join("calibration.json"))?;
-    let mut est = Estimator::new(config, calibration);
+    let device = match std::fs::read_to_string(dir.join("device.json")) {
+        Ok(text) => {
+            let j = crate::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let spec = DeviceSpec::from_json(&j).map_err(|e| anyhow::anyhow!("{e}"))?;
+            spec.validate()?;
+            spec
+        }
+        Err(_) => DeviceSpec::tpu_v4(),
+    };
+    let mut est = Estimator::for_device(device, calibration);
+    // The saved systolic config wins over the spec derivation: it is
+    // exactly what the calibration cycles were simulated with (the
+    // setter keeps the cache identity in sync).
+    est.set_config(config);
 
     let mut learned = HashMap::new();
     for entry in std::fs::read_dir(dir)? {
@@ -158,11 +189,12 @@ pub fn load_assets(dir: &Path) -> Result<Estimator> {
     Ok(est)
 }
 
-/// Load assets if present, otherwise build and save them.
+/// Load assets if present, otherwise build them against `spec` (the
+/// device `hw` models) and save them.
 pub fn load_or_build(
     dir: &Path,
     hw: &mut dyn Hardware,
-    config: &ScaleConfig,
+    spec: &DeviceSpec,
     num_shapes: usize,
     reps: usize,
     seed: u64,
@@ -174,7 +206,7 @@ pub fn load_or_build(
         }
     }
     crate::log_info!("building modeling assets (sweep + training)...");
-    let est = build_estimator(hw, config, num_shapes, reps, seed);
+    let est = build_estimator(hw, spec, num_shapes, reps, seed);
     save_assets(dir, &est)?;
     Ok(est)
 }
@@ -187,8 +219,7 @@ mod tests {
     #[test]
     fn build_save_load_roundtrip() {
         let mut hw = TpuV4Model::new(5);
-        let config = ScaleConfig::tpu_v4();
-        let est = build_estimator(&mut hw, &config, 150, 1, 3);
+        let est = build_estimator(&mut hw, &DeviceSpec::tpu_v4(), 150, 1, 3);
         assert_eq!(est.learned.len(), LEARNED_OPS.len());
 
         let dir = std::env::temp_dir().join("scalesim_tpu_assets_test");
@@ -197,6 +228,10 @@ mod tests {
         let est2 = load_assets(&dir).unwrap();
         assert_eq!(est2.learned.len(), est.learned.len());
         assert_eq!(est2.config, est.config);
+        // The device record round-trips: the loaded estimator knows
+        // which device the calibration was measured on.
+        assert_eq!(est2.device(), est.device());
+        assert_eq!(est2.device_fingerprint(), est.device_fingerprint());
         // Same predictions after the roundtrip.
         let g = crate::scalesim::GemmShape::new(777, 333, 99);
         assert!(
@@ -210,12 +245,12 @@ mod tests {
     #[test]
     fn load_or_build_uses_cache() {
         let mut hw = TpuV4Model::new(5);
-        let config = ScaleConfig::tpu_v4();
+        let spec = DeviceSpec::tpu_v4();
         let dir = std::env::temp_dir().join("scalesim_tpu_assets_cache_test");
         std::fs::remove_dir_all(&dir).ok();
-        let _ = load_or_build(&dir, &mut hw, &config, 120, 1, 3).unwrap();
+        let _ = load_or_build(&dir, &mut hw, &spec, 120, 1, 3).unwrap();
         let t0 = std::time::Instant::now();
-        let est2 = load_or_build(&dir, &mut hw, &config, 120, 1, 3).unwrap();
+        let est2 = load_or_build(&dir, &mut hw, &spec, 120, 1, 3).unwrap();
         assert!(t0.elapsed().as_secs_f64() < 2.0, "cache path too slow");
         assert!(!est2.learned.is_empty());
         std::fs::remove_dir_all(&dir).ok();

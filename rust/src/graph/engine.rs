@@ -87,6 +87,19 @@ pub enum EngineConfig {
 }
 
 impl EngineConfig {
+    /// The engine set a device schedules onto. Devices with at least one
+    /// dedicated DMA engine get the full [`EngineConfig::Tpu`] set; a
+    /// device with no DMA engine serializes explicit data movement onto
+    /// its compute lane, which is exactly the [`EngineConfig::ComputeIci`]
+    /// routing (one compute lane + the ICI lane).
+    pub fn for_device(spec: &crate::device::DeviceSpec) -> EngineConfig {
+        if spec.dma_engines == 0 {
+            EngineConfig::ComputeIci
+        } else {
+            EngineConfig::Tpu
+        }
+    }
+
     /// Lowercase configuration name.
     pub fn name(&self) -> &'static str {
         match self {
@@ -188,6 +201,16 @@ mod tests {
         };
         assert_eq!(config.engine_of(&coll), Some(Engine::Ici));
         assert_eq!(config.engine_of(&OpClass::Free), Some(Engine::Mxu));
+    }
+
+    #[test]
+    fn engine_set_derives_from_the_device() {
+        use crate::device::DeviceSpec;
+        let v4 = DeviceSpec::tpu_v4();
+        assert_eq!(EngineConfig::for_device(&v4), EngineConfig::Tpu);
+        let mut no_dma = v4;
+        no_dma.dma_engines = 0;
+        assert_eq!(EngineConfig::for_device(&no_dma), EngineConfig::ComputeIci);
     }
 
     #[test]

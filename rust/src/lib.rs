@@ -14,6 +14,9 @@
 //! * [`learned`] — histogram-based gradient-boosting regression, written
 //!   from scratch, for non-systolic elementwise-operator latency.
 //! * [`calibrate`] — the cycle→time linear calibration and fit metrics.
+//! * [`device`] — the unified device-model layer: one [`device::DeviceSpec`]
+//!   (presets + TOML/JSON loader) that every subsystem derives its
+//!   hardware constants from.
 //! * [`tpu`] — the measurement substrate: a synthetic TPU v4 device model
 //!   (hardware substitute, see DESIGN.md) and a PJRT-backed harness that
 //!   times real executions.
@@ -37,6 +40,7 @@
 
 pub mod calibrate;
 pub mod coordinator;
+pub mod device;
 pub mod distributed;
 pub mod experiments;
 pub mod frontend;

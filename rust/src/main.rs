@@ -10,9 +10,10 @@ use anyhow::{bail, Context, Result};
 
 use scalesim_tpu::calibrate::Regime;
 use scalesim_tpu::coordinator::{default_workers, serve_lines, serve_stream, StreamOptions};
+use scalesim_tpu::device::{load_device_file, resolve_device, DeviceSpec, PRESET_NAMES};
 use scalesim_tpu::distributed::{
     estimate_gemm_sliced, estimate_module_distributed, estimate_module_distributed_memory,
-    DistributedEstimate, IciTopology, SliceConfig, DEFAULT_HOP_LATENCY_US, DEFAULT_LINK_GBPS,
+    DistributedEstimate, IciTopology, SliceConfig,
 };
 use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
 use scalesim_tpu::frontend::parse_module;
@@ -20,9 +21,7 @@ use scalesim_tpu::graph::{schedule_estimate, EngineConfig, ModuleSchedule};
 use scalesim_tpu::memory::{schedule_estimate_memory, MemoryConfig, MemorySchedule};
 use scalesim_tpu::report::{write_output, Table};
 use scalesim_tpu::util::json::Json;
-use scalesim_tpu::scalesim::{
-    simulate_gemm, simulate_topology, GemmShape, ScaleConfig, Topology,
-};
+use scalesim_tpu::scalesim::{simulate_gemm, simulate_topology, GemmShape, Topology};
 use scalesim_tpu::tpu::{Hardware, PjrtHardware, TpuV4Model};
 use scalesim_tpu::util::args::Args;
 
@@ -64,17 +63,31 @@ Toolchain:
                                    re-fetch; reports makespan, residency
                                    stats and the compute-vs-bandwidth
                                    roofline (works with --chips too)
-           [--vmem-mb MB]          residency buffer for --memory
-                                   (default 32 MiB)
-           [--hbm-gbps G]          HBM bandwidth for --memory (default:
-                                   the estimator's 1200 GB/s)
+           [--vmem-mb MB]          residency buffer for --memory; override
+                                   applied on top of the --device spec
+                                   (tpu-v4: 32 MiB)
+           [--hbm-gbps G]          HBM bandwidth for --memory; override on
+                                   top of the spec (tpu-v4: 1200 GB/s)
            [--chips N]             distribute across an N-chip slice:
-           [--ici-gbps G]          per-link ICI bandwidth (default 100)
-           [--ici-topology T]      ring | torus | XxY (default ring)
-           [--ici-latency-us A]    per-hop latency (default 1.0); prints
-                                   per-chip busy time, collective time
-                                   and parallel efficiency
+           [--ici-gbps G]          per-link ICI bandwidth; override on top
+                                   of the spec (tpu-v4: 100)
+           [--ici-topology T]      ring | torus | XxY (default: the spec's
+                                   wiring; tpu-v4: ring)
+           [--ici-latency-us A]    per-hop latency; override on top of the
+                                   spec (tpu-v4: 1.0); prints per-chip
+                                   busy time, collective time and
+                                   parallel efficiency
   calibrate                      build + save modeling assets
+  devices                        list the device presets; --check [--dir D]
+                                 round-trips every rust/devices/*.toml|json
+                                 file through the loader and verifies the
+                                 preset-named ones match the registry
+  compare --module FILE          estimate one module against several device
+          --devices a,b,c          specs side by side (presets or device
+          [--chips N] [--json]     files; default: every preset); reports
+                                   unfused/scheduled/memory-aware totals
+                                   per device, plus the distributed slice
+                                   when --chips is given
   serve [--input FILE.jsonl]     streaming request service (JSONL in/out);
         [--workers N]              reads stdin when no --input is given and
         [--queue N]                answers incrementally, in order, through
@@ -84,10 +97,21 @@ Toolchain:
                                    (--quiet suppresses it). --batch restores
                                    the legacy slurp-whole-input mode; --queue
                                    bounds the in-flight job queue (default
-                                   4 x workers).
+                                   4 x workers). Requests may carry a
+                                   "device" field naming any preset; the
+                                   shared shape cache keys on the device
+                                   fingerprint so mixed streams never alias.
 
 Common options:
-  --hardware model|pjrt      measurement backend (default: model)
+  --device NAME|FILE         device spec every hardware constant derives
+                             from: a preset (devices subcommand lists them;
+                             default tpu-v4, which reproduces the historical
+                             hard-coded constants bit for bit) or a
+                             TOML/JSON device file
+  --device-file FILE         explicit device-file form of --device
+  --hardware model|pjrt      measurement backend (default: model; the
+                             synthetic model takes its MXU/VPU constants
+                             from --device)
   --seed N                   device-model noise seed (default 42)
   --reps N                   median-of-N measurement (default 5)
   --shapes N                 training shapes for learned models (default 2000)
@@ -108,21 +132,35 @@ fn main() {
     }
 }
 
-fn make_hardware(args: &Args) -> Result<Box<dyn Hardware>> {
+/// Resolve `--device <name|file>` / `--device-file FILE` (default: the
+/// `tpu-v4` reference preset, which reproduces the historical hard-coded
+/// constants bit for bit), folding the `--dataflow` override into the
+/// spec so it participates in the cache fingerprint.
+fn make_device(args: &Args) -> Result<DeviceSpec> {
+    let device_arg = args.get("device").map(str::to_string);
+    let device_file = args.get("device-file").map(str::to_string);
+    let mut spec = match (device_arg, device_file) {
+        (Some(_), Some(_)) => {
+            bail!("--device and --device-file are mutually exclusive; pass one")
+        }
+        (Some(arg), None) => resolve_device(&arg)?,
+        (None, Some(path)) => load_device_file(std::path::Path::new(&path))?,
+        (None, None) => DeviceSpec::tpu_v4(),
+    };
+    if let Some(df) = args.get("dataflow") {
+        spec.dataflow = scalesim_tpu::scalesim::Dataflow::parse(df)
+            .with_context(|| format!("bad dataflow '{df}'"))?;
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
+fn make_hardware(args: &Args, spec: &DeviceSpec) -> Result<Box<dyn Hardware>> {
     match args.str_or("hardware", "model").as_str() {
-        "model" => Ok(Box::new(TpuV4Model::new(args.u64_or("seed", 42)))),
+        "model" => Ok(Box::new(TpuV4Model::for_device(spec, args.u64_or("seed", 42)))),
         "pjrt" => Ok(Box::new(PjrtHardware::new()?)),
         other => bail!("unknown hardware backend '{other}' (model|pjrt)"),
     }
-}
-
-fn make_config(args: &Args) -> Result<ScaleConfig> {
-    let mut config = ScaleConfig::tpu_v4();
-    if let Some(df) = args.get("dataflow") {
-        config.dataflow = scalesim_tpu::scalesim::Dataflow::parse(df)
-            .with_context(|| format!("bad dataflow '{df}'"))?;
-    }
-    Ok(config)
 }
 
 fn out_dir(args: &Args) -> PathBuf {
@@ -130,15 +168,18 @@ fn out_dir(args: &Args) -> PathBuf {
 }
 
 /// Memory config from `--memory/--vmem-mb/--hbm-gbps`; `None` when
-/// `--memory` is absent. The knobs are read unconditionally so they
-/// never trip the unknown-option warning.
-fn make_memory(args: &Args, default_bytes_per_us: f64) -> Result<Option<MemoryConfig>> {
-    let vmem_mb = args.f64_or(
-        "vmem-mb",
-        MemoryConfig::DEFAULT_BUFFER_BYTES as f64 / (1024.0 * 1024.0),
-    );
+/// `--memory` is absent. Precedence: explicit flag > device spec (the
+/// `hbm_default` is the estimator's bandwidth, itself spec-derived).
+/// The knobs are read unconditionally so they never trip the
+/// unknown-option warning.
+fn make_memory(
+    args: &Args,
+    spec: &DeviceSpec,
+    hbm_default_bytes_per_us: f64,
+) -> Result<Option<MemoryConfig>> {
+    let vmem_mb = args.f64_or("vmem-mb", spec.vmem_bytes as f64 / (1024.0 * 1024.0));
     // 1 GB/s == 1e3 bytes/us.
-    let bytes_per_us = args.f64_or("hbm-gbps", default_bytes_per_us / 1e3) * 1e3;
+    let bytes_per_us = args.f64_or("hbm-gbps", hbm_default_bytes_per_us / 1e3) * 1e3;
     if !args.flag("memory") {
         return Ok(None);
     }
@@ -156,19 +197,23 @@ fn make_memory(args: &Args, default_bytes_per_us: f64) -> Result<Option<MemoryCo
 }
 
 /// Slice config from `--chips/--ici-*`; `None` when `--chips` is absent.
-fn make_slice(args: &Args) -> Result<Option<SliceConfig>> {
+/// Precedence: explicit flag > device spec.
+fn make_slice(args: &Args, spec: &DeviceSpec) -> Result<Option<SliceConfig>> {
     let Some(chips) = args.get("chips") else {
         return Ok(None);
     };
     let chips: usize = chips
         .parse()
         .with_context(|| format!("--chips expects an integer, got '{chips}'"))?;
-    let topology = IciTopology::parse(&args.str_or("ici-topology", "ring"), chips)?;
+    let topology = match args.get("ici-topology") {
+        Some(t) => IciTopology::parse(t, chips)?,
+        None => spec.default_topology(chips),
+    };
     let slice = SliceConfig {
         chips,
         topology,
-        link_gbps: args.f64_or("ici-gbps", DEFAULT_LINK_GBPS),
-        hop_latency_us: args.f64_or("ici-latency-us", DEFAULT_HOP_LATENCY_US),
+        link_gbps: args.f64_or("ici-gbps", spec.ici_link_gbps),
+        hop_latency_us: args.f64_or("ici-latency-us", spec.ici_hop_latency_us),
     };
     slice.validate()?;
     Ok(Some(slice))
@@ -197,14 +242,17 @@ fn run(args: &Args) -> Result<()> {
         }
         Some("simulate") => cmd_simulate(args),
         Some("calibrate") => cmd_calibrate(args),
+        Some("devices") => cmd_devices(args),
+        Some("compare") => cmd_compare(args),
         Some("serve") => cmd_serve(args),
         Some(other) => bail!("unknown subcommand '{other}' (try 'help')"),
     }
 }
 
 fn cmd_fig2(args: &Args) -> Result<()> {
-    let config = make_config(args)?;
-    let mut hw = make_hardware(args)?;
+    let spec = make_device(args)?;
+    let config = spec.scale_config();
+    let mut hw = make_hardware(args, &spec)?;
     let reps = args.usize_or("reps", 5);
     let result = fig2::run(hw.as_mut(), &config, reps);
     println!("{}", fig2::render(&result, hw.name()));
@@ -215,7 +263,7 @@ fn cmd_fig2(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig3(args: &Args) -> Result<()> {
-    let mut hw = make_hardware(args)?;
+    let mut hw = make_hardware(args, &make_device(args)?)?;
     let reps = args.usize_or("reps", 5);
     let result = fig3::run(hw.as_mut(), reps);
     println!("{}", fig3::render(&result, hw.name()));
@@ -226,8 +274,9 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig4(args: &Args) -> Result<()> {
-    let config = make_config(args)?;
-    let mut hw = make_hardware(args)?;
+    let spec = make_device(args)?;
+    let config = spec.scale_config();
+    let mut hw = make_hardware(args, &spec)?;
     let reps = args.usize_or("reps", 5);
     // Calibrate on the Fig. 2 sweep, evaluate on held-out shapes.
     let f2 = fig2::run(hw.as_mut(), &config, reps);
@@ -240,7 +289,7 @@ fn cmd_fig4(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig5(args: &Args) -> Result<()> {
-    let mut hw = make_hardware(args)?;
+    let mut hw = make_hardware(args, &make_device(args)?)?;
     let reps = args.usize_or("reps", 5);
     let shapes = args.usize_or("shapes", 2000);
     let seed = args.u64_or("seed", 42);
@@ -253,32 +302,38 @@ fn cmd_fig5(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let config = make_config(args)?;
+    let spec = make_device(args)?;
+    let config = spec.scale_config();
 
     if let Some(path) = args.get("module") {
-        // StableHLO module → whole-model estimate via saved assets.
+        // StableHLO module → whole-model estimate via saved assets. The
+        // assets are measured on the reference device; `retarget` then
+        // re-derives the estimator for the selected spec (a no-op for
+        // the default `tpu-v4`, bit for bit).
         let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
-        let mut hw = make_hardware(args)?;
+        let reference = DeviceSpec::tpu_v4();
+        let mut hw = make_hardware(args, &reference)?;
         let est = assets::load_or_build(
             &assets_dir,
             hw.as_mut(),
-            &config,
+            &reference,
             args.usize_or("shapes", 1200),
             args.usize_or("reps", 3),
             args.u64_or("seed", 42),
         )?;
+        let est = est.retarget(&spec);
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading module {path}"))?;
         let module = parse_module(&text)?;
 
-        if let Some(slice) = make_slice(args)? {
-            let mem = make_memory(args, est.hbm_bytes_per_us())?;
+        if let Some(slice) = make_slice(args, &spec)? {
+            let mem = make_memory(args, &spec, est.hbm_bytes_per_us())?;
             let d = match &mem {
                 Some(m) => estimate_module_distributed_memory(&est, &module, &slice, m),
                 None => estimate_module_distributed(&est, &module, &slice),
             };
             if args.flag("json") {
-                println!("{}", distributed_json(&d, &slice, mem.is_some()).dump());
+                println!("{}", distributed_json(&d, &spec, &slice, mem.is_some()).dump());
                 return Ok(());
             }
             // The `dma us` column appears only under --memory (the
@@ -307,6 +362,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 t.row(&cells);
             }
             println!("{}", t.markdown());
+            println!("device: {spec}");
             println!(
                 "slice: {} chips ({}, {} GB/s/link, {} us/hop)",
                 slice.chips, slice.topology, slice.link_gbps, slice.hop_latency_us
@@ -347,16 +403,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             return Ok(());
         }
 
+        let engines = EngineConfig::for_device(&spec);
         let report = est.estimate_module(&module);
         let fused = scalesim_tpu::coordinator::estimate_fused_with(&module, report.clone());
-        let sched = schedule_estimate(&module, &report, EngineConfig::Tpu);
-        let mem = make_memory(args, est.hbm_bytes_per_us())?
-            .map(|m| schedule_estimate_memory(&module, &report, EngineConfig::Tpu, &m));
+        let sched = schedule_estimate(&module, &report, engines);
+        let mem = make_memory(args, &spec, est.hbm_bytes_per_us())?
+            .map(|m| schedule_estimate_memory(&module, &report, engines, &m));
         // The fused total is always reported now; the old flag stays
         // accepted so existing invocations keep working.
         let _ = args.flag("fused");
         if args.flag("json") {
-            println!("{}", module_json(&report, &fused, &sched, mem.as_ref()).dump());
+            println!(
+                "{}",
+                module_json(&spec, &report, &fused, &sched, mem.as_ref()).dump()
+            );
             return Ok(());
         }
         let mut t = Table::new(&[
@@ -386,6 +446,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 println!("{}", m.schedule.render_timeline());
             }
         }
+        println!("device: {spec}");
         println!(
             "module @{}: unfused {:.2} us (systolic {:.2}, elementwise {:.2}, other {:.2}); fused {:.2} us; scheduled {:.2} us (critical path {:.2} us); model coverage {:.0}%",
             report.module_name,
@@ -450,7 +511,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("{report}");
     println!("regime: {}", Regime::of_gemm(&g));
 
-    if let Some(slice) = make_slice(args)? {
+    if let Some(slice) = make_slice(args, &spec)? {
         // Slice the GEMM without needing calibration assets: build a
         // cycle-proportional estimator so relative numbers are exact.
         let est = assets::load_assets(&PathBuf::from(args.str_or("assets", "artifacts/assets")))
@@ -463,12 +524,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                         (gd, c, c as f64 * 1e-3)
                     })
                     .collect();
-                scalesim_tpu::coordinator::Estimator::new(
-                    config.clone(),
+                scalesim_tpu::coordinator::Estimator::for_device(
+                    spec.clone(),
                     scalesim_tpu::calibrate::fit_regime_calibration(&obs)
                         .expect("synthetic calibration"),
                 )
             });
+        let est = est.retarget(&spec);
         let r = estimate_gemm_sliced(&est, g, &slice);
         println!(
             "slice: {} chips ({}, {} GB/s/link): per-chip busy time {:.3} us compute + {:.3} us collective = {:.3} us; parallel efficiency {:.1}%",
@@ -519,13 +581,214 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         write_output(std::path::Path::new(path), &trace.to_csv())?;
         println!("wrote fold trace ({} folds) to {path}", trace.records.len());
     }
-    // If calibration assets exist, also report estimated TPU time.
+    // If calibration assets exist, also report estimated TPU time
+    // (transferred onto the selected device; identity for tpu-v4).
     let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
     if let Ok(est) = assets::load_assets(&assets_dir) {
+        let est = est.retarget(&spec);
         println!(
             "calibrated TPU latency estimate: {:.3} us",
             est.calibration.cycles_to_us(&g, report.total_cycles())
         );
+    }
+    Ok(())
+}
+
+/// `devices`: list the preset registry, or (`--check`) round-trip every
+/// checked-in device file through the loader and verify preset-named
+/// files still match the registry (the CI smoke).
+fn cmd_devices(args: &Args) -> Result<()> {
+    if args.flag("check") {
+        // An explicit --dir must exist — never fall back past a typo.
+        // Without --dir, accept either the repo-root or the rust/ CWD.
+        let dir = match args.get("dir") {
+            Some(d) => {
+                let p = PathBuf::from(d);
+                if !p.is_dir() {
+                    bail!("device-file directory '{d}' not found");
+                }
+                p
+            }
+            None => {
+                if std::path::Path::new("rust/devices").is_dir() {
+                    PathBuf::from("rust/devices")
+                } else if std::path::Path::new("devices").is_dir() {
+                    PathBuf::from("devices")
+                } else {
+                    bail!(
+                        "no device-file directory found (looked for rust/devices and devices; pass --dir)"
+                    );
+                }
+            }
+        };
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)?
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .filter(|p| {
+                matches!(
+                    p.extension().and_then(|e| e.to_str()),
+                    Some("toml") | Some("json")
+                )
+            })
+            .collect();
+        entries.sort();
+        if entries.is_empty() {
+            bail!("no .toml/.json device files under {}", dir.display());
+        }
+        for path in &entries {
+            let spec = load_device_file(path)
+                .with_context(|| format!("loading {}", path.display()))?;
+            if let Some(preset) = DeviceSpec::preset(&spec.name) {
+                if preset.fingerprint() != spec.fingerprint() {
+                    bail!(
+                        "{} names preset '{}' but its parameters drifted from the registry",
+                        path.display(),
+                        spec.name
+                    );
+                }
+            }
+            println!("{}: ok ({spec})", path.display());
+        }
+        println!("{} device files OK", entries.len());
+        return Ok(());
+    }
+    let mut t = Table::new(&[
+        "name",
+        "array",
+        "dataflow",
+        "clock MHz",
+        "HBM GB/s",
+        "VMEM MiB",
+        "DMA",
+        "ICI GB/s/link",
+        "hop us",
+        "topology",
+    ]);
+    for spec in DeviceSpec::presets() {
+        t.row(&[
+            spec.name.clone(),
+            format!("{}x{}", spec.array_rows, spec.array_cols),
+            spec.dataflow.to_string(),
+            format!("{:.0}", spec.clock_mhz),
+            format!("{:.0}", spec.hbm_gbps),
+            format!("{:.0}", spec.vmem_bytes as f64 / (1024.0 * 1024.0)),
+            spec.dma_engines.to_string(),
+            format!("{:.0}", spec.ici_link_gbps),
+            format!("{:.2}", spec.ici_hop_latency_us),
+            spec.ici_topology.to_string(),
+        ]);
+    }
+    println!("{}", t.markdown());
+    println!(
+        "select with --device <name> or a TOML/JSON device file (--device FILE / --device-file FILE);"
+    );
+    println!(
+        "unspecified device-file keys inherit the tpu-v4 reference values; serve requests take a \"device\" field."
+    );
+    Ok(())
+}
+
+/// `compare`: estimate one module against several device specs and
+/// print the totals side by side (or as one JSON object).
+fn cmd_compare(args: &Args) -> Result<()> {
+    let Some(path) = args.get("module") else {
+        bail!("compare needs --module FILE");
+    };
+    let list = args.str_or("devices", &PRESET_NAMES.join(","));
+    let mut specs = Vec::new();
+    for token in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        specs.push(resolve_device(token)?);
+    }
+    if specs.is_empty() {
+        bail!("--devices needs at least one device");
+    }
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading module {path}"))?;
+    let module = parse_module(&text)?;
+    let chips: Option<usize> = match args.get("chips") {
+        Some(c) => Some(
+            c.parse()
+                .with_context(|| format!("--chips expects an integer, got '{c}'"))?,
+        ),
+        None => None,
+    };
+
+    // One reference asset build; every spec retargets it (so adding a
+    // device to the comparison never re-measures anything).
+    let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
+    let reference = DeviceSpec::tpu_v4();
+    let mut hw = make_hardware(args, &reference)?;
+    let base = assets::load_or_build(
+        &assets_dir,
+        hw.as_mut(),
+        &reference,
+        args.usize_or("shapes", 1200),
+        args.usize_or("reps", 3),
+        args.u64_or("seed", 42),
+    )?;
+
+    let mut headers = vec!["device", "unfused us", "scheduled us", "memory us", "bound"];
+    if chips.is_some() {
+        headers.extend(["chips", "per-chip us", "speedup", "eff %"]);
+    }
+    let mut t = Table::new(&headers);
+    let mut rows_json: Vec<Json> = Vec::new();
+    for spec in &specs {
+        let est = base.retarget(spec);
+        let engines = EngineConfig::for_device(spec);
+        let report = est.estimate_module(&module);
+        let sched = schedule_estimate(&module, &report, engines);
+        let mem = schedule_estimate_memory(&module, &report, engines, &spec.memory_config());
+        let dist = match chips {
+            Some(n) => {
+                let slice = spec.slice_config(n, None)?;
+                Some(estimate_module_distributed(&est, &module, &slice))
+            }
+            None => None,
+        };
+        let mut cells = vec![
+            spec.name.clone(),
+            format!("{:.3}", report.total_us),
+            format!("{:.3}", sched.makespan_us),
+            format!("{:.3}", mem.makespan_us()),
+            mem.roofline.verdict().to_string(),
+        ];
+        let mut row = Json::obj();
+        row.set("device", Json::Str(spec.name.clone()))
+            .set("unfused_us", Json::Num(report.total_us))
+            .set("scheduled_us", Json::Num(sched.makespan_us))
+            .set("critical_path_us", Json::Num(sched.critical_path_us))
+            .set("memory_us", Json::Num(mem.makespan_us()))
+            .set("serialized_bound_us", Json::Num(mem.serialized_bound_us))
+            .set("bound", Json::Str(mem.roofline.verdict().to_string()))
+            .set("coverage", Json::Num(report.coverage()));
+        if let Some(d) = &dist {
+            cells.extend([
+                d.slice.chips.to_string(),
+                format!("{:.3}", d.total_us),
+                format!("{:.2}", d.speedup()),
+                format!("{:.1}", d.parallel_efficiency() * 100.0),
+            ]);
+            row.set("chips", Json::Num(d.slice.chips as f64))
+                .set("distributed_us", Json::Num(d.total_us))
+                .set("speedup", Json::Num(d.speedup()))
+                .set("parallel_efficiency", Json::Num(d.parallel_efficiency()));
+        }
+        t.row(&cells);
+        rows_json.push(row);
+    }
+    if args.flag("json") {
+        let mut j = Json::obj();
+        j.set("module", Json::Str(module.name.clone()))
+            .set("devices", Json::Arr(rows_json));
+        println!("{}", j.dump());
+        return Ok(());
+    }
+    println!("module @{} across {} devices:", module.name, specs.len());
+    println!("{}", t.markdown());
+    for spec in &specs {
+        println!("  {spec}");
     }
     Ok(())
 }
@@ -535,6 +798,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// and, under `--memory`, the per-op DMA/residency fields plus the
 /// module-level memory and roofline blocks.
 fn module_json(
+    spec: &DeviceSpec,
     report: &scalesim_tpu::coordinator::ModelEstimate,
     fused: &scalesim_tpu::coordinator::ModelEstimate,
     sched: &ModuleSchedule,
@@ -559,6 +823,7 @@ fn module_json(
     }
     let mut j = Json::obj();
     j.set("module", Json::Str(report.module_name.clone()))
+        .set("device", Json::Str(spec.name.clone()))
         .set("unfused_us", Json::Num(report.total_us))
         .set("systolic_us", Json::Num(report.systolic_us))
         .set("elementwise_us", Json::Num(report.elementwise_us))
@@ -580,7 +845,12 @@ fn module_json(
 /// The distributed `simulate --module --chips N --json` payload. The
 /// `dma_us` keys appear only for memory-aware runs, keeping the
 /// memory-blind schema identical to the pre-memory one.
-fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig, with_memory: bool) -> Json {
+fn distributed_json(
+    d: &DistributedEstimate,
+    spec: &DeviceSpec,
+    slice: &SliceConfig,
+    with_memory: bool,
+) -> Json {
     let mut ops = Vec::with_capacity(d.ops.len());
     for op in &d.ops {
         let mut o = Json::obj();
@@ -598,6 +868,7 @@ fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig, with_memory: b
     }
     let mut j = Json::obj();
     j.set("module", Json::Str(d.module_name.clone()))
+        .set("device", Json::Str(spec.name.clone()))
         .set("chips", Json::Num(slice.chips as f64))
         .set("ici_topology", Json::Str(slice.topology.to_string()))
         .set("ici_gbps", Json::Num(slice.link_gbps))
@@ -617,12 +888,15 @@ fn distributed_json(d: &DistributedEstimate, slice: &SliceConfig, with_memory: b
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
-    let config = make_config(args)?;
-    let mut hw = make_hardware(args)?;
+    // Calibrating with --device measures that device's synthetic model;
+    // the saved assets record the spec (device.json), so loading them
+    // later retargets from the right reference.
+    let spec = make_device(args)?;
+    let mut hw = make_hardware(args, &spec)?;
     let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
     let est = assets::build_estimator(
         hw.as_mut(),
-        &config,
+        &spec,
         args.usize_or("shapes", 2000),
         args.usize_or("reps", 5),
         args.u64_or("seed", 42),
@@ -642,17 +916,22 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::{BufRead, Write};
 
-    let config = make_config(args)?;
+    // Assets are measured on the reference device; `--device` retargets
+    // the default estimator (requests can still name any preset via
+    // their "device" field).
+    let spec = make_device(args)?;
     let assets_dir = PathBuf::from(args.str_or("assets", "artifacts/assets"));
-    let mut hw = make_hardware(args)?;
-    let est = Arc::new(assets::load_or_build(
+    let reference = DeviceSpec::tpu_v4();
+    let mut hw = make_hardware(args, &reference)?;
+    let est = assets::load_or_build(
         &assets_dir,
         hw.as_mut(),
-        &config,
+        &reference,
         args.usize_or("shapes", 1200),
         args.usize_or("reps", 3),
         args.u64_or("seed", 42),
-    )?);
+    )?;
+    let est = Arc::new(est.retarget(&spec));
     let workers = args.usize_or("workers", default_workers());
     let input: Box<dyn BufRead> = match args.get("input") {
         Some(path) => Box::new(std::io::BufReader::new(

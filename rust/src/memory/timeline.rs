@@ -79,11 +79,20 @@ impl MemoryConfig {
     /// The TPU-v4 device-model constants: the same HBM bandwidth the
     /// synthetic device's roofline uses
     /// ([`MxuParams::hbm_bytes_per_us`]) and the default 32 MiB buffer.
+    /// Equal to `MemoryConfig::for_device(&DeviceSpec::tpu_v4())`
+    /// (tested in `tests/device_spec.rs`).
     pub fn tpu_v4() -> MemoryConfig {
         MemoryConfig::new(
             MxuParams::default().hbm_bytes_per_us,
             Some(Self::DEFAULT_BUFFER_BYTES),
         )
+    }
+
+    /// Derive the bandwidth + residency-buffer config from a device
+    /// spec (delegates to
+    /// [`DeviceSpec::memory_config`](crate::device::DeviceSpec::memory_config)).
+    pub fn for_device(spec: &crate::device::DeviceSpec) -> MemoryConfig {
+        spec.memory_config()
     }
 
     /// The default buffer with a caller-supplied bandwidth (used by the

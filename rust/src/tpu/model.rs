@@ -18,6 +18,7 @@
 //!   the measurement model; the regression harness takes medians exactly
 //!   like the paper.
 
+use crate::device::DeviceSpec;
 use crate::frontend::classify::EwKind;
 use crate::scalesim::topology::GemmShape;
 use crate::util::prng::{hash_dims, Prng};
@@ -26,7 +27,7 @@ use super::traits::Hardware;
 use super::vpu::{latency_us as vpu_latency_us, VpuParams};
 
 /// GEMM-path constants.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MxuParams {
     /// MXU clock, GHz.
     pub clock_ghz: f64,
@@ -76,21 +77,39 @@ impl Default for MxuParams {
     }
 }
 
-/// The synthetic device: MXU + VPU + noise stream.
+/// The synthetic device: MXU + VPU + noise stream. Despite the
+/// historical name it can stand in for any [`DeviceSpec`]: the v4
+/// defaults are just the reference preset's derivation.
 pub struct TpuV4Model {
     /// GEMM-path constants.
     pub mxu: MxuParams,
     /// Elementwise-path constants.
     pub vpu: VpuParams,
+    name: String,
     prng: Prng,
 }
 
 impl TpuV4Model {
-    /// A device with the default constants and a seeded noise stream.
+    /// A device with the default (TPU v4 reference) constants and a
+    /// seeded noise stream.
     pub fn new(seed: u64) -> TpuV4Model {
         TpuV4Model {
             mxu: MxuParams::default(),
             vpu: VpuParams::default(),
+            name: "tpu_v4_model".to_string(),
+            prng: Prng::new(seed),
+        }
+    }
+
+    /// A synthetic device with constants derived from `spec`
+    /// ([`DeviceSpec::mxu_params`] / [`DeviceSpec::vpu_params`]).
+    /// Bit-identical to [`TpuV4Model::new`] for the reference preset —
+    /// including the reported backend name.
+    pub fn for_device(spec: &DeviceSpec, seed: u64) -> TpuV4Model {
+        TpuV4Model {
+            mxu: spec.mxu_params(),
+            vpu: spec.vpu_params(),
+            name: format!("{}_model", spec.name.replace('-', "_")),
             prng: Prng::new(seed),
         }
     }
@@ -150,7 +169,7 @@ impl TpuV4Model {
 
 impl Hardware for TpuV4Model {
     fn name(&self) -> &str {
-        "tpu_v4_model"
+        &self.name
     }
 
     fn gemm_latency_us(&mut self, gemm: GemmShape) -> f64 {
@@ -231,6 +250,35 @@ mod tests {
         }
         let r = stats::pearson(&cycles, &times);
         assert!(r > 0.97, "pearson {r}");
+    }
+
+    #[test]
+    fn for_device_reference_is_bit_identical_to_default() {
+        let mut a = TpuV4Model::new(5);
+        let mut b = TpuV4Model::for_device(&DeviceSpec::tpu_v4(), 5);
+        assert_eq!(a.mxu, b.mxu);
+        assert_eq!(a.vpu, b.vpu);
+        assert_eq!(a.name(), "tpu_v4_model");
+        assert_eq!(b.name(), "tpu_v4_model");
+        let g = GemmShape::new(384, 256, 512);
+        assert_eq!(a.gemm_latency_us(g).to_bits(), b.gemm_latency_us(g).to_bits());
+    }
+
+    #[test]
+    fn for_device_scales_with_the_spec() {
+        // Starve the HBM to 1 GB/s: the roofline takes over and the
+        // same GEMM slows down by orders of magnitude.
+        let mut starved = DeviceSpec::tpu_v4();
+        starved.name = "starved".into();
+        starved.hbm_gbps = 1.0;
+        let hw = TpuV4Model::for_device(&starved, 1);
+        let base = TpuV4Model::new(1);
+        let g = GemmShape::new(512, 512, 512);
+        assert!(
+            hw.gemm_latency_noise_free_us(g) > 10.0 * base.gemm_latency_noise_free_us(g),
+            "bandwidth starvation did not slow the roofline"
+        );
+        assert_eq!(hw.name, "starved_model");
     }
 
     #[test]

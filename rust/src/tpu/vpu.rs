@@ -23,8 +23,9 @@
 use crate::frontend::classify::EwKind;
 use crate::util::prng::hash_dims;
 
-/// VPU model constants.
-#[derive(Debug, Clone)]
+/// VPU model constants. Derive a non-reference device's constants with
+/// [`DeviceSpec::vpu_params`](crate::device::DeviceSpec::vpu_params).
+#[derive(Debug, Clone, PartialEq)]
 pub struct VpuParams {
     /// VPU clock, GHz.
     pub clock_ghz: f64,

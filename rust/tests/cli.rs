@@ -353,6 +353,207 @@ fn serve_answers_jsonl_from_input_file() {
 }
 
 #[test]
+fn device_tpu_v4_flag_is_bit_identical_to_default_in_every_mode() {
+    // The golden satellite: `--device tpu-v4` must equal the default
+    // (pre-refactor) output byte for byte across unfused/scheduled,
+    // memory-aware and distributed modes.
+    let s = Scratch::new("device_golden");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+    // Build the assets once so every compared run loads the same set
+    // (and stdout carries no one-time build chatter).
+    let (_, _, ok) = run(&["calibrate", "--shapes", "30", "--reps", "1", "--assets", &assets]);
+    assert!(ok);
+    let modes: [Vec<&str>; 4] = [
+        Vec::new(),
+        vec!["--memory"],
+        vec!["--chips", "4"],
+        vec!["--chips", "4", "--memory"],
+    ];
+    for extra in &modes {
+        let mut base_args = vec!["simulate", "--module", &module, "--assets", &assets, "--json"];
+        base_args.extend(extra.iter().copied());
+        let (default_out, _, ok1) = run(&base_args);
+        let mut dev_args = base_args.clone();
+        dev_args.extend(["--device", "tpu-v4"]);
+        let (device_out, _, ok2) = run(&dev_args);
+        assert!(ok1 && ok2, "mode {extra:?} failed");
+        assert!(!default_out.trim().is_empty());
+        assert_eq!(default_out, device_out, "mode {extra:?} diverged");
+    }
+}
+
+#[test]
+fn device_flag_selects_a_different_self_consistent_scenario() {
+    use scalesim_tpu::util::json::Json;
+
+    let s = Scratch::new("device_v5e");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+    let (v4_out, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--memory", "--chips", "4", "--json",
+    ]);
+    assert!(ok, "{v4_out}");
+    let (v5e_out, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--memory", "--chips", "4", "--device", "tpu-v5e", "--json",
+    ]);
+    assert!(ok, "{v5e_out}");
+    assert_ne!(v4_out, v5e_out, "tpu-v5e reproduced the tpu-v4 report");
+    let j = Json::parse(v5e_out.trim()).unwrap();
+    assert_eq!(j.req_str("device").unwrap(), "tpu-v5e");
+    assert_eq!(j.req_f64("chips").unwrap(), 4.0);
+    // v5e defaults to a torus; its per-chip report stays self-consistent.
+    assert_eq!(j.req_str("ici_topology").unwrap(), "2x2 torus");
+    assert!(j.req_f64("critical_path_us").unwrap() <= j.req_f64("total_us").unwrap());
+    let eff = j.req_f64("parallel_efficiency").unwrap();
+    assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff}");
+}
+
+#[test]
+fn device_overrides_apply_on_top_of_the_spec() {
+    use scalesim_tpu::util::json::Json;
+
+    let s = Scratch::new("device_override");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+    // No override flags: the v5e spec supplies VMEM (16 MiB) and HBM
+    // bandwidth (819 GB/s = 819e3 bytes/us).
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--device", "tpu-v5e", "--memory", "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let mem = |out: &str, key: &str| -> f64 {
+        Json::parse(out.trim())
+            .unwrap()
+            .get("memory")
+            .expect("memory block")
+            .req_f64(key)
+            .unwrap()
+    };
+    assert_eq!(mem(&stdout, "buffer_bytes"), 16.0 * 1024.0 * 1024.0);
+    assert_eq!(mem(&stdout, "hbm_bytes_per_us"), 819e3);
+    // Explicit flags override the selected spec.
+    let (stdout, _, ok) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--device", "tpu-v5e", "--memory", "--vmem-mb", "1", "--hbm-gbps", "500", "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    assert_eq!(mem(&stdout, "buffer_bytes"), 1024.0 * 1024.0);
+    assert_eq!(mem(&stdout, "hbm_bytes_per_us"), 500e3);
+    // Same precedence on the ICI side: the spec's 50 GB/s link yields to
+    // an explicit --ici-gbps.
+    let (spec_ici, _, ok1) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--device", "tpu-v5e", "--chips", "4", "--json",
+    ]);
+    let (flag_ici, _, ok2) = run(&[
+        "simulate", "--module", &module, "--shapes", "30", "--reps", "1", "--assets", &assets,
+        "--device", "tpu-v5e", "--chips", "4", "--ici-gbps", "400", "--json",
+    ]);
+    assert!(ok1 && ok2);
+    let gbps = |out: &str| Json::parse(out.trim()).unwrap().req_f64("ici_gbps").unwrap();
+    assert_eq!(gbps(&spec_ici), 50.0);
+    assert_eq!(gbps(&flag_ici), 400.0);
+}
+
+#[test]
+fn unknown_device_fails_cleanly() {
+    let (_, stderr, ok) = run(&["simulate", "--m", "8", "--k", "8", "--n", "8", "--device", "tpu-v9"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown device"), "{stderr}");
+    assert!(stderr.contains("tpu-v5e"), "should list presets: {stderr}");
+    // Conflicting device selectors are an error, not a silent pick.
+    let (_, stderr, ok) = run(&[
+        "simulate", "--m", "8", "--k", "8", "--n", "8", "--device", "tpu-v4", "--device-file",
+        "x.toml",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("mutually exclusive"), "{stderr}");
+}
+
+#[test]
+fn devices_lists_presets_and_checks_the_checked_in_files() {
+    let (stdout, _, ok) = run(&["devices"]);
+    assert!(ok);
+    for name in ["tpu-v4", "tpu-v5e", "tpu-v5p", "generic-256x256"] {
+        assert!(stdout.contains(name), "devices listing missing {name}");
+    }
+    assert!(stdout.contains("HBM GB/s"));
+    // Round-trip every checked-in device file (the CI smoke).
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("devices");
+    let (stdout, stderr, ok) = run(&["devices", "--check", "--dir", dir.to_str().unwrap()]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("4 device files OK"), "{stdout}");
+    // An explicit --dir that does not exist is an error, never a silent
+    // fallback to the local devices/ directory.
+    let (_, stderr, ok) = run(&["devices", "--check", "--dir", "/no/such/devices-dir"]);
+    assert!(!ok);
+    assert!(stderr.contains("not found"), "{stderr}");
+}
+
+#[test]
+fn devices_check_rejects_a_drifted_preset_file() {
+    let s = Scratch::new("devices_drift");
+    // A file that names a preset but changes a parameter must fail the
+    // drift check.
+    std::fs::write(
+        s.0.join("tpu-v4.toml"),
+        "name = \"tpu-v4\"\n[memory]\nhbm_gbps = 999.0\n",
+    )
+    .unwrap();
+    let (_, stderr, ok) = run(&["devices", "--check", "--dir", s.0.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(stderr.contains("drifted"), "{stderr}");
+}
+
+#[test]
+fn compare_runs_one_module_against_several_devices() {
+    use scalesim_tpu::util::json::Json;
+
+    let s = Scratch::new("compare");
+    let assets = s.path("assets");
+    let module = bert_fixture();
+    let (stdout, stderr, ok) = run(&[
+        "compare", "--module", &module, "--devices", "tpu-v4,tpu-v5e,generic-256x256",
+        "--chips", "4", "--shapes", "30", "--reps", "1", "--assets", &assets,
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    for name in ["tpu-v4", "tpu-v5e", "generic-256x256"] {
+        assert!(stdout.contains(name), "comparison missing {name}");
+    }
+    assert!(stdout.contains("memory us"));
+    assert!(stdout.contains("speedup"));
+
+    // JSON mode: one object, one row per device, invariants intact.
+    let (stdout, _, ok) = run(&[
+        "compare", "--module", &module, "--devices", "tpu-v4,tpu-v5e", "--shapes", "30",
+        "--reps", "1", "--assets", &assets, "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let j = Json::parse(stdout.trim()).expect("one JSON object");
+    assert_eq!(j.req_str("module").unwrap(), "bert_layer");
+    let rows = j.req_arr("devices").unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        let scheduled = row.req_f64("scheduled_us").unwrap();
+        let memory = row.req_f64("memory_us").unwrap();
+        let bound = row.req_f64("serialized_bound_us").unwrap();
+        assert!(
+            scheduled <= memory && memory <= bound,
+            "invariant broke for {row:?}"
+        );
+    }
+    // The two devices disagree on at least the memory-aware total.
+    assert_ne!(
+        rows[0].req_f64("memory_us").unwrap().to_bits(),
+        rows[1].req_f64("memory_us").unwrap().to_bits()
+    );
+}
+
+#[test]
 fn unknown_subcommand_fails_cleanly() {
     let (_, stderr, ok) = run(&["frobnicate"]);
     assert!(!ok);

@@ -5,9 +5,10 @@
 use std::sync::Arc;
 
 use scalesim_tpu::coordinator::{serve_lines, Estimator};
+use scalesim_tpu::device::DeviceSpec;
 use scalesim_tpu::experiments::assets;
 use scalesim_tpu::frontend::parse_module;
-use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
+use scalesim_tpu::scalesim::GemmShape;
 use scalesim_tpu::tpu::{Hardware, TpuV4Model};
 use scalesim_tpu::util::json::Json;
 
@@ -27,7 +28,7 @@ module @it_model {
 
 fn build_estimator() -> Estimator {
     let mut hw = TpuV4Model::new(77);
-    assets::build_estimator(&mut hw, &ScaleConfig::tpu_v4(), 300, 2, 9)
+    assets::build_estimator(&mut hw, &DeviceSpec::tpu_v4(), 300, 2, 9)
 }
 
 #[test]

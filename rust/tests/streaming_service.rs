@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use scalesim_tpu::calibrate::fit_regime_calibration;
 use scalesim_tpu::coordinator::{
-    parallel_map, serve_stream, Estimator, ShapeKey, StreamOptions,
+    parallel_map, serve_stream, Estimator, ShapeClass, StreamOptions,
 };
 use scalesim_tpu::frontend::classify::OpClass;
 use scalesim_tpu::scalesim::{GemmShape, ScaleConfig};
@@ -208,18 +208,18 @@ fn repeated_shapes_estimate_faster_through_the_cache() {
 fn shape_key_distinguishes_conv_count_but_shares_gemm() {
     // dot_general and an im2col-lowered convolution with the same GEMM
     // share one entry; a different batch count is a different key.
-    let k1 = ShapeKey::Gemm {
+    let k1 = ShapeClass::Gemm {
         gemm: GemmShape::new(196, 27, 64),
         count: 1,
     };
-    let k2 = ShapeKey::Gemm {
+    let k2 = ShapeClass::Gemm {
         gemm: GemmShape::new(196, 27, 64),
         count: 4,
     };
     assert_ne!(k1, k2);
     assert_eq!(
         k1,
-        ShapeKey::Gemm {
+        ShapeClass::Gemm {
             gemm: GemmShape::new(196, 27, 64),
             count: 1
         }

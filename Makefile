@@ -8,7 +8,7 @@
 #   calibrate        build + save modeling assets
 #   serve            streaming JSONL estimation service (sharded cache)
 
-.PHONY: build test bench bench-schedule bench-devices devices artifacts fmt clippy doc check
+.PHONY: build test bench bench-schedule bench-devices bench-estimator devices artifacts fmt clippy doc check
 
 build:
 	cargo build --release
@@ -30,6 +30,13 @@ bench-schedule:
 # DeviceSpec refactor against per-op lookup overhead).
 bench-devices:
 	cargo bench --bench device_sweep
+
+# Batched vs scalar estimator core, cache-cold and cache-warm, on the
+# bert_layer fixture; publishes BENCH_estimator.json at the repo root
+# (CI verifies freshness with `-- --check`). EXPERIMENTS.md §Perf
+# Batched estimator records the headline speedup.
+bench-estimator:
+	cargo bench --bench estimator_batch
 
 # Round-trip every checked-in device file through the loader, verify the
 # preset-named ones match the registry, and smoke the compare path

@@ -1,0 +1,193 @@
+//! Benchmark: batched estimator core vs the scalar per-op walk.
+//!
+//! Measures whole-module estimation throughput on the bert_layer fixture
+//! four ways — scalar vs batched, cache-cold (memoisation disabled) vs
+//! cache-warm — plus the pre-lowered [`OpTable`] reuse path, asserting
+//! bit-identical totals between every pair before reporting. Results are
+//! published to `BENCH_estimator.json` at the repo root together with an
+//! FNV-1a fingerprint of this source file; `cargo bench --bench
+//! estimator_batch -- --check` re-reads the file and fails when it is
+//! missing or stale against the source (the CI freshness gate).
+//! `harness = false` like the other benches (no criterion in the offline
+//! registry). Run via `make bench-estimator`; the headline speedup is
+//! recorded in EXPERIMENTS.md §Perf Batched estimator.
+
+use std::time::Instant;
+
+use scalesim_tpu::coordinator::{Estimator, ModelEstimate, OpTable};
+use scalesim_tpu::device::DeviceSpec;
+use scalesim_tpu::frontend::{parse_module, ModuleInfo};
+use scalesim_tpu::sweep::sweep_estimator;
+use scalesim_tpu::util::json::Json;
+
+const SOURCE: &str = include_str!("estimator_batch.rs");
+const FIXTURE: &str = include_str!("../tests/fixtures/bert_layer.mlir");
+
+const COLD_ITERS: usize = 300;
+const WARM_ITERS: usize = 3000;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn source_fingerprint() -> String {
+    format!("{:016x}", fnv1a(SOURCE.as_bytes()))
+}
+
+fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_estimator.json")
+}
+
+/// `--check`: the published numbers must exist and match this source.
+fn check_published() {
+    let path = bench_json_path();
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "BENCH_estimator.json missing at {} ({e}); run `make bench-estimator`",
+            path.display()
+        )
+    });
+    let json = Json::parse(&text).expect("BENCH_estimator.json is not valid JSON");
+    let published = json
+        .get("source_fingerprint")
+        .and_then(Json::as_str)
+        .expect("BENCH_estimator.json lacks source_fingerprint");
+    let current = source_fingerprint();
+    assert_eq!(
+        published,
+        current,
+        "BENCH_estimator.json is stale: published fingerprint {published} != \
+         bench source {current}; re-run `make bench-estimator` and commit the result"
+    );
+    println!(
+        "BENCH_estimator.json is fresh (source fingerprint {current}, \
+         speedup_warm {})",
+        json.get("speedup_warm").and_then(Json::as_f64).unwrap_or(0.0)
+    );
+}
+
+fn assert_identical(a: &ModelEstimate, b: &ModelEstimate, what: &str) {
+    assert_eq!(
+        a.total_us.to_bits(),
+        b.total_us.to_bits(),
+        "{what}: totals diverge"
+    );
+    assert_eq!(a.ops.len(), b.ops.len(), "{what}: row counts diverge");
+    for (x, y) in a.ops.iter().zip(&b.ops) {
+        assert_eq!(
+            x.latency_us.to_bits(),
+            y.latency_us.to_bits(),
+            "{what}: row {} diverges",
+            x.op_name
+        );
+    }
+}
+
+/// (seconds total, last estimate) for `iters` runs of `f`.
+fn time<F: FnMut() -> ModelEstimate>(iters: usize, mut f: F) -> (f64, ModelEstimate) {
+    let mut last = f(); // warm-up run, also primes the cache when enabled
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        last = f();
+    }
+    (t0.elapsed().as_secs_f64(), last)
+}
+
+struct Scenario {
+    name: &'static str,
+    seconds: f64,
+    iters: usize,
+}
+
+impl Scenario {
+    fn per_module_us(&self) -> f64 {
+        self.seconds * 1e6 / self.iters as f64
+    }
+    fn modules_per_sec(&self) -> f64 {
+        self.iters as f64 / self.seconds
+    }
+}
+
+fn run_bench() {
+    let module: ModuleInfo = parse_module(FIXTURE).expect("bert_layer fixture parses");
+    let est: Estimator = sweep_estimator(&DeviceSpec::tpu_v4());
+    let ops = est.estimate_module(&module).ops.len();
+    println!("== batched estimator core: bert_layer ({ops} rows) ==");
+
+    // Cache-cold: memoisation off, every op re-simulated every time.
+    est.cache.set_enabled(false);
+    let (scalar_cold_s, scalar_cold) = time(COLD_ITERS, || est.estimate_module_scalar(&module));
+    let (batched_cold_s, batched_cold) = time(COLD_ITERS, || est.estimate_module(&module));
+    assert_identical(&scalar_cold, &batched_cold, "cold scalar vs batched");
+
+    // Cache-warm: memoisation on, the warm-up run inside time() primes it.
+    est.cache.set_enabled(true);
+    let (scalar_warm_s, scalar_warm) = time(WARM_ITERS, || est.estimate_module_scalar(&module));
+    let (batched_warm_s, batched_warm) = time(WARM_ITERS, || est.estimate_module(&module));
+    assert_identical(&scalar_warm, &batched_warm, "warm scalar vs batched");
+    assert_identical(&scalar_cold, &scalar_warm, "cold vs warm");
+
+    // Pre-lowered table reuse: classify/dedup once, estimate many times.
+    let table: OpTable<'_> = est.lower_module(&module);
+    let (table_warm_s, table_warm) = time(WARM_ITERS, || est.estimate_table(&table));
+    assert_identical(&scalar_warm, &table_warm, "warm scalar vs table");
+
+    let scenarios = [
+        Scenario { name: "scalar_cold", seconds: scalar_cold_s, iters: COLD_ITERS },
+        Scenario { name: "batched_cold", seconds: batched_cold_s, iters: COLD_ITERS },
+        Scenario { name: "scalar_warm", seconds: scalar_warm_s, iters: WARM_ITERS },
+        Scenario { name: "batched_warm", seconds: batched_warm_s, iters: WARM_ITERS },
+        Scenario { name: "table_warm", seconds: table_warm_s, iters: WARM_ITERS },
+    ];
+    for s in &scenarios {
+        println!(
+            "  {:<13} {:>9.1} µs/module  ({:>8.0} modules/s)",
+            s.name,
+            s.per_module_us(),
+            s.modules_per_sec()
+        );
+    }
+    let speedup_cold = scalar_cold_s / batched_cold_s;
+    let speedup_warm = scalar_warm_s / batched_warm_s;
+    let speedup_table = scalar_warm_s / table_warm_s;
+    println!(
+        "  speedup: cold {speedup_cold:.2}x, warm {speedup_warm:.2}x, \
+         pre-lowered table {speedup_table:.2}x"
+    );
+
+    let mut o = Json::obj();
+    o.set("bench", Json::Str("estimator_batch".into()))
+        .set("module", Json::Str("bert_layer".into()))
+        .set("rows", Json::Num(ops as f64))
+        .set("cold_iters", Json::Num(COLD_ITERS as f64))
+        .set("warm_iters", Json::Num(WARM_ITERS as f64))
+        .set("speedup_cold", Json::Num(speedup_cold))
+        .set("speedup_warm", Json::Num(speedup_warm))
+        .set("speedup_table", Json::Num(speedup_table))
+        .set("source_fingerprint", Json::Str(source_fingerprint()));
+    let mut per = Json::obj();
+    for s in &scenarios {
+        let mut sj = Json::obj();
+        sj.set("per_module_us", Json::Num(s.per_module_us()))
+            .set("modules_per_sec", Json::Num(s.modules_per_sec()));
+        per.set(s.name, sj);
+    }
+    o.set("scenarios", per);
+
+    let path = bench_json_path();
+    std::fs::write(&path, format!("{}\n", o.dump())).expect("writing BENCH_estimator.json");
+    println!("wrote {}", path.display());
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--check") {
+        check_published();
+    } else {
+        run_bench();
+    }
+}

@@ -1,0 +1,597 @@
+//! The batched (structure-of-arrays) estimator core.
+//!
+//! [`Estimator::estimate_module`](super::Estimator::estimate_module)
+//! used to walk a module op by op: classify, build a shape key, take a
+//! cache-shard lock, probe, maybe simulate — per op. At fleet scale the
+//! estimator's *throughput* is itself the product (NeuroScalar makes the
+//! argument for simulation at large), so this module restructures the
+//! hot path around whole-module batches:
+//!
+//! 1. **Lower** — [`Estimator::lower_module`](super::Estimator::lower_module)
+//!    flattens the entry function (and
+//!    its `call` tree, depth-limited exactly like the scalar walk) into
+//!    parallel structure-of-arrays columns: op index, op name, class
+//!    (dims/dtype/bytes), plus a deduplicated table of cacheable shape
+//!    keys with occurrence counts. All classify/key/dedup work happens
+//!    once per module, not once per estimate.
+//! 2. **Grouped probe** — the unique keys are probed through
+//!    [`ShardedCache::lookup_grouped`](super::ShardedCache::lookup_grouped):
+//!    one lock acquisition per *shard* per batch instead of one per op.
+//! 3. **Class-grouped evaluation** — misses are evaluated class by
+//!    class: systolic shapes run through the cycle-accurate simulator;
+//!    learned elementwise shapes are featurized into one contiguous
+//!    row-major matrix per model and predicted in a single
+//!    [`CompiledHgbr::predict_many`](crate::learned::hgbr::CompiledHgbr::predict_many)
+//!    pass (one model-registry lock per batch).
+//! 4. **Assemble** — the lowering's event stream is replayed to rebuild
+//!    the per-op [`ModelEstimate`] in the exact program order — and the
+//!    exact floating-point accumulation order — of the scalar walk.
+//!
+//! **Bit-identity invariant.** The batched path must be indistinguishable
+//! from [`Estimator::estimate_module_scalar`](super::Estimator::estimate_module_scalar):
+//! every row, every `f64` total (bit for bit — f64 addition is not
+//! associative, hence the event replay), and every cache hit/miss/source
+//! counter. Counter parity holds because a batch accounts each unique
+//! shape as the scalar walk would have: the first occurrence of a fresh
+//! shape misses, every further occurrence hits the just-stored entry.
+//! The invariant is property-tested across every device preset × every
+//! fixture × cold/warm/disabled cache in `tests/estimator_batch.rs`.
+
+use std::collections::HashMap;
+
+use crate::frontend::classify::{classify, OpClass};
+use crate::frontend::opinfo::ModuleInfo;
+use crate::frontend::types::TensorType;
+use crate::learned::features::featurize;
+
+use super::cache::{source_index, CachedCost, ShapeClass, ShapeKey};
+use super::estimator::{EstimateSource, Estimator, ModelEstimate, OpEstimate};
+
+/// One step of the lowered entry-function walk. Replaying the events in
+/// order reproduces the scalar recursion's program order (and therefore
+/// its floating-point accumulation order) exactly.
+enum LowerEvent<'m> {
+    /// Op table row `.0` is estimated in place.
+    Leaf(u32),
+    /// A `call` op entering its callee: everything until the matching
+    /// [`LowerEvent::CallEnd`] belongs to the inlined sub-estimate.
+    CallBegin {
+        /// Index of the call op within its function.
+        index: usize,
+        /// Callee name (rendered as `call @callee`).
+        callee: &'m str,
+    },
+    /// Close the innermost open call and fold its sub-estimate into the
+    /// parent as one row.
+    CallEnd,
+}
+
+/// A module lowered into structure-of-arrays form for batched
+/// estimation, bound to the cache fingerprint of the estimator that
+/// lowered it.
+///
+/// Build one with
+/// [`Estimator::lower_module`](super::Estimator::lower_module) and
+/// estimate it (repeatedly — that is the point) with
+/// [`Estimator::estimate_table`]. The table borrows the module, so the
+/// classify / shape-key / dedup work is paid once; a warm re-estimate is
+/// just a grouped probe plus row rehydration. Estimating a table through
+/// an estimator with a *different* cache fingerprint still works — the
+/// unique keys are re-keyed on the fly — it only costs the rekeying.
+pub struct OpTable<'m> {
+    /// Module name for the assembled [`ModelEstimate`].
+    module_name: String,
+    /// The lowered walk (leaves + call brackets) in program order.
+    events: Vec<LowerEvent<'m>>,
+    /// SoA column: op index within its function, per leaf.
+    indices: Vec<usize>,
+    /// SoA column: op name, per leaf (borrowed from the module).
+    names: Vec<&'m str>,
+    /// SoA column: classified op (class, dims, dtype, bytes), per leaf.
+    classes: Vec<OpClass>,
+    /// SoA column: slot into `unique` for cacheable leaves.
+    slots: Vec<Option<u32>>,
+    /// Deduplicated cacheable shape keys, first-occurrence order.
+    unique: Vec<ShapeKey>,
+    /// Occurrences per unique key (for scalar-exact hit/miss counts).
+    occurrences: Vec<u64>,
+    /// The estimator cache fingerprint the keys were built against.
+    cache_fp: u64,
+}
+
+impl<'m> OpTable<'m> {
+    /// Lower `module`'s entry function (following `call` ops into their
+    /// callees, depth-limited exactly like the scalar walk) into an op
+    /// table keyed against `cache_fp`.
+    pub(crate) fn lower(cache_fp: u64, module: &'m ModuleInfo) -> OpTable<'m> {
+        let mut table = OpTable {
+            module_name: module.name.clone(),
+            events: Vec::new(),
+            indices: Vec::new(),
+            names: Vec::new(),
+            classes: Vec::new(),
+            slots: Vec::new(),
+            unique: Vec::new(),
+            occurrences: Vec::new(),
+            cache_fp,
+        };
+        let mut seen: HashMap<ShapeKey, u32> = HashMap::new();
+        if let Some(entry) = module.entry() {
+            let name = entry.name.clone();
+            table.lower_func(module, &name, 0, &mut seen);
+        }
+        table
+    }
+
+    fn lower_func(
+        &mut self,
+        module: &'m ModuleInfo,
+        func_name: &str,
+        depth: usize,
+        seen: &mut HashMap<ShapeKey, u32>,
+    ) {
+        let Some(func) = module.funcs.iter().find(|f| f.name == func_name) else {
+            return;
+        };
+        for op in &func.ops {
+            // Follow calls into private sub-functions (depth-limited,
+            // mirroring the scalar walk).
+            if (op.short_name() == "call" || op.op_name == "func.call") && depth < 4 {
+                if let Some(callee) = &op.callee {
+                    self.events.push(LowerEvent::CallBegin {
+                        index: op.index,
+                        callee: callee.as_str(),
+                    });
+                    self.lower_func(module, callee, depth + 1, seen);
+                    self.events.push(LowerEvent::CallEnd);
+                    continue;
+                }
+            }
+            let class = classify(op);
+            let slot = ShapeKey::of_class(self.cache_fp, &class).map(|key| match seen.get(&key) {
+                Some(&s) => {
+                    self.occurrences[s as usize] += 1;
+                    s
+                }
+                None => {
+                    let s = self.unique.len() as u32;
+                    self.unique.push(key.clone());
+                    self.occurrences.push(1);
+                    seen.insert(key, s);
+                    s
+                }
+            });
+            let leaf = self.indices.len() as u32;
+            self.indices.push(op.index);
+            self.names.push(op.op_name.as_str());
+            self.classes.push(class);
+            self.slots.push(slot);
+            self.events.push(LowerEvent::Leaf(leaf));
+        }
+    }
+
+    /// Number of estimated leaf ops (inlined callee ops included; `call`
+    /// bracket rows excluded).
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True when the module lowered to no estimable ops.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Number of distinct cacheable shapes in the table — the size of
+    /// the grouped cache probe a warm estimate performs.
+    pub fn unique_shapes(&self) -> usize {
+        self.unique.len()
+    }
+
+    /// Replay the lowering events over the per-leaf costs, rebuilding
+    /// the estimate in the scalar walk's exact accumulation order.
+    fn assemble(&self, costs: Vec<CachedCost>) -> ModelEstimate {
+        let empty = |name: &str| ModelEstimate {
+            module_name: name.to_string(),
+            ops: Vec::new(),
+            total_us: 0.0,
+            systolic_us: 0.0,
+            elementwise_us: 0.0,
+            other_us: 0.0,
+            covered_ops: 0,
+            total_costed_ops: 0,
+        };
+        let mut costs: Vec<Option<CachedCost>> = costs.into_iter().map(Some).collect();
+        let mut root = empty(&self.module_name);
+        let mut stack: Vec<(usize, &str, ModelEstimate)> = Vec::new();
+        for ev in &self.events {
+            match ev {
+                LowerEvent::Leaf(leaf) => {
+                    let i = *leaf as usize;
+                    let row = costs[i]
+                        .take()
+                        .expect("each leaf is costed exactly once")
+                        .into_estimate(self.indices[i], self.names[i]);
+                    let est = stack.last_mut().map(|(_, _, e)| e).unwrap_or(&mut root);
+                    match &self.classes[i] {
+                        OpClass::SystolicGemm { .. } | OpClass::SystolicConv { .. } => {
+                            est.systolic_us += row.latency_us;
+                            est.covered_ops += 1;
+                            est.total_costed_ops += 1;
+                        }
+                        OpClass::Elementwise { .. } => {
+                            est.elementwise_us += row.latency_us;
+                            if matches!(
+                                row.source,
+                                EstimateSource::Learned | EstimateSource::LearnedProxy(_)
+                            ) {
+                                est.covered_ops += 1;
+                            }
+                            est.total_costed_ops += 1;
+                        }
+                        // Free ops cost nothing; collectives are free on
+                        // a single chip (the distributed estimator costs
+                        // them against a real slice).
+                        OpClass::Free | OpClass::Collective { .. } => {}
+                        _ => {
+                            est.other_us += row.latency_us;
+                            est.total_costed_ops += 1;
+                        }
+                    }
+                    est.total_us += row.latency_us;
+                    est.ops.push(row);
+                }
+                LowerEvent::CallBegin { index, callee } => {
+                    stack.push((*index, callee, empty(&self.module_name)));
+                }
+                LowerEvent::CallEnd => {
+                    let (index, callee, sub) = stack.pop().expect("balanced call events");
+                    let est = stack.last_mut().map(|(_, _, e)| e).unwrap_or(&mut root);
+                    est.total_us += sub.total_us;
+                    est.systolic_us += sub.systolic_us;
+                    est.elementwise_us += sub.elementwise_us;
+                    est.other_us += sub.other_us;
+                    est.covered_ops += sub.covered_ops;
+                    est.total_costed_ops += sub.total_costed_ops;
+                    est.ops.push(OpEstimate {
+                        index,
+                        op_name: format!("call @{callee}"),
+                        source: EstimateSource::SystolicCalibrated,
+                        cycles: None,
+                        latency_us: sub.total_us,
+                        note: format!("inlined {} ops", sub.ops.len()),
+                    });
+                }
+            }
+        }
+        debug_assert!(stack.is_empty(), "unbalanced call events");
+        root
+    }
+}
+
+/// A group of elementwise cache misses sharing one learned model:
+/// featurized into a contiguous row-major matrix for a single
+/// `predict_many` pass.
+struct EwGroup {
+    model: String,
+    stride: usize,
+    rows: Vec<f64>,
+    /// (unique-key slot, source, note) per row, in row order.
+    entries: Vec<(usize, EstimateSource, String)>,
+}
+
+impl Estimator {
+    /// Estimate a pre-lowered module through the batched core. Repeated
+    /// estimates of the same table skip the classify / shape-key / dedup
+    /// work entirely — this is the serve and bench hot path, and the
+    /// reason [`Estimator::lower_module`](Estimator::lower_module) is a
+    /// separate step.
+    ///
+    /// Bit-identical to
+    /// [`Estimator::estimate_module_scalar`](Estimator::estimate_module_scalar),
+    /// counters included (see the module docs).
+    pub fn estimate_table(&self, table: &OpTable<'_>) -> ModelEstimate {
+        let rekeyed: Vec<ShapeKey>;
+        let unique: &[ShapeKey] = if table.cache_fp == self.cache_fingerprint() {
+            &table.unique
+        } else {
+            // The table was lowered against a different cost-model
+            // fingerprint (e.g. a retargeted estimator): re-key the
+            // unique shapes, keep everything else.
+            rekeyed = table
+                .unique
+                .iter()
+                .map(|k| ShapeKey {
+                    device: self.cache_fingerprint(),
+                    shape: k.shape.clone(),
+                })
+                .collect();
+            &rekeyed
+        };
+        let costs = self.resolve_costs(&table.classes, &table.slots, unique, &table.occurrences);
+        table.assemble(costs)
+    }
+
+    /// Batched cost resolution for a flat slice of op classes — the
+    /// `sweep` harness entry point. Deduplicates the cacheable shapes,
+    /// does one grouped cache probe, evaluates misses class-by-class
+    /// over contiguous arrays, and returns one position-independent
+    /// [`CachedCost`] per input class (in input order).
+    ///
+    /// Accounting matches a scalar `estimate_op` loop exactly: same
+    /// hit/miss totals, same per-source counts, same stored entries.
+    pub fn estimate_classes(&self, classes: &[OpClass]) -> Vec<CachedCost> {
+        let mut slots: Vec<Option<u32>> = Vec::with_capacity(classes.len());
+        let mut unique: Vec<ShapeKey> = Vec::new();
+        let mut occurrences: Vec<u64> = Vec::new();
+        let mut seen: HashMap<ShapeKey, u32> = HashMap::new();
+        for class in classes {
+            let slot =
+                ShapeKey::of_class(self.cache_fingerprint(), class).map(|key| match seen.get(&key)
+                {
+                    Some(&s) => {
+                        occurrences[s as usize] += 1;
+                        s
+                    }
+                    None => {
+                        let s = unique.len() as u32;
+                        unique.push(key.clone());
+                        occurrences.push(1);
+                        seen.insert(key, s);
+                        s
+                    }
+                });
+            slots.push(slot);
+        }
+        self.resolve_costs(classes, &slots, &unique, &occurrences)
+    }
+
+    /// The shared batched resolver: grouped probe → scalar-exact hit/miss
+    /// accounting → class-grouped miss evaluation → grouped store →
+    /// per-leaf rehydration with bulk source accounting.
+    fn resolve_costs(
+        &self,
+        classes: &[OpClass],
+        slots: &[Option<u32>],
+        unique: &[ShapeKey],
+        occurrences: &[u64],
+    ) -> Vec<CachedCost> {
+        let enabled = self.cache.is_enabled();
+        let mut resolved: Vec<Option<CachedCost>> = if enabled {
+            self.cache.lookup_grouped(unique)
+        } else {
+            // Disabled cache: the scalar walk recomputes every op without
+            // touching the hit/miss counters; we compute once per unique
+            // shape (the cost functions are deterministic in the key, so
+            // the clones are bit-identical to recomputation).
+            vec![None; unique.len()]
+        };
+
+        if enabled {
+            // Scalar-exact accounting per unique shape: the first
+            // occurrence of a fresh shape misses (and stores), every
+            // further occurrence hits the just-stored entry.
+            let mut hits = 0u64;
+            let mut misses = 0u64;
+            for (hit, &occ) in resolved.iter().zip(occurrences) {
+                if hit.is_some() {
+                    hits += occ;
+                } else {
+                    misses += 1;
+                    hits += occ - 1;
+                }
+            }
+            self.cache.record_lookups(hits, misses);
+        }
+
+        // Evaluate misses class by class: systolic shapes through the
+        // cycle simulator, learned elementwise shapes batched per model
+        // over one contiguous feature matrix.
+        let miss: Vec<usize> = resolved
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_none())
+            .map(|(u, _)| u)
+            .collect();
+        let mut ew_groups: Vec<EwGroup> = Vec::new();
+        let mut group_of: HashMap<String, usize> = HashMap::new();
+        for &u in &miss {
+            match &unique[u].shape {
+                ShapeClass::Gemm { gemm, count } => {
+                    resolved[u] = Some(self.cost_class_uncached(&OpClass::SystolicGemm {
+                        gemm: *gemm,
+                        count: *count,
+                    }));
+                }
+                ShapeClass::Elementwise { kind, dims, dtype } => match self.learned_for(*kind) {
+                    Some((model, source)) => {
+                        let row = featurize(dims);
+                        let out = TensorType::new(dims.clone(), *dtype);
+                        let gi = *group_of.entry(model.clone()).or_insert_with(|| {
+                            ew_groups.push(EwGroup {
+                                model,
+                                stride: row.len(),
+                                rows: Vec::new(),
+                                entries: Vec::new(),
+                            });
+                            ew_groups.len() - 1
+                        });
+                        let group = &mut ew_groups[gi];
+                        debug_assert_eq!(group.stride, row.len());
+                        group.rows.extend_from_slice(&row);
+                        group.entries.push((u, source, format!("{out}")));
+                    }
+                    None => {
+                        resolved[u] = Some(self.cost_class_uncached(&OpClass::Elementwise {
+                            kind: *kind,
+                            out: TensorType::new(dims.clone(), *dtype),
+                        }));
+                    }
+                },
+                ShapeClass::Collective { .. } => {
+                    unreachable!("collectives are keyed via ShapeKey::collective, never of_class")
+                }
+            }
+        }
+        for group in ew_groups {
+            let mut raw = Vec::new();
+            self.predict_compiled_many(&group.model, &group.rows, group.stride, &mut raw);
+            for ((u, source, note), pred) in group.entries.into_iter().zip(raw) {
+                resolved[u] = Some(CachedCost {
+                    source,
+                    cycles: None,
+                    latency_us: self.finish_ew_prediction(pred),
+                    note,
+                });
+            }
+        }
+
+        if enabled && !miss.is_empty() {
+            let fresh: Vec<(ShapeKey, CachedCost)> = miss
+                .iter()
+                .map(|&u| {
+                    (
+                        unique[u].clone(),
+                        resolved[u].clone().expect("every miss was evaluated"),
+                    )
+                })
+                .collect();
+            self.cache.store_grouped(fresh);
+        }
+
+        // Rehydrate one cost per input op (clone from the unique table
+        // for cacheable classes, direct arithmetic for the bandwidth /
+        // free classes) and account sources in one bulk update.
+        let mut counts = [0u64; 6];
+        let mut out = Vec::with_capacity(classes.len());
+        for (class, slot) in classes.iter().zip(slots) {
+            let cost = match slot {
+                Some(u) => resolved[*u as usize]
+                    .clone()
+                    .expect("every unique shape was resolved"),
+                None => self.cost_class_uncached(class),
+            };
+            counts[source_index(&cost.source)] += 1;
+            out.push(cost);
+        }
+        self.cache.record_sources(&counts);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::fit_regime_calibration;
+    use crate::frontend::classify::EwKind;
+    use crate::frontend::parse_module;
+    use crate::frontend::types::DType;
+    use crate::scalesim::topology::GemmShape;
+    use crate::scalesim::{simulate_gemm, ScaleConfig};
+
+    fn estimator() -> Estimator {
+        let config = ScaleConfig::tpu_v4();
+        let obs: Vec<_> = [64usize, 128, 256, 512, 1024, 2048, 4096]
+            .iter()
+            .map(|&d| {
+                let g = GemmShape::new(d, d, d);
+                let c = simulate_gemm(&config, g).total_cycles();
+                (g, c, c as f64 * 1e-3)
+            })
+            .collect();
+        Estimator::new(config, fit_regime_calibration(&obs).unwrap())
+    }
+
+    #[test]
+    fn lowered_table_dedups_repeated_shapes() {
+        let text = r#"
+module @m { func.func public @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> tensor<64x64xf32> {
+  %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<64x64xf32>, tensor<64x64xf32>) -> tensor<64x64xf32>
+  %1 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<64x64xf32>, tensor<64x64xf32>) -> tensor<64x64xf32>
+  %2 = stablehlo.add %0, %1 : tensor<64x64xf32>
+  return %2 : tensor<64x64xf32>
+} }"#;
+        let module = parse_module(text).unwrap();
+        let est = estimator();
+        let table = est.lower_module(&module);
+        assert_eq!(table.len(), 3);
+        assert_eq!(table.unique_shapes(), 2, "two dots share one key");
+        assert!(!table.is_empty());
+    }
+
+    #[test]
+    fn estimate_table_reuse_is_bit_identical_to_estimate_module() {
+        let text = r#"
+module @m { func.func public @main(%a: tensor<128x256xbf16>, %b: tensor<256x512xbf16>) -> tensor<128x512xbf16> {
+  %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<128x256xbf16>, tensor<256x512xbf16>) -> tensor<128x512xbf16>
+  %1 = stablehlo.exponential %0 : tensor<128x512xbf16>
+  %2 = stablehlo.add %0, %0 : tensor<128x512xbf16>
+  return %2 : tensor<128x512xbf16>
+} }"#;
+        let module = parse_module(text).unwrap();
+        let est = estimator();
+        let via_module = est.estimate_module(&module);
+        let table = est.lower_module(&module);
+        let a = est.estimate_table(&table);
+        let b = est.estimate_table(&table);
+        for got in [&a, &b] {
+            assert_eq!(got.ops.len(), via_module.ops.len());
+            assert_eq!(got.total_us.to_bits(), via_module.total_us.to_bits());
+            for (x, y) in got.ops.iter().zip(&via_module.ops) {
+                assert_eq!(x.latency_us.to_bits(), y.latency_us.to_bits());
+                assert_eq!(x.op_name, y.op_name);
+                assert_eq!(x.note, y.note);
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_classes_counts_duplicates_like_the_scalar_loop() {
+        let est = estimator();
+        let dot = OpClass::SystolicGemm {
+            gemm: GemmShape::new(96, 96, 96),
+            count: 1,
+        };
+        let add = OpClass::Elementwise {
+            kind: EwKind::Add,
+            out: TensorType::new(vec![96, 96], DType::Bf16),
+        };
+        // Cold batch with a duplicate: [dot, dot, add] must count one
+        // miss + one hit for the repeated dot, one miss for add.
+        let costs = est.estimate_classes(&[dot.clone(), dot.clone(), add.clone()]);
+        assert_eq!(costs.len(), 3);
+        assert_eq!(costs[0].latency_us.to_bits(), costs[1].latency_us.to_bits());
+        let s = est.cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+        assert_eq!(s.systolic, 2);
+        assert_eq!(s.fallback, 1, "no learned model: add falls back");
+        // Warm batch: everything hits.
+        est.estimate_classes(&[dot, add]);
+        let s = est.cache.stats();
+        assert_eq!((s.hits, s.misses), (3, 2));
+        // And the batched values match the scalar path bit for bit.
+        let scalar = est.estimate_op(
+            0,
+            "dot",
+            &OpClass::SystolicGemm {
+                gemm: GemmShape::new(96, 96, 96),
+                count: 1,
+            },
+        );
+        assert_eq!(scalar.latency_us.to_bits(), costs[0].latency_us.to_bits());
+    }
+
+    #[test]
+    fn disabled_cache_matches_scalar_semantics() {
+        let est = estimator();
+        est.cache.set_enabled(false);
+        let dot = OpClass::SystolicGemm {
+            gemm: GemmShape::new(128, 128, 128),
+            count: 1,
+        };
+        let costs = est.estimate_classes(&[dot.clone(), dot]);
+        assert_eq!(costs[0].latency_us.to_bits(), costs[1].latency_us.to_bits());
+        let s = est.cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+        assert_eq!(s.systolic, 2, "sources are counted even when disabled");
+    }
+}

@@ -257,7 +257,10 @@ impl CacheStats {
     }
 }
 
-fn source_index(src: &EstimateSource) -> usize {
+/// Index of a source in the per-source counter array (and in the
+/// `[u64; 6]` batches [`ShardedCache::record_sources`] takes): systolic,
+/// learned, learned-proxy, bandwidth, free, fallback.
+pub(crate) fn source_index(src: &EstimateSource) -> usize {
     match src {
         EstimateSource::SystolicCalibrated => 0,
         EstimateSource::Learned => 1,
@@ -352,9 +355,86 @@ impl ShardedCache {
             .insert(key, cost);
     }
 
+    /// Probe a batch of keys with one lock acquisition per *touched
+    /// shard* instead of one per key — the grouped half of the batched
+    /// estimator core (see [`super::batch`]).
+    ///
+    /// Unlike [`ShardedCache::lookup`] this does **not** touch the
+    /// hit/miss counters: the batched path probes each *unique* shape
+    /// once and then accounts all its occurrences in one shot through
+    /// [`ShardedCache::record_lookups`], so the totals match the per-op
+    /// scalar walk exactly. Returns all-`None` (still without counting)
+    /// when memoisation is disabled.
+    pub fn lookup_grouped(&self, keys: &[ShapeKey]) -> Vec<Option<CachedCost>> {
+        let mut out: Vec<Option<CachedCost>> = vec![None; keys.len()];
+        if !self.is_enabled() || keys.is_empty() {
+            return out;
+        }
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, key) in keys.iter().enumerate() {
+            by_shard[self.shard_of(key)].push(i);
+        }
+        for (shard, idxs) in self.shards.iter().zip(&by_shard) {
+            if idxs.is_empty() {
+                continue;
+            }
+            let map = shard.lock().unwrap();
+            for &i in idxs {
+                out[i] = map.get(&keys[i]).cloned();
+            }
+        }
+        out
+    }
+
+    /// Store a batch of freshly computed costs with one lock acquisition
+    /// per touched shard. No-op when memoisation is disabled (mirroring
+    /// [`ShardedCache::store`]).
+    pub fn store_grouped(&self, items: Vec<(ShapeKey, CachedCost)>) {
+        if !self.is_enabled() || items.is_empty() {
+            return;
+        }
+        let mut by_shard: Vec<Vec<(ShapeKey, CachedCost)>> =
+            (0..self.shards.len()).map(|_| Vec::new()).collect();
+        for (key, cost) in items {
+            let shard = self.shard_of(&key);
+            by_shard[shard].push((key, cost));
+        }
+        for (shard, group) in self.shards.iter().zip(by_shard) {
+            if group.is_empty() {
+                continue;
+            }
+            let mut map = shard.lock().unwrap();
+            for (key, cost) in group {
+                map.insert(key, cost);
+            }
+        }
+    }
+
+    /// Bulk hit/miss accounting for a grouped probe: two `fetch_add`s
+    /// for a whole batch instead of one per op.
+    pub fn record_lookups(&self, hits: u64, misses: u64) {
+        if hits > 0 {
+            self.hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if misses > 0 {
+            self.misses.fetch_add(misses, Ordering::Relaxed);
+        }
+    }
+
     /// Count which model answered an op (hit or miss).
     pub fn record_source(&self, src: &EstimateSource) {
         self.sources[source_index(src)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Bulk per-source accounting (indexed systolic, learned,
+    /// learned-proxy, bandwidth, free, fallback — the [`CacheStats`]
+    /// order): six `fetch_add`s for a whole batch instead of one per op.
+    pub fn record_sources(&self, counts: &[u64; 6]) {
+        for (cell, &n) in self.sources.iter().zip(counts) {
+            if n > 0 {
+                cell.fetch_add(n, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Account one whole-module answer under its estimation mode, so
@@ -572,6 +652,66 @@ mod tests {
         c.store(a.clone(), cost(7.0));
         assert!(c.lookup(&gemm_key(64)).is_none());
         assert_eq!(c.lookup(&a).unwrap().latency_us, 7.0);
+    }
+
+    #[test]
+    fn grouped_lookup_matches_scalar_probes_without_counting() {
+        let c = ShardedCache::with_shards(4);
+        c.store(gemm_key(64), cost(1.0));
+        c.store(gemm_key(256), cost(2.0));
+        let keys: Vec<ShapeKey> = [64usize, 128, 256, 512].iter().map(|&d| gemm_key(d)).collect();
+        let got = c.lookup_grouped(&keys);
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0].as_ref().map(|h| h.latency_us), Some(1.0));
+        assert!(got[1].is_none());
+        assert_eq!(got[2].as_ref().map(|h| h.latency_us), Some(2.0));
+        assert!(got[3].is_none());
+        // The grouped probe leaves hit/miss accounting to the caller.
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        c.record_lookups(3, 2);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (3, 2));
+    }
+
+    #[test]
+    fn grouped_store_and_disabled_semantics() {
+        let c = ShardedCache::with_shards(2);
+        c.store_grouped(vec![(gemm_key(8), cost(8.0)), (gemm_key(16), cost(16.0))]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup(&gemm_key(8)).unwrap().latency_us, 8.0);
+        c.set_enabled(false);
+        c.store_grouped(vec![(gemm_key(32), cost(32.0))]);
+        assert_eq!(c.len(), 2, "disabled store_grouped must be a no-op");
+        let got = c.lookup_grouped(&[gemm_key(8)]);
+        assert!(got[0].is_none(), "disabled grouped probe returns all-None");
+    }
+
+    #[test]
+    fn record_sources_bulk_matches_per_op_counting() {
+        let a = ShardedCache::new();
+        let b = ShardedCache::new();
+        let seq = [
+            EstimateSource::SystolicCalibrated,
+            EstimateSource::Learned,
+            EstimateSource::Learned,
+            EstimateSource::LearnedProxy("add".into()),
+            EstimateSource::Bandwidth,
+            EstimateSource::Free,
+            EstimateSource::Fallback,
+            EstimateSource::Fallback,
+        ];
+        let mut counts = [0u64; 6];
+        for s in &seq {
+            a.record_source(s);
+            counts[source_index(s)] += 1;
+        }
+        b.record_sources(&counts);
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(
+            (sa.systolic, sa.learned, sa.learned_proxy, sa.bandwidth, sa.free, sa.fallback),
+            (sb.systolic, sb.learned, sb.learned_proxy, sb.bandwidth, sb.free, sb.fallback)
+        );
     }
 
     #[test]

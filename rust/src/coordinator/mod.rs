@@ -1,14 +1,17 @@
-//! L3 coordinator: the whole-model estimator ([`estimator`]), its sharded
-//! shape-keyed memo cache ([`cache`]), the worker pools driving parallel
-//! sweeps and the streaming service ([`pool`]), and the JSONL request
-//! loop itself ([`service`]).
+//! L3 coordinator: the whole-model estimator ([`estimator`]), its batched
+//! structure-of-arrays core ([`batch`]), its sharded shape-keyed memo
+//! cache ([`cache`]), the worker pools driving parallel sweeps and the
+//! streaming service ([`pool`]), and the JSONL request loop itself
+//! ([`service`]).
 
+pub mod batch;
 pub mod cache;
 pub mod estimator;
 pub mod fusion;
 pub mod pool;
 pub mod service;
 
+pub use batch::OpTable;
 pub use cache::{CacheStats, CachedCost, ModeStat, ShapeClass, ShapeKey, ShardedCache};
 pub use estimator::{EstimateMode, Estimator, EstimateSource, ModelEstimate, OpEstimate};
 pub use fusion::{estimate_fused, estimate_fused_with};

@@ -13,7 +13,12 @@
 //!
 //! This is the "leader" entry point (`scalesim-tpu serve`): downstream
 //! tooling pipes compiler output in and gets latency estimates back
-//! without ever invoking Python. Two modes share one answer path:
+//! without ever invoking Python. Module requests resolve through the
+//! batched estimator core ([`super::batch`]): `estimate_module` lowers
+//! the whole module into a structure-of-arrays op table, probes the
+//! sharded shape cache once per shard per batch, and evaluates the
+//! misses class-by-class over contiguous arrays — bit-identical to the
+//! old per-op walk, counters included. Two modes share one answer path:
 //!
 //! * [`serve_stream`] — persistent: reads the input line by line, pushes
 //!   each request through a bounded-queue [`WorkerPool`] (backpressure on

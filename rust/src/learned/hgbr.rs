@@ -457,11 +457,43 @@ impl CompiledHgbr {
             acc
         }
     }
+
+    /// Predict a contiguous row-major batch: `rows` holds `n` feature
+    /// rows of `stride` values each (`rows.len() == n * stride`), one
+    /// prediction is appended to `out` per row. The batched estimator
+    /// core evaluates all misses of one model through this so the hot
+    /// loop runs over one flat array; each row goes through exactly
+    /// [`CompiledHgbr::predict`], so batched predictions are
+    /// bit-identical to scalar calls.
+    pub fn predict_many(&self, rows: &[f64], stride: usize, out: &mut Vec<f64>) {
+        assert!(stride > 0, "predict_many needs a positive row stride");
+        assert_eq!(rows.len() % stride, 0, "rows must be a whole number of feature rows");
+        out.reserve(rows.len() / stride);
+        for row in rows.chunks_exact(stride) {
+            out.push(self.predict(row));
+        }
+    }
 }
 
 #[cfg(test)]
 mod compiled_tests {
     use super::*;
+
+    #[test]
+    fn predict_many_matches_scalar_predict() {
+        let rows: Vec<Vec<f64>> = (0..300)
+            .map(|i| vec![i as f64, (i * 53 % 71) as f64])
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| r[0] * 1.7 + r[1] + 2.0).collect();
+        let compiled = Hgbr::fit(&rows, &y, &["a", "b"], &HgbrParams::default()).compile();
+        let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let mut batch = Vec::new();
+        compiled.predict_many(&flat, 2, &mut batch);
+        assert_eq!(batch.len(), rows.len());
+        for (row, got) in rows.iter().zip(&batch) {
+            assert_eq!(compiled.predict(row).to_bits(), got.to_bits());
+        }
+    }
 
     #[test]
     fn compiled_matches_interpreted() {

@@ -33,6 +33,9 @@
 //!   every op, tensor residency (bounded buffer, LRU eviction) and the
 //!   compute-vs-bandwidth roofline.
 //! * [`workloads`] — the paper's sweep generators.
+//! * [`sweep`] — the op-coverage validation harness: deterministic
+//!   per-class shape grids driven through the batched estimator core,
+//!   with cache hit-rate, throughput and bit-identity reporting.
 //! * [`report`] — tables, CSV and ASCII scatter plots for every figure.
 //! * [`util`] — std-only infrastructure (JSON, PRNG, stats, args).
 
@@ -50,6 +53,7 @@ pub mod memory;
 pub mod report;
 pub mod runtime;
 pub mod scalesim;
+pub mod sweep;
 pub mod tpu;
 pub mod workloads;
 pub mod util;

@@ -22,6 +22,7 @@ use scalesim_tpu::memory::{schedule_estimate_memory, MemoryConfig, MemorySchedul
 use scalesim_tpu::report::{write_output, Table};
 use scalesim_tpu::util::json::Json;
 use scalesim_tpu::scalesim::{simulate_gemm, simulate_topology, GemmShape, Topology};
+use scalesim_tpu::sweep;
 use scalesim_tpu::tpu::{Hardware, PjrtHardware, TpuV4Model};
 use scalesim_tpu::util::args::Args;
 
@@ -88,6 +89,21 @@ Toolchain:
                                    unfused/scheduled/memory-aware totals
                                    per device, plus the distributed slice
                                    when --chips is given
+  sweep [--ops a,b,c]            op-coverage validation sweep: deterministic
+        [--grid small|paper]       generated shape grids per op class, run
+        [--json | --csv]           cold + warm through the batched estimator
+        [--measure]                core; reports per-class latency
+                                   distributions, cache hit rates,
+                                   estimates/sec and cold/warm bit-identity.
+                                   --ops picks classes (default all: matmul,
+                                   conv, elementwise, activation,
+                                   normalization, pooling, data-movement);
+                                   --csv emits the deterministic per-case
+                                   table (the golden-fixture format), --json
+                                   the full report incl. throughput;
+                                   --measure also scores systolic estimates
+                                   against the --hardware backend (median of
+                                   --reps, MARE per class)
   serve [--input FILE.jsonl]     streaming request service (JSONL in/out);
         [--workers N]              reads stdin when no --input is given and
         [--queue N]                answers incrementally, in order, through
@@ -245,6 +261,7 @@ fn run(args: &Args) -> Result<()> {
         Some("devices") => cmd_devices(args),
         Some("compare") => cmd_compare(args),
         Some("serve") => cmd_serve(args),
+        Some("sweep") => cmd_sweep(args),
         Some(other) => bail!("unknown subcommand '{other}' (try 'help')"),
     }
 }
@@ -965,6 +982,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     out.flush()?;
     if !args.flag("quiet") {
         eprintln!("{}", summary.render());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spec = make_device(args)?;
+    let classes = sweep::SweepOpClass::parse_list(&args.str_or("ops", "all"))?;
+    let grid = sweep::GridSize::parse(&args.str_or("grid", "small"))?;
+
+    // Exact synthetic calibration: the sweep is a pure function of the
+    // device spec and grid (golden-CSV-testable), not of a measured fit.
+    let est = sweep::sweep_estimator(&spec);
+    let mut report = sweep::run_sweep(&est, &classes, grid);
+    if args.flag("measure") {
+        let mut hw = make_hardware(args, &spec)?;
+        sweep::attach_measurements(&mut report, hw.as_mut(), args.usize_or("reps", 5));
+    }
+
+    if args.flag("json") {
+        println!("{}", report.to_json().dump());
+    } else if args.flag("csv") {
+        print!("{}", report.to_csv());
+    } else {
+        println!("{}", report.render());
     }
     Ok(())
 }

@@ -1,0 +1,344 @@
+//! Deterministic per-class shape grids for the `sweep` harness.
+//!
+//! Every grid is a pure function of `(SweepOpClass, GridSize)` — no
+//! clocks, no randomness — so a sweep over a fixed device preset is
+//! byte-reproducible (the golden-CSV test in `tests/cli.rs` depends on
+//! this). The `Paper` grids reuse the paper's own sweep generators from
+//! [`crate::workloads`] where one exists; the `Small` grids are tight
+//! hand-picked subsets meant for CI smoke runs and golden fixtures.
+
+use crate::frontend::classify::{EwKind, OpClass};
+use crate::frontend::types::{DType, TensorType};
+use crate::scalesim::topology::{ConvLayer, GemmShape};
+use crate::workloads::{elementwise_sweep, gemm_sweep};
+
+use super::{GridSize, SweepCase, SweepOpClass};
+
+/// The deterministic case list for one op class at one grid size.
+pub fn cases_for(class: SweepOpClass, grid: GridSize) -> Vec<SweepCase> {
+    match class {
+        SweepOpClass::Matmul => matmul_cases(grid),
+        SweepOpClass::Conv => conv_cases(grid),
+        SweepOpClass::Elementwise => ew_cases(grid),
+        SweepOpClass::Activation => activation_cases(grid),
+        SweepOpClass::Normalization => normalization_cases(grid),
+        SweepOpClass::Pooling => pooling_cases(grid),
+        SweepOpClass::DataMovement => movement_cases(grid),
+    }
+}
+
+fn dims_str(dims: &[usize]) -> String {
+    dims.iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
+
+fn gemm_case(m: usize, k: usize, n: usize) -> SweepCase {
+    let gemm = GemmShape::new(m, k, n);
+    let dtype = DType::Bf16;
+    SweepCase {
+        op: "dot_general".to_string(),
+        shape: format!("{m}x{k}x{n}"),
+        dtype,
+        // Operand + result footprint the MXU streams per GEMM.
+        bytes: ((m * k + k * n + m * n) * dtype.bytes()) as u64,
+        class: OpClass::SystolicGemm { gemm, count: 1 },
+    }
+}
+
+fn matmul_cases(grid: GridSize) -> Vec<SweepCase> {
+    match grid {
+        GridSize::Small => vec![
+            gemm_case(64, 64, 64),
+            gemm_case(128, 128, 128),
+            gemm_case(256, 256, 256),
+            gemm_case(512, 512, 512),
+            gemm_case(128, 1024, 128),
+            gemm_case(1024, 128, 1024),
+        ],
+        GridSize::Paper => gemm_sweep::full_sweep()
+            .into_iter()
+            .map(|(_, g)| gemm_case(g.m, g.k, g.n))
+            .collect(),
+    }
+}
+
+fn conv_case(ih: usize, iw: usize, fh: usize, fw: usize, c: usize, nf: usize, s: usize) -> SweepCase {
+    let conv = ConvLayer {
+        name: format!("sweep_conv_{ih}x{iw}"),
+        ifmap_h: ih,
+        ifmap_w: iw,
+        filter_h: fh,
+        filter_w: fw,
+        channels: c,
+        num_filters: nf,
+        stride_h: s,
+        stride_w: s,
+    };
+    let gemm = conv.to_gemm();
+    let dtype = DType::Bf16;
+    SweepCase {
+        op: "convolution".to_string(),
+        shape: format!("{ih}x{iw}x{c}/{fh}x{fw}/f{nf}/s{s}"),
+        dtype,
+        bytes: ((gemm.m * gemm.k + gemm.k * gemm.n + gemm.m * gemm.n) * dtype.bytes()) as u64,
+        class: OpClass::SystolicConv {
+            conv,
+            gemm,
+            count: 1,
+        },
+    }
+}
+
+fn conv_cases(grid: GridSize) -> Vec<SweepCase> {
+    match grid {
+        GridSize::Small => vec![
+            conv_case(32, 32, 3, 3, 16, 32, 1),
+            conv_case(28, 28, 5, 5, 8, 16, 2),
+        ],
+        GridSize::Paper => vec![
+            // A ResNet-style ladder: large spatial / few channels down to
+            // small spatial / many channels.
+            conv_case(224, 224, 7, 7, 3, 64, 2),
+            conv_case(56, 56, 3, 3, 64, 64, 1),
+            conv_case(28, 28, 3, 3, 128, 128, 1),
+            conv_case(14, 14, 3, 3, 256, 256, 2),
+            conv_case(7, 7, 3, 3, 512, 512, 1),
+        ],
+    }
+}
+
+fn ew_case(kind: EwKind, dims: &[usize], dtype: DType) -> SweepCase {
+    let out = TensorType {
+        dims: dims.to_vec(),
+        dtype,
+    };
+    SweepCase {
+        op: kind.name().to_string(),
+        shape: dims_str(dims),
+        dtype,
+        // The fallback/learned elementwise model charges two reads plus
+        // one write of the output footprint.
+        bytes: out.size_bytes() * 3,
+        class: OpClass::Elementwise { kind, out },
+    }
+}
+
+fn ew_cases(grid: GridSize) -> Vec<SweepCase> {
+    match grid {
+        GridSize::Small => {
+            let kinds = [EwKind::Add, EwKind::Multiply, EwKind::Maximum];
+            let shapes: [&[usize]; 3] = [&[1024], &[128, 128], &[64, 512]];
+            let mut out = Vec::new();
+            for kind in kinds {
+                for dims in shapes {
+                    out.push(ew_case(kind, dims, DType::Bf16));
+                }
+            }
+            out
+        }
+        GridSize::Paper => {
+            let kinds = [
+                EwKind::Add,
+                EwKind::Subtract,
+                EwKind::Multiply,
+                EwKind::Divide,
+                EwKind::Maximum,
+                EwKind::Minimum,
+            ];
+            // Subsample the Fig. 3 sweeps: every 16th 1-D and 2-D shape.
+            let mut shapes: Vec<Vec<usize>> =
+                elementwise_sweep::sweep_1d().into_iter().step_by(16).collect();
+            shapes.extend(elementwise_sweep::sweep_2d().into_iter().step_by(16));
+            let mut out = Vec::new();
+            for kind in kinds {
+                for dims in &shapes {
+                    out.push(ew_case(kind, dims, DType::Bf16));
+                }
+            }
+            out
+        }
+    }
+}
+
+fn activation_cases(grid: GridSize) -> Vec<SweepCase> {
+    match grid {
+        GridSize::Small => {
+            let kinds = [EwKind::Exp, EwKind::Tanh, EwKind::Logistic];
+            let shapes: [&[usize]; 2] = [&[128, 128], &[32, 1024]];
+            let mut out = Vec::new();
+            for kind in kinds {
+                for dims in shapes {
+                    out.push(ew_case(kind, dims, DType::Bf16));
+                }
+            }
+            out
+        }
+        GridSize::Paper => {
+            let kinds = [
+                EwKind::Exp,
+                EwKind::Tanh,
+                EwKind::Logistic,
+                EwKind::Rsqrt,
+                EwKind::Sqrt,
+                EwKind::Log,
+            ];
+            let shapes: [&[usize]; 6] = [
+                &[1024],
+                &[128, 128],
+                &[256, 256],
+                &[512, 512],
+                &[1024, 1024],
+                &[64, 4096],
+            ];
+            let mut out = Vec::new();
+            for kind in kinds {
+                for dims in shapes {
+                    out.push(ew_case(kind, dims, DType::Bf16));
+                }
+            }
+            out
+        }
+    }
+}
+
+fn reduction_case(op: &str, in_dims: &[usize], out_dims: &[usize], dtype: DType) -> SweepCase {
+    let input = TensorType {
+        dims: in_dims.to_vec(),
+        dtype,
+    };
+    let out = TensorType {
+        dims: out_dims.to_vec(),
+        dtype,
+    };
+    SweepCase {
+        op: op.to_string(),
+        shape: format!("{}->{}", dims_str(in_dims), dims_str(out_dims)),
+        dtype,
+        bytes: input.size_bytes() + out.size_bytes(),
+        class: OpClass::Reduction { input, out },
+    }
+}
+
+fn normalization_cases(grid: GridSize) -> Vec<SweepCase> {
+    match grid {
+        GridSize::Small => vec![
+            reduction_case("reduce", &[128, 1024], &[128], DType::F32),
+            reduction_case("reduce", &[256, 256], &[256], DType::F32),
+        ],
+        GridSize::Paper => {
+            let mut out = Vec::new();
+            for n in [128usize, 512, 2048] {
+                for d in [256usize, 1024, 4096] {
+                    out.push(reduction_case("reduce", &[n, d], &[n], DType::F32));
+                }
+            }
+            out
+        }
+    }
+}
+
+fn pooling_cases(grid: GridSize) -> Vec<SweepCase> {
+    let pool = |c: usize, h: usize, w: usize| {
+        reduction_case(
+            "reduce_window",
+            &[c, h, w],
+            &[c, h / 2, w / 2],
+            DType::Bf16,
+        )
+    };
+    match grid {
+        GridSize::Small => vec![pool(32, 56, 56), pool(64, 28, 28)],
+        GridSize::Paper => vec![
+            pool(32, 112, 112),
+            pool(64, 56, 56),
+            pool(128, 28, 28),
+            pool(256, 14, 14),
+        ],
+    }
+}
+
+fn movement_case(op: &str, dims: &[usize], dtype: DType) -> SweepCase {
+    let out = TensorType {
+        dims: dims.to_vec(),
+        dtype,
+    };
+    let bytes = out.size_bytes();
+    SweepCase {
+        op: op.to_string(),
+        shape: dims_str(dims),
+        dtype,
+        // Read + write of the moved footprint.
+        bytes: bytes * 2,
+        class: OpClass::DataMovement { bytes, out },
+    }
+}
+
+fn movement_cases(grid: GridSize) -> Vec<SweepCase> {
+    match grid {
+        GridSize::Small => vec![
+            movement_case("transpose", &[1024, 1024], DType::F32),
+            movement_case("reshape", &[8, 4096], DType::Bf16),
+        ],
+        GridSize::Paper => vec![
+            movement_case("transpose", &[256, 256], DType::F32),
+            movement_case("transpose", &[1024, 1024], DType::F32),
+            movement_case("transpose", &[4096, 4096], DType::F32),
+            movement_case("broadcast_in_dim", &[128, 1024], DType::Bf16),
+            movement_case("reshape", &[64, 64, 64], DType::Bf16),
+            movement_case("concatenate", &[2048, 2048], DType::F32),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_deterministic_and_nonempty() {
+        for class in SweepOpClass::ALL {
+            for grid in [GridSize::Small, GridSize::Paper] {
+                let a = cases_for(class, grid);
+                let b = cases_for(class, grid);
+                assert!(!a.is_empty(), "{class:?}/{grid:?} grid is empty");
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.op, y.op);
+                    assert_eq!(x.shape, y.shape);
+                    assert_eq!(x.bytes, y.bytes);
+                    assert_eq!(x.class, y.class);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_grids_stay_small() {
+        for class in SweepOpClass::ALL {
+            assert!(
+                cases_for(class, GridSize::Small).len() <= 16,
+                "{class:?} small grid too large"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_matmul_grid_matches_the_paper_sweep() {
+        let cases = cases_for(SweepOpClass::Matmul, GridSize::Paper);
+        assert_eq!(cases.len(), gemm_sweep::full_sweep().len());
+    }
+
+    #[test]
+    fn conv_cases_carry_their_im2col_gemm() {
+        for case in cases_for(SweepOpClass::Conv, GridSize::Small) {
+            match &case.class {
+                OpClass::SystolicConv { conv, gemm, .. } => {
+                    assert_eq!(*gemm, conv.to_gemm());
+                }
+                other => panic!("expected conv class, got {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,613 @@
+//! Op-coverage validation sweeps over the batched estimator core.
+//!
+//! The `scalesim-tpu sweep` subcommand drives deterministic generated
+//! shape grids — one grid per op class ([`SweepOpClass`]) — through
+//! [`Estimator::estimate_classes`], the structure-of-arrays batch entry
+//! point, and reports per-class estimate distributions, cache hit rates
+//! and estimation throughput. Each class runs **twice** over the same
+//! batch: a cold pass (populates the sharded shape cache) and a warm
+//! pass (served from it). The harness then checks the two passes
+//! bit-for-bit against each other — the cached/uncached bit-identity
+//! invariant of [`crate::coordinator::batch`], validated over every op
+//! class the estimator models rather than just the fixtures.
+//!
+//! Determinism: [`sweep_estimator`] pins the cycle→latency calibration
+//! to an exact synthetic fit (1e-3 µs per cycle, zero intercept) so the
+//! whole sweep is a pure function of the device spec and grid. The
+//! golden fixture `tests/fixtures/sweep_small_tpu-v4.csv` asserts
+//! byte-identical regeneration in `tests/cli.rs`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::calibrate::{LinearFit, RegimeCalibration};
+use crate::coordinator::{CachedCost, Estimator};
+use crate::device::DeviceSpec;
+use crate::frontend::classify::OpClass;
+use crate::frontend::types::DType;
+use crate::report::Table;
+use crate::scalesim::topology::GemmShape;
+use crate::tpu::{measure_gemm_batch_median, Hardware};
+use crate::util::json::Json;
+
+pub mod grid;
+
+/// An op-coverage class the sweep can exercise. Each maps onto the
+/// [`OpClass`] the estimator's cost models key on; `Activation` is the
+/// transcendental slice of the elementwise family and `Normalization` /
+/// `Pooling` are the two reduction idioms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepOpClass {
+    /// `dot_general` GEMMs on the systolic array.
+    Matmul,
+    /// 2-D convolutions (im2col-lowered onto the systolic array).
+    Conv,
+    /// Binary arithmetic elementwise ops (add, multiply, ...).
+    Elementwise,
+    /// Transcendental elementwise ops (exp, tanh, ...).
+    Activation,
+    /// Row reductions as in layer/batch norm statistics.
+    Normalization,
+    /// Windowed reductions (`reduce_window`).
+    Pooling,
+    /// Pure data relayout (transpose, reshape, ...).
+    DataMovement,
+}
+
+impl SweepOpClass {
+    /// Every class, in reporting order.
+    pub const ALL: [SweepOpClass; 7] = [
+        SweepOpClass::Matmul,
+        SweepOpClass::Conv,
+        SweepOpClass::Elementwise,
+        SweepOpClass::Activation,
+        SweepOpClass::Normalization,
+        SweepOpClass::Pooling,
+        SweepOpClass::DataMovement,
+    ];
+
+    /// Stable lowercase name (CLI `--ops` values, CSV/JSON keys).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepOpClass::Matmul => "matmul",
+            SweepOpClass::Conv => "conv",
+            SweepOpClass::Elementwise => "elementwise",
+            SweepOpClass::Activation => "activation",
+            SweepOpClass::Normalization => "normalization",
+            SweepOpClass::Pooling => "pooling",
+            SweepOpClass::DataMovement => "data-movement",
+        }
+    }
+
+    /// Parse one `--ops` element.
+    pub fn parse(s: &str) -> Result<SweepOpClass> {
+        for class in SweepOpClass::ALL {
+            if class.name() == s {
+                return Ok(class);
+            }
+        }
+        bail!(
+            "unknown op class '{s}' (known: {})",
+            SweepOpClass::ALL
+                .iter()
+                .map(|c| c.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+
+    /// Parse a comma-separated `--ops` list; `all` (the default) expands
+    /// to every class.
+    pub fn parse_list(spec: &str) -> Result<Vec<SweepOpClass>> {
+        if spec.trim() == "all" {
+            return Ok(SweepOpClass::ALL.to_vec());
+        }
+        let mut out = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let class = SweepOpClass::parse(part)?;
+            if !out.contains(&class) {
+                out.push(class);
+            }
+        }
+        if out.is_empty() {
+            bail!("--ops selected no op classes");
+        }
+        Ok(out)
+    }
+}
+
+/// Which generated grid to sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridSize {
+    /// Tight CI/golden-fixture grid (a handful of cases per class).
+    Small,
+    /// The paper-scale grid (reuses the Fig. 2/3 sweep generators).
+    Paper,
+}
+
+impl GridSize {
+    /// Stable lowercase name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridSize::Small => "small",
+            GridSize::Paper => "paper",
+        }
+    }
+
+    /// Parse a `--grid` value.
+    pub fn parse(s: &str) -> Result<GridSize> {
+        match s {
+            "small" => Ok(GridSize::Small),
+            "paper" => Ok(GridSize::Paper),
+            other => bail!("unknown grid '{other}' (expected small or paper)"),
+        }
+    }
+}
+
+/// One generated sweep case: a classified op plus the descriptive fields
+/// the report prints for it.
+#[derive(Debug, Clone)]
+pub struct SweepCase {
+    /// StableHLO-style op name (`dot_general`, `exponential`, ...).
+    pub op: String,
+    /// Compact shape descriptor (`256x256x256`, `128x1024->128`, ...).
+    pub shape: String,
+    /// Element type of the case's tensors.
+    pub dtype: DType,
+    /// Bytes the cost model charges for the case (model traffic for
+    /// bandwidth-bound classes, operand+result footprint for systolic).
+    pub bytes: u64,
+    /// The classified op handed to the batched core.
+    pub class: OpClass,
+}
+
+/// One case's resolved cost (from the cold pass).
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// The generated case.
+    pub case: SweepCase,
+    /// Its position-independent cost.
+    pub cost: CachedCost,
+}
+
+/// Cache and timing accounting for one pass over one class's batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PassStats {
+    /// Cache hits the pass recorded.
+    pub hits: u64,
+    /// Cache misses the pass recorded.
+    pub misses: u64,
+    /// Wall-clock the `estimate_classes` call took, µs.
+    pub elapsed_us: f64,
+}
+
+impl PassStats {
+    /// Hits over lookups, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Estimates per second this pass sustained over `cases` cases.
+    pub fn estimates_per_sec(&self, cases: usize) -> f64 {
+        if self.elapsed_us <= 0.0 {
+            0.0
+        } else {
+            cases as f64 / (self.elapsed_us * 1e-6)
+        }
+    }
+}
+
+/// Agreement of the estimator with a [`Hardware`] measurement backend
+/// over one systolic class (`--measure`).
+#[derive(Debug, Clone, Copy)]
+pub struct MeasuredStats {
+    /// Cases compared.
+    pub cases: usize,
+    /// Mean absolute relative error of estimate vs measured median.
+    pub mare: f64,
+}
+
+/// Everything the sweep learned about one op class.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    /// The class.
+    pub class: SweepOpClass,
+    /// Per-case results, grid order (cold-pass costs).
+    pub results: Vec<CaseResult>,
+    /// Cold-pass accounting (first batch; populates the cache).
+    pub cold: PassStats,
+    /// Warm-pass accounting (same batch again; served from cache).
+    pub warm: PassStats,
+    /// Did the warm pass reproduce the cold pass bit for bit?
+    pub warm_identical: bool,
+    /// Hardware-model agreement, when `--measure` ran.
+    pub measured: Option<MeasuredStats>,
+}
+
+impl ClassReport {
+    /// (min, mean, max, total) of the class's latencies, µs.
+    pub fn latency_summary(&self) -> (f64, f64, f64, f64) {
+        if self.results.is_empty() {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut total = 0.0;
+        for r in &self.results {
+            min = min.min(r.cost.latency_us);
+            max = max.max(r.cost.latency_us);
+            total += r.cost.latency_us;
+        }
+        (min, total / self.results.len() as f64, max, total)
+    }
+}
+
+/// A full sweep run: every requested class on one device.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Device preset/spec name the estimator answered for.
+    pub device: String,
+    /// The grid that generated the cases.
+    pub grid: GridSize,
+    /// Per-class reports, in request order.
+    pub classes: Vec<ClassReport>,
+}
+
+/// An estimator for sweeps: the device's systolic config and HBM
+/// bandwidth, with the cycle→latency calibration pinned to an exact
+/// synthetic fit (1e-3 µs per cycle, zero intercept, all regimes).
+///
+/// Pinning the fit makes every sweep number a pure function of the
+/// device spec and grid — measured calibrations vary run to run, which
+/// would break the golden-CSV fixture.
+pub fn sweep_estimator(spec: &DeviceSpec) -> Estimator {
+    let exact = LinearFit {
+        alpha: 1e-3,
+        beta: 0.0,
+    };
+    let calibration = RegimeCalibration {
+        small: exact,
+        medium: exact,
+        large: exact,
+        metrics: Vec::new(),
+    };
+    Estimator::for_device(spec.clone(), calibration)
+}
+
+fn cost_bits(c: &CachedCost) -> (u64, Option<u64>, &'static str, &str) {
+    (c.latency_us.to_bits(), c.cycles, c.source.tag(), &c.note)
+}
+
+fn run_class(est: &Estimator, class: SweepOpClass, grid: GridSize) -> ClassReport {
+    let cases = grid::cases_for(class, grid);
+    let op_classes: Vec<OpClass> = cases.iter().map(|c| c.class.clone()).collect();
+
+    let s0 = est.cache.stats();
+    let t0 = Instant::now();
+    let cold_costs = est.estimate_classes(&op_classes);
+    let cold_elapsed = t0.elapsed().as_secs_f64() * 1e6;
+    let s1 = est.cache.stats();
+
+    let t1 = Instant::now();
+    let warm_costs = est.estimate_classes(&op_classes);
+    let warm_elapsed = t1.elapsed().as_secs_f64() * 1e6;
+    let s2 = est.cache.stats();
+
+    let warm_identical = cold_costs.len() == warm_costs.len()
+        && cold_costs
+            .iter()
+            .zip(&warm_costs)
+            .all(|(a, b)| cost_bits(a) == cost_bits(b));
+
+    ClassReport {
+        class,
+        results: cases
+            .into_iter()
+            .zip(cold_costs)
+            .map(|(case, cost)| CaseResult { case, cost })
+            .collect(),
+        cold: PassStats {
+            hits: s1.hits - s0.hits,
+            misses: s1.misses - s0.misses,
+            elapsed_us: cold_elapsed,
+        },
+        warm: PassStats {
+            hits: s2.hits - s1.hits,
+            misses: s2.misses - s1.misses,
+            elapsed_us: warm_elapsed,
+        },
+        warm_identical,
+        measured: None,
+    }
+}
+
+/// Run the sweep: every class in `classes`, cold pass then warm pass,
+/// through the batched estimator core.
+pub fn run_sweep(est: &Estimator, classes: &[SweepOpClass], grid: GridSize) -> SweepReport {
+    SweepReport {
+        device: est.device().name.clone(),
+        grid,
+        classes: classes.iter().map(|&c| run_class(est, c, grid)).collect(),
+    }
+}
+
+fn case_gemm(class: &OpClass) -> Option<GemmShape> {
+    match class {
+        OpClass::SystolicGemm { gemm, .. } | OpClass::SystolicConv { gemm, .. } => Some(*gemm),
+        _ => None,
+    }
+}
+
+/// Attach hardware-model agreement to a finished report: for every
+/// systolic case, measure the median GEMM latency on `hw` and record the
+/// per-class mean absolute relative error of the estimates against it.
+pub fn attach_measurements(report: &mut SweepReport, hw: &mut dyn Hardware, reps: usize) {
+    for class_report in &mut report.classes {
+        let gemms: Vec<GemmShape> = class_report
+            .results
+            .iter()
+            .filter_map(|r| case_gemm(&r.case.class))
+            .collect();
+        if gemms.is_empty() {
+            continue;
+        }
+        let measured = measure_gemm_batch_median(hw, &gemms, reps);
+        let mut err_sum = 0.0;
+        let mut n = 0usize;
+        let mut mi = 0usize;
+        for r in &class_report.results {
+            if case_gemm(&r.case.class).is_none() {
+                continue;
+            }
+            let m = measured[mi];
+            mi += 1;
+            if m > 0.0 {
+                err_sum += (r.cost.latency_us - m).abs() / m;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            class_report.measured = Some(MeasuredStats {
+                cases: n,
+                mare: err_sum / n as f64,
+            });
+        }
+    }
+}
+
+impl SweepReport {
+    /// Deterministic per-case CSV (the golden-fixture format): one row
+    /// per case from the cold pass, no timing columns.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("class,op,shape,dtype,bytes,source,cycles,latency_us\n");
+        for class_report in &self.classes {
+            for r in &class_report.results {
+                let cycles = match r.cost.cycles {
+                    Some(c) => c.to_string(),
+                    None => String::new(),
+                };
+                out.push_str(&format!(
+                    "{},{},{},{},{},{},{},{:.6}\n",
+                    class_report.class.name(),
+                    r.case.op,
+                    r.case.shape,
+                    r.case.dtype.name(),
+                    r.case.bytes,
+                    r.cost.source.tag(),
+                    cycles,
+                    r.cost.latency_us,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Full machine-readable report (includes the timing-dependent
+    /// throughput numbers the CSV deliberately omits).
+    pub fn to_json(&self) -> Json {
+        let pass_json = |p: &PassStats, cases: usize| -> Json {
+            let mut o = Json::obj();
+            o.set("hits", Json::Num(p.hits as f64))
+                .set("misses", Json::Num(p.misses as f64))
+                .set("hit_rate", Json::Num(p.hit_rate()))
+                .set("elapsed_us", Json::Num(p.elapsed_us))
+                .set("estimates_per_sec", Json::Num(p.estimates_per_sec(cases)));
+            o
+        };
+        let mut classes = Vec::new();
+        for class_report in &self.classes {
+            let cases = class_report.results.len();
+            let (min, mean, max, total) = class_report.latency_summary();
+            let mut sources = Json::obj();
+            for r in &class_report.results {
+                let tag = r.cost.source.tag();
+                let prev = sources.get(tag).and_then(Json::as_f64).unwrap_or(0.0);
+                sources.set(tag, Json::Num(prev + 1.0));
+            }
+            let mut latency = Json::obj();
+            latency
+                .set("min_us", Json::Num(min))
+                .set("mean_us", Json::Num(mean))
+                .set("max_us", Json::Num(max))
+                .set("total_us", Json::Num(total));
+            let mut o = Json::obj();
+            o.set("class", Json::Str(class_report.class.name().to_string()))
+                .set("cases", Json::Num(cases as f64))
+                .set("cold", pass_json(&class_report.cold, cases))
+                .set("warm", pass_json(&class_report.warm, cases))
+                .set("warm_identical", Json::Bool(class_report.warm_identical))
+                .set("latency_us", latency)
+                .set("sources", sources);
+            if let Some(m) = &class_report.measured {
+                let mut mj = Json::obj();
+                mj.set("cases", Json::Num(m.cases as f64))
+                    .set("mare", Json::Num(m.mare));
+                o.set("measured", mj);
+            }
+            classes.push(o);
+        }
+        let total_cases: usize = self.classes.iter().map(|c| c.results.len()).sum();
+        let mut o = Json::obj();
+        o.set("device", Json::Str(self.device.clone()))
+            .set("grid", Json::Str(self.grid.name().to_string()))
+            .set("total_cases", Json::Num(total_cases as f64))
+            .set("classes", Json::Arr(classes));
+        o
+    }
+
+    /// Human-readable per-class summary table.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(&[
+            "class", "cases", "cold hit%", "warm hit%", "min µs", "mean µs", "max µs",
+            "cold est/s", "warm est/s", "bit-identical", "vs hw (MARE)",
+        ]);
+        for class_report in &self.classes {
+            let cases = class_report.results.len();
+            let (min, mean, max, _) = class_report.latency_summary();
+            table.row(&[
+                class_report.class.name().to_string(),
+                cases.to_string(),
+                format!("{:.1}", class_report.cold.hit_rate() * 100.0),
+                format!("{:.1}", class_report.warm.hit_rate() * 100.0),
+                format!("{min:.3}"),
+                format!("{mean:.3}"),
+                format!("{max:.3}"),
+                format!("{:.0}", class_report.cold.estimates_per_sec(cases)),
+                format!("{:.0}", class_report.warm.estimates_per_sec(cases)),
+                if class_report.warm_identical { "yes" } else { "NO" }.to_string(),
+                match &class_report.measured {
+                    Some(m) => format!("{:.1}%", m.mare * 100.0),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        format!(
+            "sweep: device={} grid={}\n{}",
+            self.device,
+            self.grid.name(),
+            table.markdown()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_list_accepts_all_and_rejects_unknown() {
+        assert_eq!(SweepOpClass::parse_list("all").unwrap().len(), 7);
+        let picked = SweepOpClass::parse_list("matmul,conv").unwrap();
+        assert_eq!(picked, vec![SweepOpClass::Matmul, SweepOpClass::Conv]);
+        let err = SweepOpClass::parse_list("matmul,bogus").unwrap_err();
+        assert!(err.to_string().contains("unknown op class 'bogus'"));
+        assert!(err.to_string().contains("matmul"));
+    }
+
+    #[test]
+    fn grid_parse_round_trips() {
+        assert_eq!(GridSize::parse("small").unwrap(), GridSize::Small);
+        assert_eq!(GridSize::parse("paper").unwrap(), GridSize::Paper);
+        assert!(GridSize::parse("huge").is_err());
+    }
+
+    #[test]
+    fn small_sweep_is_deterministic_and_warm_identical() {
+        let spec = DeviceSpec::tpu_v4();
+        let est_a = sweep_estimator(&spec);
+        let est_b = sweep_estimator(&spec);
+        let a = run_sweep(&est_a, &SweepOpClass::ALL, GridSize::Small);
+        let b = run_sweep(&est_b, &SweepOpClass::ALL, GridSize::Small);
+        assert_eq!(a.to_csv(), b.to_csv());
+        for class_report in &a.classes {
+            assert!(
+                class_report.warm_identical,
+                "{:?} warm pass diverged",
+                class_report.class
+            );
+            assert_eq!(class_report.warm.misses, 0, "warm pass missed the cache");
+        }
+    }
+
+    #[test]
+    fn cold_pass_misses_once_per_unique_systolic_shape() {
+        let spec = DeviceSpec::tpu_v4();
+        let est = sweep_estimator(&spec);
+        let report = run_sweep(&est, &[SweepOpClass::Matmul], GridSize::Small);
+        let class_report = &report.classes[0];
+        let cases = class_report.results.len() as u64;
+        assert_eq!(class_report.cold.misses, cases, "small matmul grid is dedup-free");
+        assert_eq!(class_report.cold.hits, 0);
+        assert_eq!(class_report.warm.hits, cases);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_case_and_stable_header() {
+        let spec = DeviceSpec::tpu_v4();
+        let est = sweep_estimator(&spec);
+        let report = run_sweep(
+            &est,
+            &[SweepOpClass::Matmul, SweepOpClass::Pooling],
+            GridSize::Small,
+        );
+        let csv = report.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "class,op,shape,dtype,bytes,source,cycles,latency_us"
+        );
+        let expected: usize = report.classes.iter().map(|c| c.results.len()).sum();
+        assert_eq!(lines.count(), expected);
+    }
+
+    #[test]
+    fn json_report_carries_hit_rates_and_sources() {
+        let spec = DeviceSpec::tpu_v4();
+        let est = sweep_estimator(&spec);
+        let report = run_sweep(&est, &[SweepOpClass::Elementwise], GridSize::Small);
+        let json = report.to_json();
+        assert_eq!(json.get("grid").and_then(Json::as_str), Some("small"));
+        let classes = json.get("classes").and_then(Json::as_arr).unwrap();
+        assert_eq!(classes.len(), 1);
+        let c = &classes[0];
+        assert_eq!(c.get("class").and_then(Json::as_str), Some("elementwise"));
+        assert_eq!(
+            c.get("warm").and_then(|w| w.get("hit_rate")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // No learned models in the sweep estimator: everything falls back.
+        assert!(c
+            .get("sources")
+            .and_then(|s| s.get("fallback"))
+            .and_then(Json::as_f64)
+            .is_some());
+    }
+
+    #[test]
+    fn measured_stats_cover_systolic_classes() {
+        let spec = DeviceSpec::tpu_v4();
+        let est = sweep_estimator(&spec);
+        let mut report = run_sweep(
+            &est,
+            &[SweepOpClass::Matmul, SweepOpClass::Elementwise],
+            GridSize::Small,
+        );
+        let mut hw = crate::tpu::TpuV4Model::for_device(&spec, 7);
+        attach_measurements(&mut report, &mut hw, 3);
+        assert!(report.classes[0].measured.is_some(), "matmul gets measured");
+        assert!(report.classes[1].measured.is_none(), "elementwise does not");
+        let m = report.classes[0].measured.unwrap();
+        assert_eq!(m.cases, report.classes[0].results.len());
+        assert!(m.mare.is_finite());
+    }
+}

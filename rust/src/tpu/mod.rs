@@ -17,5 +17,5 @@ pub mod vpu;
 
 pub use model::{MxuParams, TpuV4Model};
 pub use pjrt_hw::PjrtHardware;
-pub use traits::{measure_ew_median, measure_gemm_median, Hardware};
+pub use traits::{measure_ew_median, measure_gemm_batch_median, measure_gemm_median, Hardware};
 pub use vpu::VpuParams;

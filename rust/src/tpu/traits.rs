@@ -33,6 +33,27 @@ pub fn measure_gemm_median(hw: &mut dyn Hardware, gemm: GemmShape, reps: usize) 
     stats::median(&times)
 }
 
+/// Median-of-N measurement over a whole batch of GEMMs, one result per
+/// input shape in input order. Interleaves the repetitions across the
+/// batch (shape 0 rep 0, shape 1 rep 0, ..., shape 0 rep 1, ...) so
+/// slow drift in the backend spreads evenly over every shape instead of
+/// biasing the later ones — the batched counterpart of
+/// [`measure_gemm_median`], used by the `sweep --measure` harness.
+pub fn measure_gemm_batch_median(
+    hw: &mut dyn Hardware,
+    gemms: &[GemmShape],
+    reps: usize,
+) -> Vec<f64> {
+    let reps = reps.max(1);
+    let mut samples: Vec<Vec<f64>> = vec![Vec::with_capacity(reps); gemms.len()];
+    for _ in 0..reps {
+        for (i, &gemm) in gemms.iter().enumerate() {
+            samples[i].push(hw.gemm_latency_us(gemm));
+        }
+    }
+    samples.iter().map(|times| stats::median(times)).collect()
+}
+
 /// Median-of-N elementwise measurement.
 pub fn measure_ew_median(
     hw: &mut dyn Hardware,
@@ -66,6 +87,36 @@ mod tests {
         }
         fn elementwise_latency_us(&mut self, _k: EwKind, _d: &[usize]) -> f64 {
             self.gemm_latency_us(GemmShape::new(1, 1, 1))
+        }
+    }
+
+    #[test]
+    fn batch_median_matches_per_shape_median() {
+        // Deterministic backend: latency is a pure function of the shape,
+        // so the interleaved batch median must equal the scalar median.
+        struct Pure;
+        impl Hardware for Pure {
+            fn name(&self) -> &str {
+                "pure"
+            }
+            fn gemm_latency_us(&mut self, g: GemmShape) -> f64 {
+                (g.m * g.k * g.n) as f64 * 1e-6
+            }
+            fn elementwise_latency_us(&mut self, _k: EwKind, _d: &[usize]) -> f64 {
+                0.0
+            }
+        }
+        let gemms = vec![
+            GemmShape::new(8, 8, 8),
+            GemmShape::new(16, 4, 32),
+            GemmShape::new(2, 128, 2),
+        ];
+        let mut hw = Pure;
+        let batch = measure_gemm_batch_median(&mut hw, &gemms, 3);
+        assert_eq!(batch.len(), gemms.len());
+        for (b, &g) in batch.iter().zip(&gemms) {
+            let scalar = measure_gemm_median(&mut hw, g, 3);
+            assert!((b - scalar).abs() < 1e-12);
         }
     }
 

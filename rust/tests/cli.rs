@@ -554,6 +554,88 @@ fn compare_runs_one_module_against_several_devices() {
 }
 
 #[test]
+fn sweep_golden_csv_matches_the_checked_in_fixture() {
+    // The golden satellite: the tpu-v4 small-grid sweep is a pure
+    // function of the device spec and grid, so its CSV must regenerate
+    // byte-identically. The fixture is produced by the independent
+    // Python replica tests/fixtures/gen_sweep_golden.py — regenerate
+    // both together on an intentional model change.
+    let (stdout, stderr, ok) = run(&["sweep", "--device", "tpu-v4", "--grid", "small", "--csv"]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert_eq!(
+        stdout,
+        include_str!("fixtures/sweep_small_tpu-v4.csv"),
+        "sweep CSV drifted from the golden fixture"
+    );
+}
+
+#[test]
+fn sweep_json_reports_every_class_warm_identical() {
+    use scalesim_tpu::util::json::Json;
+
+    let (stdout, _, ok) = run(&["sweep", "--device", "tpu-v5p", "--grid", "small", "--json"]);
+    assert!(ok, "{stdout}");
+    let j = Json::parse(stdout.trim()).expect("one JSON object on stdout");
+    assert_eq!(j.req_str("device").unwrap(), "tpu-v5p");
+    assert_eq!(j.req_str("grid").unwrap(), "small");
+    assert!(j.req_f64("total_cases").unwrap() > 0.0);
+    let classes = j.req_arr("classes").unwrap();
+    assert_eq!(classes.len(), 7, "expected every op class by default");
+    for c in classes {
+        let name = c.req_str("class").unwrap();
+        assert_eq!(
+            c.get("warm_identical").and_then(Json::as_bool),
+            Some(true),
+            "{name}: warm pass diverged from cold"
+        );
+        let warm = c.get("warm").expect("warm pass stats");
+        assert_eq!(warm.req_f64("misses").unwrap(), 0.0, "{name}: warm misses");
+    }
+
+    // --ops restricts the sweep to the named classes, in order.
+    let (stdout, _, ok) = run(&[
+        "sweep", "--device", "tpu-v4", "--grid", "small", "--ops", "conv,matmul", "--json",
+    ]);
+    assert!(ok, "{stdout}");
+    let j = Json::parse(stdout.trim()).unwrap();
+    let classes = j.req_arr("classes").unwrap();
+    assert_eq!(classes.len(), 2);
+    assert_eq!(classes[0].req_str("class").unwrap(), "conv");
+    assert_eq!(classes[1].req_str("class").unwrap(), "matmul");
+}
+
+#[test]
+fn sweep_default_render_is_the_summary_table() {
+    let (stdout, _, ok) = run(&["sweep", "--device", "tpu-v4", "--grid", "small"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("sweep: device=tpu-v4 grid=small"), "{stdout}");
+    for needle in ["matmul", "data-movement", "bit-identical", "warm est/s"] {
+        assert!(stdout.contains(needle), "missing '{needle}' in: {stdout}");
+    }
+}
+
+#[test]
+fn sweep_rejects_bad_flags_cleanly() {
+    // Unknown op class: named, and the known ones listed.
+    let (_, stderr, ok) = run(&["sweep", "--device", "tpu-v4", "--ops", "matmul,frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown op class 'frobnicate'"), "{stderr}");
+    assert!(stderr.contains("pooling"), "should list known classes: {stderr}");
+    // An --ops list that selects nothing is an error, not an empty sweep.
+    let (_, stderr, ok) = run(&["sweep", "--device", "tpu-v4", "--ops", ", ,"]);
+    assert!(!ok);
+    assert!(stderr.contains("selected no op classes"), "{stderr}");
+    // Malformed --grid.
+    let (_, stderr, ok) = run(&["sweep", "--device", "tpu-v4", "--grid", "enormous"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown grid 'enormous'"), "{stderr}");
+    // Conflicting device selectors, same rule as simulate.
+    let (_, stderr, ok) = run(&["sweep", "--device", "tpu-v4", "--device-file", "x.toml"]);
+    assert!(!ok);
+    assert!(stderr.contains("mutually exclusive"), "{stderr}");
+}
+
+#[test]
 fn unknown_subcommand_fails_cleanly() {
     let (_, stderr, ok) = run(&["frobnicate"]);
     assert!(!ok);

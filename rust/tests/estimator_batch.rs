@@ -1,0 +1,200 @@
+//! Property tests: the batched estimator core is bit-identical to the
+//! scalar per-op walk — every device preset × every `.mlir` fixture,
+//! cache-cold and cache-warm, row fields, totals and hit/miss counters
+//! all compared exactly (the tentpole invariant of
+//! `coordinator::batch`).
+
+use scalesim_tpu::coordinator::{Estimator, ModelEstimate};
+use scalesim_tpu::device::DeviceSpec;
+use scalesim_tpu::experiments::assets;
+use scalesim_tpu::frontend::{parse_module, ModuleInfo};
+use scalesim_tpu::sweep::sweep_estimator;
+use scalesim_tpu::tpu::TpuV4Model;
+
+const FIXTURES: [(&str, &str); 4] = [
+    ("bert_layer", include_str!("fixtures/bert_layer.mlir")),
+    ("collectives", include_str!("fixtures/collectives.mlir")),
+    ("sharded_mlp", include_str!("fixtures/sharded_mlp.mlir")),
+    ("while_loop", include_str!("fixtures/while_loop.stablehlo.txt")),
+];
+
+fn fixtures() -> Vec<(&'static str, ModuleInfo)> {
+    FIXTURES
+        .iter()
+        .map(|(name, text)| (*name, parse_module(text).expect(name)))
+        .collect()
+}
+
+/// Every field of every row, plus the totals, compared bit-exactly.
+fn assert_identical(a: &ModelEstimate, b: &ModelEstimate, ctx: &str) {
+    assert_eq!(a.module_name, b.module_name, "{ctx}: module name");
+    assert_eq!(a.ops.len(), b.ops.len(), "{ctx}: row count");
+    for (x, y) in a.ops.iter().zip(&b.ops) {
+        assert_eq!(x.index, y.index, "{ctx}: row index");
+        assert_eq!(x.op_name, y.op_name, "{ctx}: op name at {}", x.index);
+        assert_eq!(x.source, y.source, "{ctx}: source for {}", x.op_name);
+        assert_eq!(x.cycles, y.cycles, "{ctx}: cycles for {}", x.op_name);
+        assert_eq!(
+            x.latency_us.to_bits(),
+            y.latency_us.to_bits(),
+            "{ctx}: latency for {} ({} vs {})",
+            x.op_name,
+            x.latency_us,
+            y.latency_us
+        );
+        assert_eq!(x.note, y.note, "{ctx}: note for {}", x.op_name);
+    }
+    assert_eq!(
+        a.total_us.to_bits(),
+        b.total_us.to_bits(),
+        "{ctx}: total ({} vs {})",
+        a.total_us,
+        b.total_us
+    );
+    assert_eq!(a.systolic_us.to_bits(), b.systolic_us.to_bits(), "{ctx}: systolic");
+    assert_eq!(
+        a.elementwise_us.to_bits(),
+        b.elementwise_us.to_bits(),
+        "{ctx}: elementwise"
+    );
+    assert_eq!(a.other_us.to_bits(), b.other_us.to_bits(), "{ctx}: other");
+    assert_eq!(a.covered_ops, b.covered_ops, "{ctx}: covered ops");
+    assert_eq!(a.total_costed_ops, b.total_costed_ops, "{ctx}: costed ops");
+}
+
+fn counters(est: &Estimator) -> (u64, u64) {
+    let s = est.cache.stats();
+    (s.hits, s.misses)
+}
+
+/// The tentpole property: for every preset and fixture, the batched
+/// `estimate_module` and the scalar reference walk agree bit for bit —
+/// cold (first touch) and warm (cache primed) — and their hit/miss
+/// counters match exactly at both points.
+#[test]
+fn batched_matches_scalar_on_every_preset_and_fixture() {
+    for spec in DeviceSpec::presets() {
+        for (name, module) in &fixtures() {
+            let scalar_est = sweep_estimator(&spec);
+            let batched_est = sweep_estimator(&spec);
+
+            let cold_scalar = scalar_est.estimate_module_scalar(module);
+            let cold_batched = batched_est.estimate_module(module);
+            assert_identical(
+                &cold_scalar,
+                &cold_batched,
+                &format!("{}/{name} cold", spec.name),
+            );
+            assert_eq!(
+                counters(&scalar_est),
+                counters(&batched_est),
+                "{}/{name}: cold hit/miss counters",
+                spec.name
+            );
+
+            let warm_scalar = scalar_est.estimate_module_scalar(module);
+            let warm_batched = batched_est.estimate_module(module);
+            assert_identical(
+                &warm_scalar,
+                &warm_batched,
+                &format!("{}/{name} warm", spec.name),
+            );
+            assert_identical(
+                &cold_batched,
+                &warm_batched,
+                &format!("{}/{name} cold-vs-warm", spec.name),
+            );
+            assert_eq!(
+                counters(&scalar_est),
+                counters(&batched_est),
+                "{}/{name}: warm hit/miss counters",
+                spec.name
+            );
+        }
+    }
+}
+
+/// With memoisation disabled the batched core must still reproduce the
+/// scalar walk exactly (no cache to launder differences through).
+#[test]
+fn batched_matches_scalar_with_cache_disabled() {
+    for spec in DeviceSpec::presets() {
+        for (name, module) in &fixtures() {
+            let scalar_est = sweep_estimator(&spec);
+            let batched_est = sweep_estimator(&spec);
+            scalar_est.cache.set_enabled(false);
+            batched_est.cache.set_enabled(false);
+            for round in 0..2 {
+                let a = scalar_est.estimate_module_scalar(module);
+                let b = batched_est.estimate_module(module);
+                assert_identical(&a, &b, &format!("{}/{name} uncached r{round}", spec.name));
+            }
+            assert_eq!(
+                counters(&batched_est),
+                (0, 0),
+                "{}/{name}: disabled cache must count nothing",
+                spec.name
+            );
+        }
+    }
+}
+
+/// Lower once, estimate many times: the pre-lowered table path must
+/// match fresh per-call lowering on a second estimator, counters
+/// included.
+#[test]
+fn pre_lowered_table_reuse_is_bit_identical() {
+    let spec = DeviceSpec::tpu_v4();
+    for (name, module) in &fixtures() {
+        let table_est = sweep_estimator(&spec);
+        let fresh_est = sweep_estimator(&spec);
+        let table = table_est.lower_module(module);
+        for round in 0..3 {
+            let a = table_est.estimate_table(&table);
+            let b = fresh_est.estimate_module(module);
+            assert_identical(&a, &b, &format!("{name} table r{round}"));
+        }
+        assert_eq!(
+            counters(&table_est),
+            counters(&fresh_est),
+            "{name}: table-reuse counters"
+        );
+    }
+}
+
+/// The learned-model batch path (grouped featurize + compiled HGBR
+/// `predict_many`) agrees with the scalar walk: two estimators built
+/// from identically-seeded synthetic hardware, scalar vs batched, cold
+/// and warm. Exercises the Learned/LearnedProxy arms the synthetic
+/// sweep estimator (no learned models) cannot reach.
+#[test]
+fn batched_matches_scalar_with_learned_models() {
+    let spec = DeviceSpec::tpu_v4();
+    let build = || {
+        let mut hw = TpuV4Model::for_device(&spec, 11);
+        assets::build_estimator(&mut hw, &spec, 40, 1, 11)
+    };
+    let scalar_est = build();
+    let batched_est = build();
+    for (name, module) in &fixtures() {
+        for round in 0..2 {
+            let a = scalar_est.estimate_module_scalar(module);
+            let b = batched_est.estimate_module(module);
+            assert_identical(&a, &b, &format!("learned/{name} r{round}"));
+        }
+    }
+    assert_eq!(
+        counters(&scalar_est),
+        counters(&batched_est),
+        "learned-path hit/miss counters"
+    );
+    // The fixtures contain add/multiply ops, so the learned arm really ran.
+    let report = batched_est.estimate_module(&fixtures()[0].1);
+    assert!(
+        report
+            .ops
+            .iter()
+            .any(|o| o.source == scalesim_tpu::coordinator::EstimateSource::Learned),
+        "expected at least one learned-model estimate in bert_layer"
+    );
+}

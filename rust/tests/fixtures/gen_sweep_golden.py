@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Bit-exact replica of `scalesim-tpu sweep --device tpu-v4 --grid small --csv`.
+
+Regenerates tests/fixtures/sweep_small_tpu-v4.csv. The Rust CLI must
+reproduce this file byte for byte (tests/cli.rs::sweep_golden_csv_matches
+asserts it); if the sweep grids, the simulate_gemm arithmetic, or the
+tpu-v4 preset change intentionally, re-run this script and commit the
+fixture together with the change.
+
+Replicated arithmetic (all IEEE-754 double, matching the Rust ops 1:1):
+  * compute_model + memory_model for the tpu-v4 WS 128x128 config
+    (src/scalesim/dataflow.rs, memory.rs),
+  * the synthetic sweep calibration latency = 1e-3 * cycles
+    (src/sweep/mod.rs::sweep_estimator),
+  * bandwidth_us(bytes) = 0.5 + bytes / (1200.0 * 1e3)
+    (src/coordinator/estimator.rs).
+"""
+
+import math
+import os
+
+SR, SC = 128, 128            # tpu-v4 MXU array
+IF_BW, FL_BW, OF_BW = 256.0, 256.0, 128.0
+HBM_BYTES_PER_US = 1200.0 * 1e3
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def ws_fold_classes(k, n):
+    """SCALE-Sim WS fold decomposition: rows=K, cols=N."""
+    rf, cf = ceil_div(k, SR), ceil_div(n, SC)
+    last_r = k - (rf - 1) * SR
+    last_c = n - (cf - 1) * SC
+    classes = []
+    if (rf - 1) * (cf - 1) > 0:
+        classes.append(((SR, SC), (rf - 1) * (cf - 1)))
+    if cf - 1 > 0:
+        classes.append(((last_r, SC), cf - 1))
+    if rf - 1 > 0:
+        classes.append(((SR, last_c), rf - 1))
+    classes.append(((last_r, last_c), 1))
+    return classes
+
+
+def simulate_ws(m, k, n):
+    """total_cycles of simulate_gemm under the tpu-v4 WS config."""
+    compute = 0
+    stall = 0
+    initial = 0
+    first = True
+    for (r, c), count in ws_fold_classes(k, n):
+        t_compute = r + (r + c + m - 2)  # load + stream
+        compute += t_compute * count
+        if_w, fl_w, of_w = m * r, r * c, m * c
+        t_read = max(math.ceil(if_w / IF_BW), math.ceil(fl_w / FL_BW))
+        t_write = math.ceil(of_w / OF_BW)
+        remaining = count
+        if first:
+            initial = t_read
+            first = False
+            remaining -= 1
+        stall += max(0, max(t_read, t_write) - t_compute) * remaining
+    return initial + compute + stall
+
+
+def bandwidth_us(nbytes):
+    return 0.5 + nbytes / HBM_BYTES_PER_US
+
+
+def fmt(x):
+    return f"{x:.6f}"
+
+
+DTYPE_BYTES = {"bf16": 2, "f32": 4}
+
+
+def rows():
+    out = []
+
+    def systolic(cls, op, shape, m, k, n):
+        cycles = simulate_ws(m, k, n)
+        nbytes = (m * k + k * n + m * n) * 2
+        out.append((cls, op, shape, "bf16", nbytes, "systolic", str(cycles),
+                    fmt(1e-3 * cycles)))
+
+    def bandwidth_row(cls, op, shape, dtype, nbytes, source):
+        out.append((cls, op, shape, dtype, nbytes, source, "",
+                    fmt(bandwidth_us(nbytes))))
+
+    # matmul (grid.rs::matmul_cases, Small)
+    for m, k, n in [(64, 64, 64), (128, 128, 128), (256, 256, 256),
+                    (512, 512, 512), (128, 1024, 128), (1024, 128, 1024)]:
+        systolic("matmul", "dot_general", f"{m}x{k}x{n}", m, k, n)
+
+    # conv (grid.rs::conv_cases, Small): im2col M=out_h*out_w,
+    # K=fh*fw*channels, N=num_filters.
+    for ih, iw, fh, fw, c, nf, s in [(32, 32, 3, 3, 16, 32, 1),
+                                     (28, 28, 5, 5, 8, 16, 2)]:
+        oh = (ih - fh) // s + 1
+        ow = (iw - fw) // s + 1
+        systolic("conv", "convolution", f"{ih}x{iw}x{c}/{fh}x{fw}/f{nf}/s{s}",
+                 oh * ow, fh * fw * c, nf)
+
+    # elementwise: no learned models in the sweep estimator -> fallback,
+    # charged 3x the output footprint.
+    for op in ["add", "multiply", "maximum"]:
+        for dims in [[1024], [128, 128], [64, 512]]:
+            elems = math.prod(dims)
+            shape = "x".join(str(d) for d in dims)
+            bandwidth_row("elementwise", op, shape, "bf16", elems * 2 * 3,
+                          "fallback")
+
+    # activation (same fallback model)
+    for op in ["exponential", "tanh", "logistic"]:
+        for dims in [[128, 128], [32, 1024]]:
+            elems = math.prod(dims)
+            shape = "x".join(str(d) for d in dims)
+            bandwidth_row("activation", op, shape, "bf16", elems * 2 * 3,
+                          "fallback")
+
+    # normalization: reduction charged input + output bytes.
+    for ind, outd in [([128, 1024], [128]), ([256, 256], [256])]:
+        nbytes = (math.prod(ind) + math.prod(outd)) * 4
+        shape = "x".join(map(str, ind)) + "->" + "x".join(map(str, outd))
+        bandwidth_row("normalization", "reduce", shape, "f32", nbytes,
+                      "bandwidth")
+
+    # pooling: reduce_window over [c, h, w] -> [c, h/2, w/2], bf16.
+    for c, h, w in [(32, 56, 56), (64, 28, 28)]:
+        nbytes = (c * h * w + c * (h // 2) * (w // 2)) * 2
+        shape = f"{c}x{h}x{w}->{c}x{h // 2}x{w // 2}"
+        bandwidth_row("pooling", "reduce_window", shape, "bf16", nbytes,
+                      "bandwidth")
+
+    # data-movement: read + write of the moved footprint.
+    for op, dims, dtype in [("transpose", [1024, 1024], "f32"),
+                            ("reshape", [8, 4096], "bf16")]:
+        nbytes = math.prod(dims) * DTYPE_BYTES[dtype] * 2
+        shape = "x".join(str(d) for d in dims)
+        bandwidth_row("data-movement", op, shape, dtype, nbytes, "bandwidth")
+
+    return out
+
+
+def main():
+    lines = ["class,op,shape,dtype,bytes,source,cycles,latency_us"]
+    for r in rows():
+        lines.append(",".join(str(f) for f in r))
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "sweep_small_tpu-v4.csv")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path} ({len(lines) - 1} rows)")
+
+
+if __name__ == "__main__":
+    main()

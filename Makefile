@@ -6,9 +6,12 @@
 #                    (--json, --timeline, --chips N distributed slices,
 #                    --memory for the DMA/residency timeline + roofline)
 #   calibrate        build + save modeling assets
-#   serve            streaming JSONL estimation service (sharded cache)
+#   serve            streaming JSONL estimation service (sharded cache;
+#                    --listen for the concurrent TCP front end,
+#                    --cache-snapshot for warm restarts)
+#   bench-serve      closed-loop load generator for the TCP service
 
-.PHONY: build test bench bench-schedule bench-devices bench-estimator devices artifacts fmt clippy doc check
+.PHONY: build test bench bench-schedule bench-devices bench-estimator bench-serve devices artifacts fmt clippy doc check
 
 build:
 	cargo build --release
@@ -38,6 +41,13 @@ bench-devices:
 bench-estimator:
 	cargo bench --bench estimator_batch
 
+# Concurrent-serve throughput/latency: 16 closed-loop clients against an
+# in-process TCP server; publishes BENCH_serve.json at the repo root
+# (CI verifies freshness with `bench-serve --check`). EXPERIMENTS.md
+# §Perf Serve records the headline numbers.
+bench-serve: build
+	cargo run --release -- bench-serve --clients 16 --requests 2000 --publish
+
 # Round-trip every checked-in device file through the loader, verify the
 # preset-named ones match the registry, and smoke the compare path
 # against all presets (the CI device job).
@@ -58,8 +68,10 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
-# The CI gate: format, lints, docs and the full test suite.
+# The CI gate: format, lints, docs, the full test suite, and the
+# published serve-bench freshness gate.
 check: fmt clippy doc test
+	cargo run --release -- bench-serve --check
 
 # AOT-compile the JAX/Pallas workloads into artifacts/ (requires jax).
 # Rust tests that consume artifacts self-skip when this has not run.

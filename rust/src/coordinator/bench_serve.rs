@@ -1,0 +1,374 @@
+//! `bench-serve`: a self-contained load generator for the TCP service.
+//!
+//! Spawns N closed-loop client connections (each sends a request, waits
+//! for its response, repeats) against either an in-process
+//! [`NetServer`](super::net::NetServer) or a remote `--addr`, and
+//! reports sustained throughput plus p50/p95/p99 tail latency. The
+//! request mix cycles through a fixed set of distinct GEMM shapes and a
+//! warm-up pass primes the shared shape cache first, so the measured
+//! regime is the one the service is built for: warm-cache hits under
+//! real connection concurrency.
+//!
+//! `--publish` writes `BENCH_serve.json` at the repo root with an FNV-1a
+//! fingerprint of this source file; `--check` re-reads it and fails when
+//! it is missing or stale against the source — the same freshness-gate
+//! idiom as `BENCH_estimator.json` (`benches/estimator_batch.rs`), wired
+//! into `make check`. The serve perf trajectory is tracked across PRs in
+//! EXPERIMENTS.md §Perf bench-serve.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::DeviceSpec;
+use crate::sweep::sweep_estimator;
+use crate::util::json::Json;
+
+use super::net::{NetOptions, NetServer};
+use super::pool::default_workers;
+
+const SOURCE: &str = include_str!("bench_serve.rs");
+
+/// Distinct GEMM shapes the clients cycle through (kept small so the
+/// timed phase runs warm; the warm-up pass touches each one first).
+const SHAPE_DIMS: [usize; 8] = [64, 96, 128, 160, 192, 224, 256, 320];
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of this source file, stamped into `BENCH_serve.json`.
+pub fn source_fingerprint() -> String {
+    format!("{:016x}", fnv1a(SOURCE.as_bytes()))
+}
+
+/// `BENCH_serve.json` at the repo root.
+pub fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json")
+}
+
+/// Knobs for [`run_bench`].
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests sent per client (timed phase).
+    pub requests: usize,
+    /// Optional paced offered load, requests/sec across all clients;
+    /// `None` runs closed-loop flat out.
+    pub rps: Option<f64>,
+    /// Remote server to target; `None` spins an in-process server up.
+    pub addr: Option<String>,
+    /// Worker threads for the in-process server.
+    pub workers: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> BenchOptions {
+        BenchOptions {
+            clients: 16,
+            requests: 500,
+            rps: None,
+            addr: None,
+            workers: default_workers(),
+        }
+    }
+}
+
+/// What one bench run measured.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests per client in the timed phase.
+    pub requests_per_client: usize,
+    /// Total timed requests (`clients * requests_per_client`).
+    pub total_requests: u64,
+    /// Error responses observed (must be 0 on a healthy run).
+    pub errors: u64,
+    /// Timed-phase wall clock, seconds.
+    pub elapsed_s: f64,
+    /// Sustained throughput, requests/sec.
+    pub throughput_rps: f64,
+    /// Median request latency, µs.
+    pub p50_us: f64,
+    /// 95th-percentile request latency, µs.
+    pub p95_us: f64,
+    /// 99th-percentile request latency, µs.
+    pub p99_us: f64,
+    /// Shape-cache hit rate over the whole run (in-process server only).
+    pub cache_hit_rate: Option<f64>,
+    /// Paced offered load, if any.
+    pub rps_target: Option<f64>,
+}
+
+impl BenchReport {
+    /// Human-readable summary lines.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "bench-serve: {} clients x {} requests -> {:.0} req/s \
+             (p50 {:.1} us, p95 {:.1} us, p99 {:.1} us; {} errors; {:.2}s)",
+            self.clients,
+            self.requests_per_client,
+            self.throughput_rps,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.errors,
+            self.elapsed_s,
+        );
+        if let Some(hr) = self.cache_hit_rate {
+            s.push_str(&format!("; cache hit rate {:.1}%", hr * 100.0));
+        }
+        if let Some(r) = self.rps_target {
+            s.push_str(&format!("; paced at {r:.0} req/s offered"));
+        }
+        s
+    }
+
+    /// The `BENCH_serve.json` payload.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("bench", Json::Str("serve".into()))
+            .set("clients", Json::Num(self.clients as f64))
+            .set("requests_per_client", Json::Num(self.requests_per_client as f64))
+            .set("total_requests", Json::Num(self.total_requests as f64))
+            .set("errors", Json::Num(self.errors as f64))
+            .set("elapsed_s", Json::Num(self.elapsed_s))
+            .set("throughput_rps", Json::Num(self.throughput_rps))
+            .set("p50_us", Json::Num(self.p50_us))
+            .set("p95_us", Json::Num(self.p95_us))
+            .set("p99_us", Json::Num(self.p99_us))
+            .set("source_fingerprint", Json::Str(source_fingerprint()));
+        if let Some(hr) = self.cache_hit_rate {
+            o.set("cache_hit_rate", Json::Num(hr));
+        }
+        if let Some(r) = self.rps_target {
+            o.set("rps_target", Json::Num(r));
+        }
+        o
+    }
+
+    /// Write `BENCH_serve.json` at the repo root.
+    pub fn publish(&self) -> Result<()> {
+        let path = bench_json_path();
+        std::fs::write(&path, format!("{}\n", self.to_json().dump()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// The request line for the i-th send of any client (cycles the shape
+/// set so the timed phase is all warm hits after the warm-up pass).
+fn request_line(i: usize) -> String {
+    let d = SHAPE_DIMS[i % SHAPE_DIMS.len()];
+    format!(r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#)
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice, `q` in [0, 1].
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One client's closed loop: send `requests` lines, awaiting each
+/// response before the next send; returns per-request latencies (µs)
+/// and the number of error responses.
+fn client_loop(
+    addr: &str,
+    requests: usize,
+    pace: Option<Duration>,
+) -> Result<(Vec<f64>, u64)> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream);
+    let mut latencies = Vec::with_capacity(requests);
+    let mut errors = 0u64;
+    let mut line = String::new();
+    let started = Instant::now();
+    for i in 0..requests {
+        if let Some(interval) = pace {
+            // Paced mode: hold each send to its schedule slot (send k
+            // happens no earlier than k * interval after the start).
+            let due = interval * i as u32;
+            let now = started.elapsed();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let t0 = Instant::now();
+        writeln!(writer, "{}", request_line(i))?;
+        writer.flush()?;
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection after {i} responses");
+        }
+        latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+        if !line.contains("\"ok\":true") {
+            errors += 1;
+        }
+    }
+    Ok((latencies, errors))
+}
+
+/// Run the load generator per `opts` and return the measurements.
+///
+/// Without `opts.addr` an in-process [`NetServer`] (sweep-calibrated
+/// tpu-v4, so runs are self-contained and deterministic in shape) is
+/// started on a loopback port and drained afterwards; its cache hit
+/// rate rides along in the report.
+pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
+    if opts.clients == 0 || opts.requests == 0 {
+        bail!("bench-serve needs at least one client and one request");
+    }
+    // In-process server (unless a remote --addr was given).
+    let mut server_thread = None;
+    let mut shutdown = None;
+    let addr = match &opts.addr {
+        Some(a) => a.clone(),
+        None => {
+            let est = Arc::new(sweep_estimator(&DeviceSpec::tpu_v4()));
+            let server = NetServer::bind(
+                "127.0.0.1:0",
+                est,
+                NetOptions {
+                    workers: opts.workers,
+                    ..NetOptions::default()
+                },
+            )?;
+            let addr = server.local_addr()?.to_string();
+            shutdown = Some(server.shutdown_handle());
+            server_thread = Some(std::thread::spawn(move || server.run()));
+            addr
+        }
+    };
+
+    // Warm-up: touch every distinct shape once so the timed phase
+    // measures the warm regime (untimed).
+    let (_lat, warm_errors) = client_loop(&addr, SHAPE_DIMS.len(), None)?;
+    if warm_errors > 0 {
+        bail!("{warm_errors} error responses during warm-up");
+    }
+
+    // Timed phase: N concurrent closed-loop clients.
+    let pace = opts.rps.map(|r| {
+        // Offered load is split evenly: each client paces at rps/clients.
+        Duration::from_secs_f64(opts.clients as f64 / r.max(1e-9))
+    });
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..opts.clients)
+        .map(|_| {
+            let addr = addr.clone();
+            let requests = opts.requests;
+            std::thread::spawn(move || client_loop(&addr, requests, pace))
+        })
+        .collect();
+    let mut latencies: Vec<f64> = Vec::with_capacity(opts.clients * opts.requests);
+    let mut errors = 0u64;
+    for t in threads {
+        let (lat, err) = t.join().expect("bench client panicked")?;
+        latencies.extend(lat);
+        errors += err;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    // Drain the in-process server and pull its cache stats.
+    let mut cache_hit_rate = None;
+    if let (Some(handle), Some(thread)) = (shutdown, server_thread) {
+        handle.shutdown();
+        let summary = thread.join().expect("server thread panicked")?;
+        cache_hit_rate = Some(summary.stream.cache.hit_rate());
+    }
+
+    latencies.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let total_requests = latencies.len() as u64;
+    Ok(BenchReport {
+        clients: opts.clients,
+        requests_per_client: opts.requests,
+        total_requests,
+        errors,
+        elapsed_s,
+        throughput_rps: total_requests as f64 / elapsed_s.max(1e-12),
+        p50_us: percentile(&latencies, 0.50),
+        p95_us: percentile(&latencies, 0.95),
+        p99_us: percentile(&latencies, 0.99),
+        cache_hit_rate,
+        rps_target: opts.rps,
+    })
+}
+
+/// `--check`: the published numbers must exist and match this source.
+pub fn check_published() -> Result<()> {
+    let path = bench_json_path();
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "BENCH_serve.json missing at {}; run `make bench-serve`",
+            path.display()
+        )
+    })?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("BENCH_serve.json: {e}"))?;
+    let published = json
+        .get("source_fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("BENCH_serve.json lacks source_fingerprint"))?;
+    let current = source_fingerprint();
+    if published != current {
+        bail!(
+            "BENCH_serve.json is stale: published fingerprint {published} != bench source \
+             {current}; re-run `make bench-serve` and commit the result"
+        );
+    }
+    println!(
+        "BENCH_serve.json is fresh (source fingerprint {current}, throughput_rps {:.0})",
+        json.get("throughput_rps").and_then(Json::as_f64).unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.5), 51.0); // round((100-1)*0.5)=50 -> v[50]
+        assert!(percentile(&[], 0.5) == 0.0);
+    }
+
+    #[test]
+    fn small_in_process_bench_reports_sane_numbers() {
+        let report = run_bench(&BenchOptions {
+            clients: 4,
+            requests: 25,
+            workers: 4,
+            ..BenchOptions::default()
+        })
+        .unwrap();
+        assert_eq!(report.total_requests, 100);
+        assert_eq!(report.errors, 0);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_us > 0.0);
+        assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
+        // Warm-up covered every shape: the timed phase is all hits.
+        assert!(report.cache_hit_rate.unwrap() > 0.5);
+        let j = report.to_json();
+        assert_eq!(j.req_str("bench").unwrap(), "serve");
+        assert_eq!(j.req_str("source_fingerprint").unwrap(), source_fingerprint());
+    }
+}

@@ -257,6 +257,25 @@ impl CacheStats {
     }
 }
 
+/// A bit-exact copy of the cache's monotonic counters, as persisted by
+/// the warm snapshot ([`super::snapshot`]) and restored on startup so a
+/// restarted server's `{"type":"stats"}` answers are indistinguishable
+/// from a continuously-warm one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CounterSnapshot {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that computed fresh.
+    pub misses: u64,
+    /// Per-source routing counters, indexed like [`CacheStats`]:
+    /// systolic, learned, learned-proxy, bandwidth, free, fallback.
+    pub sources: [u64; 6],
+    /// Whole-module answer counts, indexed like `EstimateMode::ALL`.
+    pub mode_requests: [u64; 3],
+    /// Accumulated per-mode time as raw `f64` bit patterns (exact).
+    pub mode_total_us_bits: [u64; 3],
+}
+
 /// Index of a source in the per-source counter array (and in the
 /// `[u64; 6]` batches [`ShardedCache::record_sources`] takes): systolic,
 /// learned, learned-proxy, bandwidth, free, fallback.
@@ -473,6 +492,66 @@ impl ShardedCache {
     pub fn clear(&self) {
         for s in &self.shards {
             s.lock().unwrap().clear();
+        }
+    }
+
+    /// Every resident entry, for persistence ([`super::snapshot`]).
+    /// Order is shard-major and therefore stable for a given content
+    /// set; snapshot files sort entries again before writing so the
+    /// on-disk form is fully deterministic.
+    pub fn export_entries(&self) -> Vec<(ShapeKey, CachedCost)> {
+        let mut out = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            let map = s.lock().unwrap();
+            out.extend(map.iter().map(|(k, v)| (k.clone(), v.clone())));
+        }
+        out
+    }
+
+    /// A raw copy of every monotonic counter, exact to the bit (mode
+    /// totals stay in their `f64` bit-pattern form). Used by the warm
+    /// snapshot so a restarted server reports hit/miss/source/mode
+    /// counters identical to one that never went down.
+    pub fn counter_snapshot(&self) -> CounterSnapshot {
+        let load = |cell: &AtomicU64| cell.load(Ordering::Relaxed);
+        CounterSnapshot {
+            hits: load(&self.hits),
+            misses: load(&self.misses),
+            sources: [
+                load(&self.sources[0]),
+                load(&self.sources[1]),
+                load(&self.sources[2]),
+                load(&self.sources[3]),
+                load(&self.sources[4]),
+                load(&self.sources[5]),
+            ],
+            mode_requests: [
+                load(&self.mode_requests[0]),
+                load(&self.mode_requests[1]),
+                load(&self.mode_requests[2]),
+            ],
+            mode_total_us_bits: [
+                load(&self.mode_total_us[0]),
+                load(&self.mode_total_us[1]),
+                load(&self.mode_total_us[2]),
+            ],
+        }
+    }
+
+    /// Overwrite every counter from a [`CounterSnapshot`]. Only sane on
+    /// a freshly built cache (snapshot load happens before the listener
+    /// accepts its first connection); concurrent traffic would be lost.
+    pub fn restore_counters(&self, snap: &CounterSnapshot) {
+        self.hits.store(snap.hits, Ordering::Relaxed);
+        self.misses.store(snap.misses, Ordering::Relaxed);
+        for (cell, &v) in self.sources.iter().zip(&snap.sources) {
+            cell.store(v, Ordering::Relaxed);
+        }
+        for (cell, &v) in self.mode_requests.iter().zip(&snap.mode_requests) {
+            cell.store(v, Ordering::Relaxed);
+        }
+        for (cell, &v) in self.mode_total_us.iter().zip(&snap.mode_total_us_bits) {
+            cell.store(v, Ordering::Relaxed);
         }
     }
 
@@ -724,6 +803,33 @@ mod tests {
         let sources = j.get("sources").unwrap();
         assert_eq!(sources.req_f64("learned").unwrap(), 1.0);
         assert_eq!(sources.req_f64("fallback").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn counter_snapshot_round_trips_bit_exactly() {
+        let a = ShardedCache::new();
+        a.lookup(&gemm_key(64)); // miss
+        a.store(gemm_key(64), cost(1.0));
+        a.lookup(&gemm_key(64)); // hit
+        a.record_source(&EstimateSource::Learned);
+        a.record_source(&EstimateSource::Fallback);
+        // 0.1 is not exactly representable: only a bit-pattern copy
+        // reproduces the accumulated total exactly.
+        a.record_mode(EstimateMode::Fused, 0.1);
+        a.record_mode(EstimateMode::Fused, 0.2);
+        let snap = a.counter_snapshot();
+        let b = ShardedCache::new();
+        b.restore_counters(&snap);
+        for (k, v) in a.export_entries() {
+            b.store(k, v);
+        }
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa, sb);
+        assert_eq!(
+            sa.modes[1].total_us.to_bits(),
+            sb.modes[1].total_us.to_bits()
+        );
+        assert_eq!(b.export_entries().len(), 1);
     }
 
     #[test]

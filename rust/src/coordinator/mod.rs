@@ -1,22 +1,32 @@
 //! L3 coordinator: the whole-model estimator ([`estimator`]), its batched
 //! structure-of-arrays core ([`batch`]), its sharded shape-keyed memo
 //! cache ([`cache`]), the worker pools driving parallel sweeps and the
-//! streaming service ([`pool`]), and the JSONL request loop itself
-//! ([`service`]).
+//! streaming service ([`pool`]), the JSONL request loop itself
+//! ([`service`]), its concurrent TCP front end ([`net`]) with warm-cache
+//! persistence ([`snapshot`]), and the serve load generator
+//! ([`bench_serve`]).
 
 pub mod batch;
+pub mod bench_serve;
 pub mod cache;
 pub mod estimator;
 pub mod fusion;
+pub mod net;
 pub mod pool;
 pub mod service;
+pub mod snapshot;
 
 pub use batch::OpTable;
-pub use cache::{CacheStats, CachedCost, ModeStat, ShapeClass, ShapeKey, ShardedCache};
+pub use bench_serve::{run_bench, BenchOptions, BenchReport};
+pub use cache::{
+    CacheStats, CachedCost, CounterSnapshot, ModeStat, ShapeClass, ShapeKey, ShardedCache,
+};
 pub use estimator::{EstimateMode, Estimator, EstimateSource, ModelEstimate, OpEstimate};
 pub use fusion::{estimate_fused, estimate_fused_with};
-pub use pool::{default_workers, parallel_map, WorkerPool};
+pub use net::{install_sigint_drain, NetOptions, NetServer, NetSummary, ShutdownHandle};
+pub use pool::{default_workers, parallel_map, PoolHandle, WorkerPool};
 pub use service::{
     serve_lines, serve_stream, DeviceEstimators, Request, SliceRequest, StreamOptions,
     StreamSummary,
 };
+pub use snapshot::{load_snapshot, save_snapshot, SNAPSHOT_FORMAT, SNAPSHOT_VERSION};

@@ -1,0 +1,722 @@
+//! Network-native serve: a concurrent TCP front end for the estimation
+//! service.
+//!
+//! `scalesim-tpu serve --listen <addr:port>` accepts many simultaneous
+//! client connections speaking the same newline-delimited JSONL request
+//! schema as the stdin/file loop ([`super::service`]). Every connection
+//! gets:
+//!
+//! * **In-order responses.** Requests are answered over one *shared*
+//!   [`WorkerPool`] (so concurrent connections contend on the sharded
+//!   shape cache exactly the way it was built for), and a per-connection
+//!   reorder buffer in the writer thread restores each connection's own
+//!   submission order. Response `id`s are per-connection sequence
+//!   numbers, so a response line is bit-identical to the same request at
+//!   the same position of a `serve --input` stream.
+//! * **Error isolation.** A malformed line becomes an `{"ok":false}`
+//!   response and the connection continues; an I/O error (client gone,
+//!   reset, …) tears down only that connection — its already-submitted
+//!   work completes and is dropped on the floor, never wedging the pool
+//!   or poisoning the cache.
+//! * **Bounded buffering.** Each connection caps its in-flight requests
+//!   (submitted but not yet written back) at
+//!   [`NetOptions::inflight`]; the reader blocks at the cap, so a slow
+//!   or stalled reader on one connection can never back memory or the
+//!   shared result dispatcher up — other connections keep streaming.
+//!
+//! **Drain.** A `{"type":"shutdown"}` admin request (answered with an
+//! acknowledgement) or SIGINT (see [`install_sigint_drain`]) triggers a
+//! graceful drain: the listener stops accepting, every connection's read
+//! half is shut down (in-flight requests are still answered and
+//! written), and [`NetServer::run`] returns a [`NetSummary`] that counts
+//! every accepted request exactly once. With a snapshot path configured
+//! the CLI then persists the warm shape cache (see [`super::snapshot`]).
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufWriter, ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::estimator::Estimator;
+use super::pool::{default_workers, PoolHandle, WorkerPool};
+use super::service::{respond, DeviceEstimators, Request, StreamSummary};
+
+/// Global SIGINT latch: set by the signal handler installed with
+/// [`install_sigint_drain`], polled by every running [`NetServer`].
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+/// Install a SIGINT handler that requests a graceful drain of every
+/// running [`NetServer`] (stop accepting, answer in-flight requests,
+/// emit the summary) instead of killing the process.
+///
+/// Storing an atomic flag is async-signal-safe; the accept loop polls
+/// it. On non-Unix targets this is a no-op (Ctrl-C falls back to the
+/// default process kill).
+pub fn install_sigint_drain() {
+    #[cfg(unix)]
+    {
+        extern "C" fn on_sigint(_signum: i32) {
+            SIGINT_FLAG.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            // libc is always linked on unix targets; avoid a crate
+            // dependency for one call.
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        unsafe {
+            signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+        }
+    }
+}
+
+/// Knobs for [`NetServer`].
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Worker threads answering requests (shared by all connections).
+    pub workers: usize,
+    /// Bounded job-queue depth; 0 means `workers * 4`.
+    pub queue_cap: usize,
+    /// Per-connection in-flight cap (submitted but not yet written
+    /// back); 0 means 64. This bounds each connection's write queue, so
+    /// one slow reader never stalls the shared dispatcher.
+    pub inflight: usize,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            workers: default_workers(),
+            queue_cap: 0,
+            inflight: 0,
+        }
+    }
+}
+
+/// End-of-run accounting for a TCP serve, rendered on drain.
+#[derive(Debug, Clone, Default)]
+pub struct NetSummary {
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    /// Request/response/cache accounting, same shape as the stream loop.
+    pub stream: StreamSummary,
+}
+
+impl NetSummary {
+    /// One-line human summary (written to stderr so stdout stays clean).
+    pub fn render(&self) -> String {
+        format!("{} connections; {}", self.connections, self.stream.render())
+    }
+}
+
+/// Lock-free request/response tallies shared by readers and workers.
+#[derive(Default)]
+struct NetCounters {
+    requests: AtomicU64,
+    ok: AtomicU64,
+    errors: AtomicU64,
+    gemm: AtomicU64,
+    elementwise: AtomicU64,
+    module: AtomicU64,
+    stats: AtomicU64,
+}
+
+impl NetCounters {
+    fn tally(&self, ok: bool) {
+        if ok {
+            self.ok.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn count_type(&self, req: &Request) {
+        match req {
+            Request::Gemm { .. } => self.gemm.fetch_add(1, Ordering::Relaxed),
+            Request::Elementwise { .. } => self.elementwise.fetch_add(1, Ordering::Relaxed),
+            Request::Module { .. } => self.module.fetch_add(1, Ordering::Relaxed),
+            Request::Stats => self.stats.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+}
+
+/// One job on the shared pool: a raw request line from one connection.
+/// Parsing happens on the worker, so malformed lines cost reader time
+/// proportional only to their length.
+struct NetJob {
+    conn: u64,
+    seq: u64,
+    line: String,
+}
+
+/// A completed response routed back to its connection's writer.
+enum ConnMsg {
+    /// One answered request (per-connection sequence number + JSON line).
+    Done { seq: u64, ok: bool, resp: String },
+    /// The reader is done; exactly `total` responses will exist.
+    Eof { total: u64 },
+}
+
+/// Per-connection in-flight gate: the reader blocks at the cap, the
+/// writer releases one slot per response written (or discarded). `dead`
+/// short-circuits the wait when the writer lost its socket, so a reader
+/// never blocks forever on a connection that can no longer answer.
+struct Gate {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate {
+            state: Mutex::new((0, false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Take one in-flight slot, blocking at `cap`; `false` if the
+    /// connection's writer is dead (stop reading).
+    fn acquire(&self, cap: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 >= cap && !st.1 {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.1 {
+            return false;
+        }
+        st.0 += 1;
+        true
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.0 = st.0.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    fn kill(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// What the dispatcher needs to reach one live connection.
+struct ConnEntry {
+    tx: mpsc::SyncSender<ConnMsg>,
+    gate: Arc<Gate>,
+    /// Clone of the connection's stream, used by the drain sweep to shut
+    /// the read half down (wakes a reader blocked in `read`).
+    stream: TcpStream,
+}
+
+/// Registry of live connections, shared by the accept loop (insert), the
+/// dispatcher (route), connection threads (remove) and the drain sweep.
+#[derive(Default)]
+struct Registry {
+    conns: Mutex<HashMap<u64, ConnEntry>>,
+}
+
+/// A handle that requests a graceful drain of a running [`NetServer`]
+/// from another thread (tests, embedding).
+#[derive(Clone)]
+pub struct ShutdownHandle(Arc<AtomicBool>);
+
+impl ShutdownHandle {
+    /// Request the drain: stop accepting, answer in-flight requests,
+    /// return the summary from [`NetServer::run`].
+    pub fn shutdown(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+}
+
+/// The concurrent TCP estimation service. Bind with [`NetServer::bind`],
+/// then [`NetServer::run`] blocks until a drain is requested.
+pub struct NetServer {
+    listener: TcpListener,
+    devices: Arc<DeviceEstimators>,
+    estimator: Arc<Estimator>,
+    opts: NetOptions,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl NetServer {
+    /// Bind the listener and prepare the service around `estimator`
+    /// (whose shape cache and device registry are shared by every
+    /// connection). Use port 0 to let the OS pick (see
+    /// [`NetServer::local_addr`]).
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        estimator: Arc<Estimator>,
+        opts: NetOptions,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).context("binding serve listener")?;
+        let devices = Arc::new(DeviceEstimators::new(Arc::clone(&estimator)));
+        Ok(NetServer {
+            listener,
+            devices,
+            estimator,
+            opts,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A handle that triggers a graceful drain from another thread.
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle(Arc::clone(&self.shutdown))
+    }
+
+    fn drain_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || SIGINT_FLAG.load(Ordering::SeqCst)
+    }
+
+    /// Accept and serve connections until a drain is requested (admin
+    /// `{"type":"shutdown"}` request, [`ShutdownHandle::shutdown`], or
+    /// SIGINT after [`install_sigint_drain`]); then stop accepting,
+    /// finish every in-flight request, and return the summary.
+    pub fn run(self) -> Result<NetSummary> {
+        let workers = self.opts.workers.max(1);
+        let queue_cap = if self.opts.queue_cap == 0 {
+            workers * 4
+        } else {
+            self.opts.queue_cap
+        };
+        let inflight = if self.opts.inflight == 0 {
+            64
+        } else {
+            self.opts.inflight
+        };
+
+        let counters = Arc::new(NetCounters::default());
+        let registry = Arc::new(Registry::default());
+
+        // The shared pool: workers parse + answer; results are tagged
+        // with their connection and routed by the dispatcher below.
+        let pool_devices = Arc::clone(&self.devices);
+        let pool_counters = Arc::clone(&counters);
+        let mut pool: WorkerPool<NetJob, (u64, u64, bool, String)> =
+            WorkerPool::new(workers, queue_cap, move |_gseq, job: NetJob| {
+                let parsed = Request::parse(&job.line);
+                if let Ok(req) = &parsed {
+                    pool_counters.count_type(req);
+                }
+                let (ok, resp) = respond(&pool_devices, job.seq, parsed);
+                pool_counters.tally(ok);
+                (job.conn, job.seq, ok, resp)
+            });
+        let submit = pool.handle();
+        // Drop the pool's own sender: from here the job queue lives
+        // exactly as long as the connection readers' handles.
+        pool.close();
+
+        // Dispatcher: the only consumer of pool results; routes each to
+        // its connection's bounded write queue. try_send never blocks,
+        // so one stalled connection cannot stall the others; capacity is
+        // sized so Full is unreachable while the in-flight gate holds.
+        let disp_registry = Arc::clone(&registry);
+        let dispatcher: JoinHandle<()> = std::thread::spawn(move || {
+            while let Some((_gseq, (conn, seq, ok, resp))) = pool.recv() {
+                let entry = {
+                    let map = disp_registry.conns.lock().unwrap();
+                    map.get(&conn).map(|e| (e.tx.clone(), Arc::clone(&e.gate)))
+                };
+                let Some((tx, gate)) = entry else {
+                    continue; // connection already torn down
+                };
+                match tx.try_send(ConnMsg::Done { seq, ok, resp }) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        // Unreachable by construction (queue capacity >
+                        // in-flight cap); poison the connection rather
+                        // than stall every other one.
+                        gate.kill();
+                        disp_registry.conns.lock().unwrap().remove(&conn);
+                    }
+                    Err(TrySendError::Disconnected(_)) => {}
+                }
+            }
+        });
+
+        // Accept loop: non-blocking + poll so a drain request (flag or
+        // SIGINT) is noticed within ~25 ms even with no traffic.
+        self.listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
+        let mut connections: u64 = 0;
+        while !self.drain_requested() {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let conn_id = connections;
+                    connections += 1;
+                    if let Err(e) = self.spawn_conn(
+                        conn_id,
+                        stream,
+                        submit.clone(),
+                        Arc::clone(&registry),
+                        Arc::clone(&counters),
+                        inflight,
+                        &mut conn_handles,
+                    ) {
+                        eprintln!("serve: connection {conn_id} setup failed: {e:#}");
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // Listener broke: drain what we have and report.
+                    eprintln!("serve: accept failed, draining: {e:#}");
+                    break;
+                }
+            }
+        }
+
+        // Drain: refuse new connections, wake every reader (EOF on the
+        // read half; responses still flow on the write half), and wait
+        // for all in-flight work to be answered and written.
+        drop(self.listener);
+        {
+            let map = registry.conns.lock().unwrap();
+            for entry in map.values() {
+                let _ = entry.stream.shutdown(Shutdown::Read);
+            }
+        }
+        for h in conn_handles {
+            let _ = h.join();
+        }
+        drop(submit); // last job sender: workers drain and exit
+        let _ = dispatcher.join();
+
+        let stream = StreamSummary {
+            requests: counters.requests.load(Ordering::Relaxed),
+            ok: counters.ok.load(Ordering::Relaxed),
+            errors: counters.errors.load(Ordering::Relaxed),
+            gemm: counters.gemm.load(Ordering::Relaxed),
+            elementwise: counters.elementwise.load(Ordering::Relaxed),
+            module: counters.module.load(Ordering::Relaxed),
+            stats_requests: counters.stats.load(Ordering::Relaxed),
+            cache: self.estimator.cache.stats(),
+        };
+        Ok(NetSummary {
+            connections,
+            stream,
+        })
+    }
+
+    /// Register and spawn one connection's reader + writer threads.
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_conn(
+        &self,
+        conn_id: u64,
+        stream: TcpStream,
+        submit: PoolHandle<NetJob>,
+        registry: Arc<Registry>,
+        counters: Arc<NetCounters>,
+        inflight: usize,
+        conn_handles: &mut Vec<JoinHandle<()>>,
+    ) -> Result<()> {
+        // Accepted sockets must be blocking regardless of what they
+        // inherit from the non-blocking listener on some platforms.
+        stream.set_nonblocking(false)?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream.try_clone().context("cloning connection stream")?;
+        let sweep_half = stream.try_clone().context("cloning connection stream")?;
+        // Queue capacity: in-flight cap (gate-bounded Done messages) + 1
+        // Eof + slack, so the dispatcher's try_send can never see Full.
+        let (tx, rx) = mpsc::sync_channel::<ConnMsg>(inflight + 8);
+        let gate = Arc::new(Gate::new());
+        registry.conns.lock().unwrap().insert(
+            conn_id,
+            ConnEntry {
+                tx: tx.clone(),
+                gate: Arc::clone(&gate),
+                stream: sweep_half,
+            },
+        );
+        let shutdown = Arc::clone(&self.shutdown);
+        conn_handles.push(std::thread::spawn(move || {
+            let writer_gate = Arc::clone(&gate);
+            let writer = std::thread::spawn(move || writer_loop(write_half, rx, &writer_gate));
+            let total = reader_loop(
+                &stream, &submit, &tx, &gate, &counters, &shutdown, conn_id, inflight,
+            );
+            let _ = tx.send(ConnMsg::Eof { total });
+            drop(tx);
+            drop(submit);
+            let _ = writer.join();
+            registry.conns.lock().unwrap().remove(&conn_id);
+            let _ = stream.shutdown(Shutdown::Both);
+        }));
+        Ok(())
+    }
+}
+
+/// Read newline-delimited requests off one connection, submitting each to
+/// the shared pool (or acknowledging the `shutdown` admin request
+/// directly). Returns the number of responses that will exist for this
+/// connection.
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(
+    stream: &TcpStream,
+    submit: &PoolHandle<NetJob>,
+    tx: &mpsc::SyncSender<ConnMsg>,
+    gate: &Gate,
+    counters: &NetCounters,
+    shutdown: &AtomicBool,
+    conn_id: u64,
+    inflight: usize,
+) -> u64 {
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::with_capacity(8 * 1024);
+    let mut chunk = [0u8; 8 * 1024];
+    let mut next_seq: u64 = 0;
+    let mut eof = false;
+    'outer: loop {
+        // Drain every complete line currently buffered.
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&raw[..pos]);
+            match handle_line(
+                line.trim(),
+                submit,
+                tx,
+                gate,
+                counters,
+                shutdown,
+                conn_id,
+                &mut next_seq,
+                inflight,
+            ) {
+                LineOutcome::Continue => {}
+                LineOutcome::Stop => break 'outer,
+            }
+        }
+        if eof {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                // EOF (client closed, or the drain sweep shut our read
+                // half down). Flush a trailing unterminated line first.
+                eof = true;
+                if !buf.is_empty() {
+                    buf.push(b'\n');
+                }
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => break, // connection error: isolate and tear down
+        }
+        if buf.is_empty() && eof {
+            break;
+        }
+    }
+    next_seq
+}
+
+/// What a handled request line means for the reader loop.
+enum LineOutcome {
+    Continue,
+    Stop,
+}
+
+/// Handle one request line: submit it to the pool, or answer the
+/// `{"type":"shutdown"}` admin request inline and trigger the drain.
+#[allow(clippy::too_many_arguments)]
+fn handle_line(
+    line: &str,
+    submit: &PoolHandle<NetJob>,
+    tx: &mpsc::SyncSender<ConnMsg>,
+    gate: &Gate,
+    counters: &NetCounters,
+    shutdown: &AtomicBool,
+    conn_id: u64,
+    next_seq: &mut u64,
+    inflight: usize,
+) -> LineOutcome {
+    if line.is_empty() {
+        return LineOutcome::Continue;
+    }
+    // `next_seq` must count exactly the responses the writer will
+    // receive (it becomes `Eof { total }`), so it is only advanced once
+    // a response is guaranteed — never on the dead-writer/dead-pool
+    // early exits below.
+    let seq = *next_seq;
+    counters.requests.fetch_add(1, Ordering::Relaxed);
+    if is_shutdown_request(line) {
+        // Admin drain: acknowledge on this connection (in order), then
+        // flip the flag; the supervisor stops accepting and sweeps.
+        let mut ack = Json::obj();
+        ack.set("type", Json::Str("shutdown".into()))
+            .set("draining", Json::Bool(true))
+            .set("ok", Json::Bool(true))
+            .set("id", Json::Num(seq as f64));
+        counters.tally(true);
+        if gate.acquire(inflight) {
+            *next_seq += 1;
+            let _ = tx.send(ConnMsg::Done {
+                seq,
+                ok: true,
+                resp: ack.dump(),
+            });
+        }
+        shutdown.store(true, Ordering::SeqCst);
+        return LineOutcome::Stop;
+    }
+    if !gate.acquire(inflight) {
+        // Writer lost its socket: every further answer would be
+        // undeliverable, so stop reading. The submitted prefix still
+        // completes on the pool (and is discarded by the dead writer).
+        counters.tally(false);
+        return LineOutcome::Stop;
+    }
+    if !submit.submit(
+        seq,
+        NetJob {
+            conn: conn_id,
+            seq,
+            line: line.to_string(),
+        },
+    ) {
+        counters.tally(false);
+        gate.release();
+        return LineOutcome::Stop;
+    }
+    *next_seq += 1;
+    LineOutcome::Continue
+}
+
+/// Cheap admin-request probe: avoids JSON-parsing every line twice by
+/// only parsing lines that literally contain `"shutdown"`.
+fn is_shutdown_request(line: &str) -> bool {
+    if !line.contains("\"shutdown\"") {
+        return false;
+    }
+    match Json::parse(line) {
+        Ok(j) => j.get("type").and_then(Json::as_str) == Some("shutdown"),
+        Err(_) => false,
+    }
+}
+
+/// Write one connection's responses back in request order. Receives
+/// completions (in any order) plus the reader's final `Eof { total }`,
+/// reorders via a bounded buffer (the in-flight gate caps it), and exits
+/// once `total` responses have been written — or keeps draining with the
+/// socket gone so the reader and dispatcher never block on a dead
+/// connection.
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<ConnMsg>, gate: &Gate) {
+    let mut out = BufWriter::new(stream);
+    let mut pending: BTreeMap<u64, String> = BTreeMap::new();
+    let mut next_write: u64 = 0;
+    let mut emitted: u64 = 0;
+    let mut total: Option<u64> = None;
+    let mut dead = false;
+    loop {
+        if total == Some(emitted) {
+            break;
+        }
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break, // reader gone without Eof (setup failure)
+        };
+        match msg {
+            ConnMsg::Eof { total: t } => total = Some(t),
+            ConnMsg::Done { seq, resp, .. } => {
+                pending.insert(seq, resp);
+                let mut wrote = false;
+                while let Some(resp) = pending.remove(&next_write) {
+                    if !dead && writeln!(out, "{resp}").is_err() {
+                        dead = true;
+                        gate.kill();
+                    }
+                    next_write += 1;
+                    emitted += 1;
+                    wrote = true;
+                    gate.release();
+                }
+                if wrote && !dead && out.flush().is_err() {
+                    dead = true;
+                    gate.kill();
+                }
+            }
+        }
+    }
+    let _ = out.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::sweep::sweep_estimator;
+    use std::io::{BufRead, BufReader};
+
+    fn spawn_server() -> (SocketAddr, ShutdownHandle, std::thread::JoinHandle<NetSummary>) {
+        let est = Arc::new(sweep_estimator(&DeviceSpec::tpu_v4()));
+        let server = NetServer::bind("127.0.0.1:0", est, NetOptions::default()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = server.shutdown_handle();
+        let join = std::thread::spawn(move || server.run().unwrap());
+        (addr, handle, join)
+    }
+
+    #[test]
+    fn single_connection_in_order_and_admin_shutdown() {
+        let (addr, _handle, join) = spawn_server();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for d in [64, 128, 256, 128, 64] {
+            writeln!(conn, r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#).unwrap();
+        }
+        writeln!(conn, "{{\"type\":\"shutdown\"}}").unwrap();
+        conn.flush().unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 6);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.req_f64("id").unwrap(), i as f64, "out of order: {line}");
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+        }
+        assert_eq!(Json::parse(&lines[5]).unwrap().req_str("type").unwrap(), "shutdown");
+        // Same shape answered bit-identically on repeat (cache hit).
+        let lat = |i: usize| {
+            Json::parse(&lines[i]).unwrap().req_f64("latency_us").unwrap()
+        };
+        assert_eq!(lat(0).to_bits(), lat(4).to_bits());
+        assert_eq!(lat(1).to_bits(), lat(3).to_bits());
+        let summary = join.join().unwrap();
+        assert_eq!(summary.connections, 1);
+        assert_eq!(summary.stream.requests, 6);
+        assert_eq!(summary.stream.ok, 6);
+        assert_eq!(summary.stream.errors, 0);
+    }
+
+    #[test]
+    fn shutdown_handle_drains_idle_connections() {
+        let (addr, handle, join) = spawn_server();
+        // An idle connection whose reader is blocked in read() must be
+        // woken by the drain sweep, not hang the server.
+        let conn = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        handle.shutdown();
+        let summary = join.join().unwrap();
+        assert_eq!(summary.connections, 1);
+        assert_eq!(summary.stream.requests, 0);
+        drop(conn);
+    }
+}

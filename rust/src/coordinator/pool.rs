@@ -89,10 +89,40 @@ where
 /// `service::serve_stream`). [`WorkerPool::submit`] blocks while the
 /// queue is full, which is the backpressure that keeps an arbitrarily
 /// long input stream from ballooning memory.
+///
+/// Multi-producer use (the TCP service, where every connection reader
+/// submits into one shared pool) goes through cloneable [`PoolHandle`]s
+/// instead: grab handles with [`WorkerPool::handle`], call
+/// [`WorkerPool::close`] to drop the pool's own sender, and the job
+/// queue stays open exactly as long as any handle is alive.
 pub struct WorkerPool<T: Send + 'static, R: Send + 'static> {
     job_tx: Option<mpsc::SyncSender<(u64, T)>>,
     result_rx: mpsc::Receiver<(u64, R)>,
     handles: Vec<JoinHandle<()>>,
+}
+
+/// A cloneable submission handle onto a [`WorkerPool`]'s bounded job
+/// queue. Each connection reader of the TCP service owns one; the job
+/// queue closes (and the workers drain and exit) once every handle and
+/// the pool's own sender are dropped.
+pub struct PoolHandle<T: Send + 'static> {
+    job_tx: mpsc::SyncSender<(u64, T)>,
+}
+
+impl<T: Send + 'static> Clone for PoolHandle<T> {
+    fn clone(&self) -> PoolHandle<T> {
+        PoolHandle {
+            job_tx: self.job_tx.clone(),
+        }
+    }
+}
+
+impl<T: Send + 'static> PoolHandle<T> {
+    /// Enqueue a job; blocks while the queue is full (backpressure).
+    /// Returns `false` if the pool's workers are all gone.
+    pub fn submit(&self, seq: u64, job: T) -> bool {
+        self.job_tx.send((seq, job)).is_ok()
+    }
 }
 
 impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
@@ -131,6 +161,15 @@ impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
             job_tx: Some(job_tx),
             result_rx,
             handles,
+        }
+    }
+
+    /// A cloneable submission handle feeding this pool's job queue (for
+    /// multi-producer setups like the TCP service). Panics if called
+    /// after [`WorkerPool::close`].
+    pub fn handle(&self) -> PoolHandle<T> {
+        PoolHandle {
+            job_tx: self.job_tx.as_ref().expect("handle after close").clone(),
         }
     }
 
@@ -241,6 +280,39 @@ mod tests {
         }
         seqs.sort_unstable();
         assert_eq!(seqs, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_handles_keep_the_queue_open_after_close() {
+        // The TCP-service shape: the pool's own sender is closed up
+        // front, cloneable handles feed it from several producer
+        // threads, and the result stream ends exactly when the last
+        // handle drops.
+        let mut pool: WorkerPool<u64, u64> = WorkerPool::new(4, 2, |_seq, x| x + 1);
+        let h = pool.handle();
+        pool.close();
+        let producers: Vec<_> = (0..3u64)
+            .map(|p| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50u64 {
+                        assert!(h.submit(p * 100 + i, p * 100 + i));
+                    }
+                })
+            })
+            .collect();
+        drop(h);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut seen = std::collections::BTreeMap::new();
+        while let Some((seq, r)) = pool.recv() {
+            seen.insert(seq, r);
+        }
+        assert_eq!(seen.len(), 150);
+        for (seq, r) in seen {
+            assert_eq!(r, seq + 1);
+        }
     }
 
     #[test]

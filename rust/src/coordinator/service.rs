@@ -348,7 +348,10 @@ pub fn serve_lines(estimator: Arc<Estimator>, lines: &[String], workers: usize) 
 }
 
 /// Answer one (possibly failed-to-parse) request; returns `(ok, line)`.
-fn respond(devices: &DeviceEstimators, id: u64, req: Result<Request>) -> (bool, String) {
+/// Shared by the in-process batch/stream paths and the TCP service
+/// ([`super::net`]), so a request is answered bit-identically no matter
+/// which transport carried it.
+pub(crate) fn respond(devices: &DeviceEstimators, id: u64, req: Result<Request>) -> (bool, String) {
     let (ok, mut obj) = match req.and_then(|r| handle_request(devices, &r)) {
         Ok(o) => (true, o),
         Err(e) => {

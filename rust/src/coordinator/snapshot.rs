@@ -1,0 +1,505 @@
+//! Warm-cache persistence for the network service.
+//!
+//! `serve --cache-snapshot <path>` saves the shape cache on drain and
+//! reloads it on the next startup, so a restarted server answers its
+//! first requests warm instead of recomputing every shape from zero.
+//!
+//! The on-disk form is JSONL: one header line, then one line per cache
+//! entry, sorted, so the file is deterministic for a given cache content
+//! and diffs cleanly. Every 64-bit quantity (counters, cycle counts,
+//! `f64` bit patterns) is stored as a hex string — JSON numbers are
+//! `f64` in our parser and cannot carry a full `u64` exactly, and the
+//! whole point of the snapshot is *bit-identical* warm answers and
+//! counters (regression-tested in `tests/serve_net.rs`).
+//!
+//! The header is versioned and keyed by the serving estimator's cost-
+//! model fingerprint (device spec + systolic config + HBM bandwidth).
+//! A corrupt file, a version mismatch, or a fingerprint mismatch each
+//! **fail loudly** ([`load_snapshot`] returns the error); the CLI logs
+//! it and starts cold rather than serving stale costs. Entries keep
+//! their own per-device fingerprints, so caches warmed by mixed-device
+//! traffic (`"device"` request fields) restore completely.
+//!
+//! Saves are atomic (write to `<path>.tmp`, then rename), so a crash
+//! mid-save never truncates the previous good snapshot.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::frontend::classify::{CollectiveKind, EwKind};
+use crate::frontend::types::DType;
+use crate::scalesim::topology::GemmShape;
+use crate::util::json::Json;
+
+use crate::distributed::ici::IciTopology;
+
+use super::cache::{CachedCost, CounterSnapshot, ShapeClass, ShapeKey};
+use super::estimator::{EstimateSource, Estimator};
+
+/// Magic string identifying a snapshot file.
+pub const SNAPSHOT_FORMAT: &str = "scalesim-tpu-cache-snapshot";
+/// Current snapshot layout version; bump on any incompatible change.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn req_hex(j: &Json, key: &str) -> Result<u64> {
+    let s = j.req_str(key).map_err(|e| anyhow::anyhow!("{e}"))?;
+    u64::from_str_radix(s, 16).with_context(|| format!("field '{key}' is not a hex u64: '{s}'"))
+}
+
+fn hex_arr(vals: &[u64]) -> Json {
+    Json::Arr(vals.iter().map(|&v| hex(v)).collect())
+}
+
+fn req_hex_arr<const N: usize>(j: &Json, key: &str) -> Result<[u64; N]> {
+    let arr = j.req_arr(key).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if arr.len() != N {
+        bail!("field '{key}' must have {N} elements, got {}", arr.len());
+    }
+    let mut out = [0u64; N];
+    for (slot, v) in out.iter_mut().zip(arr) {
+        let s = v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' must hold hex strings"))?;
+        *slot = u64::from_str_radix(s, 16)
+            .with_context(|| format!("field '{key}' holds a non-hex value '{s}'"))?;
+    }
+    Ok(out)
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.req_usize(key).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn counters_to_json(c: &CounterSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("hits", hex(c.hits))
+        .set("misses", hex(c.misses))
+        .set("sources", hex_arr(&c.sources))
+        .set("mode_requests", hex_arr(&c.mode_requests))
+        .set("mode_total_us_bits", hex_arr(&c.mode_total_us_bits));
+    o
+}
+
+fn counters_from_json(j: &Json) -> Result<CounterSnapshot> {
+    Ok(CounterSnapshot {
+        hits: req_hex(j, "hits")?,
+        misses: req_hex(j, "misses")?,
+        sources: req_hex_arr(j, "sources")?,
+        mode_requests: req_hex_arr(j, "mode_requests")?,
+        mode_total_us_bits: req_hex_arr(j, "mode_total_us_bits")?,
+    })
+}
+
+fn source_to_json(o: &mut Json, source: &EstimateSource) {
+    o.set("source", Json::Str(source.tag().into()));
+    if let EstimateSource::LearnedProxy(name) = source {
+        o.set("proxy", Json::Str(name.clone()));
+    }
+}
+
+fn source_from_json(j: &Json) -> Result<EstimateSource> {
+    Ok(match j.req_str("source").map_err(|e| anyhow::anyhow!("{e}"))? {
+        "systolic" => EstimateSource::SystolicCalibrated,
+        "learned" => EstimateSource::Learned,
+        "learned-proxy" => EstimateSource::LearnedProxy(
+            j.req_str("proxy")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .to_string(),
+        ),
+        "bandwidth" => EstimateSource::Bandwidth,
+        "free" => EstimateSource::Free,
+        "fallback" => EstimateSource::Fallback,
+        other => bail!("unknown estimate source '{other}'"),
+    })
+}
+
+/// `EwKind::from_name` deliberately has no inverse for the bucket
+/// variant (`name()` says "other" but many op names map *to* Other), so
+/// the snapshot spells it out.
+fn ew_kind_from_name(name: &str) -> Result<EwKind> {
+    if name == "other" {
+        return Ok(EwKind::Other);
+    }
+    EwKind::from_name(name).ok_or_else(|| anyhow::anyhow!("unknown elementwise kind '{name}'"))
+}
+
+fn entry_to_json(key: &ShapeKey, cost: &CachedCost) -> Json {
+    let mut o = Json::obj();
+    o.set("device_fp", hex(key.device));
+    match &key.shape {
+        ShapeClass::Gemm { gemm, count } => {
+            o.set("class", Json::Str("gemm".into()))
+                .set("m", Json::Num(gemm.m as f64))
+                .set("k", Json::Num(gemm.k as f64))
+                .set("n", Json::Num(gemm.n as f64))
+                .set("count", hex(*count));
+        }
+        ShapeClass::Elementwise { kind, dims, dtype } => {
+            o.set("class", Json::Str("elementwise".into()))
+                .set("kind", Json::Str(kind.name().into()))
+                .set(
+                    "dims",
+                    Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+                )
+                .set("dtype", Json::Str(dtype.name().into()));
+        }
+        ShapeClass::Collective {
+            kind,
+            bytes_in,
+            bytes_out,
+            chips,
+            topology,
+            link_gbps_bits,
+            hop_us_bits,
+        } => {
+            o.set("class", Json::Str("collective".into()))
+                .set("kind", Json::Str(kind.name().into()))
+                .set("bytes_in", hex(*bytes_in))
+                .set("bytes_out", hex(*bytes_out))
+                .set("chips", Json::Num(*chips as f64))
+                .set("link_gbps_bits", hex(*link_gbps_bits))
+                .set("hop_us_bits", hex(*hop_us_bits));
+            match topology {
+                IciTopology::Ring => {
+                    o.set("topology", Json::Str("ring".into()));
+                }
+                IciTopology::Torus2D { x, y } => {
+                    o.set("topology", Json::Str("torus".into()))
+                        .set("torus_x", Json::Num(*x as f64))
+                        .set("torus_y", Json::Num(*y as f64));
+                }
+            }
+        }
+    }
+    let mut c = Json::obj();
+    source_to_json(&mut c, &cost.source);
+    match cost.cycles {
+        Some(cy) => c.set("cycles", hex(cy)),
+        None => c.set("cycles", Json::Null),
+    };
+    c.set("latency_us_bits", hex(cost.latency_us.to_bits()))
+        .set("note", Json::Str(cost.note.clone()));
+    o.set("cost", c);
+    o
+}
+
+fn entry_from_json(j: &Json) -> Result<(ShapeKey, CachedCost)> {
+    let device = req_hex(j, "device_fp")?;
+    let shape = match j.req_str("class").map_err(|e| anyhow::anyhow!("{e}"))? {
+        "gemm" => ShapeClass::Gemm {
+            gemm: GemmShape::new(
+                usize_field(j, "m")?,
+                usize_field(j, "k")?,
+                usize_field(j, "n")?,
+            ),
+            count: req_hex(j, "count")?,
+        },
+        "elementwise" => {
+            let dims = j
+                .req_arr("dims")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("non-integer dim in snapshot entry"))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let dtype_name = j.req_str("dtype").map_err(|e| anyhow::anyhow!("{e}"))?;
+            ShapeClass::Elementwise {
+                kind: ew_kind_from_name(j.req_str("kind").map_err(|e| anyhow::anyhow!("{e}"))?)?,
+                dims,
+                dtype: DType::parse(dtype_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dtype '{dtype_name}'"))?,
+            }
+        }
+        "collective" => {
+            let kind_name = j.req_str("kind").map_err(|e| anyhow::anyhow!("{e}"))?;
+            let topology = match j.req_str("topology").map_err(|e| anyhow::anyhow!("{e}"))? {
+                "ring" => IciTopology::Ring,
+                "torus" => IciTopology::Torus2D {
+                    x: usize_field(j, "torus_x")?,
+                    y: usize_field(j, "torus_y")?,
+                },
+                other => bail!("unknown topology '{other}'"),
+            };
+            ShapeClass::Collective {
+                kind: CollectiveKind::from_name(kind_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown collective kind '{kind_name}'"))?,
+                bytes_in: req_hex(j, "bytes_in")?,
+                bytes_out: req_hex(j, "bytes_out")?,
+                chips: usize_field(j, "chips")?,
+                topology,
+                link_gbps_bits: req_hex(j, "link_gbps_bits")?,
+                hop_us_bits: req_hex(j, "hop_us_bits")?,
+            }
+        }
+        other => bail!("unknown entry class '{other}'"),
+    };
+    let c = j
+        .get("cost")
+        .ok_or_else(|| anyhow::anyhow!("entry missing 'cost'"))?;
+    let cycles = match c.get("cycles") {
+        None | Some(Json::Null) => None,
+        Some(_) => Some(req_hex(c, "cycles")?),
+    };
+    let cost = CachedCost {
+        source: source_from_json(c)?,
+        cycles,
+        latency_us: f64::from_bits(req_hex(c, "latency_us_bits")?),
+        note: c.req_str("note").map_err(|e| anyhow::anyhow!("{e}"))?.to_string(),
+    };
+    Ok((ShapeKey { device, shape }, cost))
+}
+
+/// Persist `estimator`'s shape cache (entries + counters) to `path`,
+/// atomically (`<path>.tmp` then rename). The header is keyed by the
+/// estimator's cost-model fingerprint; entries carry their own
+/// per-device fingerprints so mixed-device caches restore completely.
+pub fn save_snapshot(path: &Path, estimator: &Estimator) -> Result<u64> {
+    let entries = estimator.cache.export_entries();
+    let mut lines: Vec<String> = entries
+        .iter()
+        .map(|(k, c)| entry_to_json(k, c).dump())
+        .collect();
+    lines.sort_unstable();
+
+    let mut header = Json::obj();
+    header
+        .set("format", Json::Str(SNAPSHOT_FORMAT.into()))
+        .set("version", Json::Num(SNAPSHOT_VERSION as f64))
+        .set("device", Json::Str(estimator.device().name.clone()))
+        .set("device_fp", hex(estimator.cache_fingerprint()))
+        .set("entries", Json::Num(lines.len() as f64))
+        .set(
+            "counters",
+            counters_to_json(&estimator.cache.counter_snapshot()),
+        );
+
+    let mut out = String::with_capacity(64 + lines.len() * 128);
+    out.push_str(&header.dump());
+    out.push('\n');
+    for line in &lines {
+        out.push_str(line);
+        out.push('\n');
+    }
+
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, out)
+        .with_context(|| format!("writing cache snapshot to {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing cache snapshot at {}", path.display()))?;
+    Ok(lines.len() as u64)
+}
+
+/// Load a snapshot previously written by [`save_snapshot`] into
+/// `estimator`'s (freshly built) cache, restoring entries *and*
+/// counters, and return the entry count.
+///
+/// Fails loudly — corrupt file, wrong [`SNAPSHOT_VERSION`], or a
+/// cost-model fingerprint that does not match `estimator` — instead of
+/// silently serving stale costs; the caller logs the error and starts
+/// cold.
+pub fn load_snapshot(path: &Path, estimator: &Estimator) -> Result<u64> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading cache snapshot {}", path.display()))?;
+    let mut lines = text.lines();
+    let header_line = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("snapshot {} is empty", path.display()))?;
+    let header = Json::parse(header_line)
+        .map_err(|e| anyhow::anyhow!("snapshot {} header is not JSON: {e}", path.display()))?;
+    let format = header.req_str("format").map_err(|e| anyhow::anyhow!("{e}"))?;
+    if format != SNAPSHOT_FORMAT {
+        bail!(
+            "snapshot {}: unrecognised format '{format}' (want '{SNAPSHOT_FORMAT}')",
+            path.display()
+        );
+    }
+    let version = header.req_f64("version").map_err(|e| anyhow::anyhow!("{e}"))?;
+    if version != SNAPSHOT_VERSION as f64 {
+        bail!(
+            "snapshot {}: version {version} is not supported (this build reads version {SNAPSHOT_VERSION})",
+            path.display()
+        );
+    }
+    let fp = req_hex(&header, "device_fp")?;
+    if fp != estimator.cache_fingerprint() {
+        bail!(
+            "snapshot {}: cost-model fingerprint {fp:016x} does not match this server's {:016x} \
+             (device '{}'); refusing stale costs",
+            path.display(),
+            estimator.cache_fingerprint(),
+            estimator.device().name,
+        );
+    }
+    let declared = header.req_f64("entries").map_err(|e| anyhow::anyhow!("{e}"))? as u64;
+    let counters = counters_from_json(
+        header
+            .get("counters")
+            .ok_or_else(|| anyhow::anyhow!("snapshot {} header lacks counters", path.display()))?,
+    )?;
+
+    let mut loaded: Vec<(ShapeKey, CachedCost)> = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("snapshot {} line {}: not JSON: {e}", path.display(), i + 2)
+        })?;
+        let entry = entry_from_json(&j)
+            .with_context(|| format!("snapshot {} line {}", path.display(), i + 2))?;
+        loaded.push(entry);
+    }
+    if loaded.len() as u64 != declared {
+        bail!(
+            "snapshot {}: header declares {declared} entries but file holds {} (truncated?)",
+            path.display(),
+            loaded.len()
+        );
+    }
+    estimator.cache.store_grouped(loaded);
+    estimator.cache.restore_counters(&counters);
+    Ok(declared)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::sweep::sweep_estimator;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("scalesim_tpu_snapshot_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn entry_round_trip_all_classes() {
+        let cost = CachedCost {
+            source: EstimateSource::LearnedProxy("add".into()),
+            cycles: Some(u64::MAX - 3), // not representable as f64
+            latency_us: 0.1 + 0.2,      // bit pattern must survive
+            note: "\"quoted\" note\n".into(),
+        };
+        let keys = [
+            ShapeKey {
+                device: 0xdead_beef_0102_0304,
+                shape: ShapeClass::Gemm {
+                    gemm: GemmShape::new(128, 256, 512),
+                    count: 7,
+                },
+            },
+            ShapeKey {
+                device: 1,
+                shape: ShapeClass::Elementwise {
+                    kind: EwKind::Other,
+                    dims: vec![3, 5, 7],
+                    dtype: DType::U16,
+                },
+            },
+            ShapeKey {
+                device: 2,
+                shape: ShapeClass::Collective {
+                    kind: CollectiveKind::ReduceScatter,
+                    bytes_in: 1 << 40,
+                    bytes_out: 12345,
+                    chips: 16,
+                    topology: IciTopology::Torus2D { x: 4, y: 4 },
+                    link_gbps_bits: 100.0f64.to_bits(),
+                    hop_us_bits: 1.5f64.to_bits(),
+                },
+            },
+        ];
+        for key in keys {
+            let line = entry_to_json(&key, &cost).dump();
+            let (k2, c2) = entry_from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(k2, key);
+            assert_eq!(c2.cycles, cost.cycles);
+            assert_eq!(c2.latency_us.to_bits(), cost.latency_us.to_bits());
+            assert_eq!(c2.note, cost.note);
+            assert_eq!(c2.source, cost.source);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip_and_loud_failures() {
+        let est = sweep_estimator(&DeviceSpec::tpu_v4());
+        // Warm the cache through the public request path.
+        use crate::coordinator::service::serve_lines;
+        use std::sync::Arc;
+        let est = Arc::new(est);
+        serve_lines(
+            Arc::clone(&est),
+            &[
+                r#"{"type":"gemm","m":64,"k":64,"n":64}"#.into(),
+                r#"{"type":"gemm","m":64,"k":64,"n":64}"#.into(),
+                r#"{"type":"elementwise","op":"add","dims":[256,256]}"#.into(),
+            ],
+            2,
+        );
+        let path = tmp("round_trip.jsonl");
+        let n = save_snapshot(&path, &est).unwrap();
+        assert_eq!(n, est.cache.len() as u64);
+
+        let fresh = sweep_estimator(&DeviceSpec::tpu_v4());
+        assert_eq!(load_snapshot(&path, &fresh).unwrap(), n);
+        assert_eq!(fresh.cache.stats(), est.cache.stats());
+
+        // Wrong device fingerprint → loud failure.
+        let v5e = sweep_estimator(&DeviceSpec::tpu_v5e());
+        let err = load_snapshot(&path, &v5e).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+
+        // Wrong version → loud failure.
+        let vpath = tmp("bad_version.jsonl");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&vpath, text.replacen("\"version\":1", "\"version\":999", 1)).unwrap();
+        let fresh2 = sweep_estimator(&DeviceSpec::tpu_v4());
+        let err = load_snapshot(&vpath, &fresh2).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        assert!(fresh2.cache.is_empty(), "failed load must leave cache cold");
+
+        // Corrupt / truncated → loud failure.
+        let cpath = tmp("corrupt.jsonl");
+        std::fs::write(&cpath, "not json\n").unwrap();
+        assert!(load_snapshot(&cpath, &fresh2).is_err());
+        let tpath = tmp("truncated.jsonl");
+        let full = std::fs::read_to_string(&path).unwrap();
+        let mut truncated: Vec<&str> = full.lines().collect();
+        truncated.pop();
+        std::fs::write(&tpath, truncated.join("\n")).unwrap();
+        let err = load_snapshot(&tpath, &fresh2).unwrap_err().to_string();
+        assert!(err.contains("declares"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_bytes_are_deterministic() {
+        let est = sweep_estimator(&DeviceSpec::tpu_v4());
+        use crate::coordinator::service::serve_lines;
+        use std::sync::Arc;
+        let est = Arc::new(est);
+        serve_lines(
+            Arc::clone(&est),
+            &[
+                r#"{"type":"gemm","m":32,"k":32,"n":32}"#.into(),
+                r#"{"type":"gemm","m":48,"k":48,"n":48}"#.into(),
+            ],
+            2,
+        );
+        let (p1, p2) = (tmp("det_a.jsonl"), tmp("det_b.jsonl"));
+        save_snapshot(&p1, &est).unwrap();
+        save_snapshot(&p2, &est).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "snapshot bytes must be deterministic"
+        );
+    }
+}

@@ -9,7 +9,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use scalesim_tpu::calibrate::Regime;
-use scalesim_tpu::coordinator::{default_workers, serve_lines, serve_stream, StreamOptions};
+use scalesim_tpu::coordinator::{
+    bench_serve, default_workers, install_sigint_drain, load_snapshot, save_snapshot,
+    serve_lines, serve_stream, NetOptions, NetServer, StreamOptions,
+};
 use scalesim_tpu::device::{load_device_file, resolve_device, DeviceSpec, PRESET_NAMES};
 use scalesim_tpu::distributed::{
     estimate_gemm_sliced, estimate_module_distributed, estimate_module_distributed_memory,
@@ -117,6 +120,32 @@ Toolchain:
                                    "device" field naming any preset; the
                                    shared shape cache keys on the device
                                    fingerprint so mixed streams never alias.
+        [--listen ADDR:PORT]       serve over TCP instead: accepts many
+                                   concurrent connections (JSONL per
+                                   connection, same schema), answers each
+                                   connection in its own request order over
+                                   one shared worker pool + shape cache.
+                                   Graceful drain on SIGINT or a
+                                   {"type":"shutdown"} admin request: stop
+                                   accepting, answer in-flight requests,
+                                   emit the summary.
+        [--inflight N]             per-connection in-flight cap (default 64);
+                                   bounds each connection's write queue so a
+                                   slow reader never stalls the others
+        [--cache-snapshot FILE]    load the shape cache from FILE at startup
+                                   (versioned + fingerprint-checked; corrupt
+                                   or stale snapshots are rejected loudly and
+                                   the server starts cold) and save it back
+                                   on drain, so restarts answer warm
+  bench-serve                    load-generate against the TCP service and
+        [--clients N]              report sustained throughput + p50/p95/p99
+        [--requests M]             tail latency. Spins up an in-process
+        [--rps R] [--addr A]       server unless --addr targets a remote one;
+        [--workers N]              --rps paces the offered load (default:
+        [--publish] [--check]      closed-loop flat out). --publish writes
+                                   BENCH_serve.json at the repo root
+                                   (fingerprinted); --check verifies it is
+                                   fresh against the bench source (CI gate)
 
 Common options:
   --device NAME|FILE         device spec every hardware constant derives
@@ -261,6 +290,7 @@ fn run(args: &Args) -> Result<()> {
         Some("devices") => cmd_devices(args),
         Some("compare") => cmd_compare(args),
         Some("serve") => cmd_serve(args),
+        Some("bench-serve") => cmd_bench_serve(args),
         Some("sweep") => cmd_sweep(args),
         Some(other) => bail!("unknown subcommand '{other}' (try 'help')"),
     }
@@ -950,6 +980,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     let est = Arc::new(est.retarget(&spec));
     let workers = args.usize_or("workers", default_workers());
+
+    if let Some(listen) = args.get("listen") {
+        // TCP mode: many concurrent connections over one shared worker
+        // pool and shape cache; drains on SIGINT or an admin request.
+        let snapshot_path = args.get("cache-snapshot").map(PathBuf::from);
+        if let Some(path) = &snapshot_path {
+            if path.exists() {
+                match load_snapshot(path, &est) {
+                    Ok(n) => eprintln!(
+                        "serve: warm start, {n} cache entries from {}",
+                        path.display()
+                    ),
+                    // Loud cold start: a corrupt/stale snapshot must
+                    // never silently serve stale costs.
+                    Err(e) => eprintln!("serve: cold start, snapshot rejected: {e:#}"),
+                }
+            } else {
+                eprintln!("serve: cold start, no snapshot at {}", path.display());
+            }
+        }
+        install_sigint_drain();
+        let opts = NetOptions {
+            workers,
+            queue_cap: args.usize_or("queue", 0),
+            inflight: args.usize_or("inflight", 0),
+        };
+        let server = NetServer::bind(listen, Arc::clone(&est), opts)
+            .with_context(|| format!("binding {listen}"))?;
+        eprintln!("serve: listening on {}", server.local_addr()?);
+        let summary = server.run()?;
+        if let Some(path) = &snapshot_path {
+            let n = save_snapshot(path, &est)?;
+            eprintln!("serve: saved {n} cache entries to {}", path.display());
+        }
+        if !args.flag("quiet") {
+            eprintln!("{}", summary.render());
+        }
+        // Knobs of the stdin path, read so they never trip the
+        // unknown-option warning when mixed into a --listen invocation.
+        let _ = args.get("input");
+        let _ = args.flag("batch");
+        return Ok(());
+    }
+
     let input: Box<dyn BufRead> = match args.get("input") {
         Some(path) => Box::new(std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
@@ -982,6 +1056,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
     out.flush()?;
     if !args.flag("quiet") {
         eprintln!("{}", summary.render());
+    }
+    Ok(())
+}
+
+/// `bench-serve`: the TCP-service load generator (see
+/// [`bench_serve`]). `--check` is the CI freshness gate on
+/// `BENCH_serve.json`; `--publish` (re)writes it.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    if args.flag("check") {
+        return bench_serve::check_published();
+    }
+    let rps = match args.get("rps") {
+        Some(r) => {
+            let r: f64 = r
+                .parse()
+                .with_context(|| format!("--rps expects a number, got '{r}'"))?;
+            if !(r.is_finite() && r > 0.0) {
+                bail!("--rps must be positive");
+            }
+            Some(r)
+        }
+        None => None,
+    };
+    let opts = bench_serve::BenchOptions {
+        clients: args.usize_or("clients", 16),
+        requests: args.usize_or("requests", 500),
+        rps,
+        addr: args.get("addr").map(str::to_string),
+        workers: args.usize_or("workers", default_workers()),
+    };
+    let report = bench_serve::run_bench(&opts)?;
+    if args.flag("json") {
+        // JSON-only stdout (the CI smoke parses it); summary on stderr.
+        println!("{}", report.to_json().dump());
+        eprintln!("{}", report.render());
+    } else {
+        println!("{}", report.render());
+    }
+    if report.errors > 0 {
+        bail!("{} error responses during the timed phase", report.errors);
+    }
+    if args.flag("publish") {
+        report.publish()?;
     }
     Ok(())
 }

@@ -124,3 +124,173 @@ fn assets_dir_with_partial_contents_fails_loud() {
     assert!(assets::load_assets(&dir).is_err());
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------------------
+// Network fault injection: a hostile or dying client must never wedge the
+// pool, poison the shared cache, or stall other connections.
+// ---------------------------------------------------------------------------
+
+mod net_failures {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{Shutdown, SocketAddr, TcpStream};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use scalesim_tpu::coordinator::{
+        serve_lines, Estimator, NetOptions, NetServer, NetSummary, ShutdownHandle,
+    };
+    use scalesim_tpu::device::DeviceSpec;
+    use scalesim_tpu::sweep::sweep_estimator;
+    use scalesim_tpu::util::json::Json;
+
+    fn spawn_server(
+        opts: NetOptions,
+    ) -> (
+        SocketAddr,
+        ShutdownHandle,
+        std::thread::JoinHandle<NetSummary>,
+        Arc<Estimator>,
+    ) {
+        let est = Arc::new(sweep_estimator(&DeviceSpec::tpu_v4()));
+        let server = NetServer::bind("127.0.0.1:0", Arc::clone(&est), opts).unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = server.shutdown_handle();
+        let join = std::thread::spawn(move || server.run().unwrap());
+        (addr, handle, join, est)
+    }
+
+    fn gemm_line(d: usize) -> String {
+        format!("{{\"type\":\"gemm\",\"m\":{d},\"k\":{d},\"n\":{d}}}")
+    }
+
+    #[test]
+    fn malformed_line_mid_stream_errors_and_connection_continues() {
+        let (addr, handle, join, _est) = spawn_server(NetOptions::default());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "{}", gemm_line(128)).unwrap();
+        writeln!(conn, "{{not json % garbage").unwrap();
+        writeln!(conn, "{}", gemm_line(256)).unwrap();
+        conn.flush().unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+
+        // All three lines are answered in order; the garbage line gets a
+        // structured error and the connection keeps serving afterwards.
+        let lines: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 3);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).expect("response must be valid JSON");
+            assert_eq!(j.req_f64("id").unwrap(), i as f64, "out of order: {line}");
+            let ok = j.get("ok") == Some(&Json::Bool(true));
+            if i == 1 {
+                assert!(!ok, "garbage must fail: {line}");
+                assert!(j.req_str("error").unwrap().len() > 3);
+            } else {
+                assert!(ok, "good request must survive a bad neighbor: {line}");
+            }
+        }
+
+        handle.shutdown();
+        let summary = join.join().unwrap();
+        assert_eq!(summary.stream.requests, 3);
+        assert_eq!(summary.stream.ok, 2);
+        assert_eq!(summary.stream.errors, 1);
+    }
+
+    #[test]
+    fn client_disconnect_mid_request_does_not_wedge_pool_or_cache() {
+        let (addr, handle, join, _est) = spawn_server(NetOptions::default());
+        let lines: Vec<String> = (0..50).map(|i| gemm_line(32 + 16 * (i % 8))).collect();
+
+        // Client 1 fires 50 requests and vanishes without reading a byte.
+        {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            for line in &lines {
+                writeln!(conn, "{line}").unwrap();
+            }
+            conn.flush().unwrap();
+        } // dropped here: responses hit a dead socket
+
+        // Client 2 must still get complete, correct service over the same
+        // shared cache the dead client warmed.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        for line in &lines {
+            writeln!(conn, "{line}").unwrap();
+        }
+        conn.flush().unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+        let responses: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+        let baseline = serve_lines(Arc::new(sweep_estimator(&DeviceSpec::tpu_v4())), &lines, 1);
+        assert_eq!(responses, baseline, "cache poisoned or pool wedged by dead client");
+
+        handle.shutdown();
+        let summary = join.join().unwrap();
+        // The live connection's 50 requests are fully accounted for. The
+        // dead client's reader may stop early once its writer notices the
+        // lost socket, so its count is bounded, not exact — but every
+        // counted request resolved to exactly one of ok/error.
+        assert_eq!(summary.connections, 2);
+        assert!(summary.stream.requests >= 50 && summary.stream.requests <= 100);
+        assert!(summary.stream.ok >= 50);
+        assert_eq!(summary.stream.ok + summary.stream.errors, summary.stream.requests);
+    }
+
+    #[test]
+    fn slow_reader_does_not_stall_other_connections() {
+        // Small in-flight cap so the slow connection saturates its own
+        // lane quickly instead of flooding the pool.
+        let (addr, handle, join, _est) = spawn_server(NetOptions {
+            workers: 4,
+            inflight: 8,
+            ..NetOptions::default()
+        });
+
+        // Slow client: 200 requests, reads nothing yet.
+        let slow = TcpStream::connect(addr).unwrap();
+        let slow_wr = std::thread::spawn({
+            let mut wr = slow.try_clone().unwrap();
+            move || {
+                for i in 0..200 {
+                    writeln!(wr, "{}", gemm_line(32 + 16 * (i % 12))).unwrap();
+                }
+                wr.flush().unwrap();
+                wr.shutdown(Shutdown::Write).ok();
+            }
+        });
+
+        // Fast client: must stream all 100 responses promptly while the
+        // slow connection sits unread. The read timeout is the hang alarm.
+        let mut fast = TcpStream::connect(addr).unwrap();
+        fast.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        for i in 0..100 {
+            writeln!(fast, "{}", gemm_line(48 + 16 * (i % 12))).unwrap();
+        }
+        fast.flush().unwrap();
+        fast.shutdown(Shutdown::Write).unwrap();
+        let fast_responses: Vec<String> =
+            BufReader::new(fast).lines().map(|l| l.unwrap()).collect();
+        assert_eq!(fast_responses.len(), 100, "fast connection stalled by slow reader");
+        for (i, line) in fast_responses.iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.req_f64("id").unwrap(), i as f64);
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+        }
+
+        // Now drain the slow connection; every one of its responses must
+        // still arrive, in order.
+        slow_wr.join().unwrap();
+        slow.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let slow_responses: Vec<String> =
+            BufReader::new(slow).lines().map(|l| l.unwrap()).collect();
+        assert_eq!(slow_responses.len(), 200);
+        for (i, line) in slow_responses.iter().enumerate() {
+            assert_eq!(Json::parse(line).unwrap().req_f64("id").unwrap(), i as f64);
+        }
+
+        handle.shutdown();
+        let summary = join.join().unwrap();
+        assert_eq!(summary.stream.requests, 300);
+        assert_eq!(summary.stream.ok, 300);
+        assert_eq!(summary.stream.errors, 0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Concurrency battery for the TCP service: in-order per-connection
+//! streaming under 16-way client concurrency, bit-identity against the
+//! single-threaded batch path, graceful drain accounting, and the
+//! warm-cache snapshot round trip.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use scalesim_tpu::coordinator::{
+    default_workers, load_snapshot, save_snapshot, serve_lines, Estimator, NetOptions, NetServer,
+    NetSummary, ShutdownHandle,
+};
+use scalesim_tpu::device::DeviceSpec;
+use scalesim_tpu::sweep::sweep_estimator;
+use scalesim_tpu::util::json::Json;
+
+/// A server over a deterministic sweep-calibrated tpu-v4 estimator.
+fn spawn_server(
+    opts: NetOptions,
+) -> (
+    SocketAddr,
+    ShutdownHandle,
+    JoinHandle<NetSummary>,
+    Arc<Estimator>,
+) {
+    let est = Arc::new(sweep_estimator(&DeviceSpec::tpu_v4()));
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&est), opts).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.shutdown_handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle, join, est)
+}
+
+/// Send `lines` on one connection (half-closing the write side to mark
+/// the end) and collect every response line until the server closes.
+fn run_conn(addr: SocketAddr, lines: &[String]) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    for line in lines {
+        writeln!(conn, "{line}").unwrap();
+    }
+    conn.flush().unwrap();
+    conn.shutdown(Shutdown::Write).unwrap();
+    BufReader::new(conn).lines().map(|l| l.unwrap()).collect()
+}
+
+const CLIENTS: usize = 16;
+const REQUESTS: usize = 500;
+
+/// Client c's request stream: cycles a *shared* pool of 24 shapes with a
+/// per-client phase, so concurrent connections contend on the same cache
+/// entries in interleavings that differ run to run.
+fn client_lines(c: usize) -> Vec<String> {
+    (0..REQUESTS)
+        .map(|i| {
+            let d = 32 + 16 * ((i + c) % 24);
+            format!(r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#)
+        })
+        .collect()
+}
+
+#[test]
+fn sixteen_concurrent_clients_in_order_and_bit_identical_to_batch() {
+    let (addr, handle, join, _est) = spawn_server(NetOptions::default());
+
+    // 16 concurrent connections x 500 requests. Each client writes from
+    // a helper thread and reads on its own, so server-side backpressure
+    // (the per-connection in-flight gate) can never deadlock a client.
+    let clients: Vec<JoinHandle<Vec<String>>> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let lines = client_lines(c);
+                let conn = TcpStream::connect(addr).unwrap();
+                let mut wr = conn.try_clone().unwrap();
+                let writer = std::thread::spawn(move || {
+                    for line in &lines {
+                        writeln!(wr, "{line}").unwrap();
+                    }
+                    wr.flush().unwrap();
+                });
+                let mut reader = BufReader::new(conn);
+                let mut responses = Vec::with_capacity(REQUESTS);
+                let mut buf = String::new();
+                for _ in 0..REQUESTS {
+                    buf.clear();
+                    assert!(reader.read_line(&mut buf).unwrap() > 0, "server closed early");
+                    responses.push(buf.trim_end().to_string());
+                }
+                writer.join().unwrap();
+                responses
+            })
+        })
+        .collect();
+    let per_client: Vec<Vec<String>> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    // Every connection's responses arrive in its own request order, and
+    // each is bit-identical to the same requests run through the
+    // single-threaded batch path on a fresh estimator — shared-cache
+    // results must not depend on interleaving.
+    for (c, responses) in per_client.iter().enumerate() {
+        for (i, resp) in responses.iter().enumerate() {
+            let j = Json::parse(resp).expect("response is JSON");
+            assert_eq!(j.req_f64("id").unwrap(), i as f64, "client {c} out of order: {resp}");
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        }
+        let baseline = serve_lines(
+            Arc::new(sweep_estimator(&DeviceSpec::tpu_v4())),
+            &client_lines(c),
+            1,
+        );
+        assert_eq!(responses, &baseline, "client {c} diverged from the batch path");
+    }
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.connections, CLIENTS as u64);
+    assert_eq!(summary.stream.requests, (CLIENTS * REQUESTS) as u64);
+    assert_eq!(summary.stream.ok, (CLIENTS * REQUESTS) as u64);
+    assert_eq!(summary.stream.errors, 0);
+    assert_eq!(summary.stream.gemm, (CLIENTS * REQUESTS) as u64);
+    // 24 distinct shapes on one device; everything else hit the cache
+    // (racing workers may both miss a fresh key, so misses are bounded,
+    // not exact).
+    let cache = summary.stream.cache;
+    assert_eq!(cache.hits + cache.misses, (CLIENTS * REQUESTS) as u64);
+    assert_eq!(cache.entries, 24);
+    // Concurrent workers may each miss a fresh key once before the first
+    // store lands, so misses are bounded by keys x workers, not exact.
+    let miss_bound = (24 * default_workers().max(1)) as u64;
+    assert!(cache.misses <= miss_bound, "misses {} > {miss_bound}", cache.misses);
+}
+
+#[test]
+fn drain_answers_every_inflight_request_exactly_once() {
+    let (addr, _handle, join, _est) = spawn_server(NetOptions {
+        workers: 4,
+        ..NetOptions::default()
+    });
+
+    // 100 requests and the shutdown admin request land in one write, so
+    // the drain triggers while the pool is still answering the backlog.
+    let mut payload = String::new();
+    for i in 0..100 {
+        let d = 32 + 16 * (i % 10);
+        payload.push_str(&format!("{{\"type\":\"gemm\",\"m\":{d},\"k\":{d},\"n\":{d}}}\n"));
+    }
+    payload.push_str("{\"type\":\"shutdown\"}\n");
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(payload.as_bytes()).unwrap();
+    conn.flush().unwrap();
+    let lines: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+
+    // Every accepted request is answered, in order, exactly once — the
+    // gemm backlog first, the shutdown acknowledgement last.
+    assert_eq!(lines.len(), 101);
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).expect("response is JSON");
+        assert_eq!(j.req_f64("id").unwrap(), i as f64, "out of order: {line}");
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+    }
+    assert_eq!(Json::parse(&lines[100]).unwrap().req_str("type").unwrap(), "shutdown");
+
+    // The final summary counts every request exactly once.
+    let summary = join.join().unwrap();
+    assert_eq!(summary.connections, 1);
+    assert_eq!(summary.stream.requests, 101);
+    assert_eq!(summary.stream.ok, 101);
+    assert_eq!(summary.stream.errors, 0);
+    assert_eq!(summary.stream.gemm, 100);
+
+    // And the listener is gone: new connections are refused.
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "drained server must refuse new connections"
+    );
+}
+
+/// Warm-up traffic shared by the snapshot test's phases.
+fn warm_lines() -> Vec<String> {
+    let mut lines = Vec::new();
+    for d in [64usize, 96, 128, 160, 64, 96] {
+        lines.push(format!(r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#));
+    }
+    lines.push(r#"{"type":"elementwise","op":"add","dims":[256,256]}"#.into());
+    lines.push(r#"{"type":"elementwise","op":"tanh","dims":[128,128]}"#.into());
+    lines
+}
+
+/// Probe traffic: mostly warm shapes, one cold, and a stats request
+/// whose counters must match between a continuously-warm server and a
+/// snapshot-restarted one.
+fn probe_lines() -> Vec<String> {
+    let mut lines = Vec::new();
+    for d in [64usize, 128, 160, 192, 96] {
+        lines.push(format!(r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#));
+    }
+    lines.push(r#"{"type":"elementwise","op":"add","dims":[256,256]}"#.into());
+    lines.push(r#"{"type":"stats"}"#.into());
+    lines
+}
+
+#[test]
+fn snapshot_restart_is_bit_identical_to_continuously_warm_server() {
+    // Single worker: hit/miss counts are deterministic (no two workers
+    // racing the same fresh key), so the stats responses and summaries
+    // must match to the bit across the restart.
+    let one_worker = || NetOptions {
+        workers: 1,
+        ..NetOptions::default()
+    };
+    let dir = std::env::temp_dir().join("scalesim_serve_net_snapshot");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cache.snapshot.jsonl");
+    std::fs::remove_file(&path).ok();
+
+    // Phase A: continuously warm — warm + probe on one server lifetime.
+    let (addr, handle, join, _est) = spawn_server(one_worker());
+    let _ = run_conn(addr, &warm_lines());
+    let baseline_probe = run_conn(addr, &probe_lines());
+    handle.shutdown();
+    let baseline_summary = join.join().unwrap();
+
+    // Phase B: warm, drain, snapshot...
+    let (addr, handle, join, est) = spawn_server(one_worker());
+    let warm_responses = run_conn(addr, &warm_lines());
+    assert_eq!(warm_responses.len(), warm_lines().len());
+    handle.shutdown();
+    join.join().unwrap();
+    save_snapshot(&path, &est).unwrap();
+
+    // ...restart cold, reload, probe.
+    let (addr, handle, join, est2) = spawn_server(one_worker());
+    assert!(est2.cache.is_empty());
+    let loaded = load_snapshot(&path, &est2).unwrap();
+    assert_eq!(loaded, est2.cache.len() as u64);
+    let restart_probe = run_conn(addr, &probe_lines());
+    handle.shutdown();
+    let restart_summary = join.join().unwrap();
+
+    // Warm-start responses — including the stats line's hit/miss/source
+    // counters — are bit-identical to the continuously-warm server.
+    assert_eq!(restart_probe, baseline_probe);
+    assert_eq!(restart_summary.stream.cache, baseline_summary.stream.cache);
+    assert_eq!(restart_summary.stream.requests, probe_lines().len() as u64);
+}

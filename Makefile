@@ -8,10 +8,11 @@
 #   calibrate        build + save modeling assets
 #   serve            streaming JSONL estimation service (sharded cache;
 #                    --listen for the concurrent TCP front end,
-#                    --cache-snapshot for warm restarts)
+#                    --cache-snapshot for warm restarts, --metrics /
+#                    --trace for the observability surface)
 #   bench-serve      closed-loop load generator for the TCP service
 
-.PHONY: build test bench bench-schedule bench-devices bench-estimator bench-serve devices artifacts fmt clippy doc check
+.PHONY: build test bench bench-schedule bench-devices bench-estimator bench-serve devices trace artifacts fmt clippy doc check
 
 build:
 	cargo build --release
@@ -55,6 +56,16 @@ devices: build
 	cargo run --release -- devices --check --dir rust/devices
 	cargo run --release -- compare --module rust/tests/fixtures/bert_layer.mlir \
 		--chips 4 --shapes 30 --reps 1 --assets target/device-smoke-assets
+
+# Render the BERT-layer fixture's memory-aware schedule as Chrome
+# trace-event JSON (target/bert.trace.json) — drag it into
+# https://ui.perfetto.dev or chrome://tracing. One lane per engine
+# (MXU/VPU/DMA/ICI), critical-path ops flagged, DMA sub-slices and
+# residency spills on the DMA lane.
+trace: build
+	cargo run --release -- simulate \
+		--module rust/tests/fixtures/bert_layer.mlir --memory \
+		--trace-out target/bert.trace.json
 
 fmt:
 	cargo fmt --all --check

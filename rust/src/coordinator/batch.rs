@@ -187,6 +187,16 @@ impl<'m> OpTable<'m> {
         self.unique.len()
     }
 
+    /// True when every cacheable shape in the table is already resident
+    /// in `cache` — i.e. estimating it now would be a pure warm replay.
+    /// Uses [`ShardedCache::peek`](super::ShardedCache::peek), so the
+    /// check is invisible to the hit/miss accounting; the observability
+    /// layer classifies each module request's estimate phase as
+    /// cache-hit vs cache-miss with it.
+    pub fn warm_in(&self, cache: &super::ShardedCache) -> bool {
+        self.unique.iter().all(|key| cache.peek(key))
+    }
+
     /// Replay the lowering events over the per-leaf costs, rebuilding
     /// the estimate in the scalar walk's exact accumulation order.
     fn assemble(&self, costs: Vec<CachedCost>) -> ModelEstimate {
@@ -578,6 +588,23 @@ module @m { func.func public @main(%a: tensor<128x256xbf16>, %b: tensor<256x512x
             },
         );
         assert_eq!(scalar.latency_us.to_bits(), costs[0].latency_us.to_bits());
+    }
+
+    #[test]
+    fn warm_in_flips_after_first_estimate_without_counting() {
+        let text = r#"
+module @m { func.func public @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> tensor<64x64xf32> {
+  %0 = stablehlo.dot_general %a, %b, contracting_dims = [1] x [0] : (tensor<64x64xf32>, tensor<64x64xf32>) -> tensor<64x64xf32>
+  return %0 : tensor<64x64xf32>
+} }"#;
+        let module = parse_module(text).unwrap();
+        let est = estimator();
+        let table = est.lower_module(&module);
+        assert!(!table.warm_in(&est.cache), "cold cache");
+        let before = est.cache.stats();
+        assert_eq!((before.hits, before.misses), (0, 0), "peek never counts");
+        est.estimate_table(&table);
+        assert!(table.warm_in(&est.cache), "warm after one estimate");
     }
 
     #[test]

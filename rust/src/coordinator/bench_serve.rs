@@ -7,7 +7,9 @@
 //! request mix cycles through a fixed set of distinct GEMM shapes and a
 //! warm-up pass primes the shared shape cache first, so the measured
 //! regime is the one the service is built for: warm-cache hits under
-//! real connection concurrency.
+//! real connection concurrency. In-process runs also attach a
+//! [`ServeMetrics`] surface and report the in-pool queue-wait vs
+//! worker service-time breakdown from its phase histograms.
 //!
 //! `--publish` writes `BENCH_serve.json` at the repo root with an FNV-1a
 //! fingerprint of this source file; `--check` re-reads it and fails when
@@ -24,11 +26,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::device::DeviceSpec;
+use crate::obs::MonotonicClock;
 use crate::sweep::sweep_estimator;
 use crate::util::json::Json;
 
 use super::net::{NetOptions, NetServer};
 use super::pool::default_workers;
+use super::service::ServeMetrics;
 
 const SOURCE: &str = include_str!("bench_serve.rs");
 
@@ -108,6 +112,17 @@ pub struct BenchReport {
     pub cache_hit_rate: Option<f64>,
     /// Paced offered load, if any.
     pub rps_target: Option<f64>,
+    /// Mean in-pool queue wait per request, µs — time between slot
+    /// submission and a worker claiming the job (in-process server
+    /// only; from the serve `queue_wait` phase histogram).
+    pub queue_wait_mean_us: Option<f64>,
+    /// p95 in-pool queue wait, µs (bucketed, so an upper bound).
+    pub queue_wait_p95_us: Option<f64>,
+    /// Mean estimate-phase service time per request, µs — the worker's
+    /// answer computation, queue wait excluded (in-process only).
+    pub service_mean_us: Option<f64>,
+    /// p95 estimate-phase service time, µs (bucketed upper bound).
+    pub service_p95_us: Option<f64>,
 }
 
 impl BenchReport {
@@ -127,6 +142,17 @@ impl BenchReport {
         );
         if let Some(hr) = self.cache_hit_rate {
             s.push_str(&format!("; cache hit rate {:.1}%", hr * 100.0));
+        }
+        if let (Some(qm), Some(qp), Some(sm), Some(sp)) = (
+            self.queue_wait_mean_us,
+            self.queue_wait_p95_us,
+            self.service_mean_us,
+            self.service_p95_us,
+        ) {
+            s.push_str(&format!(
+                "\n  breakdown: queue wait mean {qm:.1} us (p95 <= {qp:.1}) vs \
+                 service mean {sm:.1} us (p95 <= {sp:.1})"
+            ));
         }
         if let Some(r) = self.rps_target {
             s.push_str(&format!("; paced at {r:.0} req/s offered"));
@@ -153,6 +179,18 @@ impl BenchReport {
         }
         if let Some(r) = self.rps_target {
             o.set("rps_target", Json::Num(r));
+        }
+        if let Some(v) = self.queue_wait_mean_us {
+            o.set("queue_wait_mean_us", Json::Num(v));
+        }
+        if let Some(v) = self.queue_wait_p95_us {
+            o.set("queue_wait_p95_us", Json::Num(v));
+        }
+        if let Some(v) = self.service_mean_us {
+            o.set("service_mean_us", Json::Num(v));
+        }
+        if let Some(v) = self.service_p95_us {
+            o.set("service_p95_us", Json::Num(v));
         }
         o
     }
@@ -237,6 +275,7 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
     // In-process server (unless a remote --addr was given).
     let mut server_thread = None;
     let mut shutdown = None;
+    let mut metrics: Option<Arc<ServeMetrics>> = None;
     let addr = match &opts.addr {
         Some(a) => a.clone(),
         None => {
@@ -249,6 +288,14 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
                     ..NetOptions::default()
                 },
             )?;
+            // Instrument the in-process server (histograms only, no
+            // trace) so the report can split in-pool queue wait from
+            // worker service time; a clock read plus an atomic bucket
+            // increment per phase is noise next to the ~100 µs
+            // request round-trip.
+            let m = Arc::new(ServeMetrics::new(Arc::new(MonotonicClock::new()), None));
+            server.devices().attach_metrics(Arc::clone(&m));
+            metrics = Some(m);
             let addr = server.local_addr()?.to_string();
             shutdown = Some(server.shutdown_handle());
             server_thread = Some(std::thread::spawn(move || server.run()));
@@ -293,6 +340,21 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
         cache_hit_rate = Some(summary.stream.cache.hit_rate());
     }
 
+    // Queue-wait vs service-time breakdown from the phase histograms
+    // (ns-valued; the warm-up pass is included, which is fine — it is
+    // 8 requests against thousands).
+    let phase_us = |phase: &str, q: Option<f64>| -> Option<f64> {
+        let snap = metrics.as_ref()?.phase_snapshot(phase)?;
+        Some(match q {
+            Some(q) => snap.quantile(q) / 1e3,
+            None => snap.mean() / 1e3,
+        })
+    };
+    let queue_wait_mean_us = phase_us("queue_wait", None);
+    let queue_wait_p95_us = phase_us("queue_wait", Some(0.95));
+    let service_mean_us = phase_us("estimate", None);
+    let service_p95_us = phase_us("estimate", Some(0.95));
+
     latencies.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
     let total_requests = latencies.len() as u64;
     Ok(BenchReport {
@@ -307,6 +369,10 @@ pub fn run_bench(opts: &BenchOptions) -> Result<BenchReport> {
         p99_us: percentile(&latencies, 0.99),
         cache_hit_rate,
         rps_target: opts.rps,
+        queue_wait_mean_us,
+        queue_wait_p95_us,
+        service_mean_us,
+        service_p95_us,
     })
 }
 
@@ -367,8 +433,19 @@ mod tests {
         assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
         // Warm-up covered every shape: the timed phase is all hits.
         assert!(report.cache_hit_rate.unwrap() > 0.5);
+        // In-process runs are instrumented: the queue-wait vs service
+        // breakdown must be present, with real work on the service side.
+        // (No mean-vs-p95 ordering asserted: the mean is exact but the
+        // quantile is a bucket upper bound, so a long-tailed phase can
+        // legitimately have mean > p95.)
+        assert!(report.service_mean_us.unwrap() > 0.0);
+        assert!(report.service_p95_us.unwrap() > 0.0);
+        assert!(report.queue_wait_mean_us.unwrap() >= 0.0);
+        assert!(report.queue_wait_p95_us.unwrap() >= 0.0);
         let j = report.to_json();
         assert_eq!(j.req_str("bench").unwrap(), "serve");
         assert_eq!(j.req_str("source_fingerprint").unwrap(), source_fingerprint());
+        assert!(j.get("queue_wait_mean_us").is_some());
+        assert!(j.get("service_mean_us").is_some());
     }
 }

@@ -14,7 +14,7 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, TryLockError};
 
 use crate::distributed::ici::{IciTopology, SliceConfig};
 use crate::frontend::classify::{CollectiveKind, EwKind, OpClass};
@@ -290,9 +290,32 @@ pub(crate) fn source_index(src: &EstimateSource) -> usize {
     }
 }
 
+/// Per-shard traffic counters, exposed to the observability layer as
+/// `scalesim_cache_shard_*` metric families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardTraffic {
+    /// Probes this shard answered from its map.
+    pub hits: u64,
+    /// Probes this shard could not answer. Grouped (batched) probes
+    /// count each *unique* shape once, matching the actual map traffic.
+    pub misses: u64,
+    /// Lock acquisitions that found the shard's mutex already held.
+    pub contended: u64,
+}
+
+/// One shard's lock-free counters (next to, not under, its mutex).
+#[derive(Debug, Default)]
+struct ShardCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    contended: AtomicU64,
+}
+
 /// The mutex-striped shape cache itself.
 pub struct ShardedCache {
     shards: Vec<Mutex<HashMap<ShapeKey, CachedCost>>>,
+    /// Per-shard traffic counters, indexed like `shards`.
+    shard_stats: Vec<ShardCounters>,
     enabled: AtomicBool,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -317,6 +340,7 @@ impl ShardedCache {
         let n = n.max(1);
         ShardedCache {
             shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_stats: (0..n).map(|_| ShardCounters::default()).collect(),
             enabled: AtomicBool::new(true),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -343,22 +367,54 @@ impl ShardedCache {
         (h.finish() as usize) % self.shards.len()
     }
 
+    /// Lock shard `i`, counting the acquisition as contended if the
+    /// mutex was already held (a cheap `try_lock` probe; the slow path
+    /// then blocks normally).
+    fn lock_shard(&self, i: usize) -> MutexGuard<'_, HashMap<ShapeKey, CachedCost>> {
+        match self.shards[i].try_lock() {
+            Ok(guard) => guard,
+            Err(TryLockError::WouldBlock) => {
+                self.shard_stats[i].contended.fetch_add(1, Ordering::Relaxed);
+                self.shards[i].lock().unwrap()
+            }
+            Err(TryLockError::Poisoned(_)) => self.shards[i].lock().unwrap(),
+        }
+    }
+
+    fn record_shard_probe(&self, i: usize, hit: bool) {
+        if hit {
+            self.shard_stats[i].hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shard_stats[i].misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Probe the cache, counting a hit or a miss.
     pub fn lookup(&self, key: &ShapeKey) -> Option<CachedCost> {
         if !self.is_enabled() {
             return None;
         }
-        let got = self.shards[self.shard_of(key)]
-            .lock()
-            .unwrap()
-            .get(key)
-            .cloned();
+        let shard = self.shard_of(key);
+        let got = self.lock_shard(shard).get(key).cloned();
+        self.record_shard_probe(shard, got.is_some());
         if got.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
         } else {
             self.misses.fetch_add(1, Ordering::Relaxed);
         }
         got
+    }
+
+    /// Probe without counting a hit or a miss anywhere: the
+    /// observability layer's pre-flight "is this shape warm?" check,
+    /// which must not perturb the hit/miss totals the stats responses
+    /// and the batched path account exactly.
+    pub fn peek(&self, key: &ShapeKey) -> bool {
+        if !self.is_enabled() {
+            return false;
+        }
+        let shard = self.shard_of(key);
+        self.lock_shard(shard).contains_key(key)
     }
 
     /// Store a computed cost. Two workers racing on the same fresh key
@@ -368,10 +424,8 @@ impl ShardedCache {
         if !self.is_enabled() {
             return;
         }
-        self.shards[self.shard_of(&key)]
-            .lock()
-            .unwrap()
-            .insert(key, cost);
+        let shard = self.shard_of(&key);
+        self.lock_shard(shard).insert(key, cost);
     }
 
     /// Probe a batch of keys with one lock acquisition per *touched
@@ -393,13 +447,17 @@ impl ShardedCache {
         for (i, key) in keys.iter().enumerate() {
             by_shard[self.shard_of(key)].push(i);
         }
-        for (shard, idxs) in self.shards.iter().zip(&by_shard) {
+        for (s, idxs) in by_shard.iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
-            let map = shard.lock().unwrap();
+            let map = self.lock_shard(s);
             for &i in idxs {
                 out[i] = map.get(&keys[i]).cloned();
+            }
+            drop(map);
+            for &i in idxs {
+                self.record_shard_probe(s, out[i].is_some());
             }
         }
         out
@@ -418,11 +476,11 @@ impl ShardedCache {
             let shard = self.shard_of(&key);
             by_shard[shard].push((key, cost));
         }
-        for (shard, group) in self.shards.iter().zip(by_shard) {
+        for (s, group) in by_shard.into_iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            let mut map = shard.lock().unwrap();
+            let mut map = self.lock_shard(s);
             for (key, cost) in group {
                 map.insert(key, cost);
             }
@@ -553,6 +611,21 @@ impl ShardedCache {
         for (cell, &v) in self.mode_total_us.iter().zip(&snap.mode_total_us_bits) {
             cell.store(v, Ordering::Relaxed);
         }
+    }
+
+    /// Per-shard traffic counters in shard order, for the
+    /// `scalesim_cache_shard_{hits,misses,contended}_total` metric
+    /// families. Independent of the global hit/miss totals: grouped
+    /// probes count per unique shape here but per occurrence there.
+    pub fn shard_traffic(&self) -> Vec<ShardTraffic> {
+        self.shard_stats
+            .iter()
+            .map(|s| ShardTraffic {
+                hits: s.hits.load(Ordering::Relaxed),
+                misses: s.misses.load(Ordering::Relaxed),
+                contended: s.contended.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 
     /// Snapshot of every counter (entries counted live).
@@ -791,6 +864,42 @@ mod tests {
             (sa.systolic, sa.learned, sa.learned_proxy, sa.bandwidth, sa.free, sa.fallback),
             (sb.systolic, sb.learned, sb.learned_proxy, sb.bandwidth, sb.free, sb.fallback)
         );
+    }
+
+    #[test]
+    fn peek_is_invisible_to_every_counter() {
+        let c = ShardedCache::with_shards(1);
+        assert!(!c.peek(&gemm_key(64)));
+        c.store(gemm_key(64), cost(1.0));
+        assert!(c.peek(&gemm_key(64)));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        let traffic = c.shard_traffic();
+        assert_eq!(traffic.len(), 1);
+        assert_eq!((traffic[0].hits, traffic[0].misses), (0, 0));
+        c.set_enabled(false);
+        assert!(!c.peek(&gemm_key(64)), "disabled peek always cold");
+    }
+
+    #[test]
+    fn shard_traffic_tracks_probes_per_shard() {
+        let c = ShardedCache::with_shards(2);
+        c.lookup(&gemm_key(64)); // miss
+        c.store(gemm_key(64), cost(1.0));
+        c.lookup(&gemm_key(64)); // hit
+        let traffic = c.shard_traffic();
+        assert_eq!(traffic.len(), 2);
+        let hits: u64 = traffic.iter().map(|t| t.hits).sum();
+        let misses: u64 = traffic.iter().map(|t| t.misses).sum();
+        assert_eq!((hits, misses), (1, 1));
+        // Grouped probes count once per unique shape on the owning shard.
+        c.lookup_grouped(&[gemm_key(64), gemm_key(128)]);
+        let traffic = c.shard_traffic();
+        let hits: u64 = traffic.iter().map(|t| t.hits).sum();
+        let misses: u64 = traffic.iter().map(|t| t.misses).sum();
+        assert_eq!((hits, misses), (2, 2));
+        // The single-threaded walk above never contends.
+        assert_eq!(traffic.iter().map(|t| t.contended).sum::<u64>(), 0);
     }
 
     #[test]

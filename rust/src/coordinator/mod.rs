@@ -19,14 +19,15 @@ pub mod snapshot;
 pub use batch::OpTable;
 pub use bench_serve::{run_bench, BenchOptions, BenchReport};
 pub use cache::{
-    CacheStats, CachedCost, CounterSnapshot, ModeStat, ShapeClass, ShapeKey, ShardedCache,
+    CacheStats, CachedCost, CounterSnapshot, ModeStat, ShapeClass, ShapeKey, ShardTraffic,
+    ShardedCache,
 };
 pub use estimator::{EstimateMode, Estimator, EstimateSource, ModelEstimate, OpEstimate};
 pub use fusion::{estimate_fused, estimate_fused_with};
 pub use net::{install_sigint_drain, NetOptions, NetServer, NetSummary, ShutdownHandle};
-pub use pool::{default_workers, parallel_map, PoolHandle, WorkerPool};
+pub use pool::{default_workers, parallel_map, PoolGauges, PoolHandle, WorkerPool};
 pub use service::{
-    serve_lines, serve_stream, DeviceEstimators, Request, SliceRequest, StreamOptions,
-    StreamSummary,
+    serve_lines, serve_stream, DeviceEstimators, Request, ServeMetrics, SliceRequest,
+    StreamOptions, StreamSummary,
 };
 pub use snapshot::{load_snapshot, save_snapshot, SNAPSHOT_FORMAT, SNAPSHOT_VERSION};

@@ -43,11 +43,12 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::obs::TraceEvent;
 use crate::util::json::Json;
 
 use super::estimator::Estimator;
 use super::pool::{default_workers, PoolHandle, WorkerPool};
-use super::service::{respond, DeviceEstimators, Request, StreamSummary};
+use super::service::{respond, DeviceEstimators, Request, ServeMetrics, StreamSummary};
 
 /// Global SIGINT latch: set by the signal handler installed with
 /// [`install_sigint_drain`], polled by every running [`NetServer`].
@@ -127,6 +128,7 @@ struct NetCounters {
     elementwise: AtomicU64,
     module: AtomicU64,
     stats: AtomicU64,
+    metrics: AtomicU64,
 }
 
 impl NetCounters {
@@ -144,6 +146,7 @@ impl NetCounters {
             Request::Elementwise { .. } => self.elementwise.fetch_add(1, Ordering::Relaxed),
             Request::Module { .. } => self.module.fetch_add(1, Ordering::Relaxed),
             Request::Stats => self.stats.fetch_add(1, Ordering::Relaxed),
+            Request::Metrics => self.metrics.fetch_add(1, Ordering::Relaxed),
         };
     }
 }
@@ -155,12 +158,35 @@ struct NetJob {
     conn: u64,
     seq: u64,
     line: String,
+    /// Clock reading when the reader submitted the job (0 when
+    /// uninstrumented); the worker credits `queue_wait` against it.
+    submit_ns: u64,
+}
+
+/// Phase timestamps a worker stamps onto its answer when metrics are
+/// attached; the writer turns the gaps into the `reorder`/`write`/
+/// `total` histograms and a per-request trace span tree.
+#[derive(Clone, Copy)]
+struct PhaseStamps {
+    submit_ns: u64,
+    start_ns: u64,
+    parse_done_ns: u64,
+    done_ns: u64,
+}
+
+/// One answered request heading back to its connection's writer.
+struct NetDone {
+    conn: u64,
+    seq: u64,
+    ok: bool,
+    resp: String,
+    phases: Option<PhaseStamps>,
 }
 
 /// A completed response routed back to its connection's writer.
 enum ConnMsg {
     /// One answered request (per-connection sequence number + JSON line).
-    Done { seq: u64, ok: bool, resp: String },
+    Done(NetDone),
     /// The reader is done; exactly `total` responses will exist.
     Eof { total: u64 },
 }
@@ -194,6 +220,17 @@ impl Gate {
         }
         st.0 += 1;
         true
+    }
+
+    /// Block until every in-flight slot has been released — i.e. every
+    /// previously submitted request on this connection has been written
+    /// back (or discarded by a dead writer). The `{"type":"stats"}`
+    /// drain barrier.
+    fn wait_empty(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 && !st.1 {
+            st = self.cv.wait(st).unwrap();
+        }
     }
 
     fn release(&self) {
@@ -274,6 +311,13 @@ impl NetServer {
         Ok(self.listener.local_addr()?)
     }
 
+    /// The per-device estimator registry every connection answers from.
+    /// Attach a [`ServeMetrics`] here (before [`NetServer::run`]) to
+    /// instrument the whole serving stack.
+    pub fn devices(&self) -> &Arc<DeviceEstimators> {
+        &self.devices
+    }
+
     /// A handle that triggers a graceful drain from another thread.
     pub fn shutdown_handle(&self) -> ShutdownHandle {
         ShutdownHandle(Arc::clone(&self.shutdown))
@@ -305,18 +349,46 @@ impl NetServer {
 
         // The shared pool: workers parse + answer; results are tagged
         // with their connection and routed by the dispatcher below.
+        // When metrics are attached the worker stamps queue-wait/parse
+        // phases here and hands the timestamps to the writer.
+        let metrics = self.devices.metrics().map(Arc::clone);
         let pool_devices = Arc::clone(&self.devices);
         let pool_counters = Arc::clone(&counters);
-        let mut pool: WorkerPool<NetJob, (u64, u64, bool, String)> =
-            WorkerPool::new(workers, queue_cap, move |_gseq, job: NetJob| {
+        let mut pool: WorkerPool<NetJob, NetDone> = WorkerPool::with_gauges(
+            workers,
+            queue_cap,
+            metrics.as_ref().map(|m| m.pool_gauges()),
+            move |_gseq, job: NetJob| {
+                let metrics = pool_devices.metrics().map(Arc::clone);
+                let start_ns = metrics.as_ref().map_or(0, |m| m.now_ns());
+                if let Some(m) = &metrics {
+                    m.record_queue_wait_ns(start_ns.saturating_sub(job.submit_ns));
+                }
                 let parsed = Request::parse(&job.line);
+                let parse_done_ns = metrics.as_ref().map_or(0, |m| m.now_ns());
+                if let Some(m) = &metrics {
+                    m.record_parse_ns(parse_done_ns.saturating_sub(start_ns));
+                }
                 if let Ok(req) = &parsed {
                     pool_counters.count_type(req);
                 }
                 let (ok, resp) = respond(&pool_devices, job.seq, parsed);
                 pool_counters.tally(ok);
-                (job.conn, job.seq, ok, resp)
-            });
+                let phases = metrics.as_ref().map(|m| PhaseStamps {
+                    submit_ns: job.submit_ns,
+                    start_ns,
+                    parse_done_ns,
+                    done_ns: m.now_ns(),
+                });
+                NetDone {
+                    conn: job.conn,
+                    seq: job.seq,
+                    ok,
+                    resp,
+                    phases,
+                }
+            },
+        );
         let submit = pool.handle();
         // Drop the pool's own sender: from here the job queue lives
         // exactly as long as the connection readers' handles.
@@ -328,7 +400,8 @@ impl NetServer {
         // sized so Full is unreachable while the in-flight gate holds.
         let disp_registry = Arc::clone(&registry);
         let dispatcher: JoinHandle<()> = std::thread::spawn(move || {
-            while let Some((_gseq, (conn, seq, ok, resp))) = pool.recv() {
+            while let Some((_gseq, done)) = pool.recv() {
+                let conn = done.conn;
                 let entry = {
                     let map = disp_registry.conns.lock().unwrap();
                     map.get(&conn).map(|e| (e.tx.clone(), Arc::clone(&e.gate)))
@@ -336,7 +409,7 @@ impl NetServer {
                 let Some((tx, gate)) = entry else {
                     continue; // connection already torn down
                 };
-                match tx.try_send(ConnMsg::Done { seq, ok, resp }) {
+                match tx.try_send(ConnMsg::Done(done)) {
                     Ok(()) => {}
                     Err(TrySendError::Full(_)) => {
                         // Unreachable by construction (queue capacity >
@@ -410,6 +483,7 @@ impl NetServer {
             elementwise: counters.elementwise.load(Ordering::Relaxed),
             module: counters.module.load(Ordering::Relaxed),
             stats_requests: counters.stats.load(Ordering::Relaxed),
+            metrics_requests: counters.metrics.load(Ordering::Relaxed),
             cache: self.estimator.cache.stats(),
         };
         Ok(NetSummary {
@@ -449,11 +523,15 @@ impl NetServer {
             },
         );
         let shutdown = Arc::clone(&self.shutdown);
+        let metrics = self.devices.metrics().map(Arc::clone);
         conn_handles.push(std::thread::spawn(move || {
             let writer_gate = Arc::clone(&gate);
-            let writer = std::thread::spawn(move || writer_loop(write_half, rx, &writer_gate));
+            let writer_metrics = metrics.clone();
+            let writer = std::thread::spawn(move || {
+                writer_loop(write_half, rx, &writer_gate, writer_metrics, conn_id)
+            });
             let total = reader_loop(
-                &stream, &submit, &tx, &gate, &counters, &shutdown, conn_id, inflight,
+                &stream, &submit, &tx, &gate, &counters, &shutdown, conn_id, inflight, &metrics,
             );
             let _ = tx.send(ConnMsg::Eof { total });
             drop(tx);
@@ -480,6 +558,7 @@ fn reader_loop(
     shutdown: &AtomicBool,
     conn_id: u64,
     inflight: usize,
+    metrics: &Option<Arc<ServeMetrics>>,
 ) -> u64 {
     let mut stream = stream;
     let mut buf: Vec<u8> = Vec::with_capacity(8 * 1024);
@@ -501,6 +580,7 @@ fn reader_loop(
                 conn_id,
                 &mut next_seq,
                 inflight,
+                metrics,
             ) {
                 LineOutcome::Continue => {}
                 LineOutcome::Stop => break 'outer,
@@ -537,6 +617,13 @@ enum LineOutcome {
 
 /// Handle one request line: submit it to the pool, or answer the
 /// `{"type":"shutdown"}` admin request inline and trigger the drain.
+///
+/// A `{"type":"stats"}` request first waits for every earlier request
+/// on this connection to be answered and written (the drain barrier the
+/// batch and stream paths already guarantee, scoped to the connection's
+/// own prefix — see [`super::serve_lines`]). Other connections keep
+/// flowing, so the counters a stats answer reports may additionally
+/// include their concurrent traffic.
 #[allow(clippy::too_many_arguments)]
 fn handle_line(
     line: &str,
@@ -548,6 +635,7 @@ fn handle_line(
     conn_id: u64,
     next_seq: &mut u64,
     inflight: usize,
+    metrics: &Option<Arc<ServeMetrics>>,
 ) -> LineOutcome {
     if line.is_empty() {
         return LineOutcome::Continue;
@@ -558,7 +646,7 @@ fn handle_line(
     // early exits below.
     let seq = *next_seq;
     counters.requests.fetch_add(1, Ordering::Relaxed);
-    if is_shutdown_request(line) {
+    if is_admin_request(line, "\"shutdown\"", "shutdown") {
         // Admin drain: acknowledge on this connection (in order), then
         // flip the flag; the supervisor stops accepting and sweeps.
         let mut ack = Json::obj();
@@ -569,14 +657,22 @@ fn handle_line(
         counters.tally(true);
         if gate.acquire(inflight) {
             *next_seq += 1;
-            let _ = tx.send(ConnMsg::Done {
+            let _ = tx.send(ConnMsg::Done(NetDone {
+                conn: conn_id,
                 seq,
                 ok: true,
                 resp: ack.dump(),
-            });
+                phases: None,
+            }));
         }
         shutdown.store(true, Ordering::SeqCst);
         return LineOutcome::Stop;
+    }
+    if is_admin_request(line, "\"stats\"", "stats") {
+        // Drain barrier: block until the connection's in-flight window
+        // is empty, so the submitted stats request observes counters
+        // covering this connection's entire answered prefix.
+        gate.wait_empty();
     }
     if !gate.acquire(inflight) {
         // Writer lost its socket: every further answer would be
@@ -585,12 +681,14 @@ fn handle_line(
         counters.tally(false);
         return LineOutcome::Stop;
     }
+    let submit_ns = metrics.as_ref().map_or(0, |m| m.now_ns());
     if !submit.submit(
         seq,
         NetJob {
             conn: conn_id,
             seq,
             line: line.to_string(),
+            submit_ns,
         },
     ) {
         counters.tally(false);
@@ -602,13 +700,15 @@ fn handle_line(
 }
 
 /// Cheap admin-request probe: avoids JSON-parsing every line twice by
-/// only parsing lines that literally contain `"shutdown"`.
-fn is_shutdown_request(line: &str) -> bool {
-    if !line.contains("\"shutdown\"") {
+/// only parsing lines that literally contain the pre-quoted type name
+/// (`quoted` is `ty` wrapped in `"` — passed separately so the hot path
+/// never allocates).
+fn is_admin_request(line: &str, quoted: &str, ty: &str) -> bool {
+    if !line.contains(quoted) {
         return false;
     }
     match Json::parse(line) {
-        Ok(j) => j.get("type").and_then(Json::as_str) == Some("shutdown"),
+        Ok(j) => j.get("type").and_then(Json::as_str) == Some(ty),
         Err(_) => false,
     }
 }
@@ -619,13 +719,27 @@ fn is_shutdown_request(line: &str) -> bool {
 /// once `total` responses have been written — or keeps draining with the
 /// socket gone so the reader and dispatcher never block on a dead
 /// connection.
-fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<ConnMsg>, gate: &Gate) {
+///
+/// When instrumented this is also where the request's lifetime closes:
+/// the writer records the `reorder`/`write`/`total` phase histograms and
+/// emits the request's span tree (one `request` slice with
+/// `queue_wait`/`parse`/`estimate`/`reorder`/`write` children nested by
+/// time containment on lane `(pid 1, tid = connection id)`) to the
+/// attached trace file.
+fn writer_loop(
+    stream: TcpStream,
+    rx: mpsc::Receiver<ConnMsg>,
+    gate: &Gate,
+    metrics: Option<Arc<ServeMetrics>>,
+    conn_id: u64,
+) {
     let mut out = BufWriter::new(stream);
-    let mut pending: BTreeMap<u64, String> = BTreeMap::new();
+    let mut pending: BTreeMap<u64, NetDone> = BTreeMap::new();
     let mut next_write: u64 = 0;
     let mut emitted: u64 = 0;
     let mut total: Option<u64> = None;
     let mut dead = false;
+    let mut lane_named = false;
     loop {
         if total == Some(emitted) {
             break;
@@ -636,13 +750,40 @@ fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<ConnMsg>, gate: &Gate) {
         };
         match msg {
             ConnMsg::Eof { total: t } => total = Some(t),
-            ConnMsg::Done { seq, resp, .. } => {
-                pending.insert(seq, resp);
+            ConnMsg::Done(done) => {
+                pending.insert(done.seq, done);
                 let mut wrote = false;
-                while let Some(resp) = pending.remove(&next_write) {
-                    if !dead && writeln!(out, "{resp}").is_err() {
+                while let Some(done) = pending.remove(&next_write) {
+                    let write_start_ns = match (&metrics, &done.phases) {
+                        (Some(m), Some(_)) => m.now_ns(),
+                        _ => 0,
+                    };
+                    if !dead && writeln!(out, "{}", done.resp).is_err() {
                         dead = true;
                         gate.kill();
+                    }
+                    if let (Some(m), Some(ph)) = (&metrics, &done.phases) {
+                        let write_done_ns = m.now_ns();
+                        m.record_reorder_ns(write_start_ns.saturating_sub(ph.done_ns));
+                        m.record_write_ns(write_done_ns.saturating_sub(write_start_ns));
+                        m.record_total_ns(write_done_ns.saturating_sub(ph.submit_ns));
+                        if let Some(tw) = m.trace() {
+                            if !lane_named {
+                                lane_named = true;
+                                let _ = tw.write(&TraceEvent::thread_name(
+                                    1,
+                                    conn_id,
+                                    &format!("conn {conn_id}"),
+                                ));
+                            }
+                            let _ = tw.write_all(&request_span_tree(
+                                &done,
+                                ph,
+                                write_start_ns,
+                                write_done_ns,
+                                conn_id,
+                            ));
+                        }
                     }
                     next_write += 1;
                     emitted += 1;
@@ -657,6 +798,39 @@ fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<ConnMsg>, gate: &Gate) {
         }
     }
     let _ = out.flush();
+}
+
+/// Build one request's completed span tree: a parent `request` slice
+/// covering submit → written, with one child slice per phase. All on
+/// `(pid 1, tid = connection id)`, so viewers nest the children inside
+/// the parent by time containment.
+fn request_span_tree(
+    done: &NetDone,
+    ph: &PhaseStamps,
+    write_start_ns: u64,
+    write_done_ns: u64,
+    conn_id: u64,
+) -> Vec<TraceEvent> {
+    let slice = |name: &str, from_ns: u64, to_ns: u64| {
+        TraceEvent::complete(
+            name,
+            "serve",
+            from_ns as f64 / 1000.0,
+            to_ns.saturating_sub(from_ns) as f64 / 1000.0,
+            1,
+            conn_id,
+        )
+    };
+    vec![
+        slice("request", ph.submit_ns, write_done_ns)
+            .arg("id", Json::Num(done.seq as f64))
+            .arg("ok", Json::Bool(done.ok)),
+        slice("queue_wait", ph.submit_ns, ph.start_ns),
+        slice("parse", ph.start_ns, ph.parse_done_ns),
+        slice("estimate", ph.parse_done_ns, ph.done_ns),
+        slice("reorder", ph.done_ns, write_start_ns),
+        slice("write", write_start_ns, write_done_ns),
+    ]
 }
 
 #[cfg(test)]
@@ -704,6 +878,123 @@ mod tests {
         assert_eq!(summary.stream.requests, 6);
         assert_eq!(summary.stream.ok, 6);
         assert_eq!(summary.stream.errors, 0);
+    }
+
+    #[test]
+    fn stats_barrier_covers_the_connection_prefix() {
+        // Regression (stats drain-barrier unification): the TCP path
+        // must answer `{"type":"stats"}` only after every earlier
+        // request on the same connection has been answered and written,
+        // matching the batch/stream semantics documented on
+        // `serve_lines`. Without the barrier the stats request races
+        // the gemms through the shared pool and undercounts.
+        let (addr, _handle, join) = spawn_server();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let n = 40usize;
+        for i in 0..n {
+            let d = 64 + (i % 4) * 32;
+            writeln!(conn, r#"{{"type":"gemm","m":{d},"k":{d},"n":{d}}}"#).unwrap();
+        }
+        writeln!(conn, "{{\"type\":\"stats\"}}").unwrap();
+        writeln!(conn, "{{\"type\":\"shutdown\"}}").unwrap();
+        conn.flush().unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), n + 2);
+        let stats = Json::parse(&lines[n]).unwrap();
+        assert_eq!(stats.req_str("type").unwrap(), "stats");
+        assert_eq!(stats.req_f64("id").unwrap(), n as f64);
+        // The barrier saw all 40 gemm probes — no more, no fewer. Two
+        // workers racing on the same fresh key may both miss, so the
+        // split is bounded, not exact.
+        let hits = stats.req_f64("cache_hits").unwrap();
+        let misses = stats.req_f64("cache_misses").unwrap();
+        assert_eq!(hits + misses, n as f64);
+        assert_eq!(stats.req_f64("cache_entries").unwrap(), 4.0);
+        let summary = join.join().unwrap();
+        assert_eq!(summary.stream.requests, (n + 2) as u64);
+        assert_eq!(summary.stream.stats_requests, 1);
+    }
+
+    #[test]
+    fn instrumented_tcp_serve_emits_phase_metrics_and_trace_spans() {
+        use crate::obs::{MonotonicClock, RegistrySnapshot, TraceFileWriter};
+        let dir = std::env::temp_dir().join("scalesim_net_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("serve-{}.trace.json", std::process::id()));
+        let trace = Arc::new(TraceFileWriter::create(&path).unwrap());
+        let metrics = Arc::new(ServeMetrics::new(
+            Arc::new(MonotonicClock::new()),
+            Some(Arc::clone(&trace)),
+        ));
+        let est = Arc::new(sweep_estimator(&DeviceSpec::tpu_v4()));
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            est,
+            NetOptions {
+                workers: 1,
+                queue_cap: 4,
+                inflight: 0,
+            },
+        )
+        .unwrap();
+        server.devices().attach_metrics(Arc::clone(&metrics));
+        let addr = server.local_addr().unwrap();
+        let join = std::thread::spawn(move || server.run().unwrap());
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for _ in 0..3 {
+            writeln!(conn, r#"{{"type":"gemm","m":64,"k":64,"n":64}}"#).unwrap();
+        }
+        writeln!(conn, "{{\"type\":\"metrics\"}}").unwrap();
+        writeln!(conn, "{{\"type\":\"shutdown\"}}").unwrap();
+        conn.flush().unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 5);
+        let summary = join.join().unwrap();
+        assert_eq!(summary.stream.metrics_requests, 1);
+
+        // One worker answers in submission order, so the wire snapshot
+        // taken by the metrics request has seen all three gemms.
+        let m = Json::parse(&lines[3]).unwrap();
+        assert_eq!(m.get("enabled"), Some(&Json::Bool(true)));
+        let snap = RegistrySnapshot::from_json(m.get("metrics").unwrap()).unwrap();
+        let gemms = snap
+            .counters
+            .iter()
+            .find(|(f, l, _)| {
+                f == "scalesim_requests_total"
+                    && l.iter().any(|(k, v)| k == "type" && v == "gemm")
+            })
+            .map(|(_, _, v)| *v);
+        assert_eq!(gemms, Some(3));
+
+        // The writer closed every pooled request's lifetime: 4 totals
+        // (the inline shutdown ack is not phase-stamped), with the
+        // identical gemms classified one miss + two hits.
+        assert_eq!(metrics.phase_snapshot("total").unwrap().count, 4);
+        assert_eq!(metrics.phase_snapshot("reorder").unwrap().count, 4);
+        assert_eq!(metrics.phase_snapshot("write").unwrap().count, 4);
+        assert_eq!(metrics.phase_snapshot("queue_wait").unwrap().count, 4);
+        assert_eq!(metrics.phase_snapshot("estimate_miss").unwrap().count, 1);
+        assert_eq!(metrics.phase_snapshot("estimate_hit").unwrap().count, 2);
+
+        // The trace holds the connection lane name plus one span tree
+        // (request + 5 phase children) per pooled request.
+        assert_eq!(trace.finish().unwrap(), 1 + 4 * 6);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.req_arr("traceEvents").unwrap();
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("thread_name")));
+        let requests = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("request"))
+            .count();
+        assert_eq!(requests, 4);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -17,6 +17,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::obs::Gauge;
+
 /// Number of workers: respects `SCALESIM_THREADS`, defaulting to the
 /// available parallelism (capped at 16).
 pub fn default_workers() -> usize {
@@ -99,6 +101,20 @@ pub struct WorkerPool<T: Send + 'static, R: Send + 'static> {
     job_tx: Option<mpsc::SyncSender<(u64, T)>>,
     result_rx: mpsc::Receiver<(u64, R)>,
     handles: Vec<JoinHandle<()>>,
+    gauges: Option<PoolGauges>,
+}
+
+/// Observability gauges a pool keeps current when instrumented via
+/// [`WorkerPool::with_gauges`]: instantaneous queue depth (submitted,
+/// not yet claimed by a worker — blocked submitters included) and
+/// worker occupancy (workers currently running a job). `None`-free
+/// zero-cost when the pool is built through [`WorkerPool::new`].
+#[derive(Clone, Debug)]
+pub struct PoolGauges {
+    /// Jobs submitted and not yet claimed by a worker.
+    pub depth: Arc<Gauge>,
+    /// Workers currently executing a job.
+    pub busy: Arc<Gauge>,
 }
 
 /// A cloneable submission handle onto a [`WorkerPool`]'s bounded job
@@ -107,21 +123,43 @@ pub struct WorkerPool<T: Send + 'static, R: Send + 'static> {
 /// the pool's own sender are dropped.
 pub struct PoolHandle<T: Send + 'static> {
     job_tx: mpsc::SyncSender<(u64, T)>,
+    gauges: Option<PoolGauges>,
 }
 
 impl<T: Send + 'static> Clone for PoolHandle<T> {
     fn clone(&self) -> PoolHandle<T> {
         PoolHandle {
             job_tx: self.job_tx.clone(),
+            gauges: self.gauges.clone(),
         }
     }
+}
+
+fn submit_gauged<T: Send + 'static>(
+    tx: &mpsc::SyncSender<(u64, T)>,
+    gauges: &Option<PoolGauges>,
+    seq: u64,
+    job: T,
+) -> bool {
+    // Count the job as queued before the (possibly blocking) send, so a
+    // submitter stalled on backpressure is visible as queue depth.
+    if let Some(g) = gauges {
+        g.depth.inc();
+    }
+    let ok = tx.send((seq, job)).is_ok();
+    if !ok {
+        if let Some(g) = gauges {
+            g.depth.dec();
+        }
+    }
+    ok
 }
 
 impl<T: Send + 'static> PoolHandle<T> {
     /// Enqueue a job; blocks while the queue is full (backpressure).
     /// Returns `false` if the pool's workers are all gone.
     pub fn submit(&self, seq: u64, job: T) -> bool {
-        self.job_tx.send((seq, job)).is_ok()
+        submit_gauged(&self.job_tx, &self.gauges, seq, job)
     }
 }
 
@@ -129,6 +167,21 @@ impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
     /// Spawn `workers` threads running `f` over submitted jobs, with at
     /// most `queue_cap` jobs waiting unclaimed.
     pub fn new<F>(workers: usize, queue_cap: usize, f: F) -> WorkerPool<T, R>
+    where
+        F: Fn(u64, T) -> R + Send + Sync + 'static,
+    {
+        WorkerPool::with_gauges(workers, queue_cap, None, f)
+    }
+
+    /// [`WorkerPool::new`] with optional queue-depth / occupancy gauges
+    /// (see [`PoolGauges`]). The uninstrumented path stays gauge-free —
+    /// no atomics are touched when `gauges` is `None`.
+    pub fn with_gauges<F>(
+        workers: usize,
+        queue_cap: usize,
+        gauges: Option<PoolGauges>,
+        f: F,
+    ) -> WorkerPool<T, R>
     where
         F: Fn(u64, T) -> R + Send + Sync + 'static,
     {
@@ -142,6 +195,7 @@ impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
             let job_rx = Arc::clone(&job_rx);
             let result_tx = result_tx.clone();
             let f = Arc::clone(&f);
+            let gauges = gauges.clone();
             handles.push(std::thread::spawn(move || loop {
                 // Holding the lock across the blocking recv is fine: the
                 // holder wakes with a job, releases, and the next worker
@@ -149,7 +203,15 @@ impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
                 let job = job_rx.lock().unwrap().recv();
                 match job {
                     Ok((seq, item)) => {
-                        if result_tx.send((seq, f(seq, item))).is_err() {
+                        if let Some(g) = &gauges {
+                            g.depth.dec();
+                            g.busy.inc();
+                        }
+                        let result = f(seq, item);
+                        if let Some(g) = &gauges {
+                            g.busy.dec();
+                        }
+                        if result_tx.send((seq, result)).is_err() {
                             break; // consumer gone
                         }
                     }
@@ -161,6 +223,7 @@ impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
             job_tx: Some(job_tx),
             result_rx,
             handles,
+            gauges,
         }
     }
 
@@ -170,16 +233,17 @@ impl<T: Send + 'static, R: Send + 'static> WorkerPool<T, R> {
     pub fn handle(&self) -> PoolHandle<T> {
         PoolHandle {
             job_tx: self.job_tx.as_ref().expect("handle after close").clone(),
+            gauges: self.gauges.clone(),
         }
     }
 
     /// Enqueue a job; blocks while the queue is full (backpressure).
     pub fn submit(&self, seq: u64, job: T) {
-        self.job_tx
-            .as_ref()
-            .expect("submit after close")
-            .send((seq, job))
-            .expect("worker pool died");
+        let tx = self.job_tx.as_ref().expect("submit after close");
+        assert!(
+            submit_gauged(tx, &self.gauges, seq, job),
+            "worker pool died"
+        );
     }
 
     /// Collect one finished result without blocking.
@@ -321,5 +385,35 @@ mod tests {
         pool.submit(0, 1);
         pool.submit(1, 2);
         drop(pool);
+    }
+
+    #[test]
+    fn gauges_settle_to_zero_after_drain() {
+        let gauges = PoolGauges {
+            depth: Arc::new(Gauge::new()),
+            busy: Arc::new(Gauge::new()),
+        };
+        let mut pool: WorkerPool<u64, u64> =
+            WorkerPool::with_gauges(4, 2, Some(gauges.clone()), |_s, x| x * 3);
+        let h = pool.handle();
+        for i in 0..100u64 {
+            if i % 2 == 0 {
+                pool.submit(i, i);
+            } else {
+                assert!(h.submit(i, i));
+            }
+        }
+        drop(h);
+        pool.close();
+        let mut n = 0;
+        while let Some((seq, r)) = pool.recv() {
+            assert_eq!(r, seq * 3);
+            n += 1;
+        }
+        assert_eq!(n, 100);
+        // Every submitted job was claimed (depth back to 0) and every
+        // worker finished its last job (busy back to 0).
+        assert_eq!(gauges.depth.get(), 0);
+        assert_eq!(gauges.busy.get(), 0);
     }
 }

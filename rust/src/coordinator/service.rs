@@ -9,6 +9,7 @@
 //! {"type": "module", "path": "artifacts/mlp.stablehlo.txt"}
 //! {"type": "elementwise", "op": "add", "dims": [1024, 1024]}
 //! {"type": "stats"}
+//! {"type": "metrics"}
 //! ```
 //!
 //! This is the "leader" entry point (`scalesim-tpu serve`): downstream
@@ -30,7 +31,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, Write};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -43,13 +44,17 @@ use crate::frontend::parse_module;
 use crate::frontend::types::{DType, TensorType};
 use crate::graph::{schedule_estimate, EngineConfig};
 use crate::memory::{schedule_estimate_memory, MemoryConfig};
+use crate::obs::{
+    render_prometheus, Clock, Gauge, Histogram, HistogramSnapshot, MonotonicClock, Registry,
+    RegistrySnapshot, TraceFileWriter,
+};
 use crate::scalesim::topology::GemmShape;
 use crate::util::json::Json;
 
-use super::cache::CacheStats;
+use super::cache::{CacheStats, ShapeKey, ShardedCache};
 use super::estimator::{EstimateMode, Estimator};
 use super::fusion::estimate_fused_with;
-use super::pool::{default_workers, parallel_map, WorkerPool};
+use super::pool::{default_workers, parallel_map, PoolGauges, WorkerPool};
 
 /// A parsed request.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +93,10 @@ pub enum Request {
     },
     /// Report cache/routing counters for the requests answered so far.
     Stats,
+    /// Report the observability registry (counters, gauges, phase
+    /// histograms) attached to this service, as JSON. Answers
+    /// `{"enabled": false}` when the service runs without metrics.
+    Metrics,
 }
 
 /// A partially-specified slice from a request: `chips` is mandatory,
@@ -244,6 +253,7 @@ impl Request {
                 device: parse_device(&j)?,
             }),
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             other => bail!("unknown request type '{other}'"),
         }
     }
@@ -254,8 +264,263 @@ impl Request {
             Request::Gemm { device, .. }
             | Request::Elementwise { device, .. }
             | Request::Module { device, .. } => device.as_deref(),
-            Request::Stats => None,
+            Request::Stats | Request::Metrics => None,
         }
+    }
+
+    /// Stable tag naming the request kind — the `"type"` field of the
+    /// response and the `type` label on `scalesim_requests_total`.
+    pub fn type_tag(&self) -> &'static str {
+        match self {
+            Request::Gemm { .. } => "gemm",
+            Request::Elementwise { .. } => "elementwise",
+            Request::Module { .. } => "module",
+            Request::Stats => "stats",
+            Request::Metrics => "metrics",
+        }
+    }
+}
+
+/// The serving stack's unified observability surface.
+///
+/// One instance per serve session, shared by every transport (stdin
+/// stream, TCP dispatcher, bench harness). It owns the metric
+/// [`Registry`], the injectable [`Clock`] phase timings are stamped
+/// from ([`crate::obs::MonotonicClock`] in production,
+/// [`crate::obs::LogicalClock`] in tests), and optionally the
+/// streaming [`TraceFileWriter`] behind `serve --trace`.
+///
+/// Metric families (all prefixed `scalesim_`, durations in
+/// nanoseconds):
+///
+/// * `scalesim_requests_total{type=...}` — requests answered, by kind
+///   (`gemm`, `elementwise`, `module`, `stats`, `metrics`, `invalid`).
+/// * `scalesim_request_errors_total` — requests answered with an error
+///   object.
+/// * `scalesim_request_phase_ns{phase=...}` — phase latency
+///   histograms: `parse`, `queue_wait`, `estimate` (plus its
+///   `estimate_hit` / `estimate_miss` sub-spans), `reorder`, `write`,
+///   and end-to-end `total`.
+/// * `scalesim_pool_queue_depth` / `scalesim_pool_busy_workers` —
+///   worker-pool gauges (see [`PoolGauges`]).
+/// * `scalesim_cache_shard_{hits,misses,contended}_total{shard=...}` —
+///   per-shard shape-cache traffic, mirrored from the cache's own
+///   atomics at snapshot time.
+/// * `scalesim_device_request_ns{device=...}` — estimate durations per
+///   answering device.
+pub struct ServeMetrics {
+    registry: Registry,
+    clock: Arc<dyn Clock>,
+    trace: Option<Arc<TraceFileWriter>>,
+    pool_depth: Arc<Gauge>,
+    pool_busy: Arc<Gauge>,
+    phase_parse: Arc<Histogram>,
+    phase_queue_wait: Arc<Histogram>,
+    phase_estimate: Arc<Histogram>,
+    phase_estimate_hit: Arc<Histogram>,
+    phase_estimate_miss: Arc<Histogram>,
+    phase_reorder: Arc<Histogram>,
+    phase_write: Arc<Histogram>,
+    phase_total: Arc<Histogram>,
+}
+
+impl std::fmt::Debug for ServeMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeMetrics")
+            .field("trace", &self.trace.is_some())
+            .finish()
+    }
+}
+
+/// The log2 range of every latency histogram: nanosecond observations
+/// from 1 µs (`2^10`) to ~17 s (`2^34`), matching
+/// [`Histogram::for_latency_ns`].
+const LATENCY_EXP: (u32, u32) = (10, 34);
+
+impl ServeMetrics {
+    /// A fresh registry stamping times from `clock`, optionally
+    /// streaming completed request spans into `trace`.
+    pub fn new(clock: Arc<dyn Clock>, trace: Option<Arc<TraceFileWriter>>) -> ServeMetrics {
+        let registry = Registry::new();
+        for (family, help) in [
+            ("scalesim_requests_total", "Requests answered, by request type."),
+            ("scalesim_request_errors_total", "Requests answered with an error object."),
+            ("scalesim_request_phase_ns", "Per-request phase durations, nanoseconds."),
+            ("scalesim_pool_queue_depth", "Jobs submitted to the worker pool and not yet claimed."),
+            ("scalesim_pool_busy_workers", "Workers currently executing a request."),
+            ("scalesim_cache_shard_hits_total", "Shape-cache probes answered, per shard."),
+            ("scalesim_cache_shard_misses_total", "Shape-cache probes missed, per shard."),
+            (
+                "scalesim_cache_shard_contended_total",
+                "Shape-cache probes that found their shard lock held.",
+            ),
+            ("scalesim_device_request_ns", "Estimate durations per answering device, nanoseconds."),
+        ] {
+            registry.set_help(family, help);
+        }
+        let (lo, hi) = LATENCY_EXP;
+        let phase =
+            |p: &str| registry.histogram("scalesim_request_phase_ns", &[("phase", p)], lo, hi);
+        let phase_parse = phase("parse");
+        let phase_queue_wait = phase("queue_wait");
+        let phase_estimate = phase("estimate");
+        let phase_estimate_hit = phase("estimate_hit");
+        let phase_estimate_miss = phase("estimate_miss");
+        let phase_reorder = phase("reorder");
+        let phase_write = phase("write");
+        let phase_total = phase("total");
+        let pool_depth = registry.gauge("scalesim_pool_queue_depth", &[]);
+        let pool_busy = registry.gauge("scalesim_pool_busy_workers", &[]);
+        ServeMetrics {
+            registry,
+            clock,
+            trace,
+            pool_depth,
+            pool_busy,
+            phase_parse,
+            phase_queue_wait,
+            phase_estimate,
+            phase_estimate_hit,
+            phase_estimate_miss,
+            phase_reorder,
+            phase_write,
+            phase_total,
+        }
+    }
+
+    /// Production metrics: a [`MonotonicClock`], no trace stream.
+    pub fn monotonic() -> Arc<ServeMetrics> {
+        Arc::new(ServeMetrics::new(Arc::new(MonotonicClock::new()), None))
+    }
+
+    /// Current clock reading, nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// The trace writer behind `serve --trace`, when attached.
+    pub fn trace(&self) -> Option<&Arc<TraceFileWriter>> {
+        self.trace.as_ref()
+    }
+
+    /// Handles onto the queue-depth / occupancy gauges, for wiring a
+    /// [`WorkerPool`] via [`WorkerPool::with_gauges`].
+    pub fn pool_gauges(&self) -> PoolGauges {
+        PoolGauges {
+            depth: Arc::clone(&self.pool_depth),
+            busy: Arc::clone(&self.pool_busy),
+        }
+    }
+
+    /// Record the line-to-[`Request`] parse duration.
+    pub fn record_parse_ns(&self, ns: u64) {
+        self.phase_parse.record(ns);
+    }
+
+    /// Record the submit-to-claim wait in the worker pool's job queue.
+    pub fn record_queue_wait_ns(&self, ns: u64) {
+        self.phase_queue_wait.record(ns);
+    }
+
+    /// Record the time a finished response waited in the reorder buffer
+    /// for its in-order turn.
+    pub fn record_reorder_ns(&self, ns: u64) {
+        self.phase_reorder.record(ns);
+    }
+
+    /// Record the response serialization + socket/stream write time.
+    pub fn record_write_ns(&self, ns: u64) {
+        self.phase_write.record(ns);
+    }
+
+    /// Record a request's end-to-end (read-to-written) duration.
+    pub fn record_total_ns(&self, ns: u64) {
+        self.phase_total.record(ns);
+    }
+
+    /// Record one answered request: the `type` counter, the error
+    /// counter when `!ok`, the `estimate` phase histogram (with its
+    /// hit/miss sub-histogram when the shape cache's verdict is known),
+    /// and the per-device histogram.
+    pub fn record_request(
+        &self,
+        type_tag: &str,
+        ok: bool,
+        cache_hit: Option<bool>,
+        estimate_ns: u64,
+        device: Option<&str>,
+    ) {
+        self.registry
+            .counter("scalesim_requests_total", &[("type", type_tag)])
+            .inc();
+        if !ok {
+            self.registry
+                .counter("scalesim_request_errors_total", &[])
+                .inc();
+        }
+        self.phase_estimate.record(estimate_ns);
+        match cache_hit {
+            Some(true) => self.phase_estimate_hit.record(estimate_ns),
+            Some(false) => self.phase_estimate_miss.record(estimate_ns),
+            None => {}
+        }
+        if let Some(d) = device {
+            let (lo, hi) = LATENCY_EXP;
+            self.registry
+                .histogram("scalesim_device_request_ns", &[("device", d)], lo, hi)
+                .record(estimate_ns);
+        }
+    }
+
+    /// Mirror the shape cache's per-shard hit/miss/contention atomics
+    /// into registry counters (monotonic, so repeated observations are
+    /// safe).
+    pub fn observe_cache(&self, cache: &ShardedCache) {
+        for (i, t) in cache.shard_traffic().iter().enumerate() {
+            let shard = i.to_string();
+            let labels = [("shard", shard.as_str())];
+            self.registry
+                .counter("scalesim_cache_shard_hits_total", &labels)
+                .observe_total(t.hits);
+            self.registry
+                .counter("scalesim_cache_shard_misses_total", &labels)
+                .observe_total(t.misses);
+            self.registry
+                .counter("scalesim_cache_shard_contended_total", &labels)
+                .observe_total(t.contended);
+        }
+    }
+
+    /// A point-in-time copy of every instrument, refreshing the cache
+    /// mirror first when a cache is given.
+    pub fn snapshot(&self, cache: Option<&ShardedCache>) -> RegistrySnapshot {
+        if let Some(c) = cache {
+            self.observe_cache(c);
+        }
+        self.registry.snapshot()
+    }
+
+    /// The snapshot in Prometheus text exposition, for the scrape
+    /// listener behind `serve --metrics`.
+    pub fn render(&self, cache: Option<&ShardedCache>) -> String {
+        render_prometheus(&self.snapshot(cache))
+    }
+
+    /// Snapshot of one request-phase histogram by its `phase` label
+    /// (`None` for an unknown phase name).
+    pub fn phase_snapshot(&self, phase: &str) -> Option<HistogramSnapshot> {
+        let h = match phase {
+            "parse" => &self.phase_parse,
+            "queue_wait" => &self.phase_queue_wait,
+            "estimate" => &self.phase_estimate,
+            "estimate_hit" => &self.phase_estimate_hit,
+            "estimate_miss" => &self.phase_estimate_miss,
+            "reorder" => &self.phase_reorder,
+            "write" => &self.phase_write,
+            "total" => &self.phase_total,
+            _ => return None,
+        };
+        Some(h.snapshot())
     }
 }
 
@@ -270,6 +535,7 @@ impl Request {
 pub struct DeviceEstimators {
     default: Arc<Estimator>,
     retargeted: RwLock<HashMap<String, Arc<Estimator>>>,
+    metrics: OnceLock<Arc<ServeMetrics>>,
 }
 
 impl DeviceEstimators {
@@ -278,12 +544,25 @@ impl DeviceEstimators {
         DeviceEstimators {
             default,
             retargeted: RwLock::new(HashMap::new()),
+            metrics: OnceLock::new(),
         }
     }
 
     /// The default-device estimator.
     pub fn default_estimator(&self) -> &Arc<Estimator> {
         &self.default
+    }
+
+    /// Attach the serve session's observability surface. First caller
+    /// wins; later calls are ignored. When never called, the answer
+    /// path records nothing — instrumentation is zero-cost-when-off.
+    pub fn attach_metrics(&self, metrics: Arc<ServeMetrics>) {
+        let _ = self.metrics.set(metrics);
+    }
+
+    /// The attached observability surface, if any.
+    pub fn metrics(&self) -> Option<&Arc<ServeMetrics>> {
+        self.metrics.get()
     }
 
     /// The estimator for `name` (the default when `None`), retargeting
@@ -323,9 +602,13 @@ impl DeviceEstimators {
 ///
 /// `{"type":"stats"}` requests are answered *after* the rest of the
 /// batch completes (the whole batch is their prefix), so the counters
-/// are deterministic rather than racing the in-flight workers. The
-/// streaming path instead treats stats as a drain barrier at its
-/// position — see [`serve_stream`].
+/// are deterministic rather than racing the in-flight workers. All
+/// three transports give stats drain-barrier semantics over a
+/// well-defined prefix: here the whole batch, on the streaming path
+/// every earlier request in the stream ([`serve_stream`]), and on the
+/// TCP dispatcher every earlier request *of the same connection*
+/// ([`super::net`] — connections are independent, so cross-connection
+/// traffic keeps flowing).
 pub fn serve_lines(estimator: Arc<Estimator>, lines: &[String], workers: usize) -> Vec<String> {
     let devices = DeviceEstimators::new(estimator);
     let items: Vec<(usize, String)> = lines
@@ -352,12 +635,43 @@ pub fn serve_lines(estimator: Arc<Estimator>, lines: &[String], workers: usize) 
 /// ([`super::net`]), so a request is answered bit-identically no matter
 /// which transport carried it.
 pub(crate) fn respond(devices: &DeviceEstimators, id: u64, req: Result<Request>) -> (bool, String) {
-    let (ok, mut obj) = match req.and_then(|r| handle_request(devices, &r)) {
-        Ok(o) => (true, o),
+    let error_obj = |e: anyhow::Error| {
+        let mut o = Json::obj();
+        o.set("error", Json::Str(format!("{e:#}")));
+        o
+    };
+    let metrics = devices.metrics().map(Arc::clone);
+    let (ok, mut obj) = match req {
+        Ok(r) => {
+            let started = metrics.as_ref().map(|m| m.now_ns());
+            let tag = r.type_tag();
+            match handle_request(devices, &r) {
+                Ok((o, cache_hit)) => {
+                    if let (Some(m), Some(t0)) = (&metrics, started) {
+                        let device = o.get("device").and_then(|d| d.as_str());
+                        m.record_request(
+                            tag,
+                            true,
+                            cache_hit,
+                            m.now_ns().saturating_sub(t0),
+                            device,
+                        );
+                    }
+                    (true, o)
+                }
+                Err(e) => {
+                    if let (Some(m), Some(t0)) = (&metrics, started) {
+                        m.record_request(tag, false, None, m.now_ns().saturating_sub(t0), None);
+                    }
+                    (false, error_obj(e))
+                }
+            }
+        }
         Err(e) => {
-            let mut o = Json::obj();
-            o.set("error", Json::Str(format!("{e:#}")));
-            (false, o)
+            if let Some(m) = &metrics {
+                m.record_request("invalid", false, None, 0, None);
+            }
+            (false, error_obj(e))
         }
     };
     obj.set("ok", Json::Bool(ok));
@@ -365,25 +679,41 @@ pub(crate) fn respond(devices: &DeviceEstimators, id: u64, req: Result<Request>)
     (ok, obj.dump())
 }
 
-fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<Json> {
+/// Answer a request; besides the response object, reports whether the
+/// shape cache already held everything the request needed (`None` when
+/// the question does not apply: stats/metrics requests, distributed
+/// answers, failed classification). The verdict is probed *before*
+/// estimating (via the counter-invisible [`ShardedCache::peek`]), and
+/// only when metrics are attached — the uninstrumented path skips the
+/// probe entirely.
+fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<(Json, Option<bool>)> {
     // Resolve the estimator for the request's device up front: an
     // unknown device name is an error response, never a silent
     // default-device answer.
     let est = devices.get(req.device())?;
     let estimator: &Estimator = &est;
     let device_name = || Json::Str(estimator.device().name.clone());
+    let classify = devices.metrics().is_some();
+    let peek_class = |class: &OpClass| -> Option<bool> {
+        if !classify {
+            return None;
+        }
+        ShapeKey::of_class(estimator.cache_fingerprint(), class)
+            .map(|key| estimator.cache.peek(&key))
+    };
     match req {
         Request::Gemm {
             gemm, slice: None, ..
         } => {
             let class = OpClass::SystolicGemm { gemm: *gemm, count: 1 };
+            let hit = peek_class(&class);
             let est = estimator.estimate_op(0, "gemm", &class);
             let mut o = Json::obj();
             o.set("type", Json::Str("gemm".into()))
                 .set("device", device_name())
                 .set("cycles", Json::Num(est.cycles.unwrap_or(0) as f64))
                 .set("latency_us", Json::Num(est.latency_us));
-            Ok(o)
+            Ok((o, hit))
         }
         Request::Gemm {
             gemm,
@@ -401,20 +731,23 @@ fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<Json> {
                 .set("collective_us", Json::Num(r.collective_us))
                 .set("single_chip_us", Json::Num(r.single_chip_us))
                 .set("parallel_efficiency", Json::Num(r.parallel_efficiency()));
-            Ok(o)
+            // The sharded walk estimates per-chip shards, not the
+            // request shape — no single cache verdict applies.
+            Ok((o, None))
         }
         Request::Elementwise { op, dims, .. } => {
             let kind = EwKind::from_name(op)
                 .ok_or_else(|| anyhow::anyhow!("unknown elementwise op '{op}'"))?;
             let out = TensorType::new(dims.clone(), DType::Bf16);
             let class = OpClass::Elementwise { kind, out };
+            let hit = peek_class(&class);
             let est = estimator.estimate_op(0, op, &class);
             let mut o = Json::obj();
             o.set("type", Json::Str("elementwise".into()))
                 .set("device", device_name())
                 .set("latency_us", Json::Num(est.latency_us))
                 .set("source", Json::Str(est.source.tag().into()));
-            Ok(o)
+            Ok((o, hit))
         }
         Request::Module { path, slice, .. } => {
             let text = std::fs::read_to_string(path)?;
@@ -431,8 +764,12 @@ fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<Json> {
                     // recorded so stats can attribute traffic per mode.
                     // Fused and scheduled both reuse the one unfused
                     // walk's per-op costs, so the cache counters see the
-                    // module exactly once.
-                    let report = estimator.estimate_module(&module);
+                    // module exactly once. A module counts as a cache
+                    // hit when every unique shape it lowers to is
+                    // already warm.
+                    let table = estimator.lower_module(&module);
+                    let hit = classify.then(|| table.warm_in(&estimator.cache));
+                    let report = estimator.estimate_table(&table);
                     let fused = estimate_fused_with(&module, report.clone());
                     let sched = schedule_estimate(
                         &module,
@@ -477,7 +814,7 @@ fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<Json> {
                         .set("engines", sched.engines_to_json())
                         .set("num_ops", Json::Num(report.ops.len() as f64))
                         .set("coverage", Json::Num(report.coverage()));
-                    Ok(o)
+                    Ok((o, hit))
                 }
                 Some(slice) => {
                     let d = estimate_module_distributed(estimator, &module, &slice);
@@ -494,14 +831,28 @@ fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<Json> {
                         .set("single_chip_us", Json::Num(d.single_chip_us))
                         .set("parallel_efficiency", Json::Num(d.parallel_efficiency()))
                         .set("num_ops", Json::Num(d.ops.len() as f64));
-                    Ok(o)
+                    Ok((o, None))
                 }
             }
         }
         Request::Stats => {
             let mut o = estimator.cache.stats().to_json();
             o.set("type", Json::Str("stats".into()));
-            Ok(o)
+            Ok((o, None))
+        }
+        Request::Metrics => {
+            let mut o = Json::obj();
+            o.set("type", Json::Str("metrics".into()));
+            match devices.metrics() {
+                Some(m) => {
+                    o.set("enabled", Json::Bool(true))
+                        .set("metrics", m.snapshot(Some(&estimator.cache)).to_json());
+                }
+                None => {
+                    o.set("enabled", Json::Bool(false));
+                }
+            }
+            Ok((o, None))
         }
     }
 }
@@ -513,6 +864,9 @@ pub struct StreamOptions {
     pub workers: usize,
     /// Bounded job-queue depth; 0 means `workers * 4`.
     pub queue_cap: usize,
+    /// Observability surface to record into; `None` (the default) runs
+    /// fully uninstrumented.
+    pub metrics: Option<Arc<ServeMetrics>>,
 }
 
 impl Default for StreamOptions {
@@ -520,6 +874,7 @@ impl Default for StreamOptions {
         StreamOptions {
             workers: default_workers(),
             queue_cap: 0,
+            metrics: None,
         }
     }
 }
@@ -541,6 +896,8 @@ pub struct StreamSummary {
     pub module: u64,
     /// `stats` barrier requests.
     pub stats_requests: u64,
+    /// `metrics` snapshot requests.
+    pub metrics_requests: u64,
     /// Final cache/routing counters.
     pub cache: CacheStats,
 }
@@ -550,7 +907,7 @@ impl StreamSummary {
     pub fn render(&self) -> String {
         let [unfused, fused, scheduled] = self.cache.modes;
         format!(
-            "serve: {} requests ({} ok, {} errors; {} gemm / {} elementwise / {} module / {} stats); \
+            "serve: {} requests ({} ok, {} errors; {} gemm / {} elementwise / {} module / {} stats / {} metrics); \
              cache: {} hits, {} misses ({:.1}% hit rate, {} entries); \
              sources: {} systolic, {} learned, {} learned-proxy, {} bandwidth, {} free, {} fallback; \
              modes: {} unfused ({:.1} us), {} fused ({:.1} us), {} scheduled ({:.1} us)",
@@ -561,6 +918,7 @@ impl StreamSummary {
             self.elementwise,
             self.module,
             self.stats_requests,
+            self.metrics_requests,
             self.cache.hits,
             self.cache.misses,
             self.cache.hit_rate() * 100.0,
@@ -602,11 +960,25 @@ pub fn serve_stream<In: BufRead, Out: Write>(
         opts.queue_cap
     };
     let devices = Arc::new(DeviceEstimators::new(Arc::clone(&estimator)));
+    let metrics = opts.metrics.clone();
+    if let Some(m) = &metrics {
+        devices.attach_metrics(Arc::clone(m));
+    }
     let pool_devices = Arc::clone(&devices);
-    let mut pool: WorkerPool<Request, (bool, String)> =
-        WorkerPool::new(workers, queue_cap, move |seq, req| {
+    let worker_metrics = metrics.clone();
+    // Jobs carry their submit timestamp so the worker can credit the
+    // queue-wait phase before estimating (0 when uninstrumented).
+    let mut pool: WorkerPool<(Request, u64), (bool, String)> = WorkerPool::with_gauges(
+        workers,
+        queue_cap,
+        metrics.as_ref().map(|m| m.pool_gauges()),
+        move |seq, (req, submit_ns)| {
+            if let Some(m) = &worker_metrics {
+                m.record_queue_wait_ns(m.now_ns().saturating_sub(submit_ns));
+            }
             respond(&pool_devices, seq, Ok(req))
-        });
+        },
+    );
 
     let mut summary = StreamSummary::default();
     // Completed-but-not-yet-emitted responses, keyed by sequence number.
@@ -622,7 +994,12 @@ pub fn serve_stream<In: BufRead, Out: Write>(
         let seq = next_seq;
         next_seq += 1;
         summary.requests += 1;
-        match Request::parse(&line) {
+        let parse_started = metrics.as_ref().map(|m| m.now_ns());
+        let parsed = Request::parse(&line);
+        if let (Some(m), Some(t0)) = (&metrics, parse_started) {
+            m.record_parse_ns(m.now_ns().saturating_sub(t0));
+        }
+        match parsed {
             Ok(Request::Stats) => {
                 // Stats are a barrier: every earlier request is answered
                 // first, so the counters reflect the full prefix. Each gap
@@ -649,10 +1026,12 @@ pub fn serve_stream<In: BufRead, Out: Write>(
                     Request::Gemm { .. } => summary.gemm += 1,
                     Request::Elementwise { .. } => summary.elementwise += 1,
                     Request::Module { .. } => summary.module += 1,
+                    Request::Metrics => summary.metrics_requests += 1,
                     Request::Stats => unreachable!(),
                 }
+                let submit_ns = metrics.as_ref().map_or(0, |m| m.now_ns());
                 // Blocks while the queue is full: backpressure.
-                pool.submit(seq, req);
+                pool.submit(seq, (req, submit_ns));
             }
             Err(e) => {
                 let (ok, resp) = respond(&devices, seq, Err(e));
@@ -1070,6 +1449,7 @@ module @m { func.func @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> ten
             &StreamOptions {
                 workers: 8,
                 queue_cap: 4,
+                metrics: None,
             },
         )
         .unwrap();
@@ -1097,6 +1477,100 @@ module @m { func.func @main(%a: tensor<64x64xf32>, %b: tensor<64x64xf32>) -> ten
         assert_eq!(summary.errors, 1);
         assert_eq!(summary.gemm, 200);
         assert_eq!(summary.stats_requests, 1);
+    }
+
+    #[test]
+    fn metrics_request_without_instrumentation_reports_disabled() {
+        let responses = serve_lines(estimator(), &[r#"{"type":"metrics"}"#.to_string()], 1);
+        let r = Json::parse(&responses[0]).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.req_str("type").unwrap(), "metrics");
+        assert_eq!(r.get("enabled"), Some(&Json::Bool(false)));
+        assert!(r.get("metrics").is_none());
+    }
+
+    #[test]
+    fn instrumented_stream_classifies_hits_and_snapshots_over_the_wire() {
+        use crate::obs::LogicalClock;
+        let est = estimator();
+        let metrics = Arc::new(ServeMetrics::new(Arc::new(LogicalClock::new()), None));
+        let input = concat!(
+            r#"{"type":"gemm","m":96,"k":96,"n":96}"#,
+            "\n",
+            r#"{"type":"gemm","m":96,"k":96,"n":96}"#,
+            "\n",
+            r#"{"type":"stats"}"#,
+            "\n",
+            r#"{"type":"metrics"}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let summary = serve_stream(
+            Arc::clone(&est),
+            input.as_bytes(),
+            &mut out,
+            &StreamOptions {
+                workers: 1,
+                queue_cap: 1,
+                metrics: Some(Arc::clone(&metrics)),
+            },
+        )
+        .unwrap();
+        assert_eq!(summary.metrics_requests, 1);
+        assert!(summary.render().contains("1 metrics"));
+        // Identical shapes one worker apart: first is a classified
+        // miss, second a classified hit.
+        assert_eq!(metrics.phase_snapshot("estimate_miss").unwrap().count, 1);
+        assert_eq!(metrics.phase_snapshot("estimate_hit").unwrap().count, 1);
+        // Every pool-routed request waited in the queue and estimated.
+        assert_eq!(metrics.phase_snapshot("queue_wait").unwrap().count, 3);
+        assert_eq!(metrics.phase_snapshot("parse").unwrap().count, 4);
+        // stats + metrics recorded without a cache verdict.
+        assert_eq!(metrics.phase_snapshot("estimate").unwrap().count, 4);
+        // The wire response embeds a parseable registry snapshot with
+        // the per-type counters and per-shard cache traffic.
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+        let m = Json::parse(lines[3]).unwrap();
+        assert_eq!(m.get("enabled"), Some(&Json::Bool(true)));
+        let snap = RegistrySnapshot::from_json(m.get("metrics").unwrap()).unwrap();
+        let counter = |family: &str, label: Option<(&str, &str)>| {
+            snap.counters
+                .iter()
+                .find(|(f, l, _)| {
+                    f == family
+                        && match label {
+                            None => true,
+                            Some((k, v)) => l.iter().any(|(lk, lv)| lk == k && lv == v),
+                        }
+                })
+                .map(|(_, _, v)| *v)
+        };
+        assert_eq!(
+            counter("scalesim_requests_total", Some(("type", "gemm"))),
+            Some(2)
+        );
+        assert_eq!(
+            counter("scalesim_requests_total", Some(("type", "stats"))),
+            Some(1)
+        );
+        let shard_hits: u64 = snap
+            .counters
+            .iter()
+            .filter(|(f, _, _)| f == "scalesim_cache_shard_hits_total")
+            .map(|(_, _, v)| *v)
+            .sum();
+        assert_eq!(shard_hits, 1, "one warm gemm probe");
+        // Pool gauges drained back to zero and made it into the export.
+        assert!(snap.gauges.iter().any(|(f, _, v)| {
+            f == "scalesim_pool_queue_depth" && *v == 0
+        }));
+        // The Prometheus rendering of the same registry parses as
+        // text exposition with the phase families present.
+        let text = metrics.render(Some(&est.cache));
+        assert!(text.contains("# TYPE scalesim_requests_total counter"));
+        assert!(
+            text.contains("scalesim_request_phase_ns_bucket{phase=\"estimate_hit\",le=\"+Inf\"} 1")
+        );
     }
 
     #[test]

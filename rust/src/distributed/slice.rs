@@ -118,6 +118,44 @@ impl DistributedEstimate {
     pub fn overlapped_us(&self) -> f64 {
         (self.compute_us + self.collective_us - self.total_us).max(0.0)
     }
+
+    /// The per-chip timeline as Chrome trace events, three lanes:
+    /// `compute` (tid 0), `ici` (tid 1) and `dma` (tid 2).
+    ///
+    /// The distributed rows only keep each op's start/finish bracket, so
+    /// the lanes are an approximation of the internal schedule: compute
+    /// is drawn from the op's start, the collective is drawn ending at
+    /// its finish (a collective completes its op), and DMA is drawn from
+    /// the start. Zero-width components draw nothing.
+    pub fn trace_events(&self) -> Vec<crate::obs::TraceEvent> {
+        use crate::obs::TraceEvent;
+        use crate::util::json::Json;
+        let mut events = vec![
+            TraceEvent::process_name(
+                1,
+                &format!("slice {} ({} chips)", self.module_name, self.slice.chips),
+            ),
+            TraceEvent::thread_name(1, 0, "compute"),
+            TraceEvent::thread_name(1, 1, "ici"),
+            TraceEvent::thread_name(1, 2, "dma"),
+        ];
+        for op in &self.ops {
+            let mut slice = |tid: u64, cat: &str, ts: f64, dur: f64| {
+                if dur > 0.0 {
+                    let mut ev = TraceEvent::complete(&op.op_name, cat, ts, dur, 1, tid)
+                        .arg("index", Json::Num(op.index as f64));
+                    if !op.note.is_empty() {
+                        ev = ev.arg("note", Json::Str(op.note.clone()));
+                    }
+                    events.push(ev);
+                }
+            };
+            slice(0, "compute", op.start_us, op.compute_us);
+            slice(1, "ici", op.finish_us - op.collective_us, op.collective_us);
+            slice(2, "dma", op.start_us, op.dma_us);
+        }
+        events
+    }
 }
 
 /// Estimate `module` across `slice`, reusing `est`'s calibrated models

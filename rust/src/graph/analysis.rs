@@ -8,6 +8,7 @@
 //! separate `critical_path_us` is the resource-unconstrained longest
 //! dependence chain (a lower bound on any schedule's makespan).
 
+use crate::obs::TraceEvent;
 use crate::util::json::Json;
 
 use super::engine::{Engine, EngineConfig};
@@ -361,6 +362,55 @@ impl ModuleSchedule {
         obj
     }
 
+    /// The schedule as Chrome trace events — the second renderer next
+    /// to [`Self::render_timeline`], behind `simulate --trace-out`.
+    ///
+    /// One thread lane per engine of the config (in
+    /// [`EngineConfig::engines`] display order, named via `thread_name`
+    /// metadata), one complete slice per placed op with the op's
+    /// cost-model tag as its category (suffixed `,critical` on the
+    /// critical chain so viewers can highlight it). Slice `args` carry
+    /// the op index, slack, and note. Zero-width ops occupy no engine
+    /// and are skipped — same as the timeline's busy accounting.
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        let engines = self.config.engines();
+        let mut events: Vec<TraceEvent> = Vec::with_capacity(self.ops.len() + engines.len() + 1);
+        events.push(TraceEvent::process_name(
+            1,
+            &format!("schedule {} ({})", self.module_name, self.config.name()),
+        ));
+        for (tid, e) in engines.iter().enumerate() {
+            events.push(TraceEvent::thread_name(1, tid as u64, e.name()));
+        }
+        for op in &self.ops {
+            let Some(engine) = op.engine else { continue };
+            let Some(tid) = engines.iter().position(|&e| e == engine) else {
+                continue;
+            };
+            let cat = if op.critical() {
+                format!("{},critical", op.source)
+            } else {
+                op.source.to_string()
+            };
+            let mut ev = TraceEvent::complete(
+                &op.op_name,
+                &cat,
+                op.start_us,
+                op.end_us - op.start_us,
+                1,
+                tid as u64,
+            )
+            .arg("index", Json::Num(op.index as f64))
+            .arg("slack_us", Json::Num(op.slack_us))
+            .arg("critical", Json::Bool(op.critical()));
+            if !op.note.is_empty() {
+                ev = ev.arg("note", Json::Str(op.note.clone()));
+            }
+            events.push(ev);
+        }
+        events
+    }
+
     /// The full schedule (totals, engines, per-op rows) as one JSON
     /// object — the machine-readable form of [`Self::render_timeline`].
     pub fn to_json(&self) -> Json {
@@ -448,6 +498,28 @@ mod tests {
         // Both roots start at 0; the join line comes last.
         let lines: Vec<&str> = text.lines().collect();
         assert!(lines[3].contains("10.000 ..    11.000"));
+    }
+
+    #[test]
+    fn trace_events_lane_per_engine() {
+        let s = finish_schedule("d".into(), EngineConfig::Tpu, diamond());
+        let events = s.trace_events();
+        // process_name + 4 engine lanes (tpu config) + 3 op slices.
+        assert_eq!(events.len(), 1 + 4 + 3);
+        assert_eq!(events[0].ph, 'M');
+        assert_eq!(events[1].args.req_str("name").unwrap(), "mxu");
+        let slices: Vec<&TraceEvent> = events.iter().filter(|e| e.ph == 'X').collect();
+        assert_eq!(slices.len(), 3);
+        // The 10us MXU root sits on lane 0 and is flagged critical.
+        assert_eq!(slices[0].tid, 0);
+        assert_eq!(slices[0].ts_us, 0.0);
+        assert_eq!(slices[0].dur_us, Some(10.0));
+        assert!(slices[0].cat.ends_with(",critical"));
+        // The slack-y VPU op is on lane 1, uncritical, slack in args.
+        assert_eq!(slices[1].tid, 1);
+        assert_eq!(slices[1].cat, "free");
+        assert_eq!(slices[1].args.req_f64("slack_us").unwrap(), 8.0);
+        assert_eq!(slices[1].args.get("critical"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -32,6 +32,9 @@
 //! * [`memory`] — the memory-aware DMA timeline: HBM traffic behind
 //!   every op, tensor residency (bounded buffer, LRU eviction) and the
 //!   compute-vs-bandwidth roofline.
+//! * [`obs`] — dependency-free observability: atomic counter/gauge/
+//!   histogram registry, injectable-clock span recorder, and Prometheus
+//!   text / Chrome trace-event exporters.
 //! * [`workloads`] — the paper's sweep generators.
 //! * [`sweep`] — the op-coverage validation harness: deterministic
 //!   per-class shape grids driven through the batched estimator core,
@@ -50,6 +53,7 @@ pub mod frontend;
 pub mod graph;
 pub mod learned;
 pub mod memory;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod scalesim;

@@ -11,7 +11,7 @@ use anyhow::{bail, Context, Result};
 use scalesim_tpu::calibrate::Regime;
 use scalesim_tpu::coordinator::{
     bench_serve, default_workers, install_sigint_drain, load_snapshot, save_snapshot,
-    serve_lines, serve_stream, NetOptions, NetServer, StreamOptions,
+    serve_lines, serve_stream, NetOptions, NetServer, ServeMetrics, StreamOptions,
 };
 use scalesim_tpu::device::{load_device_file, resolve_device, DeviceSpec, PRESET_NAMES};
 use scalesim_tpu::distributed::{
@@ -22,6 +22,7 @@ use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
 use scalesim_tpu::frontend::parse_module;
 use scalesim_tpu::graph::{schedule_estimate, EngineConfig, ModuleSchedule};
 use scalesim_tpu::memory::{schedule_estimate_memory, MemoryConfig, MemorySchedule};
+use scalesim_tpu::obs::{MetricsScrape, MonotonicClock, TraceEvent, TraceFileWriter};
 use scalesim_tpu::report::{write_output, Table};
 use scalesim_tpu::util::json::Json;
 use scalesim_tpu::scalesim::{simulate_gemm, simulate_topology, GemmShape, Topology};
@@ -81,6 +82,14 @@ Toolchain:
                                    spec (tpu-v4: 1.0); prints per-chip
                                    busy time, collective time and
                                    parallel efficiency
+           [--trace-out FILE]      export the scheduled timeline as Chrome
+                                   trace-event JSON (open in Perfetto or
+                                   chrome://tracing): one lane per engine
+                                   (MXU/VPU/DMA/ICI), critical-path ops
+                                   flagged; with --memory the DMA lane
+                                   shows each op's dma_in/dma_out
+                                   sub-slices and spills; with --chips the
+                                   per-chip compute/ici/dma lanes
   calibrate                      build + save modeling assets
   devices                        list the device presets; --check [--dir D]
                                  round-trips every rust/devices/*.toml|json
@@ -89,9 +98,13 @@ Toolchain:
   compare --module FILE          estimate one module against several device
           --devices a,b,c          specs side by side (presets or device
           [--chips N] [--json]     files; default: every preset); reports
-                                   unfused/scheduled/memory-aware totals
+          [--trace-dir DIR]        unfused/scheduled/memory-aware totals
                                    per device, plus the distributed slice
-                                   when --chips is given
+                                   when --chips is given; --trace-dir
+                                   writes one Chrome trace per device
+                                   (DIR/<device>.trace.json, memory-aware
+                                   lanes; with --chips also
+                                   DIR/<device>.slice.trace.json)
   sweep [--ops a,b,c]            op-coverage validation sweep: deterministic
         [--grid small|paper]       generated shape grids per op class, run
         [--json | --csv]           cold + warm through the batched estimator
@@ -137,12 +150,29 @@ Toolchain:
                                    or stale snapshots are rejected loudly and
                                    the server starts cold) and save it back
                                    on drain, so restarts answer warm
+        [--metrics ADDR:PORT]      expose a plaintext Prometheus scrape
+                                   endpoint (curl/nc it): request counters
+                                   by type, per-phase latency histograms
+                                   (parse/queue_wait/estimate hit|miss/
+                                   reorder/write/total), pool queue-depth
+                                   and occupancy gauges, per-shard cache
+                                   traffic, per-device timings. Also
+                                   enables the {"type":"metrics"} request
+        [--trace FILE]             stream every completed request's span
+                                   tree (parse -> queue-wait -> estimate ->
+                                   reorder -> write) to FILE as Chrome
+                                   trace-event JSON; one lane per
+                                   connection, open in Perfetto
+                                   (implies instrumentation, as --metrics)
   bench-serve                    load-generate against the TCP service and
         [--clients N]              report sustained throughput + p50/p95/p99
         [--requests M]             tail latency. Spins up an in-process
         [--rps R] [--addr A]       server unless --addr targets a remote one;
         [--workers N]              --rps paces the offered load (default:
-        [--publish] [--check]      closed-loop flat out). --publish writes
+        [--publish] [--check]      closed-loop flat out). In-process runs
+                                   also report the queue-wait vs service-
+                                   time breakdown from the serving stack's
+                                   phase histograms. --publish writes
                                    BENCH_serve.json at the repo root
                                    (fingerprinted); --check verifies it is
                                    fresh against the bench source (CI gate)
@@ -351,6 +381,9 @@ fn cmd_fig5(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let spec = make_device(args)?;
     let config = spec.scale_config();
+    // Read unconditionally so non-module invocations never trip the
+    // unknown-option warning (the renderer only applies to --module).
+    let _ = args.get("trace-out");
 
     if let Some(path) = args.get("module") {
         // StableHLO module → whole-model estimate via saved assets. The
@@ -379,6 +412,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 Some(m) => estimate_module_distributed_memory(&est, &module, &slice, m),
                 None => estimate_module_distributed(&est, &module, &slice),
             };
+            if let Some(tp) = args.get("trace-out") {
+                write_trace(tp, &d.trace_events())?;
+            }
             if args.flag("json") {
                 println!("{}", distributed_json(&d, &spec, &slice, mem.is_some()).dump());
                 return Ok(());
@@ -459,6 +495,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         // The fused total is always reported now; the old flag stays
         // accepted so existing invocations keep working.
         let _ = args.flag("fused");
+        if let Some(tp) = args.get("trace-out") {
+            // Under --memory the expanded timeline (DMA sub-slices,
+            // spills) supersedes the compute-only one.
+            let events = match &mem {
+                Some(m) => m.trace_events(),
+                None => sched.trace_events(),
+            };
+            write_trace(tp, &events)?;
+        }
         if args.flag("json") {
             println!(
                 "{}",
@@ -736,6 +781,18 @@ fn cmd_devices(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Write Chrome trace events to `path` (the `--trace-out` /
+/// `--trace-dir` renderers); reports the event count on stderr so
+/// `--json` stdout stays machine-clean.
+fn write_trace(path: &str, events: &[TraceEvent]) -> Result<()> {
+    let w = TraceFileWriter::create(std::path::Path::new(path))
+        .with_context(|| format!("creating trace file {path}"))?;
+    w.write_all(events)?;
+    let n = w.finish()?;
+    eprintln!("wrote {n} trace events to {path} (open in Perfetto / chrome://tracing)");
+    Ok(())
+}
+
 /// `compare`: estimate one module against several device specs and
 /// print the totals side by side (or as one JSON object).
 fn cmd_compare(args: &Args) -> Result<()> {
@@ -775,6 +832,12 @@ fn cmd_compare(args: &Args) -> Result<()> {
         args.u64_or("seed", 42),
     )?;
 
+    let trace_dir = args.get("trace-dir").map(PathBuf::from);
+    if let Some(dir) = &trace_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating trace dir {}", dir.display()))?;
+    }
+
     let mut headers = vec!["device", "unfused us", "scheduled us", "memory us", "bound"];
     if chips.is_some() {
         headers.extend(["chips", "per-chip us", "speedup", "eff %"]);
@@ -794,6 +857,17 @@ fn cmd_compare(args: &Args) -> Result<()> {
             }
             None => None,
         };
+        if let Some(dir) = &trace_dir {
+            // One memory-aware timeline per device; slice runs get a
+            // second file so the two lane sets never share a pid.
+            let safe = spec.name.replace(['/', ' '], "_");
+            let path = dir.join(format!("{safe}.trace.json"));
+            write_trace(&path.to_string_lossy(), &mem.trace_events())?;
+            if let Some(d) = &dist {
+                let path = dir.join(format!("{safe}.slice.trace.json"));
+                write_trace(&path.to_string_lossy(), &d.trace_events())?;
+            }
+        }
         let mut cells = vec![
             spec.name.clone(),
             format!("{:.3}", report.total_us),
@@ -981,6 +1055,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let est = Arc::new(est.retarget(&spec));
     let workers = args.usize_or("workers", default_workers());
 
+    // Observability: `--trace FILE` streams one span tree per request,
+    // `--metrics ADDR:PORT` serves Prometheus text to any scraper.
+    // Either flag instruments the session; with neither, the answer
+    // path stays uncounted (zero-cost-when-off).
+    let trace_path = args.get("trace").map(str::to_string);
+    let trace = match &trace_path {
+        Some(p) => Some(Arc::new(
+            TraceFileWriter::create(std::path::Path::new(p))
+                .with_context(|| format!("creating trace file {p}"))?,
+        )),
+        None => None,
+    };
+    let metrics_addr = args.get("metrics").map(str::to_string);
+    let metrics = if trace.is_some() || metrics_addr.is_some() {
+        Some(Arc::new(ServeMetrics::new(
+            Arc::new(MonotonicClock::new()),
+            trace.clone(),
+        )))
+    } else {
+        None
+    };
+    // Held (not just bound) so the scrape thread lives for the whole
+    // serve run; dropping it joins the listener.
+    let _scrape = match (&metrics_addr, &metrics) {
+        (Some(addr), Some(m)) => {
+            let render_m = Arc::clone(m);
+            let render_est = Arc::clone(&est);
+            let s = MetricsScrape::bind(
+                addr,
+                Arc::new(move || render_m.render(Some(&render_est.cache))),
+            )
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+            eprintln!("serve: metrics scrape on http://{}/metrics", s.local_addr());
+            Some(s)
+        }
+        _ => None,
+    };
+    let finish_trace = |trace: &Option<Arc<TraceFileWriter>>| -> Result<()> {
+        if let (Some(t), Some(p)) = (trace, &trace_path) {
+            let n = t.finish()?;
+            eprintln!("serve: wrote {n} trace events to {p} (open in Perfetto)");
+        }
+        Ok(())
+    };
+
     if let Some(listen) = args.get("listen") {
         // TCP mode: many concurrent connections over one shared worker
         // pool and shape cache; drains on SIGINT or an admin request.
@@ -1008,8 +1127,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         let server = NetServer::bind(listen, Arc::clone(&est), opts)
             .with_context(|| format!("binding {listen}"))?;
+        if let Some(m) = &metrics {
+            server.devices().attach_metrics(Arc::clone(m));
+        }
         eprintln!("serve: listening on {}", server.local_addr()?);
         let summary = server.run()?;
+        finish_trace(&trace)?;
         if let Some(path) = &snapshot_path {
             let n = save_snapshot(path, &est)?;
             eprintln!("serve: saved {n} cache entries to {}", path.display());
@@ -1042,6 +1165,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for r in serve_lines(est, &lines, workers) {
             println!("{r}");
         }
+        // Batch mode is uninstrumented; still close any `--trace` file
+        // so it parses as (empty) valid JSON.
+        finish_trace(&trace)?;
         let _ = args.flag("quiet");
         let _ = args.usize_or("queue", 0);
         return Ok(());
@@ -1050,10 +1176,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = StreamOptions {
         workers,
         queue_cap: args.usize_or("queue", 0),
+        metrics: metrics.clone(),
     };
     let mut out = std::io::BufWriter::new(std::io::stdout().lock());
     let summary = serve_stream(est, input, &mut out, &opts)?;
     out.flush()?;
+    finish_trace(&trace)?;
     if !args.flag("quiet") {
         eprintln!("{}", summary.render());
     }

@@ -37,6 +37,7 @@ use crate::frontend::opinfo::{FuncInfo, ModuleInfo, OpInfo};
 use crate::graph::analysis::{finish_schedule, op_bound, ModuleSchedule, RooflineSummary};
 use crate::graph::schedule::is_inlined_call;
 use crate::graph::{DepGraph, Engine, EngineConfig, SchedNode};
+use crate::obs::TraceEvent;
 use crate::tpu::MxuParams;
 use crate::util::json::Json;
 
@@ -571,6 +572,18 @@ impl MemorySchedule {
         self.ops.iter().map(|o| o.dma_in_us + o.dma_out_us).sum()
     }
 
+    /// The memory-aware timeline as Chrome trace events.
+    ///
+    /// Delegates to [`ModuleSchedule::trace_events`] over the *expanded*
+    /// node list, so the DMA lane shows each op's `<op>.dma_in` /
+    /// `<op>.dma_out` sub-slices next to its compute slice — cold
+    /// fetches, forced eviction write-backs and residency spills all
+    /// carry their byte accounting in the slice note (e.g.
+    /// `"write back 262144 B"`).
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        self.schedule.trace_events()
+    }
+
     /// The memory block of the `--json` payload: totals, config and
     /// residency counters.
     pub fn to_json(&self) -> Json {
@@ -910,6 +923,23 @@ module @m { func.func @main(%x: tensor<256x256xf32>, %w: tensor<256x256xf32>) ->
         let j = mem.roofline_json();
         assert_eq!(j.req_str("verdict").unwrap(), "bandwidth-bound");
         assert_eq!(j.req_arr("ops").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn trace_events_show_dma_sub_slices() {
+        let est = estimator();
+        let module = parse_module(CHAIN).unwrap();
+        let mem =
+            schedule_module_memory(&est, &module, EngineConfig::Tpu, &MemoryConfig::tpu_v4());
+        let events = mem.trace_events();
+        // The expanded timeline surfaces the cold fetch and the escape
+        // write-back as their own slices on the DMA lane.
+        assert!(events
+            .iter()
+            .any(|e| e.name.ends_with(".dma_in") && e.cat.starts_with("dma")));
+        assert!(events
+            .iter()
+            .any(|e| e.name.ends_with(".dma_out") && e.cat.starts_with("dma")));
     }
 
     #[test]

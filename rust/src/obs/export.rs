@@ -1,0 +1,258 @@
+//! Exporters: Prometheus text exposition and the plaintext scrape
+//! listener.
+//!
+//! [`render_prometheus`] turns a [`RegistrySnapshot`] into the
+//! text-exposition format (version 0.0.4) Prometheus scrapes: `# HELP`
+//! and `# TYPE` headers per family, `_total`-style counters, gauges,
+//! and cumulative `_bucket{le=...}` / `_sum` / `_count` histogram
+//! series. One deviation from the spec, inherent to the exact-count
+//! log2 buckets: our bucket upper bounds are *exclusive* (`[2^k,
+//! 2^(k+1))`), so an observation exactly equal to a boundary is counted
+//! one bucket above where an inclusive-`le` reader would place it.
+//!
+//! [`MetricsScrape`] is a minimal HTTP/1.0 responder for
+//! `serve --metrics ADDR:PORT`: every connection gets one rendered
+//! snapshot, whatever the request bytes say, so `curl` and bare `nc`
+//! both work.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::metrics::RegistrySnapshot;
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a label set as `{k="v",...}`; empty string for no labels.
+fn render_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn header(out: &mut String, family: &str, kind: &str, help: Option<&String>) {
+    if let Some(h) = help {
+        out.push_str(&format!("# HELP {family} {h}\n"));
+    }
+    out.push_str(&format!("# TYPE {family} {kind}\n"));
+}
+
+/// Render a registry snapshot in the Prometheus text exposition format.
+///
+/// Families appear in sorted order (counters, then gauges, then
+/// histograms); `# HELP`/`# TYPE` are emitted once per family.
+pub fn render_prometheus(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+    let mut last_family: Option<&str> = None;
+    for (family, labels, value) in &snap.counters {
+        if last_family != Some(family.as_str()) {
+            header(&mut out, family, "counter", snap.help.get(family));
+            last_family = Some(family);
+        }
+        out.push_str(&format!(
+            "{family}{} {value}\n",
+            render_labels(labels, None)
+        ));
+    }
+    last_family = None;
+    for (family, labels, value) in &snap.gauges {
+        if last_family != Some(family.as_str()) {
+            header(&mut out, family, "gauge", snap.help.get(family));
+            last_family = Some(family);
+        }
+        out.push_str(&format!(
+            "{family}{} {value}\n",
+            render_labels(labels, None)
+        ));
+    }
+    last_family = None;
+    for (family, labels, hist) in &snap.histograms {
+        if last_family != Some(family.as_str()) {
+            header(&mut out, family, "histogram", snap.help.get(family));
+            last_family = Some(family);
+        }
+        let mut cumulative = 0u64;
+        for (i, &count) in hist.buckets.iter().enumerate() {
+            cumulative += count;
+            match hist.bucket_bound(i) {
+                Some(bound) => out.push_str(&format!(
+                    "{family}_bucket{} {cumulative}\n",
+                    render_labels(labels, Some(("le", &bound.to_string())))
+                )),
+                None => out.push_str(&format!(
+                    "{family}_bucket{} {cumulative}\n",
+                    render_labels(labels, Some(("le", "+Inf")))
+                )),
+            }
+        }
+        out.push_str(&format!(
+            "{family}_sum{} {}\n",
+            render_labels(labels, None),
+            hist.sum
+        ));
+        out.push_str(&format!(
+            "{family}_count{} {}\n",
+            render_labels(labels, None),
+            hist.count
+        ));
+    }
+    out
+}
+
+/// A minimal plaintext metrics endpoint (`serve --metrics ADDR:PORT`).
+///
+/// Binds a listener and answers every connection with one freshly
+/// rendered exposition body over HTTP/1.0, then closes. The render
+/// closure is injected so the observability layer stays agnostic of
+/// what is being scraped. Stops (and joins its thread) on drop.
+pub struct MetricsScrape {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for MetricsScrape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsScrape").field("addr", &self.addr).finish()
+    }
+}
+
+impl MetricsScrape {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`) and serve `render()` output
+    /// to every connection from a background thread.
+    pub fn bind(
+        addr: &str,
+        render: Arc<dyn Fn() -> String + Send + Sync>,
+    ) -> std::io::Result<MetricsScrape> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_thread = Arc::clone(&stop);
+        let handle = thread::Builder::new()
+            .name("metrics-scrape".to_string())
+            .spawn(move || {
+                while !stop_thread.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            // Drain whatever request bytes arrived (best
+                            // effort; a bare `nc` may send nothing).
+                            let _ = stream.set_nonblocking(false);
+                            let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                            let mut buf = [0u8; 1024];
+                            let _ = stream.read(&mut buf);
+                            let body = render();
+                            let resp = format!(
+                                "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                                body.len(),
+                                body
+                            );
+                            let _ = stream.write_all(resp.as_bytes());
+                            let _ = stream.flush();
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(50));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(MetricsScrape {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join its thread (also happens on drop).
+    pub fn stop(self) {}
+}
+
+impl Drop for MetricsScrape {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+    use std::io::BufRead;
+
+    fn sample_registry() -> Registry {
+        let r = Registry::new();
+        r.set_help("scalesim_requests_total", "requests served");
+        r.counter("scalesim_requests_total", &[("type", "gemm")]).add(7);
+        r.gauge("scalesim_pool_queue_depth", &[]).set(3);
+        let h = r.histogram("scalesim_request_phase_ns", &[("phase", "estimate")], 4, 6);
+        h.record(10); // underflow
+        h.record(16);
+        h.record(100); // overflow
+        r
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let text = render_prometheus(&sample_registry().snapshot());
+        assert!(text.contains("# HELP scalesim_requests_total requests served"));
+        assert!(text.contains("# TYPE scalesim_requests_total counter"));
+        assert!(text.contains("scalesim_requests_total{type=\"gemm\"} 7"));
+        assert!(text.contains("# TYPE scalesim_pool_queue_depth gauge"));
+        assert!(text.contains("scalesim_pool_queue_depth 3"));
+        assert!(text.contains("# TYPE scalesim_request_phase_ns histogram"));
+        // Cumulative buckets: le=16 holds the underflow, le=32 adds the
+        // [16,32) observation, +Inf holds everything.
+        assert!(text.contains("scalesim_request_phase_ns_bucket{phase=\"estimate\",le=\"16\"} 1"));
+        assert!(text.contains("scalesim_request_phase_ns_bucket{phase=\"estimate\",le=\"32\"} 2"));
+        assert!(
+            text.contains("scalesim_request_phase_ns_bucket{phase=\"estimate\",le=\"+Inf\"} 3")
+        );
+        assert!(text.contains("scalesim_request_phase_ns_sum{phase=\"estimate\"} 126"));
+        assert!(text.contains("scalesim_request_phase_ns_count{phase=\"estimate\"} 3"));
+    }
+
+    #[test]
+    fn scrape_listener_answers_http() {
+        let registry = Arc::new(sample_registry());
+        let render: Arc<dyn Fn() -> String + Send + Sync> = {
+            let registry = Arc::clone(&registry);
+            Arc::new(move || render_prometheus(&registry.snapshot()))
+        };
+        let scrape = MetricsScrape::bind("127.0.0.1:0", render).unwrap();
+        let addr = scrape.local_addr();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut reader = std::io::BufReader::new(conn);
+        let mut status = String::new();
+        reader.read_line(&mut status).unwrap();
+        assert!(status.starts_with("HTTP/1.0 200 OK"), "{status}");
+        let mut body = String::new();
+        reader.read_to_string(&mut body).unwrap();
+        assert!(body.contains("scalesim_requests_total{type=\"gemm\"} 7"));
+        scrape.stop();
+    }
+}

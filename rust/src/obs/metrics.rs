@@ -1,0 +1,678 @@
+//! Atomic metrics primitives and the registry that names them.
+//!
+//! Three instrument kinds, all lock-free on the record path:
+//!
+//! * [`Counter`] — a monotonically increasing `u64`.
+//! * [`Gauge`] — a signed instantaneous value (queue depths, occupancy).
+//! * [`Histogram`] — fixed log2-bucket latency histogram with *exact*
+//!   counts: every observation lands in the bucket `[2^k, 2^(k+1))`
+//!   holding its value, plus dedicated underflow/overflow buckets. No
+//!   sampling, no decay — snapshots are exact sums of what was recorded.
+//!
+//! The [`Registry`] hands out `Arc` handles keyed by
+//! `(family, sorted label set)`; callers cache the handle and record
+//! through plain atomics, so the registry lock is only taken at
+//! registration and snapshot time.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// A counter at zero.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `total` if it is currently below it. Used to
+    /// mirror an externally maintained monotonic total (e.g. the shape
+    /// cache's per-shard atomics) into the registry at scrape time.
+    pub fn observe_total(&self, total: u64) {
+        self.value.fetch_max(total, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// An instantaneous signed value.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    /// A gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Set the gauge to an absolute value.
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `n` (may be negative).
+    pub fn add(&self, n: i64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Decrement by one.
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log2-bucket histogram with exact counts.
+///
+/// Bucket layout for `new(min_exp, max_exp)`:
+///
+/// * bucket `0` — underflow, values in `[0, 2^min_exp)`;
+/// * bucket `i` for `1 <= i <= max_exp - min_exp` — values in
+///   `[2^(min_exp+i-1), 2^(min_exp+i))`;
+/// * the last bucket — overflow, values in `[2^max_exp, u64::MAX]`.
+///
+/// The serve defaults (`min_exp = 10`, `max_exp = 34`) cover 1 µs to
+/// ~17 s at nanosecond inputs in 26 buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    min_exp: u32,
+    max_exp: u32,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// A histogram whose finite buckets span `[2^min_exp, 2^max_exp)`.
+    ///
+    /// Requires `min_exp < max_exp < 64`.
+    pub fn new(min_exp: u32, max_exp: u32) -> Histogram {
+        assert!(min_exp < max_exp && max_exp < 64, "bad histogram range");
+        let n = (max_exp - min_exp) as usize + 2;
+        Histogram {
+            min_exp,
+            max_exp,
+            buckets: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// The serve-path default: nanosecond observations from 1 µs
+    /// (`2^10` ns) to ~17 s (`2^34` ns).
+    pub fn for_latency_ns() -> Histogram {
+        Histogram::new(10, 34)
+    }
+
+    fn bucket_index(&self, value: u64) -> usize {
+        if value < (1u64 << self.min_exp) {
+            return 0;
+        }
+        // value >= 2^min_exp >= 1, so leading_zeros < 64.
+        let k = 63 - value.leading_zeros();
+        if k >= self.max_exp {
+            self.buckets.len() - 1
+        } else {
+            (k - self.min_exp) as usize + 1
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, value: u64) {
+        self.buckets[self.bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// A consistent-enough point-in-time copy (buckets are read
+    /// individually; concurrent writers may skew `count` by in-flight
+    /// observations, which is fine for monitoring).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            min_exp: self.min_exp,
+            max_exp: self.max_exp,
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned point-in-time copy of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Exponent of the smallest finite bucket boundary.
+    pub min_exp: u32,
+    /// Exponent of the overflow boundary.
+    pub max_exp: u32,
+    /// Per-bucket counts: underflow, finite buckets, overflow.
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of all observed values.
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Exclusive upper bound of bucket `i`; `None` for the overflow
+    /// bucket.
+    pub fn bucket_bound(&self, i: usize) -> Option<u64> {
+        if i + 1 >= self.buckets.len() {
+            None
+        } else {
+            Some(1u64 << (self.min_exp + i as u32))
+        }
+    }
+
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile at log2 resolution: the upper bound of the
+    /// bucket holding the `q`-th observation (the overflow bucket
+    /// reports its lower bound `2^max_exp`). `q` is clamped to `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return match self.bucket_bound(i) {
+                    Some(bound) => bound as f64,
+                    None => (1u64 << self.max_exp) as f64,
+                };
+            }
+        }
+        (1u64 << self.max_exp) as f64
+    }
+
+    /// Fold another snapshot into this one bucketwise. Fails if the
+    /// bucket layouts differ.
+    pub fn merge(&mut self, other: &HistogramSnapshot) -> Result<()> {
+        if self.min_exp != other.min_exp || self.max_exp != other.max_exp {
+            bail!(
+                "histogram layout mismatch: [{}, {}] vs [{}, {}]",
+                self.min_exp,
+                self.max_exp,
+                other.min_exp,
+                other.max_exp
+            );
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        Ok(())
+    }
+
+    /// The snapshot as a JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("min_exp", Json::Num(self.min_exp as f64))
+            .set("max_exp", Json::Num(self.max_exp as f64))
+            .set(
+                "buckets",
+                Json::Arr(self.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+            )
+            .set("count", Json::Num(self.count as f64))
+            .set("sum", Json::Num(self.sum as f64));
+        j
+    }
+
+    /// Parse a snapshot back from [`HistogramSnapshot::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<HistogramSnapshot> {
+        let min_exp = j.req_usize("min_exp")? as u32;
+        let max_exp = j.req_usize("max_exp")? as u32;
+        let buckets: Vec<u64> = j
+            .req_arr("buckets")?
+            .iter()
+            .map(|b| b.as_f64().map(|v| v as u64).context("bucket not a number"))
+            .collect::<Result<_>>()?;
+        if buckets.len() != (max_exp.saturating_sub(min_exp)) as usize + 2 {
+            bail!("bucket count {} does not match layout", buckets.len());
+        }
+        Ok(HistogramSnapshot {
+            min_exp,
+            max_exp,
+            buckets,
+            count: j.req_f64("count")? as u64,
+            sum: j.req_f64("sum")? as u64,
+        })
+    }
+}
+
+/// A `(family, sorted labels)` metric identity.
+type MetricId = (String, Vec<(String, String)>);
+
+fn metric_id(family: &str, labels: &[(&str, &str)]) -> MetricId {
+    let mut l: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    l.sort();
+    (family.to_string(), l)
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    help: BTreeMap<String, String>,
+    counters: BTreeMap<MetricId, Arc<Counter>>,
+    gauges: BTreeMap<MetricId, Arc<Gauge>>,
+    histograms: BTreeMap<MetricId, Arc<Histogram>>,
+}
+
+/// Named metric registry: get-or-create instruments by
+/// `(family, labels)` and snapshot everything for export.
+///
+/// The lock guards only registration and snapshots; recording goes
+/// through the returned `Arc` handles without touching the registry.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Attach help text to a metric family (rendered as `# HELP`).
+    pub fn set_help(&self, family: &str, help: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.help.insert(family.to_string(), help.to_string());
+    }
+
+    /// Get or create the counter for `(family, labels)`.
+    pub fn counter(&self, family: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        Arc::clone(
+            inner
+                .counters
+                .entry(metric_id(family, labels))
+                .or_insert_with(|| Arc::new(Counter::new())),
+        )
+    }
+
+    /// Get or create the gauge for `(family, labels)`.
+    pub fn gauge(&self, family: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        Arc::clone(
+            inner
+                .gauges
+                .entry(metric_id(family, labels))
+                .or_insert_with(|| Arc::new(Gauge::new())),
+        )
+    }
+
+    /// Get or create the histogram for `(family, labels)`. The bucket
+    /// layout is fixed by the first registration; later calls with the
+    /// same identity return the existing instrument.
+    pub fn histogram(
+        &self,
+        family: &str,
+        labels: &[(&str, &str)],
+        min_exp: u32,
+        max_exp: u32,
+    ) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        Arc::clone(
+            inner
+                .histograms
+                .entry(metric_id(family, labels))
+                .or_insert_with(|| Arc::new(Histogram::new(min_exp, max_exp))),
+        )
+    }
+
+    /// Snapshot every registered instrument.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let inner = self.inner.lock().unwrap();
+        RegistrySnapshot {
+            help: inner.help.clone(),
+            counters: inner
+                .counters
+                .iter()
+                .map(|((f, l), c)| (f.clone(), l.clone(), c.get()))
+                .collect(),
+            gauges: inner
+                .gauges
+                .iter()
+                .map(|((f, l), g)| (f.clone(), l.clone(), g.get()))
+                .collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|((f, l), h)| (f.clone(), l.clone(), h.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// Owned snapshot of a whole [`Registry`], ordered by
+/// `(family, labels)`. The unit the exporters and the merge/round-trip
+/// machinery operate on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegistrySnapshot {
+    /// `# HELP` text per family.
+    pub help: BTreeMap<String, String>,
+    /// `(family, labels, value)` per counter.
+    pub counters: Vec<(String, Vec<(String, String)>, u64)>,
+    /// `(family, labels, value)` per gauge.
+    pub gauges: Vec<(String, Vec<(String, String)>, i64)>,
+    /// `(family, labels, snapshot)` per histogram.
+    pub histograms: Vec<(String, Vec<(String, String)>, HistogramSnapshot)>,
+}
+
+fn labels_to_json(labels: &[(String, String)]) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in labels {
+        o.set(k, Json::Str(v.clone()));
+    }
+    o
+}
+
+fn labels_from_json(j: &Json) -> Result<Vec<(String, String)>> {
+    let Json::Obj(map) = j else {
+        bail!("labels must be an object");
+    };
+    let mut out = Vec::with_capacity(map.len());
+    for (k, v) in map {
+        let Json::Str(s) = v else {
+            bail!("label value for '{k}' must be a string");
+        };
+        out.push((k.clone(), s.clone()));
+    }
+    Ok(out)
+}
+
+impl RegistrySnapshot {
+    /// Merge another snapshot into this one: counters and histograms
+    /// add (matched by `(family, labels)`, unmatched entries append);
+    /// a matched gauge takes the other side's instantaneous value.
+    pub fn merge(&mut self, other: &RegistrySnapshot) -> Result<()> {
+        for (f, l, v) in &other.counters {
+            match self
+                .counters
+                .iter_mut()
+                .find(|(sf, sl, _)| sf == f && sl == l)
+            {
+                Some((_, _, sv)) => *sv += v,
+                None => self.counters.push((f.clone(), l.clone(), *v)),
+            }
+        }
+        for (f, l, v) in &other.gauges {
+            match self.gauges.iter_mut().find(|(sf, sl, _)| sf == f && sl == l) {
+                Some((_, _, sv)) => *sv = *v,
+                None => self.gauges.push((f.clone(), l.clone(), *v)),
+            }
+        }
+        for (f, l, h) in &other.histograms {
+            match self
+                .histograms
+                .iter_mut()
+                .find(|(sf, sl, _)| sf == f && sl == l)
+            {
+                Some((_, _, sh)) => sh.merge(h).with_context(|| format!("merging '{f}'"))?,
+                None => self.histograms.push((f.clone(), l.clone(), h.clone())),
+            }
+        }
+        for (f, h) in &other.help {
+            self.help.entry(f.clone()).or_insert_with(|| h.clone());
+        }
+        Ok(())
+    }
+
+    /// The snapshot as one JSON object (the `{"type":"metrics"}` serve
+    /// response payload).
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<Json> = self
+            .counters
+            .iter()
+            .map(|(f, l, v)| {
+                let mut o = Json::obj();
+                o.set("family", Json::Str(f.clone()))
+                    .set("labels", labels_to_json(l))
+                    .set("value", Json::Num(*v as f64));
+                o
+            })
+            .collect();
+        let gauges: Vec<Json> = self
+            .gauges
+            .iter()
+            .map(|(f, l, v)| {
+                let mut o = Json::obj();
+                o.set("family", Json::Str(f.clone()))
+                    .set("labels", labels_to_json(l))
+                    .set("value", Json::Num(*v as f64));
+                o
+            })
+            .collect();
+        let histograms: Vec<Json> = self
+            .histograms
+            .iter()
+            .map(|(f, l, h)| {
+                let mut o = Json::obj();
+                o.set("family", Json::Str(f.clone()))
+                    .set("labels", labels_to_json(l))
+                    .set("histogram", h.to_json());
+                o
+            })
+            .collect();
+        let mut help = Json::obj();
+        for (k, v) in &self.help {
+            help.set(k, Json::Str(v.clone()));
+        }
+        let mut j = Json::obj();
+        j.set("counters", Json::Arr(counters))
+            .set("gauges", Json::Arr(gauges))
+            .set("histograms", Json::Arr(histograms))
+            .set("help", help);
+        j
+    }
+
+    /// Parse a snapshot back from [`RegistrySnapshot::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<RegistrySnapshot> {
+        let mut snap = RegistrySnapshot::default();
+        for c in j.req_arr("counters")? {
+            snap.counters.push((
+                c.req_str("family")?.to_string(),
+                labels_from_json(c.get("labels").context("missing labels")?)?,
+                c.req_f64("value")? as u64,
+            ));
+        }
+        for g in j.req_arr("gauges")? {
+            snap.gauges.push((
+                g.req_str("family")?.to_string(),
+                labels_from_json(g.get("labels").context("missing labels")?)?,
+                g.req_f64("value")? as i64,
+            ));
+        }
+        for h in j.req_arr("histograms")? {
+            snap.histograms.push((
+                h.req_str("family")?.to_string(),
+                labels_from_json(h.get("labels").context("missing labels")?)?,
+                HistogramSnapshot::from_json(h.get("histogram").context("missing histogram")?)?,
+            ));
+        }
+        if let Some(Json::Obj(help)) = j.get("help") {
+            for (k, v) in help {
+                if let Json::Str(s) = v {
+                    snap.help.insert(k.clone(), s.clone());
+                }
+            }
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.observe_total(3); // below: no-op
+        assert_eq!(c.get(), 5);
+        c.observe_total(9);
+        assert_eq!(c.get(), 9);
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.add(-5);
+        assert_eq!(g.get(), -4);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_exact_powers_of_two() {
+        let h = Histogram::new(4, 8); // finite span [16, 256)
+        assert_eq!(h.buckets.len(), 6);
+        // Underflow: [0, 16).
+        assert_eq!(h.bucket_index(0), 0);
+        assert_eq!(h.bucket_index(15), 0);
+        // Exact lower boundary lands in the bucket it opens.
+        assert_eq!(h.bucket_index(16), 1);
+        assert_eq!(h.bucket_index(31), 1);
+        assert_eq!(h.bucket_index(32), 2);
+        assert_eq!(h.bucket_index(64), 3);
+        assert_eq!(h.bucket_index(128), 4);
+        assert_eq!(h.bucket_index(255), 4);
+        // Overflow: [256, ..].
+        assert_eq!(h.bucket_index(256), 5);
+        assert_eq!(h.bucket_index(u64::MAX), 5);
+    }
+
+    #[test]
+    fn histogram_snapshot_and_quantiles() {
+        let h = Histogram::new(4, 8);
+        for v in [1u64, 16, 17, 40, 300] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 374);
+        assert_eq!(s.buckets, vec![1, 2, 1, 0, 0, 1]);
+        assert_eq!(s.bucket_bound(0), Some(16));
+        assert_eq!(s.bucket_bound(4), Some(256));
+        assert_eq!(s.bucket_bound(5), None);
+        // Median observation (rank 3) sits in bucket [16, 32).
+        assert_eq!(s.quantile(0.5), 32.0);
+        // The max lives in the overflow bucket, reported at 2^max_exp.
+        assert_eq!(s.quantile(1.0), 256.0);
+        assert!((s.mean() - 74.8).abs() < 1e-9);
+        let empty = Histogram::new(4, 8).snapshot();
+        assert_eq!(empty.quantile(0.99), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_and_json_round_trip() {
+        let a = Histogram::new(4, 8);
+        a.record(20);
+        a.record(1000);
+        let b = Histogram::new(4, 8);
+        b.record(5);
+        b.record(20);
+        let mut sa = a.snapshot();
+        sa.merge(&b.snapshot()).unwrap();
+        assert_eq!(sa.count, 4);
+        assert_eq!(sa.buckets, vec![1, 2, 0, 0, 0, 1]);
+        let round = HistogramSnapshot::from_json(&sa.to_json()).unwrap();
+        assert_eq!(round, sa);
+        let other = Histogram::new(2, 8);
+        assert!(sa.merge(&other.snapshot()).is_err());
+    }
+
+    #[test]
+    fn registry_hands_out_shared_instruments() {
+        let r = Registry::new();
+        let c1 = r.counter("req_total", &[("type", "gemm")]);
+        let c2 = r.counter("req_total", &[("type", "gemm")]);
+        c1.inc();
+        c2.inc();
+        assert_eq!(c1.get(), 2);
+        let other = r.counter("req_total", &[("type", "module")]);
+        assert_eq!(other.get(), 0);
+        let h = r.histogram("lat_ns", &[], 10, 34);
+        h.record(2048);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters.len(), 2);
+        assert_eq!(snap.histograms.len(), 1);
+        assert_eq!(snap.histograms[0].2.count, 1);
+    }
+
+    #[test]
+    fn registry_snapshot_merge_and_round_trip() {
+        let r = Registry::new();
+        r.set_help("req_total", "requests served");
+        r.counter("req_total", &[("type", "gemm")]).add(3);
+        r.gauge("depth", &[]).set(5);
+        r.histogram("lat_ns", &[], 10, 34).record(4096);
+        let mut a = r.snapshot();
+        let b = r.snapshot();
+        a.merge(&b).unwrap();
+        assert_eq!(a.counters[0].2, 6);
+        assert_eq!(a.gauges[0].2, 5);
+        assert_eq!(a.histograms[0].2.count, 2);
+        let round = RegistrySnapshot::from_json(&b.to_json()).unwrap();
+        assert_eq!(round, b);
+    }
+}

@@ -1,0 +1,30 @@
+//! Dependency-free observability: metrics, spans, and exporters.
+//!
+//! The subsystem is deliberately self-contained (std + the crate's own
+//! JSON) and serving-agnostic — nothing here knows about estimators or
+//! sockets. It provides:
+//!
+//! * [`clock`] — the injectable [`Clock`] trait: [`MonotonicClock`] for
+//!   production, [`LogicalClock`] for deterministic tests.
+//! * [`metrics`] — atomic [`Counter`]s, [`Gauge`]s, and exact-count
+//!   fixed-log2-bucket [`Histogram`]s behind a name-keyed [`Registry`].
+//! * [`trace`] — the Chrome trace-event model ([`TraceEvent`]), the
+//!   guard-based [`SpanRecorder`], and the streaming
+//!   [`TraceFileWriter`].
+//! * [`export`] — [`render_prometheus`] text exposition and the
+//!   [`MetricsScrape`] plaintext endpoint.
+//!
+//! The serving stack wires these together in
+//! [`crate::coordinator::service::ServeMetrics`]; the scheduler's
+//! trace renderers live next to the schedules they export
+//! ([`crate::graph::ModuleSchedule::trace_events`] and friends).
+
+pub mod clock;
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use clock::{Clock, LogicalClock, MonotonicClock};
+pub use export::{render_prometheus, MetricsScrape};
+pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, Registry, RegistrySnapshot};
+pub use trace::{trace_json, SpanGuard, SpanRecorder, TraceEvent, TraceFileWriter};

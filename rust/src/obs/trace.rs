@@ -1,0 +1,383 @@
+//! Chrome trace-event model, the span recorder, and the streaming
+//! trace-file writer.
+//!
+//! Events follow the Trace Event Format consumed by Perfetto and
+//! `chrome://tracing`: complete (`"ph":"X"`) events carry a start
+//! timestamp and duration in microseconds; metadata (`"ph":"M"`) events
+//! name processes and threads. Viewers nest `X` events on the same
+//! `(pid, tid)` lane by time containment, which is how request phase
+//! spans render as children of their request span.
+
+use std::fs;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+use super::clock::Clock;
+
+/// One trace event in the Chrome trace-event format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Event name (the label rendered on the slice).
+    pub name: String,
+    /// Comma-separated category list.
+    pub cat: String,
+    /// Phase: `'X'` for complete events, `'M'` for metadata.
+    pub ph: char,
+    /// Start timestamp, microseconds.
+    pub ts_us: f64,
+    /// Duration, microseconds (`X` events only).
+    pub dur_us: Option<f64>,
+    /// Process id (lane group).
+    pub pid: u64,
+    /// Thread id (lane within the process).
+    pub tid: u64,
+    /// Free-form `args` payload shown in the viewer's detail pane.
+    pub args: Json,
+}
+
+impl TraceEvent {
+    /// A complete (`"ph":"X"`) event spanning `[ts_us, ts_us + dur_us]`.
+    pub fn complete(name: &str, cat: &str, ts_us: f64, dur_us: f64, pid: u64, tid: u64) -> Self {
+        TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: 'X',
+            ts_us,
+            dur_us: Some(dur_us),
+            pid,
+            tid,
+            args: Json::obj(),
+        }
+    }
+
+    /// The `process_name` metadata event for `pid`.
+    pub fn process_name(pid: u64, name: &str) -> Self {
+        let mut args = Json::obj();
+        args.set("name", Json::Str(name.to_string()));
+        TraceEvent {
+            name: "process_name".to_string(),
+            cat: "__metadata".to_string(),
+            ph: 'M',
+            ts_us: 0.0,
+            dur_us: None,
+            pid,
+            tid: 0,
+            args,
+        }
+    }
+
+    /// The `thread_name` metadata event for `(pid, tid)`.
+    pub fn thread_name(pid: u64, tid: u64, name: &str) -> Self {
+        let mut args = Json::obj();
+        args.set("name", Json::Str(name.to_string()));
+        TraceEvent {
+            name: "thread_name".to_string(),
+            cat: "__metadata".to_string(),
+            ph: 'M',
+            ts_us: 0.0,
+            dur_us: None,
+            pid,
+            tid,
+            args,
+        }
+    }
+
+    /// Attach one `args` entry (builder style).
+    pub fn arg(mut self, key: &str, value: Json) -> Self {
+        self.args.set(key, value);
+        self
+    }
+
+    /// The event as a trace-format JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("cat", Json::Str(self.cat.clone()))
+            .set("ph", Json::Str(self.ph.to_string()))
+            .set("ts", Json::Num(self.ts_us))
+            .set("pid", Json::Num(self.pid as f64))
+            .set("tid", Json::Num(self.tid as f64));
+        if let Some(dur) = self.dur_us {
+            j.set("dur", Json::Num(dur));
+        }
+        match &self.args {
+            Json::Obj(map) if map.is_empty() => {}
+            args => {
+                j.set("args", args.clone());
+            }
+        }
+        j
+    }
+}
+
+/// Wrap events into the top-level trace object Perfetto loads:
+/// `{"traceEvents":[...]}`.
+pub fn trace_json(events: &[TraceEvent]) -> Json {
+    let mut j = Json::obj();
+    j.set(
+        "traceEvents",
+        Json::Arr(events.iter().map(TraceEvent::to_json).collect()),
+    );
+    j
+}
+
+/// Thread-safe span/event recorder over an injectable [`Clock`].
+///
+/// `serve` runs it on a [`super::MonotonicClock`]; tests inject a
+/// [`super::LogicalClock`] and assert exact timestamps. Spans are
+/// guard-based: [`SpanRecorder::span`] stamps the start, and dropping
+/// the guard records one complete event.
+pub struct SpanRecorder {
+    clock: Arc<dyn Clock>,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl std::fmt::Debug for SpanRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanRecorder")
+            .field("events", &self.events.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl SpanRecorder {
+    /// A recorder stamping events from `clock`.
+    pub fn new(clock: Arc<dyn Clock>) -> SpanRecorder {
+        SpanRecorder {
+            clock,
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Current clock reading, nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Append an already-built event.
+    pub fn record(&self, ev: TraceEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Open a span on lane `(pid, tid)`; the returned guard records a
+    /// complete event covering its lifetime when dropped.
+    pub fn span(&self, name: &str, cat: &str, pid: u64, tid: u64) -> SpanGuard<'_> {
+        SpanGuard {
+            rec: self,
+            name: name.to_string(),
+            cat: cat.to_string(),
+            pid,
+            tid,
+            start_ns: self.clock.now_ns(),
+            args: Json::obj(),
+        }
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take all recorded events, leaving the recorder empty.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+}
+
+/// Live span handle from [`SpanRecorder::span`]; records its complete
+/// event on drop.
+pub struct SpanGuard<'a> {
+    rec: &'a SpanRecorder,
+    name: String,
+    cat: String,
+    pid: u64,
+    tid: u64,
+    start_ns: u64,
+    args: Json,
+}
+
+impl SpanGuard<'_> {
+    /// Attach one `args` entry to the event this span will record.
+    pub fn arg(&mut self, key: &str, value: Json) {
+        self.args.set(key, value);
+    }
+
+    /// The span's start timestamp, nanoseconds.
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let end_ns = self.rec.now_ns();
+        self.rec.record(TraceEvent {
+            name: std::mem::take(&mut self.name),
+            cat: std::mem::take(&mut self.cat),
+            ph: 'X',
+            ts_us: self.start_ns as f64 / 1000.0,
+            dur_us: Some(end_ns.saturating_sub(self.start_ns) as f64 / 1000.0),
+            pid: self.pid,
+            tid: self.tid,
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+struct TraceFileInner {
+    out: BufWriter<fs::File>,
+    written: u64,
+    finished: bool,
+}
+
+/// Streaming trace-file writer: emits a valid
+/// `{"traceEvents":[...]}` document incrementally, so `serve --trace`
+/// can append completed request spans without holding the whole trace
+/// in memory.
+pub struct TraceFileWriter {
+    inner: Mutex<TraceFileInner>,
+}
+
+impl std::fmt::Debug for TraceFileWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceFileWriter").finish()
+    }
+}
+
+impl TraceFileWriter {
+    /// Create (truncate) `path` and write the document header.
+    pub fn create(path: &Path) -> io::Result<TraceFileWriter> {
+        let mut out = BufWriter::new(fs::File::create(path)?);
+        out.write_all(b"{\"traceEvents\":[")?;
+        Ok(TraceFileWriter {
+            inner: Mutex::new(TraceFileInner {
+                out,
+                written: 0,
+                finished: false,
+            }),
+        })
+    }
+
+    /// Append one event.
+    pub fn write(&self, ev: &TraceEvent) -> io::Result<()> {
+        self.write_all(std::slice::from_ref(ev))
+    }
+
+    /// Append a batch of events.
+    pub fn write_all(&self, events: &[TraceEvent]) -> io::Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.finished {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "trace file already finished",
+            ));
+        }
+        for ev in events {
+            if inner.written > 0 {
+                inner.out.write_all(b",\n")?;
+            }
+            let line = ev.to_json().dump();
+            inner.out.write_all(line.as_bytes())?;
+            inner.written += 1;
+        }
+        Ok(())
+    }
+
+    /// Close the JSON document and flush. Returns the event count.
+    /// Idempotent; also invoked best-effort on drop.
+    pub fn finish(&self) -> io::Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.finished {
+            inner.finished = true;
+            inner.out.write_all(b"]}\n")?;
+            inner.out.flush()?;
+        }
+        Ok(inner.written)
+    }
+}
+
+impl Drop for TraceFileWriter {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::LogicalClock;
+
+    #[test]
+    fn event_json_shape() {
+        let ev = TraceEvent::complete("op", "mxu", 1.5, 2.0, 1, 3).arg("index", Json::Num(7.0));
+        let j = ev.to_json();
+        assert_eq!(j.req_str("ph").unwrap(), "X");
+        assert_eq!(j.req_f64("ts").unwrap(), 1.5);
+        assert_eq!(j.req_f64("dur").unwrap(), 2.0);
+        assert_eq!(j.req_f64("tid").unwrap(), 3.0);
+        assert_eq!(j.get("args").unwrap().req_f64("index").unwrap(), 7.0);
+        let m = TraceEvent::thread_name(1, 2, "vpu").to_json();
+        assert_eq!(m.req_str("ph").unwrap(), "M");
+        assert_eq!(m.get("args").unwrap().req_str("name").unwrap(), "vpu");
+        assert!(m.get("dur").is_none());
+    }
+
+    #[test]
+    fn logical_clock_spans_nest_deterministically() {
+        let clock = Arc::new(LogicalClock::new());
+        let rec = SpanRecorder::new(Arc::clone(&clock) as Arc<dyn Clock>);
+        {
+            let _outer = rec.span("request", "serve", 1, 9);
+            clock.advance(1_000);
+            {
+                let mut inner = rec.span("estimate", "serve", 1, 9);
+                inner.arg("hit", Json::Bool(true));
+                clock.advance(5_000);
+            }
+            clock.advance(2_000);
+        }
+        let events = rec.drain();
+        assert!(rec.is_empty());
+        // Inner span drops first.
+        assert_eq!(events.len(), 2);
+        let (inner, outer) = (&events[0], &events[1]);
+        assert_eq!(inner.name, "estimate");
+        assert_eq!(inner.ts_us, 1.0);
+        assert_eq!(inner.dur_us, Some(5.0));
+        assert_eq!(outer.name, "request");
+        assert_eq!(outer.ts_us, 0.0);
+        assert_eq!(outer.dur_us, Some(8.0));
+        // Time containment: the viewer nests inner under outer.
+        assert!(outer.ts_us <= inner.ts_us);
+        assert!(inner.ts_us + inner.dur_us.unwrap() <= outer.ts_us + outer.dur_us.unwrap());
+    }
+
+    #[test]
+    fn trace_file_writer_produces_valid_json() {
+        let dir = std::env::temp_dir().join("scalesim_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("writer.trace.json");
+        let w = TraceFileWriter::create(&path).unwrap();
+        w.write(&TraceEvent::complete("a", "c", 0.0, 1.0, 1, 1))
+            .unwrap();
+        w.write_all(&[
+            TraceEvent::complete("b", "c", 1.0, 2.0, 1, 1),
+            TraceEvent::process_name(1, "p"),
+        ])
+        .unwrap();
+        assert_eq!(w.finish().unwrap(), 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req_arr("traceEvents").unwrap().len(), 3);
+        assert!(w.write(&TraceEvent::process_name(1, "x")).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,156 @@
+//! Observability integration: the Chrome trace renderers against a
+//! hand-authored golden fixture and the trace-event schema.
+//!
+//! The golden test pins the exact JSON the scheduler's trace renderer
+//! emits for a three-op diamond whose placement is computable by hand
+//! (MXU 10 µs ∥ VPU 2 µs → VPU 1 µs join: makespan 11 µs, the side
+//! branch carries 8 µs of slack). The schema tests then run the real
+//! BERT-layer fixture through the deterministic sweep-calibrated
+//! estimator and validate every emitted event against the trace-event
+//! format Perfetto/`chrome://tracing` consume — required keys, `X`
+//! durations, lanes declared via `thread_name` metadata — plus
+//! renderer determinism (same schedule, byte-identical trace).
+
+use scalesim_tpu::device::DeviceSpec;
+use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::graph::analysis::finish_schedule;
+use scalesim_tpu::graph::{Engine, EngineConfig, SchedNode};
+use scalesim_tpu::memory::schedule_estimate_memory;
+use scalesim_tpu::obs::{trace_json, TraceEvent};
+use scalesim_tpu::sweep::sweep_estimator;
+use scalesim_tpu::util::json::Json;
+
+fn fixture(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// The hand-schedulable diamond behind the golden fixture.
+fn mini_schedule_nodes() -> Vec<SchedNode> {
+    vec![
+        SchedNode {
+            index: 0,
+            op_name: "attn_qk".into(),
+            engine: Some(Engine::Mxu),
+            cost_us: 10.0,
+            preds: vec![],
+            source: "systolic",
+            note: String::new(),
+        },
+        SchedNode {
+            index: 1,
+            op_name: "bias_add".into(),
+            engine: Some(Engine::Vpu),
+            cost_us: 2.0,
+            preds: vec![],
+            source: "free",
+            note: "elementwise".into(),
+        },
+        SchedNode {
+            index: 2,
+            op_name: "softmax_join".into(),
+            engine: Some(Engine::Vpu),
+            cost_us: 1.0,
+            preds: vec![0, 1],
+            source: "learned",
+            note: String::new(),
+        },
+    ]
+}
+
+#[test]
+fn mini_schedule_trace_matches_golden_fixture() {
+    let sched = finish_schedule("mini".into(), EngineConfig::Tpu, mini_schedule_nodes());
+    assert_eq!(sched.makespan_us, 11.0);
+    let got = trace_json(&sched.trace_events());
+    let want = Json::parse(&fixture("mini_schedule.trace.json")).expect("fixture parses");
+    assert_eq!(
+        got, want,
+        "trace renderer diverged from the golden fixture:\n got: {}\nwant: {}",
+        got.dump(),
+        want.dump()
+    );
+}
+
+/// Assert one event satisfies the trace-event format: the keys every
+/// viewer requires, a phase we emit, and a non-negative `X` duration.
+fn check_event_schema(ev: &Json, engines: usize) {
+    let name = ev.req_str("name").expect("event has name");
+    let ph = ev.req_str("ph").expect("event has ph");
+    assert!(ev.req_str("cat").is_ok(), "{name}: missing cat");
+    assert!(ev.req_f64("ts").is_ok(), "{name}: missing ts");
+    let pid = ev.req_f64("pid").expect("event has pid");
+    let tid = ev.req_f64("tid").expect("event has tid");
+    assert_eq!(pid, 1.0, "{name}: scheduler traces use one process");
+    assert!(
+        (tid as usize) < engines,
+        "{name}: tid {tid} outside the declared engine lanes"
+    );
+    match ph {
+        "X" => {
+            let dur = ev.req_f64("dur").expect("X event has dur");
+            assert!(dur >= 0.0, "{name}: negative duration {dur}");
+        }
+        "M" => {
+            assert!(
+                name == "process_name" || name == "thread_name",
+                "unexpected metadata event {name}"
+            );
+            assert!(
+                ev.get("args").and_then(|a| a.get("name")).is_some(),
+                "{name}: metadata without args.name"
+            );
+        }
+        other => panic!("{name}: unexpected phase {other:?}"),
+    }
+}
+
+#[test]
+fn bert_layer_trace_is_schema_valid_and_deterministic() {
+    let module = parse_module(&fixture("bert_layer.mlir")).expect("bert fixture parses");
+    let est = sweep_estimator(&DeviceSpec::tpu_v4());
+    let report = est.estimate_module(&module);
+    let engines = EngineConfig::Tpu;
+    let mem = schedule_estimate_memory(
+        &module,
+        &report,
+        engines,
+        &DeviceSpec::tpu_v4().memory_config(),
+    );
+
+    let events = mem.trace_events();
+    let lanes = engines.engines().len();
+
+    // Lane metadata: exactly one process_name, one thread_name per
+    // engine of the config, declared before any slice uses the lane.
+    let names: Vec<&TraceEvent> = events.iter().filter(|e| e.ph == 'M').collect();
+    assert_eq!(names.len(), 1 + lanes);
+    assert_eq!(names[0].name, "process_name");
+
+    // Every event passes the schema check after a JSON round-trip (the
+    // same bytes `--trace-out` writes).
+    let json = trace_json(&events);
+    let arr = json.req_arr("traceEvents").expect("traceEvents array");
+    assert!(arr.len() > 1 + lanes, "no op slices rendered");
+    for ev in arr {
+        check_event_schema(ev, lanes);
+    }
+
+    // The memory-aware renderer keeps the DMA sub-slices visible and
+    // flags a critical chain for the viewer to highlight.
+    let cats: Vec<&str> = events.iter().map(|e| e.cat.as_str()).collect();
+    assert!(
+        cats.iter().any(|c| c.ends_with(",critical")),
+        "no critical-path slice in the BERT trace"
+    );
+    assert!(
+        events.iter().any(|e| e.name.ends_with(".dma_in")),
+        "memory-aware trace lost its dma_in sub-slices"
+    );
+
+    // Determinism: rendering the same schedule twice is byte-identical.
+    let again = trace_json(&mem.trace_events());
+    assert_eq!(json.dump(), again.dump());
+}

@@ -11,8 +11,11 @@
 #                    --cache-snapshot for warm restarts, --metrics /
 #                    --trace for the observability surface)
 #   bench-serve      closed-loop load generator for the TCP service
+#   llm              request-level LLM serving simulation (prefill/decode
+#                    phases, KV-cache residency, continuous batching)
+#   bench-llm        the decoder-block serving sweep over every preset
 
-.PHONY: build test bench bench-schedule bench-devices bench-estimator bench-serve devices trace artifacts fmt clippy doc check
+.PHONY: build test bench bench-schedule bench-devices bench-estimator bench-serve bench-llm devices trace artifacts fmt clippy doc check
 
 build:
 	cargo build --release
@@ -49,6 +52,13 @@ bench-estimator:
 bench-serve: build
 	cargo run --release -- bench-serve --clients 16 --requests 2000 --publish
 
+# The LLM serving sweep: the decoder-block fixture served on every
+# device preset with the fixed seeded workload; publishes BENCH_llm.json
+# at the repo root (CI verifies freshness with `bench-llm --check`).
+# EXPERIMENTS.md §LLM serving records the headline tokens/sec + TTFT.
+bench-llm: build
+	cargo run --release -- bench-llm --publish
+
 # Round-trip every checked-in device file through the loader, verify the
 # preset-named ones match the registry, and smoke the compare path
 # against all presets (the CI device job).
@@ -80,9 +90,10 @@ doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # The CI gate: format, lints, docs, the full test suite, and the
-# published serve-bench freshness gate.
+# published bench freshness gates.
 check: fmt clippy doc test
 	cargo run --release -- bench-serve --check
+	cargo run --release -- bench-llm --check
 
 # AOT-compile the JAX/Pallas workloads into artifacts/ (requires jax).
 # Rust tests that consume artifacts self-skip when this has not run.

@@ -127,6 +127,7 @@ struct NetCounters {
     gemm: AtomicU64,
     elementwise: AtomicU64,
     module: AtomicU64,
+    llm: AtomicU64,
     stats: AtomicU64,
     metrics: AtomicU64,
 }
@@ -145,6 +146,7 @@ impl NetCounters {
             Request::Gemm { .. } => self.gemm.fetch_add(1, Ordering::Relaxed),
             Request::Elementwise { .. } => self.elementwise.fetch_add(1, Ordering::Relaxed),
             Request::Module { .. } => self.module.fetch_add(1, Ordering::Relaxed),
+            Request::Llm { .. } => self.llm.fetch_add(1, Ordering::Relaxed),
             Request::Stats => self.stats.fetch_add(1, Ordering::Relaxed),
             Request::Metrics => self.metrics.fetch_add(1, Ordering::Relaxed),
         };
@@ -482,6 +484,7 @@ impl NetServer {
             gemm: counters.gemm.load(Ordering::Relaxed),
             elementwise: counters.elementwise.load(Ordering::Relaxed),
             module: counters.module.load(Ordering::Relaxed),
+            llm: counters.llm.load(Ordering::Relaxed),
             stats_requests: counters.stats.load(Ordering::Relaxed),
             metrics_requests: counters.metrics.load(Ordering::Relaxed),
             cache: self.estimator.cache.stats(),

@@ -43,6 +43,9 @@ use crate::frontend::classify::{EwKind, OpClass};
 use crate::frontend::parse_module;
 use crate::frontend::types::{DType, TensorType};
 use crate::graph::{schedule_estimate, EngineConfig};
+use crate::inference::{
+    generate_workload, simulate, KvCacheSpec, PhaseModel, SimConfig, WorkloadConfig,
+};
 use crate::memory::{schedule_estimate_memory, MemoryConfig};
 use crate::obs::{
     render_prometheus, Clock, Gauge, Histogram, HistogramSnapshot, MonotonicClock, Registry,
@@ -88,6 +91,21 @@ pub enum Request {
         /// Optional multi-chip slice to estimate across (unset knobs
         /// inherit the request's device spec).
         slice: Option<SliceRequest>,
+        /// Device preset to answer for; `None` uses the default.
+        device: Option<String>,
+    },
+    /// A request-level LLM serving simulation of a decoder-block module
+    /// from a file path: prefill/decode phases, pinned KV-cache
+    /// residency, continuous batching over a seeded arrival stream.
+    Llm {
+        /// Path to the StableHLO text file.
+        path: String,
+        /// Requests in the seeded stream (`"requests"`, default 16).
+        requests: usize,
+        /// Workload seed (`"seed"`, default 42).
+        seed: u64,
+        /// Continuous-batching limit (`"max_batch"`, default 8).
+        max_batch: usize,
         /// Device preset to answer for; `None` uses the default.
         device: Option<String>,
     },
@@ -252,6 +270,38 @@ impl Request {
                 slice: parse_slice(&j)?,
                 device: parse_device(&j)?,
             }),
+            "llm" => {
+                let opt_uint = |key: &str, default: u64| -> Result<u64> {
+                    match j.get(key) {
+                        None => Ok(default),
+                        Some(v) => {
+                            let n = v
+                                .as_f64()
+                                .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number"))?;
+                            if !n.is_finite() || n < 0.0 || n.fract() != 0.0 {
+                                bail!("'{key}' must be a non-negative integer, got {n}");
+                            }
+                            Ok(n as u64)
+                        }
+                    }
+                };
+                let requests = opt_uint("requests", 16)? as usize;
+                let seed = opt_uint("seed", 42)?;
+                let max_batch = opt_uint("max_batch", 8)? as usize;
+                if requests == 0 {
+                    bail!("'requests' must be at least 1");
+                }
+                if max_batch == 0 {
+                    bail!("'max_batch' must be at least 1");
+                }
+                Ok(Request::Llm {
+                    path: j.req_str("path").map_err(|e| anyhow::anyhow!("{e}"))?.to_string(),
+                    requests,
+                    seed,
+                    max_batch,
+                    device: parse_device(&j)?,
+                })
+            }
             "stats" => Ok(Request::Stats),
             "metrics" => Ok(Request::Metrics),
             other => bail!("unknown request type '{other}'"),
@@ -263,7 +313,8 @@ impl Request {
         match self {
             Request::Gemm { device, .. }
             | Request::Elementwise { device, .. }
-            | Request::Module { device, .. } => device.as_deref(),
+            | Request::Module { device, .. }
+            | Request::Llm { device, .. } => device.as_deref(),
             Request::Stats | Request::Metrics => None,
         }
     }
@@ -275,6 +326,7 @@ impl Request {
             Request::Gemm { .. } => "gemm",
             Request::Elementwise { .. } => "elementwise",
             Request::Module { .. } => "module",
+            Request::Llm { .. } => "llm",
             Request::Stats => "stats",
             Request::Metrics => "metrics",
         }
@@ -294,7 +346,8 @@ impl Request {
 /// nanoseconds):
 ///
 /// * `scalesim_requests_total{type=...}` — requests answered, by kind
-///   (`gemm`, `elementwise`, `module`, `stats`, `metrics`, `invalid`).
+///   (`gemm`, `elementwise`, `module`, `llm`, `stats`, `metrics`,
+///   `invalid`).
 /// * `scalesim_request_errors_total` — requests answered with an error
 ///   object.
 /// * `scalesim_request_phase_ns{phase=...}` — phase latency
@@ -835,6 +888,39 @@ fn handle_request(devices: &DeviceEstimators, req: &Request) -> Result<(Json, Op
                 }
             }
         }
+        Request::Llm {
+            path,
+            requests,
+            seed,
+            max_batch,
+            ..
+        } => {
+            let text = std::fs::read_to_string(path)?;
+            let module = parse_module(&text)?;
+            let mut phase = PhaseModel::new(estimator, &module).ok_or_else(|| {
+                anyhow::anyhow!("module @{} has no sequence extent to serve", module.name)
+            })?;
+            let kv = KvCacheSpec::infer(&module, 1).ok_or_else(|| {
+                anyhow::anyhow!("module @{} yields no KV-cache shape", module.name)
+            })?;
+            let workload = generate_workload(&WorkloadConfig {
+                requests: *requests,
+                seed: *seed,
+                ..WorkloadConfig::default()
+            });
+            let cfg = SimConfig {
+                max_batch: *max_batch,
+                kv_capacity: Some(estimator.device().vmem_bytes),
+            };
+            let mut report = simulate(estimator, &mut phase, &kv, &workload, &cfg);
+            report.module = module.name.clone();
+            // The per-phase schedules estimate through the shared cache,
+            // but a serving run touches many rewritten shapes — no single
+            // warm/cold verdict applies.
+            let mut o = report.summary_json();
+            o.set("type", Json::Str("llm".into()));
+            Ok((o, None))
+        }
         Request::Stats => {
             let mut o = estimator.cache.stats().to_json();
             o.set("type", Json::Str("stats".into()));
@@ -894,6 +980,8 @@ pub struct StreamSummary {
     pub elementwise: u64,
     /// `module` requests.
     pub module: u64,
+    /// `llm` serving-simulation requests.
+    pub llm: u64,
     /// `stats` barrier requests.
     pub stats_requests: u64,
     /// `metrics` snapshot requests.
@@ -907,7 +995,7 @@ impl StreamSummary {
     pub fn render(&self) -> String {
         let [unfused, fused, scheduled] = self.cache.modes;
         format!(
-            "serve: {} requests ({} ok, {} errors; {} gemm / {} elementwise / {} module / {} stats / {} metrics); \
+            "serve: {} requests ({} ok, {} errors; {} gemm / {} elementwise / {} module / {} llm / {} stats / {} metrics); \
              cache: {} hits, {} misses ({:.1}% hit rate, {} entries); \
              sources: {} systolic, {} learned, {} learned-proxy, {} bandwidth, {} free, {} fallback; \
              modes: {} unfused ({:.1} us), {} fused ({:.1} us), {} scheduled ({:.1} us)",
@@ -917,6 +1005,7 @@ impl StreamSummary {
             self.gemm,
             self.elementwise,
             self.module,
+            self.llm,
             self.stats_requests,
             self.metrics_requests,
             self.cache.hits,
@@ -1026,6 +1115,7 @@ pub fn serve_stream<In: BufRead, Out: Write>(
                     Request::Gemm { .. } => summary.gemm += 1,
                     Request::Elementwise { .. } => summary.elementwise += 1,
                     Request::Module { .. } => summary.module += 1,
+                    Request::Llm { .. } => summary.llm += 1,
                     Request::Metrics => summary.metrics_requests += 1,
                     Request::Stats => unreachable!(),
                 }

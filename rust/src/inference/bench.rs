@@ -1,0 +1,266 @@
+//! `bench-llm`: the serving-simulator benchmark and its freshness gate.
+//!
+//! Runs the decoder-block fixture through the continuous-batching
+//! simulator on every device preset with a fixed seeded workload, and
+//! reports per-preset tokens/sec, TTFT and TPOT plus the simulator's
+//! own wall-clock throughput (simulated requests per wall second).
+//!
+//! `--publish` writes `BENCH_llm.json` at the repo root stamped with an
+//! FNV-1a fingerprint of this source file *and* the fixture; `--check`
+//! re-reads it and fails when missing or stale — the same freshness
+//! idiom as `BENCH_serve.json` / `BENCH_estimator.json`, wired into
+//! `make check` and CI.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::{DeviceSpec, PRESET_NAMES};
+use crate::frontend::parse_module;
+use crate::sweep::sweep_estimator;
+use crate::util::json::Json;
+
+use super::kv::KvCacheSpec;
+use super::phase::PhaseModel;
+use super::sim::{simulate, SimConfig};
+use super::workload::{generate_workload, WorkloadConfig};
+
+const SOURCE: &str = include_str!("bench.rs");
+const FIXTURE: &str = include_str!("../../tests/fixtures/decoder_block.mlir");
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of this source file plus the decoder-block fixture,
+/// stamped into `BENCH_llm.json`.
+pub fn source_fingerprint() -> String {
+    let mut h = fnv1a(SOURCE.as_bytes());
+    h ^= fnv1a(FIXTURE.as_bytes());
+    format!("{h:016x}")
+}
+
+/// `BENCH_llm.json` at the repo root.
+pub fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_llm.json")
+}
+
+/// Knobs for [`run_llm_bench`].
+#[derive(Debug, Clone, Copy)]
+pub struct LlmBenchOptions {
+    /// Requests in the seeded stream.
+    pub requests: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Continuous-batching limit.
+    pub max_batch: usize,
+}
+
+impl Default for LlmBenchOptions {
+    fn default() -> LlmBenchOptions {
+        LlmBenchOptions {
+            requests: 64,
+            seed: 42,
+            max_batch: 8,
+        }
+    }
+}
+
+/// One preset's serving metrics.
+#[derive(Debug, Clone)]
+pub struct LlmBenchRow {
+    /// Device preset name.
+    pub device: String,
+    /// Simulated serving throughput.
+    pub tokens_per_sec: f64,
+    /// Median time to first token, µs.
+    pub ttft_p50_us: f64,
+    /// Mean time per output token, µs.
+    pub tpot_mean_us: f64,
+    /// Stream makespan, µs.
+    pub makespan_us: f64,
+    /// KV placements that had to serve from HBM.
+    pub kv_spill_events: usize,
+}
+
+/// The published benchmark report.
+#[derive(Debug, Clone)]
+pub struct LlmBenchReport {
+    /// Options the run used.
+    pub options: LlmBenchOptions,
+    /// Per-preset rows, in [`PRESET_NAMES`] order.
+    pub rows: Vec<LlmBenchRow>,
+    /// Wall-clock seconds for the whole sweep.
+    pub elapsed_s: f64,
+    /// Simulated requests per wall second (the bench axis: simulator
+    /// speed itself).
+    pub sim_requests_per_sec: f64,
+}
+
+impl LlmBenchReport {
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "bench-llm: {} requests, seed {}, max batch {} — {:.3}s wall ({:.0} sim req/s)\n",
+            self.options.requests,
+            self.options.seed,
+            self.options.max_batch,
+            self.elapsed_s,
+            self.sim_requests_per_sec
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "  {:>16}  {:>12.1} tok/s  ttft p50 {:>12.3} us  tpot {:>10.3} us  spills {}\n",
+                r.device, r.tokens_per_sec, r.ttft_p50_us, r.tpot_mean_us, r.kv_spill_events
+            ));
+        }
+        s
+    }
+
+    /// The `BENCH_llm.json` payload.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("bench", Json::Str("llm".into()))
+            .set("requests", Json::Num(self.options.requests as f64))
+            .set("seed", Json::Num(self.options.seed as f64))
+            .set("max_batch", Json::Num(self.options.max_batch as f64))
+            .set("elapsed_s", Json::Num(self.elapsed_s))
+            .set("sim_requests_per_sec", Json::Num(self.sim_requests_per_sec))
+            .set("source_fingerprint", Json::Str(source_fingerprint()));
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut row = Json::obj();
+                row.set("device", Json::Str(r.device.clone()))
+                    .set("tokens_per_sec", Json::Num(r.tokens_per_sec))
+                    .set("ttft_p50_us", Json::Num(r.ttft_p50_us))
+                    .set("tpot_mean_us", Json::Num(r.tpot_mean_us))
+                    .set("makespan_us", Json::Num(r.makespan_us))
+                    .set("kv_spill_events", Json::Num(r.kv_spill_events as f64));
+                row
+            })
+            .collect();
+        o.set("devices", Json::Arr(rows));
+        o
+    }
+
+    /// Write `BENCH_llm.json` at the repo root.
+    pub fn publish(&self) -> Result<()> {
+        let path = bench_json_path();
+        std::fs::write(&path, self.to_json().dump() + "\n")
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("published {}", path.display());
+        Ok(())
+    }
+}
+
+/// Run the fixed decoder-block serving sweep over every preset.
+pub fn run_llm_bench(options: &LlmBenchOptions) -> Result<LlmBenchReport> {
+    let module = parse_module(FIXTURE).context("parsing decoder_block fixture")?;
+    let workload = generate_workload(&WorkloadConfig {
+        requests: options.requests,
+        seed: options.seed,
+        ..WorkloadConfig::default()
+    });
+    let start = Instant::now();
+    let mut rows = Vec::new();
+    for name in PRESET_NAMES {
+        let spec = DeviceSpec::preset(name).expect("registered preset");
+        let est = sweep_estimator(&spec);
+        let mut phase = PhaseModel::new(&est, &module)
+            .ok_or_else(|| anyhow::anyhow!("fixture has no sequence extent"))?;
+        let kv = KvCacheSpec::infer(&module, 1)
+            .ok_or_else(|| anyhow::anyhow!("fixture has no KV shape"))?;
+        let cfg = SimConfig {
+            max_batch: options.max_batch,
+            kv_capacity: Some(spec.vmem_bytes),
+        };
+        let report = simulate(&est, &mut phase, &kv, &workload, &cfg);
+        rows.push(LlmBenchRow {
+            device: name.to_string(),
+            tokens_per_sec: report.tokens_per_sec,
+            ttft_p50_us: report.ttft_p50_us(),
+            tpot_mean_us: report.tpot_mean_us(),
+            makespan_us: report.makespan_us,
+            kv_spill_events: report.kv_spill_events,
+        });
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let total = options.requests * PRESET_NAMES.len();
+    Ok(LlmBenchReport {
+        options: *options,
+        rows,
+        elapsed_s,
+        sim_requests_per_sec: if elapsed_s > 0.0 {
+            total as f64 / elapsed_s
+        } else {
+            0.0
+        },
+    })
+}
+
+/// Fail when `BENCH_llm.json` is missing or stale against this source
+/// file + fixture (the `make check` / CI freshness gate).
+pub fn check_published() -> Result<()> {
+    let path = bench_json_path();
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "BENCH_llm.json missing at {}; run `make bench-llm`",
+            path.display()
+        )
+    })?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("BENCH_llm.json: {e}"))?;
+    let published = json
+        .get("source_fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("BENCH_llm.json lacks source_fingerprint"))?;
+    let current = source_fingerprint();
+    if published != current {
+        bail!(
+            "BENCH_llm.json is stale: published fingerprint {published} != bench source \
+             {current}; re-run `make bench-llm` and commit the result"
+        );
+    }
+    println!(
+        "BENCH_llm.json is fresh (source fingerprint {current}, {} devices)",
+        json.get("devices")
+            .and_then(Json::as_arr)
+            .map(|a| a.len())
+            .unwrap_or(0)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_hex() {
+        let a = source_fingerprint();
+        assert_eq!(a.len(), 16);
+        assert_eq!(a, source_fingerprint());
+    }
+
+    #[test]
+    fn bench_runs_all_presets() {
+        let report = run_llm_bench(&LlmBenchOptions {
+            requests: 4,
+            ..LlmBenchOptions::default()
+        })
+        .unwrap();
+        assert_eq!(report.rows.len(), PRESET_NAMES.len());
+        for row in &report.rows {
+            assert!(row.tokens_per_sec > 0.0, "{}", row.device);
+            assert!(row.ttft_p50_us > 0.0);
+        }
+        let j = report.to_json();
+        assert_eq!(j.req_str("source_fingerprint").unwrap(), source_fingerprint());
+    }
+}

@@ -1,0 +1,194 @@
+//! KV-cache accounting: pinned, growing per-request buffers.
+//!
+//! Each decoding request holds a key/value cache of
+//! `2 · layers · kv_heads · head_dim · seq · dtype` bytes that grows by
+//! one token per decode step. The cache is threaded through the
+//! existing [`ResidencyTracker`] as a *pinned* value: every placement
+//! pins the whole active KV set, so the tracker can never evict one
+//! request's cache to make room for another's — when the working set
+//! outgrows the on-chip budget the placement is *refused* instead, the
+//! request's cache lives in HBM for that step, and the decode step pays
+//! the spill traffic. `tests/llm_invariants.rs` pins the consequences:
+//! KV evictions are identically zero always, and spill accounting is
+//! identically zero whenever the working set fits.
+
+use crate::frontend::opinfo::ModuleInfo;
+use crate::frontend::types::DType;
+use crate::memory::{ResidencyStats, ResidencyTracker};
+
+use super::lower::{infer_heads, sequence_dim};
+
+/// The shape of one request's KV cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCacheSpec {
+    /// Decoder layers sharing the cache (the module usually describes
+    /// one block; a full model multiplies by its depth).
+    pub layers: usize,
+    /// KV heads (equals query heads without grouped-query attention).
+    pub kv_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// Bytes per cached element.
+    pub dtype_bytes: u64,
+}
+
+impl KvCacheSpec {
+    /// Infer the cache shape from the module: head split from the first
+    /// `[seq, d] -> [seq, h, hd]` reshape, dtype from the activation
+    /// argument. Falls back to one "head" of the full model dimension
+    /// when the module has no head-split reshape.
+    pub fn infer(module: &ModuleInfo, layers: usize) -> Option<KvCacheSpec> {
+        let f = module.entry()?;
+        let act = f.arg_types.first()?;
+        let (kv_heads, head_dim) = match infer_heads(module) {
+            Some(hh) => hh,
+            None => {
+                let d = if act.rank() >= 2 {
+                    act.dims[1]
+                } else {
+                    *act.dims.first()?
+                };
+                (1, d)
+            }
+        };
+        // The sequence extent must exist for the phase model anyway.
+        sequence_dim(module)?;
+        Some(KvCacheSpec {
+            layers: layers.max(1),
+            kv_heads,
+            head_dim,
+            dtype_bytes: act.dtype.bytes() as u64,
+        })
+    }
+
+    /// A spec with explicit parameters (CLI overrides).
+    pub fn new(layers: usize, kv_heads: usize, head_dim: usize, dtype: DType) -> KvCacheSpec {
+        KvCacheSpec {
+            layers: layers.max(1),
+            kv_heads,
+            head_dim,
+            dtype_bytes: dtype.bytes() as u64,
+        }
+    }
+
+    /// Bytes per cached token: `2 · layers · kv_heads · head_dim · dtype`.
+    pub fn bytes_per_token(&self) -> u64 {
+        2 * self.layers as u64 * self.kv_heads as u64 * self.head_dim as u64 * self.dtype_bytes
+    }
+
+    /// One request's cache footprint at context length `seq`.
+    pub fn bytes_at(&self, seq: usize) -> u64 {
+        self.bytes_per_token() * seq as u64
+    }
+}
+
+/// The simulator's KV working set: a [`ResidencyTracker`] whose entries
+/// are always pinned, plus spill accounting.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    tracker: ResidencyTracker,
+    /// Active request ids, in admission order — the pinned set passed
+    /// to every placement.
+    ids: Vec<String>,
+    /// Placements refused because the working set outgrew the budget
+    /// (the request's KV serves from HBM for that step).
+    pub spill_events: usize,
+    /// Bytes that had to serve from HBM across those events.
+    pub spilled_bytes: u64,
+}
+
+impl KvCache {
+    /// A working set bounded to `capacity` bytes (`None` = unbounded).
+    pub fn new(capacity: Option<u64>) -> KvCache {
+        KvCache {
+            tracker: ResidencyTracker::new(capacity),
+            ids: Vec::new(),
+            spill_events: 0,
+            spilled_bytes: 0,
+        }
+    }
+
+    /// Place (or grow) request `id`'s cache to `bytes`. Growth is a
+    /// remove + insert because the tracker keys footprint at insertion;
+    /// the insert pins every active cache, so it can refuse but never
+    /// evict. Returns true when the cache is resident on chip after the
+    /// call; false records one spill event.
+    pub fn place(&mut self, id: &str, bytes: u64) -> bool {
+        if self.tracker.contains(id) {
+            self.tracker.remove(id);
+        }
+        if !self.ids.iter().any(|x| x == id) {
+            self.ids.push(id.to_string());
+        }
+        let out = self.tracker.insert(id, bytes, true, &self.ids);
+        debug_assert!(out.evicted.is_empty(), "pinned KV must never evict");
+        if !out.inserted {
+            self.spill_events += 1;
+            self.spilled_bytes += bytes;
+        }
+        out.inserted
+    }
+
+    /// Drop a finished request's cache and unpin it.
+    pub fn release(&mut self, id: &str) {
+        self.tracker.remove(id);
+        self.ids.retain(|x| x != id);
+    }
+
+    /// Lifetime tracker counters (evictions must stay 0).
+    pub fn stats(&self) -> ResidencyStats {
+        self.tracker.stats()
+    }
+
+    /// Resident KV bytes right now.
+    pub fn resident_bytes(&self) -> u64 {
+        self.tracker.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> KvCacheSpec {
+        KvCacheSpec::new(1, 8, 128, DType::Bf16)
+    }
+
+    #[test]
+    fn bytes_formula() {
+        let s = spec();
+        assert_eq!(s.bytes_per_token(), 2 * 8 * 128 * 2);
+        assert_eq!(s.bytes_at(10), 10 * 2 * 8 * 128 * 2);
+    }
+
+    #[test]
+    fn growth_never_evicts_a_peer() {
+        let s = spec();
+        let mut kv = KvCache::new(Some(s.bytes_at(12)));
+        assert!(kv.place("kv:0", s.bytes_at(4)));
+        assert!(kv.place("kv:1", s.bytes_at(4)));
+        // Growing request 0 past the remaining room is refused, not
+        // satisfied by evicting request 1.
+        assert!(!kv.place("kv:0", s.bytes_at(9)));
+        assert_eq!(kv.spill_events, 1);
+        assert_eq!(kv.spilled_bytes, s.bytes_at(9));
+        assert_eq!(kv.stats().evictions, 0);
+        // Request 1 is still resident and can still grow within budget.
+        assert!(kv.place("kv:1", s.bytes_at(5)));
+        // Releasing request 1 frees room for request 0 again.
+        kv.release("kv:1");
+        assert!(kv.place("kv:0", s.bytes_at(9)));
+        assert_eq!(kv.stats().evictions, 0);
+    }
+
+    #[test]
+    fn unbounded_never_spills() {
+        let s = spec();
+        let mut kv = KvCache::new(None);
+        for i in 0..64 {
+            assert!(kv.place(&format!("kv:{i}"), s.bytes_at(1024)));
+        }
+        assert_eq!(kv.spill_events, 0);
+        assert_eq!(kv.stats().evictions, 0);
+    }
+}

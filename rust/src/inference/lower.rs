@@ -1,0 +1,179 @@
+//! The decode lowering: rewrite a module's sequence extent.
+//!
+//! A decoder block is the *same program* in prefill and decode — only
+//! the sequence extent differs (the full prompt vs the one new token).
+//! Rather than maintain two fixtures, the simulator rewrites every
+//! tensor dimension equal to the module's sequence extent, so the
+//! op list, SSA structure, dimension-number attributes and op *classes*
+//! are untouched and only the shapes change. `tests/frontend_golden.rs`
+//! pins this: the decode lowering must classify identically to prefill,
+//! with only seq-derived extents rewritten.
+//!
+//! The sequence extent itself follows the activation convention every
+//! checked-in fixture uses: the leading dimension of the entry
+//! function's first argument (`%x: tensor<SEQ x D_MODEL x bf16>`).
+
+use crate::frontend::opinfo::{FuncInfo, ModuleInfo, OpInfo};
+use crate::frontend::types::TensorType;
+
+/// The module's sequence extent: the leading dimension of the entry
+/// function's first argument. `None` when there is no entry function,
+/// no arguments, or the first argument is a scalar.
+pub fn sequence_dim(module: &ModuleInfo) -> Option<usize> {
+    module
+        .entry()
+        .and_then(|f| f.arg_types.first())
+        .and_then(|t| t.dims.first())
+        .copied()
+}
+
+fn rewrite_type(t: &TensorType, from: usize, to: usize) -> TensorType {
+    TensorType::new(
+        t.dims
+            .iter()
+            .map(|&d| if d == from { to } else { d })
+            .collect(),
+        t.dtype,
+    )
+}
+
+fn rewrite_op(op: &OpInfo, from: usize, to: usize) -> OpInfo {
+    let mut op = op.clone();
+    for t in op.operand_types.iter_mut() {
+        *t = rewrite_type(t, from, to);
+    }
+    for t in op.result_types.iter_mut() {
+        *t = rewrite_type(t, from, to);
+    }
+    op
+}
+
+/// Clone `module` with every tensor dimension equal to `from` rewritten
+/// to `to` — in function signatures, operand types and result types.
+/// Dimension-number attributes (`dot_dims`, `dims = [...]`) are
+/// *indices*, not extents, so they are preserved verbatim and stay
+/// valid. A no-op clone when `from == to`.
+pub fn rewrite_seq(module: &ModuleInfo, from: usize, to: usize) -> ModuleInfo {
+    if from == to {
+        return module.clone();
+    }
+    ModuleInfo {
+        name: module.name.clone(),
+        funcs: module
+            .funcs
+            .iter()
+            .map(|f| FuncInfo {
+                name: f.name.clone(),
+                arg_types: f
+                    .arg_types
+                    .iter()
+                    .map(|t| rewrite_type(t, from, to))
+                    .collect(),
+                result_types: f
+                    .result_types
+                    .iter()
+                    .map(|t| rewrite_type(t, from, to))
+                    .collect(),
+                ops: f.ops.iter().map(|op| rewrite_op(op, from, to)).collect(),
+            })
+            .collect(),
+    }
+}
+
+/// The decode-phase variant of `module`: the sequence extent rewritten
+/// to 1 (one new token per request per step), turning full-sequence
+/// GEMMs into GEMV-shaped ops. Returns the module unchanged (cloned)
+/// when no sequence extent can be inferred.
+pub fn lower_decode(module: &ModuleInfo) -> ModuleInfo {
+    match sequence_dim(module) {
+        Some(seq) if seq > 1 => rewrite_seq(module, seq, 1),
+        _ => module.clone(),
+    }
+}
+
+/// Infer the attention head layout `(kv_heads, head_dim)` from the
+/// module: the first reshape from a rank-2 `[seq, d]` activation to a
+/// rank-3 `[seq, h, hd]` with `h * hd == d` is the head split. `None`
+/// when the module has no such reshape (e.g. a plain MLP).
+pub fn infer_heads(module: &ModuleInfo) -> Option<(usize, usize)> {
+    let seq = sequence_dim(module)?;
+    let f = module.entry()?;
+    for op in &f.ops {
+        if op.short_name() != "reshape" {
+            continue;
+        }
+        let (Some(inp), Some(out)) = (op.operand_types.first(), op.result_types.first()) else {
+            continue;
+        };
+        if inp.rank() == 2
+            && out.rank() == 3
+            && inp.dims[0] == seq
+            && out.dims[0] == seq
+            && out.dims[1] * out.dims[2] == inp.dims[1]
+        {
+            return Some((out.dims[1], out.dims[2]));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_module;
+
+    const TINY: &str = r#"
+module @tiny {
+  func.func public @main(%x: tensor<64x32xbf16>, %w: tensor<32x32xbf16>) -> (tensor<64x32xbf16>) {
+    %y = stablehlo.dot_general %x, %w, contracting_dims = [1] x [0] : (tensor<64x32xbf16>, tensor<32x32xbf16>) -> tensor<64x32xbf16>
+    %h = stablehlo.reshape %y : (tensor<64x32xbf16>) -> tensor<64x4x8xbf16>
+    %z = stablehlo.reshape %h : (tensor<64x4x8xbf16>) -> tensor<64x32xbf16>
+    return %z : tensor<64x32xbf16>
+  }
+}
+"#;
+
+    #[test]
+    fn sequence_dim_is_leading_arg_dim() {
+        let m = parse_module(TINY).unwrap();
+        assert_eq!(sequence_dim(&m), Some(64));
+    }
+
+    #[test]
+    fn rewrite_changes_only_the_matching_extent() {
+        let m = parse_module(TINY).unwrap();
+        let d = rewrite_seq(&m, 64, 1);
+        let f = d.entry().unwrap();
+        assert_eq!(f.arg_types[0].dims, vec![1, 32]);
+        assert_eq!(f.arg_types[1].dims, vec![32, 32], "weights untouched");
+        assert_eq!(f.ops[0].result_types[0].dims, vec![1, 32]);
+        assert_eq!(f.ops[1].result_types[0].dims, vec![1, 4, 8]);
+        // Same op list, same names, same attribute structure.
+        let orig = m.entry().unwrap();
+        assert_eq!(f.ops.len(), orig.ops.len());
+        for (a, b) in orig.ops.iter().zip(&f.ops) {
+            assert_eq!(a.op_name, b.op_name);
+            assert_eq!(a.dot_dims, b.dot_dims);
+            assert_eq!(a.int_attrs, b.int_attrs);
+        }
+    }
+
+    #[test]
+    fn rewrite_identity_when_from_equals_to() {
+        let m = parse_module(TINY).unwrap();
+        assert_eq!(rewrite_seq(&m, 64, 64), m);
+    }
+
+    #[test]
+    fn decode_lowering_shrinks_seq_to_one() {
+        let m = parse_module(TINY).unwrap();
+        let d = lower_decode(&m);
+        assert_eq!(sequence_dim(&d), Some(1));
+    }
+
+    #[test]
+    fn head_split_inferred_from_reshape() {
+        let m = parse_module(TINY).unwrap();
+        assert_eq!(infer_heads(&m), Some((4, 8)));
+    }
+}

@@ -1,0 +1,56 @@
+//! Request-level LLM inference serving simulator.
+//!
+//! Answers the question the module estimator cannot: *what does a
+//! decoder block cost under a serving workload* — a stream of requests,
+//! each with a prompt to prefill and tokens to decode, sharing one chip
+//! through continuous batching. The simulator is composed entirely from
+//! existing layers:
+//!
+//! * [`lower`] — the decode lowering: rewrite the module's sequence
+//!   extent so the *same* program describes both phases (full-sequence
+//!   prefill GEMMs vs batch×1-token GEMV-shaped decode ops);
+//! * [`phase`] — the two-phase cost model: each phase runs through the
+//!   dependence-graph scheduler + memory-aware DMA timeline
+//!   ([`crate::memory::schedule_module_memory`]), and the per-phase
+//!   roofline verdict is pinned by a golden fixture per device preset;
+//! * [`kv`] — KV-cache accounting: per-request
+//!   `2 · layers · kv_heads · head_dim · seq · dtype` bytes threaded
+//!   through the [`crate::memory::ResidencyTracker`] as *pinned,
+//!   growing* values, so decode step cost reflects resident-set
+//!   pressure and spills to HBM when KV outgrows the on-chip budget;
+//! * [`workload`] — the deterministic seeded arrival stream (prompt /
+//!   output length distributions, arrival gaps — no wall clock);
+//! * [`sim`] — the continuous-batching event loop admitting prefills
+//!   into running decode batches, reporting tokens/sec, TTFT, TPOT and
+//!   per-request latency percentiles per [`crate::device::DeviceSpec`];
+//! * [`bench`] — the `bench-llm` harness publishing `BENCH_llm.json`
+//!   (FNV source fingerprint, freshness-gated in CI like
+//!   `BENCH_serve.json`).
+//!
+//! Exact invariants (zero epsilons, property-tested in
+//! `tests/llm_invariants.rs` across all device presets):
+//!
+//! * a single-request stream is *bit-identical* to running prefill then
+//!   decode standalone;
+//! * TTFT `<=` completion time, and both are monotone under a later
+//!   arrival of the same request;
+//! * continuous-batching makespan `<=` the serialized (batch = 1) run
+//!   when KV fits on chip;
+//! * tokens/sec never exceeds the decode roofline bound
+//!   `max_batch / decode_step_us`;
+//! * KV values are pinned — the tracker never evicts one — and spill
+//!   accounting is identically zero when the working set fits.
+
+pub mod bench;
+pub mod kv;
+pub mod lower;
+pub mod phase;
+pub mod sim;
+pub mod workload;
+
+pub use bench::{check_published, run_llm_bench, LlmBenchOptions, LlmBenchReport};
+pub use kv::{KvCache, KvCacheSpec};
+pub use lower::{lower_decode, rewrite_seq, sequence_dim};
+pub use phase::{phase_csv, PhaseModel};
+pub use sim::{simulate, standalone_request, LlmReport, RequestResult, SimConfig};
+pub use workload::{generate_workload, RequestSpec, WorkloadConfig};

@@ -1,0 +1,602 @@
+//! The continuous-batching serving event loop.
+//!
+//! A single simulated clock advances over three kinds of work: admit a
+//! waiting prefill (the whole chip runs one full-sequence pass, which
+//! emits the request's first token), run one decode step for the whole
+//! running batch (every in-flight request produces one token; requests
+//! whose KV cache could not stay resident pay HBM spill traffic on
+//! top), or jump to the next arrival when the system is idle. Prefills
+//! are admitted *between* decode steps of the running batch — that is
+//! continuous batching, as opposed to draining the batch first.
+//!
+//! Determinism is load-bearing: the loop is seeded-workload in, pure
+//! float arithmetic through, and the float operations on the clock are
+//! ordered identically to [`standalone_request`], which is what makes
+//! the single-request bit-identity invariant in
+//! `tests/llm_invariants.rs` hold with zero epsilons.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::Estimator;
+use crate::obs::TraceEvent;
+use crate::util::json::Json;
+use crate::util::stats;
+
+use super::kv::{KvCache, KvCacheSpec};
+use super::phase::PhaseModel;
+use super::workload::RequestSpec;
+
+/// Simulator knobs (the workload itself comes from
+/// [`super::workload::generate_workload`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimConfig {
+    /// Maximum in-flight (decoding) requests.
+    pub max_batch: usize,
+    /// On-chip budget for the KV working set, bytes (`None` =
+    /// unbounded). The CLI defaults this to the device's VMEM size.
+    pub kv_capacity: Option<u64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            max_batch: 8,
+            kv_capacity: None,
+        }
+    }
+}
+
+/// Per-request outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestResult {
+    /// Stream index.
+    pub id: usize,
+    /// Arrival time, µs.
+    pub arrival_us: f64,
+    /// Prompt length, tokens.
+    pub prompt: usize,
+    /// Output length, tokens.
+    pub output: usize,
+    /// When the request's prefill started, µs.
+    pub prefill_start_us: f64,
+    /// When the first token was emitted (prefill end), µs.
+    pub first_token_us: f64,
+    /// When the last token was emitted, µs.
+    pub completion_us: f64,
+    /// Time to first token: `first_token_us - arrival_us`.
+    pub ttft_us: f64,
+    /// End-to-end latency: `completion_us - arrival_us`.
+    pub latency_us: f64,
+    /// Time per output token after the first:
+    /// `(completion_us - first_token_us) / (output - 1)` (0 for
+    /// single-token outputs).
+    pub tpot_us: f64,
+    /// Decode steps this request ran with its KV cache spilled to HBM.
+    pub spill_steps: usize,
+}
+
+impl RequestResult {
+    /// JSON row (the `llm --json` `requests` array).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", Json::Num(self.id as f64))
+            .set("arrival_us", Json::Num(self.arrival_us))
+            .set("prompt", Json::Num(self.prompt as f64))
+            .set("output", Json::Num(self.output as f64))
+            .set("prefill_start_us", Json::Num(self.prefill_start_us))
+            .set("first_token_us", Json::Num(self.first_token_us))
+            .set("completion_us", Json::Num(self.completion_us))
+            .set("ttft_us", Json::Num(self.ttft_us))
+            .set("latency_us", Json::Num(self.latency_us))
+            .set("tpot_us", Json::Num(self.tpot_us))
+            .set("spill_steps", Json::Num(self.spill_steps as f64));
+        o
+    }
+}
+
+/// The serving report: per-request results plus stream-level metrics.
+#[derive(Debug, Clone)]
+pub struct LlmReport {
+    /// Module name.
+    pub module: String,
+    /// Device name.
+    pub device: String,
+    /// Batch limit the run used.
+    pub max_batch: usize,
+    /// Per-request outcomes, in stream order.
+    pub requests: Vec<RequestResult>,
+    /// Completion time of the last request, µs.
+    pub makespan_us: f64,
+    /// Total tokens emitted (prefill first tokens + decode tokens).
+    pub total_tokens: usize,
+    /// `1e6 · total_tokens / makespan_us`.
+    pub tokens_per_sec: f64,
+    /// The decode roofline bound: `1e6 · max_batch / decode_step_us`.
+    /// Measured throughput can never exceed this.
+    pub roofline_tokens_per_sec: f64,
+    /// Native-length prefill cost, µs, and its roofline verdict.
+    pub prefill_us: f64,
+    /// Prefill roofline verdict (pinned per preset by the golden CSV).
+    pub prefill_verdict: String,
+    /// Whole-batch decode step cost, µs.
+    pub decode_step_us: f64,
+    /// Decode roofline verdict (pinned per preset by the golden CSV).
+    pub decode_verdict: String,
+    /// KV bytes appended per token per request.
+    pub kv_bytes_per_token: u64,
+    /// Peak resident KV bytes over the run.
+    pub kv_peak_bytes: u64,
+    /// KV placements refused for lack of on-chip room.
+    pub kv_spill_events: usize,
+    /// Bytes served from HBM across those refusals.
+    pub kv_spilled_bytes: u64,
+    /// KV evictions — structurally always 0 (every placement pins the
+    /// whole active set).
+    pub kv_evictions: usize,
+    /// Decode steps executed.
+    pub decode_steps: usize,
+}
+
+fn kv_id(id: usize) -> String {
+    format!("kv:{id}")
+}
+
+struct Active {
+    spec: RequestSpec,
+    ctx: usize,
+    left: usize,
+    prefill_start_us: f64,
+    first_token_us: f64,
+    spill_steps: usize,
+}
+
+fn finish(a: &Active, completion_us: f64) -> RequestResult {
+    let r = &a.spec;
+    RequestResult {
+        id: r.id,
+        arrival_us: r.arrival_us,
+        prompt: r.prompt,
+        output: r.output,
+        prefill_start_us: a.prefill_start_us,
+        first_token_us: a.first_token_us,
+        completion_us,
+        ttft_us: a.first_token_us - r.arrival_us,
+        latency_us: completion_us - r.arrival_us,
+        tpot_us: if r.output > 1 {
+            (completion_us - a.first_token_us) / (r.output - 1) as f64
+        } else {
+            0.0
+        },
+        spill_steps: a.spill_steps,
+    }
+}
+
+/// Run the continuous-batching loop over `workload` (sorted by
+/// arrival). Returns the full report; per-request results stay in
+/// stream order.
+pub fn simulate(
+    est: &Estimator,
+    phase: &mut PhaseModel,
+    kv_spec: &KvCacheSpec,
+    workload: &[RequestSpec],
+    config: &SimConfig,
+) -> LlmReport {
+    let max_batch = config.max_batch.max(1);
+    let mut kvc = KvCache::new(config.kv_capacity);
+    let mut t = 0.0_f64;
+    let mut next = 0usize;
+    let mut waiting: VecDeque<RequestSpec> = VecDeque::new();
+    let mut running: Vec<Active> = Vec::new();
+    let mut done: Vec<RequestResult> = Vec::new();
+    let mut decode_steps = 0usize;
+    let mut kv_peak = 0u64;
+
+    loop {
+        while next < workload.len() && workload[next].arrival_us <= t {
+            waiting.push_back(workload[next]);
+            next += 1;
+        }
+        if running.len() < max_batch && !waiting.is_empty() {
+            // Admit one prefill into the running batch.
+            let r = waiting.pop_front().expect("non-empty");
+            let prefill_start_us = t;
+            let cost = phase.prefill_us(est, r.prompt);
+            t = t + cost;
+            kvc.place(&kv_id(r.id), kv_spec.bytes_at(r.prompt));
+            kv_peak = kv_peak.max(kvc.resident_bytes());
+            let a = Active {
+                spec: r,
+                ctx: r.prompt,
+                left: r.output.saturating_sub(1),
+                prefill_start_us,
+                first_token_us: t,
+                spill_steps: 0,
+            };
+            if a.left == 0 {
+                kvc.release(&kv_id(r.id));
+                done.push(finish(&a, t));
+            } else {
+                running.push(a);
+            }
+            continue;
+        }
+        if !running.is_empty() {
+            // One decode step for the whole batch; spilled KV pays HBM
+            // traffic on top of the step's schedule.
+            let mut cost = phase.decode_step_us();
+            for a in running.iter_mut() {
+                a.ctx += 1;
+                let bytes = kv_spec.bytes_at(a.ctx);
+                if !kvc.place(&kv_id(a.spec.id), bytes) {
+                    cost += phase.memory_config().transfer_us(bytes);
+                    a.spill_steps += 1;
+                }
+            }
+            kv_peak = kv_peak.max(kvc.resident_bytes());
+            t = t + cost;
+            decode_steps += 1;
+            let mut i = 0;
+            while i < running.len() {
+                running[i].left -= 1;
+                if running[i].left == 0 {
+                    let a = running.remove(i);
+                    kvc.release(&kv_id(a.spec.id));
+                    done.push(finish(&a, t));
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if next < workload.len() {
+            t = t.max(workload[next].arrival_us);
+            continue;
+        }
+        break;
+    }
+
+    done.sort_by_key(|r| r.id);
+    let total_tokens: usize = done.iter().map(|r| r.output).sum();
+    let makespan_us = done.iter().map(|r| r.completion_us).fold(0.0_f64, f64::max);
+    let decode_step_us = phase.decode_step_us();
+    LlmReport {
+        module: String::new(),
+        device: est.device().name.clone(),
+        max_batch,
+        makespan_us,
+        total_tokens,
+        tokens_per_sec: if makespan_us > 0.0 {
+            1e6 * total_tokens as f64 / makespan_us
+        } else {
+            0.0
+        },
+        roofline_tokens_per_sec: 1e6 * max_batch as f64 / decode_step_us,
+        prefill_us: phase.prefill_us(est, phase.seq()),
+        prefill_verdict: phase.prefill_verdict(),
+        decode_step_us,
+        decode_verdict: phase.decode_verdict(),
+        kv_bytes_per_token: kv_spec.bytes_per_token(),
+        kv_peak_bytes: kv_peak,
+        kv_spill_events: kvc.spill_events,
+        kv_spilled_bytes: kvc.spilled_bytes,
+        kv_evictions: kvc.stats().evictions,
+        decode_steps,
+        requests: done,
+    }
+}
+
+/// Run one request standalone — prefill then decode, no batching, a
+/// fresh KV working set — with the clock's float operations ordered
+/// exactly as [`simulate`] orders them. A single-request stream must be
+/// bit-identical to this.
+pub fn standalone_request(
+    est: &Estimator,
+    phase: &mut PhaseModel,
+    kv_spec: &KvCacheSpec,
+    r: &RequestSpec,
+    kv_capacity: Option<u64>,
+) -> RequestResult {
+    let mut kvc = KvCache::new(kv_capacity);
+    let mut t = 0.0_f64;
+    t = t.max(r.arrival_us);
+    let prefill_start_us = t;
+    let cost = phase.prefill_us(est, r.prompt);
+    t = t + cost;
+    kvc.place(&kv_id(r.id), kv_spec.bytes_at(r.prompt));
+    let first_token_us = t;
+    let mut a = Active {
+        spec: *r,
+        ctx: r.prompt,
+        left: r.output.saturating_sub(1),
+        prefill_start_us,
+        first_token_us,
+        spill_steps: 0,
+    };
+    while a.left > 0 {
+        let mut cost = phase.decode_step_us();
+        a.ctx += 1;
+        let bytes = kv_spec.bytes_at(a.ctx);
+        if !kvc.place(&kv_id(r.id), bytes) {
+            cost += phase.memory_config().transfer_us(bytes);
+            a.spill_steps += 1;
+        }
+        t = t + cost;
+        a.left -= 1;
+    }
+    kvc.release(&kv_id(r.id));
+    finish(&a, t)
+}
+
+impl LlmReport {
+    /// Percentile over a per-request metric, nearest-rank on the sorted
+    /// values (bench_serve idiom) — exact, no interpolation.
+    fn pct(&self, q: f64, f: impl Fn(&RequestResult) -> f64) -> f64 {
+        let mut xs: Vec<f64> = self.requests.iter().map(f).collect();
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        let idx = ((xs.len() - 1) as f64 * q).round() as usize;
+        xs[idx]
+    }
+
+    /// Median TTFT, µs.
+    pub fn ttft_p50_us(&self) -> f64 {
+        self.pct(0.50, |r| r.ttft_us)
+    }
+
+    /// 95th-percentile TTFT, µs.
+    pub fn ttft_p95_us(&self) -> f64 {
+        self.pct(0.95, |r| r.ttft_us)
+    }
+
+    /// Worst TTFT, µs.
+    pub fn ttft_max_us(&self) -> f64 {
+        self.pct(1.0, |r| r.ttft_us)
+    }
+
+    /// Median end-to-end latency, µs.
+    pub fn latency_p50_us(&self) -> f64 {
+        self.pct(0.50, |r| r.latency_us)
+    }
+
+    /// 95th-percentile latency, µs.
+    pub fn latency_p95_us(&self) -> f64 {
+        self.pct(0.95, |r| r.latency_us)
+    }
+
+    /// 99th-percentile latency, µs.
+    pub fn latency_p99_us(&self) -> f64 {
+        self.pct(0.99, |r| r.latency_us)
+    }
+
+    /// Mean time per output token across requests, µs.
+    pub fn tpot_mean_us(&self) -> f64 {
+        stats::mean(&self.requests.iter().map(|r| r.tpot_us).collect::<Vec<_>>())
+    }
+
+    /// Stream-level summary (serve responses, `compare --llm` rows).
+    pub fn summary_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("module", Json::Str(self.module.clone()))
+            .set("device", Json::Str(self.device.clone()))
+            .set("max_batch", Json::Num(self.max_batch as f64))
+            .set("requests", Json::Num(self.requests.len() as f64))
+            .set("total_tokens", Json::Num(self.total_tokens as f64))
+            .set("makespan_us", Json::Num(self.makespan_us))
+            .set("tokens_per_sec", Json::Num(self.tokens_per_sec))
+            .set(
+                "roofline_tokens_per_sec",
+                Json::Num(self.roofline_tokens_per_sec),
+            )
+            .set("prefill_us", Json::Num(self.prefill_us))
+            .set("prefill_verdict", Json::Str(self.prefill_verdict.clone()))
+            .set("decode_step_us", Json::Num(self.decode_step_us))
+            .set("decode_verdict", Json::Str(self.decode_verdict.clone()))
+            .set("decode_steps", Json::Num(self.decode_steps as f64))
+            .set("ttft_p50_us", Json::Num(self.ttft_p50_us()))
+            .set("ttft_p95_us", Json::Num(self.ttft_p95_us()))
+            .set("ttft_max_us", Json::Num(self.ttft_max_us()))
+            .set("latency_p50_us", Json::Num(self.latency_p50_us()))
+            .set("latency_p95_us", Json::Num(self.latency_p95_us()))
+            .set("latency_p99_us", Json::Num(self.latency_p99_us()))
+            .set("tpot_mean_us", Json::Num(self.tpot_mean_us()))
+            .set("kv_bytes_per_token", Json::Num(self.kv_bytes_per_token as f64))
+            .set("kv_peak_bytes", Json::Num(self.kv_peak_bytes as f64))
+            .set("kv_spill_events", Json::Num(self.kv_spill_events as f64))
+            .set("kv_spilled_bytes", Json::Num(self.kv_spilled_bytes as f64))
+            .set("kv_evictions", Json::Num(self.kv_evictions as f64));
+        o
+    }
+
+    /// Full JSON payload (`llm --json`): the summary plus the
+    /// per-request array.
+    pub fn to_json(&self) -> Json {
+        let mut o = self.summary_json();
+        o.set(
+            "requests_detail",
+            Json::Arr(self.requests.iter().map(|r| r.to_json()).collect()),
+        );
+        o
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "llm serve: {} on {} — {} requests, max batch {}\n",
+            self.module,
+            self.device,
+            self.requests.len(),
+            self.max_batch
+        ));
+        s.push_str(&format!(
+            "  phases: prefill {:.3} us ({}), decode step {:.3} us ({})\n",
+            self.prefill_us, self.prefill_verdict, self.decode_step_us, self.decode_verdict
+        ));
+        s.push_str(&format!(
+            "  throughput: {:.1} tokens/s ({} tokens / {:.3} us; roofline bound {:.1})\n",
+            self.tokens_per_sec, self.total_tokens, self.makespan_us, self.roofline_tokens_per_sec
+        ));
+        s.push_str(&format!(
+            "  ttft: p50 {:.3} us, p95 {:.3} us, max {:.3} us\n",
+            self.ttft_p50_us(),
+            self.ttft_p95_us(),
+            self.ttft_max_us()
+        ));
+        s.push_str(&format!(
+            "  latency: p50 {:.3} us, p95 {:.3} us, p99 {:.3} us; tpot mean {:.3} us\n",
+            self.latency_p50_us(),
+            self.latency_p95_us(),
+            self.latency_p99_us(),
+            self.tpot_mean_us()
+        ));
+        s.push_str(&format!(
+            "  kv: {} B/token, peak {} B, spills {} ({} B), evictions {}\n",
+            self.kv_bytes_per_token,
+            self.kv_peak_bytes,
+            self.kv_spill_events,
+            self.kv_spilled_bytes,
+            self.kv_evictions
+        ));
+        s
+    }
+
+    /// Chrome-trace timeline: one lane (thread) per request with
+    /// queued / prefill / decode slices, loadable next to the module
+    /// traces in `chrome://tracing` / Perfetto.
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        let pid = 1u64;
+        let mut evs = vec![TraceEvent::process_name(pid, "llm-serve")];
+        for r in &self.requests {
+            let tid = r.id as u64 + 1;
+            evs.push(TraceEvent::thread_name(pid, tid, &format!("req-{}", r.id)));
+            if r.prefill_start_us > r.arrival_us {
+                evs.push(TraceEvent::complete(
+                    "queued",
+                    "llm",
+                    r.arrival_us,
+                    r.prefill_start_us - r.arrival_us,
+                    pid,
+                    tid,
+                ));
+            }
+            evs.push(
+                TraceEvent::complete(
+                    "prefill",
+                    "llm",
+                    r.prefill_start_us,
+                    r.first_token_us - r.prefill_start_us,
+                    pid,
+                    tid,
+                )
+                .arg("prompt", Json::Num(r.prompt as f64)),
+            );
+            if r.completion_us > r.first_token_us {
+                evs.push(
+                    TraceEvent::complete(
+                        "decode",
+                        "llm",
+                        r.first_token_us,
+                        r.completion_us - r.first_token_us,
+                        pid,
+                        tid,
+                    )
+                    .arg("tokens", Json::Num(r.output as f64))
+                    .arg("spill_steps", Json::Num(r.spill_steps as f64)),
+                );
+            }
+        }
+        evs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSpec;
+    use crate::frontend::parse_module;
+    use crate::sweep::sweep_estimator;
+
+    use super::super::workload::{generate_workload, WorkloadConfig};
+
+    const FIXTURE: &str = include_str!("../../tests/fixtures/decoder_block.mlir");
+
+    fn setup(device: &str) -> (crate::coordinator::Estimator, PhaseModel, KvCacheSpec) {
+        let spec = DeviceSpec::preset(device).unwrap();
+        let est = sweep_estimator(&spec);
+        let module = parse_module(FIXTURE).unwrap();
+        let phase = PhaseModel::new(&est, &module).unwrap();
+        let kv = KvCacheSpec::infer(&module, 1).unwrap();
+        (est, phase, kv)
+    }
+
+    #[test]
+    fn stream_completes_every_request() {
+        let (est, mut phase, kv) = setup("tpu-v4");
+        let wl = generate_workload(&WorkloadConfig::default());
+        let report = simulate(&est, &mut phase, &kv, &wl, &SimConfig::default());
+        assert_eq!(report.requests.len(), wl.len());
+        assert!(report.tokens_per_sec > 0.0);
+        assert_eq!(report.kv_evictions, 0);
+        for (r, w) in report.requests.iter().zip(&wl) {
+            assert_eq!(r.id, w.id);
+            assert!(r.first_token_us >= w.arrival_us);
+            assert!(r.completion_us >= r.first_token_us);
+        }
+    }
+
+    #[test]
+    fn single_request_matches_standalone_bitwise() {
+        let (est, mut phase, kv) = setup("tpu-v5e");
+        let wl = generate_workload(&WorkloadConfig {
+            requests: 1,
+            ..WorkloadConfig::default()
+        });
+        let cfg = SimConfig::default();
+        let report = simulate(&est, &mut phase, &kv, &wl, &cfg);
+        let solo = standalone_request(&est, &mut phase, &kv, &wl[0], cfg.kv_capacity);
+        assert_eq!(report.requests[0], solo);
+    }
+
+    #[test]
+    fn tokens_per_sec_respects_roofline() {
+        let (est, mut phase, kv) = setup("tpu-v5p");
+        let wl = generate_workload(&WorkloadConfig {
+            requests: 32,
+            mean_gap_us: 0.0,
+            ..WorkloadConfig::default()
+        });
+        let report = simulate(&est, &mut phase, &kv, &wl, &SimConfig::default());
+        assert!(report.tokens_per_sec <= report.roofline_tokens_per_sec);
+    }
+
+    #[test]
+    fn tight_kv_budget_spills_but_never_evicts() {
+        let (est, mut phase, kv) = setup("tpu-v4");
+        let wl = generate_workload(&WorkloadConfig::default());
+        let cfg = SimConfig {
+            max_batch: 8,
+            kv_capacity: Some(kv.bytes_at(64)),
+        };
+        let report = simulate(&est, &mut phase, &kv, &wl, &cfg);
+        assert!(report.kv_spill_events > 0, "tiny budget must spill");
+        assert_eq!(report.kv_evictions, 0, "pinned KV never evicts");
+        assert_eq!(report.requests.len(), wl.len(), "spills still complete");
+    }
+
+    #[test]
+    fn trace_has_one_lane_per_request() {
+        let (est, mut phase, kv) = setup("tpu-v4");
+        let wl = generate_workload(&WorkloadConfig {
+            requests: 4,
+            ..WorkloadConfig::default()
+        });
+        let report = simulate(&est, &mut phase, &kv, &wl, &SimConfig::default());
+        let evs = report.trace_events();
+        let lanes = evs.iter().filter(|e| e.name == "thread_name").count();
+        assert_eq!(lanes, 4);
+        assert!(evs.iter().any(|e| e.name == "prefill"));
+        assert!(evs.iter().any(|e| e.name == "decode"));
+    }
+}

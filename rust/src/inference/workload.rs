@@ -1,0 +1,107 @@
+//! Deterministic seeded serving workloads — no wall clock.
+//!
+//! A workload is a sorted stream of [`RequestSpec`]s (arrival time,
+//! prompt length, output length) drawn from a seeded [`crate::util::Prng`].
+//! Same config → same stream, bit for bit, which is what lets
+//! `tests/llm_invariants.rs` assert exact (epsilon-free) properties
+//! over "random" streams.
+
+use crate::util::prng::Prng;
+
+/// Workload generator knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadConfig {
+    /// Number of requests in the stream.
+    pub requests: usize,
+    /// PRNG seed — the only source of randomness.
+    pub seed: u64,
+    /// Inclusive prompt-length range, tokens.
+    pub prompt_len: (usize, usize),
+    /// Inclusive output-length range, tokens (includes the first token
+    /// produced by prefill).
+    pub output_len: (usize, usize),
+    /// Mean inter-arrival gap, µs (uniform on `[0, 2·mean)`).
+    pub mean_gap_us: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> WorkloadConfig {
+        WorkloadConfig {
+            requests: 16,
+            seed: 42,
+            prompt_len: (32, 256),
+            output_len: (8, 64),
+            mean_gap_us: 200.0,
+        }
+    }
+}
+
+/// One request in the arrival stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestSpec {
+    /// Stream index (also the trace lane and the KV-cache id).
+    pub id: usize,
+    /// Arrival time, µs from stream start.
+    pub arrival_us: f64,
+    /// Prompt length, tokens.
+    pub prompt: usize,
+    /// Output length, tokens (≥ 1; the first is emitted by prefill).
+    pub output: usize,
+}
+
+/// Generate the arrival stream for `config`. Arrivals are cumulative
+/// sums of non-negative gaps, so the stream is sorted by construction;
+/// prompt and output lengths are clamped to at least one token.
+pub fn generate_workload(config: &WorkloadConfig) -> Vec<RequestSpec> {
+    let mut rng = Prng::new(config.seed).fork("llm-workload");
+    let (plo, phi) = config.prompt_len;
+    let (olo, ohi) = config.output_len;
+    let mut t = 0.0_f64;
+    let mut out = Vec::with_capacity(config.requests);
+    for id in 0..config.requests {
+        if id > 0 {
+            t += rng.uniform() * 2.0 * config.mean_gap_us.max(0.0);
+        }
+        let prompt = rng.int_range(plo.min(phi) as i64, phi.max(plo) as i64) as usize;
+        let output = rng.int_range(olo.min(ohi) as i64, ohi.max(olo) as i64) as usize;
+        out.push(RequestSpec {
+            id,
+            arrival_us: t,
+            prompt: prompt.max(1),
+            output: output.max(1),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sorted() {
+        let cfg = WorkloadConfig::default();
+        let a = generate_workload(&cfg);
+        let b = generate_workload(&cfg);
+        assert_eq!(a, b, "same seed, same stream");
+        assert_eq!(a.len(), cfg.requests);
+        assert_eq!(a[0].arrival_us, 0.0, "first request arrives at t=0");
+        for w in a.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+        for r in &a {
+            assert!(r.prompt >= cfg.prompt_len.0 && r.prompt <= cfg.prompt_len.1);
+            assert!(r.output >= cfg.output_len.0 && r.output <= cfg.output_len.1);
+        }
+    }
+
+    #[test]
+    fn seed_changes_the_stream() {
+        let a = generate_workload(&WorkloadConfig::default());
+        let b = generate_workload(&WorkloadConfig {
+            seed: 43,
+            ..WorkloadConfig::default()
+        });
+        assert_ne!(a, b);
+    }
+}

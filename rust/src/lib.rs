@@ -32,6 +32,10 @@
 //! * [`memory`] — the memory-aware DMA timeline: HBM traffic behind
 //!   every op, tensor residency (bounded buffer, LRU eviction) and the
 //!   compute-vs-bandwidth roofline.
+//! * [`inference`] — the request-level LLM serving simulator: decoder
+//!   prefill/decode phase model, pinned growing KV-cache residency, and
+//!   a continuous-batching scheduler reporting tokens/sec, TTFT, TPOT
+//!   and latency percentiles per device preset.
 //! * [`obs`] — dependency-free observability: atomic counter/gauge/
 //!   histogram registry, injectable-clock span recorder, and Prometheus
 //!   text / Chrome trace-event exporters.
@@ -51,6 +55,7 @@ pub mod distributed;
 pub mod experiments;
 pub mod frontend;
 pub mod graph;
+pub mod inference;
 pub mod learned;
 pub mod memory;
 pub mod obs;

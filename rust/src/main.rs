@@ -21,6 +21,10 @@ use scalesim_tpu::distributed::{
 use scalesim_tpu::experiments::{assets, fig2, fig3, fig4, fig5, table1};
 use scalesim_tpu::frontend::parse_module;
 use scalesim_tpu::graph::{schedule_estimate, EngineConfig, ModuleSchedule};
+use scalesim_tpu::inference::{
+    self, generate_workload, phase_csv, simulate, KvCacheSpec, LlmBenchOptions, PhaseModel,
+    SimConfig, WorkloadConfig,
+};
 use scalesim_tpu::memory::{schedule_estimate_memory, MemoryConfig, MemorySchedule};
 use scalesim_tpu::obs::{MetricsScrape, MonotonicClock, TraceEvent, TraceFileWriter};
 use scalesim_tpu::report::{write_output, Table};
@@ -99,8 +103,11 @@ Toolchain:
           --devices a,b,c          specs side by side (presets or device
           [--chips N] [--json]     files; default: every preset); reports
           [--trace-dir DIR]        unfused/scheduled/memory-aware totals
-                                   per device, plus the distributed slice
-                                   when --chips is given; --trace-dir
+          [--llm]                  per device, plus the distributed slice
+                                   when --chips is given; --llm adds the
+                                   serving columns (prefill/decode step,
+                                   tokens/sec, TTFT p50) from a fixed
+                                   seeded stream per device; --trace-dir
                                    writes one Chrome trace per device
                                    (DIR/<device>.trace.json, memory-aware
                                    lanes; with --chips also
@@ -120,6 +127,23 @@ Toolchain:
                                    --measure also scores systolic estimates
                                    against the --hardware backend (median of
                                    --reps, MARE per class)
+  llm --module FILE              request-level LLM serving simulation of a
+      [--device P]                 decoder block: the module runs as prefill
+      [--requests N] [--seed S]    (full-sequence) and decode (the sequence-1
+      [--max-batch B]              lowering; verdicts pinned per preset)
+      [--prompt-min/max T]         through the scheduler + memory timeline;
+      [--output-min/max T]         a seeded arrival stream is served with
+      [--gap-us G]                 continuous batching (prefills admitted
+      [--layers L] [--kv-mb MB]    into the running decode batch) while each
+      [--json]                     request's KV cache grows as a pinned
+      [--trace-out FILE]           value in the residency tracker (spilling
+      [--phase-csv]                to HBM when it outgrows --kv-mb, default
+                                   the device VMEM). Reports tokens/sec,
+                                   TTFT, TPOT and latency percentiles;
+                                   --trace-out writes one Chrome-trace lane
+                                   per request (queued/prefill/decode);
+                                   --phase-csv prints the per-preset
+                                   prefill/decode golden table instead
   serve [--input FILE.jsonl]     streaming request service (JSONL in/out);
         [--workers N]              reads stdin when no --input is given and
         [--queue N]                answers incrementally, in order, through
@@ -174,6 +198,13 @@ Toolchain:
                                    time breakdown from the serving stack's
                                    phase histograms. --publish writes
                                    BENCH_serve.json at the repo root
+                                   (fingerprinted); --check verifies it is
+                                   fresh against the bench source (CI gate)
+  bench-llm                      run the decoder-block serving sweep over
+        [--requests N] [--seed S]  every device preset and report tokens/sec
+        [--max-batch B] [--json]   + TTFT + TPOT per preset (plus simulator
+        [--publish] [--check]      wall-clock throughput). --publish writes
+                                   BENCH_llm.json at the repo root
                                    (fingerprinted); --check verifies it is
                                    fresh against the bench source (CI gate)
 
@@ -322,6 +353,8 @@ fn run(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("bench-serve") => cmd_bench_serve(args),
         Some("sweep") => cmd_sweep(args),
+        Some("llm") => cmd_llm(args),
+        Some("bench-llm") => cmd_bench_llm(args),
         Some(other) => bail!("unknown subcommand '{other}' (try 'help')"),
     }
 }
@@ -842,6 +875,19 @@ fn cmd_compare(args: &Args) -> Result<()> {
     if chips.is_some() {
         headers.extend(["chips", "per-chip us", "speedup", "eff %"]);
     }
+    // The llm knobs are read unconditionally so they never trip the
+    // unknown-option warning; the same seeded stream is served on every
+    // device so the rows are directly comparable.
+    let llm_flag = args.flag("llm");
+    let llm_workload = generate_workload(&WorkloadConfig {
+        requests: args.usize_or("requests", 16),
+        seed: args.u64_or("seed", 42),
+        ..WorkloadConfig::default()
+    });
+    let llm_batch = args.usize_or("max-batch", 8);
+    if llm_flag {
+        headers.extend(["prefill us", "decode us", "tok/s", "ttft p50 us"]);
+    }
     let mut t = Table::new(&headers);
     let mut rows_json: Vec<Json> = Vec::new();
     for spec in &specs {
@@ -895,6 +941,28 @@ fn cmd_compare(args: &Args) -> Result<()> {
                 .set("distributed_us", Json::Num(d.total_us))
                 .set("speedup", Json::Num(d.speedup()))
                 .set("parallel_efficiency", Json::Num(d.parallel_efficiency()));
+        }
+        if llm_flag {
+            let mut phase = PhaseModel::new(&est, &module)
+                .ok_or_else(|| anyhow::anyhow!("--llm needs a module with a sequence extent"))?;
+            let kv = KvCacheSpec::infer(&module, 1).ok_or_else(|| {
+                anyhow::anyhow!("--llm could not infer a KV shape from the module")
+            })?;
+            let cfg = SimConfig {
+                max_batch: llm_batch,
+                kv_capacity: Some(spec.vmem_bytes),
+            };
+            let llm = simulate(&est, &mut phase, &kv, &llm_workload, &cfg);
+            cells.extend([
+                format!("{:.3}", llm.prefill_us),
+                format!("{:.3}", llm.decode_step_us),
+                format!("{:.1}", llm.tokens_per_sec),
+                format!("{:.3}", llm.ttft_p50_us()),
+            ]);
+            row.set("prefill_us", Json::Num(llm.prefill_us))
+                .set("decode_step_us", Json::Num(llm.decode_step_us))
+                .set("tokens_per_sec", Json::Num(llm.tokens_per_sec))
+                .set("ttft_p50_us", Json::Num(llm.ttft_p50_us()));
         }
         t.row(&cells);
         rows_json.push(row);
@@ -1251,6 +1319,89 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         print!("{}", report.to_csv());
     } else {
         println!("{}", report.render());
+    }
+    Ok(())
+}
+
+/// `llm`: the request-level serving simulation of one decoder-block
+/// module. Uses the deterministic sweep estimator (a pure function of
+/// the device spec, no calibration assets), so every number is
+/// reproducible bit for bit from the command line alone.
+fn cmd_llm(args: &Args) -> Result<()> {
+    let spec = make_device(args)?;
+    let Some(path) = args.get("module") else {
+        bail!("llm needs --module FILE (e.g. rust/tests/fixtures/decoder_block.mlir)");
+    };
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading module {path}"))?;
+    let module = parse_module(&text)?;
+    if args.flag("phase-csv") {
+        print!("{}", phase_csv(&module));
+        return Ok(());
+    }
+    let est = sweep::sweep_estimator(&spec);
+    let mut phase = PhaseModel::new(&est, &module).ok_or_else(|| {
+        anyhow::anyhow!("module @{} has no sequence extent to serve", module.name)
+    })?;
+    let kv = KvCacheSpec::infer(&module, args.usize_or("layers", 1)).ok_or_else(|| {
+        anyhow::anyhow!("module @{} yields no KV-cache shape", module.name)
+    })?;
+    let workload = generate_workload(&WorkloadConfig {
+        requests: args.usize_or("requests", 16),
+        seed: args.u64_or("seed", 42),
+        prompt_len: (
+            args.usize_or("prompt-min", 32),
+            args.usize_or("prompt-max", 256),
+        ),
+        output_len: (
+            args.usize_or("output-min", 8),
+            args.usize_or("output-max", 64),
+        ),
+        mean_gap_us: args.f64_or("gap-us", 200.0),
+    });
+    let kv_mb = args.f64_or("kv-mb", spec.vmem_bytes as f64 / (1024.0 * 1024.0));
+    if !kv_mb.is_finite() || kv_mb < 0.0 {
+        bail!("--kv-mb must be non-negative");
+    }
+    let cfg = SimConfig {
+        max_batch: args.usize_or("max-batch", 8),
+        kv_capacity: Some((kv_mb * 1024.0 * 1024.0) as u64),
+    };
+    let mut report = simulate(&est, &mut phase, &kv, &workload, &cfg);
+    report.module = module.name.clone();
+    if let Some(p) = args.get("trace-out") {
+        write_trace(p, &report.trace_events())?;
+    }
+    if args.flag("json") {
+        println!("{}", report.to_json().dump());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(())
+}
+
+/// `bench-llm`: the decoder-block serving sweep over every preset (see
+/// [`inference::bench`](scalesim_tpu::inference::bench)). `--check` is
+/// the CI freshness gate on `BENCH_llm.json`; `--publish` (re)writes it.
+fn cmd_bench_llm(args: &Args) -> Result<()> {
+    if args.flag("check") {
+        return inference::check_published();
+    }
+    let opts = LlmBenchOptions {
+        requests: args.usize_or("requests", 64),
+        seed: args.u64_or("seed", 42),
+        max_batch: args.usize_or("max-batch", 8),
+    };
+    let report = inference::run_llm_bench(&opts)?;
+    if args.flag("json") {
+        // JSON-only stdout (the CI smoke parses it); summary on stderr.
+        println!("{}", report.to_json().dump());
+        eprintln!("{}", report.render());
+    } else {
+        print!("{}", report.render());
+    }
+    if args.flag("publish") {
+        report.publish()?;
     }
     Ok(())
 }

@@ -51,9 +51,17 @@ fn bert_fixture() -> String {
 fn help_lists_subcommands() {
     let (stdout, _, ok) = run(&["help"]);
     assert!(ok);
-    for cmd in ["table1", "fig2", "fig5", "simulate", "calibrate", "serve"] {
+    for cmd in ["table1", "fig2", "fig5", "simulate", "calibrate", "serve", "llm", "bench-llm"] {
         assert!(stdout.contains(cmd), "help missing {cmd}");
     }
+}
+
+fn decoder_fixture() -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/decoder_block.mlir")
+        .to_str()
+        .unwrap()
+        .to_string()
 }
 
 #[test]
@@ -633,6 +641,120 @@ fn sweep_rejects_bad_flags_cleanly() {
     let (_, stderr, ok) = run(&["sweep", "--device", "tpu-v4", "--device-file", "x.toml"]);
     assert!(!ok);
     assert!(stderr.contains("mutually exclusive"), "{stderr}");
+}
+
+#[test]
+fn llm_json_reports_a_consistent_serving_run() {
+    use scalesim_tpu::util::json::Json;
+
+    let module = decoder_fixture();
+    let (stdout, stderr, ok) = run(&["llm", "--module", &module, "--device", "tpu-v4", "--json"]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    let j = Json::parse(stdout.trim()).expect("one JSON object on stdout");
+    assert_eq!(j.req_str("module").unwrap(), "decoder_block");
+    assert_eq!(j.req_str("device").unwrap(), "tpu-v4");
+    assert_eq!(j.req_f64("requests").unwrap(), 16.0);
+    let tps = j.req_f64("tokens_per_sec").unwrap();
+    assert!(tps > 0.0);
+    assert!(tps <= j.req_f64("roofline_tokens_per_sec").unwrap());
+    assert!(j.req_f64("ttft_p50_us").unwrap() <= j.req_f64("latency_p50_us").unwrap());
+    assert_eq!(j.req_f64("kv_evictions").unwrap(), 0.0);
+    assert_eq!(j.req_f64("kv_bytes_per_token").unwrap(), 4096.0);
+    assert_eq!(j.req_arr("requests_detail").unwrap().len(), 16);
+
+    // Same invocation, same bytes — the CLI is deterministic.
+    let (again, _, ok) = run(&["llm", "--module", &module, "--device", "tpu-v4", "--json"]);
+    assert!(ok);
+    assert_eq!(stdout, again, "llm --json drifted between runs");
+}
+
+#[test]
+fn llm_phase_csv_matches_the_checked_in_golden() {
+    let module = decoder_fixture();
+    let (stdout, stderr, ok) = run(&["llm", "--module", &module, "--phase-csv"]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert_eq!(
+        stdout,
+        include_str!("fixtures/llm_phases.csv"),
+        "phase CSV drifted from the golden fixture"
+    );
+}
+
+#[test]
+fn llm_renders_report_and_writes_trace() {
+    let s = Scratch::new("llm_trace");
+    let trace = s.path("llm.trace.json");
+    let module = decoder_fixture();
+    let (stdout, stderr, ok) = run(&[
+        "llm", "--module", &module, "--device", "tpu-v5e", "--requests", "4", "--trace-out",
+        &trace,
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    for needle in ["llm serve:", "phases:", "throughput:", "ttft:", "kv:"] {
+        assert!(stdout.contains(needle), "missing '{needle}' in: {stdout}");
+    }
+    let json = std::fs::read_to_string(s.0.join("llm.trace.json")).unwrap();
+    assert!(json.contains("\"llm-serve\""), "{json}");
+    assert!(json.contains("\"prefill\""), "{json}");
+}
+
+#[test]
+fn llm_requires_a_module() {
+    let (_, stderr, ok) = run(&["llm", "--device", "tpu-v4"]);
+    assert!(!ok);
+    assert!(stderr.contains("--module"), "{stderr}");
+}
+
+#[test]
+fn compare_llm_adds_serving_columns() {
+    use scalesim_tpu::util::json::Json;
+
+    let s = Scratch::new("compare_llm");
+    let assets = s.path("assets");
+    let module = decoder_fixture();
+    let (stdout, stderr, ok) = run(&[
+        "compare", "--module", &module, "--devices", "tpu-v4,tpu-v5e", "--llm", "--shapes",
+        "30", "--reps", "1", "--assets", &assets, "--json",
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    let j = Json::parse(stdout.trim()).expect("one JSON object");
+    let rows = j.req_arr("devices").unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        assert!(row.req_f64("prefill_us").unwrap() > row.req_f64("decode_step_us").unwrap());
+        assert!(row.req_f64("tokens_per_sec").unwrap() > 0.0);
+        assert!(row.req_f64("ttft_p50_us").unwrap() > 0.0);
+    }
+    // The human table grows the llm columns.
+    let (table, _, ok) = run(&[
+        "compare", "--module", &module, "--devices", "tpu-v4", "--llm", "--shapes", "30",
+        "--reps", "1", "--assets", &assets,
+    ]);
+    assert!(ok, "{table}");
+    for needle in ["prefill us", "decode us", "tok/s", "ttft p50 us"] {
+        assert!(table.contains(needle), "missing '{needle}' in: {table}");
+    }
+}
+
+#[test]
+fn bench_llm_json_covers_every_preset_and_check_passes() {
+    use scalesim_tpu::util::json::Json;
+
+    let (stdout, stderr, ok) = run(&["bench-llm", "--requests", "8", "--json"]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    let j = Json::parse(stdout.trim()).expect("JSON-only stdout");
+    assert_eq!(j.req_str("bench").unwrap(), "llm");
+    let rows = j.req_arr("devices").unwrap();
+    assert_eq!(rows.len(), 4);
+    for row in rows {
+        assert!(row.req_f64("tokens_per_sec").unwrap() > 0.0, "{row:?}");
+    }
+    assert!(stderr.contains("bench-llm:"), "summary on stderr: {stderr}");
+
+    // The checked-in BENCH_llm.json is fresh against the current source.
+    let (stdout, stderr, ok) = run(&["bench-llm", "--check"]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("fresh"), "{stdout}");
 }
 
 #[test]

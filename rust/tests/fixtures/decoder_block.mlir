@@ -1,0 +1,38 @@
+module @decoder_block attributes {mhlo.num_partitions = 1 : i32} {
+  func.func public @main(%x: tensor<256x1024xbf16>, %wq: tensor<1024x1024xbf16>, %wk: tensor<1024x1024xbf16>, %wv: tensor<1024x1024xbf16>, %wo: tensor<1024x1024xbf16>, %w1: tensor<1024x4096xbf16>, %w2: tensor<4096x1024xbf16>) -> (tensor<256x1024xbf16>) {
+    %q = stablehlo.dot_general %x, %wq, contracting_dims = [1] x [0], precision = [DEFAULT, DEFAULT] : (tensor<256x1024xbf16>, tensor<1024x1024xbf16>) -> tensor<256x1024xbf16>
+    %k = stablehlo.dot_general %x, %wk, contracting_dims = [1] x [0], precision = [DEFAULT, DEFAULT] : (tensor<256x1024xbf16>, tensor<1024x1024xbf16>) -> tensor<256x1024xbf16>
+    %v = stablehlo.dot_general %x, %wv, contracting_dims = [1] x [0], precision = [DEFAULT, DEFAULT] : (tensor<256x1024xbf16>, tensor<1024x1024xbf16>) -> tensor<256x1024xbf16>
+    %q3 = stablehlo.reshape %q : (tensor<256x1024xbf16>) -> tensor<256x8x128xbf16>
+    %qt = stablehlo.transpose %q3, dims = [1, 0, 2] : (tensor<256x8x128xbf16>) -> tensor<8x256x128xbf16>
+    %k3 = stablehlo.reshape %k : (tensor<256x1024xbf16>) -> tensor<256x8x128xbf16>
+    %kt = stablehlo.transpose %k3, dims = [1, 2, 0] : (tensor<256x8x128xbf16>) -> tensor<8x128x256xbf16>
+    %v3 = stablehlo.reshape %v : (tensor<256x1024xbf16>) -> tensor<256x8x128xbf16>
+    %vt = stablehlo.transpose %v3, dims = [1, 0, 2] : (tensor<256x8x128xbf16>) -> tensor<8x256x128xbf16>
+    %scores = stablehlo.dot_general %qt, %kt, batching_dims = [0] x [0], contracting_dims = [2] x [1] : (tensor<8x256x128xbf16>, tensor<8x128x256xbf16>) -> tensor<8x256x256xbf16>
+    %cst = stablehlo.constant dense<1.131371e+01> : tensor<bf16>
+    %scaleb = stablehlo.broadcast_in_dim %cst, dims = [] : (tensor<bf16>) -> tensor<8x256x256xbf16>
+    %scaled = stablehlo.divide %scores, %scaleb : tensor<8x256x256xbf16>
+    %cst_0 = stablehlo.constant dense<-6.550400e+04> : tensor<bf16>
+    %max = stablehlo.reduce(%scaled init: %cst_0) applies stablehlo.maximum across dimensions = [2] : (tensor<8x256x256xbf16>, tensor<bf16>) -> tensor<8x256xbf16>
+    %maxb = stablehlo.broadcast_in_dim %max, dims = [0, 1] : (tensor<8x256xbf16>) -> tensor<8x256x256xbf16>
+    %sub = stablehlo.subtract %scaled, %maxb : tensor<8x256x256xbf16>
+    %exp = stablehlo.exponential %sub : tensor<8x256x256xbf16>
+    %cst_1 = stablehlo.constant dense<0.000000e+00> : tensor<bf16>
+    %sum = stablehlo.reduce(%exp init: %cst_1) applies stablehlo.add across dimensions = [2] : (tensor<8x256x256xbf16>, tensor<bf16>) -> tensor<8x256xbf16>
+    %sumb = stablehlo.broadcast_in_dim %sum, dims = [0, 1] : (tensor<8x256xbf16>) -> tensor<8x256x256xbf16>
+    %probs = stablehlo.divide %exp, %sumb : tensor<8x256x256xbf16>
+    %ctx = stablehlo.dot_general %probs, %vt, batching_dims = [0] x [0], contracting_dims = [2] x [1] : (tensor<8x256x256xbf16>, tensor<8x256x128xbf16>) -> tensor<8x256x128xbf16>
+    %ctxt = stablehlo.transpose %ctx, dims = [1, 0, 2] : (tensor<8x256x128xbf16>) -> tensor<256x8x128xbf16>
+    %ctx2 = stablehlo.reshape %ctxt : (tensor<256x8x128xbf16>) -> tensor<256x1024xbf16>
+    %attn = stablehlo.dot_general %ctx2, %wo, contracting_dims = [1] x [0] : (tensor<256x1024xbf16>, tensor<1024x1024xbf16>) -> tensor<256x1024xbf16>
+    %res1 = stablehlo.add %attn, %x : tensor<256x1024xbf16>
+    %ffn1 = stablehlo.dot_general %res1, %w1, contracting_dims = [1] x [0] : (tensor<256x1024xbf16>, tensor<1024x4096xbf16>) -> tensor<256x4096xbf16>
+    %cst_2 = stablehlo.constant dense<0.000000e+00> : tensor<bf16>
+    %zb = stablehlo.broadcast_in_dim %cst_2, dims = [] : (tensor<bf16>) -> tensor<256x4096xbf16>
+    %relu = stablehlo.maximum %ffn1, %zb : tensor<256x4096xbf16>
+    %ffn2 = stablehlo.dot_general %relu, %w2, contracting_dims = [1] x [0] : (tensor<256x4096xbf16>, tensor<4096x1024xbf16>) -> tensor<256x1024xbf16>
+    %res2 = stablehlo.add %ffn2, %res1 : tensor<256x1024xbf16>
+    return %res2 : tensor<256x1024xbf16>
+  }
+}

@@ -1,0 +1,435 @@
+#!/usr/bin/env python3
+"""Bit-exact replica of `scalesim-tpu llm --module decoder_block.mlir --phase-csv`.
+
+Regenerates tests/fixtures/llm_phases.csv, the per-preset prefill/decode
+phase table for the decoder-block fixture. The Rust CLI must reproduce
+this file byte for byte (tests/cli.rs::llm_phase_csv_matches_golden
+asserts it); if the decoder fixture, the device presets, the estimator
+cost model, the dependence-graph scheduler or the DMA-timeline residency
+walk change intentionally, re-run this script and commit the fixture
+together with the change.
+
+Replicated arithmetic (all IEEE-754 double, matching the Rust ops 1:1):
+  * classify + per-class estimator costs (src/frontend/classify.rs,
+    src/coordinator/estimator.rs): systolic GEMM via the SCALE-Sim WS
+    fold model, elementwise fallback 3x output bytes, reduction
+    input+output bytes, data movement 2x moved bytes, each at
+    bandwidth_us(b) = 0.5 + b / hbm_bytes_per_us;
+  * the synthetic sweep calibration latency = 1e-3 * cycles * count
+    (src/sweep/mod.rs::sweep_estimator);
+  * the DMA timeline: LRU residency with pinned operands, cold fetches,
+    dirty evictions, spills and the `return` escape
+    (src/memory/timeline.rs, residency.rs);
+  * the list scheduler over MXU/VPU/DMA lanes (src/graph/schedule.rs)
+    and the aggregate roofline verdict (src/graph/analysis.rs);
+  * the decode lowering seq 256 -> 1 (src/inference/lower.rs) and the
+    KV bytes/token formula 2*layers*kv_heads*head_dim*dtype
+    (src/inference/kv.rs).
+"""
+
+import math
+import os
+
+# name, (SR, SC), (if_bw, fl_bw, of_bw), hbm_gbps, vmem_bytes
+PRESETS = [
+    ("tpu-v4", (128, 128), (256.0, 256.0, 128.0), 1200.0, 32 * 1024 * 1024),
+    ("tpu-v5e", (128, 128), (176.0, 176.0, 88.0), 819.0, 16 * 1024 * 1024),
+    ("tpu-v5p", (128, 128), (512.0, 512.0, 256.0), 2765.0, 64 * 1024 * 1024),
+    ("generic-256x256", (256, 256), (128.0, 128.0, 64.0), 600.0,
+     24 * 1024 * 1024),
+]
+
+SEQ = 256  # leading dim of %x in decoder_block.mlir
+BF16 = 2
+
+# The decoder-block entry function, transcribed op for op from
+# decoder_block.mlir. `S` marks every extent equal to the sequence dim;
+# the decode lowering rewrites S -> 1 and nothing else (exactly what
+# rewrite_seq does: weights and head extents carry no 256).
+# kind: gemm(m,k,n,count) | dm | ew | red | free | ret
+S = "S"
+
+
+def dims(spec, s):
+    return tuple(s if d == S else d for d in spec)
+
+
+ARG_DIMS = {
+    "x": (S, 1024),
+    "wq": (1024, 1024),
+    "wk": (1024, 1024),
+    "wv": (1024, 1024),
+    "wo": (1024, 1024),
+    "w1": (1024, 4096),
+    "w2": (4096, 1024),
+}
+
+# (result, kind, operands, out_dims, extra)
+#   gemm extra: (m, k, n, count) with S placeholders
+#   red  extra: input dims
+OPS = [
+    ("q", "gemm", ["x", "wq"], (S, 1024), (S, 1024, 1024, 1)),
+    ("k", "gemm", ["x", "wk"], (S, 1024), (S, 1024, 1024, 1)),
+    ("v", "gemm", ["x", "wv"], (S, 1024), (S, 1024, 1024, 1)),
+    ("q3", "dm", ["q"], (S, 8, 128), None),
+    ("qt", "dm", ["q3"], (8, S, 128), None),
+    ("k3", "dm", ["k"], (S, 8, 128), None),
+    ("kt", "dm", ["k3"], (8, 128, S), None),
+    ("v3", "dm", ["v"], (S, 8, 128), None),
+    ("vt", "dm", ["v3"], (8, S, 128), None),
+    ("scores", "gemm", ["qt", "kt"], (8, S, S), (S, 128, S, 8)),
+    ("cst", "free", [], (), None),
+    ("scaleb", "dm", ["cst"], (8, S, S), None),
+    ("scaled", "ew", ["scores", "scaleb"], (8, S, S), None),
+    ("cst_0", "free", [], (), None),
+    ("max", "red", ["scaled", "cst_0"], (8, S), (8, S, S)),
+    ("maxb", "dm", ["max"], (8, S, S), None),
+    ("sub", "ew", ["scaled", "maxb"], (8, S, S), None),
+    ("exp", "ew", ["sub"], (8, S, S), None),
+    ("cst_1", "free", [], (), None),
+    ("sum", "red", ["exp", "cst_1"], (8, S), (8, S, S)),
+    ("sumb", "dm", ["sum"], (8, S, S), None),
+    ("probs", "ew", ["exp", "sumb"], (8, S, S), None),
+    ("ctx", "gemm", ["probs", "vt"], (8, S, 128), (S, S, 128, 8)),
+    ("ctxt", "dm", ["ctx"], (S, 8, 128), None),
+    ("ctx2", "dm", ["ctxt"], (S, 1024), None),
+    ("attn", "gemm", ["ctx2", "wo"], (S, 1024), (S, 1024, 1024, 1)),
+    ("res1", "ew", ["attn", "x"], (S, 1024), None),
+    ("ffn1", "gemm", ["res1", "w1"], (S, 4096), (S, 1024, 4096, 1)),
+    ("cst_2", "free", [], (), None),
+    ("zb", "dm", ["cst_2"], (S, 4096), None),
+    ("relu", "ew", ["ffn1", "zb"], (S, 4096), None),
+    ("ffn2", "gemm", ["relu", "w2"], (S, 1024), (S, 4096, 1024, 1)),
+    ("res2", "ew", ["ffn2", "res1"], (S, 1024), None),
+    (None, "ret", ["res2"], None, None),
+]
+
+ENGINE = {"gemm": "mxu", "ew": "vpu", "red": "vpu", "dm": "dma"}
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def nbytes(d):
+    return math.prod(d) * BF16 if d is not None else 0
+
+
+def ws_fold_classes(k, n, sr, sc):
+    """SCALE-Sim WS fold decomposition: rows=K, cols=N."""
+    rf, cf = ceil_div(k, sr), ceil_div(n, sc)
+    last_r = k - (rf - 1) * sr
+    last_c = n - (cf - 1) * sc
+    classes = []
+    if (rf - 1) * (cf - 1) > 0:
+        classes.append(((sr, sc), (rf - 1) * (cf - 1)))
+    if cf - 1 > 0:
+        classes.append(((last_r, sc), cf - 1))
+    if rf - 1 > 0:
+        classes.append(((sr, last_c), rf - 1))
+    classes.append(((last_r, last_c), 1))
+    return classes
+
+
+def simulate_ws(m, k, n, arr, bw):
+    """total_cycles of simulate_gemm under a WS config."""
+    sr, sc = arr
+    if_bw, fl_bw, of_bw = bw
+    compute = 0
+    stall = 0
+    initial = 0
+    first = True
+    for (r, c), count in ws_fold_classes(k, n, sr, sc):
+        t_compute = r + (r + c + m - 2)  # load + stream
+        compute += t_compute * count
+        if_w, fl_w, of_w = m * r, r * c, m * c
+        t_read = max(math.ceil(if_w / if_bw), math.ceil(fl_w / fl_bw))
+        t_write = math.ceil(of_w / of_bw)
+        remaining = count
+        if first:
+            initial = t_read
+            first = False
+            remaining -= 1
+        stall += max(0, max(t_read, t_write) - t_compute) * remaining
+    return initial + compute + stall
+
+
+def op_cost(kind, extra, out_d, s, arr, bw, hbm):
+    if kind in ("free", "ret"):
+        return 0.0
+    if kind == "gemm":
+        m, k, n, count = dims(extra, s)
+        cycles = simulate_ws(m, k, n, arr, bw)
+        return max((1e-3 * cycles + 0.0) * float(count), 0.0)
+    if kind == "ew":
+        return 0.5 + nbytes(out_d) * 3 / hbm
+    if kind == "red":
+        in_b = nbytes(dims(extra, s))
+        return 0.5 + (in_b + nbytes(out_d)) / hbm
+    if kind == "dm":
+        return 0.5 + nbytes(out_d) * 2 / hbm
+    raise AssertionError(kind)
+
+
+class Tracker:
+    """LRU residency with pinned values (src/memory/residency.rs)."""
+
+    def __init__(self, cap):
+        self.cap = cap
+        self.entries = {}  # id -> [bytes, dirty]
+        self.order = []
+        self.used = 0
+
+    def access(self, vid):
+        if vid in self.entries:
+            self.order.remove(vid)
+            self.order.append(vid)
+            return True
+        return False
+
+    def contains(self, vid):
+        return vid in self.entries
+
+    def insert(self, vid, b, dirty, pinned):
+        if vid in self.entries:
+            e = self.entries[vid]
+            e[1] = e[1] or dirty
+            self.order.remove(vid)
+            self.order.append(vid)
+            return True, []
+        if self.cap is not None:
+            if b > self.cap:
+                return False, []
+            if self.used + b > self.cap:
+                need = self.used + b - self.cap
+                freed = 0
+                victims = []
+                for cand in self.order:
+                    if freed >= need:
+                        break
+                    if cand in pinned:
+                        continue
+                    freed += self.entries[cand][0]
+                    victims.append(cand)
+                if freed < need:
+                    return False, []
+                evicted = []
+                for v in victims:
+                    vb, vd = self.entries.pop(v)
+                    self.used -= vb
+                    self.order.remove(v)
+                    evicted.append((v, vb, vd))
+                self.entries[vid] = [b, dirty]
+                self.order.append(vid)
+                self.used += b
+                return True, evicted
+        self.entries[vid] = [b, dirty]
+        self.order.append(vid)
+        self.used += b
+        return True, []
+
+    def remove(self, vid):
+        if vid in self.entries:
+            self.used -= self.entries.pop(vid)[0]
+            self.order.remove(vid)
+
+
+def push_unique(v, n):
+    if n not in v:
+        v.append(n)
+
+
+def schedule(s, arr, bw, hbm, vmem):
+    """Replica of schedule_module_memory: (makespan_us, verdict)."""
+    # --- value registration (DmaTimeline::new) ---
+    values = {}  # id -> [bytes, uses, chip_node, hbm_node, dirty]
+    for res, _, _, out_d, _ in OPS:
+        if res is not None:
+            values[res] = [nbytes(dims(out_d, s)), 0, None, None, False]
+    for _, _, operands, _, _ in OPS:
+        seen = []
+        for o in operands:
+            if o in seen:
+                continue
+            seen.append(o)
+            if o not in values:
+                values[o] = [nbytes(dims(ARG_DIMS[o], s)), 0, None, None,
+                             False]
+            values[o][1] += 1
+
+    tracker = Tracker(vmem)
+    producer = {res: i for i, (res, _, _, _, _) in enumerate(OPS)
+                if res is not None}
+    nodes = []  # (engine, cost, preds)
+    provider = []
+    per_op = []  # (compute_us, dma_us) in op order
+
+    for i, (res, kind, operands, out_d, extra) in enumerate(OPS):
+        ded = []
+        for o in operands:
+            if o not in ded:
+                ded.append(o)
+
+        # --- fetch (skipped for return) ---
+        fetch_node = None
+        fetch_us = 0.0
+        hit_preds = []
+        if kind != "ret":
+            fetch_preds = []
+            cold_ids = []
+            written_back = []
+            cold_bytes = 0
+            wb_bytes = 0
+            for vid in ded:
+                b, _, chip, hbm_node, _ = values[vid]
+                if b == 0:
+                    continue
+                if tracker.access(vid):
+                    if chip is not None:
+                        push_unique(hit_preds, chip)
+                else:
+                    cold_bytes += b
+                    if hbm_node is not None:
+                        push_unique(fetch_preds, hbm_node)
+                    inserted, evicted = tracker.insert(vid, b, False, ded)
+                    if inserted:
+                        cold_ids.append(vid)
+                    for ev_id, ev_b, ev_dirty in evicted:
+                        if ev_dirty:
+                            wb_bytes += ev_b
+                            if values[ev_id][2] is not None:
+                                push_unique(fetch_preds, values[ev_id][2])
+                            values[ev_id][4] = False
+                            written_back.append(ev_id)
+            total = cold_bytes + wb_bytes
+            if total > 0:
+                cost = total / hbm
+                fetch_node = len(nodes)
+                nodes.append(("dma" if cost > 0.0 else None, cost,
+                              fetch_preds))
+                for vid in cold_ids:
+                    values[vid][2] = fetch_node
+                for vid in written_back:
+                    values[vid][3] = fetch_node
+                fetch_us = cost
+
+        # --- compute node ---
+        cost = op_cost(kind, extra, dims(out_d, s) if out_d else None, s,
+                       arr, bw, hbm)
+        engine = ENGINE.get(kind)
+        preds = []
+        gpreds = []
+        for o in operands:
+            if o in producer and producer[o] not in gpreds:
+                gpreds.append(producer[o])
+        for p in gpreds:
+            push_unique(preds, provider[p])
+        for n in hit_preds:
+            push_unique(preds, n)
+        if fetch_node is not None:
+            push_unique(preds, fetch_node)
+        main = len(nodes)
+        nodes.append((engine, cost, preds))
+        provider.append(main)
+
+        # --- retire ---
+        retire_us = 0.0
+        r_preds = [main]
+        r_bytes = 0
+        hbm_updates = []
+        if kind == "ret":
+            for vid in ded:
+                b, _, chip, _, dirty = values[vid]
+                if b > 0 and dirty and tracker.contains(vid):
+                    r_bytes += b
+                    if chip is not None:
+                        push_unique(r_preds, chip)
+                    hbm_updates.append(vid)
+        for vid in ded:
+            values[vid][1] = max(0, values[vid][1] - 1)
+            if values[vid][1] == 0:
+                tracker.remove(vid)
+        if res is not None:
+            rb, uses = values[res][0], values[res][1]
+            if rb > 0 and uses > 0:
+                inserted, evicted = tracker.insert(res, rb, True, [res])
+                if inserted:
+                    values[res][2] = main
+                    values[res][4] = True
+                    for ev_id, ev_b, ev_dirty in evicted:
+                        if ev_dirty:
+                            r_bytes += ev_b
+                            if values[ev_id][2] is not None:
+                                push_unique(r_preds, values[ev_id][2])
+                            values[ev_id][4] = False
+                            hbm_updates.append(ev_id)
+                else:
+                    r_bytes += rb
+                    values[res][4] = False
+                    hbm_updates.append(res)
+        if r_bytes > 0:
+            cost_out = r_bytes / hbm
+            node_id = len(nodes)
+            nodes.append(("dma" if cost_out > 0.0 else None, cost_out,
+                          r_preds))
+            for vid in hbm_updates:
+                values[vid][3] = node_id
+            retire_us = cost_out
+
+        per_op.append((cost, fetch_us + retire_us))
+
+    # --- list scheduler (src/graph/schedule.rs::place) ---
+    lane_free = {}
+    ends = []
+    for engine, cost, preds in nodes:
+        ready = 0.0
+        for p in preds:
+            ready = max(ready, ends[p])
+        if engine is not None:
+            start = max(ready, lane_free.get(engine, 0.0))
+        else:
+            start = ready
+        end = start + cost
+        if engine is not None:
+            lane_free[engine] = end
+        ends.append(end)
+    makespan = 0.0
+    for e in ends:
+        makespan = max(makespan, e)
+
+    # --- roofline (src/graph/analysis.rs) ---
+    compute_us = 0.0
+    dma_us = 0.0
+    for c, d in per_op:
+        compute_us += c
+        dma_us += d
+    verdict = "bandwidth-bound" if dma_us > compute_us else "compute-bound"
+    return makespan, verdict
+
+
+def kv_bytes_per_token():
+    # 2 * layers * kv_heads * head_dim * dtype; heads from the first
+    # [seq, d] -> [seq, h, hd] reshape (q3: 8 x 128), bf16 activations.
+    return 2 * 1 * 8 * 128 * BF16
+
+
+def main():
+    out = ["device,seq,prefill_us,prefill_verdict,decode_us,decode_verdict,"
+           "kv_bytes_per_token"]
+    for name, arr, bw, hbm_gbps, vmem in PRESETS:
+        hbm = hbm_gbps * 1e3
+        p_us, p_v = schedule(SEQ, arr, bw, hbm, vmem)
+        d_us, d_v = schedule(1, arr, bw, hbm, vmem)
+        out.append(f"{name},{SEQ},{p_us:.6f},{p_v},{d_us:.6f},{d_v},"
+                   f"{kv_bytes_per_token()}")
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "llm_phases.csv")
+    with open(path, "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote {path} ({len(out) - 1} rows)")
+    for line in out:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

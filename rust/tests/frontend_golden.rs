@@ -214,3 +214,125 @@ fn collectives_golden() {
     assert_eq!(f.ops[1].int_attrs.get("all_gather_dim"), Some(&vec![0]));
     assert_eq!(f.ops[2].int_attrs.get("scatter_dimension"), Some(&vec![0]));
 }
+
+#[test]
+fn decoder_block_golden() {
+    let m = fixture("decoder_block.mlir");
+    assert_eq!(m.name, "decoder_block");
+    let f = m.entry().unwrap();
+    assert_eq!(f.arg_types.len(), 7);
+    assert_eq!(f.arg_types[0].dims, vec![256, 1024], "activation is [seq, d_model]");
+    assert_eq!(f.ops.len(), 34, "op count drifted");
+
+    assert_eq!(
+        count_classes(&m),
+        ClassCounts {
+            gemm: 8,
+            conv: 0,
+            elementwise: 7,
+            reduction: 2,
+            movement: 12,
+            collective: 0,
+            free: 5,
+            unmodeled: 0,
+        }
+    );
+
+    // The eight GEMMs in program order: QKV projections, the two 8-way
+    // batched attention dots, the output projection and the FFN pair.
+    let gemms: Vec<(GemmShape, u64)> = f
+        .ops
+        .iter()
+        .filter_map(|op| match classify(op) {
+            OpClass::SystolicGemm { gemm, count } => Some((gemm, count)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        gemms,
+        vec![
+            (GemmShape::new(256, 1024, 1024), 1), // Q proj
+            (GemmShape::new(256, 1024, 1024), 1), // K proj
+            (GemmShape::new(256, 1024, 1024), 1), // V proj
+            (GemmShape::new(256, 128, 256), 8),   // QK^T
+            (GemmShape::new(256, 256, 128), 8),   // probs * V
+            (GemmShape::new(256, 1024, 1024), 1), // output proj
+            (GemmShape::new(256, 1024, 4096), 1), // FFN up
+            (GemmShape::new(256, 4096, 1024), 1), // FFN down
+        ]
+    );
+
+    // Everything is bf16 — the KV spec's 2 bytes/element rests on this.
+    for op in &f.ops {
+        if let Some(t) = op.out_type() {
+            assert_eq!(t.dtype, DType::Bf16, "op {} is not bf16", op.op_name);
+        }
+    }
+}
+
+#[test]
+fn decode_lowering_classifies_identically_to_prefill() {
+    use scalesim_tpu::inference::{lower_decode, sequence_dim};
+
+    let m = fixture("decoder_block.mlir");
+    let seq = sequence_dim(&m).unwrap();
+    assert_eq!(seq, 256);
+    let d = lower_decode(&m);
+    assert_eq!(sequence_dim(&d), Some(1));
+
+    let pf = m.entry().unwrap();
+    let df = d.entry().unwrap();
+    assert_eq!(pf.ops.len(), df.ops.len(), "lowering changed the op list");
+
+    let rewrite = |dims: &[usize]| -> Vec<usize> {
+        dims.iter().map(|&x| if x == seq { 1 } else { x }).collect()
+    };
+
+    for (a, b) in pf.ops.iter().zip(&df.ops) {
+        // Same op, same SSA structure, same attributes...
+        assert_eq!(a.op_name, b.op_name);
+        assert_eq!(a.dot_dims, b.dot_dims, "{}: dot dims drifted", a.op_name);
+        assert_eq!(a.int_attrs, b.int_attrs, "{}: attrs drifted", a.op_name);
+        // ...same classification kind...
+        let (ca, cb) = (classify(a), classify(b));
+        assert_eq!(
+            std::mem::discriminant(&ca),
+            std::mem::discriminant(&cb),
+            "{}: class changed {ca:?} -> {cb:?}",
+            a.op_name
+        );
+        // ...and every type is the prefill type with seq extents
+        // rewritten to 1, nothing else.
+        assert_eq!(a.operand_types.len(), b.operand_types.len());
+        for (ta, tb) in a.operand_types.iter().zip(&b.operand_types) {
+            assert_eq!(tb.dims, rewrite(&ta.dims), "{}: operand dims", a.op_name);
+            assert_eq!(tb.dtype, ta.dtype);
+        }
+        for (ta, tb) in a.result_types.iter().zip(&b.result_types) {
+            assert_eq!(tb.dims, rewrite(&ta.dims), "{}: result dims", a.op_name);
+            assert_eq!(tb.dtype, ta.dtype);
+        }
+    }
+
+    // The GEMMs collapse to GEMV-shaped ops: each decode gemm is the
+    // prefill gemm with seq-derived extents at 1, batch counts intact.
+    let shapes = |f: &scalesim_tpu::frontend::FuncInfo| -> Vec<(GemmShape, u64)> {
+        f.ops
+            .iter()
+            .filter_map(|op| match classify(op) {
+                OpClass::SystolicGemm { gemm, count } => Some((gemm, count)),
+                _ => None,
+            })
+            .collect()
+    };
+    let (pg, dg) = (shapes(pf), shapes(df));
+    assert_eq!(pg.len(), 8);
+    assert_eq!(dg.len(), 8);
+    for ((a, ca), (b, cb)) in pg.iter().zip(&dg) {
+        assert_eq!(ca, cb, "batch count changed");
+        let expect = |x: usize| if x == seq { 1 } else { x };
+        assert_eq!(b.m, expect(a.m));
+        assert_eq!(b.k, expect(a.k));
+        assert_eq!(b.n, expect(a.n));
+    }
+}

@@ -1,0 +1,303 @@
+//! Exact-invariant battery for the LLM serving simulator.
+//!
+//! Every assertion here is epsilon-free: bit-identity via `to_bits()`,
+//! exact `<=` / `>=` on the float clock, and byte-identity on rendered
+//! output. The simulator is deterministic by construction (seeded
+//! workload, pure float arithmetic, no wall clock), so any drift in the
+//! phase model, the KV accounting or the event loop fails here first.
+//! All properties are checked across every device preset and several
+//! seeds.
+
+use std::path::Path;
+
+use scalesim_tpu::coordinator::Estimator;
+use scalesim_tpu::device::{DeviceSpec, PRESET_NAMES};
+use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::inference::{
+    generate_workload, phase_csv, simulate, standalone_request, KvCacheSpec, PhaseModel,
+    SimConfig, WorkloadConfig,
+};
+use scalesim_tpu::sweep::sweep_estimator;
+
+const SEEDS: [u64; 3] = [7, 42, 1234];
+
+fn fixture_text() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/decoder_block.mlir");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+fn setup(device: &str) -> (Estimator, PhaseModel, KvCacheSpec) {
+    let spec = DeviceSpec::preset(device).unwrap();
+    let est = sweep_estimator(&spec);
+    let module = parse_module(&fixture_text()).unwrap();
+    let phase = PhaseModel::new(&est, &module).expect("decoder block has a sequence extent");
+    let kv = KvCacheSpec::infer(&module, 1).expect("decoder block has a head-split reshape");
+    (est, phase, kv)
+}
+
+fn workload_cfg(seed: u64) -> WorkloadConfig {
+    WorkloadConfig {
+        seed,
+        ..WorkloadConfig::default()
+    }
+}
+
+/// A single-request stream through the full continuous-batching loop is
+/// bit-identical to running the request standalone (prefill then
+/// decode, no batching). `RequestResult` derives `PartialEq` over f64
+/// fields, so this is exact float equality — no epsilon.
+#[test]
+fn single_request_stream_is_bit_identical_to_standalone() {
+    for device in PRESET_NAMES {
+        let (est, mut phase, kv) = setup(device);
+        for seed in SEEDS {
+            let wl = generate_workload(&WorkloadConfig {
+                requests: 1,
+                ..workload_cfg(seed)
+            });
+            let cfg = SimConfig::default();
+            let report = simulate(&est, &mut phase, &kv, &wl, &cfg);
+            assert_eq!(report.requests.len(), 1);
+            let solo = standalone_request(&est, &mut phase, &kv, &wl[0], cfg.kv_capacity);
+            assert_eq!(
+                report.requests[0], solo,
+                "{device} seed {seed}: stream diverged from standalone"
+            );
+            assert_eq!(
+                report.requests[0].completion_us.to_bits(),
+                solo.completion_us.to_bits(),
+                "{device} seed {seed}: completion not bit-identical"
+            );
+        }
+    }
+}
+
+/// Per-request causality: a request can never see its first token
+/// before it arrives, finish before its first token, or report a TTFT
+/// above its end-to-end latency.
+#[test]
+fn ttft_is_bounded_by_latency_for_every_request() {
+    for device in PRESET_NAMES {
+        let (est, mut phase, kv) = setup(device);
+        for seed in SEEDS {
+            let wl = generate_workload(&workload_cfg(seed));
+            let report = simulate(&est, &mut phase, &kv, &wl, &SimConfig::default());
+            assert_eq!(report.requests.len(), wl.len());
+            for r in &report.requests {
+                assert!(r.ttft_us >= 0.0, "{device} seed {seed} req {}: {r:?}", r.id);
+                assert!(
+                    r.ttft_us <= r.latency_us,
+                    "{device} seed {seed} req {}: ttft {} > latency {}",
+                    r.id,
+                    r.ttft_us,
+                    r.latency_us
+                );
+                assert!(r.first_token_us >= r.arrival_us);
+                assert!(r.completion_us >= r.first_token_us);
+            }
+            // Order statistics inherit the per-request bound exactly.
+            assert!(report.ttft_p50_us() <= report.latency_p50_us());
+        }
+    }
+}
+
+/// Arriving later never makes a standalone request finish earlier: both
+/// first-token and completion times are monotone in arrival time.
+#[test]
+fn later_arrival_is_monotone_for_standalone_requests() {
+    for device in PRESET_NAMES {
+        let (est, mut phase, kv) = setup(device);
+        for seed in SEEDS {
+            let wl = generate_workload(&workload_cfg(seed));
+            for r in &wl {
+                let base = standalone_request(&est, &mut phase, &kv, r, None);
+                let mut later_spec = *r;
+                later_spec.arrival_us += 500.0;
+                let later = standalone_request(&est, &mut phase, &kv, &later_spec, None);
+                assert!(
+                    later.first_token_us >= base.first_token_us,
+                    "{device} seed {seed} req {}: first token moved earlier",
+                    r.id
+                );
+                assert!(
+                    later.completion_us >= base.completion_us,
+                    "{device} seed {seed} req {}: completion moved earlier",
+                    r.id
+                );
+            }
+        }
+    }
+}
+
+/// Continuous batching can only help: with KV unbounded, the batched
+/// makespan never exceeds the serialized (max_batch = 1) makespan of
+/// the same stream.
+#[test]
+fn batching_never_beats_by_losing_makespan() {
+    for device in PRESET_NAMES {
+        let (est, mut phase, kv) = setup(device);
+        for seed in SEEDS {
+            let wl = generate_workload(&workload_cfg(seed));
+            let batched = simulate(
+                &est,
+                &mut phase,
+                &kv,
+                &wl,
+                &SimConfig {
+                    max_batch: 8,
+                    kv_capacity: None,
+                },
+            );
+            let serial = simulate(
+                &est,
+                &mut phase,
+                &kv,
+                &wl,
+                &SimConfig {
+                    max_batch: 1,
+                    kv_capacity: None,
+                },
+            );
+            assert!(
+                batched.makespan_us <= serial.makespan_us,
+                "{device} seed {seed}: batched {} > serialized {}",
+                batched.makespan_us,
+                serial.makespan_us
+            );
+        }
+    }
+}
+
+/// Measured throughput never exceeds the decode roofline bound
+/// `1e6 · max_batch / decode_step_us` — under the default arrival gap
+/// and under a fully saturated (gap 0) stream.
+#[test]
+fn tokens_per_sec_never_exceeds_the_roofline() {
+    for device in PRESET_NAMES {
+        let (est, mut phase, kv) = setup(device);
+        for seed in SEEDS {
+            for gap in [200.0, 0.0] {
+                let wl = generate_workload(&WorkloadConfig {
+                    requests: 32,
+                    mean_gap_us: gap,
+                    ..workload_cfg(seed)
+                });
+                let report = simulate(&est, &mut phase, &kv, &wl, &SimConfig::default());
+                assert!(
+                    report.tokens_per_sec <= report.roofline_tokens_per_sec,
+                    "{device} seed {seed} gap {gap}: {} > roofline {}",
+                    report.tokens_per_sec,
+                    report.roofline_tokens_per_sec
+                );
+                assert!(report.tokens_per_sec > 0.0);
+            }
+        }
+    }
+}
+
+/// KV accounting, exact in all three regimes: an unbounded budget never
+/// spills; a budget of exactly the observed peak reproduces the
+/// unbounded run bit for bit; a budget far below the working set spills
+/// but still completes every request — and no regime ever evicts,
+/// because KV is pinned.
+#[test]
+fn kv_spill_accounting_is_exact_in_all_regimes() {
+    for device in PRESET_NAMES {
+        let (est, mut phase, kv) = setup(device);
+        for seed in SEEDS {
+            let wl = generate_workload(&workload_cfg(seed));
+
+            let unbounded = simulate(
+                &est,
+                &mut phase,
+                &kv,
+                &wl,
+                &SimConfig {
+                    max_batch: 8,
+                    kv_capacity: None,
+                },
+            );
+            assert_eq!(unbounded.kv_spill_events, 0, "{device} seed {seed}");
+            assert_eq!(unbounded.kv_spilled_bytes, 0, "{device} seed {seed}");
+            assert_eq!(unbounded.kv_evictions, 0, "{device} seed {seed}");
+            assert!(unbounded.kv_peak_bytes > 0);
+
+            // A budget of exactly the peak is enough: zero spills and a
+            // bit-identical makespan.
+            let exact = simulate(
+                &est,
+                &mut phase,
+                &kv,
+                &wl,
+                &SimConfig {
+                    max_batch: 8,
+                    kv_capacity: Some(unbounded.kv_peak_bytes),
+                },
+            );
+            assert_eq!(exact.kv_spill_events, 0, "{device} seed {seed}");
+            assert_eq!(
+                exact.makespan_us.to_bits(),
+                unbounded.makespan_us.to_bits(),
+                "{device} seed {seed}: peak-sized budget changed the clock"
+            );
+
+            // A budget of one request's 64-token cache is far below the
+            // default stream's working set: it must spill, never evict,
+            // and still finish everything.
+            let tight = simulate(
+                &est,
+                &mut phase,
+                &kv,
+                &wl,
+                &SimConfig {
+                    max_batch: 8,
+                    kv_capacity: Some(kv.bytes_at(64)),
+                },
+            );
+            assert!(tight.kv_spill_events > 0, "{device} seed {seed}");
+            assert!(tight.kv_spilled_bytes > 0, "{device} seed {seed}");
+            assert_eq!(tight.kv_evictions, 0, "{device} seed {seed}");
+            assert_eq!(tight.requests.len(), wl.len(), "{device} seed {seed}");
+            assert!(
+                tight.makespan_us >= unbounded.makespan_us,
+                "{device} seed {seed}: spilling made the stream faster"
+            );
+        }
+    }
+}
+
+/// The whole report is deterministic: the same seed renders the same
+/// JSON payload byte for byte (BTreeMap key order + exact float
+/// formatting), across repeated runs and fresh phase models.
+#[test]
+fn same_seed_renders_byte_identical_json() {
+    for device in PRESET_NAMES {
+        for seed in SEEDS {
+            let run = || {
+                let (est, mut phase, kv) = setup(device);
+                let wl = generate_workload(&workload_cfg(seed));
+                simulate(&est, &mut phase, &kv, &wl, &SimConfig::default())
+                    .to_json()
+                    .dump()
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "{device} seed {seed}: JSON drifted across runs");
+            assert!(a.contains("\"requests_detail\""));
+        }
+    }
+}
+
+/// The per-preset phase table regenerates byte-identically against the
+/// checked-in golden produced by the independent Python replica
+/// (`tests/fixtures/gen_llm_golden.py`) — prefill/decode costs, both
+/// roofline verdicts and the KV bytes-per-token for all four presets.
+#[test]
+fn phase_csv_matches_the_checked_in_golden() {
+    let module = parse_module(&fixture_text()).unwrap();
+    assert_eq!(
+        phase_csv(&module),
+        include_str!("fixtures/llm_phases.csv"),
+        "phase table drifted from the golden fixture"
+    );
+}

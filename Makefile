@@ -15,7 +15,7 @@
 #                    phases, KV-cache residency, continuous batching)
 #   bench-llm        the decoder-block serving sweep over every preset
 
-.PHONY: build test bench bench-schedule bench-devices bench-estimator bench-serve bench-llm devices trace artifacts fmt clippy doc check
+.PHONY: build test bench bench-schedule bench-devices bench-estimator bench-serve bench-llm bench-check devices trace artifacts fmt clippy doc check
 
 build:
 	cargo build --release
@@ -59,6 +59,12 @@ bench-serve: build
 bench-llm: build
 	cargo run --release -- bench-llm --publish
 
+# All three published-benchmark freshness gates (BENCH_estimator /
+# BENCH_serve / BENCH_llm) in one pass, with the perf-trajectory table —
+# the single CI step that replaced the three per-bench checks.
+bench-check: build
+	cargo run --release -- bench --check-all
+
 # Round-trip every checked-in device file through the loader, verify the
 # preset-named ones match the registry, and smoke the compare path
 # against all presets (the CI device job).
@@ -90,10 +96,8 @@ doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # The CI gate: format, lints, docs, the full test suite, and the
-# published bench freshness gates.
-check: fmt clippy doc test
-	cargo run --release -- bench-serve --check
-	cargo run --release -- bench-llm --check
+# published bench freshness gates (all three in one pass).
+check: fmt clippy doc test bench-check
 
 # AOT-compile the JAX/Pallas workloads into artifacts/ (requires jax).
 # Rust tests that consume artifacts self-skip when this has not run.

@@ -1,0 +1,81 @@
+//! Schedule-template reuse micro-benchmark: from-scratch prompt-length
+//! re-costing (module rewrite + full pipeline rebuild per length)
+//! versus one captured [`ScheduleTemplate`] replayed per length.
+//!
+//! This is the core loop behind `PhaseModel::prefill_us` and therefore
+//! the `bench-llm` serving throughput. The bench asserts bit-identity
+//! between the two paths before reporting the speedup, so a regression
+//! in exactness fails loudly here as well as in the invariant suite.
+//! Compiled by the CI "Benches compile" step; run manually with
+//! `cargo bench --bench llm_reuse`.
+
+use std::time::Instant;
+
+use scalesim_tpu::device::DeviceSpec;
+use scalesim_tpu::frontend::parse_module;
+use scalesim_tpu::graph::{EngineConfig, ScheduleTemplate};
+use scalesim_tpu::inference::{rewrite_seq, sequence_dim};
+use scalesim_tpu::memory::{schedule_module_memory, MemoryConfig};
+use scalesim_tpu::sweep::sweep_estimator;
+
+const FIXTURE: &str = include_str!("../tests/fixtures/decoder_block.mlir");
+const PROMPTS: &[usize] = &[1, 16, 32, 64, 96, 128, 192, 256, 384, 512, 768, 1024];
+const ITERS: usize = 20;
+
+fn main() {
+    let module = parse_module(FIXTURE).expect("fixture parses");
+    let spec = DeviceSpec::preset("tpu-v4").expect("registered preset");
+    let est = sweep_estimator(&spec);
+    let engine = EngineConfig::for_device(est.device());
+    let memory = MemoryConfig::new(est.hbm_bytes_per_us(), Some(est.device().vmem_bytes));
+    let seq = sequence_dim(&module).expect("fixture has a sequence extent");
+
+    // From scratch: clone-and-rewrite the module, then re-classify,
+    // re-estimate, re-build the DAG and re-expand the timeline — per
+    // prompt length, every iteration.
+    let start = Instant::now();
+    let mut scratch_sum = 0.0_f64;
+    for _ in 0..ITERS {
+        for &p in PROMPTS {
+            let m = rewrite_seq(&module, seq, p);
+            scratch_sum += schedule_module_memory(&est, &m, engine, &memory).makespan_us();
+        }
+    }
+    let scratch_s = start.elapsed().as_secs_f64();
+
+    // Template: capture once, replay per prompt length (shape-column
+    // rewrite + one batched estimate + one schedule replay).
+    let template = ScheduleTemplate::capture(&module, engine, memory).expect("template captures");
+    let start = Instant::now();
+    let mut reuse_sum = 0.0_f64;
+    for _ in 0..ITERS {
+        for &p in PROMPTS {
+            reuse_sum += template.recost_seq(&est, seq, p).makespan_us();
+        }
+    }
+    let reuse_s = start.elapsed().as_secs_f64();
+
+    assert_eq!(
+        scratch_sum.to_bits(),
+        reuse_sum.to_bits(),
+        "template re-cost drifted from the from-scratch pipeline"
+    );
+
+    let n = (ITERS * PROMPTS.len()) as f64;
+    println!(
+        "llm_reuse: {} prompt lengths x {ITERS} iters on {} ({} leaf ops)",
+        PROMPTS.len(),
+        spec.name,
+        template.leaf_count()
+    );
+    println!(
+        "  from-scratch: {:>10.1} recosts/s  ({scratch_s:.3}s)",
+        n / scratch_s
+    );
+    println!(
+        "  template:     {:>10.1} recosts/s  ({reuse_s:.3}s, {} replays)",
+        n / reuse_s,
+        template.template_hits()
+    );
+    println!("  speedup: {:.2}x (bit-identical results)", scratch_s / reuse_s);
+}

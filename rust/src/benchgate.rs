@@ -1,0 +1,141 @@
+//! The aggregated benchmark freshness gate: `bench --check-all`.
+//!
+//! The repo publishes three benchmark artifacts at its root, each
+//! stamped with an FNV-1a fingerprint of the sources that produced it:
+//!
+//! * `BENCH_estimator.json` — batched-estimator micro-benchmarks
+//!   (`benches/estimator_batch.rs`, re-run via `make bench-estimator`);
+//! * `BENCH_serve.json` — the concurrent TCP serve load generator
+//!   ([`crate::coordinator::bench_serve`], `make bench-serve`);
+//! * `BENCH_llm.json` — the LLM serving simulator sweep
+//!   ([`crate::inference::bench`], `make bench-llm`).
+//!
+//! [`check_all`] runs all three gates in one pass (CI used to run them
+//! as three separate steps) and, when every artifact is fresh, prints a
+//! perf-trajectory table of the headline number each artifact carries,
+//! so a reviewer sees the published performance state of the repo at a
+//! glance.
+
+use anyhow::{bail, Context, Result};
+
+use crate::report::Table;
+use crate::util::json::Json;
+
+/// The estimator bench source, fingerprinted exactly like the bench
+/// binary fingerprints itself (FNV-1a over its own bytes).
+const ESTIMATOR_BENCH_SOURCE: &str = include_str!("../benches/estimator_batch.rs");
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// Read and parse one published benchmark artifact, verifying its
+/// fingerprint against `current`.
+fn load_checked(file: &str, current: &str, rerun: &str) -> Result<Json> {
+    let path = repo_root().join(file);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("{file} missing at {}; run `{rerun}`", path.display()))?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+    let published = json
+        .get("source_fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("{file} lacks source_fingerprint"))?;
+    if published != current {
+        bail!(
+            "{file} is stale: published fingerprint {published} != bench source {current}; \
+             re-run `{rerun}` and commit the result"
+        );
+    }
+    Ok(json)
+}
+
+fn num(json: &Json, key: &str) -> f64 {
+    json.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Run the three published-benchmark freshness gates in one pass and
+/// print the perf-trajectory table. Fails on the first missing or stale
+/// artifact with the same message the per-bench `--check` flags emit.
+pub fn check_all() -> Result<()> {
+    let estimator = load_checked(
+        "BENCH_estimator.json",
+        &format!("{:016x}", fnv1a(ESTIMATOR_BENCH_SOURCE.as_bytes())),
+        "make bench-estimator",
+    )?;
+    let serve = load_checked(
+        "BENCH_serve.json",
+        &crate::coordinator::bench_serve::source_fingerprint(),
+        "make bench-serve",
+    )?;
+    let llm = load_checked(
+        "BENCH_llm.json",
+        &crate::inference::bench::source_fingerprint(),
+        "make bench-llm",
+    )?;
+
+    let mut t = Table::new(&["artifact", "headline", "value", "fingerprint"]);
+    t.row(&[
+        "BENCH_estimator.json".into(),
+        "speedup_warm".into(),
+        format!("{:.2}x", num(&estimator, "speedup_warm")),
+        estimator
+            .get("source_fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .into(),
+    ]);
+    t.row(&[
+        "BENCH_serve.json".into(),
+        "throughput_rps".into(),
+        format!("{:.0}", num(&serve, "throughput_rps")),
+        serve
+            .get("source_fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .into(),
+    ]);
+    t.row(&[
+        "BENCH_llm.json".into(),
+        "sim_requests_per_sec".into(),
+        format!("{:.0}", num(&llm, "sim_requests_per_sec")),
+        llm.get("source_fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .into(),
+    ]);
+    println!("all published benchmarks are fresh:");
+    println!("{}", t.markdown());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_the_bench_binary_idiom() {
+        // FNV-1a of the empty string is the offset basis.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        // Stable over the bench source (the actual gate value).
+        assert_eq!(
+            fnv1a(ESTIMATOR_BENCH_SOURCE.as_bytes()),
+            fnv1a(ESTIMATOR_BENCH_SOURCE.as_bytes())
+        );
+    }
+
+    #[test]
+    fn check_all_passes_on_the_checked_in_artifacts() {
+        // The three artifacts are committed and must stay fresh — this
+        // is the same gate CI runs via `bench --check-all`.
+        check_all().expect("published artifacts must be fresh");
+    }
+}

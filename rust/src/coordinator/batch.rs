@@ -50,7 +50,7 @@ use super::estimator::{EstimateSource, Estimator, ModelEstimate, OpEstimate};
 /// One step of the lowered entry-function walk. Replaying the events in
 /// order reproduces the scalar recursion's program order (and therefore
 /// its floating-point accumulation order) exactly.
-enum LowerEvent<'m> {
+pub(crate) enum LowerEvent<'m> {
     /// Op table row `.0` is estimated in place.
     Leaf(u32),
     /// A `call` op entering its callee: everything until the matching
@@ -200,82 +200,106 @@ impl<'m> OpTable<'m> {
     /// Replay the lowering events over the per-leaf costs, rebuilding
     /// the estimate in the scalar walk's exact accumulation order.
     fn assemble(&self, costs: Vec<CachedCost>) -> ModelEstimate {
-        let empty = |name: &str| ModelEstimate {
-            module_name: name.to_string(),
-            ops: Vec::new(),
-            total_us: 0.0,
-            systolic_us: 0.0,
-            elementwise_us: 0.0,
-            other_us: 0.0,
-            covered_ops: 0,
-            total_costed_ops: 0,
-        };
-        let mut costs: Vec<Option<CachedCost>> = costs.into_iter().map(Some).collect();
-        let mut root = empty(&self.module_name);
-        let mut stack: Vec<(usize, &str, ModelEstimate)> = Vec::new();
-        for ev in &self.events {
-            match ev {
-                LowerEvent::Leaf(leaf) => {
-                    let i = *leaf as usize;
-                    let row = costs[i]
-                        .take()
-                        .expect("each leaf is costed exactly once")
-                        .into_estimate(self.indices[i], self.names[i]);
-                    let est = stack.last_mut().map(|(_, _, e)| e).unwrap_or(&mut root);
-                    match &self.classes[i] {
-                        OpClass::SystolicGemm { .. } | OpClass::SystolicConv { .. } => {
-                            est.systolic_us += row.latency_us;
-                            est.covered_ops += 1;
-                            est.total_costed_ops += 1;
-                        }
-                        OpClass::Elementwise { .. } => {
-                            est.elementwise_us += row.latency_us;
-                            if matches!(
-                                row.source,
-                                EstimateSource::Learned | EstimateSource::LearnedProxy(_)
-                            ) {
-                                est.covered_ops += 1;
-                            }
-                            est.total_costed_ops += 1;
-                        }
-                        // Free ops cost nothing; collectives are free on
-                        // a single chip (the distributed estimator costs
-                        // them against a real slice).
-                        OpClass::Free | OpClass::Collective { .. } => {}
-                        _ => {
-                            est.other_us += row.latency_us;
-                            est.total_costed_ops += 1;
-                        }
+        assemble_events(
+            &self.module_name,
+            &self.events,
+            &self.indices,
+            &self.names,
+            &self.classes,
+            costs,
+        )
+    }
+}
+
+/// Replay a lowering event stream over per-leaf costs, rebuilding the
+/// [`ModelEstimate`] in the scalar walk's exact program order — and
+/// therefore its exact floating-point accumulation order. Shared by
+/// [`OpTable::assemble`] and the schedule template's re-cost path
+/// ([`crate::graph::reuse`]): the two paths are bit-identical because
+/// they run this very function, not replicas of it.
+pub(crate) fn assemble_events(
+    module_name: &str,
+    events: &[LowerEvent<'_>],
+    indices: &[usize],
+    names: &[&str],
+    classes: &[OpClass],
+    costs: Vec<CachedCost>,
+) -> ModelEstimate {
+    let empty = |name: &str| ModelEstimate {
+        module_name: name.to_string(),
+        ops: Vec::new(),
+        total_us: 0.0,
+        systolic_us: 0.0,
+        elementwise_us: 0.0,
+        other_us: 0.0,
+        covered_ops: 0,
+        total_costed_ops: 0,
+    };
+    let mut costs: Vec<Option<CachedCost>> = costs.into_iter().map(Some).collect();
+    let mut root = empty(module_name);
+    let mut stack: Vec<(usize, &str, ModelEstimate)> = Vec::new();
+    for ev in events {
+        match ev {
+            LowerEvent::Leaf(leaf) => {
+                let i = *leaf as usize;
+                let row = costs[i]
+                    .take()
+                    .expect("each leaf is costed exactly once")
+                    .into_estimate(indices[i], names[i]);
+                let est = stack.last_mut().map(|(_, _, e)| e).unwrap_or(&mut root);
+                match &classes[i] {
+                    OpClass::SystolicGemm { .. } | OpClass::SystolicConv { .. } => {
+                        est.systolic_us += row.latency_us;
+                        est.covered_ops += 1;
+                        est.total_costed_ops += 1;
                     }
-                    est.total_us += row.latency_us;
-                    est.ops.push(row);
+                    OpClass::Elementwise { .. } => {
+                        est.elementwise_us += row.latency_us;
+                        if matches!(
+                            row.source,
+                            EstimateSource::Learned | EstimateSource::LearnedProxy(_)
+                        ) {
+                            est.covered_ops += 1;
+                        }
+                        est.total_costed_ops += 1;
+                    }
+                    // Free ops cost nothing; collectives are free on
+                    // a single chip (the distributed estimator costs
+                    // them against a real slice).
+                    OpClass::Free | OpClass::Collective { .. } => {}
+                    _ => {
+                        est.other_us += row.latency_us;
+                        est.total_costed_ops += 1;
+                    }
                 }
-                LowerEvent::CallBegin { index, callee } => {
-                    stack.push((*index, callee, empty(&self.module_name)));
-                }
-                LowerEvent::CallEnd => {
-                    let (index, callee, sub) = stack.pop().expect("balanced call events");
-                    let est = stack.last_mut().map(|(_, _, e)| e).unwrap_or(&mut root);
-                    est.total_us += sub.total_us;
-                    est.systolic_us += sub.systolic_us;
-                    est.elementwise_us += sub.elementwise_us;
-                    est.other_us += sub.other_us;
-                    est.covered_ops += sub.covered_ops;
-                    est.total_costed_ops += sub.total_costed_ops;
-                    est.ops.push(OpEstimate {
-                        index,
-                        op_name: format!("call @{callee}"),
-                        source: EstimateSource::SystolicCalibrated,
-                        cycles: None,
-                        latency_us: sub.total_us,
-                        note: format!("inlined {} ops", sub.ops.len()),
-                    });
-                }
+                est.total_us += row.latency_us;
+                est.ops.push(row);
+            }
+            LowerEvent::CallBegin { index, callee } => {
+                stack.push((*index, callee, empty(module_name)));
+            }
+            LowerEvent::CallEnd => {
+                let (index, callee, sub) = stack.pop().expect("balanced call events");
+                let est = stack.last_mut().map(|(_, _, e)| e).unwrap_or(&mut root);
+                est.total_us += sub.total_us;
+                est.systolic_us += sub.systolic_us;
+                est.elementwise_us += sub.elementwise_us;
+                est.other_us += sub.other_us;
+                est.covered_ops += sub.covered_ops;
+                est.total_costed_ops += sub.total_costed_ops;
+                est.ops.push(OpEstimate {
+                    index,
+                    op_name: format!("call @{callee}"),
+                    source: EstimateSource::SystolicCalibrated,
+                    cycles: None,
+                    latency_us: sub.total_us,
+                    note: format!("inlined {} ops", sub.ops.len()),
+                });
             }
         }
-        debug_assert!(stack.is_empty(), "unbalanced call events");
-        root
     }
+    debug_assert!(stack.is_empty(), "unbalanced call events");
+    root
 }
 
 /// A group of elementwise cache misses sharing one learned model:

@@ -351,6 +351,18 @@ impl Estimator {
         self.hbm_bytes_per_us
     }
 
+    /// Replace this estimator's memo cache with a shared one — the
+    /// fan-out idiom: per-worker estimators built independently (e.g.
+    /// one per device preset) pool their entries in a single
+    /// [`ShardedCache`]. Safe by construction: every entry is keyed by
+    /// the per-estimator cost-model fingerprint, so workers can never
+    /// alias each other's costs, and every cached value is a pure
+    /// function of its key, so results are independent of cache state.
+    pub fn with_shared_cache(mut self, cache: Arc<ShardedCache>) -> Estimator {
+        self.cache = cache;
+        self
+    }
+
     /// Replace the active systolic config (the asset loader installs
     /// the exact config the saved calibration was simulated with). The
     /// cache identity follows the config, so entries memoised by other

@@ -11,7 +11,11 @@
 //!   distributed compute+ICI pair, the full TPU set);
 //! * [`schedule`] — the list scheduler placing costed ops onto engines;
 //! * [`analysis`] — critical path, per-op slack, per-engine busy/idle
-//!   breakdown and the serialized timeline.
+//!   breakdown and the serialized timeline;
+//! * [`reuse`] — build-once / re-cost-many schedule templates
+//!   ([`ScheduleTemplate`]): capture the topology + residency structure
+//!   once, replay it over new per-op costs bit-identically to a
+//!   from-scratch build.
 //!
 //! Invariants (property-tested in `tests/graph_schedule.rs`):
 //! `critical_path_us <= makespan_us <= unfused sum`, and the serialized
@@ -20,6 +24,7 @@
 pub mod analysis;
 pub mod dag;
 pub mod engine;
+pub mod reuse;
 pub mod schedule;
 
 pub use analysis::{
@@ -27,4 +32,5 @@ pub use analysis::{
 };
 pub use dag::{producer_map, DepGraph};
 pub use engine::{Engine, EngineConfig};
+pub use reuse::{OpCost, ScheduleTemplate};
 pub use schedule::{place, schedule_estimate, schedule_module, Placement, SchedNode};

@@ -1,0 +1,328 @@
+//! Build-once / re-cost-many schedule templates.
+//!
+//! The scheduling pipeline used to re-derive everything from scratch on
+//! every call: `PhaseModel::prefill_us` paid a full module clone
+//! (`rewrite_seq`), a fresh estimator walk, a `DepGraph` build, a list
+//! schedule and a DMA-timeline expansion for **every distinct prompt
+//! length** — even though the DAG topology, SSA structure, engine
+//! assignment rules and residency key-set are identical across sequence
+//! rewrites. A [`ScheduleTemplate`] splits that pipeline:
+//!
+//! * **Capture** (once per module): the lowering event stream of the
+//!   batched estimator ([`crate::coordinator::OpTable`]) — leaf order,
+//!   inlined-`call` bracket structure — plus the memory timeline's
+//!   [`TimelineShape`] (deduplicated operand/result id lists, SSA
+//!   predecessor edges, the value-registration sequence) and the native
+//!   per-leaf [`OpClass`] column.
+//! * **Re-cost** (per prompt length / per cost vector): rewrite the
+//!   per-leaf *shape column* ([`rewrite_op`] — no module clone), resolve
+//!   all costs in **one** batched
+//!   [`estimate_classes`](crate::coordinator::Estimator::estimate_classes)
+//!   call, replay the event stream through the shared
+//!   `assemble_events`, and replay the residency walk through the
+//!   shared `price_shape`.
+//!
+//! **Exactness.** Re-cost results are *bit-identical* to the
+//! from-scratch path, not approximately equal, because every stage is
+//! the **same code**, not a replica:
+//!
+//! * `rewrite_seq(module, a, b)` is definitionally [`rewrite_op`]
+//!   mapped over every op, so classifying the rewritten shape column
+//!   equals classifying the rewritten module;
+//! * cached cost values are pure functions of their shape key
+//!   (independent of cache state), so one batched `estimate_classes`
+//!   resolves the exact costs the from-scratch estimator walk would;
+//! * row assembly runs the same event-replay fold (f64 addition is not
+//!   associative — sharing the fold is what makes the totals exact);
+//! * the residency walk replays the captured [`TimelineShape`] through
+//!   the very walk `schedule_estimate_memory` runs (that function is
+//!   itself capture + one replay).
+//!
+//! `tests/reuse_invariants.rs` pins this for every device preset ×
+//! every `.mlir` fixture × a prompt-length sweep, plus interleaved
+//! re-costs across devices and prompt lengths in shuffled call orders.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::batch::{assemble_events, LowerEvent};
+use crate::coordinator::{CachedCost, Estimator, ModelEstimate};
+use crate::frontend::classify::{classify, OpClass};
+use crate::frontend::opinfo::{ModuleInfo, OpInfo};
+use crate::inference::lower::{rewrite_op, rewrite_type};
+use crate::memory::timeline::{call_engine, price_shape};
+use crate::memory::{MemoryConfig, MemorySchedule, TimelineShape};
+
+use super::engine::{Engine, EngineConfig};
+use super::schedule::is_inlined_call;
+
+/// One resolved per-leaf cost, as the batched estimator returns it
+/// (source, optional cycle count, latency, note). [`ScheduleTemplate::recost`]
+/// replays the schedule over a slice of these.
+pub type OpCost = CachedCost;
+
+/// The owned mirror of the batched estimator's lowering event stream
+/// (the borrowed stream ties to a module's lifetime; the template must
+/// outlive the module it was captured from).
+enum OwnedEvent {
+    /// Leaf column `.0` is estimated in place.
+    Leaf(u32),
+    /// A `call` op entering its callee.
+    CallBegin {
+        /// Index of the call op within its function.
+        index: usize,
+        /// Callee name (rendered as `call @callee`).
+        callee: String,
+    },
+    /// Close the innermost open call.
+    CallEnd,
+}
+
+/// A build-once schedule template: everything about one module's
+/// scheduling pipeline that survives a change of per-op costs — node
+/// order, edge lists, engine-assignment structure, DMA sub-node
+/// structure and the residency touch sequence. Re-costing through it
+/// skips re-parsing, re-classifying and re-allocating entirely; see the
+/// [module docs](self) for the exactness argument.
+pub struct ScheduleTemplate {
+    config: EngineConfig,
+    memory: MemoryConfig,
+    /// The memory timeline's expand-once half.
+    shape: TimelineShape,
+    /// Leaf ops cloned in lowering order (entry ops at depth 0, inlined
+    /// callee ops inside their call brackets).
+    leaves: Vec<OpInfo>,
+    /// SoA column: op index within its function, per leaf.
+    indices: Vec<usize>,
+    /// The lowering walk (leaves + call brackets) in program order.
+    events: Vec<OwnedEvent>,
+    /// Entry-op position → leaf column (`None` for folded `call` ops).
+    entry_leaf: Vec<Option<usize>>,
+    /// Per-leaf class column at the captured (native) extents.
+    native_classes: Vec<OpClass>,
+    /// Per-value byte column at the captured extents.
+    native_bytes: Vec<u64>,
+    /// Completed re-cost replays (the CI smoke asserts this is > 0 on
+    /// the serving path).
+    hits: AtomicU64,
+}
+
+fn lower_callee(
+    module: &ModuleInfo,
+    func_name: &str,
+    depth: usize,
+    events: &mut Vec<OwnedEvent>,
+    leaves: &mut Vec<OpInfo>,
+) {
+    let Some(func) = module.funcs.iter().find(|f| f.name == func_name) else {
+        return;
+    };
+    for op in &func.ops {
+        // Follow calls into private sub-functions (depth-limited,
+        // mirroring the batched lowering exactly).
+        if (op.short_name() == "call" || op.op_name == "func.call") && depth < 4 {
+            if let Some(callee) = &op.callee {
+                events.push(OwnedEvent::CallBegin {
+                    index: op.index,
+                    callee: callee.clone(),
+                });
+                lower_callee(module, callee, depth + 1, events, leaves);
+                events.push(OwnedEvent::CallEnd);
+                continue;
+            }
+        }
+        events.push(OwnedEvent::Leaf(leaves.len() as u32));
+        leaves.push(op.clone());
+    }
+}
+
+impl ScheduleTemplate {
+    /// Capture a template from one lowering of `module` under an engine
+    /// configuration and memory model. `None` when the module has no
+    /// entry function.
+    pub fn capture(
+        module: &ModuleInfo,
+        config: EngineConfig,
+        memory: MemoryConfig,
+    ) -> Option<ScheduleTemplate> {
+        let shape = TimelineShape::capture(module)?;
+        let entry = module.entry()?;
+        let mut events: Vec<OwnedEvent> = Vec::new();
+        let mut leaves: Vec<OpInfo> = Vec::new();
+        let mut entry_leaf: Vec<Option<usize>> = Vec::with_capacity(entry.ops.len());
+        for op in &entry.ops {
+            if is_inlined_call(op) {
+                let callee = op.callee.clone().expect("is_inlined_call implies a callee");
+                events.push(OwnedEvent::CallBegin {
+                    index: op.index,
+                    callee: callee.clone(),
+                });
+                lower_callee(module, &callee, 1, &mut events, &mut leaves);
+                events.push(OwnedEvent::CallEnd);
+                entry_leaf.push(None);
+            } else {
+                entry_leaf.push(Some(leaves.len()));
+                events.push(OwnedEvent::Leaf(leaves.len() as u32));
+                leaves.push(op.clone());
+            }
+        }
+        let indices: Vec<usize> = leaves.iter().map(|op| op.index).collect();
+        let native_classes: Vec<OpClass> = leaves.iter().map(classify).collect();
+        let native_bytes = shape.native_bytes();
+        Some(ScheduleTemplate {
+            config,
+            memory,
+            shape,
+            leaves,
+            indices,
+            events,
+            entry_leaf,
+            native_classes,
+            native_bytes,
+            hits: AtomicU64::new(0),
+        })
+    }
+
+    /// The engine configuration the template schedules onto.
+    pub fn engine_config(&self) -> EngineConfig {
+        self.config
+    }
+
+    /// The memory model (HBM rate + on-chip budget) replays price with.
+    pub fn memory_config(&self) -> &MemoryConfig {
+        &self.memory
+    }
+
+    /// Number of estimable leaf ops (inlined callee ops included).
+    pub fn leaf_count(&self) -> usize {
+        self.leaves.len()
+    }
+
+    /// Completed re-cost replays since capture.
+    pub fn template_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// The per-leaf class column at the captured extents. Feed it to
+    /// [`Estimator::estimate_classes`] to resolve a cost slice for
+    /// [`ScheduleTemplate::recost`] (externally scheduled re-costs, the
+    /// batch estimator's sweep harness, tests).
+    pub fn native_classes(&self) -> &[OpClass] {
+        &self.native_classes
+    }
+
+    /// Replay the schedule over externally resolved per-leaf costs at
+    /// the captured extents. `costs` aligns 1:1 with the leaf columns
+    /// (one batched [`Estimator::estimate_classes`] call over
+    /// the native class column produces exactly this slice).
+    pub fn recost(&self, costs: &[OpCost]) -> MemorySchedule {
+        self.replay(&self.native_classes, costs.to_vec(), &self.native_bytes)
+    }
+
+    /// Resolve costs through `est` (one batched `estimate_classes`
+    /// probe) and replay at the captured extents. Bit-identical to
+    /// `schedule_module_memory(est, module, config, memory)` — pinned
+    /// by `tests/reuse_invariants.rs` for every preset × fixture.
+    pub fn recost_native(&self, est: &Estimator) -> MemorySchedule {
+        let costs = est.estimate_classes(&self.native_classes);
+        self.replay(&self.native_classes, costs, &self.native_bytes)
+    }
+
+    /// The sequence-rewrite re-cost: every tensor dimension equal to
+    /// `from` rewritten to `to` (the decode/prefill lowering of
+    /// [`crate::inference::rewrite_seq`]), as a per-leaf shape-column
+    /// rewrite + one batched estimate + one replay — no module clone.
+    /// Bit-identical to `schedule_module_memory` over
+    /// `rewrite_seq(module, from, to)`.
+    pub fn recost_seq(&self, est: &Estimator, from: usize, to: usize) -> MemorySchedule {
+        if from == to {
+            // `rewrite_seq` is a no-op clone here; skip the column
+            // rewrite (the rewritten classes would equal the native
+            // ones bit for bit).
+            return self.recost_native(est);
+        }
+        let classes: Vec<OpClass> = self
+            .leaves
+            .iter()
+            .map(|op| classify(&rewrite_op(op, from, to)))
+            .collect();
+        let bytes: Vec<u64> = self
+            .shape
+            .values
+            .iter()
+            .map(|v| {
+                v.ty.as_ref()
+                    .map(|t| rewrite_type(t, from, to).size_bytes())
+                    .unwrap_or(0)
+            })
+            .collect();
+        let costs = est.estimate_classes(&classes);
+        self.replay(&classes, costs, &bytes)
+    }
+
+    /// The assembled per-op estimate at the captured extents — the
+    /// 1-chip regression surface: bit-identical to
+    /// [`Estimator::estimate_module`], row by row
+    /// (pinned in `tests/reuse_invariants.rs`).
+    pub fn estimate_native(&self, est: &Estimator) -> ModelEstimate {
+        let costs = est.estimate_classes(&self.native_classes);
+        self.assemble(&self.native_classes, costs)
+    }
+
+    /// Replay the lowering event stream over per-leaf costs through the
+    /// shared `assemble_events` fold.
+    fn assemble(&self, classes: &[OpClass], costs: Vec<CachedCost>) -> ModelEstimate {
+        debug_assert_eq!(classes.len(), self.leaves.len());
+        debug_assert_eq!(costs.len(), self.leaves.len());
+        let names: Vec<&str> = self.leaves.iter().map(|op| op.op_name.as_str()).collect();
+        let events: Vec<LowerEvent<'_>> = self
+            .events
+            .iter()
+            .map(|e| match e {
+                OwnedEvent::Leaf(l) => LowerEvent::Leaf(*l),
+                OwnedEvent::CallBegin { index, callee } => LowerEvent::CallBegin {
+                    index: *index,
+                    callee: callee.as_str(),
+                },
+                OwnedEvent::CallEnd => LowerEvent::CallEnd,
+            })
+            .collect();
+        assemble_events(
+            &self.shape.module_name,
+            &events,
+            &self.indices,
+            &names,
+            classes,
+            costs,
+        )
+    }
+
+    /// Assemble rows, derive per-entry-op engines from the class
+    /// column, and replay the residency walk.
+    fn replay(&self, classes: &[OpClass], costs: Vec<CachedCost>, bytes: &[u64]) -> MemorySchedule {
+        let report = self.assemble(classes, costs);
+        let engines: Vec<Option<Engine>> = self
+            .shape
+            .ops
+            .iter()
+            .zip(&self.entry_leaf)
+            .map(|(sop, leaf)| {
+                if sop.inlined_call {
+                    call_engine(self.config)
+                } else {
+                    let l = leaf.expect("non-call entry ops map to a leaf column");
+                    self.config.engine_of(&classes[l])
+                }
+            })
+            .collect();
+        let out = price_shape(
+            &self.shape,
+            &report.ops,
+            &engines,
+            self.config,
+            &self.memory,
+            bytes,
+        );
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+}

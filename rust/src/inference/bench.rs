@@ -11,10 +11,12 @@
 //! idiom as `BENCH_serve.json` / `BENCH_estimator.json`, wired into
 //! `make check` and CI.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::{default_workers, parallel_map, ShardedCache};
 use crate::device::{DeviceSpec, PRESET_NAMES};
 use crate::frontend::parse_module;
 use crate::sweep::sweep_estimator;
@@ -59,6 +61,10 @@ pub struct LlmBenchOptions {
     pub seed: u64,
     /// Continuous-batching limit.
     pub max_batch: usize,
+    /// Worker threads for the preset fan-out (`0` = auto-detect).
+    /// Results are byte-identical for every worker count — presets are
+    /// independent simulations joined in preset order.
+    pub workers: usize,
 }
 
 impl Default for LlmBenchOptions {
@@ -67,6 +73,7 @@ impl Default for LlmBenchOptions {
             requests: 64,
             seed: 42,
             max_batch: 8,
+            workers: 0,
         }
     }
 }
@@ -100,6 +107,9 @@ pub struct LlmBenchReport {
     /// Simulated requests per wall second (the bench axis: simulator
     /// speed itself).
     pub sim_requests_per_sec: f64,
+    /// Schedule-template re-cost replays across all presets (the reuse
+    /// path doing the work the from-scratch pipeline used to redo).
+    pub template_hits: u64,
 }
 
 impl LlmBenchReport {
@@ -119,6 +129,10 @@ impl LlmBenchReport {
                 r.device, r.tokens_per_sec, r.ttft_p50_us, r.tpot_mean_us, r.kv_spill_events
             ));
         }
+        s.push_str(&format!(
+            "  reuse: {} schedule-template replays across presets\n",
+            self.template_hits
+        ));
         s
     }
 
@@ -131,6 +145,7 @@ impl LlmBenchReport {
             .set("max_batch", Json::Num(self.options.max_batch as f64))
             .set("elapsed_s", Json::Num(self.elapsed_s))
             .set("sim_requests_per_sec", Json::Num(self.sim_requests_per_sec))
+            .set("template_hits", Json::Num(self.template_hits as f64))
             .set("source_fingerprint", Json::Str(source_fingerprint()));
         let rows: Vec<Json> = self
             .rows
@@ -161,6 +176,12 @@ impl LlmBenchReport {
 }
 
 /// Run the fixed decoder-block serving sweep over every preset.
+///
+/// Presets fan out over [`parallel_map`] (one independent simulation
+/// per worker, all sharing one shape cache — cached cost values are
+/// pure functions of their device-fingerprinted keys, so sharing never
+/// perturbs a row) and join in [`PRESET_NAMES`] order; the device rows
+/// are byte-identical to the serial walk for every worker count.
 pub fn run_llm_bench(options: &LlmBenchOptions) -> Result<LlmBenchReport> {
     let module = parse_module(FIXTURE).context("parsing decoder_block fixture")?;
     let workload = generate_workload(&WorkloadConfig {
@@ -168,11 +189,17 @@ pub fn run_llm_bench(options: &LlmBenchOptions) -> Result<LlmBenchReport> {
         seed: options.seed,
         ..WorkloadConfig::default()
     });
+    let workers = if options.workers == 0 {
+        default_workers()
+    } else {
+        options.workers
+    };
+    let shared = Arc::new(ShardedCache::new());
     let start = Instant::now();
-    let mut rows = Vec::new();
-    for name in PRESET_NAMES {
+    let results = parallel_map(&PRESET_NAMES, workers, |name| -> Result<(LlmBenchRow, u64)> {
+        let name: &str = name;
         let spec = DeviceSpec::preset(name).expect("registered preset");
-        let est = sweep_estimator(&spec);
+        let est = sweep_estimator(&spec).with_shared_cache(Arc::clone(&shared));
         let mut phase = PhaseModel::new(&est, &module)
             .ok_or_else(|| anyhow::anyhow!("fixture has no sequence extent"))?;
         let kv = KvCacheSpec::infer(&module, 1)
@@ -182,16 +209,24 @@ pub fn run_llm_bench(options: &LlmBenchOptions) -> Result<LlmBenchReport> {
             kv_capacity: Some(spec.vmem_bytes),
         };
         let report = simulate(&est, &mut phase, &kv, &workload, &cfg);
-        rows.push(LlmBenchRow {
+        let row = LlmBenchRow {
             device: name.to_string(),
             tokens_per_sec: report.tokens_per_sec,
             ttft_p50_us: report.ttft_p50_us(),
             tpot_mean_us: report.tpot_mean_us(),
             makespan_us: report.makespan_us,
             kv_spill_events: report.kv_spill_events,
-        });
-    }
+        };
+        Ok((row, report.template_hits))
+    });
     let elapsed_s = start.elapsed().as_secs_f64();
+    let mut rows = Vec::with_capacity(results.len());
+    let mut template_hits = 0u64;
+    for result in results {
+        let (row, hits) = result?;
+        rows.push(row);
+        template_hits += hits;
+    }
     let total = options.requests * PRESET_NAMES.len();
     Ok(LlmBenchReport {
         options: *options,
@@ -202,6 +237,7 @@ pub fn run_llm_bench(options: &LlmBenchOptions) -> Result<LlmBenchReport> {
         } else {
             0.0
         },
+        template_hits,
     })
 }
 
@@ -260,6 +296,10 @@ mod tests {
             assert!(row.tokens_per_sec > 0.0, "{}", row.device);
             assert!(row.ttft_p50_us > 0.0);
         }
+        assert!(
+            report.template_hits > 0,
+            "the serving path must run through the schedule template"
+        );
         let j = report.to_json();
         assert_eq!(j.req_str("source_fingerprint").unwrap(), source_fingerprint());
     }

@@ -27,7 +27,12 @@ pub fn sequence_dim(module: &ModuleInfo) -> Option<usize> {
         .copied()
 }
 
-fn rewrite_type(t: &TensorType, from: usize, to: usize) -> TensorType {
+/// Rewrite every dimension equal to `from` in `t` to `to`. The
+/// per-type primitive behind [`rewrite_seq`]; exposed so the schedule
+/// template ([`crate::graph::reuse`]) can re-derive per-value byte
+/// footprints for a new prompt length with the exact same arithmetic
+/// as a full module rewrite.
+pub fn rewrite_type(t: &TensorType, from: usize, to: usize) -> TensorType {
     TensorType::new(
         t.dims
             .iter()
@@ -37,7 +42,12 @@ fn rewrite_type(t: &TensorType, from: usize, to: usize) -> TensorType {
     )
 }
 
-fn rewrite_op(op: &OpInfo, from: usize, to: usize) -> OpInfo {
+/// Clone one op with its operand and result types run through
+/// [`rewrite_type`]. [`rewrite_seq`] is exactly this applied to every
+/// op of every function, so re-classifying `rewrite_op(op, from, to)`
+/// is bit-identical to classifying the op inside the rewritten module —
+/// the property the schedule template's re-cost path relies on.
+pub fn rewrite_op(op: &OpInfo, from: usize, to: usize) -> OpInfo {
     let mut op = op.clone();
     for t in op.operand_types.iter_mut() {
         *t = rewrite_type(t, from, to);

@@ -50,7 +50,7 @@ pub mod workload;
 
 pub use bench::{check_published, run_llm_bench, LlmBenchOptions, LlmBenchReport};
 pub use kv::{KvCache, KvCacheSpec};
-pub use lower::{lower_decode, rewrite_seq, sequence_dim};
-pub use phase::{phase_csv, PhaseModel};
+pub use lower::{lower_decode, rewrite_op, rewrite_seq, rewrite_type, sequence_dim};
+pub use phase::{phase_csv, phase_csv_workers, PhaseModel, PREFILL_CACHE_CAP};
 pub use sim::{simulate, standalone_request, LlmReport, RequestResult, SimConfig};
 pub use workload::{generate_workload, RequestSpec, WorkloadConfig};

@@ -2,37 +2,103 @@
 //!
 //! One module, two schedules. The prefill phase runs the module at the
 //! request's prompt length through the dependence-graph scheduler plus
-//! the memory-aware DMA timeline ([`schedule_module_memory`]) — full
-//! sequence GEMMs. The decode phase runs the *same* module lowered to
-//! sequence extent 1 ([`super::lower::lower_decode`]) — GEMV-shaped ops
-//! whose arithmetic intensity collapses, shifting the cost balance
-//! toward DMA traffic. Both phases inherit the device's engine config
-//! and on-chip buffer budget, so phase costs and roofline verdicts are
-//! pure functions of (module, device); the checked-in golden
+//! the memory-aware DMA timeline — full sequence GEMMs. The decode
+//! phase runs the *same* module lowered to sequence extent 1
+//! ([`super::lower::lower_decode`]) — GEMV-shaped ops whose arithmetic
+//! intensity collapses, shifting the cost balance toward DMA traffic.
+//! Both phases inherit the device's engine config and on-chip buffer
+//! budget, so phase costs and roofline verdicts are pure functions of
+//! (module, device); the checked-in golden
 //! `tests/fixtures/llm_phases.csv` pins both per preset.
+//!
+//! Both phases are priced through one [`ScheduleTemplate`] captured at
+//! construction: a prompt-length re-cost is a per-leaf shape-column
+//! rewrite + one batched estimate + one schedule replay
+//! ([`ScheduleTemplate::recost_seq`]) — no module clone, no re-parse,
+//! no graph rebuild — and is bit-identical to the from-scratch
+//! pipeline (pinned in `tests/reuse_invariants.rs`).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::coordinator::Estimator;
+use crate::coordinator::{default_workers, parallel_map, Estimator, ShardedCache};
 use crate::device::{DeviceSpec, PRESET_NAMES};
 use crate::frontend::opinfo::ModuleInfo;
-use crate::graph::EngineConfig;
-use crate::memory::{schedule_module_memory, MemoryConfig, MemorySchedule};
+use crate::graph::{EngineConfig, ScheduleTemplate};
+use crate::memory::{MemoryConfig, MemorySchedule};
 use crate::sweep::sweep_estimator;
 
 use super::kv::KvCacheSpec;
-use super::lower::{rewrite_seq, sequence_dim};
+use super::lower::sequence_dim;
 
-/// Per-phase schedules for one (module, device) pair, with a memoized
-/// prefill cost per prompt length.
+/// Capacity of the per-model prefill memoization cache: distinct prompt
+/// lengths retained before least-recently-used eviction. 512 prompt
+/// lengths × 16 B per entry keeps the cache under ~10 KiB while
+/// covering far more distinct lengths than any checked-in workload
+/// generates; evictions are counted and surfaced in
+/// [`crate::inference::LlmReport`].
+pub const PREFILL_CACHE_CAP: usize = 512;
+
+/// A bounded LRU memo of prompt length → prefill makespan. Hits refresh
+/// recency; inserting at capacity evicts the least-recently-used length
+/// and bumps the eviction counter. Eviction only costs a re-cost replay
+/// on a later re-miss — values are pure functions of the key, so
+/// correctness never depends on residency.
+struct PrefillCache {
+    cap: usize,
+    map: HashMap<usize, f64>,
+    /// Keys from least- to most-recently used.
+    order: Vec<usize>,
+    evictions: u64,
+}
+
+impl PrefillCache {
+    fn new(cap: usize) -> PrefillCache {
+        PrefillCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            order: Vec::new(),
+            evictions: 0,
+        }
+    }
+
+    fn get(&mut self, prompt: usize) -> Option<f64> {
+        let us = *self.map.get(&prompt)?;
+        if let Some(pos) = self.order.iter().position(|&k| k == prompt) {
+            self.order.remove(pos);
+            self.order.push(prompt);
+        }
+        Some(us)
+    }
+
+    fn insert(&mut self, prompt: usize, us: f64) {
+        if self.map.contains_key(&prompt) {
+            if let Some(pos) = self.order.iter().position(|&k| k == prompt) {
+                self.order.remove(pos);
+            }
+            self.map.insert(prompt, us);
+            self.order.push(prompt);
+            return;
+        }
+        if self.map.len() >= self.cap {
+            let lru = self.order.remove(0);
+            self.map.remove(&lru);
+            self.evictions += 1;
+        }
+        self.map.insert(prompt, us);
+        self.order.push(prompt);
+    }
+}
+
+/// Per-phase schedules for one (module, device) pair, backed by a
+/// build-once [`ScheduleTemplate`] and a bounded per-prompt-length memo
+/// ([`PREFILL_CACHE_CAP`]).
 pub struct PhaseModel {
-    module: ModuleInfo,
+    template: ScheduleTemplate,
     seq: usize,
-    engine: EngineConfig,
-    memory: MemoryConfig,
     prefill: MemorySchedule,
     decode: MemorySchedule,
-    prefill_cache: HashMap<usize, f64>,
+    prefill_cache: PrefillCache,
 }
 
 impl PhaseModel {
@@ -41,19 +107,16 @@ impl PhaseModel {
     /// sequence extent to rewrite.
     pub fn new(est: &Estimator, module: &ModuleInfo) -> Option<PhaseModel> {
         let seq = sequence_dim(module)?;
-        module.entry()?;
         let engine = EngineConfig::for_device(est.device());
         let memory = MemoryConfig::new(est.hbm_bytes_per_us(), Some(est.device().vmem_bytes));
-        let prefill = schedule_module_memory(est, module, engine, &memory);
-        let decode_module = rewrite_seq(module, seq, 1);
-        let decode = schedule_module_memory(est, &decode_module, engine, &memory);
-        let mut prefill_cache = HashMap::new();
+        let template = ScheduleTemplate::capture(module, engine, memory)?;
+        let prefill = template.recost_native(est);
+        let decode = template.recost_seq(est, seq, 1);
+        let mut prefill_cache = PrefillCache::new(PREFILL_CACHE_CAP);
         prefill_cache.insert(seq, prefill.makespan_us());
         Some(PhaseModel {
-            module: module.clone(),
+            template,
             seq,
-            engine,
-            memory,
             prefill,
             decode,
             prefill_cache,
@@ -68,20 +131,20 @@ impl PhaseModel {
     /// The device's memory config (HBM rate + on-chip budget) — the
     /// simulator charges KV spill traffic at this rate.
     pub fn memory_config(&self) -> &MemoryConfig {
-        &self.memory
+        self.template.memory_config()
     }
 
-    /// Prefill cost for a prompt of `prompt` tokens: the module with
-    /// its sequence extent rewritten to `prompt`, scheduled through the
-    /// memory timeline. Memoized — repeated prompt lengths re-use the
-    /// schedule, so streams with duplicate lengths stay cheap.
+    /// Prefill cost for a prompt of `prompt` tokens: the schedule
+    /// template re-costed at the rewritten sequence extent
+    /// ([`ScheduleTemplate::recost_seq`]). Memoized per prompt length in
+    /// a bounded LRU ([`PREFILL_CACHE_CAP`]), so streams with duplicate
+    /// lengths skip even the replay.
     pub fn prefill_us(&mut self, est: &Estimator, prompt: usize) -> f64 {
         let prompt = prompt.max(1);
-        if let Some(&us) = self.prefill_cache.get(&prompt) {
+        if let Some(us) = self.prefill_cache.get(prompt) {
             return us;
         }
-        let m = rewrite_seq(&self.module, self.seq, prompt);
-        let us = schedule_module_memory(est, &m, self.engine, &self.memory).makespan_us();
+        let us = self.template.recost_seq(est, self.seq, prompt).makespan_us();
         self.prefill_cache.insert(prompt, us);
         us
     }
@@ -113,36 +176,66 @@ impl PhaseModel {
     pub fn decode_schedule(&self) -> &MemorySchedule {
         &self.decode
     }
+
+    /// Completed template re-cost replays (both construction schedules
+    /// and every memo miss go through the template).
+    pub fn template_hits(&self) -> u64 {
+        self.template.template_hits()
+    }
+
+    /// Prompt lengths evicted from the bounded prefill memo so far.
+    pub fn prefill_cache_evictions(&self) -> u64 {
+        self.prefill_cache.evictions
+    }
+}
+
+/// One preset's CSV row (header excluded); `None` when the module has
+/// no phase structure on that device.
+fn phase_row(module: &ModuleInfo, name: &str, cache: &Arc<ShardedCache>) -> Option<String> {
+    let spec = DeviceSpec::preset(name).expect("registered preset");
+    let est = sweep_estimator(&spec).with_shared_cache(cache.clone());
+    let phase = PhaseModel::new(&est, module)?;
+    let kv = KvCacheSpec::infer(module, 1)
+        .map(|s| s.bytes_per_token())
+        .unwrap_or(0);
+    Some(format!(
+        "{},{},{:.6},{},{:.6},{},{}\n",
+        name,
+        phase.seq(),
+        phase.prefill_schedule().makespan_us(),
+        phase.prefill_verdict(),
+        phase.decode_step_us(),
+        phase.decode_verdict(),
+        kv,
+    ))
 }
 
 /// Per-preset phase table for `module`, as CSV. Uses the deterministic
 /// sweep estimator (pure function of spec + module, no calibration
 /// assets), so the output is byte-stable — `tests/fixtures/llm_phases.csv`
 /// pins it for the decoder-block fixture, same idiom as
-/// `sweep_small_tpu-v4.csv`.
+/// `sweep_small_tpu-v4.csv`. Presets are priced concurrently (one
+/// worker per preset, sharing one shape cache); the joined output is
+/// byte-identical to the serial walk — see [`phase_csv_workers`].
 pub fn phase_csv(module: &ModuleInfo) -> String {
+    phase_csv_workers(module, default_workers())
+}
+
+/// [`phase_csv`] with an explicit worker count (`workers == 1` runs the
+/// plain serial loop on the caller's thread). Output is byte-identical
+/// for every worker count: rows are computed independently per preset,
+/// cached cost values are pure functions of their shape keys (so cache
+/// sharing cannot perturb them), and rows join in preset order.
+pub fn phase_csv_workers(module: &ModuleInfo, workers: usize) -> String {
+    let shared = Arc::new(ShardedCache::new());
+    let rows = parallel_map(&PRESET_NAMES, workers, |name| {
+        phase_row(module, name, &shared)
+    });
     let mut out = String::from(
         "device,seq,prefill_us,prefill_verdict,decode_us,decode_verdict,kv_bytes_per_token\n",
     );
-    for name in PRESET_NAMES {
-        let spec = DeviceSpec::preset(name).expect("registered preset");
-        let est = sweep_estimator(&spec);
-        let Some(phase) = PhaseModel::new(&est, module) else {
-            continue;
-        };
-        let kv = KvCacheSpec::infer(module, 1)
-            .map(|s| s.bytes_per_token())
-            .unwrap_or(0);
-        out.push_str(&format!(
-            "{},{},{:.6},{},{:.6},{},{}\n",
-            name,
-            phase.seq(),
-            phase.prefill.makespan_us(),
-            phase.prefill_verdict(),
-            phase.decode_step_us(),
-            phase.decode_verdict(),
-            kv,
-        ));
+    for row in rows.into_iter().flatten() {
+        out.push_str(&row);
     }
     out
 }
@@ -165,6 +258,10 @@ mod tests {
         let d = phase.decode_step_us();
         assert!(p > d, "full-sequence prefill must cost more: {p} vs {d}");
         assert!(d > 0.0);
+        assert!(
+            phase.template_hits() >= 2,
+            "construction replays both phases through the template"
+        );
     }
 
     #[test]
@@ -178,6 +275,7 @@ mod tests {
         assert_eq!(a.to_bits(), b.to_bits(), "memoized value must be exact");
         let long = phase.prefill_us(&est, 256);
         assert!(long > a, "longer prompts cost more: {long} vs {a}");
+        assert_eq!(phase.prefill_cache_evictions(), 0);
     }
 
     #[test]
@@ -192,5 +290,32 @@ mod tests {
         // Stable across calls (byte-identical — the golden fixture
         // relies on this).
         assert_eq!(csv, phase_csv(&module));
+    }
+
+    #[test]
+    fn phase_csv_parallel_matches_serial() {
+        let module = parse_module(FIXTURE).unwrap();
+        assert_eq!(
+            phase_csv_workers(&module, 1),
+            phase_csv_workers(&module, 4),
+            "fan-out must be byte-identical to the serial walk"
+        );
+    }
+
+    #[test]
+    fn prefill_cache_evicts_least_recently_used() {
+        let mut cache = PrefillCache::new(2);
+        cache.insert(8, 1.0);
+        cache.insert(16, 2.0);
+        assert_eq!(cache.get(8), Some(1.0)); // refresh 8 → 16 is LRU
+        cache.insert(32, 3.0);
+        assert_eq!(cache.evictions, 1);
+        assert_eq!(cache.get(16), None, "16 was least recently used");
+        assert_eq!(cache.get(8), Some(1.0));
+        assert_eq!(cache.get(32), Some(3.0));
+        // Re-inserting an existing key never evicts.
+        cache.insert(8, 1.5);
+        assert_eq!(cache.evictions, 1);
+        assert_eq!(cache.get(8), Some(1.5));
     }
 }

@@ -135,6 +135,13 @@ pub struct LlmReport {
     pub kv_evictions: usize,
     /// Decode steps executed.
     pub decode_steps: usize,
+    /// Schedule-template re-cost replays the phase model performed
+    /// (construction + every distinct prompt length; see
+    /// [`crate::graph::ScheduleTemplate`]).
+    pub template_hits: u64,
+    /// Prompt lengths evicted from the phase model's bounded prefill
+    /// memo ([`super::phase::PREFILL_CACHE_CAP`]).
+    pub prefill_cache_evictions: u64,
 }
 
 fn kv_id(id: usize) -> String {
@@ -281,6 +288,8 @@ pub fn simulate(
         kv_spilled_bytes: kvc.spilled_bytes,
         kv_evictions: kvc.stats().evictions,
         decode_steps,
+        template_hits: phase.template_hits(),
+        prefill_cache_evictions: phase.prefill_cache_evictions(),
         requests: done,
     }
 }
@@ -405,7 +414,12 @@ impl LlmReport {
             .set("kv_peak_bytes", Json::Num(self.kv_peak_bytes as f64))
             .set("kv_spill_events", Json::Num(self.kv_spill_events as f64))
             .set("kv_spilled_bytes", Json::Num(self.kv_spilled_bytes as f64))
-            .set("kv_evictions", Json::Num(self.kv_evictions as f64));
+            .set("kv_evictions", Json::Num(self.kv_evictions as f64))
+            .set("template_hits", Json::Num(self.template_hits as f64))
+            .set(
+                "prefill_cache_evictions",
+                Json::Num(self.prefill_cache_evictions as f64),
+            );
         o
     }
 
@@ -458,6 +472,10 @@ impl LlmReport {
             self.kv_spill_events,
             self.kv_spilled_bytes,
             self.kv_evictions
+        ));
+        s.push_str(&format!(
+            "  reuse: {} template replays, {} prefill memo evictions\n",
+            self.template_hits, self.prefill_cache_evictions
         ));
         s
     }

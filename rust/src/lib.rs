@@ -44,10 +44,14 @@
 //!   per-class shape grids driven through the batched estimator core,
 //!   with cache hit-rate, throughput and bit-identity reporting.
 //! * [`report`] — tables, CSV and ASCII scatter plots for every figure.
+//! * [`benchgate`] — the aggregated freshness gate over every published
+//!   benchmark artifact (`bench --check-all`), with a perf-trajectory
+//!   table.
 //! * [`util`] — std-only infrastructure (JSON, PRNG, stats, args).
 
 #![warn(missing_docs)]
 
+pub mod benchgate;
 pub mod calibrate;
 pub mod coordinator;
 pub mod device;

@@ -8,10 +8,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use scalesim_tpu::benchgate;
 use scalesim_tpu::calibrate::Regime;
 use scalesim_tpu::coordinator::{
-    bench_serve, default_workers, install_sigint_drain, load_snapshot, save_snapshot,
-    serve_lines, serve_stream, NetOptions, NetServer, ServeMetrics, StreamOptions,
+    bench_serve, default_workers, install_sigint_drain, load_snapshot, parallel_map,
+    save_snapshot, serve_lines, serve_stream, NetOptions, NetServer, ServeMetrics,
+    StreamOptions,
 };
 use scalesim_tpu::device::{load_device_file, resolve_device, DeviceSpec, PRESET_NAMES};
 use scalesim_tpu::distributed::{
@@ -116,8 +118,8 @@ Toolchain:
         [--grid small|paper]       generated shape grids per op class, run
         [--json | --csv]           cold + warm through the batched estimator
         [--measure]                core; reports per-class latency
-                                   distributions, cache hit rates,
-                                   estimates/sec and cold/warm bit-identity.
+        [--devices a,b,c]          distributions, cache hit rates,
+        [--workers N]              estimates/sec and cold/warm bit-identity.
                                    --ops picks classes (default all: matmul,
                                    conv, elementwise, activation,
                                    normalization, pooling, data-movement);
@@ -126,7 +128,11 @@ Toolchain:
                                    the full report incl. throughput;
                                    --measure also scores systolic estimates
                                    against the --hardware backend (median of
-                                   --reps, MARE per class)
+                                   --reps, MARE per class); --devices fans
+                                   the sweep out over several specs at once
+                                   (one worker per device, per-device cache,
+                                   reports in list order, byte-identical to
+                                   serial runs; incompatible with --measure)
   llm --module FILE              request-level LLM serving simulation of a
       [--device P]                 decoder block: the module runs as prefill
       [--requests N] [--seed S]    (full-sequence) and decode (the sequence-1
@@ -203,10 +209,17 @@ Toolchain:
   bench-llm                      run the decoder-block serving sweep over
         [--requests N] [--seed S]  every device preset and report tokens/sec
         [--max-batch B] [--json]   + TTFT + TPOT per preset (plus simulator
-        [--publish] [--check]      wall-clock throughput). --publish writes
-                                   BENCH_llm.json at the repo root
-                                   (fingerprinted); --check verifies it is
-                                   fresh against the bench source (CI gate)
+        [--publish] [--check]      wall-clock throughput). Presets fan out
+        [--workers N]              over a worker pool (--workers, default
+                                   auto; rows byte-identical to serial).
+                                   --publish writes BENCH_llm.json at the
+                                   repo root (fingerprinted); --check
+                                   verifies it is fresh against the bench
+                                   source (CI gate)
+  bench --check-all              run every published-benchmark freshness
+                                   gate (BENCH_estimator / BENCH_serve /
+                                   BENCH_llm) in one pass and print the
+                                   perf-trajectory table (the CI gate)
 
 Common options:
   --device NAME|FILE         device spec every hardware constant derives
@@ -355,6 +368,7 @@ fn run(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("llm") => cmd_llm(args),
         Some("bench-llm") => cmd_bench_llm(args),
+        Some("bench") => cmd_bench(args),
         Some(other) => bail!("unknown subcommand '{other}' (try 'help')"),
     }
 }
@@ -888,9 +902,22 @@ fn cmd_compare(args: &Args) -> Result<()> {
     if llm_flag {
         headers.extend(["prefill us", "decode us", "tok/s", "ttft p50 us"]);
     }
-    let mut t = Table::new(&headers);
-    let mut rows_json: Vec<Json> = Vec::new();
-    for spec in &specs {
+    struct DeviceRun {
+        report: scalesim_tpu::coordinator::ModelEstimate,
+        sched: ModuleSchedule,
+        mem: MemorySchedule,
+        dist: Option<DistributedEstimate>,
+        llm: Option<scalesim_tpu::inference::LlmReport>,
+    }
+
+    // Per-device costing fans out over the worker pool: every worker
+    // retargets the shared reference assets (one Arc'd shape cache) and
+    // simulates its device independently; rendering and trace writing
+    // stay serial in --devices order, so the output is byte-identical
+    // to a serial walk for any worker count.
+    let workers = args.usize_or("workers", 0);
+    let workers = if workers == 0 { default_workers() } else { workers };
+    let runs = parallel_map(&specs, workers, |spec| -> Result<DeviceRun> {
         let est = base.retarget(spec);
         let engines = EngineConfig::for_device(spec);
         let report = est.estimate_module(&module);
@@ -903,6 +930,39 @@ fn cmd_compare(args: &Args) -> Result<()> {
             }
             None => None,
         };
+        let llm = if llm_flag {
+            let mut phase = PhaseModel::new(&est, &module)
+                .ok_or_else(|| anyhow::anyhow!("--llm needs a module with a sequence extent"))?;
+            let kv = KvCacheSpec::infer(&module, 1).ok_or_else(|| {
+                anyhow::anyhow!("--llm could not infer a KV shape from the module")
+            })?;
+            let cfg = SimConfig {
+                max_batch: llm_batch,
+                kv_capacity: Some(spec.vmem_bytes),
+            };
+            Some(simulate(&est, &mut phase, &kv, &llm_workload, &cfg))
+        } else {
+            None
+        };
+        Ok(DeviceRun {
+            report,
+            sched,
+            mem,
+            dist,
+            llm,
+        })
+    });
+
+    let mut t = Table::new(&headers);
+    let mut rows_json: Vec<Json> = Vec::new();
+    for (spec, run) in specs.iter().zip(runs) {
+        let DeviceRun {
+            report,
+            sched,
+            mem,
+            dist,
+            llm,
+        } = run?;
         if let Some(dir) = &trace_dir {
             // One memory-aware timeline per device; slice runs get a
             // second file so the two lane sets never share a pid.
@@ -942,17 +1002,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
                 .set("speedup", Json::Num(d.speedup()))
                 .set("parallel_efficiency", Json::Num(d.parallel_efficiency()));
         }
-        if llm_flag {
-            let mut phase = PhaseModel::new(&est, &module)
-                .ok_or_else(|| anyhow::anyhow!("--llm needs a module with a sequence extent"))?;
-            let kv = KvCacheSpec::infer(&module, 1).ok_or_else(|| {
-                anyhow::anyhow!("--llm could not infer a KV shape from the module")
-            })?;
-            let cfg = SimConfig {
-                max_batch: llm_batch,
-                kv_capacity: Some(spec.vmem_bytes),
-            };
-            let llm = simulate(&est, &mut phase, &kv, &llm_workload, &cfg);
+        if let Some(llm) = &llm {
             cells.extend([
                 format!("{:.3}", llm.prefill_us),
                 format!("{:.3}", llm.decode_step_us),
@@ -1300,9 +1350,46 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let spec = make_device(args)?;
     let classes = sweep::SweepOpClass::parse_list(&args.str_or("ops", "all"))?;
     let grid = sweep::GridSize::parse(&args.str_or("grid", "small"))?;
+    let workers = args.usize_or("workers", 0);
+
+    if let Some(list) = args.get("devices") {
+        // Multi-device fan-out: one worker per spec, each with its own
+        // estimator + cache (the per-class warm-pass accounting must
+        // stay exact per device), reports joined in list order.
+        if args.flag("measure") {
+            bail!("--measure is incompatible with --devices (one hardware backend per run)");
+        }
+        let mut specs = Vec::new();
+        for token in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            specs.push(resolve_device(token)?);
+        }
+        if specs.is_empty() {
+            bail!("--devices needs at least one device");
+        }
+        let workers = if workers == 0 { default_workers() } else { workers };
+        let reports = sweep::run_sweep_devices(&specs, &classes, grid, workers);
+        if args.flag("json") {
+            let mut j = Json::obj();
+            j.set(
+                "devices",
+                Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+            );
+            println!("{}", j.dump());
+        } else if args.flag("csv") {
+            for r in &reports {
+                print!("# device: {}\n{}", r.device, r.to_csv());
+            }
+        } else {
+            for r in &reports {
+                println!("{}", r.render());
+            }
+        }
+        return Ok(());
+    }
+
+    let spec = make_device(args)?;
 
     // Exact synthetic calibration: the sweep is a pure function of the
     // device spec and grid (golden-CSV-testable), not of a measured fit.
@@ -1384,6 +1471,7 @@ fn cmd_llm(args: &Args) -> Result<()> {
 /// [`inference::bench`](scalesim_tpu::inference::bench)). `--check` is
 /// the CI freshness gate on `BENCH_llm.json`; `--publish` (re)writes it.
 fn cmd_bench_llm(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 0);
     if args.flag("check") {
         return inference::check_published();
     }
@@ -1391,6 +1479,7 @@ fn cmd_bench_llm(args: &Args) -> Result<()> {
         requests: args.usize_or("requests", 64),
         seed: args.u64_or("seed", 42),
         max_batch: args.usize_or("max-batch", 8),
+        workers,
     };
     let report = inference::run_llm_bench(&opts)?;
     if args.flag("json") {
@@ -1404,4 +1493,14 @@ fn cmd_bench_llm(args: &Args) -> Result<()> {
         report.publish()?;
     }
     Ok(())
+}
+
+/// `bench --check-all`: every published-benchmark freshness gate
+/// (BENCH_estimator / BENCH_serve / BENCH_llm) in one pass, plus the
+/// perf-trajectory table (see [`benchgate`]).
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.flag("check-all") {
+        return benchgate::check_all();
+    }
+    bail!("bench: nothing to do — pass --check-all (per-bench runs live in bench-serve/bench-llm)");
 }

@@ -34,5 +34,5 @@ pub mod timeline;
 pub use residency::{Evicted, InsertOutcome, ResidencyStats, ResidencyTracker};
 pub use timeline::{
     schedule_estimate_memory, schedule_module_memory, DmaTimeline, FetchDma, MemoryConfig,
-    MemorySchedule, MemoryStats, OpMemory, RetireDma,
+    MemorySchedule, MemoryStats, OpMemory, RetireDma, TimelineOpShape, TimelineShape, ValueShape,
 };

@@ -34,6 +34,7 @@ use std::collections::HashMap;
 use crate::coordinator::estimator::{Estimator, ModelEstimate};
 use crate::frontend::classify::classify;
 use crate::frontend::opinfo::{FuncInfo, ModuleInfo, OpInfo};
+use crate::frontend::types::TensorType;
 use crate::graph::analysis::{finish_schedule, op_bound, ModuleSchedule, RooflineSummary};
 use crate::graph::schedule::is_inlined_call;
 use crate::graph::{DepGraph, Engine, EngineConfig, SchedNode};
@@ -223,6 +224,26 @@ fn shard_bytes(bytes: u64, chips: usize) -> u64 {
     }
 }
 
+/// A borrowed, pre-deduplicated view of one op — exactly the data the
+/// DMA expansion reads. The public [`DmaTimeline::fetch`] /
+/// [`DmaTimeline::retire`] build one from an [`OpInfo`] on the fly; the
+/// captured [`TimelineShape`] stores the same data once, so the
+/// price-many replay drives the *identical* walk without re-deriving
+/// it. Both paths run the same `*_view` bodies, which is what makes the
+/// replay bit-identical by construction rather than by coincidence.
+struct OpView<'a> {
+    /// Index of the source op within its function.
+    index: usize,
+    /// Display name of the op.
+    op_name: &'a str,
+    /// True for the function's `return` op.
+    is_return: bool,
+    /// Operands, deduplicated in first-occurrence order.
+    operands: &'a [String],
+    /// Result SSA ids.
+    results: &'a [String],
+}
+
 impl DmaTimeline {
     /// Prime a timeline over `func`: registers every SSA value's byte
     /// footprint (divided across `chips` for SPMD slices) and consumer
@@ -270,6 +291,17 @@ impl DmaTimeline {
                 state.uses += 1;
             }
         }
+        DmaTimeline::from_values(config, values)
+    }
+
+    /// A timeline over a pre-registered value map — the price-many
+    /// replay path: [`TimelineShape`] captures the registration walk
+    /// once, and the caller re-derives only the per-value byte
+    /// footprints for each re-cost.
+    fn from_values(
+        config: MemoryConfig,
+        values: HashMap<String, ValueState>,
+    ) -> DmaTimeline {
         DmaTimeline {
             config,
             tracker: ResidencyTracker::new(config.buffer_bytes),
@@ -284,13 +316,29 @@ impl DmaTimeline {
     /// At most one node is pushed; it is zero-width (no engine) when the
     /// transfer is free.
     pub fn fetch(&mut self, op: &OpInfo, nodes: &mut Vec<SchedNode>) -> FetchDma {
-        let mut out = FetchDma::default();
         let operands = dedup_operands(op);
+        self.fetch_view(
+            &OpView {
+                index: op.index,
+                op_name: &op.op_name,
+                is_return: op.short_name() == "return",
+                operands: &operands,
+                results: &op.results,
+            },
+            nodes,
+        )
+    }
+
+    /// [`DmaTimeline::fetch`] over a pre-built view (shared with the
+    /// price-many replay).
+    fn fetch_view(&mut self, op: &OpView<'_>, nodes: &mut Vec<SchedNode>) -> FetchDma {
+        let mut out = FetchDma::default();
+        let operands = op.operands;
         let mut fetch_preds: Vec<usize> = Vec::new();
         let mut cold_ids: Vec<String> = Vec::new();
         let mut written_back: Vec<String> = Vec::new();
 
-        for id in &operands {
+        for id in operands {
             let Some((bytes, chip_node, hbm_node)) = self
                 .values
                 .get(id.as_str())
@@ -315,7 +363,7 @@ impl DmaTimeline {
                 if let Some(h) = hbm_node {
                     push_unique(&mut fetch_preds, h);
                 }
-                let outcome = self.tracker.insert(id, bytes, false, &operands);
+                let outcome = self.tracker.insert(id, bytes, false, operands);
                 if outcome.inserted {
                     cold_ids.push(id.clone());
                 }
@@ -374,16 +422,38 @@ impl DmaTimeline {
     /// dirty evictions pay a write-back, dead operands free their space,
     /// and `return` escapes its resident operands to HBM.
     pub fn retire(&mut self, op: &OpInfo, avail: usize, nodes: &mut Vec<SchedNode>) -> RetireDma {
-        let mut out = RetireDma::default();
         let operands = dedup_operands(op);
+        self.retire_view(
+            &OpView {
+                index: op.index,
+                op_name: &op.op_name,
+                is_return: op.short_name() == "return",
+                operands: &operands,
+                results: &op.results,
+            },
+            avail,
+            nodes,
+        )
+    }
+
+    /// [`DmaTimeline::retire`] over a pre-built view (shared with the
+    /// price-many replay).
+    fn retire_view(
+        &mut self,
+        op: &OpView<'_>,
+        avail: usize,
+        nodes: &mut Vec<SchedNode>,
+    ) -> RetireDma {
+        let mut out = RetireDma::default();
+        let operands = op.operands;
         let mut preds: Vec<usize> = vec![avail];
         let mut bytes: u64 = 0;
         let mut hbm_updates: Vec<String> = Vec::new();
 
         // `return` escapes its operands: dirty resident results must
         // land in HBM. Non-resident operands were already written back.
-        if op.short_name() == "return" {
-            for id in &operands {
+        if op.is_return {
+            for id in operands {
                 let Some((vbytes, dirty, chip_node)) = self
                     .values
                     .get(id.as_str())
@@ -405,7 +475,7 @@ impl DmaTimeline {
 
         // Release operands: the last consumer drops a dead value on the
         // spot, freeing buffer space without a write-back.
-        for id in &operands {
+        for id in operands {
             if let Some(v) = self.values.get_mut(id.as_str()) {
                 v.uses = v.uses.saturating_sub(1);
                 if v.uses == 0 {
@@ -417,8 +487,7 @@ impl DmaTimeline {
         // Results enter the buffer dirty. A result that cannot fit
         // spills straight to HBM; dirty values its insertion evicts owe
         // their write-back here too.
-        let results: Vec<String> = op.results.clone();
-        for r in &results {
+        for r in op.results {
             let Some((rbytes, uses)) = self.values.get(r.as_str()).map(|v| (v.bytes, v.uses))
             else {
                 continue;
@@ -426,7 +495,7 @@ impl DmaTimeline {
             if rbytes == 0 || uses == 0 {
                 continue; // dead or zero-footprint: never materialized
             }
-            let outcome = self.tracker.insert(r, rbytes, true, &results);
+            let outcome = self.tracker.insert(r, rbytes, true, op.results);
             if outcome.inserted {
                 if let Some(v) = self.values.get_mut(r.as_str()) {
                     v.chip_node = Some(avail);
@@ -491,6 +560,280 @@ impl DmaTimeline {
             peak_resident_bytes: t.peak_resident_bytes,
             ..self.stats
         }
+    }
+}
+
+/// One entry-function op of a captured [`TimelineShape`].
+#[derive(Debug, Clone)]
+pub struct TimelineOpShape {
+    /// Index of the source op within its function.
+    pub index: usize,
+    /// Display name of the op.
+    pub op_name: String,
+    /// True for the `return` op (no fetch; its retire step escapes
+    /// dirty results to HBM).
+    pub is_return: bool,
+    /// True when the op is an inlinable `call` (rides the compute lane
+    /// as one folded row).
+    pub inlined_call: bool,
+    /// Operands, deduplicated in first-occurrence order.
+    pub operands: Vec<String>,
+    /// Result SSA ids.
+    pub results: Vec<String>,
+    /// SSA predecessor ops (entry-function positions, from
+    /// [`DepGraph`]).
+    pub preds: Vec<usize>,
+}
+
+/// One registered SSA value of a captured [`TimelineShape`].
+#[derive(Debug, Clone)]
+pub struct ValueShape {
+    /// SSA id.
+    pub id: String,
+    /// Tensor type the byte footprint derives from (`None` when the
+    /// value appears without a type — priced at zero bytes, exactly as
+    /// the from-scratch registration does).
+    pub ty: Option<TensorType>,
+    /// Consumer count (the last use frees the value's buffer space).
+    pub uses: usize,
+}
+
+/// The expand-once half of the memory timeline: everything about a
+/// module's entry function that does **not** depend on per-op costs or
+/// tensor extents — op order, deduplicated operand/result id lists, SSA
+/// predecessor edges, and the value-registration sequence of
+/// [`DmaTimeline::new`]. Capture it once, then the price-many replay
+/// (driven by [`crate::graph::reuse::ScheduleTemplate`]) re-runs it
+/// over new per-op costs and byte footprints; `schedule_estimate_memory`
+/// is itself capture + one replay, so the two paths cannot drift.
+#[derive(Debug, Clone)]
+pub struct TimelineShape {
+    /// Module name for the assembled schedule.
+    pub module_name: String,
+    /// Entry-function ops in program order.
+    pub ops: Vec<TimelineOpShape>,
+    /// Registered values: results in program order first, then
+    /// argument-like operands in first-use order — mirroring the two
+    /// registration passes of [`DmaTimeline::new`] exactly.
+    pub values: Vec<ValueShape>,
+}
+
+impl TimelineShape {
+    /// Capture the cost- and extent-invariant structure of `module`'s
+    /// entry function. `None` when the module has no entry function.
+    pub fn capture(module: &ModuleInfo) -> Option<TimelineShape> {
+        let func = module.entry()?;
+        let graph = DepGraph::build(func);
+        let ops = func
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| TimelineOpShape {
+                index: op.index,
+                op_name: op.op_name.clone(),
+                is_return: op.short_name() == "return",
+                inlined_call: is_inlined_call(op),
+                operands: dedup_operands(op),
+                results: op.results.clone(),
+                preds: graph.preds[i].clone(),
+            })
+            .collect();
+
+        // Mirror the two registration passes of `DmaTimeline::new`:
+        // results first (a re-defined id keeps its *last* type, exactly
+        // like the insert-overwrite there), then per-op first uses —
+        // unknown producers are HBM-resident arguments typed from the
+        // using op (positional type, falling back to the op's first).
+        let mut slot: HashMap<&str, usize> = HashMap::new();
+        let mut values: Vec<ValueShape> = Vec::new();
+        for op in &func.ops {
+            for (k, r) in op.results.iter().enumerate() {
+                let ty = op.result_types.get(k).cloned();
+                match slot.get(r.as_str()) {
+                    Some(&s) => values[s].ty = ty,
+                    None => {
+                        slot.insert(r.as_str(), values.len());
+                        values.push(ValueShape {
+                            id: r.clone(),
+                            ty,
+                            uses: 0,
+                        });
+                    }
+                }
+            }
+        }
+        for op in &func.ops {
+            let mut seen: Vec<&str> = Vec::new();
+            for (k, operand) in op.operands.iter().enumerate() {
+                if seen.contains(&operand.as_str()) {
+                    continue;
+                }
+                seen.push(operand.as_str());
+                let s = match slot.get(operand.as_str()) {
+                    Some(&s) => s,
+                    None => {
+                        let ty = op
+                            .operand_types
+                            .get(k)
+                            .or_else(|| op.operand_types.first())
+                            .cloned();
+                        let s = values.len();
+                        slot.insert(operand.as_str(), s);
+                        values.push(ValueShape {
+                            id: operand.clone(),
+                            ty,
+                            uses: 0,
+                        });
+                        s
+                    }
+                };
+                values[s].uses += 1;
+            }
+        }
+        Some(TimelineShape {
+            module_name: module.name.clone(),
+            ops,
+            values,
+        })
+    }
+
+    /// The native per-value byte column: each registered value's
+    /// footprint at the captured extents (the identity re-cost). A
+    /// sequence rewrite maps [`ValueShape::ty`] through
+    /// [`crate::inference::rewrite_type`] instead.
+    pub fn native_bytes(&self) -> Vec<u64> {
+        self.values
+            .iter()
+            .map(|v| v.ty.as_ref().map(|t| t.size_bytes()).unwrap_or(0))
+            .collect()
+    }
+}
+
+/// Engine routing for an inlined `call` op: the folded sub-estimate
+/// rides the compute lane (shared between the from-scratch walk and the
+/// template replay so the routing cannot drift).
+pub(crate) fn call_engine(config: EngineConfig) -> Option<Engine> {
+    Some(match config {
+        EngineConfig::Serialized => Engine::Unified,
+        _ => Engine::Mxu,
+    })
+}
+
+/// The price-many half: replay a captured [`TimelineShape`] over new
+/// per-op cost rows, engine assignments and per-value byte footprints.
+/// `rows` and `engines` align 1:1 with `shape.ops`; `bytes` aligns with
+/// `shape.values`. This is the *same* walk [`schedule_estimate_memory`]
+/// runs — that function is capture + one replay — so a template re-cost
+/// is bit-identical to a from-scratch build by construction.
+pub(crate) fn price_shape(
+    shape: &TimelineShape,
+    rows: &[crate::coordinator::OpEstimate],
+    engines: &[Option<Engine>],
+    config: EngineConfig,
+    memory: &MemoryConfig,
+    bytes: &[u64],
+) -> MemorySchedule {
+    debug_assert_eq!(shape.ops.len(), rows.len());
+    debug_assert_eq!(shape.ops.len(), engines.len());
+    debug_assert_eq!(shape.values.len(), bytes.len());
+    let mut values: HashMap<String, ValueState> = HashMap::new();
+    for (v, &b) in shape.values.iter().zip(bytes) {
+        values.insert(
+            v.id.clone(),
+            ValueState {
+                bytes: b,
+                uses: v.uses,
+                chip_node: None,
+                hbm_node: None,
+                dirty: false,
+            },
+        );
+    }
+    let mut dma = DmaTimeline::from_values(*memory, values);
+    let mut nodes: Vec<SchedNode> = Vec::with_capacity(shape.ops.len() * 2);
+    let mut provider: Vec<usize> = Vec::with_capacity(shape.ops.len());
+    struct Plan {
+        fetch: FetchDma,
+        main: usize,
+        retire: RetireDma,
+    }
+    let mut plans: Vec<Plan> = Vec::with_capacity(shape.ops.len());
+
+    for ((sop, row), engine) in shape.ops.iter().zip(rows).zip(engines) {
+        let view = OpView {
+            index: sop.index,
+            op_name: &sop.op_name,
+            is_return: sop.is_return,
+            operands: &sop.operands,
+            results: &sop.results,
+        };
+        // `return` reads nothing on chip — its retire step escapes any
+        // still-dirty results to HBM instead.
+        let fetch = if sop.is_return {
+            FetchDma::default()
+        } else {
+            dma.fetch_view(&view, &mut nodes)
+        };
+        let mut preds: Vec<usize> = Vec::new();
+        for &p in &sop.preds {
+            push_unique(&mut preds, provider[p]);
+        }
+        for &n in &fetch.hit_preds {
+            push_unique(&mut preds, n);
+        }
+        if let Some(n) = fetch.node {
+            push_unique(&mut preds, n);
+        }
+        let main = nodes.len();
+        nodes.push(SchedNode {
+            index: row.index,
+            op_name: row.op_name.clone(),
+            engine: *engine,
+            cost_us: row.latency_us,
+            preds,
+            source: row.source.tag(),
+            note: row.note.clone(),
+        });
+        provider.push(main);
+        let retire = dma.retire_view(&view, main, &mut nodes);
+        plans.push(Plan { fetch, main, retire });
+    }
+
+    // Left-to-right prefix sum in expansion order: the fold order the
+    // exact upper-bound proof relies on (f64 Sum adds in iteration
+    // order).
+    let serialized_bound_us: f64 = nodes.iter().map(|n| n.cost_us).sum();
+    let stats = dma.stats();
+    let schedule = finish_schedule(shape.module_name.clone(), config, nodes);
+
+    let mut roofline = RooflineSummary::default();
+    let mut ops: Vec<OpMemory> = Vec::with_capacity(plans.len());
+    for (plan, row) in plans.iter().zip(rows) {
+        let dma_us = plan.fetch.dma_us + plan.retire.dma_us;
+        roofline.record(row.latency_us, dma_us);
+        let first = plan.fetch.node.unwrap_or(plan.main);
+        let last = plan.retire.node.unwrap_or(plan.main);
+        ops.push(OpMemory {
+            index: row.index,
+            op_name: row.op_name.clone(),
+            compute_us: row.latency_us,
+            dma_in_us: plan.fetch.dma_us,
+            dma_out_us: plan.retire.dma_us,
+            cold_bytes: plan.fetch.cold_bytes,
+            writeback_bytes: plan.fetch.writeback_bytes + plan.retire.bytes,
+            hits: plan.fetch.hits,
+            cold_fetches: plan.fetch.cold_fetches,
+            start_us: schedule.ops[first].start_us,
+            end_us: schedule.ops[last].end_us,
+        });
+    }
+    MemorySchedule {
+        schedule,
+        memory: *memory,
+        ops,
+        serialized_bound_us,
+        stats,
+        roofline,
     }
 }
 
@@ -671,7 +1014,7 @@ pub fn schedule_estimate_memory(
     config: EngineConfig,
     memory: &MemoryConfig,
 ) -> MemorySchedule {
-    let Some(func) = module.entry() else {
+    let Some(shape) = TimelineShape::capture(module) else {
         return MemorySchedule {
             schedule: finish_schedule(module.name.clone(), config, Vec::new()),
             memory: *memory,
@@ -681,99 +1024,27 @@ pub fn schedule_estimate_memory(
             roofline: RooflineSummary::default(),
         };
     };
+    let func = module.entry().expect("capture implies an entry function");
     debug_assert_eq!(
         report.ops.len(),
         func.ops.len(),
         "estimate rows must align 1:1 with the entry function's ops"
     );
-    let graph = DepGraph::build(func);
-    let mut dma = DmaTimeline::new(*memory, func, 1);
-    let mut nodes: Vec<SchedNode> = Vec::with_capacity(func.ops.len() * 2);
-    let mut provider: Vec<usize> = Vec::with_capacity(func.ops.len());
-    struct Plan {
-        fetch: FetchDma,
-        main: usize,
-        retire: RetireDma,
-    }
-    let mut plans: Vec<Plan> = Vec::with_capacity(func.ops.len());
-
-    for ((i, op), row) in func.ops.iter().enumerate().zip(&report.ops) {
-        // `return` reads nothing on chip — its retire step escapes any
-        // still-dirty results to HBM instead.
-        let fetch = if op.short_name() == "return" {
-            FetchDma::default()
-        } else {
-            dma.fetch(op, &mut nodes)
-        };
-        let engine = if is_inlined_call(op) {
-            Some(match config {
-                EngineConfig::Serialized => Engine::Unified,
-                _ => Engine::Mxu,
-            })
-        } else {
-            config.engine_of(&classify(op))
-        };
-        let mut preds: Vec<usize> = Vec::new();
-        for &p in &graph.preds[i] {
-            push_unique(&mut preds, provider[p]);
-        }
-        for &n in &fetch.hit_preds {
-            push_unique(&mut preds, n);
-        }
-        if let Some(n) = fetch.node {
-            push_unique(&mut preds, n);
-        }
-        let main = nodes.len();
-        nodes.push(SchedNode {
-            index: row.index,
-            op_name: row.op_name.clone(),
-            engine,
-            cost_us: row.latency_us,
-            preds,
-            source: row.source.tag(),
-            note: row.note.clone(),
-        });
-        provider.push(main);
-        let retire = dma.retire(op, main, &mut nodes);
-        plans.push(Plan { fetch, main, retire });
-    }
-
-    // Left-to-right prefix sum in expansion order: the fold order the
-    // exact upper-bound proof relies on (f64 Sum adds in iteration
-    // order).
-    let serialized_bound_us: f64 = nodes.iter().map(|n| n.cost_us).sum();
-    let stats = dma.stats();
-    let schedule = finish_schedule(module.name.clone(), config, nodes);
-
-    let mut roofline = RooflineSummary::default();
-    let mut ops: Vec<OpMemory> = Vec::with_capacity(plans.len());
-    for (plan, row) in plans.iter().zip(&report.ops) {
-        let dma_us = plan.fetch.dma_us + plan.retire.dma_us;
-        roofline.record(row.latency_us, dma_us);
-        let first = plan.fetch.node.unwrap_or(plan.main);
-        let last = plan.retire.node.unwrap_or(plan.main);
-        ops.push(OpMemory {
-            index: row.index,
-            op_name: row.op_name.clone(),
-            compute_us: row.latency_us,
-            dma_in_us: plan.fetch.dma_us,
-            dma_out_us: plan.retire.dma_us,
-            cold_bytes: plan.fetch.cold_bytes,
-            writeback_bytes: plan.fetch.writeback_bytes + plan.retire.bytes,
-            hits: plan.fetch.hits,
-            cold_fetches: plan.fetch.cold_fetches,
-            start_us: schedule.ops[first].start_us,
-            end_us: schedule.ops[last].end_us,
-        });
-    }
-    MemorySchedule {
-        schedule,
-        memory: *memory,
-        ops,
-        serialized_bound_us,
-        stats,
-        roofline,
-    }
+    // Engine routing is extent-sensitive (classify inspects shapes), so
+    // it rides the per-cost side of the split, not the captured shape.
+    let engines: Vec<Option<Engine>> = func
+        .ops
+        .iter()
+        .map(|op| {
+            if is_inlined_call(op) {
+                call_engine(config)
+            } else {
+                config.engine_of(&classify(op))
+            }
+        })
+        .collect();
+    let bytes = shape.native_bytes();
+    price_shape(&shape, &report.ops, &engines, config, memory, &bytes)
 }
 
 /// Estimate `module` through `est` and build its memory-aware schedule

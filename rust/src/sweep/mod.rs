@@ -341,6 +341,25 @@ pub fn run_sweep(est: &Estimator, classes: &[SweepOpClass], grid: GridSize) -> S
     }
 }
 
+/// Run the same sweep on several devices concurrently — one worker per
+/// device, joined in input order. Each worker builds its *own*
+/// [`sweep_estimator`] with its own cache, never a shared one: the
+/// per-class [`PassStats`] are measured as cache-counter deltas and the
+/// warm pass must show zero misses per class (CI asserts this), which
+/// concurrent sharing would perturb. Every report is therefore
+/// bit-identical to a serial [`run_sweep`] on that device alone.
+pub fn run_sweep_devices(
+    specs: &[DeviceSpec],
+    classes: &[SweepOpClass],
+    grid: GridSize,
+    workers: usize,
+) -> Vec<SweepReport> {
+    crate::coordinator::parallel_map(specs, workers, |spec| {
+        let est = sweep_estimator(spec);
+        run_sweep(&est, classes, grid)
+    })
+}
+
 fn case_gemm(class: &OpClass) -> Option<GemmShape> {
     match class {
         OpClass::SystolicGemm { gemm, .. } | OpClass::SystolicConv { gemm, .. } => Some(*gemm),

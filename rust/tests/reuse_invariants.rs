@@ -1,0 +1,281 @@
+//! Exactness invariants for the build-once / re-cost-many schedule
+//! template ([`ScheduleTemplate`]) and the parallel fan-outs built on
+//! it. Every assertion here is bitwise — no epsilons anywhere:
+//!
+//! * a template re-cost at the captured extents is bit-identical to the
+//!   from-scratch `schedule_module_memory` pipeline, for every device
+//!   preset × every checked-in module fixture;
+//! * a sequence re-cost is bit-identical to rewriting the module and
+//!   rebuilding from scratch, across a prompt-length sweep;
+//! * the assembled estimate rows are bit-identical to
+//!   `Estimator::estimate_module` (the 1-chip regression surface);
+//! * interleaved re-costs across devices and prompt lengths in shuffled
+//!   call orders never contaminate each other;
+//! * every parallel fan-out (`phase_csv`, `bench-llm`, the sweep
+//!   multi-device runner, a distributed-estimate map) is byte-identical
+//!   to its serial walk.
+
+use scalesim_tpu::coordinator::{parallel_map, Estimator};
+use scalesim_tpu::device::{DeviceSpec, PRESET_NAMES};
+use scalesim_tpu::distributed::estimate_module_distributed;
+use scalesim_tpu::frontend::{parse_module, ModuleInfo};
+use scalesim_tpu::graph::{EngineConfig, ScheduleTemplate};
+use scalesim_tpu::inference::{
+    phase_csv_workers, rewrite_seq, run_llm_bench, sequence_dim, LlmBenchOptions,
+};
+use scalesim_tpu::memory::{schedule_module_memory, MemoryConfig, MemorySchedule};
+use scalesim_tpu::sweep::{run_sweep, run_sweep_devices, sweep_estimator, GridSize, SweepOpClass};
+
+const FIXTURES: &[(&str, &str)] = &[
+    (
+        "decoder_block",
+        include_str!("fixtures/decoder_block.mlir"),
+    ),
+    ("bert_layer", include_str!("fixtures/bert_layer.mlir")),
+    ("collectives", include_str!("fixtures/collectives.mlir")),
+    ("sharded_mlp", include_str!("fixtures/sharded_mlp.mlir")),
+    (
+        "while_loop",
+        include_str!("fixtures/while_loop.stablehlo.txt"),
+    ),
+];
+
+const PROMPTS: &[usize] = &[1, 16, 64, 96, 256, 300, 1024];
+
+fn setup(preset: &str) -> (DeviceSpec, Estimator, EngineConfig, MemoryConfig) {
+    let spec = DeviceSpec::preset(preset).expect("registered preset");
+    let est = sweep_estimator(&spec);
+    let engine = EngineConfig::for_device(est.device());
+    let memory = MemoryConfig::new(est.hbm_bytes_per_us(), Some(est.device().vmem_bytes));
+    (spec, est, engine, memory)
+}
+
+/// Bitwise schedule equality via the derived Debug rendering: Rust
+/// formats every f64 as its shortest uniquely-round-tripping decimal,
+/// so two schedules render identically iff every float matches bit for
+/// bit (no NaNs are ever produced here) and every other field is equal.
+fn assert_schedules_identical(a: &MemorySchedule, b: &MemorySchedule, what: &str) {
+    assert_eq!(
+        a.makespan_us().to_bits(),
+        b.makespan_us().to_bits(),
+        "{what}: makespan drifted"
+    );
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "{what}: schedules are not bit-identical"
+    );
+}
+
+fn template_for(
+    module: &ModuleInfo,
+    engine: EngineConfig,
+    memory: MemoryConfig,
+) -> ScheduleTemplate {
+    ScheduleTemplate::capture(module, engine, memory).expect("fixture captures a template")
+}
+
+#[test]
+fn recost_native_is_bit_identical_to_from_scratch_everywhere() {
+    for preset in PRESET_NAMES {
+        for (name, text) in FIXTURES {
+            let module = parse_module(text).expect(name);
+            let (_, est, engine, memory) = setup(preset);
+            let scratch = schedule_module_memory(&est, &module, engine, &memory);
+            let template = template_for(&module, engine, memory);
+            let replay = template.recost_native(&est);
+            assert_schedules_identical(&scratch, &replay, &format!("{preset}/{name}"));
+            assert_eq!(template.template_hits(), 1);
+        }
+    }
+}
+
+#[test]
+fn estimate_native_matches_estimate_module_rows() {
+    for preset in PRESET_NAMES {
+        for (name, text) in FIXTURES {
+            let module = parse_module(text).expect(name);
+            let (_, est, engine, memory) = setup(preset);
+            let scratch = est.estimate_module(&module);
+            let template = template_for(&module, engine, memory);
+            let replay = template.estimate_native(&est);
+            assert_eq!(
+                scratch.total_us.to_bits(),
+                replay.total_us.to_bits(),
+                "{preset}/{name}: total drifted"
+            );
+            assert_eq!(
+                format!("{scratch:?}"),
+                format!("{replay:?}"),
+                "{preset}/{name}: estimate rows are not bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn recost_seq_matches_rewrite_and_rebuild_across_prompts() {
+    let module = parse_module(FIXTURES[0].1).expect("decoder block");
+    let seq = sequence_dim(&module).expect("sequence extent");
+    for preset in PRESET_NAMES {
+        let (_, est, engine, memory) = setup(preset);
+        let template = template_for(&module, engine, memory);
+        for &p in PROMPTS {
+            let rewritten = rewrite_seq(&module, seq, p);
+            let scratch = schedule_module_memory(&est, &rewritten, engine, &memory);
+            let replay = template.recost_seq(&est, seq, p);
+            assert_schedules_identical(&scratch, &replay, &format!("{preset}/prompt {p}"));
+        }
+    }
+}
+
+#[test]
+fn interleaved_recosts_never_contaminate_each_other() {
+    let module = parse_module(FIXTURES[0].1).expect("decoder block");
+    let seq = sequence_dim(&module).expect("sequence extent");
+    let devices = ["tpu-v4", "tpu-v5p", "generic-256x256"];
+
+    // Expected value per (device, prompt), computed from scratch.
+    let mut setups = Vec::new();
+    let mut expected: Vec<String> = Vec::new();
+    for preset in devices {
+        let (_, est, engine, memory) = setup(preset);
+        let template = template_for(&module, engine, memory);
+        for &p in PROMPTS {
+            let rewritten = rewrite_seq(&module, seq, p);
+            expected.push(format!(
+                "{:?}",
+                schedule_module_memory(&est, &rewritten, engine, &memory)
+            ));
+        }
+        setups.push((est, template));
+    }
+
+    // Replay the full (device × prompt) grid in several deterministic
+    // shuffled orders over the *same* long-lived templates: every call
+    // must still match its from-scratch expectation bit for bit, no
+    // matter what was re-costed before it.
+    let n = devices.len() * PROMPTS.len();
+    for round in 0..4usize {
+        let mut order: Vec<usize> = (0..n).collect();
+        // Deterministic LCG-driven Fisher-Yates; a different
+        // permutation each round.
+        let mut state = 0x9e37_79b9_7f4a_7c15u64.wrapping_add(round as u64);
+        for i in (1..n).rev() {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = (state >> 33) as usize % (i + 1);
+            order.swap(i, j);
+        }
+        for &k in &order {
+            let (d, pi) = (k / PROMPTS.len(), k % PROMPTS.len());
+            let (est, template) = &setups[d];
+            let got = template.recost_seq(est, seq, PROMPTS[pi]);
+            assert_eq!(
+                format!("{got:?}"),
+                expected[k],
+                "round {round}: {}/prompt {} contaminated",
+                devices[d],
+                PROMPTS[pi]
+            );
+        }
+    }
+}
+
+#[test]
+fn phase_csv_fanout_is_byte_identical_to_serial() {
+    let module = parse_module(FIXTURES[0].1).expect("decoder block");
+    let serial = phase_csv_workers(&module, 1);
+    for workers in [2, 4, 8] {
+        assert_eq!(
+            serial,
+            phase_csv_workers(&module, workers),
+            "{workers} workers"
+        );
+    }
+}
+
+#[test]
+fn llm_bench_rows_are_identical_for_any_worker_count() {
+    let run = |workers: usize| {
+        run_llm_bench(&LlmBenchOptions {
+            requests: 6,
+            workers,
+            ..LlmBenchOptions::default()
+        })
+        .expect("bench runs")
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.rows.len(), parallel.rows.len());
+    for (a, b) in serial.rows.iter().zip(&parallel.rows) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.tokens_per_sec.to_bits(), b.tokens_per_sec.to_bits());
+        assert_eq!(a.ttft_p50_us.to_bits(), b.ttft_p50_us.to_bits());
+        assert_eq!(a.tpot_mean_us.to_bits(), b.tpot_mean_us.to_bits());
+        assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+        assert_eq!(a.kv_spill_events, b.kv_spill_events);
+    }
+    assert_eq!(serial.template_hits, parallel.template_hits);
+    assert!(serial.template_hits > 0);
+}
+
+#[test]
+fn sweep_device_fanout_matches_serial_run_sweep() {
+    let specs: Vec<DeviceSpec> = ["tpu-v4", "tpu-v5e"]
+        .iter()
+        .map(|p| DeviceSpec::preset(p).unwrap())
+        .collect();
+    let classes = SweepOpClass::parse_list("matmul,elementwise").unwrap();
+    let fanned = run_sweep_devices(&specs, &classes, GridSize::Small, 4);
+    assert_eq!(fanned.len(), specs.len());
+    for (spec, got) in specs.iter().zip(&fanned) {
+        let est = sweep_estimator(spec);
+        let serial = run_sweep(&est, &classes, GridSize::Small);
+        assert_eq!(
+            serial.to_csv(),
+            got.to_csv(),
+            "{}: fan-out drifted from serial sweep",
+            spec.name
+        );
+        assert_eq!(format!("{:?}", serial.grid), format!("{:?}", got.grid));
+        assert_eq!(serial.device, got.device);
+    }
+}
+
+#[test]
+fn distributed_estimates_fan_out_byte_identically() {
+    let module = parse_module(FIXTURES[3].1).expect("sharded mlp");
+    let specs: Vec<DeviceSpec> = PRESET_NAMES
+        .iter()
+        .map(|p| DeviceSpec::preset(p).unwrap())
+        .collect();
+    let serial: Vec<String> = specs
+        .iter()
+        .map(|spec| {
+            let est = sweep_estimator(spec);
+            let slice = spec.slice_config(4, None).expect("4-chip slice");
+            format!("{:?}", estimate_module_distributed(&est, &module, &slice))
+        })
+        .collect();
+    let parallel = parallel_map(&specs, 4, |spec| {
+        let est = sweep_estimator(spec);
+        let slice = spec.slice_config(4, None).expect("4-chip slice");
+        format!("{:?}", estimate_module_distributed(&est, &module, &slice))
+    });
+    assert_eq!(serial, parallel);
+}
+
+#[test]
+fn recost_over_external_costs_replays_the_native_schedule() {
+    let module = parse_module(FIXTURES[0].1).expect("decoder block");
+    let (_, est, engine, memory) = setup("tpu-v4");
+    let template = template_for(&module, engine, memory);
+    let native = template.recost_native(&est);
+    // `recost` is the raw entry: feeding it the very costs the batched
+    // estimator resolves must reproduce the native replay bit for bit.
+    let costs = est.estimate_classes(template.native_classes());
+    let replayed = template.recost(&costs);
+    assert_schedules_identical(&native, &replayed, "external-cost recost");
+}
